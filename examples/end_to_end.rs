@@ -1,0 +1,160 @@
+//! End-to-end driver — the full system on the real small workload shipped
+//! in `artifacts/dataset.bin` (the python-generated HCCI field the AE was
+//! trained on, like the paper compressing the S3D dataset it models):
+//!
+//!   load dataset -> GBATC compress (PJRT encoder, Huffman latents, TCN,
+//!   Algorithm-1 guarantee) -> archive to disk -> decompress -> PD NRMSE /
+//!   SSIM / PSNR per species -> QoI production-rate errors via the
+//!   synthetic mechanism -> report, with SZ on the same data for contrast.
+//!
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use gbatc::chem::{self, Mechanism};
+use gbatc::compressor::{
+    CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor,
+};
+use gbatc::config::Manifest;
+use gbatc::data::{io, Dataset};
+use gbatc::metrics;
+use gbatc::runtime::ExecService;
+use gbatc::util::Timer;
+
+fn species_nrmse(orig: &Dataset, recon_mass: &[f32]) -> (Vec<f64>, f64) {
+    let npix = orig.ny * orig.nx;
+    let mut per = Vec::with_capacity(orig.ns);
+    for s in 0..orig.ns {
+        let mut o = Vec::with_capacity(orig.nt * npix);
+        let mut r = Vec::with_capacity(orig.nt * npix);
+        for t in 0..orig.nt {
+            let off = (t * orig.ns + s) * npix;
+            o.extend_from_slice(&orig.mass[off..off + npix]);
+            r.extend_from_slice(&recon_mass[off..off + npix]);
+        }
+        per.push(metrics::nrmse(&o, &r));
+    }
+    let mean = per.iter().sum::<f64>() / per.len() as f64;
+    (per, mean)
+}
+
+/// QoI NRMSE on a strided spatial sample (production rates are pointwise).
+fn qoi_nrmse(orig: &Dataset, recon_mass: &[f32], stride: usize) -> (Vec<f64>, f64) {
+    let mech = Mechanism::standard();
+    let ns = orig.ns;
+    let mut idxs = Vec::new();
+    for t in 0..orig.nt {
+        for y in (0..orig.ny).step_by(stride) {
+            for x in (0..orig.nx).step_by(stride) {
+                idxs.push((t, y, x));
+            }
+        }
+    }
+    let n = idxs.len();
+    let mut ys_o = vec![0.0f32; ns * n];
+    let mut ys_r = vec![0.0f32; ns * n];
+    let mut temps = vec![0.0f32; n];
+    for (i, &(t, y, x)) in idxs.iter().enumerate() {
+        temps[i] = orig.temp_at(t, y, x);
+        for s in 0..ns {
+            let off = ((t * ns + s) * orig.ny + y) * orig.nx + x;
+            ys_o[s * n + i] = orig.mass[off];
+            ys_r[s * n + i] = recon_mass[off];
+        }
+    }
+    let mut w_o = vec![0.0f64; ns * n];
+    let mut w_r = vec![0.0f64; ns * n];
+    chem::production_rates(&mech, &ys_o, &temps, orig.pressure, n, &mut w_o);
+    chem::production_rates(&mech, &ys_r, &temps, orig.pressure, n, &mut w_r);
+    metrics::nrmse::nrmse_per_species_f64(&w_o, &w_r, ns)
+}
+
+fn main() -> anyhow::Result<()> {
+    let ds = io::read_dataset("artifacts/dataset.bin")?;
+    println!(
+        "== end-to-end GBATC on artifacts/dataset.bin: {}x{}x{}x{} ({:.1} MB)",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        ds.pd_bytes() as f64 / 1e6
+    );
+
+    let service = ExecService::start("artifacts", 4)?;
+    let handle = service.handle();
+    let manifest = Manifest::load("artifacts/manifest.txt")?;
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+
+    let target = 1e-3;
+    let opts = CompressOptions {
+        nrmse_target: target,
+        ..Default::default()
+    };
+
+    // --- GBATC ---
+    let t = Timer::start();
+    let report = comp.compress(&ds, &opts)?;
+    let t_comp = t.secs();
+    report.archive.write_file("/tmp/end_to_end.gba")?;
+    let t = Timer::start();
+    let recon = comp.decompress(&report.archive, 0)?;
+    let t_dec = t.secs();
+
+    let (per, mean) = species_nrmse(&ds, &recon);
+    let (qoi_per, qoi_mean) = qoi_nrmse(&ds, &recon, 4);
+    println!("GBATC @ target {target:.0e}:");
+    println!(
+        "  CR {:.1} | compress {:.1}s ({:.1} MB/s) | decompress {:.1}s",
+        report.archive.compression_ratio(),
+        t_comp,
+        ds.pd_bytes() as f64 / 1e6 / t_comp,
+        t_dec
+    );
+    println!("  {}", report.breakdown);
+    println!(
+        "  PD mean NRMSE {mean:.3e} (bound: every block ℓ2 <= {:.2e}) | QoI mean NRMSE {qoi_mean:.3e}",
+        report.tau
+    );
+    for name in ["H2O", "CO", "C2H3", "nC3H7COCH2"] {
+        let s = chem::index_of(name).unwrap();
+        let a = ds.species_field(s);
+        let mut r = vec![0.0f32; a.data.len()];
+        let npix = ds.ny * ds.nx;
+        for t in 0..ds.nt {
+            let off = (t * ds.ns + s) * npix;
+            r[t * npix..(t + 1) * npix].copy_from_slice(&recon[off..off + npix]);
+        }
+        let mid = ds.nt / 2;
+        println!(
+            "  {:>12}: NRMSE {:.2e} | PSNR {:>5.1} dB | SSIM(mid) {:.5} | QoI NRMSE {:.2e}",
+            name,
+            per[s],
+            metrics::psnr(&a.data, &r),
+            metrics::ssim2d(a.frame(mid), &r[mid * npix..(mid + 1) * npix], ds.ny, ds.nx),
+            qoi_per[s],
+        );
+    }
+
+    // --- SZ on the same data ---
+    let szc = SzCompressor::new(SzCompressOptions::default());
+    let t = Timer::start();
+    let sz_archive = szc.compress(&ds, target)?;
+    let sz_comp = t.secs();
+    let sz_recon = szc.decompress(&sz_archive)?;
+    let (_, sz_mean) = species_nrmse(&ds, &sz_recon);
+    let (_, sz_qoi) = qoi_nrmse(&ds, &sz_recon, 4);
+    println!("SZ   @ target {target:.0e}:");
+    println!(
+        "  CR {:.1} | compress {:.1}s | PD mean NRMSE {:.3e} | QoI mean NRMSE {:.3e}",
+        ds.pd_bytes() as f64 / sz_archive.total_bytes() as f64,
+        sz_comp,
+        sz_mean,
+        sz_qoi
+    );
+
+    assert!(mean <= target * 1.05, "GBATC exceeded target");
+    println!("end_to_end OK");
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Runtime profiling helper (§Perf): per-executable latency + throughput.
+use std::time::Instant;
+fn main() {
+    let dir = std::env::var("GBATC_ARTIFACTS").unwrap_or("artifacts".into());
+    let service = gbatc::runtime::ExecService::start(&dir, 4).unwrap();
+    let h = service.handle();
+    let spec = h.spec();
+    let il = spec.instance_len();
+    let blocks = vec![0.1f32; spec.batch * il];
+    for _ in 0..2 { let _ = h.encode(blocks.clone(), spec.batch).unwrap(); }
+    let t = Instant::now();
+    for _ in 0..5 { let _ = h.encode(blocks.clone(), spec.batch).unwrap(); }
+    println!("encode: {:.3}s/batch ({} blocks)", t.elapsed().as_secs_f64()/5.0, spec.batch);
+    let z = vec![0.1f32; spec.batch * spec.latent];
+    let t = Instant::now();
+    for _ in 0..5 { let _ = h.decode(z.clone(), spec.batch).unwrap(); }
+    println!("decode: {:.3}s/batch", t.elapsed().as_secs_f64()/5.0);
+    let pts = vec![0.1f32; spec.points * spec.species];
+    for _ in 0..2 { let _ = h.tcn(pts.clone(), spec.points).unwrap(); }
+    let t = Instant::now();
+    for _ in 0..5 { let _ = h.tcn(pts.clone(), spec.points).unwrap(); }
+    let per = t.elapsed().as_secs_f64()/5.0;
+    println!("tcn:    {:.3}s/batch ({} pts, {:.2} Mpts/s)", per, spec.points,
+             spec.points as f64 / per / 1e6);
+}

@@ -1,0 +1,75 @@
+//! Quickstart: compress and decompress a small synthetic HCCI dataset with
+//! GBATC and verify the error bound.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::config::Manifest;
+use gbatc::data::{generate, Profile};
+use gbatc::metrics;
+use gbatc::runtime::ExecService;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a dataset: 8 timesteps x 58 species x 40 x 40 (use `gen-data` or
+    //    artifacts/dataset.bin for bigger ones)
+    let ds = generate(Profile::Tiny, 42);
+    println!(
+        "dataset: {}x{}x{}x{} ({:.1} MB)",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        ds.pd_bytes() as f64 / 1e6
+    );
+
+    // 2. the AOT runtime (artifacts built once by `make artifacts`)
+    let service = ExecService::start("artifacts", 4)?;
+    let handle = service.handle();
+    let manifest = Manifest::load("artifacts/manifest.txt")?;
+    let compressor = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+
+    // 3. compress with a guaranteed per-species NRMSE of 1e-3
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        ..Default::default()
+    };
+    let report = compressor.compress(&ds, &opts)?;
+    println!(
+        "compressed: CR {:.1} | every block residual <= tau ({:.3e} <= {:.3e})",
+        report.archive.compression_ratio(),
+        report.max_block_residual,
+        report.tau
+    );
+    println!("  {}", report.breakdown);
+
+    // 4. decompress and measure
+    let recon = compressor.decompress(&report.archive, 0)?;
+    let npix = ds.ny * ds.nx;
+    let mut worst = (0usize, 0.0f64);
+    let mut mean = 0.0;
+    for s in 0..ds.ns {
+        let mut o = Vec::with_capacity(ds.nt * npix);
+        let mut r = Vec::with_capacity(ds.nt * npix);
+        for t in 0..ds.nt {
+            let off = (t * ds.ns + s) * npix;
+            o.extend_from_slice(&ds.mass[off..off + npix]);
+            r.extend_from_slice(&recon[off..off + npix]);
+        }
+        let e = metrics::nrmse(&o, &r);
+        mean += e / ds.ns as f64;
+        if e > worst.1 {
+            worst = (s, e);
+        }
+    }
+    println!(
+        "decompressed: mean NRMSE {:.3e}, worst species {} at {:.3e}",
+        mean,
+        gbatc::chem::SPECIES[worst.0].name,
+        worst.1
+    );
+    assert!(mean <= opts.nrmse_target * 1.05);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Head-to-head: GBATC vs GBA vs SZ on the same dataset at matched error
+//! targets — a compact version of the paper's Fig. 4 comparison, printed
+//! as a table.
+//!
+//! ```bash
+//! cargo run --release --example sz_vs_gbatc -- [profile] [seed]
+//! ```
+
+use gbatc::compressor::{
+    CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor,
+};
+use gbatc::config::Manifest;
+use gbatc::data::{generate, Profile};
+use gbatc::metrics;
+use gbatc::runtime::ExecService;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let profile = Profile::parse(args.first().map(|s| s.as_str()).unwrap_or("small"))
+        .expect("profile: tiny|small|medium");
+    let seed: u64 = args.get(1).map(|s| s.parse().unwrap()).unwrap_or(7);
+
+    let ds = generate(profile, seed);
+    println!(
+        "dataset {:?} seed {seed}: {}x{}x{}x{} ({:.1} MB)\n",
+        profile,
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        ds.pd_bytes() as f64 / 1e6
+    );
+
+    let service = ExecService::start("artifacts", 4)?;
+    let handle = service.handle();
+    let manifest = Manifest::load("artifacts/manifest.txt")?;
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+    let szc = SzCompressor::new(SzCompressOptions::default());
+
+    let mean_nrmse = |recon: &[f32]| -> f64 {
+        let npix = ds.ny * ds.nx;
+        let mut mean = 0.0;
+        for s in 0..ds.ns {
+            let mut o = Vec::new();
+            let mut r = Vec::new();
+            for t in 0..ds.nt {
+                let off = (t * ds.ns + s) * npix;
+                o.extend_from_slice(&ds.mass[off..off + npix]);
+                r.extend_from_slice(&recon[off..off + npix]);
+            }
+            mean += metrics::nrmse(&o, &r) / ds.ns as f64;
+        }
+        mean
+    };
+
+    println!(
+        "{:<8} {:>10} {:>12} {:>12}",
+        "method", "target", "CR", "mean NRMSE"
+    );
+    for target in [3e-3, 1e-3, 3e-4] {
+        for (name, use_tcn) in [("GBATC", true), ("GBA", false)] {
+            let opts = CompressOptions {
+                nrmse_target: target,
+                use_tcn,
+                ..Default::default()
+            };
+            let report = comp.compress(&ds, &opts)?;
+            let recon = comp.decompress(&report.archive, 0)?;
+            println!(
+                "{:<8} {:>10.0e} {:>12.1} {:>12.3e}",
+                name,
+                target,
+                report.archive.compression_ratio(),
+                mean_nrmse(&recon)
+            );
+        }
+        let archive = szc.compress(&ds, target)?;
+        let recon = szc.decompress(&archive)?;
+        println!(
+            "{:<8} {:>10.0e} {:>12.1} {:>12.3e}",
+            "SZ",
+            target,
+            ds.pd_bytes() as f64 / archive.total_bytes() as f64,
+            mean_nrmse(&recon)
+        );
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,1 @@
+"""GBATC build-time python package: L1 kernels, L2 model, AOT export."""

@@ -1,0 +1,207 @@
+"""AOT entrypoint: train GBATC on the synthetic S3D-like dataset and export
+HLO-text artifacts for the rust runtime.
+
+Run once at build time (`make artifacts`); the rust binary is self-contained
+afterwards.  Outputs in --out-dir:
+
+  dataset.bin       — SDF1 container (temperature + 58-species mass fractions)
+  encoder.hlo.txt   — [B, 58, 4, 5, 4] normalized blocks -> [B, 36] latents
+  decoder.hlo.txt   — [B, 36] -> [B, 58, 4, 5, 4]
+  tcn.hlo.txt       — [P, 58] point species vectors -> corrected [P, 58]
+  manifest.txt      — shapes, batch sizes, parameter counts (CR accounting)
+  train_log.txt     — AE/TCN loss curves (EXPERIMENTS.md provenance)
+
+HLO *text* is the interchange format: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 (the `xla` crate's backend)
+rejects; the text parser reassigns ids and round-trips cleanly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model, train
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_hlo(fn, specs, path: str) -> None:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars)", flush=True)
+
+
+def write_params_sidecar(params: dict, path: str) -> list:
+    """Write trained parameters as a binary sidecar (`GBPR` format).
+
+    HLO *text* elides large constants (`constant({...})`), so weights cannot
+    be baked into the artifact; instead the exported computation takes them
+    as runtime arguments, in sorted-key order, and the rust runtime feeds
+    them from this sidecar on every execution.  Returns the sorted keys.
+    """
+    keys = sorted(params.keys())
+    with open(path, "wb") as f:
+        f.write(b"GBPR")
+        np.array([len(keys)], dtype="<u4").tofile(f)
+        for k in keys:
+            name = k.encode()
+            np.array([len(name)], dtype="<u4").tofile(f)
+            f.write(name)
+            arr = np.asarray(params[k], dtype=np.float32)
+            np.array([arr.ndim], dtype="<u4").tofile(f)
+            np.array(arr.shape, dtype="<u4").tofile(f)
+            arr.astype("<f4").tofile(f)
+    print(f"[aot] wrote {path} ({len(keys)} tensors)", flush=True)
+    return keys
+
+
+def export_model_hlo(apply_fn, params: dict, x_spec, hlo_path: str,
+                     params_path: str) -> None:
+    """Export `apply_fn(params, x)` with params as trailing arguments."""
+    keys = write_params_sidecar(params, params_path)
+
+    def wrapped(x, plist):
+        p = dict(zip(keys, plist))
+        return (apply_fn(p, x),)
+
+    plist_specs = [
+        jax.ShapeDtypeStruct(np.asarray(params[k]).shape, jnp.float32)
+        for k in keys
+    ]
+    export_hlo(wrapped, [x_spec, plist_specs], hlo_path)
+
+
+def reconstruct_all(params, blocks: np.ndarray, bs: int) -> np.ndarray:
+    """AE reconstruction of every block, batched (build-time helper)."""
+    fn = jax.jit(lambda x: model.autoencode(params, x))
+    out = np.empty_like(blocks)
+    n = blocks.shape[0]
+    for i in range(0, n, bs):
+        j = min(i + bs, n)
+        xb = blocks[i:j]
+        pad = bs - (j - i)
+        if pad:
+            xb = np.concatenate([xb, np.zeros((pad, *xb.shape[1:]), xb.dtype)])
+        out[i:j] = np.asarray(fn(jnp.asarray(xb)))[: j - i]
+    return out
+
+
+def blocks_to_points(blocks: np.ndarray) -> np.ndarray:
+    """[Nb, S, kt, by, bx] -> [Nb*kt*by*bx, S] species vectors."""
+    nb, s = blocks.shape[:2]
+    return np.ascontiguousarray(
+        blocks.transpose(0, 2, 3, 4, 1).reshape(-1, s)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="small", choices=list(D.PROFILES))
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--ae-steps", type=int, default=int(os.environ.get("GBATC_AE_STEPS", 350)))
+    ap.add_argument("--tcn-steps", type=int, default=int(os.environ.get("GBATC_TCN_STEPS", 300)))
+    ap.add_argument("--batch", type=int, default=256, help="encoder/decoder HLO batch")
+    ap.add_argument("--points", type=int, default=8192, help="TCN HLO point batch")
+    ap.add_argument("--reuse-checkpoint", action="store_true",
+                    help="skip training if artifacts/checkpoint.npz exists")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    # 1. dataset ------------------------------------------------------------
+    print(f"[aot] generating profile={args.profile} seed={args.seed}", flush=True)
+    mass, temp = D.generate(args.profile, args.seed)
+    D.write_dataset(os.path.join(args.out_dir, "dataset.bin"), mass, temp)
+
+    lo, hi = D.species_ranges(mass)
+    norm = D.normalize(mass, lo, hi)
+    blocks = D.blockify(norm)
+    print(f"[aot] {blocks.shape[0]} blocks of shape {blocks.shape[1:]}", flush=True)
+
+    # 2. train (or reuse a cached checkpoint for export-only iterations) ----
+    ckpt = os.path.join(args.out_dir, "checkpoint.npz")
+    if args.reuse_checkpoint and os.path.exists(ckpt):
+        print(f"[aot] reusing {ckpt}", flush=True)
+        z = np.load(ckpt)
+        ae_params = {k[3:]: jnp.asarray(z[k]) for k in z.files if k.startswith(("ae_e", "ae_d"))}
+        tcn_params = {k[4:]: jnp.asarray(z[k]) for k in z.files if k.startswith("tcn_t")}
+        ae_log = [(0, float(z["ae_loss"]))]
+        tcn_log = [(0, float(z["tcn_loss"]))]
+    else:
+        ae_params, ae_log = train.train_ae(blocks, steps=args.ae_steps, seed=args.seed)
+        recon = reconstruct_all(ae_params, blocks, args.batch)
+        tcn_params, tcn_log = train.train_tcn(
+            blocks_to_points(recon), blocks_to_points(blocks),
+            steps=args.tcn_steps, seed=args.seed + 1)
+        np.savez(
+            ckpt,
+            ae_loss=ae_log[-1][1],
+            tcn_loss=tcn_log[-1][1],
+            **{f"ae_{k}": np.asarray(v) for k, v in ae_params.items()},
+            **{f"tcn_{k}": np.asarray(v) for k, v in tcn_params.items()},
+        )
+
+    with open(os.path.join(args.out_dir, "train_log.txt"), "w") as f:
+        for step, loss in ae_log:
+            f.write(f"ae {step} {loss:.6e}\n")
+        for step, loss in tcn_log:
+            f.write(f"tcn {step} {loss:.6e}\n")
+
+    # 3. export HLO — dense layers through the L1 Pallas kernel; weights as
+    # runtime arguments + GBPR sidecars (HLO text elides large constants)
+    model.use_pallas(True)
+    bshape = (args.batch, model.S, *model.BLOCK)
+    enc_params = {k: v for k, v in ae_params.items() if k.startswith("e_")}
+    dec_params = {k: v for k, v in ae_params.items() if k.startswith("d_")}
+    export_model_hlo(model.encode, enc_params,
+                     jax.ShapeDtypeStruct(bshape, jnp.float32),
+                     os.path.join(args.out_dir, "encoder.hlo.txt"),
+                     os.path.join(args.out_dir, "encoder.params"))
+    export_model_hlo(model.decode, dec_params,
+                     jax.ShapeDtypeStruct((args.batch, model.LATENT), jnp.float32),
+                     os.path.join(args.out_dir, "decoder.hlo.txt"),
+                     os.path.join(args.out_dir, "decoder.params"))
+    export_model_hlo(model.tcn_apply, tcn_params,
+                     jax.ShapeDtypeStruct((args.points, model.S), jnp.float32),
+                     os.path.join(args.out_dir, "tcn.hlo.txt"),
+                     os.path.join(args.out_dir, "tcn.params"))
+
+    # 4. manifest -----------------------------------------------------------
+    enc_n = sum(v.size for k, v in ae_params.items() if k.startswith("e_"))
+    dec_n = sum(v.size for k, v in ae_params.items() if k.startswith("d_"))
+    tcn_n = model.param_count(tcn_params)
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(f"species={model.S}\n")
+        f.write(f"block_t={model.BLOCK[0]}\nblock_y={model.BLOCK[1]}\nblock_x={model.BLOCK[2]}\n")
+        f.write(f"latent={model.LATENT}\n")
+        f.write(f"encoder_batch={args.batch}\n")
+        f.write(f"tcn_points={args.points}\n")
+        f.write(f"encoder_params={enc_n}\n")
+        f.write(f"decoder_params={dec_n}\n")
+        f.write(f"tcn_params={tcn_n}\n")
+        f.write(f"train_profile={args.profile}\n")
+        f.write(f"seed={args.seed}\n")
+        f.write(f"ae_final_loss={ae_log[-1][1]:.6e}\n")
+        f.write(f"tcn_final_loss={tcn_log[-1][1]:.6e}\n")
+    print(f"[aot] done in {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,249 @@
+"""Synthetic S3D-HCCI-like dataset generator (build-time substitute).
+
+The paper evaluates on Sandia S3D DNS output: compression ignition of a lean
+n-heptane/air mixture (Yoo et al. 58-species reduced mechanism), a 640x640
+2D domain sampled over 50 timesteps in t = 1.5..2.0 ms.  That dataset (and
+S3D itself) is not available here, so we synthesize a field with the same
+statistical structure the compressor exploits (see DESIGN.md §3):
+
+* a base isentropic-compression temperature ramp plus advected
+  Gaussian-random-field temperature inhomogeneities (few-mode turbulence),
+* a two-stage ignition progress variable (low-T ignition c1, high-T
+  ignition c2) whose local delay depends on the temperature fluctuation —
+  producing intermittent ignition fronts,
+* 58 species mass fractions that are species-specific nonlinear functions of
+  (c1, c2, T) spanning ~8 decades of magnitude, so that all species live on
+  a shared low-dimensional manifold (the paper measures linear-PCA rank
+  46/58) while majors and minors behave differently,
+* weak correlated multiplicative noise so the manifold is not exactly
+  low-rank.
+
+The Rust crate ports the same formulas (rust/src/data/synth.rs) so examples
+and benches can generate data without python; both sides are deterministic
+given a seed, but only the python output is used for AE training.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Species table — order is the cross-language ABI (rust/src/chem/species.rs
+# mirrors it).  Names follow the Yoo et al. 58-species n-heptane skeletal
+# mechanism flavor; roles drive the synthetic manifold functions below.
+#   role: fuel | oxidizer | inert | product | co | intermediate | radical | lowT
+SPECIES = [
+    # name,            role,           magnitude, stage-center, width
+    ("nC7H16",         "fuel",         2.5e-02, 0.00, 0.30),
+    ("O2",             "oxidizer",     2.2e-01, 0.00, 0.40),
+    ("N2",             "inert",        7.2e-01, 0.00, 1.00),
+    ("CO2",            "product",      8.0e-02, 0.95, 0.30),
+    ("H2O",            "product",      6.5e-02, 0.90, 0.30),
+    ("CO",             "co",           4.5e-02, 0.55, 0.22),
+    ("H2",             "co",           1.5e-03, 0.50, 0.25),
+    ("H",              "radical",      3.0e-05, 0.80, 0.12),
+    ("O",              "radical",      8.0e-05, 0.78, 0.12),
+    ("OH",             "radical",      2.5e-03, 0.82, 0.15),
+    ("HO2",            "radical",      1.2e-04, 0.45, 0.18),
+    ("H2O2",           "intermediate", 3.0e-04, 0.40, 0.16),
+    ("CH3",            "radical",      2.0e-04, 0.55, 0.15),
+    ("CH4",            "intermediate", 9.0e-04, 0.50, 0.22),
+    ("CH2O",           "intermediate", 1.8e-03, 0.42, 0.16),
+    ("HCO",            "radical",      6.0e-06, 0.60, 0.12),
+    ("CH3O",           "radical",      2.0e-06, 0.48, 0.12),
+    ("C2H2",           "intermediate", 4.0e-04, 0.62, 0.15),
+    ("C2H3",           "radical",      5.0e-06, 0.60, 0.11),
+    ("C2H4",           "intermediate", 3.5e-03, 0.52, 0.18),
+    ("C2H5",           "radical",      4.0e-06, 0.45, 0.12),
+    ("C2H6",           "intermediate", 4.0e-04, 0.40, 0.18),
+    ("CH2CHO",         "radical",      3.0e-06, 0.55, 0.11),
+    ("CH3CHO",         "intermediate", 2.5e-04, 0.38, 0.15),
+    ("C3H4",           "intermediate", 8.0e-05, 0.55, 0.14),
+    ("C3H5",           "radical",      6.0e-05, 0.52, 0.13),
+    ("C3H6",           "intermediate", 1.5e-03, 0.45, 0.16),
+    ("nC3H7",          "radical",      2.0e-06, 0.30, 0.10),
+    ("C4H7",           "radical",      4.0e-06, 0.35, 0.11),
+    ("C4H8-1",         "intermediate", 6.0e-04, 0.38, 0.14),
+    ("pC4H9",          "radical",      1.5e-06, 0.28, 0.10),
+    ("C5H9",           "radical",      2.5e-06, 0.33, 0.10),
+    ("C5H10-1",        "intermediate", 3.5e-04, 0.35, 0.13),
+    ("C6H12-1",        "intermediate", 2.5e-04, 0.32, 0.12),
+    ("C7H15-2",        "radical",      3.0e-06, 0.20, 0.09),
+    ("C7H15O2",        "lowT",         5.0e-05, 0.15, 0.10),
+    ("C7H14OOH",       "lowT",         1.2e-05, 0.16, 0.09),
+    ("OC7H13OOH",      "lowT",         4.0e-06, 0.18, 0.09),
+    ("nC7KET12",       "lowT",         2.0e-05, 0.17, 0.09),
+    ("C5H11CO",        "lowT",         1.5e-06, 0.22, 0.09),
+    ("nC3H7COCH2",     "lowT",         8.0e-07, 0.20, 0.08),
+    ("CH3COCH2",       "radical",      2.0e-06, 0.42, 0.11),
+    ("CH3COCH3",       "intermediate", 8.0e-05, 0.35, 0.13),
+    ("C2H5CHO",        "intermediate", 4.0e-05, 0.30, 0.12),
+    ("C2H5CO",         "radical",      8.0e-07, 0.32, 0.10),
+    ("CH3OCH3",        "intermediate", 2.0e-05, 0.33, 0.12),
+    ("CH3OCH2",        "radical",      5.0e-07, 0.36, 0.10),
+    ("HOCH2O",         "lowT",         3.0e-06, 0.25, 0.10),
+    ("HCOOH",          "intermediate", 5.0e-05, 0.38, 0.13),
+    ("CH3O2",          "lowT",         8.0e-06, 0.22, 0.10),
+    ("CH3O2H",         "lowT",         6.0e-06, 0.24, 0.10),
+    ("C2H3CHO",        "intermediate", 6.0e-05, 0.48, 0.13),
+    ("C2H3CO",         "radical",      4.0e-07, 0.50, 0.10),
+    ("aC3H5CHO",       "intermediate", 1.5e-05, 0.44, 0.12),
+    ("NO",             "product",      1.2e-04, 0.97, 0.25),
+    ("NO2",            "intermediate", 1.5e-05, 0.70, 0.18),
+    ("N2O",            "intermediate", 8.0e-06, 0.75, 0.18),
+    ("NNH",            "radical",      2.0e-08, 0.85, 0.12),
+]
+assert len(SPECIES) == 58
+S = 58
+
+PROFILES = {
+    # name: (T, Y, X)
+    "tiny":   (8, 40, 40),
+    "small":  (16, 80, 80),
+    "medium": (24, 320, 320),
+    "paper":  (48, 640, 640),
+}
+
+N_MODES = 12  # Fourier modes in the turbulence / inhomogeneity fields
+
+
+def _mode_params(rng: np.random.Generator):
+    """Random low-wavenumber Fourier modes: (kx, ky, phase, amp, ux, uy)."""
+    kx = rng.integers(1, 9, size=N_MODES).astype(np.float32)
+    ky = rng.integers(1, 9, size=N_MODES).astype(np.float32)
+    ph = rng.uniform(0.0, 2.0 * np.pi, size=N_MODES).astype(np.float32)
+    amp = (rng.uniform(0.4, 1.0, size=N_MODES) / np.sqrt(kx**2 + ky**2)).astype(np.float32)
+    amp /= np.sum(amp)
+    ux = rng.uniform(-0.15, 0.15, size=N_MODES).astype(np.float32)
+    uy = rng.uniform(-0.15, 0.15, size=N_MODES).astype(np.float32)
+    return kx, ky, ph, amp, ux, uy
+
+
+def generate(profile: str = "small", seed: int = 7):
+    """Return (Y[T,S,Y,X] float32 mass fractions, Temp[T,Y,X] float32 K)."""
+    nt, ny, nx = PROFILES[profile]
+    rng = np.random.default_rng(seed)
+
+    xs = np.linspace(0.0, 1.0, nx, endpoint=False, dtype=np.float32)
+    ys = np.linspace(0.0, 1.0, ny, endpoint=False, dtype=np.float32)
+    gx, gy = np.meshgrid(xs, ys, indexing="xy")  # [ny, nx]
+    tt = np.linspace(0.0, 1.0, nt, dtype=np.float32)  # normalized t in [1.5, 2.0] ms
+
+    kx, ky, ph, amp, ux, uy = _mode_params(rng)
+    kx2, ky2, ph2, amp2, ux2, uy2 = _mode_params(rng)
+    kx3, ky3, ph3, amp3, ux3, uy3 = _mode_params(rng)
+
+    def grf(t, kxs, kys, phs, amps, uxs, uys):
+        """Advected Gaussian-random-field-like sum of Fourier modes."""
+        f = np.zeros((ny, nx), dtype=np.float32)
+        for m in range(N_MODES):
+            f += amps[m] * np.sin(
+                2.0 * np.pi * (kxs[m] * (gx - uxs[m] * t) + kys[m] * (gy - uys[m] * t))
+                + phs[m]
+            )
+        return f
+
+    mass = np.empty((nt, S, ny, nx), dtype=np.float32)
+    temp = np.empty((nt, ny, nx), dtype=np.float32)
+
+    mag = np.array([sp[2] for sp in SPECIES], dtype=np.float32)
+    ctr = np.array([sp[3] for sp in SPECIES], dtype=np.float32)
+    wid = np.array([sp[4] for sp in SPECIES], dtype=np.float32)
+    roles = [sp[1] for sp in SPECIES]
+
+    for it, t in enumerate(tt):
+        theta = grf(t, kx, ky, ph, amp, ux, uy)  # temperature inhomogeneity
+        # local two-stage ignition delays modulated by theta (hotter -> earlier)
+        d1 = 0.18 - 0.22 * theta  # low-T stage (mostly before the window)
+        d2 = 0.55 - 0.35 * theta  # high-T stage (inside the window)
+        c1 = 1.0 / (1.0 + np.exp(-(t - d1) / 0.035))
+        c2 = 1.0 / (1.0 + np.exp(-(t - d2) / 0.045))
+        # base compression ramp + heat release of both stages
+        tbase = 1050.0 + 120.0 * t
+        T = tbase + 55.0 * theta + 140.0 * c1 + 950.0 * c2
+        temp[it] = T.astype(np.float32)
+
+        # shared progress coordinate for the species manifold
+        c = 0.25 * c1 + 0.75 * c2
+        # weak correlated multiplicative noise (keeps rank high)
+        eps1 = grf(t, kx2, ky2, ph2, amp2, ux2, uy2)
+        eps2 = grf(t, kx3, ky3, ph3, amp3, ux3, uy3)
+
+        tn = (T - 1050.0) / 1200.0  # normalized temperature
+        for k in range(S):
+            role = roles[k]
+            if role == "fuel":
+                f = (1.0 - c1) * (1.0 - 0.92 * c2)
+            elif role == "oxidizer":
+                f = 1.0 - 0.55 * c2 - 0.05 * c1
+            elif role == "inert":
+                f = np.full_like(c, 1.0) + 0.0008 * eps1
+            elif role == "product":
+                g = 1.0 / (1.0 + np.exp(-(c - ctr[k]) / (0.25 * wid[k] + 0.05)))
+                f = g * (1.0 + 0.05 * tn)
+            elif role == "co":
+                f = np.exp(-((c - ctr[k]) ** 2) / (2.0 * wid[k] ** 2)) * (0.25 + 0.75 * c2) \
+                    + 0.15 * c2
+            elif role == "lowT":
+                # low-T ignition species: keyed to stage 1, consumed by stage 2
+                f = np.exp(-((0.25 * c1 + 0.02 - ctr[k]) ** 2) / (2.0 * wid[k] ** 2)) \
+                    * c1 * (1.0 - c2) ** 2
+            else:  # intermediate | radical: bump along the shared coordinate
+                f = np.exp(-((c - ctr[k]) ** 2) / (2.0 * wid[k] ** 2))
+                if role == "radical":
+                    # radicals additionally Arrhenius-amplified by temperature
+                    f = f * np.exp(2.2 * (tn - 0.5))
+            noise = 1.0 + 0.004 * eps1 + 0.0024 * eps2 * np.float32(np.sin(3.1 * k + 0.7))
+            mass[it, k] = (mag[k] * f * noise).astype(np.float32)
+
+    np.clip(mass, 0.0, None, out=mass)
+    return mass, temp
+
+
+def write_dataset(path: str, mass: np.ndarray, temp: np.ndarray) -> None:
+    """SDF1 container: magic, dims, temperature[T,Y,X], mass[T,S,Y,X] (LE f32)."""
+    nt, s, ny, nx = mass.shape
+    with open(path, "wb") as f:
+        f.write(b"SDF1")
+        np.array([nt, s, ny, nx], dtype="<u4").tofile(f)
+        temp.astype("<f4").tofile(f)
+        mass.astype("<f4").tofile(f)
+
+
+def read_dataset(path: str):
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == b"SDF1", f"bad magic {magic!r}"
+        nt, s, ny, nx = np.fromfile(f, dtype="<u4", count=4)
+        temp = np.fromfile(f, dtype="<f4", count=nt * ny * nx).reshape(nt, ny, nx)
+        mass = np.fromfile(f, dtype="<f4", count=nt * s * ny * nx).reshape(nt, s, ny, nx)
+    return mass, temp
+
+
+def blockify(mass: np.ndarray, kt: int = 4, by: int = 5, bx: int = 4) -> np.ndarray:
+    """[T,S,Y,X] -> [Nb, S, kt, by, bx] non-overlapping spatiotemporal blocks."""
+    nt, s, ny, nx = mass.shape
+    assert nt % kt == 0 and ny % by == 0 and nx % bx == 0
+    m = mass.reshape(nt // kt, kt, s, ny // by, by, nx // bx, bx)
+    m = m.transpose(0, 3, 5, 2, 1, 4, 6)  # [Tb, Yb, Xb, S, kt, by, bx]
+    return np.ascontiguousarray(m.reshape(-1, s, kt, by, bx))
+
+
+def deblockify(blocks: np.ndarray, nt: int, ny: int, nx: int,
+               kt: int = 4, by: int = 5, bx: int = 4) -> np.ndarray:
+    """Inverse of blockify."""
+    s = blocks.shape[1]
+    m = blocks.reshape(nt // kt, ny // by, nx // bx, s, kt, by, bx)
+    m = m.transpose(0, 4, 3, 1, 5, 2, 6)  # [Tb, kt, S, Yb, by, Xb, bx]
+    return np.ascontiguousarray(m.reshape(nt, s, ny, nx))
+
+
+def species_ranges(mass: np.ndarray):
+    """Per-species (min, max) over the full field — the NRMSE normalizer."""
+    lo = mass.min(axis=(0, 2, 3))
+    hi = mass.max(axis=(0, 2, 3))
+    return lo.astype(np.float32), hi.astype(np.float32)
+
+
+def normalize(mass: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> np.ndarray:
+    rng = np.maximum(hi - lo, 1e-30)
+    return ((mass - lo[None, :, None, None]) / rng[None, :, None, None]).astype(np.float32)

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels for GBATC (build-time only; exported into HLO)."""
+
+from .matmul import matmul_bias_act, matmul_bias_act_pallas  # noqa: F401
+from .conv import conv3d, conv3d_transpose  # noqa: F401
+from . import ref  # noqa: F401

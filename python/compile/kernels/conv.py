@@ -1,0 +1,57 @@
+"""3D convolution routed through the Pallas matmul kernel via im2col.
+
+The AE's Conv3D / Conv3DTranspose layers (Fig. 1 of the paper) are stride-1
+SAME convolutions over the tiny 4x5x4 block extent, so a transposed
+convolution is exactly a convolution with spatially-flipped, IO-swapped
+weights — both directions use `conv3d` here.  im2col turns the convolution
+into one [B*D*H*W, C*27] x [C*27, O] matmul, which is executed by the L1
+Pallas kernel, keeping all model FLOPs on the hot kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_bias_act
+
+
+def _im2col3d(x: jax.Array, kd: int, kh: int, kw: int) -> jax.Array:
+    """[B,C,D,H,W] -> [B*D*H*W, C*kd*kh*kw] patches (SAME, stride 1)."""
+    b, c, d, h, w = x.shape
+    pd, ph, pw = kd // 2, kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pd, pd), (ph, ph), (pw, pw)))
+    cols = []
+    for dz in range(kd):
+        for dy in range(kh):
+            for dx in range(kw):
+                cols.append(xp[:, :, dz:dz + d, dy:dy + h, dx:dx + w])
+    # [kd*kh*kw, B, C, D, H, W] -> [B, D, H, W, C, kd*kh*kw]
+    pat = jnp.stack(cols, axis=0).transpose(1, 3, 4, 5, 2, 0)
+    return pat.reshape(b * d * h * w, c * kd * kh * kw)
+
+
+def conv3d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+           *, act: str = "none", alpha: float = 0.01) -> jax.Array:
+    """SAME stride-1 conv, x [B,C,D,H,W], w [O,I,kd,kh,kw] -> [B,O,D,H,W]."""
+    bsz, c, d, h, wd = x.shape
+    o, i, kd, kh, kw = w.shape
+    assert i == c, f"in-channels {i} != {c}"
+    cols = _im2col3d(x, kd, kh, kw)  # [B*D*H*W, C*k3]
+    # weight as [C*k3, O] with matching (C, kd, kh, kw) ordering
+    wm = w.transpose(1, 2, 3, 4, 0).reshape(c * kd * kh * kw, o)
+    y = matmul_bias_act(cols, wm, b if b is not None else jnp.zeros((o,), x.dtype),
+                        act, alpha)
+    return y.reshape(bsz, d, h, wd, o).transpose(0, 4, 1, 2, 3)
+
+
+def conv3d_transpose(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+                     *, act: str = "none", alpha: float = 0.01) -> jax.Array:
+    """Stride-1 SAME transposed conv == conv with flipped, IO-swapped kernel.
+
+    x [B,O,D,H,W], w [O,I,kd,kh,kw] (the forward-conv weight) -> [B,I,D,H,W].
+    """
+    wt = jnp.flip(w, axis=(2, 3, 4)).transpose(1, 0, 2, 3, 4)  # [I,O,kd,kh,kw]
+    return conv3d(x, wt, b, act=act, alpha=alpha)

@@ -1,0 +1,149 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + LeakyReLU.
+
+This is the compute hot-spot of GBATC: every fully-connected layer — the AE
+bottleneck FC, the decoder FC, and all four layers of the tensor-correction
+network (which runs point-wise over *every* grid point and dominates
+decompression FLOPs) — routes through this kernel.  The 3D convolutions also
+route through it via im2col (see kernels/conv.py), so essentially all model
+FLOPs execute here.
+
+TPU-style design (see DESIGN.md §4/§8):
+  * grid (M/bm, N/bn, K/bk), k-innermost so the f32 accumulator tile stays
+    resident in VMEM while A/B tiles stream HBM->VMEM;
+  * bias add + LeakyReLU fused into the k==last epilogue — no second HBM
+    round-trip for the activation;
+  * tile sizes default to 128x128x128: 3 * 128*128*4 B ≈ 192 KiB << VMEM,
+    and 128 lanes match the MXU systolic array.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and in interpret mode the kernel still traces to plain HLO so
+the exported artifact runs anywhere.
+
+Training differentiates through this kernel via a custom VJP whose backward
+pass reuses the same Pallas kernel for both dX and dW.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, alpha: float,
+                   fuse_bias: bool, act: str):
+    """One (i, j, k) grid step: o += x_tile @ w_tile; epilogue on last k.
+
+    The output tile doubles as the f32 accumulator (all GBATC tensors are
+    f32), so no scratch buffer is needed and the tile stays VMEM-resident
+    across the k loop.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if fuse_bias:
+            acc = acc + b_ref[...]
+        if act == "leaky_relu":
+            acc = jnp.where(acc >= 0.0, acc, alpha * acc)
+        elif act == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def matmul_bias_act_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    act: str = "none",
+    alpha: float = 0.01,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """act(x @ w + b) with act in {none, relu, leaky_relu}; f32 accumulate."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    fuse_bias = b is not None
+    if fuse_bias:
+        assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+
+    bm, bn, bk = min(bm, _round_up(m, 8)), min(bn, _round_up(n, 8)), min(bk, _round_up(k, 8))
+    mp, np_, kp = _round_up(m, bm), _round_up(n, bn), _round_up(k, bk)
+
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n)) if fuse_bias else jnp.zeros((np_,), x.dtype)
+
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel, nk=nk, alpha=alpha, fuse_bias=fuse_bias, act=act
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: custom VJP whose backward pass reuses the kernel.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def matmul_bias_act(x, w, b, act="none", alpha=0.01):
+    """Differentiable fused act(x @ w + b) running on the Pallas kernel."""
+    return matmul_bias_act_pallas(x, w, b, act=act, alpha=alpha)
+
+
+def _fwd(x, w, b, act, alpha):
+    pre = matmul_bias_act_pallas(x, w, b, act="none")
+    if act == "leaky_relu":
+        y = jnp.where(pre >= 0.0, pre, alpha * pre)
+    elif act == "relu":
+        y = jnp.maximum(pre, 0.0)
+    else:
+        y = pre
+    return y, (x, w, pre)
+
+
+def _bwd(act, alpha, res, g):
+    x, w, pre = res
+    if act == "leaky_relu":
+        g = jnp.where(pre >= 0.0, g, alpha * g)
+    elif act == "relu":
+        g = jnp.where(pre >= 0.0, g, 0.0)
+    dx = matmul_bias_act_pallas(g, w.T, None, act="none")
+    dw = matmul_bias_act_pallas(x.T, g, None, act="none")
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_fwd, _bwd)

@@ -1,0 +1,174 @@
+"""L2 JAX model: GBATC autoencoder + tensor correction network.
+
+Architecture follows the paper exactly (Fig. 1 / Fig. 3 / §III):
+  * AE encoder: two Conv3D layers (58 species as channels, LeakyReLU) over a
+    58 x 4 x 5 x 4 spatiotemporal block, then ONE fully-connected layer to a
+    latent of size 36 ("additional fc layers do not enhance compression
+    accuracy for this application").
+  * AE decoder: mirror — FC from latent, reshape, two Conv3DTranspose layers.
+  * TCN: point-wise overcomplete MLP 58 -> 232 -> 464 -> 232 -> 58 with
+    LeakyReLU, mapping reconstructed species tensors back toward the
+    originals.  We parameterize it residually (output = input + net(input)),
+    which is the same function class and trains much faster; see DESIGN.md.
+
+Backend switch: the *exported* HLO routes every dense layer through the L1
+Pallas kernel (with export-sized tiles so the grid stays small); *training*
+uses the pure-jnp/lax oracle ops, which pytest proves numerically identical
+to the kernels (interpret-mode Pallas inside a training loop is ~100x slower
+to no numerical benefit).  Call `use_pallas(True)` before lowering.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_bias_act  # noqa: F401 (pallas FC path)
+from .kernels.ref import matmul_bias_act_ref, conv3d_ref
+
+Params = Dict[str, jax.Array]
+
+_USE_PALLAS = False
+# export-time tile sizes: large tiles -> small sequential grid in the
+# lowered while-loop, still ~3*512^2*4B = 3 MiB VMEM per tile set.
+_TILE = dict(bm=8192, bn=512, bk=512)
+
+
+def use_pallas(on: bool) -> None:
+    """Route dense layers through the Pallas kernel (export) or oracle (train)."""
+    global _USE_PALLAS
+    _USE_PALLAS = on
+
+
+def _mm(x, w, b, act):
+    if _USE_PALLAS:
+        from .kernels.matmul import matmul_bias_act_pallas
+        return matmul_bias_act_pallas(x, w, b, act=act, alpha=ALPHA, **_TILE)
+    return matmul_bias_act_ref(x, w, b, act=act, alpha=ALPHA)
+
+
+def _conv(x, w, b, act):
+    # Convs always lower through lax.conv (XLA's fused, multithreaded conv):
+    # interpret-mode Pallas wraps the grid in a sequential HLO while-loop,
+    # which measured ~300x slower on the CPU PJRT backend for the im2col
+    # matmuls (EXPERIMENTS.md §Perf L2-1).  The Pallas im2col conv remains
+    # in kernels/conv.py with its own correctness tests.
+    return conv3d_ref(x, w, b, act=act, alpha=ALPHA)
+
+
+def _conv_t(x, w, b, act):
+    # stride-1 SAME transposed conv == conv with flipped, IO-swapped weights
+    wt = jnp.flip(w, axis=(2, 3, 4)).transpose(1, 0, 2, 3, 4)
+    return conv3d_ref(x, wt, b, act=act, alpha=ALPHA)
+
+S = 58                 # species (conv channels)
+BLOCK = (4, 5, 4)      # K timesteps, BY, BX — paper's block shape
+LATENT = 36            # paper's latent size
+C1, C2 = 32, 16        # conv channel widths
+FLAT = C2 * BLOCK[0] * BLOCK[1] * BLOCK[2]  # 16*4*5*4 = 1280
+TCN_WIDTHS = (S, 232, 464, 232, S)  # paper's §III TCN layer sizes
+ALPHA = 0.01           # LeakyReLU slope
+
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.float32(
+        math.sqrt(2.0 / fan_in)
+    )
+
+
+def init_ae(key: jax.Array) -> Params:
+    k = jax.random.split(key, 8)
+    kd, kh, kw = 3, 3, 3
+    return {
+        # encoder
+        "e_conv1_w": _he(k[0], (C1, S, kd, kh, kw), S * 27),
+        "e_conv1_b": jnp.zeros((C1,), jnp.float32),
+        "e_conv2_w": _he(k[1], (C2, C1, kd, kh, kw), C1 * 27),
+        "e_conv2_b": jnp.zeros((C2,), jnp.float32),
+        "e_fc_w": _he(k[2], (FLAT, LATENT), FLAT),
+        "e_fc_b": jnp.zeros((LATENT,), jnp.float32),
+        # decoder
+        "d_fc_w": _he(k[3], (LATENT, FLAT), LATENT),
+        "d_fc_b": jnp.zeros((FLAT,), jnp.float32),
+        "d_conv1_w": _he(k[4], (C2, C1, kd, kh, kw), C2 * 27),
+        "d_conv1_b": jnp.zeros((C1,), jnp.float32),
+        "d_conv2_w": _he(k[5], (C1, S, kd, kh, kw), C1 * 27),
+        "d_conv2_b": jnp.zeros((S,), jnp.float32),
+    }
+
+
+def init_tcn(key: jax.Array) -> Params:
+    p: Params = {}
+    keys = jax.random.split(key, len(TCN_WIDTHS) - 1)
+    for i, (a, b) in enumerate(zip(TCN_WIDTHS[:-1], TCN_WIDTHS[1:])):
+        p[f"t{i}_w"] = _he(keys[i], (a, b), a)
+        p[f"t{i}_b"] = jnp.zeros((b,), jnp.float32)
+    # scale the last layer down so the residual branch starts near identity
+    p[f"t{len(TCN_WIDTHS) - 2}_w"] = p[f"t{len(TCN_WIDTHS) - 2}_w"] * 0.01
+    return p
+
+
+def encode(p: Params, x: jax.Array) -> jax.Array:
+    """x [B, S, 4, 5, 4] -> latent [B, LATENT]."""
+    h = _conv(x, p["e_conv1_w"], p["e_conv1_b"], "leaky_relu")
+    h = _conv(h, p["e_conv2_w"], p["e_conv2_b"], "leaky_relu")
+    h = h.reshape(h.shape[0], FLAT)
+    return _mm(h, p["e_fc_w"], p["e_fc_b"], "none")
+
+
+def decode(p: Params, z: jax.Array) -> jax.Array:
+    """latent [B, LATENT] -> x^R [B, S, 4, 5, 4]."""
+    h = _mm(z, p["d_fc_w"], p["d_fc_b"], "leaky_relu")
+    h = h.reshape(h.shape[0], C2, *BLOCK)
+    h = _conv_t(h, p["d_conv1_w"], p["d_conv1_b"], "leaky_relu")
+    return _conv_t(h, p["d_conv2_w"], p["d_conv2_b"], "none")
+
+
+def autoencode(p: Params, x: jax.Array) -> jax.Array:
+    return decode(p, encode(p, x))
+
+
+def tcn_apply(p: Params, v: jax.Array) -> jax.Array:
+    """Point-wise correction of species vectors, v [P, S] -> [P, S]."""
+    h = v
+    n = len(TCN_WIDTHS) - 1
+    for i in range(n):
+        act = "leaky_relu" if i < n - 1 else "none"
+        h = _mm(h, p[f"t{i}_w"], p[f"t{i}_b"], act)
+    return v + h
+
+
+def ae_loss(p: Params, x: jax.Array) -> jax.Array:
+    r = autoencode(p, x)
+    return jnp.mean((x - r) ** 2)
+
+
+def tcn_loss(p: Params, recon: jax.Array, orig: jax.Array) -> jax.Array:
+    return jnp.mean((tcn_apply(p, recon) - orig) ** 2)
+
+
+def param_count(p: Params) -> int:
+    return int(sum(v.size for v in p.values()))
+
+
+# ---------------------------------------------------------------------------
+# Adam (no optax in this image — five lines of math, build-time only)
+# ---------------------------------------------------------------------------
+
+def adam_init(p: Params):
+    zeros = {k: jnp.zeros_like(v) for k, v in p.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in p.items()},
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(p: Params, g: Params, st, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = st["t"] + 1.0
+    m = {k: b1 * st["m"][k] + (1 - b1) * g[k] for k in p}
+    v = {k: b2 * st["v"][k] + (1 - b2) * g[k] ** 2 for k in p}
+    mh = {k: m[k] / (1 - b1 ** t) for k in p}
+    vh = {k: v[k] / (1 - b2 ** t) for k in p}
+    newp = {k: p[k] - lr * mh[k] / (jnp.sqrt(vh[k]) + eps) for k in p}
+    return newp, {"m": m, "v": v, "t": t}

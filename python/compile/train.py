@@ -1,0 +1,74 @@
+"""Build-time training loops for the GBATC autoencoder and TCN (Adam + MSE)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+
+def _batches(n: int, bs: int, rng: np.random.Generator):
+    idx = rng.permutation(n)
+    for i in range(0, n - bs + 1, bs):
+        yield idx[i:i + bs]
+
+
+def train_ae(blocks: np.ndarray, steps: int = 400, bs: int = 128,
+             lr: float = 2e-3, seed: int = 0, log_every: int = 50):
+    """blocks: [Nb, S, 4, 5, 4] normalized f32. Returns (params, loss_log)."""
+    params = model.init_ae(jax.random.PRNGKey(seed))
+    opt = model.adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(p, o, xb):
+        loss, g = jax.value_and_grad(model.ae_loss)(p, xb)
+        p, o = model.adam_update(p, g, o, lr=lr)
+        return p, o, loss
+
+    log, done, t0 = [], 0, time.time()
+    while done < steps:
+        for idx in _batches(blocks.shape[0], bs, rng):
+            xb = jnp.asarray(blocks[idx])
+            params, opt, loss = step(params, opt, xb)
+            done += 1
+            if done % log_every == 0 or done == steps:
+                log.append((done, float(loss)))
+                print(f"[train_ae] step {done:5d} loss {float(loss):.3e} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+            if done >= steps:
+                break
+    return params, log
+
+
+def train_tcn(recon: np.ndarray, orig: np.ndarray, steps: int = 400,
+              bs: int = 8192, lr: float = 1e-3, seed: int = 1,
+              log_every: int = 50):
+    """recon/orig: [P, S] point-wise species vectors (normalized)."""
+    params = model.init_tcn(jax.random.PRNGKey(seed))
+    opt = model.adam_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(p, o, rb, ob):
+        loss, g = jax.value_and_grad(model.tcn_loss)(p, rb, ob)
+        p, o = model.adam_update(p, g, o, lr=lr)
+        return p, o, loss
+
+    log, done, t0 = [], 0, time.time()
+    while done < steps:
+        for idx in _batches(recon.shape[0], bs, rng):
+            rb, ob = jnp.asarray(recon[idx]), jnp.asarray(orig[idx])
+            params, opt, loss = step(params, opt, rb, ob)
+            done += 1
+            if done % log_every == 0 or done == steps:
+                log.append((done, float(loss)))
+                print(f"[train_tcn] step {done:5d} loss {float(loss):.3e} "
+                      f"({time.time() - t0:.0f}s)", flush=True)
+            if done >= steps:
+                break
+    return params, log

@@ -1,0 +1,63 @@
+"""Synthetic dataset generator tests (python side; rust mirrors these)."""
+
+import numpy as np
+import pytest
+
+from compile import data as D
+
+
+def test_shapes_and_determinism():
+    m1, t1 = D.generate("tiny", 7)
+    m2, t2 = D.generate("tiny", 7)
+    assert m1.shape == (8, 58, 40, 40)
+    assert t1.shape == (8, 40, 40)
+    np.testing.assert_array_equal(m1, m2)
+    m3, _ = D.generate("tiny", 8)
+    assert not np.array_equal(m1, m3)
+
+
+def test_physicality():
+    mass, temp = D.generate("tiny", 7)
+    assert np.all(mass >= 0) and np.all(np.isfinite(mass))
+    assert np.all(temp > 900) and np.all(temp < 3000)
+    fuel = mass[:, 0].mean(axis=(1, 2))
+    h2o = mass[:, 4].mean(axis=(1, 2))
+    assert fuel[-1] < fuel[0]  # fuel consumed
+    assert h2o[-1] > h2o[0]  # product formed
+
+
+def test_blockify_roundtrip():
+    mass, _ = D.generate("tiny", 7)
+    blocks = D.blockify(mass)
+    assert blocks.shape == (2 * 8 * 10, 58, 4, 5, 4)
+    back = D.deblockify(blocks, mass.shape[0], mass.shape[2], mass.shape[3])
+    np.testing.assert_array_equal(back, mass)
+
+
+def test_normalize_ranges():
+    mass, _ = D.generate("tiny", 7)
+    lo, hi = D.species_ranges(mass)
+    norm = D.normalize(mass, lo, hi)
+    assert norm.min() >= -1e-6 and norm.max() <= 1 + 1e-6
+    # every species actually spans [0, 1]
+    assert np.all(norm.max(axis=(0, 2, 3)) > 0.99)
+
+
+def test_dataset_io_roundtrip(tmp_path):
+    mass, temp = D.generate("tiny", 9)
+    p = str(tmp_path / "ds.bin")
+    D.write_dataset(p, mass, temp)
+    m2, t2 = D.read_dataset(p)
+    np.testing.assert_array_equal(mass, m2)
+    np.testing.assert_array_equal(temp, t2)
+
+
+def test_species_magnitudes_span_decades():
+    mags = np.array([s[2] for s in D.SPECIES])
+    assert mags.max() / mags.min() > 1e6
+
+
+def test_blockify_rejects_bad_dims():
+    mass = np.zeros((5, 58, 40, 40), dtype=np.float32)  # 5 % 4 != 0
+    with pytest.raises(AssertionError):
+        D.blockify(mass)

@@ -1,0 +1,106 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (hypothesis shape sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_bias_act, matmul_bias_act_pallas, conv3d, \
+    conv3d_transpose
+from compile.kernels.ref import matmul_bias_act_ref, conv3d_ref
+
+
+def _rand(key, shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32,
+                              -1.0, 1.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    act=st.sampled_from(["none", "relu", "leaky_relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = matmul_bias_act_pallas(x, w, b, act=act)
+    want = matmul_bias_act_ref(x, w, b, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (128, 128, 128), (129, 127, 130),
+                                   (256, 58, 232), (80, 1280, 36)])
+def test_matmul_model_shapes(m, k, n):
+    x, w, b = _rand(0, (m, k)), _rand(1, (k, n)), _rand(2, (n,))
+    got = matmul_bias_act_pallas(x, w, b, act="leaky_relu")
+    want = matmul_bias_act_ref(x, w, b, act="leaky_relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_no_bias():
+    x, w = _rand(3, (33, 17)), _rand(4, (17, 9))
+    got = matmul_bias_act_pallas(x, w, None)
+    want = matmul_bias_act_ref(x, w, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_custom_blocks():
+    x, w, b = _rand(5, (100, 70)), _rand(6, (70, 40)), _rand(7, (40,))
+    got = matmul_bias_act_pallas(x, w, b, act="leaky_relu", bm=32, bn=16, bk=8)
+    want = matmul_bias_act_ref(x, w, b, act="leaky_relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_grads_match_ref():
+    """Custom VJP (pallas bwd) equals autodiff through the jnp oracle."""
+    x, w, b = _rand(8, (24, 12)), _rand(9, (12, 7)), _rand(10, (7,))
+
+    def f_ker(x, w, b):
+        return jnp.sum(matmul_bias_act(x, w, b, "leaky_relu") ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(matmul_bias_act_ref(x, w, b, act="leaky_relu") ** 2)
+
+    gk = jax.grad(f_ker, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv3d_matches_lax(b, c, o, seed):
+    x = _rand(seed, (b, c, 4, 5, 4))
+    w = _rand(seed + 1, (o, c, 3, 3, 3))
+    bias = _rand(seed + 2, (o,))
+    got = conv3d(x, w, bias, act="leaky_relu")
+    want = conv3d_ref(x, w, bias, act="leaky_relu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_conv3d_transpose_adjointness():
+    """<conv(x), y> == <x, conv_T(y)> — the defining transpose property."""
+    x = _rand(11, (2, 3, 4, 5, 4))
+    w = _rand(12, (6, 3, 3, 3, 3))
+    y = _rand(13, (2, 6, 4, 5, 4))
+    cx = conv3d(x, w)
+    cty = conv3d_transpose(y, w)
+    lhs = float(jnp.sum(cx * y))
+    rhs = float(jnp.sum(x * cty))
+    assert abs(lhs - rhs) < 1e-2 * max(1.0, abs(lhs))

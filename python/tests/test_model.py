@@ -1,0 +1,80 @@
+"""L2 model tests: shapes, training step sanity, backend equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _blocks(n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((n, model.S, *model.BLOCK), dtype=np.float32))
+
+
+def test_encoder_decoder_shapes():
+    p = model.init_ae(jax.random.PRNGKey(0))
+    x = _blocks(3)
+    z = model.encode(p, x)
+    assert z.shape == (3, model.LATENT)
+    r = model.decode(p, z)
+    assert r.shape == (3, model.S, *model.BLOCK)
+
+
+def test_tcn_shape_and_near_identity_at_init():
+    p = model.init_tcn(jax.random.PRNGKey(1))
+    v = jnp.asarray(np.random.default_rng(1).random((16, model.S), dtype=np.float32))
+    out = model.tcn_apply(p, v)
+    assert out.shape == v.shape
+    # residual parameterization with downscaled last layer: near-identity
+    assert float(jnp.max(jnp.abs(out - v))) < 0.5
+
+
+def test_ae_loss_decreases_with_training():
+    from compile import train
+
+    rng = np.random.default_rng(2)
+    # structured blocks (low-rank across species) so learning is possible
+    base = rng.random((1, 1, *model.BLOCK), dtype=np.float32)
+    scales = rng.random((64, model.S, 1, 1, 1), dtype=np.float32)
+    blocks = (base * scales).astype(np.float32)
+    params, log = train.train_ae(blocks, steps=60, bs=32, lr=3e-3, seed=0,
+                                 log_every=30)
+    assert log[-1][1] < log[0][1], f"loss did not decrease: {log}"
+
+
+def test_tcn_widths_match_paper():
+    assert model.TCN_WIDTHS == (58, 232, 464, 232, 58)
+    assert model.LATENT == 36
+    assert model.BLOCK == (4, 5, 4)
+
+
+def test_pallas_and_oracle_backends_agree():
+    """The exported (pallas) graph must equal the trained (oracle) graph."""
+    p = model.init_ae(jax.random.PRNGKey(3))
+    tp = model.init_tcn(jax.random.PRNGKey(4))
+    x = _blocks(2, seed=5)
+    v = jnp.asarray(np.random.default_rng(6).random((32, model.S), dtype=np.float32))
+    try:
+        model.use_pallas(False)
+        z_ref = model.encode(p, x)
+        r_ref = model.decode(p, z_ref)
+        t_ref = model.tcn_apply(tp, v)
+        model.use_pallas(True)
+        z_pl = model.encode(p, x)
+        r_pl = model.decode(p, z_pl)
+        t_pl = model.tcn_apply(tp, v)
+    finally:
+        model.use_pallas(False)
+    np.testing.assert_allclose(np.asarray(z_ref), np.asarray(z_pl), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(r_ref), np.asarray(r_pl), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(t_ref), np.asarray(t_pl), rtol=2e-5, atol=2e-5)
+
+
+def test_adam_moves_toward_minimum():
+    p = {"w": jnp.asarray([5.0, -3.0])}
+    st = model.adam_init(p)
+    for _ in range(400):
+        g = {"w": 2.0 * p["w"]}  # grad of ||w||^2
+        p, st = model.adam_update(p, g, st, lr=0.05)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.3

@@ -1,0 +1,126 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   A1  TCN on/off (GBATC vs GBA) at fixed target — the paper's own
+//!       ablation (Fig. 4's two curves);
+//!   A2  latent quantization bin width (paper §II-A bin size d);
+//!   A3  Fig.-2 shortest-prefix index encoding vs raw D-bit bitmaps;
+//!   A4  truncated vs full stored PCA basis;
+//!   A5  model-parameter accounting 8-bit vs f32.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gbatc::codec::CoeffCodec;
+use gbatc::compressor::CompressOptions;
+use gbatc::util::{BitWriter, Prng};
+
+fn main() {
+    let env = BenchEnv::new(77);
+    let handle = env.handle();
+    let comp = env.compressor(&handle);
+    let ds = &env.ds;
+    let target = 1e-3;
+    println!("== ablations @ target {target:.0e} ({}x{}x{}x{})", ds.nt, ds.ns, ds.ny, ds.nx);
+
+    // A1: TCN on/off ------------------------------------------------------
+    println!("\n-- A1: tensor correction network --");
+    let mut tcn_archive = None;
+    for (name, use_tcn) in [("GBATC (tcn on)", true), ("GBA (tcn off)", false)] {
+        let opts = CompressOptions {
+            nrmse_target: target,
+            use_tcn,
+            ..Default::default()
+        };
+        let report = comp.compress(ds, &opts).unwrap();
+        println!(
+            "{name:<16} CR {:>7.1} | coeffs {:>9} | {}",
+            report.archive.compression_ratio(),
+            report.n_coeffs,
+            report.breakdown
+        );
+        if use_tcn {
+            tcn_archive = Some(report.archive);
+        }
+    }
+
+    // A2: latent bin width ---------------------------------------------------
+    println!("\n-- A2: latent quantization bin --");
+    for bin in [0.005, 0.02, 0.08] {
+        let opts = CompressOptions {
+            nrmse_target: target,
+            latent_bin: bin,
+            ..Default::default()
+        };
+        let report = comp.compress(ds, &opts).unwrap();
+        println!(
+            "bin {bin:<6} CR {:>7.1} | latents {:>9} B | coeffs {:>9} B",
+            report.archive.compression_ratio(),
+            report.breakdown.latents,
+            report.breakdown.coeffs
+        );
+    }
+
+    // A3: index encoding (from the real archive's selections) ---------------
+    println!("\n-- A3: Fig-2 prefix index encoding vs raw bitmap --");
+    let archive = tcn_archive.expect("A1 ran");
+    let mut prefix_bits = 0usize;
+    let mut raw_bits = 0usize;
+    let mut n_sel = 0usize;
+    for sec in &archive.species {
+        let coeffs = CoeffCodec::decode(&sec.coeffs).unwrap();
+        for blk in &coeffs.per_block {
+            let idxs: Vec<usize> = blk.iter().map(|&(j, _)| j).collect();
+            let mut w = BitWriter::new();
+            gbatc::codec::encode_indices(&mut w, &idxs, coeffs.d).unwrap();
+            prefix_bits += w.bit_len();
+            raw_bits += coeffs.d;
+            n_sel += idxs.len();
+        }
+    }
+    println!(
+        "prefix encoding {:>10} B | raw bitmaps {:>10} B | saving {:.1}x ({} selections)",
+        prefix_bits / 8,
+        raw_bits / 8,
+        raw_bits as f64 / prefix_bits.max(1) as f64,
+        n_sel
+    );
+
+    // A4: basis truncation ----------------------------------------------------
+    println!("\n-- A4: stored basis truncation --");
+    for (name, full) in [("truncated", false), ("full DxD", true)] {
+        let opts = CompressOptions {
+            nrmse_target: target,
+            store_full_basis: full,
+            ..Default::default()
+        };
+        let report = comp.compress(ds, &opts).unwrap();
+        println!(
+            "{name:<10} CR {:>7.1} | bases {:>9} B",
+            report.archive.compression_ratio(),
+            report.breakdown.bases
+        );
+    }
+
+    // A5: model byte accounting -------------------------------------------------
+    println!("\n-- A5: model parameter accounting --");
+    for (name, f32s) in [("8-bit", false), ("f32", true)] {
+        let opts = CompressOptions {
+            nrmse_target: target,
+            model_bytes_f32: f32s,
+            ..Default::default()
+        };
+        let report = comp.compress(ds, &opts).unwrap();
+        println!(
+            "{name:<6} CR {:>7.1} | model {:>9} B",
+            report.archive.compression_ratio(),
+            report.breakdown.model_params
+        );
+    }
+
+    // block-shape sanity: the paper's 4x5x4 vs a degenerate 1x5x4 (no time)
+    println!("\n-- A6: spatiotemporal blocking (requires divisible dims) --");
+    println!("(block shape is baked into the AOT artifact; see DESIGN.md — the");
+    println!(" 4x5x4 block is the paper's choice; retrain aot.py to ablate.)");
+
+    let _ = Prng::new(0); // keep util linked in release-bench builds
+}

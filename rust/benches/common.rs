@@ -1,0 +1,193 @@
+//! Shared bench harness code (no criterion in the offline image; each bench
+//! is a `harness = false` binary printing the paper-figure tables).
+
+#![allow(dead_code)]
+
+use gbatc::chem::{self, Mechanism};
+use gbatc::compressor::{CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor};
+use gbatc::config::Manifest;
+use gbatc::coordinator::scheduler::par_for;
+use gbatc::data::{generate, Dataset, Profile};
+use gbatc::metrics;
+use gbatc::runtime::{ExecHandle, ExecService};
+use std::sync::Mutex;
+
+/// Bench dataset profile: GBATC_BENCH_PROFILE=tiny|small|medium (default small).
+pub fn bench_profile() -> Profile {
+    let name = std::env::var("GBATC_BENCH_PROFILE").unwrap_or_else(|_| "small".into());
+    Profile::parse(&name).expect("bad GBATC_BENCH_PROFILE")
+}
+
+pub fn artifacts_dir() -> String {
+    std::env::var("GBATC_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+pub struct BenchEnv {
+    pub service: ExecService,
+    pub manifest: Manifest,
+    pub ds: Dataset,
+}
+
+impl BenchEnv {
+    pub fn new(seed: u64) -> BenchEnv {
+        let profile = bench_profile();
+        eprintln!("[bench] generating {profile:?} dataset (seed {seed})...");
+        let ds = generate(profile, seed);
+        let service = ExecService::start(&artifacts_dir(), 4).expect("artifacts missing — run `make artifacts`");
+        let manifest = Manifest::load(format!("{}/manifest.txt", artifacts_dir())).unwrap();
+        BenchEnv { service, manifest, ds }
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        self.service.handle()
+    }
+
+    pub fn compressor<'a>(&self, handle: &'a ExecHandle) -> GbatcCompressor<'a> {
+        GbatcCompressor::new(handle, self.manifest.decoder_params, self.manifest.tcn_params)
+    }
+}
+
+/// Per-species + mean NRMSE between `[T,S,Y,X]` mass arrays.
+pub fn species_nrmse(ds: &Dataset, recon: &[f32]) -> (Vec<f64>, f64) {
+    let npix = ds.ny * ds.nx;
+    let per: Vec<f64> = (0..ds.ns)
+        .map(|s| {
+            let mut o = Vec::with_capacity(ds.nt * npix);
+            let mut r = Vec::with_capacity(ds.nt * npix);
+            for t in 0..ds.nt {
+                let off = (t * ds.ns + s) * npix;
+                o.extend_from_slice(&ds.mass[off..off + npix]);
+                r.extend_from_slice(&recon[off..off + npix]);
+            }
+            metrics::nrmse(&o, &r)
+        })
+        .collect();
+    let mean = per.iter().sum::<f64>() / per.len() as f64;
+    (per, mean)
+}
+
+/// Sampled production-rate fields for orig and recon: returns
+/// (qoi_orig, qoi_recon) species-major `[S, n]` plus n, for the sampled
+/// points (all t, strided y/x), computed in parallel.
+pub fn qoi_fields(ds: &Dataset, recon: &[f32], stride: usize) -> (Vec<f64>, Vec<f64>, usize) {
+    let mech = Mechanism::standard();
+    let ns = ds.ns;
+    let mut idxs = Vec::new();
+    for t in 0..ds.nt {
+        for y in (0..ds.ny).step_by(stride) {
+            for x in (0..ds.nx).step_by(stride) {
+                idxs.push((t, y, x));
+            }
+        }
+    }
+    let n = idxs.len();
+    let mut ys_o = vec![0.0f32; ns * n];
+    let mut ys_r = vec![0.0f32; ns * n];
+    let mut temps = vec![0.0f32; n];
+    for (i, &(t, y, x)) in idxs.iter().enumerate() {
+        temps[i] = ds.temp_at(t, y, x);
+        for s in 0..ns {
+            let off = ((t * ns + s) * ds.ny + y) * ds.nx + x;
+            ys_o[s * n + i] = ds.mass[off];
+            ys_r[s * n + i] = recon[off];
+        }
+    }
+    // parallel over point chunks
+    let threads = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let n_chunks = n.div_ceil(chunk);
+    let wo: Vec<Mutex<Vec<f64>>> = (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+    let wr: Vec<Mutex<Vec<f64>>> = (0..n_chunks).map(|_| Mutex::new(Vec::new())).collect();
+    par_for(n_chunks, threads, |c| {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(n);
+        let m = hi - lo;
+        let mut yo = vec![0.0f32; ns * m];
+        let mut yr = vec![0.0f32; ns * m];
+        for s in 0..ns {
+            yo[s * m..(s + 1) * m].copy_from_slice(&ys_o[s * n + lo..s * n + hi]);
+            yr[s * m..(s + 1) * m].copy_from_slice(&ys_r[s * n + lo..s * n + hi]);
+        }
+        let mut oo = vec![0.0f64; ns * m];
+        let mut or = vec![0.0f64; ns * m];
+        chem::production_rates(&mech, &yo, &temps[lo..hi], ds.pressure, m, &mut oo);
+        chem::production_rates(&mech, &yr, &temps[lo..hi], ds.pressure, m, &mut or);
+        *wo[c].lock().unwrap() = oo;
+        *wr[c].lock().unwrap() = or;
+    });
+    let mut qo = vec![0.0f64; ns * n];
+    let mut qr = vec![0.0f64; ns * n];
+    for c in 0..n_chunks {
+        let lo = c * chunk;
+        let hi = ((c + 1) * chunk).min(n);
+        let m = hi - lo;
+        let oo = wo[c].lock().unwrap();
+        let or = wr[c].lock().unwrap();
+        for s in 0..ns {
+            qo[s * n + lo..s * n + hi].copy_from_slice(&oo[s * m..(s + 1) * m]);
+            qr[s * n + lo..s * n + hi].copy_from_slice(&or[s * m..(s + 1) * m]);
+        }
+    }
+    (qo, qr, n)
+}
+
+/// (per-species, mean) QoI NRMSE.
+pub fn qoi_nrmse(ds: &Dataset, recon: &[f32], stride: usize) -> (Vec<f64>, f64) {
+    let (qo, qr, _) = qoi_fields(ds, recon, stride);
+    metrics::nrmse::nrmse_per_species_f64(&qo, &qr, ds.ns)
+}
+
+/// One (method, CR, PD, QoI) result row.
+pub struct Row {
+    pub method: &'static str,
+    pub target: f64,
+    pub cr: f64,
+    pub pd: f64,
+    pub qoi: f64,
+}
+
+pub fn print_rows(rows: &[Row]) {
+    println!(
+        "{:<8} {:>9} {:>10} {:>12} {:>12}",
+        "method", "target", "CR", "PD NRMSE", "QoI NRMSE"
+    );
+    for r in rows {
+        println!(
+            "{:<8} {:>9.0e} {:>10.1} {:>12.3e} {:>12.3e}",
+            r.method, r.target, r.cr, r.pd, r.qoi
+        );
+    }
+}
+
+/// Run GBATC or GBA at a target; returns (report CR, recon mass).
+pub fn run_gbatc(
+    env: &BenchEnv,
+    handle: &ExecHandle,
+    target: f64,
+    use_tcn: bool,
+) -> (f64, Vec<f32>) {
+    let comp = env.compressor(handle);
+    let opts = CompressOptions {
+        nrmse_target: target,
+        use_tcn,
+        ..Default::default()
+    };
+    let report = comp.compress(&env.ds, &opts).unwrap();
+    assert!(report.max_block_residual <= report.tau + 1e-9);
+    let recon = comp.decompress(&report.archive, 0).unwrap();
+    (report.archive.compression_ratio(), recon)
+}
+
+/// Run SZ at a target; returns (CR, recon mass).
+pub fn run_sz(env: &BenchEnv, target: f64, eb_scale: f64) -> (f64, Vec<f32>) {
+    let szc = SzCompressor::new(SzCompressOptions {
+        eb_scale,
+        ..Default::default()
+    });
+    let archive = szc.compress(&env.ds, target).unwrap();
+    let recon = szc.decompress(&archive).unwrap();
+    (
+        env.ds.pd_bytes() as f64 / archive.total_bytes() as f64,
+        recon,
+    )
+}

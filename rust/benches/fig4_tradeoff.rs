@@ -1,0 +1,89 @@
+//! Figure 4 reproduction: PD error vs compression ratio (a) and QoI error
+//! vs compression ratio (b) for GBATC, GBA, and SZ.
+//!
+//! Paper reference (S3D HCCI, 640x640x50x58): at PD NRMSE 1e-3 the paper
+//! reports CR ≈ 600 (GBATC), 400 (GBA), 150 (SZ); GBATC < GBA < SZ in PD
+//! error at fixed CR, and QoI errors ordered the same way.
+//!
+//! ```bash
+//! GBATC_BENCH_PROFILE=medium cargo bench --bench fig4_tradeoff
+//! ```
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gbatc::util::Timer;
+
+fn main() {
+    let env = BenchEnv::new(1234);
+    let handle = env.handle();
+    let stride = 4;
+    println!(
+        "== Fig 4: error vs compression ratio ({}x{}x{}x{}, {:.0} MB PD)",
+        env.ds.nt,
+        env.ds.ns,
+        env.ds.ny,
+        env.ds.nx,
+        env.ds.pd_bytes() as f64 / 1e6
+    );
+
+    let mut rows = Vec::new();
+    for &target in &[3e-2, 1e-2, 3e-3, 1e-3] {
+        for (method, use_tcn) in [("GBATC", true), ("GBA", false)] {
+            let t = Timer::start();
+            let (cr, recon) = run_gbatc(&env, &handle, target, use_tcn);
+            let (_, pd) = species_nrmse(&env.ds, &recon);
+            let (_, qoi) = qoi_nrmse(&env.ds, &recon, stride);
+            eprintln!(
+                "[bench] {method} @ {target:.0e}: CR {cr:.1} pd {pd:.2e} qoi {qoi:.2e} ({:.1}s)",
+                t.secs()
+            );
+            rows.push(Row {
+                method,
+                target,
+                cr,
+                pd,
+                qoi,
+            });
+        }
+        let t = Timer::start();
+        let (cr, recon) = run_sz(&env, target, 1.0);
+        let (_, pd) = species_nrmse(&env.ds, &recon);
+        let (_, qoi) = qoi_nrmse(&env.ds, &recon, stride);
+        eprintln!(
+            "[bench] SZ    @ {target:.0e}: CR {cr:.1} pd {pd:.2e} qoi {qoi:.2e} ({:.1}s)",
+            t.secs()
+        );
+        rows.push(Row {
+            method: "SZ",
+            target,
+            cr,
+            pd,
+            qoi,
+        });
+    }
+
+    println!("\n-- Fig 4a (PD) & 4b (QoI) rows --");
+    print_rows(&rows);
+
+    // headline check: at the 1e-3 working point, GBATC >= GBA > SZ in CR
+    let cr_of = |m: &str| {
+        rows.iter()
+            .find(|r| r.method == m && (r.target - 1e-3).abs() < 1e-12)
+            .map(|r| r.cr)
+            .unwrap()
+    };
+    println!("\n-- headline @ NRMSE 1e-3 --");
+    println!(
+        "GBATC CR {:.1} | GBA CR {:.1} | SZ CR {:.1}   (paper: 600 / 400 / 150)",
+        cr_of("GBATC"),
+        cr_of("GBA"),
+        cr_of("SZ")
+    );
+    let ok = cr_of("GBATC") >= cr_of("GBA") && cr_of("GBA") > cr_of("SZ");
+    println!(
+        "shape {}: GBATC >= GBA > SZ",
+        if ok { "HOLDS" } else { "VIOLATED" }
+    );
+}

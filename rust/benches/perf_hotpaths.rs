@@ -1,0 +1,158 @@
+//! Hot-path microbenchmarks — the §Perf harness (EXPERIMENTS.md).
+//!
+//! Covers every stage of the request path: PJRT executions (encoder /
+//! decoder / TCN), Huffman coding, PCA fit + guarantee loop, SZ predictors,
+//! block gather/scatter, and the end-to-end compress/decompress throughput.
+
+#[path = "common.rs"]
+mod common;
+
+use common::*;
+use gbatc::compressor::{CompressOptions, SzCompressOptions, SzCompressor};
+use gbatc::data::blocks::{BlockGrid, BlockShape};
+use gbatc::entropy::IntCodec;
+use gbatc::gae::guarantee::{guarantee_species, GuaranteeParams};
+use gbatc::sz::codec::{sz_compress, SzMode};
+use gbatc::util::timer::bench;
+use gbatc::util::Prng;
+
+fn main() {
+    let env = BenchEnv::new(99);
+    let handle = env.handle();
+    let ds = &env.ds;
+    let spec = handle.spec();
+    println!("== perf_hotpaths ({}x{}x{}x{})", ds.nt, ds.ns, ds.ny, ds.nx);
+
+    // --- PJRT executions ------------------------------------------------
+    let il = spec.instance_len();
+    let blocks = vec![0.1f32; spec.batch * il];
+    let st = bench(1, 5, || {
+        let _ = handle.encode(blocks.clone(), spec.batch).unwrap();
+    });
+    println!(
+        "encoder exec    [{} blocks]  {st}  ({:.1} blocks/s)",
+        spec.batch,
+        st.throughput(spec.batch as f64)
+    );
+    let latents = vec![0.1f32; spec.batch * spec.latent];
+    let st = bench(1, 5, || {
+        let _ = handle.decode(latents.clone(), spec.batch).unwrap();
+    });
+    println!(
+        "decoder exec    [{} blocks]  {st}  ({:.1} blocks/s)",
+        spec.batch,
+        st.throughput(spec.batch as f64)
+    );
+    let pts = vec![0.1f32; spec.points * spec.species];
+    let st = bench(1, 5, || {
+        let _ = handle.tcn(pts.clone(), spec.points).unwrap();
+    });
+    let tcn_flops = 2.0
+        * spec.points as f64
+        * (58.0 * 232.0 + 232.0 * 464.0 + 464.0 * 232.0 + 232.0 * 58.0);
+    println!(
+        "tcn exec        [{} pts]    {st}  ({:.2} GFLOP/s)",
+        spec.points,
+        tcn_flops / st.mean_s / 1e9
+    );
+
+    // --- entropy coding ---------------------------------------------------
+    let mut rng = Prng::new(1);
+    let syms: Vec<i64> = (0..1_000_000)
+        .map(|_| (rng.normal() * 3.0) as i64)
+        .collect();
+    let st = bench(1, 5, || {
+        let _ = IntCodec::encode(&syms).unwrap();
+    });
+    println!(
+        "huffman encode  [1M syms]    {st}  ({:.1} Msym/s)",
+        1.0 / st.mean_s
+    );
+    let enc = IntCodec::encode(&syms).unwrap();
+    let st = bench(1, 5, || {
+        let _ = IntCodec::decode(&enc).unwrap();
+    });
+    println!(
+        "huffman decode  [1M syms]    {st}  ({:.1} Msym/s)",
+        1.0 / st.mean_s
+    );
+
+    // --- PCA + guarantee --------------------------------------------------
+    let grid = BlockGrid::for_dataset(ds, BlockShape::default()).unwrap();
+    let n_blocks = grid.n_blocks();
+    let d = grid.shape.d();
+    let mut orig_s = vec![0.0f32; n_blocks * d];
+    let mut recon_s = vec![0.0f32; n_blocks * d];
+    for b in 0..n_blocks {
+        grid.gather_species(&ds.mass, b, 5, &mut orig_s[b * d..(b + 1) * d]);
+    }
+    let mut rng = Prng::new(2);
+    for (r, o) in recon_s.iter_mut().zip(&orig_s) {
+        *r = o + 1e-4 * rng.normal() as f32;
+    }
+    let params = GuaranteeParams::for_tau(1e-3 * (d as f64).sqrt(), d);
+    let st = bench(1, 3, || {
+        let _ = guarantee_species(&orig_s, &recon_s, n_blocks, d, &params);
+    });
+    println!(
+        "guarantee pass  [{} blocks, 1 species]  {st}  ({:.0} blocks/s)",
+        n_blocks,
+        st.throughput(n_blocks as f64)
+    );
+
+    // --- block gather/scatter ----------------------------------------------
+    let mut inst = vec![0.0f32; grid.instance_len()];
+    let st = bench(1, 5, || {
+        for b in 0..n_blocks {
+            grid.gather(&ds.mass, b, &mut inst);
+        }
+    });
+    println!(
+        "block gather    [{} blocks]  {st}  ({:.1} GB/s)",
+        n_blocks,
+        (n_blocks * grid.instance_len() * 4) as f64 / st.mean_s / 1e9
+    );
+
+    // --- SZ predictors ------------------------------------------------------
+    let field = ds.species_field(5);
+    for mode in [SzMode::Lorenzo, SzMode::Interp] {
+        let st = bench(1, 3, || {
+            let _ = sz_compress(&field.data, (ds.nt, ds.ny, ds.nx), 1e-5, mode).unwrap();
+        });
+        println!(
+            "sz {:<12} [1 species]  {st}  ({:.1} MB/s)",
+            format!("{mode:?}"),
+            (field.data.len() * 4) as f64 / st.mean_s / 1e6
+        );
+    }
+
+    // --- end-to-end ----------------------------------------------------------
+    let comp = env.compressor(&handle);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        ..Default::default()
+    };
+    let st = bench(0, 2, || {
+        let _ = comp.compress(ds, &opts).unwrap();
+    });
+    println!(
+        "GBATC compress  [end-to-end]  {st}  ({:.1} MB/s)",
+        ds.pd_bytes() as f64 / st.mean_s / 1e6
+    );
+    let report = comp.compress(ds, &opts).unwrap();
+    let st = bench(0, 2, || {
+        let _ = comp.decompress(&report.archive, 0).unwrap();
+    });
+    println!(
+        "GBATC decompress[end-to-end]  {st}  ({:.1} MB/s)",
+        ds.pd_bytes() as f64 / st.mean_s / 1e6
+    );
+    let szc = SzCompressor::new(SzCompressOptions::default());
+    let st = bench(0, 2, || {
+        let _ = szc.compress(ds, 1e-3).unwrap();
+    });
+    println!(
+        "SZ compress     [end-to-end]  {st}  ({:.1} MB/s)",
+        ds.pd_bytes() as f64 / st.mean_s / 1e6
+    );
+}

@@ -1,0 +1,236 @@
+//! Binary layout of the `.gba` archive (all little-endian, no serde):
+//!
+//! ```text
+//! magic "GBA1" | version u16 | flags u16 (bit0: TCN used)
+//! nt ns ny nx  u32 x4 | block kt by bx u32 x3 | latent u32
+//! pressure f64
+//! per-species ranges: ns x (lo f32, hi f32)
+//! latent blob  (LatentCodec payload)
+//! ns x species section: basis (SpeciesBasis) + coeff blob (CoeffCodec)
+//! footer: model_param_bytes u64 (accounting), nrmse_target f64
+//! ```
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::gae::SpeciesBasis;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const MAGIC: &[u8; 4] = b"GBA1";
+const VERSION: u16 = 1;
+
+/// Per-species guarantee payload.
+#[derive(Clone, Debug)]
+pub struct SpeciesSection {
+    pub basis: SpeciesBasis,
+    /// CoeffCodec payload.
+    pub coeffs: Vec<u8>,
+}
+
+/// In-memory archive.
+#[derive(Clone, Debug)]
+pub struct Archive {
+    pub tcn_used: bool,
+    pub dims: (usize, usize, usize, usize), // nt, ns, ny, nx
+    pub block: (usize, usize, usize),
+    pub latent_dim: usize,
+    pub pressure: f64,
+    pub ranges: Vec<(f32, f32)>,
+    pub latent_blob: Vec<u8>,
+    pub species: Vec<SpeciesSection>,
+    /// Bytes charged for model parameters (accounting; not stored inline).
+    pub model_param_bytes: u64,
+    pub nrmse_target: f64,
+}
+
+impl Archive {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC);
+        w.u16(VERSION);
+        w.u16(if self.tcn_used { 1 } else { 0 });
+        for d in [self.dims.0, self.dims.1, self.dims.2, self.dims.3] {
+            w.u32(d as u32);
+        }
+        for d in [self.block.0, self.block.1, self.block.2] {
+            w.u32(d as u32);
+        }
+        w.u32(self.latent_dim as u32);
+        w.f64(self.pressure);
+        for &(lo, hi) in &self.ranges {
+            w.f32(lo);
+            w.f32(hi);
+        }
+        w.blob(&self.latent_blob);
+        for s in &self.species {
+            s.basis.serialize(&mut w);
+            w.blob(&s.coeffs);
+        }
+        w.u64(self.model_param_bytes);
+        w.f64(self.nrmse_target);
+        w.finish()
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<Archive> {
+        let mut r = ByteReader::new(buf);
+        let magic = r.bytes(4)?;
+        if magic != MAGIC {
+            return Err(Error::format(format!("bad archive magic {magic:?}")));
+        }
+        let version = r.u16()?;
+        if version != VERSION {
+            return Err(Error::format(format!("unsupported archive version {version}")));
+        }
+        let flags = r.u16()?;
+        let dims = (
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+        );
+        let block = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+        let latent_dim = r.u32()? as usize;
+        let pressure = r.f64()?;
+        let ns = dims.1;
+        if ns == 0 || ns > 4096 {
+            return Err(Error::format(format!("implausible species count {ns}")));
+        }
+        let total = dims
+            .0
+            .checked_mul(dims.1)
+            .and_then(|v| v.checked_mul(dims.2))
+            .and_then(|v| v.checked_mul(dims.3))
+            .ok_or_else(|| Error::format("archive dims overflow"))?;
+        if total == 0 || total > 1 << 33 {
+            return Err(Error::format(format!("implausible dims {dims:?}")));
+        }
+        if block.0 == 0 || block.1 == 0 || block.2 == 0 || latent_dim == 0 || latent_dim > 65536 {
+            return Err(Error::format(format!(
+                "implausible block/latent {block:?}/{latent_dim}"
+            )));
+        }
+        let mut ranges = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            ranges.push((r.f32()?, r.f32()?));
+        }
+        let latent_blob = r.blob()?.to_vec();
+        let mut species = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            let basis = SpeciesBasis::deserialize(&mut r)?;
+            let coeffs = r.blob()?.to_vec();
+            species.push(SpeciesSection { basis, coeffs });
+        }
+        let model_param_bytes = r.u64()?;
+        let nrmse_target = r.f64()?;
+        Ok(Archive {
+            tcn_used: flags & 1 == 1,
+            dims,
+            block,
+            latent_dim,
+            pressure,
+            ranges,
+            latent_blob,
+            species,
+            model_param_bytes,
+            nrmse_target,
+        })
+    }
+
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let bytes = self.serialize();
+        File::create(path)?.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<Archive> {
+        let mut bytes = Vec::new();
+        File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+        Self::deserialize(&bytes)
+    }
+
+    /// Stored payload bytes (the archive itself).
+    pub fn payload_bytes(&self) -> usize {
+        self.serialize().len()
+    }
+
+    /// Total bytes charged for compression-ratio purposes: payload + model
+    /// parameters (paper: network parameters count toward the output).
+    pub fn total_bytes(&self) -> usize {
+        self.payload_bytes() + self.model_param_bytes as usize
+    }
+
+    /// Compression ratio against the raw PD bytes.
+    pub fn compression_ratio(&self) -> f64 {
+        let (nt, ns, ny, nx) = self.dims;
+        (nt * ns * ny * nx * 4) as f64 / self.total_bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn sample() -> Archive {
+        let basis = SpeciesBasis::from_mat(&Mat::identity(4), 2);
+        Archive {
+            tcn_used: true,
+            dims: (8, 2, 10, 8),
+            block: (4, 5, 4),
+            latent_dim: 36,
+            pressure: 40.0e5,
+            ranges: vec![(0.0, 1.0), (-1.0, 2.0)],
+            latent_blob: vec![1, 2, 3, 4],
+            species: vec![
+                SpeciesSection {
+                    basis: basis.clone(),
+                    coeffs: vec![9, 8],
+                },
+                SpeciesSection {
+                    basis,
+                    coeffs: vec![],
+                },
+            ],
+            model_param_bytes: 12345,
+            nrmse_target: 1e-3,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let a = sample();
+        let bytes = a.serialize();
+        let b = Archive::deserialize(&bytes).unwrap();
+        assert_eq!(a.dims, b.dims);
+        assert_eq!(a.block, b.block);
+        assert_eq!(a.ranges, b.ranges);
+        assert_eq!(a.latent_blob, b.latent_blob);
+        assert_eq!(a.species.len(), b.species.len());
+        assert_eq!(a.species[0].coeffs, b.species[0].coeffs);
+        assert_eq!(a.model_param_bytes, b.model_param_bytes);
+        assert!(a.tcn_used && b.tcn_used);
+    }
+
+    #[test]
+    fn cr_accounting_includes_model() {
+        let a = sample();
+        assert_eq!(a.total_bytes(), a.payload_bytes() + 12345);
+        let pd = (8 * 2 * 10 * 8 * 4) as f64;
+        assert!((a.compression_ratio() - pd / a.total_bytes() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut bytes = sample().serialize();
+        bytes[0] = b'X';
+        assert!(Archive::deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let bytes = sample().serialize();
+        assert!(Archive::deserialize(&bytes[..bytes.len() - 4]).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! The `.gba` archive container — everything the decompressor needs:
+//! dims, per-species normalization ranges, the Huffman-coded latent plane,
+//! and per-species PCA bases + guarantee coefficients.  Model parameters
+//! (decoder + TCN) live in the AOT artifacts shared across archives; their
+//! bytes are charged to the compression ratio by `compressor::accounting`,
+//! following the paper's accounting of "network parameters".
+
+pub mod format;
+
+pub use format::{Archive, SpeciesSection, MAGIC};

@@ -1,0 +1,53 @@
+//! Modified Arrhenius rate constants: k(T) = A * T^b * exp(-Ea / (R T)).
+
+/// Universal gas constant [J/(mol K)].
+pub const R_GAS: f64 = 8.314462618;
+
+/// Modified Arrhenius parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrhenius {
+    /// Pre-exponential factor (units depend on reaction order).
+    pub a: f64,
+    /// Temperature exponent.
+    pub b: f64,
+    /// Activation energy [J/mol].
+    pub ea: f64,
+}
+
+impl Arrhenius {
+    pub const fn new(a: f64, b: f64, ea: f64) -> Self {
+        Self { a, b, ea }
+    }
+
+    /// Forward rate constant at temperature `t` [K].
+    #[inline]
+    pub fn k(&self, t: f64) -> f64 {
+        self.a * t.powf(self.b) * (-self.ea / (R_GAS * t)).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn increases_with_temperature_for_positive_ea() {
+        let a = Arrhenius::new(1e10, 0.0, 1.5e5);
+        assert!(a.k(1200.0) > a.k(1000.0));
+        assert!(a.k(2000.0) > a.k(1200.0));
+    }
+
+    #[test]
+    fn exponential_sensitivity() {
+        // the QoI nonlinearity: ~small T change -> large k change
+        let a = Arrhenius::new(1e10, 0.0, 2.0e5);
+        let ratio = a.k(1100.0) / a.k(1000.0);
+        assert!(ratio > 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn zero_ea_reduces_to_power_law() {
+        let a = Arrhenius::new(2.0, 1.0, 0.0);
+        assert!((a.k(500.0) - 1000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,198 @@
+//! Synthetic 58-species reversible reaction mechanism (Cantera substitute).
+//!
+//! Procedurally constructed — deterministically, from a fixed seed — so the
+//! same mechanism exists in every process without shipping a data file.
+//! Structure mirrors a reduced n-heptane mechanism: a fuel-breakdown chain,
+//! an H2/O2 radical pool, CO oxidation, and a low-temperature (RO2) branch.
+//! Every reaction is bimolecular A + B -> c C + d D with product
+//! stoichiometries chosen to conserve mass exactly (Σ ν MW balanced), so
+//! net production rates sum to zero over species — a tested invariant.
+//! Reverse rates come from a synthetic equilibrium constant
+//! Keq = exp(q0 - q1 * 1000 / T).
+
+use crate::chem::arrhenius::Arrhenius;
+use crate::chem::species::{index_of, Role, NS, SPECIES};
+use crate::util::Prng;
+
+/// One reversible reaction: A + B -> nu_c C + nu_d D.
+#[derive(Clone, Debug)]
+pub struct Reaction {
+    pub reac: [usize; 2],
+    pub prod: [(usize, f64); 2],
+    pub rate: Arrhenius,
+    /// Keq = exp(q0 - q1 * 1000 / T)
+    pub q0: f64,
+    pub q1: f64,
+}
+
+/// The full mechanism.
+#[derive(Clone, Debug)]
+pub struct Mechanism {
+    pub reactions: Vec<Reaction>,
+}
+
+fn mass_balanced(a: usize, b: usize, c: usize, d: usize) -> [(usize, f64); 2] {
+    // choose nu_c, nu_d >= 0 with nu_c*MWc + nu_d*MWd = MWa + MWb, split 50/50
+    let total = (SPECIES[a].mw + SPECIES[b].mw) as f64;
+    let nu_c = 0.5 * total / SPECIES[c].mw as f64;
+    let nu_d = 0.5 * total / SPECIES[d].mw as f64;
+    [(c, nu_c), (d, nu_d)]
+}
+
+impl Mechanism {
+    /// Build the canonical synthetic mechanism (fixed seed -> identical in
+    /// every process; ~2 reactions per species).
+    pub fn standard() -> Mechanism {
+        let mut rng = Prng::new(0x6bca_7c58);
+        let mut reactions = Vec::new();
+
+        let radical_pool: Vec<usize> = ["OH", "H", "O", "HO2", "CH3"]
+            .iter()
+            .map(|n| index_of(n).unwrap())
+            .collect();
+        let o2 = index_of("O2").unwrap();
+        let co = index_of("CO").unwrap();
+        let co2 = index_of("CO2").unwrap();
+        let h2o = index_of("H2O").unwrap();
+        let oh = index_of("OH").unwrap();
+        let h = index_of("H").unwrap();
+        let o = index_of("O").unwrap();
+
+        let mut push = |reac: [usize; 2], prod_c: usize, prod_d: usize, rng: &mut Prng| {
+            let a = 10f64.powf(rng.uniform(4.0, 7.5));
+            let b = rng.uniform(-0.5, 1.5);
+            let ea = rng.uniform(6.0e4, 1.8e5);
+            reactions.push(Reaction {
+                reac,
+                prod: mass_balanced(reac[0], reac[1], prod_c, prod_d),
+                rate: Arrhenius::new(a, b, ea),
+                q0: rng.uniform(1.0, 8.0),
+                q1: rng.uniform(0.5, 6.0),
+            });
+        };
+
+        // H2/O2 core (explicit, the stiff backbone)
+        push([h, o2], oh, o, &mut rng);
+        push([o, index_of("H2").unwrap()], oh, h, &mut rng);
+        push([oh, index_of("H2").unwrap()], h2o, h, &mut rng);
+        push([index_of("HO2").unwrap(), h], oh, oh, &mut rng);
+        // CO oxidation
+        push([co, oh], co2, h, &mut rng);
+        push([co, o2], co2, o, &mut rng);
+
+        // per-species attachment: every species appears as a reactant in at
+        // least one reaction with a pool radical or O2
+        for k in 0..NS {
+            let sp = &SPECIES[k];
+            if sp.role == Role::Inert {
+                continue;
+            }
+            let n_rx = match sp.role {
+                Role::Fuel | Role::LowT => 3,
+                Role::Radical => 2,
+                _ => 2,
+            };
+            for _ in 0..n_rx {
+                let partner = if sp.role == Role::LowT || rng.next_f64() < 0.4 {
+                    o2
+                } else {
+                    radical_pool[rng.index(radical_pool.len())]
+                };
+                // products: a nearby species in the table (correlated
+                // chains) + a pool product
+                let mut c = rng.index(NS);
+                // bias products toward smaller species later in the chain
+                if c == k || SPECIES[c].role == Role::Inert {
+                    c = co;
+                }
+                let d = match rng.index(4) {
+                    0 => h2o,
+                    1 => oh,
+                    2 => h,
+                    _ => co2,
+                };
+                if partner == k || c == k {
+                    continue;
+                }
+                push([k, partner], c, d, &mut rng);
+            }
+        }
+        Mechanism { reactions }
+    }
+
+    pub fn n_reactions(&self) -> usize {
+        self.reactions.len()
+    }
+
+    /// Indices of species participating anywhere in the mechanism.
+    pub fn active_species(&self) -> Vec<bool> {
+        let mut active = vec![false; NS];
+        for r in &self.reactions {
+            for &s in &r.reac {
+                active[s] = true;
+            }
+            for &(s, _) in &r.prod {
+                active[s] = true;
+            }
+        }
+        active
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_nontrivial() {
+        let m1 = Mechanism::standard();
+        let m2 = Mechanism::standard();
+        assert_eq!(m1.n_reactions(), m2.n_reactions());
+        assert!(m1.n_reactions() > 80, "got {}", m1.n_reactions());
+        for (a, b) in m1.reactions.iter().zip(&m2.reactions) {
+            assert_eq!(a.reac, b.reac);
+            assert_eq!(a.prod[0].0, b.prod[0].0);
+        }
+    }
+
+    #[test]
+    fn every_non_inert_species_participates() {
+        let m = Mechanism::standard();
+        let active = m.active_species();
+        for (k, sp) in SPECIES.iter().enumerate() {
+            if sp.role != Role::Inert {
+                assert!(active[k], "species {} inactive", sp.name);
+            }
+        }
+    }
+
+    #[test]
+    fn reactions_conserve_mass() {
+        let m = Mechanism::standard();
+        for (i, r) in m.reactions.iter().enumerate() {
+            let lhs = SPECIES[r.reac[0]].mw as f64 + SPECIES[r.reac[1]].mw as f64;
+            let rhs: f64 = r
+                .prod
+                .iter()
+                .map(|&(s, nu)| nu * SPECIES[s].mw as f64)
+                .sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-9 * lhs,
+                "reaction {i}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn rates_finite_at_operating_temperatures() {
+        let m = Mechanism::standard();
+        for t in [1000.0, 1500.0, 2300.0] {
+            for r in &m.reactions {
+                let k = r.rate.k(t);
+                assert!(k.is_finite() && k >= 0.0);
+                let keq = (r.q0 - r.q1 * 1000.0 / t).exp();
+                assert!(keq.is_finite() && keq > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Chemistry substrate — the Cantera substitute (DESIGN.md §3).
+//!
+//! The paper's QoI is the net production rate of each of the 58 species,
+//! computed from reconstructed primary data with Cantera (Arrhenius
+//! kinetics over a reduced n-heptane mechanism).  Here a synthetic
+//! 58-species reversible-reaction mechanism provides the same structure:
+//! a pointwise, strongly nonlinear, cross-species map
+//! `omega_k = f(T, P, Y_1..Y_58)` so that small PD errors in minor species
+//! amplify into large QoI errors — the effect Figs. 6/8 hinge on.
+
+pub mod arrhenius;
+pub mod mechanism;
+pub mod production;
+pub mod species;
+
+pub use mechanism::{Mechanism, Reaction};
+pub use production::production_rates;
+pub use species::{index_of, Role, Species, MAJORS, MINOR_C2H3, MINOR_LOWT, NS, SPECIES};

@@ -1,0 +1,186 @@
+//! Net production rates ω̇_k(T, P, Y) — the paper's QoI.
+//!
+//! Pointwise evaluation: ideal-gas density from (T, P, Y), molar
+//! concentrations [X_j] = ρ Y_j / MW_j, then for each reversible reaction
+//! `A + B -> νc C + νd D`:  q = kf [A][B] − kr Π [prod]^ν with
+//! kr = kf / Keq.  ω̇_k = MW_k Σ_r ν_kr q_r  [kg m⁻³ s⁻¹].
+
+use crate::chem::arrhenius::R_GAS;
+use crate::chem::mechanism::Mechanism;
+use crate::chem::species::{NS, SPECIES};
+
+/// Net production rates for one grid point.
+/// `y` = 58 mass fractions, `t` [K], `p` [Pa]; `out` length 58.
+pub fn production_rates_point(mech: &Mechanism, y: &[f32], t: f64, p: f64, out: &mut [f64]) {
+    debug_assert_eq!(y.len(), NS);
+    debug_assert_eq!(out.len(), NS);
+
+    // mean molecular weight & density (MW table is g/mol -> kg/mol)
+    let mut inv_mbar = 0.0f64;
+    for (k, sp) in SPECIES.iter().enumerate() {
+        inv_mbar += (y[k].max(0.0) as f64) / (sp.mw as f64 * 1e-3);
+    }
+    let inv_mbar = inv_mbar.max(1e-12);
+    let rho = p / (R_GAS * t * inv_mbar); // kg/m^3
+
+    // molar concentrations [mol/m^3]
+    let mut x = [0.0f64; NS];
+    for (k, sp) in SPECIES.iter().enumerate() {
+        x[k] = rho * (y[k].max(0.0) as f64) / (sp.mw as f64 * 1e-3);
+    }
+
+    out.fill(0.0);
+    for r in &mech.reactions {
+        let kf = r.rate.k(t);
+        let keq = (r.q0 - r.q1 * 1000.0 / t).exp();
+        let kr = kf / keq;
+
+        let fwd = kf * x[r.reac[0]] * x[r.reac[1]];
+        let mut rev = kr;
+        for &(s, nu) in &r.prod {
+            rev *= x[s].max(0.0).powf(nu);
+        }
+        let q = fwd - rev; // mol/m^3/s
+
+        out[r.reac[0]] -= q * (SPECIES[r.reac[0]].mw as f64 * 1e-3);
+        out[r.reac[1]] -= q * (SPECIES[r.reac[1]].mw as f64 * 1e-3);
+        for &(s, nu) in &r.prod {
+            out[s] += nu * q * (SPECIES[s].mw as f64 * 1e-3);
+        }
+    }
+}
+
+/// Production rates for a full `[S, n]`-shaped batch of points.
+/// `ys` is species-major: ys[s * n + i]; `out` likewise.
+pub fn production_rates(
+    mech: &Mechanism,
+    ys: &[f32],
+    temps: &[f32],
+    p: f64,
+    n: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(ys.len(), NS * n);
+    debug_assert_eq!(temps.len(), n);
+    debug_assert_eq!(out.len(), NS * n);
+    let mut y = [0.0f32; NS];
+    let mut w = [0.0f64; NS];
+    for i in 0..n {
+        for s in 0..NS {
+            y[s] = ys[s * n + i];
+        }
+        production_rates_point(mech, &y, temps[i] as f64, p, &mut w);
+        for s in 0..NS {
+            out[s * n + i] = w[s];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::species::index_of;
+
+    fn test_y() -> [f32; NS] {
+        let mut y = [0.0f32; NS];
+        for (k, sp) in SPECIES.iter().enumerate() {
+            y[k] = sp.magnitude * 0.5;
+        }
+        // renormalize to sum 1
+        let s: f32 = y.iter().sum();
+        for v in y.iter_mut() {
+            *v /= s;
+        }
+        y
+    }
+
+    #[test]
+    fn mass_conservation() {
+        let mech = Mechanism::standard();
+        let y = test_y();
+        let mut w = [0.0f64; NS];
+        production_rates_point(&mech, &y, 1400.0, 40.0e5, &mut w);
+        let total: f64 = w.iter().sum();
+        let scale: f64 = w.iter().map(|v| v.abs()).sum::<f64>().max(1e-30);
+        assert!(
+            total.abs() < 1e-9 * scale,
+            "net mass production {total} vs scale {scale}"
+        );
+    }
+
+    #[test]
+    fn rates_finite_and_nonzero() {
+        let mech = Mechanism::standard();
+        let y = test_y();
+        let mut w = [0.0f64; NS];
+        for t in [1000.0, 1600.0, 2200.0] {
+            production_rates_point(&mech, &y, t, 40.0e5, &mut w);
+            assert!(w.iter().all(|v| v.is_finite()));
+            assert!(w.iter().any(|v| v.abs() > 0.0));
+        }
+    }
+
+    #[test]
+    fn qoi_is_nonlinear_in_temperature() {
+        // Arrhenius nonlinearity: +1% T produces >> +1% change in rate
+        // magnitudes — the property that amplifies PD errors into QoI
+        // errors (Figs. 6/8 of the paper).
+        let mech = Mechanism::standard();
+        let y = test_y();
+        let mut w0 = [0.0f64; NS];
+        let mut w1 = [0.0f64; NS];
+        production_rates_point(&mech, &y, 1300.0, 40.0e5, &mut w0);
+        production_rates_point(&mech, &y, 1300.0 * 1.01, 40.0e5, &mut w1);
+        let m0: f64 = w0.iter().map(|v| v.abs()).sum();
+        let m1: f64 = w1.iter().map(|v| v.abs()).sum();
+        let rel = (m1 - m0).abs() / m0;
+        assert!(rel > 0.02, "QoI barely responded to T: {rel}");
+    }
+
+    #[test]
+    fn species_perturbation_propagates_cross_species() {
+        // perturbing one species' mass fraction must change *other*
+        // species' production rates (the QoI is cross-species).
+        let mech = Mechanism::standard();
+        let y0 = test_y();
+        let fuel = index_of("nC7H16").unwrap();
+        let mut w0 = [0.0f64; NS];
+        let mut w1 = [0.0f64; NS];
+        production_rates_point(&mech, &y0, 1300.0, 40.0e5, &mut w0);
+        let mut y1 = y0;
+        y1[fuel] *= 1.5;
+        production_rates_point(&mech, &y1, 1300.0, 40.0e5, &mut w1);
+        let changed = (0..NS)
+            .filter(|&k| k != fuel && (w1[k] - w0[k]).abs() > 1e-12 * w0[k].abs().max(1e-30))
+            .count();
+        assert!(changed > 5, "only {changed} species responded");
+    }
+
+    #[test]
+    fn batch_matches_pointwise() {
+        let mech = Mechanism::standard();
+        let y = test_y();
+        let n = 3;
+        let mut ys = vec![0.0f32; NS * n];
+        for s in 0..NS {
+            for i in 0..n {
+                ys[s * n + i] = y[s] * (1.0 + 0.01 * i as f32);
+            }
+        }
+        let temps = [1200.0f32, 1400.0, 1800.0];
+        let mut out = vec![0.0f64; NS * n];
+        production_rates(&mech, &ys, &temps, 40.0e5, n, &mut out);
+
+        let mut yi = [0.0f32; NS];
+        let mut w = [0.0f64; NS];
+        for i in 0..n {
+            for s in 0..NS {
+                yi[s] = ys[s * n + i];
+            }
+            production_rates_point(&mech, &yi, temps[i] as f64, 40.0e5, &mut w);
+            for s in 0..NS {
+                assert_eq!(out[s * n + i], w[s]);
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! The 58-species table — the cross-language ABI mirrored from
+//! `python/compile/data.py::SPECIES` (same order, same parameters).
+//!
+//! Names follow the Yoo et al. 58-species n-heptane skeletal mechanism
+//! flavor used by the paper's S3D dataset; `Role` + (magnitude, center,
+//! width) drive both the synthetic data manifold and the synthetic reaction
+//! mechanism (the Cantera substitute, see DESIGN.md §3).
+
+/// Chemical role of a species in the synthetic HCCI manifold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Fuel,
+    Oxidizer,
+    Inert,
+    Product,
+    Co,
+    Intermediate,
+    Radical,
+    LowT,
+}
+
+/// Static description of one species.
+#[derive(Clone, Copy, Debug)]
+pub struct Species {
+    pub name: &'static str,
+    pub role: Role,
+    /// Peak mass-fraction magnitude (spans ~8 decades across the table).
+    pub magnitude: f32,
+    /// Progress-variable center of the species' manifold bump.
+    pub center: f32,
+    /// Width of the bump.
+    pub width: f32,
+    /// Molecular weight [g/mol] (synthetic but element-plausible).
+    pub mw: f32,
+}
+
+use Role::*;
+
+/// Number of species (fixed by the paper's dataset).
+pub const NS: usize = 58;
+
+macro_rules! sp {
+    ($name:literal, $role:ident, $mag:expr, $ctr:expr, $wid:expr, $mw:expr) => {
+        Species {
+            name: $name,
+            role: $role,
+            magnitude: $mag,
+            center: $ctr,
+            width: $wid,
+            mw: $mw,
+        }
+    };
+}
+
+/// The full table, index-aligned with the dataset's species axis.
+pub static SPECIES: [Species; NS] = [
+    sp!("nC7H16", Fuel, 2.5e-02, 0.00, 0.30, 100.2),
+    sp!("O2", Oxidizer, 2.2e-01, 0.00, 0.40, 32.0),
+    sp!("N2", Inert, 7.2e-01, 0.00, 1.00, 28.0),
+    sp!("CO2", Product, 8.0e-02, 0.95, 0.30, 44.0),
+    sp!("H2O", Product, 6.5e-02, 0.90, 0.30, 18.0),
+    sp!("CO", Co, 4.5e-02, 0.55, 0.22, 28.0),
+    sp!("H2", Co, 1.5e-03, 0.50, 0.25, 2.0),
+    sp!("H", Radical, 3.0e-05, 0.80, 0.12, 1.0),
+    sp!("O", Radical, 8.0e-05, 0.78, 0.12, 16.0),
+    sp!("OH", Radical, 2.5e-03, 0.82, 0.15, 17.0),
+    sp!("HO2", Radical, 1.2e-04, 0.45, 0.18, 33.0),
+    sp!("H2O2", Intermediate, 3.0e-04, 0.40, 0.16, 34.0),
+    sp!("CH3", Radical, 2.0e-04, 0.55, 0.15, 15.0),
+    sp!("CH4", Intermediate, 9.0e-04, 0.50, 0.22, 16.0),
+    sp!("CH2O", Intermediate, 1.8e-03, 0.42, 0.16, 30.0),
+    sp!("HCO", Radical, 6.0e-06, 0.60, 0.12, 29.0),
+    sp!("CH3O", Radical, 2.0e-06, 0.48, 0.12, 31.0),
+    sp!("C2H2", Intermediate, 4.0e-04, 0.62, 0.15, 26.0),
+    sp!("C2H3", Radical, 5.0e-06, 0.60, 0.11, 27.0),
+    sp!("C2H4", Intermediate, 3.5e-03, 0.52, 0.18, 28.0),
+    sp!("C2H5", Radical, 4.0e-06, 0.45, 0.12, 29.0),
+    sp!("C2H6", Intermediate, 4.0e-04, 0.40, 0.18, 30.0),
+    sp!("CH2CHO", Radical, 3.0e-06, 0.55, 0.11, 43.0),
+    sp!("CH3CHO", Intermediate, 2.5e-04, 0.38, 0.15, 44.0),
+    sp!("C3H4", Intermediate, 8.0e-05, 0.55, 0.14, 40.0),
+    sp!("C3H5", Radical, 6.0e-05, 0.52, 0.13, 41.0),
+    sp!("C3H6", Intermediate, 1.5e-03, 0.45, 0.16, 42.0),
+    sp!("nC3H7", Radical, 2.0e-06, 0.30, 0.10, 43.0),
+    sp!("C4H7", Radical, 4.0e-06, 0.35, 0.11, 55.0),
+    sp!("C4H8-1", Intermediate, 6.0e-04, 0.38, 0.14, 56.0),
+    sp!("pC4H9", Radical, 1.5e-06, 0.28, 0.10, 57.0),
+    sp!("C5H9", Radical, 2.5e-06, 0.33, 0.10, 69.0),
+    sp!("C5H10-1", Intermediate, 3.5e-04, 0.35, 0.13, 70.0),
+    sp!("C6H12-1", Intermediate, 2.5e-04, 0.32, 0.12, 84.0),
+    sp!("C7H15-2", Radical, 3.0e-06, 0.20, 0.09, 99.0),
+    sp!("C7H15O2", LowT, 5.0e-05, 0.15, 0.10, 131.0),
+    sp!("C7H14OOH", LowT, 1.2e-05, 0.16, 0.09, 131.0),
+    sp!("OC7H13OOH", LowT, 4.0e-06, 0.18, 0.09, 146.0),
+    sp!("nC7KET12", LowT, 2.0e-05, 0.17, 0.09, 146.0),
+    sp!("C5H11CO", LowT, 1.5e-06, 0.22, 0.09, 99.0),
+    sp!("nC3H7COCH2", LowT, 8.0e-07, 0.20, 0.08, 85.0),
+    sp!("CH3COCH2", Radical, 2.0e-06, 0.42, 0.11, 57.0),
+    sp!("CH3COCH3", Intermediate, 8.0e-05, 0.35, 0.13, 58.0),
+    sp!("C2H5CHO", Intermediate, 4.0e-05, 0.30, 0.12, 58.0),
+    sp!("C2H5CO", Radical, 8.0e-07, 0.32, 0.10, 57.0),
+    sp!("CH3OCH3", Intermediate, 2.0e-05, 0.33, 0.12, 46.0),
+    sp!("CH3OCH2", Radical, 5.0e-07, 0.36, 0.10, 45.0),
+    sp!("HOCH2O", LowT, 3.0e-06, 0.25, 0.10, 47.0),
+    sp!("HCOOH", Intermediate, 5.0e-05, 0.38, 0.13, 46.0),
+    sp!("CH3O2", LowT, 8.0e-06, 0.22, 0.10, 47.0),
+    sp!("CH3O2H", LowT, 6.0e-06, 0.24, 0.10, 48.0),
+    sp!("C2H3CHO", Intermediate, 6.0e-05, 0.48, 0.13, 56.0),
+    sp!("C2H3CO", Radical, 4.0e-07, 0.50, 0.10, 55.0),
+    sp!("aC3H5CHO", Intermediate, 1.5e-05, 0.44, 0.12, 70.0),
+    sp!("NO", Product, 1.2e-04, 0.97, 0.25, 30.0),
+    sp!("NO2", Intermediate, 1.5e-05, 0.70, 0.18, 46.0),
+    sp!("N2O", Intermediate, 8.0e-06, 0.75, 0.18, 44.0),
+    sp!("NNH", Radical, 2.0e-08, 0.85, 0.12, 29.0),
+];
+
+/// Look up a species index by name.
+pub fn index_of(name: &str) -> Option<usize> {
+    SPECIES.iter().position(|s| s.name == name)
+}
+
+/// Paper's "major" species (reactants + products of Figs. 5/7).
+pub const MAJORS: [&str; 5] = ["nC7H16", "O2", "CO2", "CO", "H2O"];
+
+/// Paper's representative minor species (Figs. 6/8).
+pub const MINOR_C2H3: &str = "C2H3";
+pub const MINOR_LOWT: &str = "nC3H7COCH2";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_58_unique_names() {
+        let mut names: Vec<_> = SPECIES.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), NS);
+    }
+
+    #[test]
+    fn lookups() {
+        assert_eq!(index_of("nC7H16"), Some(0));
+        assert_eq!(index_of("C2H3"), Some(18));
+        assert!(index_of("nC3H7COCH2").is_some());
+        assert_eq!(index_of("unobtainium"), None);
+    }
+
+    #[test]
+    fn magnitudes_span_decades() {
+        let max = SPECIES.iter().map(|s| s.magnitude).fold(0.0f32, f32::max);
+        let min = SPECIES
+            .iter()
+            .map(|s| s.magnitude)
+            .fold(f32::INFINITY, f32::min);
+        assert!(max / min > 1e6, "span {max}/{min}");
+    }
+}

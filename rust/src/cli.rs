@@ -1,0 +1,132 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline image).
+//!
+//! Supports `--key value`, `--flag`, and positional arguments.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw arguments (excluding program name and subcommand).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let name = name.to_string();
+                args.present.push(name.clone());
+                // value if next token isn't another flag
+                if let Some(next) = iter.peek() {
+                    if !next.starts_with("--") {
+                        args.flags.insert(name, iter.next().unwrap());
+                        continue;
+                    }
+                }
+                args.flags.insert(name, String::new());
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.present.iter().any(|p| p == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str()).filter(|s| !s.is_empty())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| Error::config(format!("--{name} {s}: {e}"))),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::config(format!("missing required --{name}")))
+    }
+}
+
+pub const USAGE: &str = "\
+gbatc — Guaranteed Block Autoencoder with Tensor Correction (CFD data reduction)
+
+USAGE: gbatc <command> [options]
+
+COMMANDS:
+  gen-data    --out <file> [--profile tiny|small|medium|paper] [--seed N]
+              Generate a synthetic S3D-HCCI-like dataset (SDF1).
+  compress    --input <sdf> --output <gba> [--nrmse 1e-3] [--no-tcn]
+              [--latent-bin 0.02] [--artifacts DIR] [--threads N]
+              [--full-basis] [--model-f32]
+              GBATC/GBA compression with guaranteed block error bounds.
+  decompress  --input <gba> --output <sdf> [--artifacts DIR] [--threads N]
+              [--temp-from <sdf>]
+              Reconstruct mass fractions (temperature copied from
+              --temp-from if given, else zeros).
+  sz          --input <sdf> --output <szf> [--nrmse 1e-3]
+              [--mode auto|lorenzo|interp] [--eb-scale 1.0]
+              SZ baseline compression.
+  sz-decompress --input <szf> --output <sdf> [--temp-from <sdf>]
+  evaluate    --orig <sdf> --recon <sdf> [--species NAME] [--qoi]
+              [--sample-stride N]
+              NRMSE/PSNR/SSIM per species (+ QoI errors with --qoi).
+  info        --archive <gba|szf>
+              Print archive layout and compression ratio.
+  help        Show this message.
+
+All artifacts are produced by `make artifacts` (python build path).
+";
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse(&["--input", "x.bin", "--no-tcn", "--nrmse", "1e-3", "pos"]);
+        assert_eq!(a.get("input"), Some("x.bin"));
+        assert!(a.has("no-tcn"));
+        assert!(!a.has("tcn"));
+        assert_eq!(a.get_parse::<f64>("nrmse", 0.0).unwrap(), 1e-3);
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse(&["--x", "1"]);
+        assert_eq!(a.get_or("y", "def"), "def");
+        assert_eq!(a.get_parse::<usize>("z", 7).unwrap(), 7);
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.require("x").unwrap(), "1");
+    }
+
+    #[test]
+    fn bad_parse_is_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+}

@@ -1,0 +1,162 @@
+//! PCA-coefficient codec (Algorithm 1's storage payload).
+//!
+//! Per species, per block: the selected basis indices (Fig.-2 prefix
+//! bitmaps, one shared bitstream) and the quantized coefficients (one
+//! shared `IntCodec` Huffman stream).  Coefficients are stored in index
+//! order so the two streams zip deterministically on decode.
+
+use crate::codec::indices::{decode_indices, encode_indices};
+use crate::entropy::IntCodec;
+use crate::error::{Error, Result};
+use crate::quant::UniformQuantizer;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::{BitReader, BitWriter};
+
+/// One species' decoded coefficient payload: per block, the (basis index,
+/// dequantized coefficient) pairs in ascending index order.
+#[derive(Clone, Debug)]
+pub struct SpeciesCoeffs {
+    pub d: usize,
+    pub bin: f64,
+    pub per_block: Vec<Vec<(usize, f64)>>,
+}
+
+/// Encoder/decoder for one species' coefficients.
+pub struct CoeffCodec;
+
+impl CoeffCodec {
+    /// `per_block[b]` = (index, *quantized integer* coefficient) pairs,
+    /// ascending index. `d` = block vector dim, `bin` = quantizer width.
+    pub fn encode(per_block: &[Vec<(usize, i64)>], d: usize, bin: f64) -> Result<Vec<u8>> {
+        let mut bitmap = BitWriter::new();
+        let mut values: Vec<i64> = Vec::new();
+        for block in per_block {
+            debug_assert!(block.windows(2).all(|w| w[0].0 < w[1].0));
+            let idxs: Vec<usize> = block.iter().map(|&(i, _)| i).collect();
+            encode_indices(&mut bitmap, &idxs, d)?;
+            values.extend(block.iter().map(|&(_, q)| q));
+        }
+        let mut w = ByteWriter::new();
+        w.u64(per_block.len() as u64);
+        w.u64(d as u64);
+        w.f64(bin);
+        w.blob(&bitmap.finish());
+        w.blob(&IntCodec::encode(&values)?);
+        Ok(w.finish())
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<SpeciesCoeffs> {
+        let mut r = ByteReader::new(buf);
+        let n_blocks = r.u64()? as usize;
+        let d = r.u64()? as usize;
+        let bin = r.f64()?;
+        let bitmap = r.blob()?;
+        let values = IntCodec::decode(r.blob()?)?;
+        let q = UniformQuantizer::new(bin);
+
+        let mut br = BitReader::new(bitmap);
+        let mut per_block = Vec::with_capacity(n_blocks);
+        let mut vi = 0usize;
+        for _ in 0..n_blocks {
+            let idxs = decode_indices(&mut br)?;
+            let mut block = Vec::with_capacity(idxs.len());
+            for i in idxs {
+                let qv = *values
+                    .get(vi)
+                    .ok_or_else(|| Error::codec("coeffs: value stream underrun"))?;
+                vi += 1;
+                block.push((i, q.dequantize(qv)));
+            }
+            per_block.push(block);
+        }
+        if vi != values.len() {
+            return Err(Error::codec("coeffs: value stream overrun"));
+        }
+        Ok(SpeciesCoeffs { d, bin, per_block })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Arbitrary};
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_basic() {
+        let per_block = vec![
+            vec![(0usize, 5i64), (1, -3), (7, 100)],
+            vec![],
+            vec![(2, 1)],
+        ];
+        let bin = 0.5;
+        let buf = CoeffCodec::encode(&per_block, 80, bin).unwrap();
+        let dec = CoeffCodec::decode(&buf).unwrap();
+        assert_eq!(dec.per_block.len(), 3);
+        assert_eq!(dec.d, 80);
+        for (orig, got) in per_block.iter().zip(&dec.per_block) {
+            assert_eq!(orig.len(), got.len());
+            for (&(i, q), &(gi, gv)) in orig.iter().zip(got) {
+                assert_eq!(i, gi);
+                assert!((gv - q as f64 * bin).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[derive(Clone, Debug)]
+    struct Case {
+        d: usize,
+        blocks: Vec<Vec<(usize, i64)>>,
+    }
+    impl Arbitrary for Case {
+        fn generate(rng: &mut Prng) -> Self {
+            let d = 2 + rng.index(100);
+            let nb = rng.index(30);
+            let blocks = (0..nb)
+                .map(|_| {
+                    let mut blk = Vec::new();
+                    for i in 0..d {
+                        if rng.next_f64() < 1.5 / (1.0 + i as f64) {
+                            blk.push((i, (rng.normal() * 50.0) as i64));
+                        }
+                    }
+                    blk
+                })
+                .collect();
+            Case { d, blocks }
+        }
+        fn shrink(&self) -> Vec<Self> {
+            if self.blocks.is_empty() {
+                vec![]
+            } else {
+                vec![Case {
+                    d: self.d,
+                    blocks: self.blocks[..self.blocks.len() / 2].to_vec(),
+                }]
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_indices_and_counts() {
+        check::<Case, _>(13, 150, |c| {
+            let buf = CoeffCodec::encode(&c.blocks, c.d, 0.25).unwrap();
+            let dec = CoeffCodec::decode(&buf).unwrap();
+            dec.per_block.len() == c.blocks.len()
+                && c.blocks.iter().zip(&dec.per_block).all(|(a, b)| {
+                    a.len() == b.len()
+                        && a.iter().zip(b).all(|(&(i, q), &(gi, gv))| {
+                            i == gi && (gv - q as f64 * 0.25).abs() < 1e-12
+                        })
+                })
+        });
+    }
+
+    #[test]
+    fn corrupt_stream_is_error_not_panic() {
+        let per_block = vec![vec![(0usize, 1i64), (3, -2)]; 10];
+        let buf = CoeffCodec::encode(&per_block, 16, 0.1).unwrap();
+        let short = &buf[..buf.len() - 3];
+        assert!(CoeffCodec::decode(short).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Basis-index bitmap encoding (paper Fig. 2).
+//!
+//! Each block selects a subset of the D basis vectors.  Because basis
+//! vectors are eigenvalue-ordered, *early* indices are selected far more
+//! often, so the selection bitmap almost always ends in a run of zeros.
+//! The paper stores only the shortest prefix that contains all ones,
+//! preceded by that prefix's length; we code the length with Elias gamma.
+
+use crate::error::{Error, Result};
+use crate::util::{BitReader, BitWriter};
+
+/// Encode a selection of basis indices (strictly increasing, < d).
+/// Writes gamma(prefix_len + 1) then `prefix_len` raw bitmap bits.
+pub fn encode_indices(w: &mut BitWriter, selected: &[usize], d: usize) -> Result<()> {
+    let mut bitmap = vec![false; d];
+    for &i in selected {
+        if i >= d {
+            return Err(Error::codec(format!("index {i} out of range {d}")));
+        }
+        bitmap[i] = true;
+    }
+    let prefix_len = selected.iter().max().map_or(0, |&m| m + 1);
+    w.write_gamma(prefix_len as u64 + 1);
+    for &b in &bitmap[..prefix_len] {
+        w.write_bit(b);
+    }
+    Ok(())
+}
+
+/// Decode the selection produced by [`encode_indices`].
+pub fn decode_indices(r: &mut BitReader) -> Result<Vec<usize>> {
+    let prefix_len = r
+        .read_gamma()
+        .ok_or_else(|| Error::codec("indices: EOF in prefix length"))? as usize
+        - 1;
+    let mut out = Vec::new();
+    for i in 0..prefix_len {
+        if r.read_bit()
+            .ok_or_else(|| Error::codec("indices: EOF in bitmap"))?
+        {
+            out.push(i);
+        }
+    }
+    Ok(out)
+}
+
+/// Bits a raw full-width bitmap would cost (the ablation baseline).
+pub fn raw_bitmap_bits(d: usize) -> usize {
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Arbitrary};
+    use crate::util::Prng;
+
+    fn roundtrip(selected: &[usize], d: usize) -> Vec<usize> {
+        let mut w = BitWriter::new();
+        encode_indices(&mut w, selected, d).unwrap();
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        decode_indices(&mut r).unwrap()
+    }
+
+    #[test]
+    fn paper_example_shape() {
+        // leading indices selected -> short prefix
+        assert_eq!(roundtrip(&[0, 1, 3], 80), vec![0, 1, 3]);
+        assert_eq!(roundtrip(&[], 80), Vec::<usize>::new());
+        assert_eq!(roundtrip(&[79], 80), vec![79]);
+    }
+
+    #[test]
+    fn leading_selection_is_compact() {
+        // typical case: first 4 of 80 selected -> ~4 bits of bitmap,
+        // far below the 80-bit raw bitmap
+        let mut w = BitWriter::new();
+        encode_indices(&mut w, &[0, 1, 2, 3], 80).unwrap();
+        assert!(w.bit_len() < 16, "got {} bits", w.bit_len());
+        assert!(raw_bitmap_bits(80) == 80);
+    }
+
+    #[test]
+    fn multiple_blocks_in_one_stream() {
+        let sels: Vec<Vec<usize>> = vec![vec![0, 2], vec![], vec![5], vec![0, 1, 2, 3, 10]];
+        let mut w = BitWriter::new();
+        for s in &sels {
+            encode_indices(&mut w, s, 16).unwrap();
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for s in &sels {
+            assert_eq!(&decode_indices(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut w = BitWriter::new();
+        assert!(encode_indices(&mut w, &[80], 80).is_err());
+    }
+
+    #[derive(Clone, Debug)]
+    struct Sel {
+        d: usize,
+        sel: Vec<usize>,
+    }
+    impl Arbitrary for Sel {
+        fn generate(rng: &mut Prng) -> Self {
+            let d = 1 + rng.index(128);
+            // eigenvalue-ordered bias: earlier indices more likely
+            let sel: Vec<usize> = (0..d)
+                .filter(|&i| rng.next_f64() < 0.5 / (1.0 + i as f64 * 0.3))
+                .collect();
+            Sel { d, sel }
+        }
+        fn shrink(&self) -> Vec<Self> {
+            if self.sel.is_empty() {
+                vec![]
+            } else {
+                vec![Sel {
+                    d: self.d,
+                    sel: self.sel[..self.sel.len() - 1].to_vec(),
+                }]
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        check::<Sel, _>(11, 300, |c| roundtrip(&c.sel, c.d) == c.sel);
+    }
+}

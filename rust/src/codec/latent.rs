@@ -1,0 +1,99 @@
+//! AE latent codec: uniform quantization + Huffman (paper §II-A).
+//!
+//! The latent matrix is `[n_blocks, latent_dim]` f32.  Quantized with bin
+//! width `d` and entropy-coded with the self-describing `IntCodec`; the
+//! decoder recovers centers `q * d`, which is exactly what the decoder HLO
+//! was fed during compression (so quantization error is part of the
+//! residual the guarantee stage corrects).
+
+use crate::entropy::IntCodec;
+use crate::quant::UniformQuantizer;
+use crate::error::Result;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Encodes/decodes the latent plane.
+pub struct LatentCodec;
+
+/// Decoded latent payload.
+pub struct LatentPlane {
+    pub n: usize,
+    pub dim: usize,
+    pub bin: f64,
+    pub values: Vec<f32>, // dequantized, length n*dim
+}
+
+impl LatentCodec {
+    /// Quantize + encode. Returns (payload bytes, dequantized latents the
+    /// compressor must feed to the decoder to make residuals exact).
+    pub fn encode(latents: &[f32], n: usize, dim: usize, bin: f64) -> Result<(Vec<u8>, Vec<f32>)> {
+        assert_eq!(latents.len(), n * dim);
+        let q = UniformQuantizer::new(bin);
+        let qs = q.quantize_slice(latents);
+        let deq = q.dequantize_slice(&qs);
+        let stream = IntCodec::encode(&qs)?;
+
+        let mut w = ByteWriter::new();
+        w.u64(n as u64);
+        w.u64(dim as u64);
+        w.f64(bin);
+        w.blob(&stream);
+        Ok((w.finish(), deq))
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<LatentPlane> {
+        let mut r = ByteReader::new(buf);
+        let n = r.u64()? as usize;
+        let dim = r.u64()? as usize;
+        let bin = r.f64()?;
+        let stream = r.blob()?;
+        let qs = IntCodec::decode(stream)?;
+        let q = UniformQuantizer::new(bin);
+        let values = q.dequantize_slice(&qs);
+        if values.len() != n * dim {
+            return Err(crate::error::Error::codec(format!(
+                "latent plane length {} != {}x{}",
+                values.len(),
+                n,
+                dim
+            )));
+        }
+        Ok(LatentPlane {
+            n,
+            dim,
+            bin,
+            values,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_matches_dequantized() {
+        let mut rng = Prng::new(5);
+        let (n, dim) = (100, 36);
+        let latents: Vec<f32> = (0..n * dim).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let bin = 0.02;
+        let (buf, deq) = LatentCodec::encode(&latents, n, dim, bin).unwrap();
+        let plane = LatentCodec::decode(&buf).unwrap();
+        assert_eq!(plane.values, deq);
+        assert_eq!((plane.n, plane.dim), (n, dim));
+        // error bound holds
+        for (a, b) in latents.iter().zip(&plane.values) {
+            assert!((a - b).abs() <= (bin / 2.0) as f32 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn coarser_bins_compress_smaller() {
+        let mut rng = Prng::new(6);
+        let (n, dim) = (500, 36);
+        let latents: Vec<f32> = (0..n * dim).map(|_| (rng.normal() * 2.0) as f32).collect();
+        let (fine, _) = LatentCodec::encode(&latents, n, dim, 1e-4).unwrap();
+        let (coarse, _) = LatentCodec::encode(&latents, n, dim, 1e-1).unwrap();
+        assert!(coarse.len() < fine.len());
+    }
+}

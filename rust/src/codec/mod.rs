@@ -1,0 +1,12 @@
+//! Bitstream codecs for the three compressed payloads of GBATC:
+//! AE latents (`latent`), PCA residual coefficients (`coeffs`), and the
+//! per-block basis-index bitmaps with the paper's Fig.-2 shortest-prefix
+//! encoding (`indices`).
+
+pub mod coeffs;
+pub mod indices;
+pub mod latent;
+
+pub use coeffs::{CoeffCodec, SpeciesCoeffs};
+pub use indices::{decode_indices, encode_indices, raw_bitmap_bits};
+pub use latent::LatentCodec;

@@ -1,0 +1,79 @@
+//! Compressed-output accounting (paper §III: "the compressed output
+//! comprises the encoded representation of the AE encoder, encoded
+//! coefficients with their basis indicators, network parameters, and all
+//! the dictionaries for entropy coding").
+//!
+//! Model parameters (decoder + TCN) are charged at 1 byte/parameter —
+//! 8-bit post-training quantization is standard for deployment and is what
+//! lets a single archive amortize the network the way the paper's 4.75 GB
+//! dataset amortizes its float networks.  The toggle `model_bytes_f32`
+//! charges full f32 instead (ablation).
+
+/// Byte breakdown of one GBATC archive.
+#[derive(Clone, Debug, Default)]
+pub struct SizeBreakdown {
+    pub latents: usize,
+    pub bases: usize,
+    pub coeffs: usize,
+    pub header: usize,
+    pub model_params: usize,
+}
+
+impl SizeBreakdown {
+    pub fn payload(&self) -> usize {
+        self.latents + self.bases + self.coeffs + self.header
+    }
+
+    pub fn total(&self) -> usize {
+        self.payload() + self.model_params
+    }
+
+    pub fn ratio(&self, pd_bytes: usize) -> f64 {
+        pd_bytes as f64 / self.total() as f64
+    }
+}
+
+impl std::fmt::Display for SizeBreakdown {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "latents {} B | bases {} B | coeffs {} B | header {} B | model {} B | total {} B",
+            self.latents, self.bases, self.coeffs, self.header, self.model_params,
+            self.total()
+        )
+    }
+}
+
+/// Bytes charged for model parameters.
+pub fn model_param_bytes(param_count: usize, f32_storage: bool) -> usize {
+    if f32_storage {
+        param_count * 4
+    } else {
+        param_count // 8-bit quantized + negligible scale table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_add_up() {
+        let b = SizeBreakdown {
+            latents: 100,
+            bases: 50,
+            coeffs: 30,
+            header: 20,
+            model_params: 200,
+        };
+        assert_eq!(b.payload(), 200);
+        assert_eq!(b.total(), 400);
+        assert!((b.ratio(4000) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_bytes_modes() {
+        assert_eq!(model_param_bytes(1000, false), 1000);
+        assert_eq!(model_param_bytes(1000, true), 4000);
+    }
+}

@@ -1,0 +1,12 @@
+//! Top-level compressors: GBA/GBATC (the paper's method) and the SZ
+//! baseline behind a common trait, plus compression-ratio accounting.
+
+pub mod accounting;
+pub mod gba;
+pub mod szc;
+pub mod traits;
+
+pub use accounting::SizeBreakdown;
+pub use gba::{CompressOptions, CompressReport, GbatcCompressor};
+pub use szc::{SzCompressOptions, SzCompressor, SzArchive};
+pub use traits::Compressor;

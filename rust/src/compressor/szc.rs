@@ -1,0 +1,237 @@
+//! SZ baseline wrapper: compresses each species' `[T, Y, X]` field
+//! independently (as SZ does — the paper highlights this as the contrast
+//! with GBATC's cross-species modeling), with a per-species absolute error
+//! bound derived from the NRMSE target.
+//!
+//! For a uniform quantization error in [-eb, eb], RMSE ≈ eb/√3, so
+//! eb = √3 · nrmse_target · range hits the target NRMSE from above;
+//! `eb_scale` lets the benches sweep around it.
+
+use std::sync::Mutex;
+
+use crate::coordinator::scheduler::par_for;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::sz::codec::{sz_compress, sz_decompress, SzMode};
+use crate::sz::SzField;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Options for the SZ baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct SzCompressOptions {
+    pub mode: SzMode,
+    /// eb = eb_scale * sqrt(3) * nrmse_target * per-species range.
+    pub eb_scale: f64,
+    pub threads: usize,
+}
+
+impl Default for SzCompressOptions {
+    fn default() -> Self {
+        Self {
+            mode: SzMode::Auto,
+            eb_scale: 1.0,
+            threads: 0,
+        }
+    }
+}
+
+/// Serialized multi-species SZ archive.
+pub struct SzArchive {
+    pub dims: (usize, usize, usize, usize),
+    pub fields: Vec<SzField>,
+}
+
+impl SzArchive {
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(b"SZA1");
+        for d in [self.dims.0, self.dims.1, self.dims.2, self.dims.3] {
+            w.u32(d as u32);
+        }
+        for f in &self.fields {
+            w.u8(match f.mode {
+                SzMode::Lorenzo => 0,
+                SzMode::Interp => 1,
+                SzMode::Auto => 2,
+            });
+            w.f64(f.eb);
+            w.blob(&f.payload);
+        }
+        w.finish()
+    }
+
+    pub fn deserialize(buf: &[u8]) -> Result<SzArchive> {
+        let mut r = ByteReader::new(buf);
+        if r.bytes(4)? != b"SZA1" {
+            return Err(Error::format("bad SZ archive magic"));
+        }
+        let dims = (
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+        );
+        let total = dims
+            .0
+            .checked_mul(dims.1)
+            .and_then(|v| v.checked_mul(dims.2))
+            .and_then(|v| v.checked_mul(dims.3))
+            .ok_or_else(|| Error::format("SZ archive dims overflow"))?;
+        if total == 0 || total > 1 << 33 {
+            return Err(Error::format(format!("implausible SZ dims {dims:?}")));
+        }
+        let fdims = (dims.0, dims.2, dims.3);
+        let mut fields = Vec::with_capacity(dims.1);
+        for _ in 0..dims.1 {
+            let mode = match r.u8()? {
+                0 => SzMode::Lorenzo,
+                1 => SzMode::Interp,
+                m => return Err(Error::format(format!("bad SZ mode {m}"))),
+            };
+            let eb = r.f64()?;
+            let payload = r.blob()?.to_vec();
+            fields.push(SzField {
+                mode,
+                eb,
+                dims: fdims,
+                payload,
+            });
+        }
+        Ok(SzArchive { dims, fields })
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.serialize().len()
+    }
+}
+
+impl crate::compressor::traits::Compressor for SzCompressor {
+    fn name(&self) -> &str {
+        "SZ"
+    }
+
+    fn compress_bytes(&self, ds: &Dataset, nrmse_target: f64) -> Result<Vec<u8>> {
+        Ok(self.compress(ds, nrmse_target)?.serialize())
+    }
+
+    fn decompress_mass(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        self.decompress(&SzArchive::deserialize(bytes)?)
+    }
+}
+
+/// The SZ baseline compressor.
+pub struct SzCompressor {
+    pub opts: SzCompressOptions,
+}
+
+impl SzCompressor {
+    pub fn new(opts: SzCompressOptions) -> Self {
+        Self { opts }
+    }
+
+    fn threads(&self) -> usize {
+        if self.opts.threads > 0 {
+            self.opts.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+
+    /// Compress every species field in parallel.
+    pub fn compress(&self, ds: &Dataset, nrmse_target: f64) -> Result<SzArchive> {
+        let ranges = ds.species_ranges();
+        let slots: Vec<Mutex<Option<Result<SzField>>>> =
+            (0..ds.ns).map(|_| Mutex::new(None)).collect();
+        par_for(ds.ns, self.threads(), |s| {
+            let field = ds.species_field(s);
+            let range = (ranges[s].1 - ranges[s].0).max(1e-30) as f64;
+            let eb = (self.opts.eb_scale * 3f64.sqrt() * nrmse_target * range).max(1e-300);
+            let r = sz_compress(&field.data, (ds.nt, ds.ny, ds.nx), eb, self.opts.mode);
+            *slots[s].lock().unwrap() = Some(r);
+        });
+        let mut fields = Vec::with_capacity(ds.ns);
+        for slot in slots {
+            fields.push(slot.into_inner().unwrap().expect("missing field")?);
+        }
+        Ok(SzArchive {
+            dims: (ds.nt, ds.ns, ds.ny, ds.nx),
+            fields,
+        })
+    }
+
+    /// Decompress to mass fractions `[T, S, Y, X]`.
+    pub fn decompress(&self, archive: &SzArchive) -> Result<Vec<f32>> {
+        let (nt, ns, ny, nx) = archive.dims;
+        let npix = ny * nx;
+        let mut mass = vec![0.0f32; nt * ns * npix];
+        let slots: Vec<Mutex<Option<Result<Vec<f32>>>>> =
+            (0..ns).map(|_| Mutex::new(None)).collect();
+        par_for(ns, self.threads(), |s| {
+            *slots[s].lock().unwrap() = Some(sz_decompress(&archive.fields[s]));
+        });
+        for (s, slot) in slots.into_iter().enumerate() {
+            let field = slot.into_inner().unwrap().expect("missing")?;
+            for t in 0..nt {
+                let off = (t * ns + s) * npix;
+                mass[off..off + npix].copy_from_slice(&field[t * npix..(t + 1) * npix]);
+            }
+        }
+        Ok(mass)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Profile};
+    use crate::metrics::nrmse_per_species;
+
+    #[test]
+    fn end_to_end_nrmse_near_target() {
+        let ds = generate(Profile::Tiny, 21);
+        let szc = SzCompressor::new(SzCompressOptions {
+            mode: SzMode::Interp,
+            ..Default::default()
+        });
+        let target = 1e-3;
+        let archive = szc.compress(&ds, target).unwrap();
+        let mass = szc.decompress(&archive).unwrap();
+        // species-major view: [T,S,Y,X] -> per-species check via nrmse on
+        // species_field ordering; reuse dataset gather
+        let mut ds2 = ds.clone();
+        ds2.mass = mass;
+        let mut per = Vec::new();
+        for s in 0..ds.ns {
+            let a = ds.species_field(s);
+            let b = ds2.species_field(s);
+            per.push(crate::metrics::nrmse(&a.data, &b.data));
+        }
+        let mean = per.iter().sum::<f64>() / per.len() as f64;
+        assert!(mean <= target * 1.2, "mean NRMSE {mean} vs target {target}");
+        assert!(mean >= target * 0.05, "suspiciously low {mean}");
+        let _ = nrmse_per_species; // silence unused import in some cfgs
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let ds = generate(Profile::Tiny, 22);
+        let szc = SzCompressor::new(SzCompressOptions::default());
+        let archive = szc.compress(&ds, 1e-2).unwrap();
+        let bytes = archive.serialize();
+        let back = SzArchive::deserialize(&bytes).unwrap();
+        assert_eq!(back.dims, archive.dims);
+        assert_eq!(back.fields.len(), archive.fields.len());
+        let m1 = szc.decompress(&archive).unwrap();
+        let m2 = szc.decompress(&back).unwrap();
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn compresses_well_below_raw() {
+        let ds = generate(Profile::Tiny, 23);
+        let szc = SzCompressor::new(SzCompressOptions::default());
+        let archive = szc.compress(&ds, 1e-2).unwrap();
+        let cr = ds.pd_bytes() as f64 / archive.total_bytes() as f64;
+        assert!(cr > 10.0, "SZ CR only {cr:.1}");
+    }
+}

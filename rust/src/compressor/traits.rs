@@ -1,0 +1,22 @@
+//! Common compressor interface used by the benches and the CLI.
+
+use crate::data::Dataset;
+use crate::error::Result;
+
+/// An error-bounded dataset compressor.
+pub trait Compressor {
+    /// Name for reports ("GBATC", "GBA", "SZ-interp", ...).
+    fn name(&self) -> &str;
+
+    /// Compress to opaque bytes; `nrmse_target` is the paper's per-species
+    /// NRMSE accuracy knob.
+    fn compress_bytes(&self, ds: &Dataset, nrmse_target: f64) -> Result<Vec<u8>>;
+
+    /// Reconstruct mass fractions `[T, S, Y, X]` from compressed bytes.
+    fn decompress_mass(&self, bytes: &[u8]) -> Result<Vec<f32>>;
+
+    /// Bytes charged beyond the payload (e.g. model parameters).
+    fn extra_bytes(&self) -> usize {
+        0
+    }
+}

@@ -1,0 +1,160 @@
+//! Configuration: the artifact manifest (cross-language contract written by
+//! `aot.py`) and the runtime/compression config with profile presets.
+//! Formats are plain `key=value` lines — no serde in the offline image.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub species: usize,
+    pub block_t: usize,
+    pub block_y: usize,
+    pub block_x: usize,
+    pub latent: usize,
+    pub encoder_batch: usize,
+    pub tcn_points: usize,
+    pub encoder_params: usize,
+    pub decoder_params: usize,
+    pub tcn_params: usize,
+    pub train_profile: String,
+    pub extras: HashMap<String, String>,
+}
+
+fn parse_kv(text: &str) -> HashMap<String, String> {
+    let mut map = HashMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    map
+}
+
+fn req_usize(map: &HashMap<String, String>, key: &str) -> Result<usize> {
+    map.get(key)
+        .ok_or_else(|| Error::config(format!("manifest missing key `{key}`")))?
+        .parse()
+        .map_err(|e| Error::config(format!("manifest key `{key}`: {e}")))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let map = parse_kv(text);
+        Ok(Manifest {
+            species: req_usize(&map, "species")?,
+            block_t: req_usize(&map, "block_t")?,
+            block_y: req_usize(&map, "block_y")?,
+            block_x: req_usize(&map, "block_x")?,
+            latent: req_usize(&map, "latent")?,
+            encoder_batch: req_usize(&map, "encoder_batch")?,
+            tcn_points: req_usize(&map, "tcn_points")?,
+            encoder_params: req_usize(&map, "encoder_params")?,
+            decoder_params: req_usize(&map, "decoder_params")?,
+            tcn_params: req_usize(&map, "tcn_params")?,
+            train_profile: map.get("train_profile").cloned().unwrap_or_default(),
+            extras: map,
+        })
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::config(format!(
+                "cannot read manifest {}: {e} — run `make artifacts`",
+                path.as_ref().display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Bytes of model parameters the archive must account for (the paper
+    /// counts "network parameters" in the compressed output).  Decoder +
+    /// TCN, stored 8-bit quantized (see accounting module).
+    pub fn model_param_count(&self, with_tcn: bool) -> usize {
+        self.decoder_params + if with_tcn { self.tcn_params } else { 0 }
+    }
+}
+
+/// Top-level run configuration (CLI-facing).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Directory with AOT artifacts.
+    pub artifacts_dir: String,
+    /// Worker threads for CPU stages (0 = all cores).
+    pub threads: usize,
+    /// Per-stage channel capacity (backpressure bound).
+    pub queue_depth: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: "artifacts".to_string(),
+            threads: 0,
+            queue_depth: 4,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+species=58
+block_t=4
+block_y=5
+block_x=4
+latent=36
+encoder_batch=256
+tcn_points=8192
+encoder_params=110100
+decoder_params=111386
+tcn_params=243194
+train_profile=small
+seed=7
+";
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.species, 58);
+        assert_eq!((m.block_t, m.block_y, m.block_x), (4, 5, 4));
+        assert_eq!(m.latent, 36);
+        assert_eq!(m.encoder_batch, 256);
+        assert_eq!(m.extras.get("seed").unwrap(), "7");
+        assert_eq!(m.model_param_count(true), 111386 + 243194);
+        assert_eq!(m.model_param_count(false), 111386);
+    }
+
+    #[test]
+    fn missing_key_is_config_error() {
+        let r = Manifest::parse("species=58\n");
+        assert!(matches!(r, Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = Manifest::parse(&format!("# header\n\n{SAMPLE}")).unwrap();
+        assert_eq!(m.species, 58);
+    }
+}

@@ -1,0 +1,99 @@
+//! Block batcher: groups block ids into fixed-size batches matching the
+//! AOT executable's baked batch dimension, gathering + normalizing on the
+//! fly.  The last batch is short; the executor pads it.
+
+use crate::data::blocks::BlockGrid;
+
+/// Iterator over (first_block_id, n_in_batch) pairs.
+pub struct Batcher {
+    n_blocks: usize,
+    batch: usize,
+    next: usize,
+}
+
+impl Batcher {
+    pub fn new(n_blocks: usize, batch: usize) -> Self {
+        assert!(batch > 0);
+        Self {
+            n_blocks,
+            batch,
+            next: 0,
+        }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.n_blocks.div_ceil(self.batch)
+    }
+}
+
+impl Iterator for Batcher {
+    type Item = (usize, usize);
+    fn next(&mut self) -> Option<(usize, usize)> {
+        if self.next >= self.n_blocks {
+            return None;
+        }
+        let start = self.next;
+        let n = self.batch.min(self.n_blocks - start);
+        self.next += n;
+        Some((start, n))
+    }
+}
+
+/// Gather blocks `[start, start+n)` from normalized mass data into a
+/// contiguous `[n, S, kt, by, bx]` buffer.
+pub fn gather_batch(grid: &BlockGrid, norm_mass: &[f32], start: usize, n: usize) -> Vec<f32> {
+    let il = grid.instance_len();
+    let mut out = vec![0.0f32; n * il];
+    for (k, b) in (start..start + n).enumerate() {
+        grid.gather(norm_mass, b, &mut out[k * il..(k + 1) * il]);
+    }
+    out
+}
+
+/// Scatter a decoded `[n, S, kt, by, bx]` batch back into normalized mass.
+pub fn scatter_batch(
+    grid: &BlockGrid,
+    norm_mass: &mut [f32],
+    start: usize,
+    n: usize,
+    batch: &[f32],
+) {
+    let il = grid.instance_len();
+    debug_assert_eq!(batch.len(), n * il);
+    for (k, b) in (start..start + n).enumerate() {
+        grid.scatter(norm_mass, b, &batch[k * il..(k + 1) * il]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::BlockShape;
+    use crate::data::Dataset;
+    use crate::util::Prng;
+
+    #[test]
+    fn batches_cover_range() {
+        let b: Vec<_> = Batcher::new(10, 4).collect();
+        assert_eq!(b, vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(Batcher::new(10, 4).n_batches(), 3);
+        assert_eq!(Batcher::new(8, 4).n_batches(), 2);
+        assert_eq!(Batcher::new(0, 4).count(), 0);
+    }
+
+    #[test]
+    fn gather_scatter_batch_roundtrip() {
+        let mut ds = Dataset::new(4, 3, 10, 8);
+        let mut rng = Prng::new(9);
+        for v in ds.mass.iter_mut() {
+            *v = rng.next_f32();
+        }
+        let grid = BlockGrid::for_dataset(&ds, BlockShape::default()).unwrap();
+        let mut out = vec![0.0f32; ds.mass.len()];
+        for (start, n) in Batcher::new(grid.n_blocks(), 3) {
+            let batch = gather_batch(&grid, &ds.mass, start, n);
+            scatter_batch(&grid, &mut out, start, n, &batch);
+        }
+        assert_eq!(out, ds.mass);
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordination: batching of blocks toward the AOT executable's fixed
+//! batch shapes, a work-stealing parallel-for for CPU-bound stages
+//! (per-species guarantee passes, SZ fields), a bounded two-stage pipeline
+//! (CPU workers feeding the PJRT executor service), and progress counters.
+
+pub mod batcher;
+pub mod pipeline;
+pub mod progress;
+pub mod scheduler;
+
+pub use batcher::Batcher;
+pub use pipeline::Pipeline;
+pub use progress::Progress;
+pub use scheduler::par_for;

@@ -1,0 +1,160 @@
+//! Batch pipelines over the executor service.
+//!
+//! Encode: a producer thread gathers + normalizes blocks into batches
+//! (CPU) while the main loop keeps the PJRT executor busy — a bounded
+//! channel provides backpressure.  Decode: batches flow decoder -> point
+//! transform (CPU) -> TCN -> scatter, with the CPU transform overlapped
+//! against the next decoder execution.
+
+use std::sync::mpsc::sync_channel;
+use std::time::Instant;
+
+use crate::coordinator::batcher::{gather_batch, scatter_batch, Batcher};
+use crate::coordinator::progress::Progress;
+use crate::data::blocks::BlockGrid;
+use crate::error::{Error, Result};
+use crate::runtime::ExecHandle;
+
+/// Pipeline configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Pipeline {
+    /// Batches in flight between producer and executor.
+    pub queue_depth: usize,
+}
+
+impl Default for Pipeline {
+    fn default() -> Self {
+        Self { queue_depth: 4 }
+    }
+}
+
+impl Pipeline {
+    /// Encode every block of `norm_mass`; returns latents `[n_blocks * latent]`.
+    pub fn encode_all(
+        &self,
+        grid: &BlockGrid,
+        norm_mass: &[f32],
+        handle: &ExecHandle,
+        progress: &Progress,
+    ) -> Result<Vec<f32>> {
+        let spec = handle.spec();
+        let n_blocks = grid.n_blocks();
+        let latent = spec.latent;
+        let mut latents = vec![0.0f32; n_blocks * latent];
+
+        let (tx, rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.queue_depth);
+        let result: Result<()> = crossbeam_utils::thread::scope(|scope| {
+            // producer: gather + normalize (CPU)
+            scope.spawn(move |_| {
+                for (start, n) in Batcher::new(n_blocks, spec.batch) {
+                    let t = Instant::now();
+                    let batch = gather_batch(grid, norm_mass, start, n);
+                    progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                    if tx.send((start, n, batch)).is_err() {
+                        break; // consumer bailed
+                    }
+                }
+            });
+            // consumer: execute on the PJRT service
+            for (start, n, batch) in rx.iter() {
+                let t = Instant::now();
+                let out = handle.encode(batch, n)?;
+                progress.add(&progress.exec_ns, t.elapsed().as_nanos() as u64);
+                progress.add(&progress.exec_calls, 1);
+                progress.add(&progress.blocks_encoded, n as u64);
+                latents[start * latent..(start + n) * latent].copy_from_slice(&out);
+            }
+            Ok(())
+        })
+        .map_err(|_| Error::runtime("encode pipeline thread panicked"))?;
+        result?;
+        Ok(latents)
+    }
+
+    /// Decode all latents back to a normalized mass buffer (scattered), with
+    /// optional TCN correction.  Returns the reconstructed normalized mass.
+    pub fn decode_all(
+        &self,
+        grid: &BlockGrid,
+        latents: &[f32],
+        handle: &ExecHandle,
+        apply_tcn: bool,
+        progress: &Progress,
+    ) -> Result<Vec<f32>> {
+        let spec = handle.spec();
+        let n_blocks = grid.n_blocks();
+        let latent = spec.latent;
+        assert_eq!(latents.len(), n_blocks * latent);
+        let il = grid.instance_len();
+        let d = grid.shape.d();
+        let ns = grid.ns;
+        let mut norm_out = vec![0.0f32; grid.nt * ns * grid.ny * grid.nx];
+
+        // stage A (this thread): decoder executions
+        // stage B (worker): point transform + TCN + scatter
+        let (tx, rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.queue_depth);
+        let norm_ref = &mut norm_out;
+        let result: Result<()> = crossbeam_utils::thread::scope(|scope| {
+            let consumer = scope.spawn(move |_| -> Result<()> {
+                for (start, n, mut batch) in rx.iter() {
+                    if apply_tcn {
+                        let t = Instant::now();
+                        // instances [n, S, D] -> points [n*D, S]
+                        let mut pts = vec![0.0f32; n * d * ns];
+                        for k in 0..n {
+                            grid.to_points(
+                                &batch[k * il..(k + 1) * il],
+                                &mut pts[k * d * ns..(k + 1) * d * ns],
+                            );
+                        }
+                        progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                        // TCN in chunks of spec.points
+                        let total = n * d;
+                        let mut corrected = vec![0.0f32; total * ns];
+                        let mut off = 0;
+                        while off < total {
+                            let m = spec.points.min(total - off);
+                            let te = Instant::now();
+                            let out = handle
+                                .tcn(pts[off * ns..(off + m) * ns].to_vec(), m)?;
+                            progress.add(&progress.exec_ns, te.elapsed().as_nanos() as u64);
+                            progress.add(&progress.exec_calls, 1);
+                            corrected[off * ns..(off + m) * ns].copy_from_slice(&out);
+                            off += m;
+                        }
+                        let t = Instant::now();
+                        for k in 0..n {
+                            grid.from_points(
+                                &corrected[k * d * ns..(k + 1) * d * ns],
+                                &mut batch[k * il..(k + 1) * il],
+                            );
+                        }
+                        progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                    }
+                    let t = Instant::now();
+                    scatter_batch(grid, norm_ref, start, n, &batch);
+                    progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                    progress.add(&progress.blocks_decoded, n as u64);
+                }
+                Ok(())
+            });
+
+            for (start, n) in Batcher::new(n_blocks, spec.batch) {
+                let t = Instant::now();
+                let out = handle.decode(latents[start * latent..(start + n) * latent].to_vec(), n)?;
+                progress.add(&progress.exec_ns, t.elapsed().as_nanos() as u64);
+                progress.add(&progress.exec_calls, 1);
+                if tx.send((start, n, out)).is_err() {
+                    break;
+                }
+            }
+            drop(tx);
+            consumer
+                .join()
+                .map_err(|_| Error::runtime("decode consumer panicked"))?
+        })
+        .map_err(|_| Error::runtime("decode pipeline thread panicked"))?;
+        result?;
+        Ok(norm_out)
+    }
+}

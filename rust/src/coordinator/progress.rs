@@ -1,0 +1,71 @@
+//! Lightweight progress / metrics counters shared across pipeline stages.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Thread-safe counters for one compression/decompression run.
+#[derive(Debug)]
+pub struct Progress {
+    start: Instant,
+    pub blocks_encoded: AtomicU64,
+    pub blocks_decoded: AtomicU64,
+    pub species_guaranteed: AtomicU64,
+    pub exec_calls: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub cpu_ns: AtomicU64,
+}
+
+impl Default for Progress {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Progress {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            blocks_encoded: AtomicU64::new(0),
+            blocks_decoded: AtomicU64::new(0),
+            species_guaranteed: AtomicU64::new(0),
+            exec_calls: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+            cpu_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn add(&self, counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "elapsed {:.2}s | encoded {} decoded {} blocks | {} exec calls ({:.2}s) | cpu stages {:.2}s | species {} ",
+            self.elapsed_s(),
+            self.blocks_encoded.load(Ordering::Relaxed),
+            self.blocks_decoded.load(Ordering::Relaxed),
+            self.exec_calls.load(Ordering::Relaxed),
+            self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.cpu_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.species_guaranteed.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let p = Progress::new();
+        p.add(&p.blocks_encoded, 5);
+        p.add(&p.blocks_encoded, 3);
+        assert_eq!(p.blocks_encoded.load(Ordering::Relaxed), 8);
+        assert!(p.summary().contains("encoded 8"));
+    }
+}

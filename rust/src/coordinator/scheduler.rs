@@ -1,0 +1,83 @@
+//! Work-stealing parallel-for over an index range using scoped threads
+//! (no rayon in the offline image).  Tasks pull indices from a shared
+//! atomic counter, so uneven per-item cost (e.g. species with very
+//! different coefficient loads) balances automatically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every `i in 0..n` on up to `threads` workers.
+/// `f` must be `Sync` (called concurrently from many threads).
+pub fn par_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    crossbeam_utils::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|_| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    })
+    .expect("scoped thread panicked");
+}
+
+/// Parallel map collecting results in index order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    par_for(n, threads, |i| {
+        let v = f(i);
+        *slots[i].lock().unwrap() = Some(v);
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn visits_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        par_for(500, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let sum = AtomicU64::new(0);
+        par_for(10, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let v = par_map(100, 6, |i| i * i);
+        assert_eq!(v[7], 49);
+        assert_eq!(v.len(), 100);
+    }
+
+    #[test]
+    fn empty_range_ok() {
+        par_for(0, 4, |_| panic!("should not run"));
+        let v: Vec<usize> = par_map(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,281 @@
+//! Spatiotemporal block partitioner — the paper's GBA input layout.
+//!
+//! The field is cut into non-overlapping blocks of `kt` timesteps by
+//! `by x bx` grid points; every AE instance carries *all* S species of one
+//! block in `[S, kt, by, bx]` order (species = conv channels).  The
+//! guarantee post-processing re-views each instance as S per-species block
+//! vectors of length `D = kt*by*bx` (paper: D = 4*5*4 = 80).
+
+use crate::data::field::Dataset;
+use crate::error::{Error, Result};
+
+/// Block extents (paper default 4 x 5 x 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockShape {
+    pub kt: usize,
+    pub by: usize,
+    pub bx: usize,
+}
+
+impl Default for BlockShape {
+    fn default() -> Self {
+        Self { kt: 4, by: 5, bx: 4 }
+    }
+}
+
+impl BlockShape {
+    /// Per-species block vector length D.
+    pub fn d(&self) -> usize {
+        self.kt * self.by * self.bx
+    }
+}
+
+/// Partitioning of a `[T, S, Y, X]` dataset into blocks.
+#[derive(Clone, Debug)]
+pub struct BlockGrid {
+    pub shape: BlockShape,
+    pub nt: usize,
+    pub ns: usize,
+    pub ny: usize,
+    pub nx: usize,
+    pub tb: usize,
+    pub yb: usize,
+    pub xb: usize,
+}
+
+impl BlockGrid {
+    pub fn new(ds_dims: (usize, usize, usize, usize), shape: BlockShape) -> Result<Self> {
+        let (nt, ns, ny, nx) = ds_dims;
+        if nt % shape.kt != 0 || ny % shape.by != 0 || nx % shape.bx != 0 {
+            return Err(Error::shape(format!(
+                "dims {nt}x{ny}x{nx} not divisible by block {}x{}x{}",
+                shape.kt, shape.by, shape.bx
+            )));
+        }
+        Ok(Self {
+            shape,
+            nt,
+            ns,
+            ny,
+            nx,
+            tb: nt / shape.kt,
+            yb: ny / shape.by,
+            xb: nx / shape.bx,
+        })
+    }
+
+    pub fn for_dataset(ds: &Dataset, shape: BlockShape) -> Result<Self> {
+        Self::new((ds.nt, ds.ns, ds.ny, ds.nx), shape)
+    }
+
+    /// Total number of blocks (AE instances).
+    pub fn n_blocks(&self) -> usize {
+        self.tb * self.yb * self.xb
+    }
+
+    /// Instance length S * D.
+    pub fn instance_len(&self) -> usize {
+        self.ns * self.shape.d()
+    }
+
+    /// Block id -> (tb, yb, xb) coordinates.
+    #[inline]
+    pub fn coords(&self, b: usize) -> (usize, usize, usize) {
+        let per_frame = self.yb * self.xb;
+        (b / per_frame, (b % per_frame) / self.xb, b % self.xb)
+    }
+
+    /// Gather block `b` from `mass` (layout `[T,S,Y,X]`) into `out` in
+    /// `[S, kt, by, bx]` order.  `out.len() == instance_len()`.
+    pub fn gather(&self, mass: &[f32], b: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.instance_len());
+        let (bt, byy, bxx) = self.coords(b);
+        let (kt, by, bx) = (self.shape.kt, self.shape.by, self.shape.bx);
+        let (t0, y0, x0) = (bt * kt, byy * by, bxx * bx);
+        let mut o = 0;
+        for s in 0..self.ns {
+            for dt in 0..kt {
+                for dy in 0..by {
+                    let base = (((t0 + dt) * self.ns + s) * self.ny + (y0 + dy)) * self.nx + x0;
+                    out[o..o + bx].copy_from_slice(&mass[base..base + bx]);
+                    o += bx;
+                }
+            }
+        }
+    }
+
+    /// Scatter an instance (layout `[S, kt, by, bx]`) back into `mass`.
+    pub fn scatter(&self, mass: &mut [f32], b: usize, inst: &[f32]) {
+        debug_assert_eq!(inst.len(), self.instance_len());
+        let (bt, byy, bxx) = self.coords(b);
+        let (kt, by, bx) = (self.shape.kt, self.shape.by, self.shape.bx);
+        let (t0, y0, x0) = (bt * kt, byy * by, bxx * bx);
+        let mut o = 0;
+        for s in 0..self.ns {
+            for dt in 0..kt {
+                for dy in 0..by {
+                    let base = (((t0 + dt) * self.ns + s) * self.ny + (y0 + dy)) * self.nx + x0;
+                    mass[base..base + bx].copy_from_slice(&inst[o..o + bx]);
+                    o += bx;
+                }
+            }
+        }
+    }
+
+    /// View an instance as S per-species block vectors: returns slices of
+    /// length D (no copy; the layout is already species-major).
+    pub fn species_vectors<'a>(&self, inst: &'a [f32]) -> impl Iterator<Item = &'a [f32]> {
+        let d = self.shape.d();
+        inst.chunks_exact(d)
+    }
+
+    /// Gather the per-species block vector (length D) of block `b`,
+    /// species `s` straight from `[T,S,Y,X]` mass data.
+    pub fn gather_species(&self, mass: &[f32], b: usize, s: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.shape.d());
+        let (bt, byy, bxx) = self.coords(b);
+        let (kt, by, bx) = (self.shape.kt, self.shape.by, self.shape.bx);
+        let (t0, y0, x0) = (bt * kt, byy * by, bxx * bx);
+        let mut o = 0;
+        for dt in 0..kt {
+            for dy in 0..by {
+                let base = (((t0 + dt) * self.ns + s) * self.ny + (y0 + dy)) * self.nx + x0;
+                out[o..o + bx].copy_from_slice(&mass[base..base + bx]);
+                o += bx;
+            }
+        }
+    }
+
+    /// Scatter a per-species block vector back into `[T,S,Y,X]` mass data.
+    pub fn scatter_species(&self, mass: &mut [f32], b: usize, s: usize, vec: &[f32]) {
+        debug_assert_eq!(vec.len(), self.shape.d());
+        let (bt, byy, bxx) = self.coords(b);
+        let (kt, by, bx) = (self.shape.kt, self.shape.by, self.shape.bx);
+        let (t0, y0, x0) = (bt * kt, byy * by, bxx * bx);
+        let mut o = 0;
+        for dt in 0..kt {
+            for dy in 0..by {
+                let base = (((t0 + dt) * self.ns + s) * self.ny + (y0 + dy)) * self.nx + x0;
+                mass[base..base + bx].copy_from_slice(&vec[o..o + bx]);
+                o += bx;
+            }
+        }
+    }
+
+    /// Instance `[S, D]` -> point-major `[D, S]` (TCN input ordering).
+    pub fn to_points(&self, inst: &[f32], out: &mut [f32]) {
+        let d = self.shape.d();
+        debug_assert_eq!(inst.len(), self.ns * d);
+        debug_assert_eq!(out.len(), self.ns * d);
+        for s in 0..self.ns {
+            for p in 0..d {
+                out[p * self.ns + s] = inst[s * d + p];
+            }
+        }
+    }
+
+    /// Point-major `[D, S]` -> instance `[S, D]`.
+    pub fn from_points(&self, pts: &[f32], out: &mut [f32]) {
+        let d = self.shape.d();
+        for p in 0..d {
+            for s in 0..self.ns {
+                out[s * d + p] = pts[p * self.ns + s];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_ds(nt: usize, ns: usize, ny: usize, nx: usize) -> Dataset {
+        let mut ds = Dataset::new(nt, ns, ny, nx);
+        let mut rng = Prng::new(17);
+        for v in ds.mass.iter_mut() {
+            *v = rng.next_f32();
+        }
+        ds
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_covers_everything() {
+        let ds = random_ds(8, 3, 10, 8);
+        let grid = BlockGrid::for_dataset(&ds, BlockShape::default()).unwrap();
+        assert_eq!(grid.n_blocks(), 2 * 2 * 2);
+        let mut out = vec![0.0f32; ds.mass.len()];
+        let mut inst = vec![0.0f32; grid.instance_len()];
+        for b in 0..grid.n_blocks() {
+            grid.gather(&ds.mass, b, &mut inst);
+            grid.scatter(&mut out, b, &inst);
+        }
+        assert_eq!(out, ds.mass);
+    }
+
+    #[test]
+    fn gather_matches_direct_indexing() {
+        let ds = random_ds(4, 2, 5, 4);
+        let grid = BlockGrid::for_dataset(&ds, BlockShape::default()).unwrap();
+        let mut inst = vec![0.0f32; grid.instance_len()];
+        grid.gather(&ds.mass, 0, &mut inst);
+        // inst[s, dt, dy, dx] == ds[dt, s, dy, dx] for block 0
+        let sh = grid.shape;
+        for s in 0..2 {
+            for dt in 0..sh.kt {
+                for dy in 0..sh.by {
+                    for dx in 0..sh.bx {
+                        let i = ((s * sh.kt + dt) * sh.by + dy) * sh.bx + dx;
+                        assert_eq!(inst[i], ds.at(dt, s, dy, dx));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn points_roundtrip() {
+        let ds = random_ds(4, 5, 5, 4);
+        let grid = BlockGrid::for_dataset(&ds, BlockShape::default()).unwrap();
+        let mut inst = vec![0.0f32; grid.instance_len()];
+        grid.gather(&ds.mass, 0, &mut inst);
+        let mut pts = vec![0.0f32; inst.len()];
+        let mut back = vec![0.0f32; inst.len()];
+        grid.to_points(&inst, &mut pts);
+        grid.from_points(&pts, &mut back);
+        assert_eq!(inst, back);
+        // spot-check ordering: point 0 holds species 0..S at (t0,y0,x0)
+        assert_eq!(pts[3], inst[3 * grid.shape.d()]);
+    }
+
+    #[test]
+    fn species_gather_matches_instance_slice() {
+        let ds = random_ds(4, 3, 5, 8);
+        let grid = BlockGrid::for_dataset(&ds, BlockShape::default()).unwrap();
+        let d = grid.shape.d();
+        let mut inst = vec![0.0f32; grid.instance_len()];
+        let mut sv = vec![0.0f32; d];
+        for b in 0..grid.n_blocks() {
+            grid.gather(&ds.mass, b, &mut inst);
+            for s in 0..3 {
+                grid.gather_species(&ds.mass, b, s, &mut sv);
+                assert_eq!(&inst[s * d..(s + 1) * d], &sv[..]);
+            }
+        }
+        // scatter_species inverts gather_species
+        let mut out = vec![0.0f32; ds.mass.len()];
+        for b in 0..grid.n_blocks() {
+            for s in 0..3 {
+                grid.gather_species(&ds.mass, b, s, &mut sv);
+                grid.scatter_species(&mut out, b, s, &sv);
+            }
+        }
+        assert_eq!(out, ds.mass);
+    }
+
+    #[test]
+    fn indivisible_dims_rejected() {
+        let ds = random_ds(5, 2, 10, 8);
+        assert!(BlockGrid::for_dataset(&ds, BlockShape::default()).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! 4-D field container for multi-species CFD snapshots.
+//!
+//! Layout matches the python build path and the `SDF1` file format:
+//! `mass` is row-major `[T, S, Y, X]` (time, species, rows, cols) and
+//! `temp` is `[T, Y, X]`.
+
+use crate::error::{Error, Result};
+
+/// A `[T, Y, X]` scalar field (temperature, or one species' trajectory).
+#[derive(Clone, Debug)]
+pub struct Field3 {
+    pub nt: usize,
+    pub ny: usize,
+    pub nx: usize,
+    pub data: Vec<f32>,
+}
+
+impl Field3 {
+    pub fn zeros(nt: usize, ny: usize, nx: usize) -> Self {
+        Self {
+            nt,
+            ny,
+            nx,
+            data: vec![0.0; nt * ny * nx],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, t: usize, y: usize, x: usize) -> f32 {
+        self.data[(t * self.ny + y) * self.nx + x]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, t: usize, y: usize, x: usize) -> &mut f32 {
+        &mut self.data[(t * self.ny + y) * self.nx + x]
+    }
+
+    /// One time frame as a contiguous slice of length ny*nx.
+    pub fn frame(&self, t: usize) -> &[f32] {
+        let n = self.ny * self.nx;
+        &self.data[t * n..(t + 1) * n]
+    }
+}
+
+/// The full dataset: S species mass-fraction fields + temperature.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub nt: usize,
+    pub ns: usize,
+    pub ny: usize,
+    pub nx: usize,
+    /// Row-major `[T, S, Y, X]`.
+    pub mass: Vec<f32>,
+    /// Row-major `[T, Y, X]`.
+    pub temp: Vec<f32>,
+    /// Ambient pressure [Pa] (constant-volume HCCI window; single value).
+    pub pressure: f64,
+}
+
+impl Dataset {
+    pub fn new(nt: usize, ns: usize, ny: usize, nx: usize) -> Self {
+        Self {
+            nt,
+            ns,
+            ny,
+            nx,
+            mass: vec![0.0; nt * ns * ny * nx],
+            temp: vec![0.0; nt * ny * nx],
+            pressure: 40.0e5,
+        }
+    }
+
+    #[inline]
+    pub fn idx(&self, t: usize, s: usize, y: usize, x: usize) -> usize {
+        ((t * self.ns + s) * self.ny + y) * self.nx + x
+    }
+
+    #[inline]
+    pub fn at(&self, t: usize, s: usize, y: usize, x: usize) -> f32 {
+        self.mass[self.idx(t, s, y, x)]
+    }
+
+    #[inline]
+    pub fn temp_at(&self, t: usize, y: usize, x: usize) -> f32 {
+        self.temp[(t * self.ny + y) * self.nx + x]
+    }
+
+    /// Number of mass-fraction scalars.
+    pub fn len(&self) -> usize {
+        self.mass.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mass.is_empty()
+    }
+
+    /// Primary-data payload bytes (the paper's CR numerator): mass only.
+    pub fn pd_bytes(&self) -> usize {
+        self.mass.len() * 4
+    }
+
+    /// Contiguous `[Y, X]` frame of one species at one time.
+    pub fn species_frame(&self, t: usize, s: usize) -> &[f32] {
+        let n = self.ny * self.nx;
+        let off = (t * self.ns + s) * n;
+        &self.mass[off..off + n]
+    }
+
+    /// Gather one species' full `[T, Y, X]` trajectory (copy).
+    pub fn species_field(&self, s: usize) -> Field3 {
+        let mut f = Field3::zeros(self.nt, self.ny, self.nx);
+        let n = self.ny * self.nx;
+        for t in 0..self.nt {
+            let off = (t * self.ns + s) * n;
+            f.data[t * n..(t + 1) * n].copy_from_slice(&self.mass[off..off + n]);
+        }
+        f
+    }
+
+    /// Overwrite one species' trajectory from a `[T, Y, X]` field.
+    pub fn set_species_field(&mut self, s: usize, f: &Field3) -> Result<()> {
+        if f.nt != self.nt || f.ny != self.ny || f.nx != self.nx {
+            return Err(Error::shape(format!(
+                "species field {}x{}x{} != dataset {}x{}x{}",
+                f.nt, f.ny, f.nx, self.nt, self.ny, self.nx
+            )));
+        }
+        let n = self.ny * self.nx;
+        for t in 0..self.nt {
+            let off = (t * self.ns + s) * n;
+            self.mass[off..off + n].copy_from_slice(&f.data[t * n..(t + 1) * n]);
+        }
+        Ok(())
+    }
+
+    /// Per-species (min, max) over all space-time — the NRMSE normalizer and
+    /// the normalization the AE artifacts expect.
+    pub fn species_ranges(&self) -> Vec<(f32, f32)> {
+        let mut ranges = vec![(f32::INFINITY, f32::NEG_INFINITY); self.ns];
+        let n = self.ny * self.nx;
+        for t in 0..self.nt {
+            for s in 0..self.ns {
+                let off = (t * self.ns + s) * n;
+                let (lo, hi) = &mut ranges[s];
+                for &v in &self.mass[off..off + n] {
+                    if v < *lo {
+                        *lo = v;
+                    }
+                    if v > *hi {
+                        *hi = v;
+                    }
+                }
+            }
+        }
+        ranges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut ds = Dataset::new(2, 3, 4, 5);
+        let i = ds.idx(1, 2, 3, 4);
+        ds.mass[i] = 7.5;
+        assert_eq!(ds.at(1, 2, 3, 4), 7.5);
+        assert_eq!(ds.len(), 2 * 3 * 4 * 5);
+    }
+
+    #[test]
+    fn species_field_roundtrip() {
+        let mut ds = Dataset::new(3, 2, 4, 4);
+        for (i, v) in ds.mass.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let f = ds.species_field(1);
+        assert_eq!(f.at(2, 3, 3), ds.at(2, 1, 3, 3));
+        let mut ds2 = Dataset::new(3, 2, 4, 4);
+        ds2.set_species_field(1, &f).unwrap();
+        assert_eq!(ds2.at(2, 1, 3, 3), ds.at(2, 1, 3, 3));
+        assert_eq!(ds2.at(2, 0, 3, 3), 0.0);
+    }
+
+    #[test]
+    fn ranges_cover_extremes() {
+        let mut ds = Dataset::new(1, 2, 2, 2);
+        ds.mass = vec![1.0, 2.0, 3.0, 4.0, -1.0, 0.0, 5.0, 2.0];
+        let r = ds.species_ranges();
+        assert_eq!(r[0], (1.0, 4.0));
+        assert_eq!(r[1], (-1.0, 5.0));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut ds = Dataset::new(2, 2, 4, 4);
+        let f = Field3::zeros(2, 3, 4);
+        assert!(ds.set_species_field(0, &f).is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! `SDF1` dataset container IO — the cross-language format written by
+//! `python/compile/data.py::write_dataset` and read here at request time.
+//!
+//! Layout (little-endian): magic `SDF1`, dims `[T, S, Y, X]` as u32,
+//! temperature `[T, Y, X]` f32, mass `[T, S, Y, X]` f32.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::field::Dataset;
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"SDF1";
+
+/// Read a dataset; validates magic and exact payload length.
+pub fn read_dataset<P: AsRef<Path>>(path: P) -> Result<Dataset> {
+    let f = File::open(path.as_ref())?;
+    let mut r = BufReader::with_capacity(1 << 20, f);
+
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::format(format!(
+            "bad SDF1 magic {:?} in {}",
+            magic,
+            path.as_ref().display()
+        )));
+    }
+    let mut dims = [0u8; 16];
+    r.read_exact(&mut dims)?;
+    let d = |i: usize| u32::from_le_bytes(dims[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+    let (nt, ns, ny, nx) = (d(0), d(1), d(2), d(3));
+    if nt == 0 || ns == 0 || ny == 0 || nx == 0 || nt * ns * ny * nx > (1 << 33) {
+        return Err(Error::format(format!(
+            "implausible dims {nt}x{ns}x{ny}x{nx}"
+        )));
+    }
+
+    let mut ds = Dataset::new(nt, ns, ny, nx);
+    read_f32s(&mut r, &mut ds.temp)?;
+    read_f32s(&mut r, &mut ds.mass)?;
+    Ok(ds)
+}
+
+/// Write a dataset in `SDF1` format.
+pub fn write_dataset<P: AsRef<Path>>(path: P, ds: &Dataset) -> Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::with_capacity(1 << 20, f);
+    w.write_all(MAGIC)?;
+    for dim in [ds.nt, ds.ns, ds.ny, ds.nx] {
+        w.write_all(&(dim as u32).to_le_bytes())?;
+    }
+    write_f32s(&mut w, &ds.temp)?;
+    write_f32s(&mut w, &ds.mass)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, out: &mut [f32]) -> Result<()> {
+    // bulk read into the f32 buffer via a byte view (LE hosts: direct copy)
+    let mut bytes = vec![0u8; out.len() * 4];
+    r.read_exact(&mut bytes)?;
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    Ok(())
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // chunked to keep memory bounded on the medium/paper profiles
+    let mut buf = Vec::with_capacity(1 << 20);
+    for chunk in xs.chunks(1 << 18) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip() {
+        let mut ds = Dataset::new(2, 3, 4, 5);
+        let mut rng = Prng::new(1);
+        for v in ds.mass.iter_mut() {
+            *v = rng.next_f32();
+        }
+        for v in ds.temp.iter_mut() {
+            *v = 1000.0 + rng.next_f32();
+        }
+        let path = std::env::temp_dir().join("gbatc_io_test.bin");
+        write_dataset(&path, &ds).unwrap();
+        let ds2 = read_dataset(&path).unwrap();
+        assert_eq!(ds.mass, ds2.mass);
+        assert_eq!(ds.temp, ds2.temp);
+        assert_eq!((ds2.nt, ds2.ns, ds2.ny, ds2.nx), (2, 3, 4, 5));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = std::env::temp_dir().join("gbatc_io_bad.bin");
+        std::fs::write(&path, b"NOPE0000000000000000").unwrap();
+        assert!(read_dataset(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

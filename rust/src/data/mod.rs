@@ -1,0 +1,13 @@
+//! Dataset substrate: the 4-D field container ([T, S, Y, X] mass fractions +
+//! [T, Y, X] temperature), the `SDF1` on-disk format shared with the python
+//! build path, the paper's spatiotemporal block partitioner, and the
+//! synthetic S3D-HCCI-like generator (rust port of `python/compile/data.py`).
+
+pub mod blocks;
+pub mod field;
+pub mod io;
+pub mod synth;
+
+pub use blocks::{BlockGrid, BlockShape};
+pub use field::{Dataset, Field3};
+pub use synth::{generate, Profile};

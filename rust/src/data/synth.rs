@@ -1,0 +1,244 @@
+//! Synthetic S3D-HCCI-like dataset generator — rust port of
+//! `python/compile/data.py::generate` (same formulas & parameters; the PRNG
+//! differs, so fields are distribution-identical, not bit-identical — the
+//! AE artifacts are trained on the python output and generalize across
+//! seeds because the manifold is the same).  See DESIGN.md §3 for why this
+//! substitutes for the paper's S3D data.
+
+use crate::chem::species::{Role, NS, SPECIES};
+use crate::data::field::Dataset;
+use crate::util::Prng;
+
+/// Dataset size presets (mirrors python `PROFILES`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    Tiny,
+    Small,
+    Medium,
+    Paper,
+}
+
+impl Profile {
+    pub fn dims(self) -> (usize, usize, usize) {
+        match self {
+            Profile::Tiny => (8, 40, 40),
+            Profile::Small => (16, 80, 80),
+            Profile::Medium => (24, 320, 320),
+            Profile::Paper => (48, 640, 640),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "tiny" => Some(Profile::Tiny),
+            "small" => Some(Profile::Small),
+            "medium" => Some(Profile::Medium),
+            "paper" => Some(Profile::Paper),
+            _ => None,
+        }
+    }
+}
+
+const N_MODES: usize = 12;
+
+/// One advected Fourier-mode bundle (the GRF-like inhomogeneity field).
+struct Modes {
+    kx: [f32; N_MODES],
+    ky: [f32; N_MODES],
+    ph: [f32; N_MODES],
+    amp: [f32; N_MODES],
+    ux: [f32; N_MODES],
+    uy: [f32; N_MODES],
+}
+
+impl Modes {
+    fn random(rng: &mut Prng) -> Self {
+        let mut m = Modes {
+            kx: [0.0; N_MODES],
+            ky: [0.0; N_MODES],
+            ph: [0.0; N_MODES],
+            amp: [0.0; N_MODES],
+            ux: [0.0; N_MODES],
+            uy: [0.0; N_MODES],
+        };
+        let mut asum = 0.0f32;
+        for i in 0..N_MODES {
+            m.kx[i] = rng.range_u64(1, 9) as f32;
+            m.ky[i] = rng.range_u64(1, 9) as f32;
+            m.ph[i] = rng.uniform(0.0, std::f64::consts::TAU) as f32;
+            m.amp[i] =
+                (rng.uniform(0.4, 1.0) as f32) / (m.kx[i] * m.kx[i] + m.ky[i] * m.ky[i]).sqrt();
+            m.ux[i] = rng.uniform(-0.15, 0.15) as f32;
+            m.uy[i] = rng.uniform(-0.15, 0.15) as f32;
+            asum += m.amp[i];
+        }
+        for i in 0..N_MODES {
+            m.amp[i] /= asum;
+        }
+        m
+    }
+
+    /// Evaluate the advected field at (gx, gy, t).
+    #[inline]
+    fn eval(&self, gx: f32, gy: f32, t: f32) -> f32 {
+        let mut f = 0.0f32;
+        for i in 0..N_MODES {
+            f += self.amp[i]
+                * (std::f32::consts::TAU
+                    * (self.kx[i] * (gx - self.ux[i] * t) + self.ky[i] * (gy - self.uy[i] * t))
+                    + self.ph[i])
+                    .sin();
+        }
+        f
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Generate a synthetic HCCI-like dataset (mass fractions + temperature).
+pub fn generate(profile: Profile, seed: u64) -> Dataset {
+    let (nt, ny, nx) = profile.dims();
+    let mut ds = Dataset::new(nt, NS, ny, nx);
+    let mut rng = Prng::new(seed);
+    let m1 = Modes::random(&mut rng);
+    let m2 = Modes::random(&mut rng);
+    let m3 = Modes::random(&mut rng);
+
+    let npix = ny * nx;
+    let mut theta = vec![0.0f32; npix];
+    let mut eps1 = vec![0.0f32; npix];
+    let mut eps2 = vec![0.0f32; npix];
+
+    for it in 0..nt {
+        let t = if nt > 1 {
+            it as f32 / (nt - 1) as f32
+        } else {
+            0.0
+        };
+        for y in 0..ny {
+            let gy = y as f32 / ny as f32;
+            for x in 0..nx {
+                let gx = x as f32 / nx as f32;
+                let p = y * nx + x;
+                theta[p] = m1.eval(gx, gy, t);
+                eps1[p] = m2.eval(gx, gy, t);
+                eps2[p] = m3.eval(gx, gy, t);
+            }
+        }
+
+        let tbase = 1050.0 + 120.0 * t;
+        for p in 0..npix {
+            let th = theta[p];
+            let d1 = 0.18 - 0.22 * th;
+            let d2 = 0.55 - 0.35 * th;
+            let c1 = sigmoid((t - d1) / 0.035);
+            let c2 = sigmoid((t - d2) / 0.045);
+            let temp = tbase + 55.0 * th + 140.0 * c1 + 950.0 * c2;
+            ds.temp[it * npix + p] = temp;
+
+            let c = 0.25 * c1 + 0.75 * c2;
+            let tn = (temp - 1050.0) / 1200.0;
+
+            for (k, sp) in SPECIES.iter().enumerate() {
+                let f = match sp.role {
+                    Role::Fuel => (1.0 - c1) * (1.0 - 0.92 * c2),
+                    Role::Oxidizer => 1.0 - 0.55 * c2 - 0.05 * c1,
+                    Role::Inert => 1.0 + 0.0008 * eps1[p],
+                    Role::Product => {
+                        let g = sigmoid((c - sp.center) / (0.25 * sp.width + 0.05));
+                        g * (1.0 + 0.05 * tn)
+                    }
+                    Role::Co => {
+                        let b = (-((c - sp.center) * (c - sp.center))
+                            / (2.0 * sp.width * sp.width))
+                            .exp();
+                        b * (0.25 + 0.75 * c2) + 0.15 * c2
+                    }
+                    Role::LowT => {
+                        let a = 0.25 * c1 + 0.02 - sp.center;
+                        (-(a * a) / (2.0 * sp.width * sp.width)).exp()
+                            * c1
+                            * (1.0 - c2)
+                            * (1.0 - c2)
+                    }
+                    Role::Intermediate | Role::Radical => {
+                        let mut b = (-((c - sp.center) * (c - sp.center))
+                            / (2.0 * sp.width * sp.width))
+                            .exp();
+                        if sp.role == Role::Radical {
+                            b *= (2.2 * (tn - 0.5)).exp();
+                        }
+                        b
+                    }
+                };
+                let noise =
+                    1.0 + 0.004 * eps1[p] + 0.0024 * eps2[p] * (3.1 * k as f32 + 0.7).sin();
+                let v = (sp.magnitude * f * noise).max(0.0);
+                ds.mass[((it * NS + k) * ny) * nx + p] = v;
+            }
+        }
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chem::species::index_of;
+
+    #[test]
+    fn tiny_profile_shape_and_determinism() {
+        let a = generate(Profile::Tiny, 7);
+        let b = generate(Profile::Tiny, 7);
+        assert_eq!((a.nt, a.ns, a.ny, a.nx), (8, 58, 40, 40));
+        assert_eq!(a.mass, b.mass);
+        let c = generate(Profile::Tiny, 8);
+        assert_ne!(a.mass, c.mass);
+    }
+
+    #[test]
+    fn physical_plausibility() {
+        let ds = generate(Profile::Tiny, 7);
+        assert!(ds.mass.iter().all(|v| *v >= 0.0 && v.is_finite()));
+        assert!(ds.temp.iter().all(|v| *v > 900.0 && *v < 3000.0));
+        // fuel decays in time on average; products grow
+        let npix = ds.ny * ds.nx;
+        let mean = |t: usize, s: usize| -> f64 {
+            ds.species_frame(t, s).iter().map(|v| *v as f64).sum::<f64>() / npix as f64
+        };
+        let fuel = index_of("nC7H16").unwrap();
+        let h2o = index_of("H2O").unwrap();
+        assert!(mean(ds.nt - 1, fuel) < mean(0, fuel));
+        assert!(mean(ds.nt - 1, h2o) > mean(0, h2o));
+    }
+
+    #[test]
+    fn species_span_decades() {
+        let ds = generate(Profile::Tiny, 7);
+        let ranges = ds.species_ranges();
+        let maxmax = ranges.iter().map(|r| r.1).fold(0.0f32, f32::max);
+        let minmax = ranges.iter().map(|r| r.1).fold(f32::INFINITY, f32::min);
+        assert!(maxmax > 0.5); // N2
+        assert!(minmax < 1e-6); // NNH-scale radicals
+    }
+
+    #[test]
+    fn spatial_correlation_present() {
+        // neighboring pixels should be far more similar than random pairs
+        let ds = generate(Profile::Small, 7);
+        let f = ds.species_frame(8, 5); // CO mid-ignition
+        let mut rng = Prng::new(3);
+        let (mut dn, mut dr, n) = (0.0f64, 0.0f64, 4000);
+        for _ in 0..n {
+            let y = rng.index(ds.ny - 1);
+            let x = rng.index(ds.nx - 1);
+            dn += (f[y * ds.nx + x] - f[y * ds.nx + x + 1]).abs() as f64;
+            let (y2, x2) = (rng.index(ds.ny), rng.index(ds.nx));
+            dr += (f[y * ds.nx + x] - f[y2 * ds.nx + x2]).abs() as f64;
+        }
+        assert!(dn < 0.65 * dr, "neighbor diff {dn} vs random diff {dr}");
+    }
+}

@@ -1,0 +1,422 @@
+//! Canonical Huffman coder.
+//!
+//! `Huffman` codes a dense alphabet `0..n` from symbol counts; codes are
+//! canonical so only the code *lengths* need to be serialized.  `IntCodec`
+//! wraps it for arbitrary `i64` symbol streams (quantized latents, PCA
+//! coefficients, SZ quantization bins): it builds the dictionary, encodes
+//! it (zigzag varints + lengths), and decodes without external state.
+
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+use crate::entropy::stream::{read_varint, write_varint, zigzag_decode, zigzag_encode};
+use crate::error::{Error, Result};
+use crate::util::{BitReader, BitWriter};
+
+/// Maximum code length we allow (bit-writer limit is 57).
+const MAX_LEN: u32 = 48;
+
+/// Canonical Huffman code over a dense alphabet.
+#[derive(Clone, Debug)]
+pub struct Huffman {
+    /// Code length per symbol (0 = symbol absent).
+    pub lens: Vec<u32>,
+    /// Canonical code per symbol (MSB-first).
+    pub codes: Vec<u64>,
+    // canonical decode tables, indexed by length l in 1..=max_len
+    count: Vec<u64>,       // #codes of length l
+    first_code: Vec<u64>,  // canonical first code of length l
+    first_index: Vec<usize>, // index into sorted_symbols of first len-l symbol
+    sorted_symbols: Vec<u32>,
+    max_len: u32,
+}
+
+impl Huffman {
+    /// Build from symbol counts (length = alphabet size, counts may be 0).
+    pub fn from_counts(counts: &[u64]) -> Result<Huffman> {
+        let n = counts.len();
+        if n == 0 {
+            return Err(Error::codec("huffman: empty alphabet"));
+        }
+        let mut lens = vec![0u32; n];
+        let present: Vec<usize> = (0..n).filter(|&i| counts[i] > 0).collect();
+        match present.len() {
+            0 => return Err(Error::codec("huffman: all counts zero")),
+            1 => lens[present[0]] = 1,
+            _ => {
+                build_lengths(counts, &mut lens)?;
+                if lens.iter().any(|&l| l > MAX_LEN) {
+                    // Flatten the distribution to bound depth, rebuild.
+                    let total: u64 = counts.iter().sum();
+                    let floor = (total >> 40).max(1);
+                    let clamped: Vec<u64> = counts
+                        .iter()
+                        .map(|&c| if c > 0 { c.max(floor) } else { 0 })
+                        .collect();
+                    lens.iter_mut().for_each(|l| *l = 0);
+                    build_lengths(&clamped, &mut lens)?;
+                    if lens.iter().any(|&l| l > MAX_LEN) {
+                        return Err(Error::codec("huffman: depth overflow"));
+                    }
+                }
+            }
+        }
+        Self::from_lens(lens)
+    }
+
+    /// Reconstruct canonical codes from lengths alone (decoder path).
+    pub fn from_lens(lens: Vec<u32>) -> Result<Huffman> {
+        let max_len = lens.iter().cloned().max().unwrap_or(0);
+        if max_len == 0 {
+            return Err(Error::codec("huffman: no symbols"));
+        }
+        if max_len > MAX_LEN {
+            return Err(Error::codec("huffman: length overflow"));
+        }
+        // canonical ordering: by (length, symbol)
+        let mut sorted: Vec<u32> =
+            (0..lens.len() as u32).filter(|&s| lens[s as usize] > 0).collect();
+        sorted.sort_by_key(|&s| (lens[s as usize], s));
+
+        let mut count = vec![0u64; (max_len + 1) as usize];
+        for &s in &sorted {
+            count[lens[s as usize] as usize] += 1;
+        }
+        // Kraft check: sum count[l] * 2^(max_len - l) must fit the code space
+        let mut kraft: u128 = 0;
+        for l in 1..=max_len {
+            kraft += (count[l as usize] as u128) << (max_len - l);
+        }
+        if kraft > 1u128 << max_len {
+            return Err(Error::codec("huffman: invalid lengths (kraft > 1)"));
+        }
+
+        let mut first_code = vec![0u64; (max_len + 1) as usize];
+        let mut first_index = vec![0usize; (max_len + 1) as usize];
+        let mut code = 0u64;
+        let mut idx = 0usize;
+        for l in 1..=max_len as usize {
+            first_code[l] = code;
+            first_index[l] = idx;
+            code = (code + count[l]) << 1;
+            idx += count[l] as usize;
+        }
+
+        let mut codes = vec![0u64; lens.len()];
+        let mut next = first_code.clone();
+        for &s in &sorted {
+            let l = lens[s as usize] as usize;
+            codes[s as usize] = next[l];
+            next[l] += 1;
+        }
+        Ok(Huffman {
+            lens,
+            codes,
+            count,
+            first_code,
+            first_index,
+            sorted_symbols: sorted,
+            max_len,
+        })
+    }
+
+    /// Encode one symbol (MSB-first canonical code).
+    #[inline]
+    pub fn encode_symbol(&self, w: &mut BitWriter, sym: u32) {
+        let l = self.lens[sym as usize];
+        debug_assert!(l > 0, "encoding absent symbol {sym}");
+        let code = self.codes[sym as usize];
+        // emit MSB-first so canonical decode works
+        for i in (0..l).rev() {
+            w.write_bit((code >> i) & 1 == 1);
+        }
+    }
+
+    /// Decode one symbol (canonical table walk, O(code length)).
+    #[inline]
+    pub fn decode_symbol(&self, r: &mut BitReader) -> Result<u32> {
+        let mut code = 0u64;
+        let mut l = 0usize;
+        loop {
+            let bit = r
+                .read_bit()
+                .ok_or_else(|| Error::codec("huffman: EOF mid-symbol"))?;
+            code = (code << 1) | bit as u64;
+            l += 1;
+            if l > self.max_len as usize {
+                return Err(Error::codec("huffman: bad code"));
+            }
+            let c = self.count[l];
+            if c > 0 {
+                let fc = self.first_code[l];
+                if code >= fc && code < fc + c {
+                    return Ok(self.sorted_symbols[self.first_index[l] + (code - fc) as usize]);
+                }
+            }
+        }
+    }
+
+    /// Mean code length in bits under the given counts (for diagnostics).
+    pub fn mean_bits(&self, counts: &[u64]) -> f64 {
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .map(|(s, &c)| c as f64 * self.lens[s] as f64)
+            .sum::<f64>()
+            / total as f64
+    }
+}
+
+/// Heap-based Huffman code-length computation.
+fn build_lengths(counts: &[u64], lens: &mut [u32]) -> Result<()> {
+    #[derive(PartialEq, Eq)]
+    struct Node {
+        weight: u64,
+        id: usize,
+    }
+    impl Ord for Node {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            other
+                .weight
+                .cmp(&self.weight)
+                .then(other.id.cmp(&self.id)) // min-heap, deterministic
+        }
+    }
+    impl PartialOrd for Node {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let present: Vec<usize> = (0..counts.len()).filter(|&i| counts[i] > 0).collect();
+    let mut parent: Vec<usize> = vec![usize::MAX; present.len()];
+    let mut heap = BinaryHeap::new();
+    for (leaf_id, &sym) in present.iter().enumerate() {
+        heap.push(Node {
+            weight: counts[sym],
+            id: leaf_id,
+        });
+    }
+    // internal nodes get ids >= present.len()
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        let id = parent.len();
+        parent.push(usize::MAX);
+        parent[a.id] = id;
+        parent[b.id] = id;
+        heap.push(Node {
+            weight: a.weight.saturating_add(b.weight),
+            id,
+        });
+    }
+    for (leaf_id, &sym) in present.iter().enumerate() {
+        let mut l = 0u32;
+        let mut p = parent[leaf_id];
+        while p != usize::MAX {
+            l += 1;
+            p = parent[p];
+        }
+        lens[sym] = l.max(1);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// IntCodec: self-describing i64 stream codec
+// ---------------------------------------------------------------------------
+
+/// Self-contained codec for `i64` symbol streams.  The output embeds the
+/// dictionary: `[n_alphabet][zigzag-varint symbols][varint lens][n_values]
+/// [bitstream]`.
+pub struct IntCodec;
+
+impl IntCodec {
+    pub fn encode(values: &[i64]) -> Result<Vec<u8>> {
+        let mut alphabet: Vec<i64> = Vec::new();
+        let mut counts_map: HashMap<i64, u64> = HashMap::new();
+        for &v in values {
+            *counts_map.entry(v).or_insert(0) += 1;
+        }
+        alphabet.extend(counts_map.keys());
+        alphabet.sort_unstable();
+        let index: HashMap<i64, u32> = alphabet
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        let counts: Vec<u64> = alphabet.iter().map(|v| counts_map[v]).collect();
+
+        let mut out = Vec::new();
+        write_varint(&mut out, alphabet.len() as u64);
+        // delta-coded sorted alphabet for compactness
+        let mut prev = 0i64;
+        for &v in &alphabet {
+            write_varint(&mut out, zigzag_encode(v.wrapping_sub(prev)));
+            prev = v;
+        }
+        write_varint(&mut out, values.len() as u64);
+        if values.is_empty() {
+            return Ok(out);
+        }
+        if alphabet.len() == 1 {
+            return Ok(out); // stream fully determined by the dictionary
+        }
+        let huff = Huffman::from_counts(&counts)?;
+        for &l in &huff.lens {
+            write_varint(&mut out, l as u64);
+        }
+        let mut w = BitWriter::new();
+        for &v in values {
+            huff.encode_symbol(&mut w, index[&v]);
+        }
+        let bits = w.finish();
+        write_varint(&mut out, bits.len() as u64);
+        out.extend_from_slice(&bits);
+        Ok(out)
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Vec<i64>> {
+        let mut pos = 0;
+        let n_alpha = read_varint(buf, &mut pos)? as usize;
+        let mut alphabet = Vec::with_capacity(n_alpha);
+        let mut prev = 0i64;
+        for _ in 0..n_alpha {
+            prev = prev.wrapping_add(zigzag_decode(read_varint(buf, &mut pos)?));
+            alphabet.push(prev);
+        }
+        let n_values = read_varint(buf, &mut pos)? as usize;
+        if n_values == 0 {
+            return Ok(Vec::new());
+        }
+        if n_alpha == 0 {
+            return Err(Error::codec("intcodec: values but empty alphabet"));
+        }
+        if n_alpha == 1 {
+            return Ok(vec![alphabet[0]; n_values]);
+        }
+        let mut lens = Vec::with_capacity(n_alpha);
+        for _ in 0..n_alpha {
+            lens.push(read_varint(buf, &mut pos)? as u32);
+        }
+        let huff = Huffman::from_lens(lens)?;
+        let nbits = read_varint(buf, &mut pos)? as usize;
+        let bits = buf
+            .get(pos..pos + nbits)
+            .ok_or_else(|| Error::codec("intcodec: truncated bitstream"))?;
+        let mut r = BitReader::new(bits);
+        let mut out = Vec::with_capacity(n_values);
+        for _ in 0..n_values {
+            out.push(alphabet[huff.decode_symbol(&mut r)? as usize]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Arbitrary};
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let vals = vec![0i64, 0, 0, 1, -1, 2, 0, 0, 5, 0];
+        let enc = IntCodec::encode(&vals).unwrap();
+        assert_eq!(IntCodec::decode(&enc).unwrap(), vals);
+    }
+
+    #[test]
+    fn roundtrip_single_symbol() {
+        let vals = vec![42i64; 1000];
+        let enc = IntCodec::encode(&vals).unwrap();
+        assert!(enc.len() < 32, "degenerate stream should be tiny: {}", enc.len());
+        assert_eq!(IntCodec::decode(&enc).unwrap(), vals);
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        let enc = IntCodec::encode(&[]).unwrap();
+        assert_eq!(IntCodec::decode(&enc).unwrap(), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn skewed_distribution_compresses() {
+        // geometric-ish: mostly zeros — typical quantized residuals
+        let mut rng = Prng::new(3);
+        let vals: Vec<i64> = (0..50_000)
+            .map(|_| {
+                let u = rng.next_f64();
+                if u < 0.85 {
+                    0
+                } else if u < 0.95 {
+                    (rng.index(3) as i64) - 1
+                } else {
+                    (rng.index(64) as i64) - 32
+                }
+            })
+            .collect();
+        let enc = IntCodec::encode(&vals).unwrap();
+        assert_eq!(IntCodec::decode(&enc).unwrap(), vals);
+        // entropy ~< 1.2 bits/val here; assert well under 2 bytes/val
+        assert!(
+            enc.len() < vals.len() / 4,
+            "poor compression: {} bytes for {} values",
+            enc.len(),
+            vals.len()
+        );
+    }
+
+    #[test]
+    fn extreme_values() {
+        let vals = vec![i64::MAX, i64::MIN, 0, i64::MAX, -1, 1];
+        let enc = IntCodec::encode(&vals).unwrap();
+        assert_eq!(IntCodec::decode(&enc).unwrap(), vals);
+    }
+
+    #[derive(Clone, Debug)]
+    struct Stream(Vec<i64>);
+    impl Arbitrary for Stream {
+        fn generate(rng: &mut Prng) -> Self {
+            let n = rng.index(500);
+            let spread = 1 + rng.index(1000) as i64;
+            Stream(
+                (0..n)
+                    .map(|_| (rng.normal() * spread as f64) as i64)
+                    .collect(),
+            )
+        }
+        fn shrink(&self) -> Vec<Self> {
+            if self.0.len() > 1 {
+                vec![
+                    Stream(self.0[..self.0.len() / 2].to_vec()),
+                    Stream(self.0[self.0.len() / 2..].to_vec()),
+                ]
+            } else {
+                vec![]
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        check::<Stream, _>(7, 200, |s| {
+            let enc = IntCodec::encode(&s.0).unwrap();
+            IntCodec::decode(&enc).unwrap() == s.0
+        });
+    }
+
+    #[test]
+    fn truncated_stream_is_error_not_panic() {
+        let vals: Vec<i64> = (0..100).map(|i| i % 7).collect();
+        let enc = IntCodec::encode(&vals).unwrap();
+        for cut in [1usize, enc.len() / 2, enc.len() - 1] {
+            let r = IntCodec::decode(&enc[..cut]);
+            assert!(r.is_err() || r.unwrap() != vals);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Entropy coding: canonical Huffman (the paper's coder for quantized AE
+//! latents and PCA coefficients) plus varint/zigzag stream helpers and a
+//! self-contained integer codec (`IntCodec`) that serializes its own
+//! dictionary — "all the dictionaries for entropy coding" are counted in
+//! the compressed-output accounting, as in the paper.
+
+pub mod huffman;
+pub mod stream;
+
+pub use huffman::{Huffman, IntCodec};
+pub use stream::{read_varint, write_varint, zigzag_decode, zigzag_encode};

@@ -1,0 +1,51 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every GBATC subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("format error: {0}")]
+    Format(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    #[error("guarantee unsatisfiable: {0}")]
+    Guarantee(String),
+
+    #[error("runtime error: {0}")]
+    Runtime(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn format(msg: impl Into<String>) -> Self {
+        Error::Format(msg.into())
+    }
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    pub fn codec(msg: impl Into<String>) -> Self {
+        Error::Codec(msg.into())
+    }
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}

@@ -1,0 +1,115 @@
+//! Stored form of a per-species PCA basis.
+//!
+//! The paper stores an 80x80 basis per species.  We truncate storage to the
+//! highest basis index any block actually selected (unused trailing columns
+//! cannot affect reconstruction — eigenvalue ordering makes early columns
+//! do nearly all the work), which is a pure storage optimization with an
+//! ablation toggle (`store_full`) in the benches.
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Column-major truncated orthonormal basis (f32 storage).
+#[derive(Clone, Debug)]
+pub struct SpeciesBasis {
+    /// Block-vector dimension D.
+    pub d: usize,
+    /// Stored columns (<= D).
+    pub rank: usize,
+    /// Column-major: col(j) = data[j*d .. (j+1)*d].
+    pub data: Vec<f32>,
+}
+
+impl SpeciesBasis {
+    /// Build from a row-major D x D f64 basis, keeping the first `rank`
+    /// columns rounded to f32 — the *exact* values the decompressor uses.
+    pub fn from_mat(basis: &crate::linalg::Mat, rank: usize) -> SpeciesBasis {
+        let d = basis.rows;
+        let rank = rank.min(basis.cols);
+        let mut data = vec![0.0f32; d * rank];
+        for j in 0..rank {
+            for i in 0..d {
+                data[j * d + i] = basis[(i, j)] as f32;
+            }
+        }
+        SpeciesBasis { d, rank, data }
+    }
+
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        &self.data[j * self.d..(j + 1) * self.d]
+    }
+
+    /// out += col(j) * c
+    #[inline]
+    pub fn axpy_col(&self, j: usize, c: f32, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        for (o, &u) in out.iter_mut().zip(self.col(j)) {
+            *o += c * u;
+        }
+    }
+
+    /// Storage bytes (counted toward the compression ratio).
+    pub fn payload_bytes(&self) -> usize {
+        16 + self.data.len() * 4
+    }
+
+    pub fn serialize(&self, w: &mut ByteWriter) {
+        w.u64(self.d as u64);
+        w.u64(self.rank as u64);
+        w.f32s(&self.data);
+    }
+
+    pub fn deserialize(r: &mut ByteReader) -> Result<SpeciesBasis> {
+        let d = r.u64()? as usize;
+        let rank = r.u64()? as usize;
+        if d == 0 || rank > d || d > 1 << 20 {
+            return Err(Error::format(format!("bad basis dims d={d} rank={rank}")));
+        }
+        let data = r.f32s(d * rank)?;
+        Ok(SpeciesBasis { d, rank, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn from_mat_truncates_columns() {
+        let mut m = Mat::zeros(4, 4);
+        for i in 0..4 {
+            for j in 0..4 {
+                m[(i, j)] = (i * 10 + j) as f64;
+            }
+        }
+        let b = SpeciesBasis::from_mat(&m, 2);
+        assert_eq!(b.rank, 2);
+        assert_eq!(b.col(1), &[1.0, 11.0, 21.0, 31.0]);
+    }
+
+    #[test]
+    fn serialize_roundtrip() {
+        let mut m = Mat::identity(6);
+        m[(0, 1)] = 0.5;
+        let b = SpeciesBasis::from_mat(&m, 3);
+        let mut w = ByteWriter::new();
+        b.serialize(&mut w);
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), b.payload_bytes());
+        let mut r = ByteReader::new(&bytes);
+        let b2 = SpeciesBasis::deserialize(&mut r).unwrap();
+        assert_eq!(b.data, b2.data);
+        assert_eq!((b.d, b.rank), (b2.d, b2.rank));
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let m = Mat::identity(3);
+        let b = SpeciesBasis::from_mat(&m, 3);
+        let mut out = vec![1.0f32; 3];
+        b.axpy_col(1, 2.0, &mut out);
+        assert_eq!(out, vec![1.0, 3.0, 1.0]);
+    }
+}

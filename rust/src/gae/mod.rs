@@ -1,0 +1,9 @@
+//! Guaranteed-autoencoder post-processing (paper §II-A/B, Algorithm 1):
+//! PCA on per-species residual blocks, per-block coefficient selection
+//! until the ℓ2 error bound holds, and the storage-side bookkeeping.
+
+pub mod basis;
+pub mod guarantee;
+
+pub use basis::SpeciesBasis;
+pub use guarantee::{guarantee_species, GuaranteeParams, GuaranteeResult};

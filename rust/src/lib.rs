@@ -1,0 +1,37 @@
+//! # GBATC — Guaranteed Block Autoencoder with Tensor Correction
+//!
+//! A production reproduction of *"Machine Learning Techniques for Data
+//! Reduction of CFD Applications"* (Lee et al., 2024): error-bounded learned
+//! compression of multi-species CFD fields.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! * **L1/L2 (build time, python)** — a Pallas fused-matmul kernel and a JAX
+//!   3D-conv autoencoder + tensor-correction network, trained once and
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **L3 (this crate)** — the request-path coordinator: block partitioning,
+//!   PJRT execution of the AOT artifacts, latent/coefficient entropy coding,
+//!   the PCA residual guarantee (Algorithm 1), the SZ baseline, the QoI
+//!   chemistry substrate, metrics, and the archive container.
+//!
+//! Python never runs on the compression/decompression path; after
+//! `make artifacts` the `gbatc` binary is self-contained.
+
+pub mod archive;
+pub mod chem;
+pub mod cli;
+pub mod codec;
+pub mod compressor;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod entropy;
+pub mod error;
+pub mod gae;
+pub mod linalg;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod sz;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,156 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Robust and exact enough for the 80x80 residual covariance matrices of
+//! Algorithm 1 (converges quadratically; we sweep until the off-diagonal
+//! norm is negligible relative to the diagonal).
+
+use crate::linalg::Mat;
+
+/// Eigendecomposition A = V diag(w) Vᵀ of a symmetric matrix.
+/// Returns eigenvalues descending with matching eigenvector *columns* in V.
+pub fn symmetric_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "symmetric_eig needs a square matrix");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Mat::identity(n);
+
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        let diag: f64 = (0..n).map(|i| m[(i, i)] * m[(i, i)]).sum();
+        if off <= 1e-26 * diag.max(1e-300) {
+            break;
+        }
+
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // rotate rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract and sort descending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let w: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    idx.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap());
+
+    let ws: Vec<f64> = idx.iter().map(|&i| w[i]).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        for i in 0..n {
+            vs[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    (ws, vs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Prng::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.normal();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn known_2x2() {
+        let a = Mat::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]);
+        let (w, v) = symmetric_eig(&a);
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        // eigenvector for 3 is (1,1)/sqrt2 up to sign
+        assert!((v[(0, 0)].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        for n in [3, 10, 40, 80] {
+            let a = random_symmetric(n, n as u64);
+            let (w, v) = symmetric_eig(&a);
+            // A v_j = w_j v_j
+            for j in 0..n {
+                let col: Vec<f64> = (0..n).map(|i| v[(i, j)]).collect();
+                let av = a.matvec(&col);
+                for i in 0..n {
+                    assert!(
+                        (av[i] - w[j] * col[i]).abs() < 1e-8,
+                        "n={n} j={j} i={i}: {} vs {}",
+                        av[i],
+                        w[j] * col[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(30, 5);
+        let (_, v) = symmetric_eig(&a);
+        let vtv = v.transpose().matmul(&v);
+        for i in 0..30 {
+            for j in 0..30 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_descending() {
+        let a = random_symmetric(25, 9);
+        let (w, _) = symmetric_eig(&a);
+        for i in 1..w.len() {
+            assert!(w[i - 1] >= w[i] - 1e-12);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense linear-algebra substrate (f64): matrix container, symmetric Jacobi
+//! eigensolver, and PCA on residual blocks — everything Algorithm 1 needs.
+//! Hand-rolled because the offline image ships no LAPACK/ndarray; the
+//! matrices involved are small (paper: 80 x 80 per species).
+
+pub mod jacobi;
+pub mod mat;
+pub mod pca;
+
+pub use jacobi::symmetric_eig;
+pub use mat::Mat;
+pub use pca::Pca;

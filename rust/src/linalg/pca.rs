@@ -1,0 +1,197 @@
+//! PCA over residual block vectors (Algorithm 1's basis-matrix step).
+//!
+//! Fits the covariance of N x D samples (D = 80 per species in the paper)
+//! and eigendecomposes it with the Jacobi solver; the resulting orthonormal
+//! basis U (columns sorted by descending eigenvalue) is what residuals are
+//! projected onto.
+
+use crate::linalg::{symmetric_eig, Mat};
+
+/// A fitted PCA basis.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// D x D orthonormal basis; column j = j-th principal direction.
+    pub basis: Mat,
+    /// Descending eigenvalues (variances along each direction).
+    pub eigenvalues: Vec<f64>,
+    /// Sample mean (D); the paper projects raw residuals, so fitting with
+    /// `centered = false` keeps the mean at zero.
+    pub mean: Vec<f64>,
+}
+
+impl Pca {
+    /// Fit from `n` samples of dimension `d` stored row-major in `samples`.
+    /// `centered == false` skips mean subtraction (residuals are ~zero-mean
+    /// by construction and Algorithm 1 reconstructs with `U c` alone).
+    pub fn fit(samples: &[f32], n: usize, d: usize, centered: bool) -> Pca {
+        assert_eq!(samples.len(), n * d);
+        let mut mean = vec![0.0f64; d];
+        if centered && n > 0 {
+            for row in samples.chunks_exact(d) {
+                for (m, &v) in mean.iter_mut().zip(row) {
+                    *m += v as f64;
+                }
+            }
+            for m in mean.iter_mut() {
+                *m /= n as f64;
+            }
+        }
+
+        // covariance C = Σ (x-μ)(x-μ)ᵀ / n, accumulated upper-triangular
+        let mut cov = Mat::zeros(d, d);
+        let mut xc = vec![0.0f64; d];
+        for row in samples.chunks_exact(d) {
+            for j in 0..d {
+                xc[j] = row[j] as f64 - mean[j];
+            }
+            for i in 0..d {
+                let xi = xc[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let crow = cov.row_mut(i);
+                for j in i..d {
+                    crow[j] += xi * xc[j];
+                }
+            }
+        }
+        let denom = (n.max(1)) as f64;
+        for i in 0..d {
+            for j in i..d {
+                let v = cov[(i, j)] / denom;
+                cov[(i, j)] = v;
+                cov[(j, i)] = v;
+            }
+        }
+
+        let (eigenvalues, basis) = symmetric_eig(&cov);
+        Pca {
+            basis,
+            eigenvalues,
+            mean,
+        }
+    }
+
+    /// Project a sample: c = Uᵀ (x - μ).
+    pub fn project(&self, x: &[f32]) -> Vec<f64> {
+        let d = self.basis.rows;
+        debug_assert_eq!(x.len(), d);
+        let xc: Vec<f64> = x
+            .iter()
+            .zip(&self.mean)
+            .map(|(&v, &m)| v as f64 - m)
+            .collect();
+        // c_j = Σ_i U[i,j] xc[i]
+        self.basis.matvec_t(&xc)
+    }
+
+    /// Reconstruct from a sparse coefficient set: x ≈ μ + Σ_j U[:, j] c_j.
+    pub fn reconstruct_sparse(&self, coeffs: &[(usize, f64)], out: &mut [f32]) {
+        let d = self.basis.rows;
+        debug_assert_eq!(out.len(), d);
+        for (o, &m) in out.iter_mut().zip(&self.mean) {
+            *o = m as f32;
+        }
+        for &(j, c) in coeffs {
+            for i in 0..d {
+                out[i] += (self.basis[(i, j)] * c) as f32;
+            }
+        }
+    }
+
+    /// Fraction of total variance captured by the top `k` directions.
+    pub fn explained_variance(&self, k: usize) -> f64 {
+        let total: f64 = self.eigenvalues.iter().map(|v| v.max(0.0)).sum();
+        if total <= 0.0 {
+            return 1.0;
+        }
+        self.eigenvalues[..k.min(self.eigenvalues.len())]
+            .iter()
+            .map(|v| v.max(0.0))
+            .sum::<f64>()
+            / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    /// Generate samples lying (noisily) on a k-dim subspace of R^d.
+    fn low_rank_samples(n: usize, d: usize, k: usize, noise: f64, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        let dirs: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect();
+        let mut out = vec![0.0f32; n * d];
+        for row in out.chunks_exact_mut(d) {
+            for dir in &dirs {
+                let c = rng.normal() * 3.0;
+                for (o, &u) in row.iter_mut().zip(dir) {
+                    *o += (c * u) as f32;
+                }
+            }
+            for o in row.iter_mut() {
+                *o += (rng.normal() * noise) as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn projection_roundtrip_full_basis() {
+        let mut rng = Prng::new(2);
+        let (n, d) = (50, 12);
+        let samples: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let pca = Pca::fit(&samples, n, d, false);
+        let x = &samples[..d];
+        let c = pca.project(x);
+        let all: Vec<(usize, f64)> = c.iter().cloned().enumerate().collect();
+        let mut rec = vec![0.0f32; d];
+        pca.reconstruct_sparse(&all, &mut rec);
+        for (a, b) in x.iter().zip(&rec) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn low_rank_data_captured_by_few_components() {
+        let (n, d, k) = (400, 20, 3);
+        let samples = low_rank_samples(n, d, k, 1e-3, 4);
+        let pca = Pca::fit(&samples, n, d, false);
+        assert!(pca.explained_variance(k) > 0.999);
+        assert!(pca.explained_variance(1) < 0.999);
+    }
+
+    #[test]
+    fn eigenvalues_nonincreasing_and_nonnegative() {
+        let samples = low_rank_samples(100, 15, 5, 0.1, 8);
+        let pca = Pca::fit(&samples, 100, 15, false);
+        for w in pca.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(pca.eigenvalues.iter().all(|&v| v > -1e-9));
+    }
+
+    #[test]
+    fn top_coeff_reconstruction_reduces_error() {
+        let (n, d) = (200, 16);
+        let samples = low_rank_samples(n, d, 2, 0.05, 6);
+        let pca = Pca::fit(&samples, n, d, false);
+        let x = &samples[..d];
+        let c = pca.project(x);
+        let norm = |v: &[f32]| v.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+        let mut best_prev = f64::INFINITY;
+        for m in [0usize, 1, 2, d] {
+            let top: Vec<(usize, f64)> = (0..m).map(|j| (j, c[j])).collect();
+            let mut rec = vec![0.0f32; d];
+            pca.reconstruct_sparse(&top, &mut rec);
+            let resid: Vec<f32> = x.iter().zip(&rec).map(|(a, b)| a - b).collect();
+            let e = norm(&resid);
+            assert!(e <= best_prev + 1e-9, "error increased with more coeffs");
+            best_prev = e;
+        }
+        assert!(best_prev < 1e-4);
+    }
+}

@@ -1,0 +1,301 @@
+//! `gbatc` CLI — the L3 leader binary: data generation, GBATC/GBA and SZ
+//! compression, decompression, and evaluation.  See `gbatc help`.
+
+use gbatc::archive::Archive;
+use gbatc::chem::{self, Mechanism};
+use gbatc::cli::{Args, USAGE};
+use gbatc::compressor::{
+    CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor, SzArchive,
+};
+use gbatc::config::Manifest;
+use gbatc::data::{self, io, Profile};
+use gbatc::error::{Error, Result};
+use gbatc::metrics;
+use gbatc::runtime::ExecService;
+use gbatc::sz::codec::SzMode;
+
+fn main() {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = raw.remove(0);
+    let result = Args::parse(raw).and_then(|args| dispatch(&cmd, &args));
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "gen-data" => cmd_gen_data(args),
+        "compress" => cmd_compress(args),
+        "decompress" => cmd_decompress(args),
+        "sz" => cmd_sz(args),
+        "sz-decompress" => cmd_sz_decompress(args),
+        "evaluate" => cmd_evaluate(args),
+        "info" => cmd_info(args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::config(format!("unknown command `{other}`; see `gbatc help`"))),
+    }
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let out = args.require("out")?;
+    let profile = Profile::parse(args.get_or("profile", "small"))
+        .ok_or_else(|| Error::config("bad --profile"))?;
+    let seed = args.get_parse::<u64>("seed", 7)?;
+    let t = std::time::Instant::now();
+    let ds = data::generate(profile, seed);
+    io::write_dataset(out, &ds)?;
+    println!(
+        "wrote {out}: {}x{}x{}x{} ({:.1} MB) in {:.1}s",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        ds.pd_bytes() as f64 / 1e6,
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = args.require("output")?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let opts = CompressOptions {
+        nrmse_target: args.get_parse("nrmse", 1e-3)?,
+        latent_bin: args.get_parse("latent-bin", 0.02)?,
+        use_tcn: !args.has("no-tcn"),
+        threads: args.get_parse("threads", 0)?,
+        store_full_basis: args.has("full-basis"),
+        model_bytes_f32: args.has("model-f32"),
+        queue_depth: args.get_parse("queue-depth", 4)?,
+    };
+
+    let ds = io::read_dataset(input)?;
+    let manifest = Manifest::load(format!("{artifacts}/manifest.txt"))?;
+    let service = ExecService::start(artifacts, opts.queue_depth)?;
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+
+    let report = comp.compress(&ds, &opts)?;
+    report.archive.write_file(output)?;
+    println!(
+        "{} -> {} | CR {:.1} | target NRMSE {:.1e} | tau {:.3e} | max block residual {:.3e} | {} coeffs",
+        input,
+        output,
+        report.archive.compression_ratio(),
+        opts.nrmse_target,
+        report.tau,
+        report.max_block_residual,
+        report.n_coeffs
+    );
+    println!("  breakdown: {}", report.breakdown);
+    println!("  {}", report.progress_summary);
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = args.require("output")?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let threads = args.get_parse("threads", 0)?;
+
+    let archive = Archive::read_file(input)?;
+    let service = ExecService::start(artifacts, 4)?;
+    let handle = service.handle();
+    let manifest = Manifest::load(format!("{artifacts}/manifest.txt"))?;
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+    let t = std::time::Instant::now();
+    let mass = comp.decompress(&archive, threads)?;
+
+    let (nt, ns, ny, nx) = archive.dims;
+    let mut ds = gbatc::data::Dataset::new(nt, ns, ny, nx);
+    ds.mass = mass;
+    ds.pressure = archive.pressure;
+    if let Some(tf) = args.get("temp-from") {
+        let src = io::read_dataset(tf)?;
+        if (src.nt, src.ny, src.nx) != (nt, ny, nx) {
+            return Err(Error::shape("--temp-from dims mismatch".to_string()));
+        }
+        ds.temp = src.temp;
+    }
+    io::write_dataset(output, &ds)?;
+    println!(
+        "{input} -> {output} | {}x{}x{}x{} in {:.2}s",
+        nt, ns, ny, nx,
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_sz(args: &Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = args.require("output")?;
+    let opts = SzCompressOptions {
+        mode: SzMode::parse(args.get_or("mode", "auto"))
+            .ok_or_else(|| Error::config("bad --mode"))?,
+        eb_scale: args.get_parse("eb-scale", 1.0)?,
+        threads: args.get_parse("threads", 0)?,
+    };
+    let nrmse = args.get_parse("nrmse", 1e-3)?;
+    let ds = io::read_dataset(input)?;
+    let t = std::time::Instant::now();
+    let archive = SzCompressor::new(opts).compress(&ds, nrmse)?;
+    let bytes = archive.serialize();
+    std::fs::write(output, &bytes)?;
+    println!(
+        "{input} -> {output} | SZ CR {:.1} | {:.2}s",
+        ds.pd_bytes() as f64 / bytes.len() as f64,
+        t.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_sz_decompress(args: &Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = args.require("output")?;
+    let bytes = std::fs::read(input)?;
+    let archive = SzArchive::deserialize(&bytes)?;
+    let szc = SzCompressor::new(SzCompressOptions::default());
+    let mass = szc.decompress(&archive)?;
+    let (nt, ns, ny, nx) = archive.dims;
+    let mut ds = gbatc::data::Dataset::new(nt, ns, ny, nx);
+    ds.mass = mass;
+    if let Some(tf) = args.get("temp-from") {
+        let src = io::read_dataset(tf)?;
+        ds.temp = src.temp;
+    }
+    io::write_dataset(output, &ds)?;
+    println!("{input} -> {output}");
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let orig = io::read_dataset(args.require("orig")?)?;
+    let recon = io::read_dataset(args.require("recon")?)?;
+    if (orig.nt, orig.ns, orig.ny, orig.nx) != (recon.nt, recon.ns, recon.ny, recon.nx) {
+        return Err(Error::shape("orig/recon dims mismatch".to_string()));
+    }
+
+    // per-species NRMSE over species-major trajectories
+    let mut per = Vec::with_capacity(orig.ns);
+    for s in 0..orig.ns {
+        let a = orig.species_field(s);
+        let b = recon.species_field(s);
+        per.push(metrics::nrmse(&a.data, &b.data));
+    }
+    let mean = per.iter().sum::<f64>() / per.len() as f64;
+    println!("mean NRMSE over {} species: {:.4e}", orig.ns, mean);
+
+    if let Some(name) = args.get("species") {
+        let s = chem::index_of(name)
+            .ok_or_else(|| Error::config(format!("unknown species {name}")))?;
+        let a = orig.species_field(s);
+        let b = recon.species_field(s);
+        let t_mid = orig.nt / 2;
+        println!(
+            "{name}: NRMSE {:.4e} | PSNR {:.1} dB | SSIM(mid frame) {:.5}",
+            per[s],
+            metrics::psnr(&a.data, &b.data),
+            metrics::ssim2d(a.frame(t_mid), b.frame(t_mid), orig.ny, orig.nx),
+        );
+    }
+
+    if args.has("qoi") {
+        let stride = args.get_parse::<usize>("sample-stride", 4)?;
+        let (qoi_per, qoi_mean) = qoi_errors(&orig, &recon, stride)?;
+        println!("mean QoI NRMSE: {:.4e} (stride {stride})", qoi_mean);
+        if let Some(name) = args.get("species") {
+            let s = chem::index_of(name).unwrap();
+            println!("{name}: QoI NRMSE {:.4e}", qoi_per[s]);
+        }
+    }
+    Ok(())
+}
+
+/// QoI (production-rate) NRMSE per species on a spatially-strided sample.
+pub fn qoi_errors(
+    orig: &gbatc::data::Dataset,
+    recon: &gbatc::data::Dataset,
+    stride: usize,
+) -> Result<(Vec<f64>, f64)> {
+    let mech = Mechanism::standard();
+    let ns = orig.ns;
+    let mut ys_o: Vec<f32> = Vec::new();
+    let mut ys_r: Vec<f32> = Vec::new();
+    let mut temps: Vec<f32> = Vec::new();
+    // sample grid points
+    let mut n = 0usize;
+    for t in 0..orig.nt {
+        for y in (0..orig.ny).step_by(stride) {
+            for x in (0..orig.nx).step_by(stride) {
+                temps.push(orig.temp_at(t, y, x));
+                n += 1;
+                let _ = (y, x);
+            }
+        }
+    }
+    ys_o.resize(ns * n, 0.0);
+    ys_r.resize(ns * n, 0.0);
+    let mut i = 0usize;
+    for t in 0..orig.nt {
+        for y in (0..orig.ny).step_by(stride) {
+            for x in (0..orig.nx).step_by(stride) {
+                for s in 0..ns {
+                    ys_o[s * n + i] = orig.at(t, s, y, x);
+                    ys_r[s * n + i] = recon.at(t, s, y, x);
+                }
+                i += 1;
+            }
+        }
+    }
+    let mut w_o = vec![0.0f64; ns * n];
+    let mut w_r = vec![0.0f64; ns * n];
+    chem::production_rates(&mech, &ys_o, &temps, orig.pressure, n, &mut w_o);
+    chem::production_rates(&mech, &ys_r, &temps, orig.pressure, n, &mut w_r);
+    Ok(metrics::nrmse::nrmse_per_species_f64(&w_o, &w_r, ns))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let path = args.require("archive")?;
+    let bytes = std::fs::read(path)?;
+    if bytes.starts_with(b"GBA1") {
+        let a = Archive::deserialize(&bytes)?;
+        let (nt, ns, ny, nx) = a.dims;
+        println!("GBATC archive: {nt}x{ns}x{ny}x{nx}, block {:?}, latent {}", a.block, a.latent_dim);
+        println!("  tcn_used={} nrmse_target={:.1e}", a.tcn_used, a.nrmse_target);
+        println!(
+            "  payload {} B + model {} B => CR {:.1}",
+            a.payload_bytes(),
+            a.model_param_bytes,
+            a.compression_ratio()
+        );
+        let ranks: Vec<usize> = a.species.iter().map(|s| s.basis.rank).collect();
+        println!(
+            "  basis ranks: min {} max {} mean {:.1}",
+            ranks.iter().min().unwrap(),
+            ranks.iter().max().unwrap(),
+            ranks.iter().sum::<usize>() as f64 / ranks.len() as f64
+        );
+    } else if bytes.starts_with(b"SZA1") {
+        let a = SzArchive::deserialize(&bytes)?;
+        let (nt, ns, ny, nx) = a.dims;
+        println!("SZ archive: {nt}x{ns}x{ny}x{nx}, {} fields", a.fields.len());
+        println!(
+            "  total {} B => CR {:.1}",
+            bytes.len(),
+            (nt * ns * ny * nx * 4) as f64 / bytes.len() as f64
+        );
+    } else {
+        return Err(Error::format("unknown archive type".to_string()));
+    }
+    Ok(())
+}

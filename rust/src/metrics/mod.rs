@@ -1,0 +1,12 @@
+//! Evaluation metrics from the paper's §III: NRMSE (Eq. 3), PSNR, SSIM,
+//! and the mean/std temporal profiles of Figs. 7–8.
+
+pub mod nrmse;
+pub mod psnr;
+pub mod ssim;
+pub mod stats;
+
+pub use nrmse::{nrmse, nrmse_per_species, nrmse_with_range};
+pub use psnr::{psnr, psnr_with_range};
+pub use ssim::{ssim2d, ssim2d_with_range};
+pub use stats::{frame_mean_std, temporal_profiles};

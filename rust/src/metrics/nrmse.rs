@@ -1,0 +1,129 @@
+//! NRMSE (paper Eq. 3): RMSE normalized by the original data's range.
+//! The paper's overall score is the *average of per-species NRMSEs*.
+
+/// NRMSE of `recon` against `orig`, normalizing by (max - min) of `orig`.
+pub fn nrmse(orig: &[f32], recon: &[f32]) -> f64 {
+    let (lo, hi) = range(orig);
+    nrmse_with_range(orig, recon, lo, hi)
+}
+
+/// NRMSE with an explicit normalization range.
+pub fn nrmse_with_range(orig: &[f32], recon: &[f32], lo: f32, hi: f32) -> f64 {
+    assert_eq!(orig.len(), recon.len());
+    if orig.is_empty() {
+        return 0.0;
+    }
+    let mse: f64 = orig
+        .iter()
+        .zip(recon)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / orig.len() as f64;
+    let range = (hi - lo) as f64;
+    if range <= 0.0 {
+        return if mse == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    mse.sqrt() / range
+}
+
+fn range(xs: &[f32]) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in xs {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    (lo, hi)
+}
+
+/// Per-species NRMSE over species-major data `[S, n]` plus their average
+/// (the paper's headline PD error).  Returns (per_species, mean).
+pub fn nrmse_per_species(orig: &[f32], recon: &[f32], ns: usize) -> (Vec<f64>, f64) {
+    assert_eq!(orig.len(), recon.len());
+    assert_eq!(orig.len() % ns, 0);
+    let n = orig.len() / ns;
+    let mut per = Vec::with_capacity(ns);
+    for s in 0..ns {
+        per.push(nrmse(&orig[s * n..(s + 1) * n], &recon[s * n..(s + 1) * n]));
+    }
+    let mean = per.iter().sum::<f64>() / ns as f64;
+    (per, mean)
+}
+
+/// Same but for f64 data (QoI production rates).
+pub fn nrmse_per_species_f64(orig: &[f64], recon: &[f64], ns: usize) -> (Vec<f64>, f64) {
+    assert_eq!(orig.len(), recon.len());
+    let n = orig.len() / ns;
+    let mut per = Vec::with_capacity(ns);
+    for s in 0..ns {
+        let o = &orig[s * n..(s + 1) * n];
+        let r = &recon[s * n..(s + 1) * n];
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in o {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let mse = o
+            .iter()
+            .zip(r)
+            .map(|(&a, &b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / n as f64;
+        let range = hi - lo;
+        per.push(if range > 0.0 {
+            mse.sqrt() / range
+        } else if mse == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        });
+    }
+    let mean = per.iter().sum::<f64>() / ns as f64;
+    (per, mean)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_for_identical() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(nrmse(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn known_value() {
+        let orig = vec![0.0f32, 1.0]; // range 1
+        let recon = vec![0.1f32, 1.1];
+        assert!((nrmse(&orig, &recon) - 0.1).abs() < 1e-6); // f32 rounding
+    }
+
+    #[test]
+    fn scale_invariance_via_range() {
+        // same relative error at different absolute scales -> same NRMSE;
+        // this is why the paper uses NRMSE for species spanning decades
+        let o1 = vec![0.0f32, 1e-6];
+        let r1 = vec![1e-8f32, 1e-6];
+        let o2 = vec![0.0f32, 1.0];
+        let r2 = vec![0.01f32, 1.0];
+        assert!((nrmse(&o1, &r1) - nrmse(&o2, &r2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_species_average() {
+        let ns = 2;
+        let orig = vec![0.0, 1.0, 0.0, 2.0]; // species 0: [0,1], species 1: [0,2]
+        let recon = vec![0.1, 1.0, 0.0, 2.0];
+        let (per, mean) = nrmse_per_species(&orig, &recon, ns);
+        assert!(per[0] > 0.0 && per[1] == 0.0);
+        assert!((mean - per[0] / 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,61 @@
+//! Peak signal-to-noise ratio (dB), peak = range of the original signal.
+
+/// PSNR in dB; +inf for identical inputs (peak = range of `orig`).
+pub fn psnr(orig: &[f32], recon: &[f32]) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in orig {
+        lo = lo.min(v as f64);
+        hi = hi.max(v as f64);
+    }
+    psnr_with_range(orig, recon, hi - lo)
+}
+
+/// PSNR with an explicit dynamic range (e.g. the species-wide range when
+/// scoring individual frames of a sequence, as in Figs. 5/6).
+pub fn psnr_with_range(orig: &[f32], recon: &[f32], peak: f64) -> f64 {
+    assert_eq!(orig.len(), recon.len());
+    let mse: f64 = orig
+        .iter()
+        .zip(recon)
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / orig.len() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    if peak <= 0.0 {
+        return 0.0;
+    }
+    10.0 * (peak * peak / mse).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_is_infinite() {
+        let a = vec![0.0f32, 0.5, 1.0];
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn known_value() {
+        // range 1, uniform error 0.1 -> psnr = 20 dB
+        let orig = vec![0.0f32, 1.0];
+        let recon = vec![0.1f32, 0.9];
+        assert!((psnr(&orig, &recon) - 20.0).abs() < 1e-4); // f32 rounding
+    }
+
+    #[test]
+    fn better_recon_higher_psnr() {
+        let orig: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let noisy1: Vec<f32> = orig.iter().map(|v| v + 0.01).collect();
+        let noisy2: Vec<f32> = orig.iter().map(|v| v + 0.1).collect();
+        assert!(psnr(&orig, &noisy1) > psnr(&orig, &noisy2));
+    }
+}

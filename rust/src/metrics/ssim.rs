@@ -1,0 +1,119 @@
+//! Structural similarity (Wang et al. 2004) over 2D frames, 8x8 windows,
+//! uniform weighting — the paper quotes SSIM per species frame (Figs. 5/6).
+
+const C1_K: f64 = 0.01;
+const C2_K: f64 = 0.03;
+const WIN: usize = 8;
+
+/// Mean SSIM over non-overlapping 8x8 windows of a `[ny, nx]` frame.
+/// Dynamic range is taken from the original frame.
+pub fn ssim2d(orig: &[f32], recon: &[f32], ny: usize, nx: usize) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in orig {
+        lo = lo.min(v as f64);
+        hi = hi.max(v as f64);
+    }
+    ssim2d_with_range(orig, recon, ny, nx, hi - lo)
+}
+
+/// SSIM with an explicit dynamic range (species-wide range for sequence
+/// frames, Figs. 5/6 — per-frame ranges collapse pre/post-ignition).
+pub fn ssim2d_with_range(
+    orig: &[f32],
+    recon: &[f32],
+    ny: usize,
+    nx: usize,
+    range: f64,
+) -> f64 {
+    assert_eq!(orig.len(), ny * nx);
+    assert_eq!(recon.len(), ny * nx);
+    let l = range.max(1e-300);
+    let c1 = (C1_K * l) * (C1_K * l);
+    let c2 = (C2_K * l) * (C2_K * l);
+
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut wy = 0;
+    while wy < ny {
+        let hy = WIN.min(ny - wy);
+        let mut wx = 0;
+        while wx < nx {
+            let hx = WIN.min(nx - wx);
+            let n = (hy * hx) as f64;
+            let (mut ma, mut mb) = (0.0f64, 0.0f64);
+            for y in wy..wy + hy {
+                for x in wx..wx + hx {
+                    ma += orig[y * nx + x] as f64;
+                    mb += recon[y * nx + x] as f64;
+                }
+            }
+            ma /= n;
+            mb /= n;
+            let (mut va, mut vb, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+            for y in wy..wy + hy {
+                for x in wx..wx + hx {
+                    let da = orig[y * nx + x] as f64 - ma;
+                    let db = recon[y * nx + x] as f64 - mb;
+                    va += da * da;
+                    vb += db * db;
+                    cov += da * db;
+                }
+            }
+            va /= n;
+            vb /= n;
+            cov /= n;
+            let s = ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+            total += s;
+            count += 1;
+            wx += WIN;
+        }
+        wy += WIN;
+    }
+    total / count as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn identical_frames_score_one() {
+        let mut rng = Prng::new(1);
+        let f: Vec<f32> = (0..32 * 32).map(|_| rng.next_f32()).collect();
+        let s = ssim2d(&f, &f, 32, 32);
+        assert!((s - 1.0).abs() < 1e-12, "{s}");
+    }
+
+    #[test]
+    fn noise_lowers_ssim_monotonically() {
+        let mut rng = Prng::new(2);
+        let ny = 40;
+        let nx = 40;
+        // smooth frame
+        let f: Vec<f32> = (0..ny * nx)
+            .map(|i| {
+                let (y, x) = (i / nx, i % nx);
+                (y as f32 / 8.0).sin() + (x as f32 / 6.0).cos()
+            })
+            .collect();
+        let noisy = |amp: f32, rng: &mut Prng| -> Vec<f32> {
+            f.iter().map(|v| v + amp * rng.normal() as f32).collect()
+        };
+        let s1 = ssim2d(&f, &noisy(0.01, &mut rng), ny, nx);
+        let s2 = ssim2d(&f, &noisy(0.2, &mut rng), ny, nx);
+        assert!(s1 > s2, "{s1} vs {s2}");
+        assert!(s1 > 0.9 && s2 < 0.9);
+    }
+
+    #[test]
+    fn bounded_by_one() {
+        let mut rng = Prng::new(3);
+        let a: Vec<f32> = (0..24 * 24).map(|_| rng.next_f32()).collect();
+        let b: Vec<f32> = (0..24 * 24).map(|_| rng.next_f32()).collect();
+        let s = ssim2d(&a, &b, 24, 24);
+        assert!(s <= 1.0 + 1e-12 && s >= -1.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Spatial mean/std per time frame (Figs. 7–8's temporal profiles).
+
+/// (mean, std) of one frame.
+pub fn frame_mean_std(frame: &[f32]) -> (f64, f64) {
+    let n = frame.len() as f64;
+    if frame.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = frame.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = frame
+        .iter()
+        .map(|&v| {
+            let d = v as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    (mean, var.sqrt())
+}
+
+/// Temporal profiles of a `[T, n]` field: per-frame (mean, std).
+pub fn temporal_profiles(field: &[f32], nt: usize) -> Vec<(f64, f64)> {
+    assert_eq!(field.len() % nt.max(1), 0);
+    let n = field.len() / nt;
+    (0..nt)
+        .map(|t| frame_mean_std(&field[t * n..(t + 1) * n]))
+        .collect()
+}
+
+/// Same for f64 fields (QoI rates).
+pub fn temporal_profiles_f64(field: &[f64], nt: usize) -> Vec<(f64, f64)> {
+    let n = field.len() / nt;
+    (0..nt)
+        .map(|t| {
+            let fr = &field[t * n..(t + 1) * n];
+            let mean = fr.iter().sum::<f64>() / n as f64;
+            let var = fr.iter().map(|&v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+            (mean, var.sqrt())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_frame() {
+        let (m, s) = frame_mean_std(&[2.0; 10]);
+        assert_eq!(m, 2.0);
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn known_std() {
+        let (m, s) = frame_mean_std(&[0.0, 2.0]);
+        assert_eq!(m, 1.0);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn profiles_shape() {
+        let field = vec![1.0f32; 3 * 4];
+        let p = temporal_profiles(&field, 3);
+        assert_eq!(p.len(), 3);
+        assert!(p.iter().all(|&(m, s)| m == 1.0 && s == 0.0));
+    }
+}

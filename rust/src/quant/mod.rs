@@ -1,0 +1,8 @@
+//! Uniform scalar quantization (the paper's §II-A "discrete bins, each with
+//! a bin size of d; all values within each bin represented by its central
+//! value"), used for both AE latents and PCA coefficients before Huffman
+//! coding.
+
+pub mod uniform;
+
+pub use uniform::UniformQuantizer;

@@ -1,0 +1,114 @@
+//! Mid-tread uniform quantizer: q = round(x / d), x̂ = q * d.
+//! Reconstruction error is bounded by d/2 per value.
+
+/// Uniform quantizer with bin width `d`.
+#[derive(Clone, Copy, Debug)]
+pub struct UniformQuantizer {
+    pub bin: f64,
+}
+
+impl UniformQuantizer {
+    pub fn new(bin: f64) -> Self {
+        assert!(bin > 0.0 && bin.is_finite(), "bin width must be positive");
+        Self { bin }
+    }
+
+    /// Pick the bin width so the *per-value* max error is `eps`.
+    pub fn for_max_error(eps: f64) -> Self {
+        Self::new(2.0 * eps)
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i64 {
+        (x / self.bin).round() as i64
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i64) -> f64 {
+        q as f64 * self.bin
+    }
+
+    pub fn quantize_slice(&self, xs: &[f32]) -> Vec<i64> {
+        xs.iter().map(|&x| self.quantize(x as f64)).collect()
+    }
+
+    pub fn dequantize_slice(&self, qs: &[i64]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize(q) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Arbitrary};
+    use crate::util::Prng;
+
+    #[test]
+    fn error_bounded_by_half_bin() {
+        let q = UniformQuantizer::new(0.01);
+        let mut rng = Prng::new(1);
+        for _ in 0..10_000 {
+            let x = rng.uniform(-5.0, 5.0);
+            let xh = q.dequantize(q.quantize(x));
+            assert!((x - xh).abs() <= 0.005 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let q = UniformQuantizer::new(0.1);
+        assert_eq!(q.quantize(0.0), 0);
+        assert_eq!(q.dequantize(0), 0.0);
+    }
+
+    #[test]
+    fn for_max_error_honors_bound() {
+        let q = UniformQuantizer::for_max_error(1e-3);
+        let mut rng = Prng::new(2);
+        for _ in 0..5_000 {
+            let x = rng.uniform(-1.0, 1.0);
+            assert!((x - q.dequantize(q.quantize(x))).abs() <= 1e-3 + 1e-15);
+        }
+    }
+
+    #[derive(Clone, Debug)]
+    struct QCase {
+        bin: f64,
+        xs: Vec<f32>,
+    }
+
+    impl Arbitrary for QCase {
+        fn generate(rng: &mut Prng) -> Self {
+            let bin = 10f64.powf(rng.uniform(-6.0, 0.0));
+            let n = 1 + rng.index(64);
+            let scale = 10f64.powf(rng.uniform(-6.0, 2.0));
+            QCase {
+                bin,
+                xs: (0..n).map(|_| (rng.normal() * scale) as f32).collect(),
+            }
+        }
+        fn shrink(&self) -> Vec<Self> {
+            if self.xs.len() > 1 {
+                vec![QCase {
+                    bin: self.bin,
+                    xs: self.xs[..self.xs.len() / 2].to_vec(),
+                }]
+            } else {
+                vec![]
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bound() {
+        check::<QCase, _>(42, 300, |c| {
+            let q = UniformQuantizer::new(c.bin);
+            let qs = q.quantize_slice(&c.xs);
+            let xh = q.dequantize_slice(&qs);
+            c.xs.iter().zip(&xh).all(|(a, b)| {
+                let tol = c.bin / 2.0 + (*a as f64).abs() * 1e-6 + 1e-12;
+                ((*a as f64) - (*b as f64)).abs() <= tol
+            })
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! HLO-text loading (the AOT interchange format — see DESIGN.md §2:
+//! serialized protos from jax >= 0.5 carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Load an HLO-text file into an `XlaComputation`.
+pub fn load_computation<P: AsRef<Path>>(path: P) -> Result<xla::XlaComputation> {
+    let path = path.as_ref();
+    if !path.exists() {
+        return Err(Error::runtime(format!(
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        )));
+    }
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str()
+            .ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+    )?;
+    Ok(xla::XlaComputation::from_proto(&proto))
+}

@@ -1,0 +1,244 @@
+//! Compiled model executables (encoder / decoder / TCN) with fixed AOT
+//! batch shapes and tail padding.
+
+use std::path::Path;
+
+use crate::config::Manifest;
+use crate::error::{Error, Result};
+use crate::runtime::client::load_computation;
+
+/// Shapes baked into the AOT artifacts (from `manifest.txt`).
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeSpec {
+    pub species: usize,
+    pub block: (usize, usize, usize),
+    pub latent: usize,
+    /// encoder/decoder batch (blocks per execution)
+    pub batch: usize,
+    /// TCN batch (points per execution)
+    pub points: usize,
+}
+
+impl RuntimeSpec {
+    pub fn from_manifest(m: &Manifest) -> RuntimeSpec {
+        RuntimeSpec {
+            species: m.species,
+            block: (m.block_t, m.block_y, m.block_x),
+            latent: m.latent,
+            batch: m.encoder_batch,
+            points: m.tcn_points,
+        }
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.block.0 * self.block.1 * self.block.2
+    }
+
+    pub fn instance_len(&self) -> usize {
+        self.species * self.block_len()
+    }
+}
+
+/// The three compiled executables plus the PJRT client that owns them.
+/// `!Send` — lives on the executor-service thread (see `pool`).
+pub struct ModelRuntime {
+    pub spec: RuntimeSpec,
+    client: xla::PjRtClient,
+    encoder: xla::PjRtLoadedExecutable,
+    decoder: xla::PjRtLoadedExecutable,
+    tcn: Option<xla::PjRtLoadedExecutable>,
+    // trained weights, fed as trailing arguments on every execution (HLO
+    // text elides large constants, so aot.py exports weights separately)
+    encoder_params: Vec<xla::Literal>,
+    decoder_params: Vec<xla::Literal>,
+    tcn_params: Vec<xla::Literal>,
+}
+
+fn literal_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
+    let n: usize = dims.iter().product();
+    debug_assert_eq!(data.len(), n);
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .expect("literal creation")
+}
+
+/// Load a `GBPR` params sidecar written by `aot.py::write_params_sidecar`:
+/// magic, u32 count, then per tensor: u32 name_len, name, u32 ndim,
+/// u32 dims..., f32 data — in the argument order the HLO expects.
+fn load_params_sidecar(path: &Path) -> Result<Vec<xla::Literal>> {
+    let bytes = std::fs::read(path).map_err(|e| {
+        Error::runtime(format!("params sidecar {}: {e}", path.display()))
+    })?;
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        let s = bytes
+            .get(*pos..*pos + n)
+            .ok_or_else(|| Error::runtime(format!("truncated sidecar {}", path.display())))?;
+        *pos += n;
+        Ok(s)
+    };
+    if take(&mut pos, 4)? != b"GBPR" {
+        return Err(Error::runtime(format!("bad sidecar magic in {}", path.display())));
+    }
+    let rd_u32 = |pos: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+    let count = rd_u32(&mut pos)? as usize;
+    let mut literals = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = rd_u32(&mut pos)? as usize;
+        let _name = take(&mut pos, name_len)?;
+        let ndim = rd_u32(&mut pos)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(rd_u32(&mut pos)? as usize);
+        }
+        let n: usize = dims.iter().product();
+        let raw = take(&mut pos, n * 4)?;
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &dims,
+            raw,
+        )?;
+        literals.push(lit);
+    }
+    Ok(literals)
+}
+
+impl ModelRuntime {
+    /// Load and compile all artifacts from a directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<ModelRuntime> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let spec = RuntimeSpec::from_manifest(&manifest);
+        let client = xla::PjRtClient::cpu()?;
+        let encoder = client.compile(&load_computation(dir.join("encoder.hlo.txt"))?)?;
+        let decoder = client.compile(&load_computation(dir.join("decoder.hlo.txt"))?)?;
+        let encoder_params = load_params_sidecar(&dir.join("encoder.params"))?;
+        let decoder_params = load_params_sidecar(&dir.join("decoder.params"))?;
+        let tcn_path = dir.join("tcn.hlo.txt");
+        let (tcn, tcn_params) = if tcn_path.exists() {
+            (
+                Some(client.compile(&load_computation(tcn_path)?)?),
+                load_params_sidecar(&dir.join("tcn.params"))?,
+            )
+        } else {
+            (None, Vec::new())
+        };
+        Ok(ModelRuntime {
+            spec,
+            client,
+            encoder,
+            decoder,
+            tcn,
+            encoder_params,
+            decoder_params,
+            tcn_params,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has_tcn(&self) -> bool {
+        self.tcn.is_some()
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        params: &[xla::Literal],
+        input: &[f32],
+        in_dims: &[usize],
+        out_len: usize,
+    ) -> Result<Vec<f32>> {
+        let lit = literal_f32(input, in_dims);
+        // argument order: data batch first, then trained weights (the order
+        // aot.py lowered them in)
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + params.len());
+        args.push(&lit);
+        args.extend(params.iter());
+        let result = exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        if v.len() != out_len {
+            return Err(Error::runtime(format!(
+                "unexpected output length {} != {}",
+                v.len(),
+                out_len
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Encode up to `batch` blocks: `blocks` is `[n, S, kt, by, bx]`
+    /// row-major with n <= batch; returns `[n, latent]`.
+    pub fn encode(&self, blocks: &[f32], n: usize) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let il = s.instance_len();
+        assert_eq!(blocks.len(), n * il);
+        assert!(n <= s.batch, "{n} > batch {}", s.batch);
+        let mut padded;
+        let input = if n == s.batch {
+            blocks
+        } else {
+            padded = vec![0.0f32; s.batch * il];
+            padded[..n * il].copy_from_slice(blocks);
+            &padded[..]
+        };
+        let dims = [s.batch, s.species, s.block.0, s.block.1, s.block.2];
+        let out = Self::run(&self.encoder, &self.encoder_params, input, &dims, s.batch * s.latent)?;
+        Ok(out[..n * s.latent].to_vec())
+    }
+
+    /// Decode up to `batch` latents: `[n, latent]` -> `[n, S, kt, by, bx]`.
+    pub fn decode(&self, latents: &[f32], n: usize) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        assert_eq!(latents.len(), n * s.latent);
+        assert!(n <= s.batch);
+        let mut padded;
+        let input = if n == s.batch {
+            latents
+        } else {
+            padded = vec![0.0f32; s.batch * s.latent];
+            padded[..n * s.latent].copy_from_slice(latents);
+            &padded[..]
+        };
+        let out = Self::run(
+            &self.decoder,
+            &self.decoder_params,
+            input,
+            &[s.batch, s.latent],
+            s.batch * s.instance_len(),
+        )?;
+        Ok(out[..n * s.instance_len()].to_vec())
+    }
+
+    /// Tensor-correct up to `points` species vectors: `[n, S]` -> `[n, S]`.
+    pub fn tcn(&self, pts: &[f32], n: usize) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let tcn = self
+            .tcn
+            .as_ref()
+            .ok_or_else(|| Error::runtime("tcn artifact not loaded"))?;
+        assert_eq!(pts.len(), n * s.species);
+        assert!(n <= s.points);
+        let mut padded;
+        let input = if n == s.points {
+            pts
+        } else {
+            padded = vec![0.0f32; s.points * s.species];
+            padded[..n * s.species].copy_from_slice(pts);
+            &padded[..]
+        };
+        let out = Self::run(
+            tcn,
+            &self.tcn_params,
+            input,
+            &[s.points, s.species],
+            s.points * s.species,
+        )?;
+        Ok(out[..n * s.species].to_vec())
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! The `xla` crate's PJRT handles are `!Send` (raw pointers), so the
+//! runtime lives on a dedicated executor-service thread
+//! ([`pool::ExecService`]); worker threads talk to it through bounded
+//! channels.  XLA CPU parallelizes each execution internally, so one
+//! service thread saturates the machine for our batch sizes.
+
+pub mod client;
+pub mod executor;
+pub mod pool;
+
+pub use client::load_computation;
+pub use executor::{ModelRuntime, RuntimeSpec};
+pub use pool::{ExecHandle, ExecService};

@@ -1,0 +1,146 @@
+//! Executor service: a dedicated thread owning the (!Send) PJRT runtime,
+//! serving encode/decode/TCN requests over bounded channels.  Worker
+//! threads hold cloneable [`ExecHandle`]s; requests are processed FIFO,
+//! giving natural backpressure (the channel bound) while XLA parallelizes
+//! each execution internally.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::runtime::executor::{ModelRuntime, RuntimeSpec};
+
+enum Request {
+    Encode {
+        data: Vec<f32>,
+        n: usize,
+        reply: SyncSender<Result<Vec<f32>>>,
+    },
+    Decode {
+        data: Vec<f32>,
+        n: usize,
+        reply: SyncSender<Result<Vec<f32>>>,
+    },
+    Tcn {
+        data: Vec<f32>,
+        n: usize,
+        reply: SyncSender<Result<Vec<f32>>>,
+    },
+}
+
+/// Cloneable handle to the executor service.
+#[derive(Clone)]
+pub struct ExecHandle {
+    tx: SyncSender<Request>,
+    spec: RuntimeSpec,
+    has_tcn: bool,
+}
+
+/// The service: join handle + the original request sender.
+pub struct ExecService {
+    handle: ExecHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecService {
+    /// Spawn the service thread, loading artifacts from `dir`.
+    pub fn start(dir: &str, queue_depth: usize) -> Result<ExecService> {
+        let (tx, rx) = sync_channel::<Request>(queue_depth.max(1));
+        let (spec_tx, spec_rx) = sync_channel::<Result<(RuntimeSpec, bool)>>(1);
+        let dir = dir.to_string();
+        let join = std::thread::Builder::new()
+            .name("gbatc-exec".into())
+            .spawn(move || {
+                let runtime = match ModelRuntime::load(&dir) {
+                    Ok(rt) => {
+                        let _ = spec_tx.send(Ok((rt.spec, rt.has_tcn())));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = spec_tx.send(Err(e));
+                        return;
+                    }
+                };
+                Self::serve(runtime, rx);
+            })
+            .map_err(|e| Error::runtime(format!("spawn exec thread: {e}")))?;
+        let (spec, has_tcn) = spec_rx
+            .recv()
+            .map_err(|_| Error::runtime("exec thread died during startup"))??;
+        Ok(ExecService {
+            handle: ExecHandle { tx, spec, has_tcn },
+            join: Some(join),
+        })
+    }
+
+    fn serve(runtime: ModelRuntime, rx: Receiver<Request>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Encode { data, n, reply } => {
+                    let _ = reply.send(runtime.encode(&data, n));
+                }
+                Request::Decode { data, n, reply } => {
+                    let _ = reply.send(runtime.decode(&data, n));
+                }
+                Request::Tcn { data, n, reply } => {
+                    let _ = reply.send(runtime.tcn(&data, n));
+                }
+            }
+        }
+    }
+
+    pub fn handle(&self) -> ExecHandle {
+        self.handle.clone()
+    }
+
+    pub fn spec(&self) -> RuntimeSpec {
+        self.handle.spec
+    }
+}
+
+impl Drop for ExecService {
+    fn drop(&mut self) {
+        // The service thread exits once every ExecHandle (sender clone) is
+        // gone; joining here would deadlock while callers still hold
+        // handles, so the thread is detached instead.
+        let _ = self.join.take();
+    }
+}
+
+impl ExecHandle {
+    pub fn spec(&self) -> RuntimeSpec {
+        self.spec
+    }
+
+    pub fn has_tcn(&self) -> bool {
+        self.has_tcn
+    }
+
+    fn roundtrip(
+        &self,
+        make: impl FnOnce(SyncSender<Result<Vec<f32>>>) -> Request,
+    ) -> Result<Vec<f32>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .send(make(reply_tx))
+            .map_err(|_| Error::runtime("exec service is down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::runtime("exec service dropped reply"))?
+    }
+
+    /// Encode `n` blocks (`[n, S, kt, by, bx]` f32) to `[n, latent]`.
+    pub fn encode(&self, data: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Request::Encode { data, n, reply })
+    }
+
+    /// Decode `n` latents to `[n, S, kt, by, bx]`.
+    pub fn decode(&self, data: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Request::Decode { data, n, reply })
+    }
+
+    /// Tensor-correct `n` species vectors `[n, S]`.
+    pub fn tcn(&self, data: Vec<f32>, n: usize) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Request::Tcn { data, n, reply })
+    }
+}

@@ -1,0 +1,222 @@
+//! SZ pipeline assembly: predictor -> bins -> Huffman (`IntCodec`) -> zstd,
+//! with per-field auto predictor selection (SZ3 behaviour).
+
+use crate::entropy::IntCodec;
+use crate::error::{Error, Result};
+use crate::sz::interp::Interp3;
+use crate::sz::lorenzo::Lorenzo3;
+use crate::sz::quantizer::{ErrorBoundQuantizer, Sym};
+use crate::sz::SzField;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Predictor selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SzMode {
+    Lorenzo,
+    Interp,
+    /// Compress with both, keep the smaller payload (per field).
+    Auto,
+}
+
+impl SzMode {
+    pub fn parse(s: &str) -> Option<SzMode> {
+        match s {
+            "lorenzo" => Some(SzMode::Lorenzo),
+            "interp" => Some(SzMode::Interp),
+            "auto" => Some(SzMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+fn encode_syms(syms: &[Sym]) -> Result<Vec<u8>> {
+    let mut bins = Vec::with_capacity(syms.len());
+    let mut escapes: Vec<f32> = Vec::new();
+    const ESC: i64 = i64::MIN + 1;
+    for s in syms {
+        match s {
+            Sym::Bin(b) => bins.push(*b),
+            Sym::Escape(v) => {
+                bins.push(ESC);
+                escapes.push(*v);
+            }
+        }
+    }
+    let mut w = ByteWriter::new();
+    w.blob(&IntCodec::encode(&bins)?);
+    w.u64(escapes.len() as u64);
+    w.f32s(&escapes);
+    Ok(w.finish())
+}
+
+fn decode_syms(buf: &[u8], n: usize) -> Result<Vec<Sym>> {
+    let mut r = ByteReader::new(buf);
+    let bins = IntCodec::decode(r.blob()?)?;
+    let n_esc = r.u64()? as usize;
+    let escapes = r.f32s(n_esc)?;
+    if bins.len() != n {
+        return Err(Error::codec(format!(
+            "sz: expected {n} symbols, got {}",
+            bins.len()
+        )));
+    }
+    const ESC: i64 = i64::MIN + 1;
+    let mut ei = 0;
+    let syms = bins
+        .into_iter()
+        .map(|b| {
+            if b == ESC {
+                let v = escapes.get(ei).copied().unwrap_or(0.0);
+                ei += 1;
+                Sym::Escape(v)
+            } else {
+                Sym::Bin(b)
+            }
+        })
+        .collect();
+    Ok(syms)
+}
+
+fn compress_one(
+    field: &[f32],
+    dims: (usize, usize, usize),
+    eb: f64,
+    mode: SzMode,
+) -> Result<Vec<u8>> {
+    let q = ErrorBoundQuantizer::new(eb);
+    let mut work = field.to_vec();
+    let mut syms = Vec::with_capacity(field.len());
+    match mode {
+        SzMode::Lorenzo => Lorenzo3::new(dims.0, dims.1, dims.2).compress(&mut work, &q, &mut syms),
+        SzMode::Interp => {
+            Interp3::new(dims.0, dims.1, dims.2).compress(&mut work, &q, &mut syms)?
+        }
+        SzMode::Auto => unreachable!(),
+    }
+    let raw = encode_syms(&syms)?;
+    // lossless backend (zstd level 3, SZ3's default-ish)
+    zstd::bulk::compress(&raw, 3).map_err(|e| Error::codec(format!("zstd: {e}")))
+}
+
+/// Compress one scalar field `[nt, ny, nx]` under absolute error bound `eb`.
+pub fn sz_compress(
+    field: &[f32],
+    dims: (usize, usize, usize),
+    eb: f64,
+    mode: SzMode,
+) -> Result<SzField> {
+    assert_eq!(field.len(), dims.0 * dims.1 * dims.2);
+    let (mode, payload) = match mode {
+        SzMode::Auto => {
+            let lz = compress_one(field, dims, eb, SzMode::Lorenzo)?;
+            let ip = compress_one(field, dims, eb, SzMode::Interp)?;
+            if ip.len() <= lz.len() {
+                (SzMode::Interp, ip)
+            } else {
+                (SzMode::Lorenzo, lz)
+            }
+        }
+        m => (m, compress_one(field, dims, eb, m)?),
+    };
+    Ok(SzField {
+        mode,
+        eb,
+        dims,
+        payload,
+    })
+}
+
+/// Decompress a field produced by [`sz_compress`].
+pub fn sz_decompress(f: &SzField) -> Result<Vec<f32>> {
+    let n = f.dims.0 * f.dims.1 * f.dims.2;
+    let raw = zstd::bulk::decompress(&f.payload, n * 16 + (1 << 20))
+        .map_err(|e| Error::codec(format!("zstd: {e}")))?;
+    let syms = decode_syms(&raw, n)?;
+    let q = ErrorBoundQuantizer::new(f.eb);
+    let mut out = vec![0.0f32; n];
+    match f.mode {
+        SzMode::Lorenzo => Lorenzo3::new(f.dims.0, f.dims.1, f.dims.2).decompress(
+            &mut out,
+            &q,
+            &mut syms.into_iter(),
+        )?,
+        SzMode::Interp => Interp3::new(f.dims.0, f.dims.1, f.dims.2).decompress(
+            &mut out,
+            &q,
+            &mut syms.into_iter(),
+        )?,
+        SzMode::Auto => return Err(Error::codec("sz: Auto is not a stored mode")),
+    }
+    Ok(out)
+}
+
+/// Serialized size of a compressed field including headers.
+pub fn sz_payload_bytes(f: &SzField) -> usize {
+    // mode(1) + eb(8) + dims(24) + payload length prefix(8)
+    41 + f.payload.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Profile};
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_both_modes_respect_bound() {
+        let ds = generate(Profile::Tiny, 11);
+        let f = ds.species_field(5); // CO
+        let dims = (ds.nt, ds.ny, ds.nx);
+        for mode in [SzMode::Lorenzo, SzMode::Interp] {
+            let eb = 1e-4 * 0.05; // small absolute bound
+            let c = sz_compress(&f.data, dims, eb, mode).unwrap();
+            let out = sz_decompress(&c).unwrap();
+            for (a, b) in f.data.iter().zip(&out) {
+                assert!(((a - b).abs() as f64) <= eb + 1e-9, "{mode:?}");
+            }
+            assert!(c.payload.len() < f.data.len() * 4);
+        }
+    }
+
+    #[test]
+    fn auto_picks_not_worse() {
+        let ds = generate(Profile::Tiny, 12);
+        let f = ds.species_field(4); // H2O
+        let dims = (ds.nt, ds.ny, ds.nx);
+        let eb = 1e-5;
+        let a = sz_compress(&f.data, dims, eb, SzMode::Auto).unwrap();
+        let l = sz_compress(&f.data, dims, eb, SzMode::Lorenzo).unwrap();
+        let i = sz_compress(&f.data, dims, eb, SzMode::Interp).unwrap();
+        assert!(a.payload.len() <= l.payload.len().min(i.payload.len()));
+        let out = sz_decompress(&a).unwrap();
+        for (x, y) in f.data.iter().zip(&out) {
+            assert!(((x - y).abs() as f64) <= eb + 1e-9);
+        }
+    }
+
+    #[test]
+    fn tighter_bound_bigger_payload() {
+        let ds = generate(Profile::Tiny, 13);
+        let f = ds.species_field(1); // O2
+        let dims = (ds.nt, ds.ny, ds.nx);
+        let tight = sz_compress(&f.data, dims, 1e-7, SzMode::Interp).unwrap();
+        let loose = sz_compress(&f.data, dims, 1e-3, SzMode::Interp).unwrap();
+        assert!(tight.payload.len() > loose.payload.len());
+    }
+
+    #[test]
+    fn random_noise_still_bounded() {
+        // worst case for prediction: white noise
+        let mut rng = Prng::new(7);
+        let dims = (3, 17, 19);
+        let f: Vec<f32> = (0..dims.0 * dims.1 * dims.2)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let eb = 0.01;
+        let c = sz_compress(&f, dims, eb, SzMode::Auto).unwrap();
+        let out = sz_decompress(&c).unwrap();
+        for (a, b) in f.iter().zip(&out) {
+            assert!(((a - b).abs() as f64) <= eb + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Multilevel spline-interpolation predictor (SZ3's flagship, §II-D:
+//! "from linear to cubic spline interpolation is selected according to the
+//! prediction accuracy").
+//!
+//! A coarse base grid (stride `SMAX`) is coded first with delta prediction;
+//! then, level by level (stride halving each time), the remaining points
+//! are predicted by 1D interpolation along one axis per pass — cubic when
+//! four aligned neighbors exist, linear otherwise.  Knownness of neighbors
+//! is purely geometric, so the decompressor replays the identical schedule
+//! over its reconstruction buffer.
+
+use crate::error::{Error, Result};
+use crate::sz::quantizer::{ErrorBoundQuantizer, Sym};
+
+const SMAX: usize = 32;
+
+pub struct Interp3 {
+    pub nt: usize,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+#[derive(Clone, Copy)]
+enum Axis {
+    T,
+    Y,
+    X,
+}
+
+impl Interp3 {
+    pub fn new(nt: usize, ny: usize, nx: usize) -> Self {
+        Self { nt, ny, nx }
+    }
+
+    #[inline]
+    fn idx(&self, t: usize, y: usize, x: usize) -> usize {
+        (t * self.ny + y) * self.nx + x
+    }
+
+    /// 1D interpolation along `axis` at (t,y,x) with step `s`, reading the
+    /// reconstruction buffer.  Cubic if 4 aligned neighbors exist.
+    fn predict(&self, r: &[f32], t: usize, y: usize, x: usize, s: usize, axis: Axis) -> f64 {
+        let (pos, extent) = match axis {
+            Axis::T => (t, self.nt),
+            Axis::Y => (y, self.ny),
+            Axis::X => (x, self.nx),
+        };
+        let get = |p: usize| -> f64 {
+            let (tt, yy, xx) = match axis {
+                Axis::T => (p, y, x),
+                Axis::Y => (t, p, x),
+                Axis::X => (t, y, p),
+            };
+            r[self.idx(tt, yy, xx)] as f64
+        };
+        let has_l = pos >= s;
+        let has_r = pos + s < extent;
+        let has_ll = pos >= 3 * s;
+        let has_rr = pos + 3 * s < extent;
+        match (has_l, has_r) {
+            (true, true) => {
+                if has_ll && has_rr {
+                    // cubic: -1/16, 9/16, 9/16, -1/16
+                    (-get(pos - 3 * s) + 9.0 * get(pos - s) + 9.0 * get(pos + s)
+                        - get(pos + 3 * s))
+                        / 16.0
+                } else {
+                    0.5 * (get(pos - s) + get(pos + s))
+                }
+            }
+            (true, false) => get(pos - s),
+            (false, true) => get(pos + s),
+            (false, false) => 0.0,
+        }
+    }
+
+    /// Visit every point in schedule order, calling `f(index, prediction)`;
+    /// `f` must write the reconstructed value into the buffer it owns.
+    fn schedule<F: FnMut(usize, f64, &mut [f32]) -> Result<()>>(
+        &self,
+        buf: &mut [f32],
+        mut f: F,
+    ) -> Result<()> {
+        // 1. base grid (stride SMAX): raster order, delta from previous base
+        let mut prev = 0.0f64;
+        for t in (0..self.nt).step_by(SMAX) {
+            for y in (0..self.ny).step_by(SMAX) {
+                for x in (0..self.nx).step_by(SMAX) {
+                    let i = self.idx(t, y, x);
+                    f(i, prev, buf)?;
+                    prev = buf[i] as f64;
+                }
+            }
+        }
+        // 2. levels: stride s = SMAX/2 .. 1
+        let mut s = SMAX / 2;
+        while s >= 1 {
+            let s2 = s * 2;
+            // pass along T: t odd multiple of s, y/x on 2s grid
+            for t in (s..self.nt).step_by(s2) {
+                for y in (0..self.ny).step_by(s2) {
+                    for x in (0..self.nx).step_by(s2) {
+                        let p = self.predict(buf, t, y, x, s, Axis::T);
+                        f(self.idx(t, y, x), p, buf)?;
+                    }
+                }
+            }
+            // pass along Y: t on s grid, y odd multiple of s, x on 2s grid
+            for t in (0..self.nt).step_by(s) {
+                for y in (s..self.ny).step_by(s2) {
+                    for x in (0..self.nx).step_by(s2) {
+                        let p = self.predict(buf, t, y, x, s, Axis::Y);
+                        f(self.idx(t, y, x), p, buf)?;
+                    }
+                }
+            }
+            // pass along X: t,y on s grid, x odd multiple of s
+            for t in (0..self.nt).step_by(s) {
+                for y in (0..self.ny).step_by(s) {
+                    for x in (s..self.nx).step_by(s2) {
+                        let p = self.predict(buf, t, y, x, s, Axis::X);
+                        f(self.idx(t, y, x), p, buf)?;
+                    }
+                }
+            }
+            s /= 2;
+        }
+        Ok(())
+    }
+
+    /// Compress: `data` is overwritten with the reconstruction.
+    pub fn compress(
+        &self,
+        data: &mut [f32],
+        q: &ErrorBoundQuantizer,
+        syms: &mut Vec<Sym>,
+    ) -> Result<()> {
+        self.schedule(data, |i, pred, buf| {
+            let (sym, recon) = q.quantize(buf[i] as f64, pred);
+            syms.push(sym);
+            buf[i] = recon as f32;
+            Ok(())
+        })
+    }
+
+    /// Decompress into `out` (zeroed), consuming symbols in schedule order.
+    pub fn decompress<I: Iterator<Item = Sym>>(
+        &self,
+        out: &mut [f32],
+        q: &ErrorBoundQuantizer,
+        syms: &mut I,
+    ) -> Result<()> {
+        self.schedule(out, |i, pred, buf| {
+            let sym = syms
+                .next()
+                .ok_or_else(|| Error::codec("interp: symbol underrun"))?;
+            buf[i] = match sym {
+                Sym::Bin(b) => q.reconstruct(b, pred) as f32,
+                Sym::Escape(lit) => lit,
+            };
+            Ok(())
+        })
+    }
+
+    /// Total points the schedule visits (must equal field size).
+    pub fn n_points(&self) -> usize {
+        self.nt * self.ny * self.nx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn smooth_field(nt: usize, ny: usize, nx: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        let (a, b) = (rng.next_f32(), rng.next_f32());
+        let mut v = Vec::with_capacity(nt * ny * nx);
+        for t in 0..nt {
+            for y in 0..ny {
+                for x in 0..nx {
+                    v.push(
+                        ((t as f32) * 0.4 + a).sin() * ((y as f32) * 0.11 + b).cos()
+                            + ((x as f32) * 0.09).sin(),
+                    );
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn schedule_visits_every_point_once() {
+        for (nt, ny, nx) in [(8, 40, 40), (16, 80, 80), (5, 33, 17), (1, 1, 1), (3, 7, 70)] {
+            let ip = Interp3::new(nt, ny, nx);
+            let mut buf = vec![0.0f32; nt * ny * nx];
+            let mut seen = vec![0u8; nt * ny * nx];
+            ip.schedule(&mut buf, |i, _pred, _buf| {
+                seen[i] += 1;
+                Ok(())
+            })
+            .unwrap();
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "{nt}x{ny}x{nx}: min {:?} max {:?}",
+                seen.iter().min(),
+                seen.iter().max()
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrip_within_bound() {
+        let (nt, ny, nx) = (8, 30, 28);
+        let orig = smooth_field(nt, ny, nx, 3);
+        let eb = 1e-4;
+        let q = ErrorBoundQuantizer::new(eb);
+        let ip = Interp3::new(nt, ny, nx);
+        let mut work = orig.clone();
+        let mut syms = Vec::new();
+        ip.compress(&mut work, &q, &mut syms).unwrap();
+        let mut out = vec![0.0f32; orig.len()];
+        ip.decompress(&mut out, &q, &mut syms.iter().cloned())
+            .unwrap();
+        for (a, b) in orig.iter().zip(&out) {
+            assert!((a - b).abs() as f64 <= eb + 1e-9);
+        }
+        assert_eq!(out, work);
+    }
+
+    #[test]
+    fn smooth_data_mostly_zero_bins() {
+        let (nt, ny, nx) = (8, 64, 64);
+        let orig = smooth_field(nt, ny, nx, 4);
+        let q = ErrorBoundQuantizer::new(1e-3);
+        let ip = Interp3::new(nt, ny, nx);
+        let mut work = orig.clone();
+        let mut syms = Vec::new();
+        ip.compress(&mut work, &q, &mut syms).unwrap();
+        let zeros = syms.iter().filter(|s| matches!(s, Sym::Bin(0))).count();
+        assert!(
+            zeros as f64 > 0.5 * syms.len() as f64,
+            "only {}/{} zero bins",
+            zeros,
+            syms.len()
+        );
+    }
+}

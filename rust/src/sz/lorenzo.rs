@@ -1,0 +1,156 @@
+//! 3D Lorenzo predictor (SZ1.4 / SZ2's fallback).
+//!
+//! Predicts x[t,y,x] from its seven already-processed neighbors:
+//! p = a+b+c - ab-ac-bc + abc (inclusion–exclusion on the unit cube).
+//! Compression and decompression share `process`, which walks the field in
+//! raster order reading *reconstructed* values — the property that makes
+//! the decompressor's predictions identical to the compressor's.
+
+use crate::sz::quantizer::{ErrorBoundQuantizer, Sym};
+
+/// Raster-order Lorenzo pass.  `recon` starts as a copy of the input on
+/// compression (values are replaced in place by reconstructions) or as a
+/// zero buffer on decompression.  `emit` produces the symbol stream on
+/// compression; `next_sym` supplies it on decompression.
+pub struct Lorenzo3 {
+    pub nt: usize,
+    pub ny: usize,
+    pub nx: usize,
+}
+
+impl Lorenzo3 {
+    pub fn new(nt: usize, ny: usize, nx: usize) -> Self {
+        Self { nt, ny, nx }
+    }
+
+    #[inline]
+    fn predict(&self, r: &[f32], t: usize, y: usize, x: usize) -> f64 {
+        let nx = self.nx;
+        let ny = self.ny;
+        let at = |tt: usize, yy: usize, xx: usize| -> f64 { r[(tt * ny + yy) * nx + xx] as f64 };
+        let mut p = 0.0;
+        if x > 0 {
+            p += at(t, y, x - 1);
+        }
+        if y > 0 {
+            p += at(t, y - 1, x);
+        }
+        if t > 0 {
+            p += at(t - 1, y, x);
+        }
+        if x > 0 && y > 0 {
+            p -= at(t, y - 1, x - 1);
+        }
+        if x > 0 && t > 0 {
+            p -= at(t - 1, y, x - 1);
+        }
+        if y > 0 && t > 0 {
+            p -= at(t - 1, y - 1, x);
+        }
+        if x > 0 && y > 0 && t > 0 {
+            p += at(t - 1, y - 1, x - 1);
+        }
+        p
+    }
+
+    /// Compress: fills `syms` and overwrites `data` with reconstructions.
+    pub fn compress(&self, data: &mut [f32], q: &ErrorBoundQuantizer, syms: &mut Vec<Sym>) {
+        for t in 0..self.nt {
+            for y in 0..self.ny {
+                for x in 0..self.nx {
+                    let i = (t * self.ny + y) * self.nx + x;
+                    let pred = self.predict(data, t, y, x);
+                    let (sym, recon) = q.quantize(data[i] as f64, pred);
+                    syms.push(sym);
+                    data[i] = recon as f32;
+                }
+            }
+        }
+    }
+
+    /// Decompress: consumes symbols in the same order.
+    pub fn decompress<I: Iterator<Item = Sym>>(
+        &self,
+        out: &mut [f32],
+        q: &ErrorBoundQuantizer,
+        syms: &mut I,
+    ) -> crate::error::Result<()> {
+        for t in 0..self.nt {
+            for y in 0..self.ny {
+                for x in 0..self.nx {
+                    let i = (t * self.ny + y) * self.nx + x;
+                    let pred = self.predict(out, t, y, x);
+                    let sym = syms
+                        .next()
+                        .ok_or_else(|| crate::error::Error::codec("lorenzo: symbol underrun"))?;
+                    out[i] = match sym {
+                        Sym::Bin(b) => q.reconstruct(b, pred) as f32,
+                        Sym::Escape(lit) => lit,
+                    };
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn smooth_field(nt: usize, ny: usize, nx: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        let (a, b, c) = (rng.next_f32(), rng.next_f32(), rng.next_f32());
+        let mut v = Vec::with_capacity(nt * ny * nx);
+        for t in 0..nt {
+            for y in 0..ny {
+                for x in 0..nx {
+                    v.push(
+                        ((t as f32) * 0.3 + a).sin()
+                            + ((y as f32) * 0.2 + b).cos() * ((x as f32) * 0.15 + c).sin(),
+                    );
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn roundtrip_within_bound() {
+        let (nt, ny, nx) = (6, 20, 20);
+        let orig = smooth_field(nt, ny, nx, 1);
+        let eb = 1e-4;
+        let q = ErrorBoundQuantizer::new(eb);
+        let lz = Lorenzo3::new(nt, ny, nx);
+
+        let mut work = orig.clone();
+        let mut syms = Vec::new();
+        lz.compress(&mut work, &q, &mut syms);
+
+        let mut out = vec![0.0f32; orig.len()];
+        lz.decompress(&mut out, &q, &mut syms.iter().cloned())
+            .unwrap();
+        for (a, b) in orig.iter().zip(&out) {
+            assert!((a - b).abs() as f64 <= eb + 1e-9, "{a} vs {b}");
+        }
+        // decompressor output must equal compressor's reconstruction
+        assert_eq!(out, work);
+    }
+
+    #[test]
+    fn smooth_fields_yield_small_bins() {
+        let (nt, ny, nx) = (4, 24, 24);
+        let orig = smooth_field(nt, ny, nx, 2);
+        let q = ErrorBoundQuantizer::new(1e-3);
+        let lz = Lorenzo3::new(nt, ny, nx);
+        let mut work = orig.clone();
+        let mut syms = Vec::new();
+        lz.compress(&mut work, &q, &mut syms);
+        let small = syms
+            .iter()
+            .filter(|s| matches!(s, Sym::Bin(b) if b.abs() < 32))
+            .count();
+        assert!(small as f64 > 0.95 * syms.len() as f64);
+    }
+}

@@ -1,0 +1,31 @@
+//! SZ3-style error-bounded lossy compressor — the paper's baseline (§II-D).
+//!
+//! Prediction-based: each scalar is predicted from already-*decompressed*
+//! neighbors, the prediction error is quantized on a linear scale bounded
+//! by the user's absolute error bound, the quantization bins are Huffman
+//! coded and the stream is zstd'd.  Two predictors, per-field auto-select
+//! (SZ3 behaviour):
+//! * `lorenzo` — 3D Lorenzo (SZ1.4/SZ2 fallback predictor),
+//! * `interp`  — multilevel cubic/linear spline interpolation (SZ3's
+//!   flagship predictor).
+//!
+//! Like SZ, each scalar field (one species' `[T, Y, X]` trajectory) is
+//! compressed independently — the paper contrasts this with GBATC's use of
+//! cross-species structure.
+
+pub mod codec;
+pub mod interp;
+pub mod lorenzo;
+pub mod quantizer;
+
+pub use codec::{sz_compress, sz_decompress, SzMode};
+pub use quantizer::ErrorBoundQuantizer;
+
+/// Compressed payload for one scalar field.
+#[derive(Clone, Debug)]
+pub struct SzField {
+    pub mode: SzMode,
+    pub eb: f64,
+    pub dims: (usize, usize, usize),
+    pub payload: Vec<u8>,
+}

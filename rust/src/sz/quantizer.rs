@@ -1,0 +1,89 @@
+//! SZ's linear-scale error-bounded quantizer with literal escape.
+//!
+//! Prediction error `e` maps to bin `round(e / (2*eb))`; reconstruction
+//! `pred + 2*eb*bin` is within `eb` of the original.  Errors too large for
+//! the bin range escape to a raw f32 literal (bin = ESCAPE), which still
+//! satisfies the bound trivially (within f32 rounding of the original).
+
+/// Quantizer state for one field.
+#[derive(Clone, Copy, Debug)]
+pub struct ErrorBoundQuantizer {
+    pub eb: f64,
+    pub max_bin: i64,
+}
+
+/// Symbol emitted per value: a bin or an escape literal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sym {
+    Bin(i64),
+    Escape(f32),
+}
+
+impl ErrorBoundQuantizer {
+    pub fn new(eb: f64) -> Self {
+        assert!(eb > 0.0 && eb.is_finite());
+        Self {
+            eb,
+            max_bin: 1 << 20,
+        }
+    }
+
+    /// Quantize `x` against prediction `pred`; returns the symbol and the
+    /// reconstructed value the decompressor will see.
+    #[inline]
+    pub fn quantize(&self, x: f64, pred: f64) -> (Sym, f64) {
+        let bin = ((x - pred) / (2.0 * self.eb)).round();
+        if bin.abs() as i64 > self.max_bin || !bin.is_finite() {
+            let lit = x as f32;
+            (Sym::Escape(lit), lit as f64)
+        } else {
+            let b = bin as i64;
+            (Sym::Bin(b), pred + 2.0 * self.eb * b as f64)
+        }
+    }
+
+    /// Decompressor side: reconstruct from a bin symbol.
+    #[inline]
+    pub fn reconstruct(&self, bin: i64, pred: f64) -> f64 {
+        pred + 2.0 * self.eb * bin as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn error_bound_holds() {
+        let q = ErrorBoundQuantizer::new(1e-3);
+        let mut rng = Prng::new(1);
+        for _ in 0..20_000 {
+            let x = rng.uniform(-10.0, 10.0);
+            let pred = x + rng.uniform(-0.5, 0.5);
+            let (sym, recon) = q.quantize(x, pred);
+            match sym {
+                Sym::Bin(b) => {
+                    assert_eq!(recon, q.reconstruct(b, pred));
+                    assert!((x - recon).abs() <= 1e-3 + 1e-12);
+                }
+                Sym::Escape(lit) => assert_eq!(lit as f64, recon),
+            }
+        }
+    }
+
+    #[test]
+    fn escape_on_wild_prediction() {
+        let q = ErrorBoundQuantizer::new(1e-9);
+        let (sym, _) = q.quantize(1e6, -1e6);
+        assert!(matches!(sym, Sym::Escape(_)));
+    }
+
+    #[test]
+    fn perfect_prediction_is_bin_zero() {
+        let q = ErrorBoundQuantizer::new(0.01);
+        let (sym, recon) = q.quantize(3.25, 3.25);
+        assert_eq!(sym, Sym::Bin(0));
+        assert_eq!(recon, 3.25);
+    }
+}

@@ -1,0 +1,194 @@
+//! LSB-first bit streams used by the Huffman coder and the Fig.-2 index
+//! codec.  Writes accumulate into a u64 register and spill whole bytes.
+
+/// Append-only bit writer (LSB-first within each byte).
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n <= 57).
+    #[inline]
+    pub fn write(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || v < (1u64 << n));
+        self.acc |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.buf.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, b: bool) {
+        self.write(b as u64, 1);
+    }
+
+    /// Unary-coded non-negative integer: n ones then a zero.
+    pub fn write_unary(&mut self, n: u64) {
+        for _ in 0..n {
+            self.write_bit(true);
+        }
+        self.write_bit(false);
+    }
+
+    /// Elias-gamma code for v >= 1.
+    pub fn write_gamma(&mut self, v: u64) {
+        debug_assert!(v >= 1);
+        let nbits = 64 - v.leading_zeros();
+        self.write_unary((nbits - 1) as u64);
+        if nbits > 1 {
+            self.write(v & !(1 << (nbits - 1)), nbits - 1);
+        }
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush to a byte vector (zero-padded to a byte boundary).
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push((self.acc & 0xFF) as u8);
+        }
+        self.buf
+    }
+}
+
+/// Reader matching [`BitWriter`]'s layout.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n <= 57); returns None past end-of-stream.
+    #[inline]
+    pub fn read(&mut self, n: u32) -> Option<u64> {
+        if self.pos + n as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut v = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte = self.buf[(self.pos + got as usize) / 8];
+            let bit_off = ((self.pos + got as usize) % 8) as u32;
+            let take = (8 - bit_off).min(n - got);
+            let bits = ((byte >> bit_off) as u64) & ((1u64 << take) - 1);
+            v |= bits << got;
+            got += take;
+        }
+        self.pos += n as usize;
+        Some(v)
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read(1).map(|b| b != 0)
+    }
+
+    pub fn read_unary(&mut self) -> Option<u64> {
+        let mut n = 0;
+        loop {
+            match self.read_bit()? {
+                true => n += 1,
+                false => return Some(n),
+            }
+        }
+    }
+
+    pub fn read_gamma(&mut self) -> Option<u64> {
+        let extra = self.read_unary()? as u32;
+        if extra == 0 {
+            return Some(1);
+        }
+        let low = self.read(extra)?;
+        Some((1 << extra) | low)
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn roundtrip_fixed_widths() {
+        let mut w = BitWriter::new();
+        w.write(0b101, 3);
+        w.write(0xDEAD, 16);
+        w.write(1, 1);
+        w.write(0x1FFFFF, 21);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(3), Some(0b101));
+        assert_eq!(r.read(16), Some(0xDEAD));
+        assert_eq!(r.read(1), Some(1));
+        assert_eq!(r.read(21), Some(0x1FFFFF));
+    }
+
+    #[test]
+    fn roundtrip_random_sequence() {
+        let mut rng = Prng::new(99);
+        let items: Vec<(u64, u32)> = (0..2000)
+            .map(|_| {
+                let n = 1 + rng.index(57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1).max(1);
+                (v.min((1u64 << n) - 1), n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &items {
+            w.write(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &items {
+            assert_eq!(r.read(n), Some(v));
+        }
+    }
+
+    #[test]
+    fn unary_and_gamma() {
+        let mut w = BitWriter::new();
+        for i in 0..40u64 {
+            w.write_unary(i % 7);
+            w.write_gamma(i + 1);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for i in 0..40u64 {
+            assert_eq!(r.read_unary(), Some(i % 7));
+            assert_eq!(r.read_gamma(), Some(i + 1));
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write(0b11, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(8), Some(0b11)); // padded zeros
+        assert_eq!(r.read(1), None);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small shared utilities: PRNG, bit streams, byte codecs, property-test
+//! driver, and timers.  All hand-rolled — the offline image vendors no
+//! rand/serde/proptest (see DESIGN.md §2).
+
+pub mod bits;
+pub mod bytes;
+pub mod prng;
+pub mod prop;
+pub mod timer;
+
+pub use bits::{BitReader, BitWriter};
+pub use prng::Prng;
+pub use timer::Timer;

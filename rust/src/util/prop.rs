@@ -1,0 +1,93 @@
+//! Minimal property-based testing driver (the offline image has no proptest).
+//!
+//! `check` runs a property over `n` random cases; on failure it performs a
+//! bounded shrink search (halving numeric parameters via the case's own
+//! `shrink` hook) and panics with the smallest failing case found.
+
+use crate::util::Prng;
+
+/// A generated test case: how to build one and how to shrink it.
+pub trait Arbitrary: Clone + std::fmt::Debug {
+    fn generate(rng: &mut Prng) -> Self;
+    /// Candidate smaller versions of `self` (default: none).
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `n` random cases with deterministic seeding.
+pub fn check<T: Arbitrary, F: Fn(&T) -> bool>(seed: u64, n: usize, prop: F) {
+    let mut rng = Prng::new(seed);
+    for i in 0..n {
+        let case = T::generate(&mut rng);
+        if !prop(&case) {
+            let minimal = shrink_loop(case, &prop);
+            panic!("property failed (seed {seed}, case {i}): {minimal:#?}");
+        }
+    }
+}
+
+fn shrink_loop<T: Arbitrary, F: Fn(&T) -> bool>(mut failing: T, prop: &F) -> T {
+    // bounded: at most 200 shrink steps
+    'outer: for _ in 0..200 {
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+/// Helper: random f32 vector with values spanning several magnitudes —
+/// matches CFD species data (1e-9 .. 1e-1) better than uniform [0,1).
+pub fn cfd_like_vec(rng: &mut Prng, n: usize) -> Vec<f32> {
+    let scale = 10f64.powf(rng.uniform(-9.0, -1.0));
+    (0..n)
+        .map(|_| (rng.normal() * scale) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug)]
+    struct SmallVec(Vec<u32>);
+
+    impl Arbitrary for SmallVec {
+        fn generate(rng: &mut Prng) -> Self {
+            let n = rng.index(20);
+            SmallVec((0..n).map(|_| rng.next_u64() as u32 % 100).collect())
+        }
+        fn shrink(&self) -> Vec<Self> {
+            let mut out = Vec::new();
+            if !self.0.is_empty() {
+                out.push(SmallVec(self.0[..self.0.len() / 2].to_vec()));
+                out.push(SmallVec(self.0[1..].to_vec()));
+            }
+            out
+        }
+    }
+
+    #[test]
+    fn passing_property_passes() {
+        check::<SmallVec, _>(1, 200, |v| v.0.len() < 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_shrinks_and_panics() {
+        check::<SmallVec, _>(2, 200, |v| v.0.len() < 5);
+    }
+
+    #[test]
+    fn cfd_like_vec_spans_magnitudes() {
+        let mut rng = Prng::new(5);
+        let v = cfd_like_vec(&mut rng, 100);
+        assert_eq!(v.len(), 100);
+        assert!(v.iter().any(|x| *x != 0.0));
+    }
+}

@@ -1,0 +1,91 @@
+//! Wall-clock timing + a micro-bench helper for the criterion-less benches.
+
+use std::time::{Duration, Instant};
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Bench statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3} ms  min {:>10.3} ms  max {:>10.3} ms  sd {:>8.3} ms  ({} iters)",
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` discarded iterations then `iters` measured.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    BenchStats {
+        iters,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let stats = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.min_s <= stats.mean_s && stats.mean_s <= stats.max_s);
+    }
+}

@@ -1,0 +1,109 @@
+//! CLI integration: drives the `gbatc` binary end-to-end through
+//! gen-data -> compress -> decompress -> evaluate -> info -> sz.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gbatc")
+}
+
+fn artifacts() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .output()
+        .expect("spawn gbatc");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn cli_help_and_unknown_command() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("compress"));
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn cli_full_pipeline() {
+    if !artifacts().join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let dir = std::env::temp_dir().join("gbatc_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = dir.join("ds.sdf");
+    let gba = dir.join("ds.gba");
+    let rec = dir.join("rec.sdf");
+    let szf = dir.join("ds.szf");
+    let art = artifacts();
+    let art = art.to_str().unwrap();
+
+    let (ok, text) = run(&[
+        "gen-data", "--out", ds.to_str().unwrap(), "--profile", "tiny", "--seed", "3",
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "compress", "--input", ds.to_str().unwrap(), "--output", gba.to_str().unwrap(),
+        "--nrmse", "1e-3", "--artifacts", art,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("CR"));
+
+    let (ok, text) = run(&[
+        "decompress", "--input", gba.to_str().unwrap(), "--output", rec.to_str().unwrap(),
+        "--temp-from", ds.to_str().unwrap(), "--artifacts", art,
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "evaluate", "--orig", ds.to_str().unwrap(), "--recon", rec.to_str().unwrap(),
+        "--species", "C2H3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("mean NRMSE"), "{text}");
+    // parse the mean NRMSE and check the bound
+    let mean: f64 = text
+        .lines()
+        .find(|l| l.contains("mean NRMSE"))
+        .and_then(|l| l.split(':').nth(1))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("parse NRMSE");
+    assert!(mean <= 1.05e-3, "CLI round trip NRMSE {mean}");
+
+    let (ok, text) = run(&["info", "--archive", gba.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("GBATC archive"));
+
+    let (ok, text) = run(&[
+        "sz", "--input", ds.to_str().unwrap(), "--output", szf.to_str().unwrap(),
+        "--nrmse", "1e-3",
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = run(&["info", "--archive", szf.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("SZ archive"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_missing_args_are_clean_errors() {
+    let (ok, text) = run(&["compress", "--input", "x"]);
+    assert!(!ok);
+    assert!(text.contains("--output"), "{text}");
+    let (ok, _) = run(&["evaluate"]);
+    assert!(!ok);
+}

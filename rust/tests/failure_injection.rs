@@ -1,0 +1,59 @@
+//! Failure-injection tests: corrupted archives, truncated payloads, and
+//! mismatched artifacts must yield errors, never panics or silent garbage.
+
+use gbatc::archive::Archive;
+use gbatc::compressor::SzArchive;
+
+#[test]
+fn archive_bit_flips_do_not_panic() {
+    // a syntactically valid archive, corrupted at every byte position in a
+    // stride, must either error out or produce a structurally valid result
+    let basis = gbatc::gae::SpeciesBasis::from_mat(&gbatc::linalg::Mat::identity(4), 2);
+    let a = Archive {
+        tcn_used: false,
+        dims: (4, 2, 5, 4),
+        block: (4, 5, 4),
+        latent_dim: 8,
+        pressure: 1e5,
+        ranges: vec![(0.0, 1.0); 2],
+        latent_blob: vec![7; 64],
+        species: vec![
+            gbatc::archive::SpeciesSection { basis: basis.clone(), coeffs: vec![1, 2, 3] },
+            gbatc::archive::SpeciesSection { basis, coeffs: vec![] },
+        ],
+        model_param_bytes: 10,
+        nrmse_target: 1e-3,
+    };
+    let bytes = a.serialize();
+    for i in (0..bytes.len()).step_by(3) {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0xFF;
+        let _ = Archive::deserialize(&corrupt); // must not panic
+    }
+    for cut in [0, 1, 4, bytes.len() / 2, bytes.len() - 1] {
+        assert!(Archive::deserialize(&bytes[..cut]).is_err());
+    }
+}
+
+#[test]
+fn sz_archive_corruption_does_not_panic() {
+    let ds = gbatc::data::generate(gbatc::data::Profile::Tiny, 5);
+    let szc = gbatc::compressor::SzCompressor::new(Default::default());
+    let archive = szc.compress(&ds, 1e-2).unwrap();
+    let bytes = archive.serialize();
+    for i in (0..bytes.len().min(4096)).step_by(7) {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0x55;
+        if let Ok(a) = SzArchive::deserialize(&corrupt) {
+            let _ = szc.decompress(&a); // errors allowed, panics not
+        }
+    }
+}
+
+#[test]
+fn missing_artifacts_is_clean_error() {
+    let r = gbatc::runtime::ExecService::start("/nonexistent/dir", 2);
+    assert!(r.is_err());
+    let msg = format!("{}", r.err().unwrap());
+    assert!(msg.contains("manifest") || msg.contains("artifact"), "{msg}");
+}

@@ -1,0 +1,205 @@
+//! Integration tests over the real AOT artifacts (require `make artifacts`).
+//! These exercise the full L3 stack: PJRT runtime, pipelines, Algorithm 1,
+//! archive round-trip, and the SZ baseline on the same data.
+
+use gbatc::archive::Archive;
+use gbatc::compressor::{CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor};
+use gbatc::config::Manifest;
+use gbatc::data::{generate, io, Profile};
+use gbatc::metrics;
+use gbatc::runtime::ExecService;
+
+fn artifacts_dir() -> String {
+    std::env::var("GBATC_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    })
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&artifacts_dir()).join("manifest.txt").exists()
+}
+
+/// Mean per-species NRMSE between two mass arrays in `[T,S,Y,X]` layout.
+fn mean_species_nrmse(
+    orig: &[f32],
+    recon: &[f32],
+    dims: (usize, usize, usize, usize),
+) -> (Vec<f64>, f64) {
+    let (nt, ns, ny, nx) = dims;
+    let npix = ny * nx;
+    let mut per = Vec::with_capacity(ns);
+    for s in 0..ns {
+        let mut o = Vec::with_capacity(nt * npix);
+        let mut r = Vec::with_capacity(nt * npix);
+        for t in 0..nt {
+            let off = (t * ns + s) * npix;
+            o.extend_from_slice(&orig[off..off + npix]);
+            r.extend_from_slice(&recon[off..off + npix]);
+        }
+        per.push(metrics::nrmse(&o, &r));
+    }
+    let mean = per.iter().sum::<f64>() / ns as f64;
+    (per, mean)
+}
+
+#[test]
+fn gbatc_end_to_end_respects_nrmse_target() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let ds = generate(Profile::Tiny, 77);
+    let service = ExecService::start(&artifacts_dir(), 4).unwrap();
+    let handle = service.handle();
+    let manifest = Manifest::load(format!("{}/manifest.txt", artifacts_dir())).unwrap();
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+
+    let target = 1e-3;
+    let opts = CompressOptions {
+        nrmse_target: target,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    // Algorithm 1 invariant: every block within tau
+    assert!(
+        report.max_block_residual <= report.tau + 1e-9,
+        "residual {} > tau {}",
+        report.max_block_residual,
+        report.tau
+    );
+    let cr = report.archive.compression_ratio();
+    assert!(cr > 1.0, "CR {cr} <= 1");
+
+    // full round trip through bytes
+    let bytes = report.archive.serialize();
+    let archive = Archive::deserialize(&bytes).unwrap();
+    let mass = comp.decompress(&archive, 0).unwrap();
+    assert_eq!(mass.len(), ds.mass.len());
+
+    let (_per, mean) = mean_species_nrmse(&ds.mass, &mass, (ds.nt, ds.ns, ds.ny, ds.nx));
+    // per-block l2 bound implies per-species NRMSE <= target (up to fp)
+    assert!(
+        mean <= target * 1.05,
+        "mean NRMSE {mean} exceeds target {target}"
+    );
+    println!("GBATC tiny: CR {cr:.1}, mean NRMSE {mean:.3e}");
+}
+
+#[test]
+fn gba_without_tcn_also_bounded() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let ds = generate(Profile::Tiny, 78);
+    let service = ExecService::start(&artifacts_dir(), 4).unwrap();
+    let handle = service.handle();
+    let manifest = Manifest::load(format!("{}/manifest.txt", artifacts_dir())).unwrap();
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+    let opts = CompressOptions {
+        nrmse_target: 3e-3,
+        use_tcn: false,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    assert!(!report.archive.tcn_used);
+    let mass = comp.decompress(&report.archive, 0).unwrap();
+    let (_, mean) = mean_species_nrmse(&ds.mass, &mass, (ds.nt, ds.ns, ds.ny, ds.nx));
+    assert!(mean <= 3e-3 * 1.05, "GBA mean NRMSE {mean}");
+}
+
+#[test]
+fn tighter_target_lowers_cr() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let ds = generate(Profile::Tiny, 79);
+    let service = ExecService::start(&artifacts_dir(), 4).unwrap();
+    let handle = service.handle();
+    let manifest = Manifest::load(format!("{}/manifest.txt", artifacts_dir())).unwrap();
+    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+    let mut crs = Vec::new();
+    for target in [1e-2, 1e-3, 3e-4] {
+        let opts = CompressOptions {
+            nrmse_target: target,
+            ..Default::default()
+        };
+        let report = comp.compress(&ds, &opts).unwrap();
+        crs.push(report.archive.compression_ratio());
+    }
+    assert!(
+        crs[0] >= crs[1] && crs[1] >= crs[2],
+        "CRs not monotone: {crs:?}"
+    );
+}
+
+#[test]
+fn encoder_produces_informative_latents() {
+    // Regression test for the elided-constants bug: HLO text prints large
+    // weights as `constant({...})`, which silently zeroes them.  With dead
+    // weights the encoder returns all-zero latents and the PCA guarantee
+    // silently absorbs the entire signal — so assert the latent plane
+    // actually carries information.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let ds = generate(Profile::Tiny, 81);
+    let service = ExecService::start(&artifacts_dir(), 4).unwrap();
+    let handle = service.handle();
+    let spec = handle.spec();
+    let grid = gbatc::data::blocks::BlockGrid::for_dataset(
+        &ds,
+        gbatc::data::blocks::BlockShape::default(),
+    )
+    .unwrap();
+    let ranges = ds.species_ranges();
+    let norm = gbatc::compressor::gba::normalize_mass(&ds, &ranges, 4);
+    let n = spec.batch.min(grid.n_blocks());
+    let batch = gbatc::coordinator::batcher::gather_batch(&grid, &norm, 0, n);
+    let z = handle.encode(batch.clone(), n).unwrap();
+    let mean = z.iter().map(|&v| v as f64).sum::<f64>() / z.len() as f64;
+    let var = z
+        .iter()
+        .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+        .sum::<f64>()
+        / z.len() as f64;
+    assert!(var > 1e-6, "latents are (near-)constant: var {var}");
+
+    // and the decoder round-trip must beat the all-zeros baseline clearly
+    let recon = handle.decode(z, n).unwrap();
+    let mse: f64 = batch
+        .iter()
+        .zip(&recon)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        / batch.len() as f64;
+    let zero_mse: f64 =
+        batch.iter().map(|&a| (a as f64).powi(2)).sum::<f64>() / batch.len() as f64;
+    assert!(
+        mse < 0.25 * zero_mse,
+        "AE no better than zeros: {mse:.3e} vs {zero_mse:.3e}"
+    );
+}
+
+#[test]
+fn sz_baseline_same_data() {
+    let ds = generate(Profile::Tiny, 77);
+    let szc = SzCompressor::new(SzCompressOptions::default());
+    let archive = szc.compress(&ds, 1e-3).unwrap();
+    let mass = szc.decompress(&archive).unwrap();
+    let (_, mean) = mean_species_nrmse(&ds.mass, &mass, (ds.nt, ds.ns, ds.ny, ds.nx));
+    assert!(mean <= 1.2e-3, "SZ mean NRMSE {mean}");
+}
+
+#[test]
+fn dataset_file_roundtrip_through_cli_formats() {
+    let ds = generate(Profile::Tiny, 80);
+    let dir = std::env::temp_dir();
+    let p = dir.join("gbatc_it_ds.bin");
+    io::write_dataset(&p, &ds).unwrap();
+    let ds2 = io::read_dataset(&p).unwrap();
+    assert_eq!(ds.mass, ds2.mass);
+    std::fs::remove_file(p).ok();
+}
