@@ -71,7 +71,7 @@ fn qoi_nrmse(orig: &Dataset, recon_mass: &[f32], stride: usize) -> (Vec<f64>, f6
     metrics::nrmse::nrmse_per_species_f64(&w_o, &w_r, ns)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gbatc::Result<()> {
     let ds = io::read_dataset("artifacts/dataset.bin")?;
     println!(
         "== end-to-end GBATC on artifacts/dataset.bin: {}x{}x{}x{} ({:.1} MB)",

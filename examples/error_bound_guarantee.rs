@@ -13,7 +13,7 @@ use gbatc::data::blocks::{BlockGrid, BlockShape};
 use gbatc::data::{generate, Profile};
 use gbatc::runtime::ExecService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gbatc::Result<()> {
     let ds = generate(Profile::Tiny, 11);
     let service = ExecService::start("artifacts", 4)?;
     let handle = service.handle();

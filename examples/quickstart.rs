@@ -11,7 +11,7 @@ use gbatc::data::{generate, Profile};
 use gbatc::metrics;
 use gbatc::runtime::ExecService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gbatc::Result<()> {
     // 1. a dataset: 8 timesteps x 58 species x 40 x 40 (use `gen-data` or
     //    artifacts/dataset.bin for bigger ones)
     let ds = generate(Profile::Tiny, 42);

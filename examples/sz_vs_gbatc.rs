@@ -14,7 +14,7 @@ use gbatc::data::{generate, Profile};
 use gbatc::metrics;
 use gbatc::runtime::ExecService;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> gbatc::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let profile = Profile::parse(args.first().map(|s| s.as_str()).unwrap_or("small"))
         .expect("profile: tiny|small|medium");

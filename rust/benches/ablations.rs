@@ -66,15 +66,17 @@ fn main() {
     let mut prefix_bits = 0usize;
     let mut raw_bits = 0usize;
     let mut n_sel = 0usize;
-    for sec in &archive.species {
-        let coeffs = CoeffCodec::decode(&sec.coeffs).unwrap();
-        for blk in &coeffs.per_block {
-            let idxs: Vec<usize> = blk.iter().map(|&(j, _)| j).collect();
-            let mut w = BitWriter::new();
-            gbatc::codec::encode_indices(&mut w, &idxs, coeffs.d).unwrap();
-            prefix_bits += w.bit_len();
-            raw_bits += coeffs.d;
-            n_sel += idxs.len();
+    for shard in 0..archive.n_shards() {
+        for sec in archive.species_sections(shard).unwrap() {
+            let coeffs = CoeffCodec::decode(&sec.coeffs).unwrap();
+            for blk in &coeffs.per_block {
+                let idxs: Vec<usize> = blk.iter().map(|&(j, _)| j).collect();
+                let mut w = BitWriter::new();
+                gbatc::codec::encode_indices(&mut w, &idxs, coeffs.d).unwrap();
+                prefix_bits += w.bit_len();
+                raw_bits += coeffs.d;
+                n_sel += idxs.len();
+            }
         }
     }
     println!(

@@ -1,0 +1,104 @@
+//! Partial-decode benchmark: full archive decode vs a single-species,
+//! single-time-window `decompress_range`, with the archive bytes each path
+//! touches.  Runs on the pure-Rust reference backend, so no AOT artifacts
+//! are needed:
+//!
+//! ```bash
+//! cargo bench --bench perf_partial_decode
+//! GBATC_BENCH_PROFILE=small GBATC_KT_WINDOW=4 cargo bench --bench perf_partial_decode
+//! ```
+
+use gbatc::archive::{CountingSource, SectionSource, SliceSource};
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::{generate, Profile};
+use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::util::Timer;
+
+fn main() {
+    let profile = std::env::var("GBATC_BENCH_PROFILE")
+        .ok()
+        .and_then(|p| Profile::parse(&p))
+        .unwrap_or(Profile::Tiny);
+    let kt_window: usize = std::env::var("GBATC_KT_WINDOW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let reps: usize = std::env::var("GBATC_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+
+    eprintln!("[bench] generating {profile:?} dataset...");
+    let ds = generate(profile, 99);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4)
+        .expect("reference service");
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window,
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let report = comp.compress(&ds, &opts).expect("compress");
+    eprintln!(
+        "[bench] compressed {}x{}x{}x{} into {} shards in {:.1}s ({} B archive, peak workspace {:.1} MB)",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        report.n_shards,
+        t.secs(),
+        report.archive.payload_bytes(),
+        report.peak_workspace_bytes as f64 / 1e6
+    );
+    let archive = report.archive;
+
+    println!(
+        "== perf_partial_decode ({}x{}x{}x{}, {} shards, kt_window {})",
+        ds.nt, ds.ns, ds.ny, ds.nx, report.n_shards, archive.header.kt_window
+    );
+
+    // full decode
+    let mut full_s = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Timer::start();
+        let full = comp.decompress(&archive, 0).expect("full decode");
+        full_s = full_s.min(t.secs());
+        assert_eq!(full.len(), ds.mass.len());
+    }
+    println!(
+        "full decode      {:>8.3} ms   {:>10} B read",
+        full_s * 1e3,
+        archive.bytes.len()
+    );
+
+    // one species, one shard window
+    let w = archive.header.kt_window.min(ds.nt);
+    let species = [ds.ns / 2];
+    let mut part_s = f64::INFINITY;
+    let mut bytes_read = 0u64;
+    for _ in 0..reps {
+        let src = SliceSource(&archive.bytes);
+        let counting = CountingSource::new(&src);
+        let t = Timer::start();
+        let out = comp
+            .extract(&counting, 0, w, &species, 0)
+            .expect("partial decode");
+        part_s = part_s.min(t.secs());
+        bytes_read = counting.bytes_read();
+        assert_eq!(out.mass.len(), w * ds.ny * ds.nx);
+        let _ = counting.source_len();
+    }
+    println!(
+        "1 species x 1 win {:>7.3} ms   {:>10} B read",
+        part_s * 1e3,
+        bytes_read
+    );
+    println!(
+        "speedup {:.1}x | IO reduction {:.1}x",
+        full_s / part_s.max(1e-12),
+        archive.bytes.len() as f64 / bytes_read.max(1) as f64
+    );
+}

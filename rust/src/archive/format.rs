@@ -29,6 +29,30 @@ pub struct SpeciesSection {
     pub coeffs: Vec<u8>,
 }
 
+impl SpeciesSection {
+    /// Standalone serialized form — byte-identical to the inline `GBA1`
+    /// encoding, and what the `GBA2` TOC points at per (shard, species).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        self.basis.serialize(&mut w);
+        w.blob(&self.coeffs);
+        w.finish()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<SpeciesSection> {
+        let mut r = ByteReader::new(buf);
+        let basis = SpeciesBasis::deserialize(&mut r)?;
+        let coeffs = r.blob()?.to_vec();
+        if r.remaining() != 0 {
+            return Err(Error::format(format!(
+                "species section: {} trailing bytes",
+                r.remaining()
+            )));
+        }
+        Ok(SpeciesSection { basis, coeffs })
+    }
+}
+
 /// In-memory archive.
 #[derive(Clone, Debug)]
 pub struct Archive {

@@ -1,10 +1,95 @@
-//! The `.gba` archive container — everything the decompressor needs:
-//! dims, per-species normalization ranges, the Huffman-coded latent plane,
-//! and per-species PCA bases + guarantee coefficients.  Model parameters
-//! (decoder + TCN) live in the AOT artifacts shared across archives; their
-//! bytes are charged to the compression ratio by `compressor::accounting`,
-//! following the paper's accounting of "network parameters".
+//! Archive containers — everything the decompressor needs: dims,
+//! per-species normalization ranges, Huffman-coded latent planes, and
+//! per-species PCA bases + guarantee coefficients.
+//!
+//! Two on-disk formats live behind one API:
+//! * **`GBA1`** ([`format::Archive`]) — the legacy single-shot container.
+//! * **`GBA2`** ([`toc::Gba2Archive`]) — the sharded, TOC-indexed
+//!   container with per-(shard, species) byte ranges, enabling
+//!   random-access partial decode through [`toc::SectionSource`].
+//!
+//! [`AnyArchive`] dispatches on the magic so every reader accepts both;
+//! `GBA1` archives convert losslessly into one-shard `GBA2` views.
+//! Model parameters (decoder + TCN) live in the AOT artifacts shared
+//! across archives; their bytes are charged to the compression ratio by
+//! `compressor::accounting`, following the paper's accounting of
+//! "network parameters".
 
 pub mod format;
+pub mod toc;
 
 pub use format::{Archive, SpeciesSection, MAGIC};
+pub use toc::{
+    CountingSource, FileSource, Gba2Archive, Gba2Header, SectionSource, ShardPayload, ShardToc,
+    SliceSource, MAGIC2,
+};
+
+use crate::error::{Error, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// A deserialized archive of either version.
+#[derive(Clone, Debug)]
+pub enum AnyArchive {
+    V1(Archive),
+    V2(Gba2Archive),
+}
+
+impl AnyArchive {
+    /// Parse either format, dispatching on the magic.
+    pub fn deserialize(buf: &[u8]) -> Result<AnyArchive> {
+        if buf.starts_with(MAGIC) {
+            Ok(AnyArchive::V1(Archive::deserialize(buf)?))
+        } else if buf.starts_with(MAGIC2) {
+            Ok(AnyArchive::V2(Gba2Archive::deserialize(buf)?))
+        } else {
+            Err(Error::format(
+                "unknown archive magic (expected GBA1 or GBA2)",
+            ))
+        }
+    }
+
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<AnyArchive> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+        Self::deserialize(&bytes)
+    }
+
+    /// Format version (1 or 2).
+    pub fn version(&self) -> u16 {
+        match self {
+            AnyArchive::V1(_) => 1,
+            AnyArchive::V2(_) => 2,
+        }
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize, usize) {
+        match self {
+            AnyArchive::V1(a) => a.dims,
+            AnyArchive::V2(a) => a.header.dims,
+        }
+    }
+
+    pub fn nrmse_target(&self) -> f64 {
+        match self {
+            AnyArchive::V1(a) => a.nrmse_target,
+            AnyArchive::V2(a) => a.header.nrmse_target,
+        }
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        match self {
+            AnyArchive::V1(a) => a.compression_ratio(),
+            AnyArchive::V2(a) => a.compression_ratio(),
+        }
+    }
+
+    /// View as `GBA2` — the engine's working representation.  `GBA1`
+    /// archives become one-shard `GBA2` views losslessly.
+    pub fn into_v2(self) -> Result<Gba2Archive> {
+        match self {
+            AnyArchive::V1(a) => Gba2Archive::from_v1(&a),
+            AnyArchive::V2(a) => Ok(a),
+        }
+    }
+}

@@ -1,0 +1,777 @@
+//! The indexed `GBA2` archive: a versioned container with a table of
+//! contents mapping every (shard, species) payload to an absolute byte
+//! range, enabling random-access partial decode.
+//!
+//! ```text
+//! off  0  magic "GBA2" | version u16 | flags u16 (bit0: TCN used)
+//!      8  nt ns ny nx           u32 x4
+//!     24  block kt by bx        u32 x3
+//!     36  latent                u32
+//!     40  kt_window             u32
+//!     44  n_shards              u32
+//!     48  pressure f64 | nrmse_target f64 | model_param_bytes u64
+//!     72  per-species ranges: ns x (lo f32, hi f32)
+//!      .  TOC: n_shards x { t0 u32, nt u32, shard (off,len) u64 x2,
+//!                           latent (off,len) u64 x2,
+//!                           ns x species (off,len) u64 x2 }
+//!      .  shard payloads, contiguous: latent blob, then the ns
+//!         species sections (basis + coeff blob, same bytes as GBA1)
+//! ```
+//!
+//! All offsets are absolute file offsets, so a reader can fetch the TOC
+//! with two `read_at` calls and then touch only the sections a query
+//! needs.  `GBA1` archives convert losslessly in both directions
+//! ([`Gba2Archive::from_v1`] / [`Gba2Archive::to_v1`]); the section bytes
+//! are identical between versions.
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::archive::format::{Archive, SpeciesSection};
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const MAGIC2: &[u8; 4] = b"GBA2";
+const VERSION2: u16 = 2;
+
+/// Bytes of the fixed prefix through `n_shards` — enough to size the rest
+/// of the header + TOC.
+const PREFIX_LEN: usize = 48;
+
+/// Everything global to a `GBA2` archive (no payload).
+#[derive(Clone, Debug)]
+pub struct Gba2Header {
+    pub tcn_used: bool,
+    /// nt, ns, ny, nx.
+    pub dims: (usize, usize, usize, usize),
+    pub block: (usize, usize, usize),
+    pub latent_dim: usize,
+    /// Shard time-window width (timesteps; last shard may be shorter).
+    pub kt_window: usize,
+    pub pressure: f64,
+    pub nrmse_target: f64,
+    /// Bytes charged for model parameters (accounting; not stored inline).
+    pub model_param_bytes: u64,
+    pub ranges: Vec<(f32, f32)>,
+}
+
+/// One shard's TOC entry: absolute byte ranges of its payloads.
+#[derive(Clone, Debug)]
+pub struct ShardToc {
+    pub t0: usize,
+    pub nt: usize,
+    /// Whole shard span (latent + species sections, contiguous).
+    pub shard: (u64, u64),
+    /// Latent-plane blob.
+    pub latent: (u64, u64),
+    /// Per-species guarantee sections.
+    pub species: Vec<(u64, u64)>,
+}
+
+/// Input to [`Gba2Archive::build`]: one shard's serialized payloads.
+#[derive(Clone, Debug)]
+pub struct ShardPayload {
+    pub t0: usize,
+    pub nt: usize,
+    pub latent_blob: Vec<u8>,
+    /// Serialized [`SpeciesSection`] bytes, one per species.
+    pub species: Vec<Vec<u8>>,
+}
+
+/// An in-memory `GBA2` archive: parsed header + TOC over the full
+/// serialized bytes.
+#[derive(Clone, Debug)]
+pub struct Gba2Archive {
+    pub header: Gba2Header,
+    pub toc: Vec<ShardToc>,
+    /// The complete serialized archive (header + TOC + payloads).
+    pub bytes: Vec<u8>,
+}
+
+fn header_len(ns: usize, n_shards: usize) -> usize {
+    72 + ns * 8 + n_shards * (40 + 16 * ns)
+}
+
+impl Gba2Archive {
+    /// Assemble an archive from per-shard payloads.  Shards must tile the
+    /// time axis in order.
+    pub fn build(header: Gba2Header, shards: Vec<ShardPayload>) -> Result<Gba2Archive> {
+        let (nt, ns, _, _) = header.dims;
+        if shards.is_empty() {
+            return Err(Error::format("GBA2 build: no shards"));
+        }
+        if header.ranges.len() != ns {
+            return Err(Error::format(format!(
+                "GBA2 build: {} ranges for {ns} species",
+                header.ranges.len()
+            )));
+        }
+        let mut expect_t0 = 0usize;
+        for (i, sh) in shards.iter().enumerate() {
+            // uniform windows (last may be short) — the invariant
+            // ShardPlan::touching and the TOC index both rely on
+            let full = i + 1 < shards.len();
+            if sh.t0 != expect_t0
+                || sh.nt == 0
+                || sh.nt > header.kt_window
+                || (full && sh.nt != header.kt_window)
+            {
+                return Err(Error::format(format!(
+                    "GBA2 build: shard at t0 {} (nt {}) does not tile (expected t0 {expect_t0})",
+                    sh.t0, sh.nt
+                )));
+            }
+            if sh.species.len() != ns {
+                return Err(Error::format(format!(
+                    "GBA2 build: shard at t0 {} has {} species sections, expected {ns}",
+                    sh.t0,
+                    sh.species.len()
+                )));
+            }
+            expect_t0 += sh.nt;
+        }
+        if expect_t0 != nt {
+            return Err(Error::format(format!(
+                "GBA2 build: shards cover {expect_t0} of {nt} timesteps"
+            )));
+        }
+
+        let base = header_len(ns, shards.len()) as u64;
+        let mut toc = Vec::with_capacity(shards.len());
+        let mut off = base;
+        for sh in &shards {
+            let shard_off = off;
+            let latent = (off, sh.latent_blob.len() as u64);
+            off += latent.1;
+            let mut species = Vec::with_capacity(ns);
+            for sec in &sh.species {
+                species.push((off, sec.len() as u64));
+                off += sec.len() as u64;
+            }
+            toc.push(ShardToc {
+                t0: sh.t0,
+                nt: sh.nt,
+                shard: (shard_off, off - shard_off),
+                latent,
+                species,
+            });
+        }
+
+        let mut w = ByteWriter::new();
+        w.bytes(MAGIC2);
+        w.u16(VERSION2);
+        w.u16(if header.tcn_used { 1 } else { 0 });
+        for d in [header.dims.0, header.dims.1, header.dims.2, header.dims.3] {
+            w.u32(d as u32);
+        }
+        for d in [header.block.0, header.block.1, header.block.2] {
+            w.u32(d as u32);
+        }
+        w.u32(header.latent_dim as u32);
+        w.u32(header.kt_window as u32);
+        w.u32(shards.len() as u32);
+        w.f64(header.pressure);
+        w.f64(header.nrmse_target);
+        w.u64(header.model_param_bytes);
+        for &(lo, hi) in &header.ranges {
+            w.f32(lo);
+            w.f32(hi);
+        }
+        for entry in &toc {
+            w.u32(entry.t0 as u32);
+            w.u32(entry.nt as u32);
+            w.u64(entry.shard.0);
+            w.u64(entry.shard.1);
+            w.u64(entry.latent.0);
+            w.u64(entry.latent.1);
+            for &(o, l) in &entry.species {
+                w.u64(o);
+                w.u64(l);
+            }
+        }
+        debug_assert_eq!(w.buf.len() as u64, base);
+        for sh in &shards {
+            w.bytes(&sh.latent_blob);
+            for sec in &sh.species {
+                w.bytes(sec);
+            }
+        }
+        let bytes = w.finish();
+        debug_assert_eq!(bytes.len() as u64, off);
+        Ok(Gba2Archive { header, toc, bytes })
+    }
+
+    /// Parse a complete serialized archive.
+    pub fn deserialize(buf: &[u8]) -> Result<Gba2Archive> {
+        let (header, toc) = parse_header_toc(buf, buf.len() as u64)?;
+        Ok(Gba2Archive {
+            header,
+            toc,
+            bytes: buf.to_vec(),
+        })
+    }
+
+    /// Read only the header + TOC from a byte-range source (two reads).
+    pub fn read_toc<S: SectionSource + ?Sized>(src: &S) -> Result<(Gba2Header, Vec<ShardToc>)> {
+        let prefix = src.read_at(0, PREFIX_LEN)?;
+        let (ns, n_shards) = parse_prefix(&prefix)?;
+        let hlen = header_len(ns, n_shards);
+        let head = src.read_at(0, hlen)?;
+        parse_header_toc(&head, src.source_len())
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.toc.len()
+    }
+
+    fn section(&self, range: (u64, u64), what: &str) -> Result<&[u8]> {
+        let off = range.0 as usize;
+        let len = range.1 as usize;
+        self.bytes
+            .get(off..off + len)
+            .ok_or_else(|| Error::format(format!("GBA2 {what} section out of bounds")))
+    }
+
+    /// Raw latent-plane blob of one shard.
+    pub fn latent_bytes(&self, shard: usize) -> Result<&[u8]> {
+        let entry = self
+            .toc
+            .get(shard)
+            .ok_or_else(|| Error::format(format!("no shard {shard}")))?;
+        self.section(entry.latent, "latent")
+    }
+
+    /// Raw serialized species section of one (shard, species).
+    pub fn species_bytes(&self, shard: usize, s: usize) -> Result<&[u8]> {
+        let entry = self
+            .toc
+            .get(shard)
+            .ok_or_else(|| Error::format(format!("no shard {shard}")))?;
+        let range = *entry
+            .species
+            .get(s)
+            .ok_or_else(|| Error::format(format!("no species {s} in shard {shard}")))?;
+        self.section(range, "species")
+    }
+
+    /// Parse all species sections of one shard.
+    pub fn species_sections(&self, shard: usize) -> Result<Vec<SpeciesSection>> {
+        let ns = self.header.dims.1;
+        let mut out = Vec::with_capacity(ns);
+        for s in 0..ns {
+            out.push(SpeciesSection::from_bytes(self.species_bytes(shard, s)?)?);
+        }
+        Ok(out)
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        self.bytes.clone()
+    }
+
+    /// Consume the archive, returning the serialized bytes without a copy.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+
+    pub fn write_file<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        File::create(path)?.write_all(&self.bytes)?;
+        Ok(())
+    }
+
+    pub fn read_file<P: AsRef<Path>>(path: P) -> Result<Gba2Archive> {
+        let mut bytes = Vec::new();
+        File::open(path.as_ref())?.read_to_end(&mut bytes)?;
+        Self::deserialize(&bytes)
+    }
+
+    /// Stored payload bytes (the archive itself).
+    pub fn payload_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// Payload + model-parameter bytes (the paper charges network
+    /// parameters to the compressed output).
+    pub fn total_bytes(&self) -> usize {
+        self.bytes.len() + self.header.model_param_bytes as usize
+    }
+
+    /// Compression ratio against the raw PD bytes.
+    pub fn compression_ratio(&self) -> f64 {
+        let (nt, ns, ny, nx) = self.header.dims;
+        (nt * ns * ny * nx * 4) as f64 / self.total_bytes() as f64
+    }
+
+    /// Wrap a legacy single-shot `GBA1` archive as a one-shard `GBA2`
+    /// (section bytes are shared verbatim between the formats).
+    pub fn from_v1(a: &Archive) -> Result<Gba2Archive> {
+        let header = Gba2Header {
+            tcn_used: a.tcn_used,
+            dims: a.dims,
+            block: a.block,
+            latent_dim: a.latent_dim,
+            kt_window: a.dims.0,
+            pressure: a.pressure,
+            nrmse_target: a.nrmse_target,
+            model_param_bytes: a.model_param_bytes,
+            ranges: a.ranges.clone(),
+        };
+        let shard = ShardPayload {
+            t0: 0,
+            nt: a.dims.0,
+            latent_blob: a.latent_blob.clone(),
+            species: a.species.iter().map(|s| s.to_bytes()).collect(),
+        };
+        Self::build(header, vec![shard])
+    }
+
+    /// Export as legacy `GBA1` — only possible for single-shard archives
+    /// (compress with `kt_window >= nt`).
+    pub fn to_v1(&self) -> Result<Archive> {
+        if self.toc.len() != 1 {
+            return Err(Error::format(format!(
+                "GBA1 export needs a single shard, archive has {} (compress with kt_window >= nt)",
+                self.toc.len()
+            )));
+        }
+        Ok(Archive {
+            tcn_used: self.header.tcn_used,
+            dims: self.header.dims,
+            block: self.header.block,
+            latent_dim: self.header.latent_dim,
+            pressure: self.header.pressure,
+            ranges: self.header.ranges.clone(),
+            latent_blob: self.latent_bytes(0)?.to_vec(),
+            species: self.species_sections(0)?,
+            model_param_bytes: self.header.model_param_bytes,
+            nrmse_target: self.header.nrmse_target,
+        })
+    }
+}
+
+/// Parse just enough of the fixed prefix to size the header + TOC.
+fn parse_prefix(buf: &[u8]) -> Result<(usize, usize)> {
+    let mut r = ByteReader::new(buf);
+    let magic = r.bytes(4)?;
+    if magic != MAGIC2 {
+        return Err(Error::format(format!("bad GBA2 magic {magic:?}")));
+    }
+    let version = r.u16()?;
+    if version != VERSION2 {
+        return Err(Error::format(format!("unsupported GBA2 version {version}")));
+    }
+    let _flags = r.u16()?;
+    let _nt = r.u32()?;
+    let ns = r.u32()? as usize;
+    if ns == 0 || ns > 4096 {
+        return Err(Error::format(format!("implausible species count {ns}")));
+    }
+    let _ny = r.u32()?;
+    let _nx = r.u32()?;
+    let _block = (r.u32()?, r.u32()?, r.u32()?);
+    let _latent = r.u32()?;
+    let _kt_window = r.u32()?;
+    let n_shards = r.u32()? as usize;
+    if n_shards == 0 || n_shards > 1 << 20 {
+        return Err(Error::format(format!("implausible shard count {n_shards}")));
+    }
+    Ok((ns, n_shards))
+}
+
+/// Full header + TOC parse with structural validation against `file_len`.
+fn parse_header_toc(buf: &[u8], file_len: u64) -> Result<(Gba2Header, Vec<ShardToc>)> {
+    let (ns, n_shards) = parse_prefix(buf)?;
+    let hlen = header_len(ns, n_shards) as u64;
+    if hlen > file_len {
+        return Err(Error::format(format!(
+            "GBA2 truncated: header + TOC need {hlen} bytes, file has {file_len}"
+        )));
+    }
+    let mut r = ByteReader::new(buf);
+    r.bytes(4)?; // magic
+    r.u16()?; // version
+    let flags = r.u16()?;
+    let dims = (
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+    );
+    let block = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+    let latent_dim = r.u32()? as usize;
+    let kt_window = r.u32()? as usize;
+    let _n_shards = r.u32()?;
+    let pressure = r.f64()?;
+    let nrmse_target = r.f64()?;
+    let model_param_bytes = r.u64()?;
+
+    let total = dims
+        .0
+        .checked_mul(dims.1)
+        .and_then(|v| v.checked_mul(dims.2))
+        .and_then(|v| v.checked_mul(dims.3))
+        .ok_or_else(|| Error::format("GBA2 dims overflow"))?;
+    if total == 0 || total > 1 << 33 {
+        return Err(Error::format(format!("implausible GBA2 dims {dims:?}")));
+    }
+    if block.0 == 0 || block.1 == 0 || block.2 == 0 || latent_dim == 0 || latent_dim > 65536 {
+        return Err(Error::format(format!(
+            "implausible GBA2 block/latent {block:?}/{latent_dim}"
+        )));
+    }
+    if kt_window == 0 || kt_window % block.0 != 0 {
+        return Err(Error::format(format!(
+            "GBA2 kt_window {kt_window} not a multiple of block kt {}",
+            block.0
+        )));
+    }
+
+    let mut ranges = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        ranges.push((r.f32()?, r.f32()?));
+    }
+
+    let mut toc = Vec::with_capacity(n_shards);
+    let mut expect_t0 = 0usize;
+    let mut expect_off = hlen;
+    for i in 0..n_shards {
+        let t0 = r.u32()? as usize;
+        let nt_sh = r.u32()? as usize;
+        let shard = (r.u64()?, r.u64()?);
+        let latent = (r.u64()?, r.u64()?);
+        let mut species = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            species.push((r.u64()?, r.u64()?));
+        }
+        // uniform windows, last may be short (ShardPlan's invariant)
+        let full = i + 1 < n_shards;
+        if t0 != expect_t0
+            || nt_sh == 0
+            || nt_sh > kt_window
+            || nt_sh % block.0 != 0
+            || (full && nt_sh != kt_window)
+        {
+            return Err(Error::format(format!(
+                "GBA2 TOC: shard at t0 {t0} (nt {nt_sh}) does not tile (expected t0 {expect_t0})"
+            )));
+        }
+        expect_t0 += nt_sh;
+        // shard spans are contiguous from the end of the TOC
+        if shard.0 != expect_off {
+            return Err(Error::format(format!(
+                "GBA2 TOC: shard offset {} != expected {expect_off}",
+                shard.0
+            )));
+        }
+        let shard_end = shard
+            .0
+            .checked_add(shard.1)
+            .ok_or_else(|| Error::format("GBA2 TOC: shard span overflow"))?;
+        if shard_end > file_len {
+            return Err(Error::format(format!(
+                "GBA2 TOC: shard end {shard_end} beyond file length {file_len}"
+            )));
+        }
+        expect_off = shard_end;
+        // latent + species sections must tile the shard span exactly
+        let mut cursor = shard.0;
+        for &(o, l) in std::iter::once(&latent).chain(species.iter()) {
+            if o != cursor {
+                return Err(Error::format(format!(
+                    "GBA2 TOC: section offset {o} != expected {cursor}"
+                )));
+            }
+            cursor = o
+                .checked_add(l)
+                .ok_or_else(|| Error::format("GBA2 TOC: section span overflow"))?;
+        }
+        if cursor != shard_end {
+            return Err(Error::format(format!(
+                "GBA2 TOC: sections cover {cursor} of shard end {shard_end}"
+            )));
+        }
+        toc.push(ShardToc {
+            t0,
+            nt: nt_sh,
+            shard,
+            latent,
+            species,
+        });
+    }
+    if expect_t0 != dims.0 {
+        return Err(Error::format(format!(
+            "GBA2 TOC: shards cover {expect_t0} of {} timesteps",
+            dims.0
+        )));
+    }
+    if expect_off != file_len {
+        return Err(Error::format(format!(
+            "GBA2 payload ends at {expect_off}, file length is {file_len}"
+        )));
+    }
+
+    Ok((
+        Gba2Header {
+            tcn_used: flags & 1 == 1,
+            dims,
+            block,
+            latent_dim,
+            kt_window,
+            pressure,
+            nrmse_target,
+            model_param_bytes,
+            ranges,
+        },
+        toc,
+    ))
+}
+
+/// A byte-range reader over an archive — the abstraction that lets
+/// partial decode touch only the sections a query needs, whether the
+/// archive lives in memory or on disk.
+pub trait SectionSource: Sync {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>>;
+    fn source_len(&self) -> u64;
+}
+
+/// In-memory source over a serialized archive.
+pub struct SliceSource<'a>(pub &'a [u8]);
+
+impl SectionSource for SliceSource<'_> {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        let off = usize::try_from(off)
+            .map_err(|_| Error::format(format!("read_at offset {off} overflows")))?;
+        self.0
+            .get(off..off.checked_add(len).ok_or_else(|| {
+                Error::format(format!("read_at span {off}+{len} overflows"))
+            })?)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| {
+                Error::format(format!(
+                    "read_at [{off}, {}) beyond {} bytes",
+                    off + len,
+                    self.0.len()
+                ))
+            })
+    }
+
+    fn source_len(&self) -> u64 {
+        self.0.len() as u64
+    }
+}
+
+/// File-backed source (seeks under a lock; shard workers may read
+/// concurrently).
+pub struct FileSource {
+    file: Mutex<File>,
+    len: u64,
+}
+
+impl FileSource {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<FileSource> {
+        let file = File::open(path.as_ref())?;
+        let len = file.metadata()?.len();
+        Ok(FileSource {
+            file: Mutex::new(file),
+            len,
+        })
+    }
+}
+
+impl SectionSource for FileSource {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        let end = off
+            .checked_add(len as u64)
+            .ok_or_else(|| Error::format("read_at span overflows"))?;
+        if end > self.len {
+            return Err(Error::format(format!(
+                "read_at [{off}, {end}) beyond {} bytes",
+                self.len
+            )));
+        }
+        let mut buf = vec![0u8; len];
+        let mut f = self
+            .file
+            .lock()
+            .map_err(|_| Error::runtime("archive file lock poisoned"))?;
+        f.seek(SeekFrom::Start(off))?;
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn source_len(&self) -> u64 {
+        self.len
+    }
+}
+
+/// Wrapper counting the bytes and calls served — used by tests to assert
+/// partial decode reads strictly fewer archive bytes, and by `gbatc
+/// extract` to report IO savings.
+pub struct CountingSource<'a, S: SectionSource + ?Sized> {
+    inner: &'a S,
+    bytes: AtomicU64,
+    reads: AtomicU64,
+}
+
+impl<'a, S: SectionSource + ?Sized> CountingSource<'a, S> {
+    pub fn new(inner: &'a S) -> Self {
+        Self {
+            inner,
+            bytes: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+        }
+    }
+
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn reads(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
+    }
+}
+
+impl<S: SectionSource + ?Sized> SectionSource for CountingSource<'_, S> {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        let out = self.inner.read_at(off, len)?;
+        self.bytes.fetch_add(out.len() as u64, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn source_len(&self) -> u64 {
+        self.inner.source_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gae::SpeciesBasis;
+    use crate::linalg::Mat;
+
+    fn sample() -> Gba2Archive {
+        let basis = SpeciesBasis::from_mat(&Mat::identity(4), 2);
+        let sec = SpeciesSection {
+            basis,
+            coeffs: vec![9, 8, 7],
+        }
+        .to_bytes();
+        let header = Gba2Header {
+            tcn_used: true,
+            dims: (8, 2, 10, 8),
+            block: (4, 5, 4),
+            latent_dim: 6,
+            kt_window: 4,
+            pressure: 40.0e5,
+            nrmse_target: 1e-3,
+            model_param_bytes: 1234,
+            ranges: vec![(0.0, 1.0), (-1.0, 2.0)],
+        };
+        let shards = vec![
+            ShardPayload {
+                t0: 0,
+                nt: 4,
+                latent_blob: vec![1, 2, 3],
+                species: vec![sec.clone(), sec.clone()],
+            },
+            ShardPayload {
+                t0: 4,
+                nt: 4,
+                latent_blob: vec![4, 5],
+                species: vec![sec.clone(), sec],
+            },
+        ];
+        Gba2Archive::build(header, shards).unwrap()
+    }
+
+    #[test]
+    fn build_deserialize_roundtrip() {
+        let a = sample();
+        let b = Gba2Archive::deserialize(&a.bytes).unwrap();
+        assert_eq!(a.header.dims, b.header.dims);
+        assert_eq!(a.header.kt_window, b.header.kt_window);
+        assert_eq!(a.header.ranges, b.header.ranges);
+        assert_eq!(a.toc.len(), b.toc.len());
+        assert_eq!(a.latent_bytes(1).unwrap(), b.latent_bytes(1).unwrap());
+        assert_eq!(
+            a.species_bytes(0, 1).unwrap(),
+            b.species_bytes(0, 1).unwrap()
+        );
+        let secs = b.species_sections(0).unwrap();
+        assert_eq!(secs.len(), 2);
+        assert_eq!(secs[0].coeffs, vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn toc_via_section_source_matches() {
+        let a = sample();
+        let src = SliceSource(&a.bytes);
+        let counting = CountingSource::new(&src);
+        let (h, toc) = Gba2Archive::read_toc(&counting).unwrap();
+        assert_eq!(h.dims, a.header.dims);
+        assert_eq!(toc.len(), 2);
+        assert_eq!(counting.reads(), 2);
+        assert!(counting.bytes_read() < a.bytes.len() as u64);
+    }
+
+    #[test]
+    fn v1_conversion_roundtrip() {
+        let a = {
+            let basis = SpeciesBasis::from_mat(&Mat::identity(4), 2);
+            Archive {
+                tcn_used: false,
+                dims: (8, 2, 10, 8),
+                block: (4, 5, 4),
+                latent_dim: 6,
+                pressure: 1e5,
+                ranges: vec![(0.0, 1.0), (0.5, 2.0)],
+                latent_blob: vec![1, 2, 3, 4],
+                species: vec![
+                    SpeciesSection {
+                        basis: basis.clone(),
+                        coeffs: vec![5, 6],
+                    },
+                    SpeciesSection {
+                        basis,
+                        coeffs: vec![],
+                    },
+                ],
+                model_param_bytes: 99,
+                nrmse_target: 1e-3,
+            }
+        };
+        let v2 = Gba2Archive::from_v1(&a).unwrap();
+        assert_eq!(v2.n_shards(), 1);
+        assert_eq!(v2.latent_bytes(0).unwrap(), &a.latent_blob[..]);
+        let back = v2.to_v1().unwrap();
+        assert_eq!(back.serialize(), a.serialize());
+    }
+
+    #[test]
+    fn corruption_and_truncation_rejected_without_panic() {
+        let a = sample();
+        // magic / version corruption
+        let mut bad = a.bytes.clone();
+        bad[0] = b'X';
+        assert!(Gba2Archive::deserialize(&bad).is_err());
+        let mut bad = a.bytes.clone();
+        bad[4] = 9;
+        assert!(Gba2Archive::deserialize(&bad).is_err());
+        // every truncation point must error (TOC or payload extent check)
+        for cut in [0, 1, PREFIX_LEN - 1, PREFIX_LEN, 60, a.bytes.len() - 1] {
+            assert!(
+                Gba2Archive::deserialize(&a.bytes[..cut]).is_err(),
+                "cut {cut} accepted"
+            );
+        }
+        // arbitrary bit flips must never panic
+        for i in (0..a.bytes.len()).step_by(3) {
+            let mut corrupt = a.bytes.clone();
+            corrupt[i] ^= 0xFF;
+            let _ = Gba2Archive::deserialize(&corrupt);
+        }
+    }
+}

@@ -77,13 +77,24 @@ COMMANDS:
   gen-data    --out <file> [--profile tiny|small|medium|paper] [--seed N]
               Generate a synthetic S3D-HCCI-like dataset (SDF1).
   compress    --input <sdf> --output <gba> [--nrmse 1e-3] [--no-tcn]
-              [--latent-bin 0.02] [--artifacts DIR] [--threads N]
-              [--full-basis] [--model-f32]
-              GBATC/GBA compression with guaranteed block error bounds.
-  decompress  --input <gba> --output <sdf> [--artifacts DIR] [--threads N]
-              [--temp-from <sdf>]
+              [--latent-bin 0.02] [--artifacts DIR | --reference]
+              [--threads N] [--kt-window N] [--shard-workers N]
+              [--full-basis] [--model-f32] [--v1]
+              Shard-streaming GBATC/GBA compression with guaranteed block
+              error bounds into an indexed GBA2 archive (--v1 emits the
+              legacy single-shot GBA1 container; needs kt-window >= T).
+  decompress  --input <gba> --output <sdf> [--artifacts DIR | --reference]
+              [--threads N] [--temp-from <sdf>]
               Reconstruct mass fractions (temperature copied from
-              --temp-from if given, else zeros).
+              --temp-from if given, else zeros).  Accepts GBA1 and GBA2.
+  extract     --input <gba2> --output <sdf> [--t0 N] [--t1 N]
+              [--species NAME[,NAME...]] [--artifacts DIR | --reference]
+              [--threads N]
+              Random-access partial decode: reads only the shards/species
+              sections the query touches; reports archive bytes read.
+  inspect     --archive <gba|gba2|szf>
+              Print the GBA2 table of contents (per-shard and per-species
+              byte ranges) and size breakdown.
   sz          --input <sdf> --output <szf> [--nrmse 1e-3]
               [--mode auto|lorenzo|interp] [--eb-scale 1.0]
               SZ baseline compression.
@@ -95,7 +106,9 @@ COMMANDS:
               Print archive layout and compression ratio.
   help        Show this message.
 
-All artifacts are produced by `make artifacts` (python build path).
+AOT artifacts are produced by `make artifacts` (python build path);
+--reference runs the deterministic pure-Rust backend instead (no
+artifacts needed — same guaranteed error bounds, lower CR).
 ";
 #[cfg(test)]
 mod tests {

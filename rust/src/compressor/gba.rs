@@ -1,18 +1,22 @@
-//! The GBA / GBATC compressor — the paper's system, end to end:
-//! normalize → block → AE encode (PJRT) → quantize+Huffman latents →
-//! AE decode (+ TCN) → per-species PCA guarantee (Algorithm 1) → archive.
+//! The GBA / GBATC compressor facade — the paper's system, end to end:
+//! normalize → block → AE encode → quantize+Huffman latents → AE decode
+//! (+ TCN) → per-species PCA guarantee (Algorithm 1) → indexed `GBA2`
+//! archive.
+//!
+//! Since the shard refactor the orchestration lives in
+//! [`crate::coordinator::engine::ShardEngine`]; this module keeps the
+//! public compressor type, its options/report, the normalization
+//! primitives shared with the engine, and the [`Compressor`] trait
+//! implementation that unifies GBA/GBATC with the SZ baseline.
 
-use std::sync::Mutex;
-
-use crate::archive::{Archive, SpeciesSection};
-use crate::codec::{CoeffCodec, LatentCodec};
+use crate::archive::{AnyArchive, Gba2Archive, SectionSource, SliceSource, MAGIC2};
 use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
+use crate::compressor::traits::Compressor;
+use crate::coordinator::engine::{RangeDecode, ShardEngine};
 use crate::coordinator::scheduler::par_for;
-use crate::coordinator::{Pipeline, Progress};
-use crate::data::blocks::{BlockGrid, BlockShape};
 use crate::data::Dataset;
-use crate::error::{Error, Result};
-use crate::gae::guarantee::{apply_correction, guarantee_species, GuaranteeParams};
+use crate::error::Result;
+use crate::gae::guarantee::GuaranteeParams;
 use crate::runtime::ExecHandle;
 
 /// Knobs of a GBA/GBATC compression run.
@@ -33,6 +37,12 @@ pub struct CompressOptions {
     pub model_bytes_f32: bool,
     /// Batches in flight in the pipelines.
     pub queue_depth: usize,
+    /// Shard time-window width in timesteps (0 = auto, `4 * block_kt`;
+    /// `>= nt` for a single shard).  Must be a multiple of the block kt.
+    pub kt_window: usize,
+    /// Shards processed concurrently; peak working memory scales with
+    /// `shard_workers * shard size`.
+    pub shard_workers: usize,
 }
 
 impl Default for CompressOptions {
@@ -45,6 +55,8 @@ impl Default for CompressOptions {
             store_full_basis: false,
             model_bytes_f32: false,
             queue_depth: 4,
+            kt_window: 0,
+            shard_workers: 2,
         }
     }
 }
@@ -52,12 +64,17 @@ impl Default for CompressOptions {
 /// Outcome of a compression run.
 #[derive(Debug)]
 pub struct CompressReport {
-    pub archive: Archive,
+    pub archive: Gba2Archive,
     pub breakdown: SizeBreakdown,
     /// Max per-block ℓ2 residual (normalized) observed — must be <= tau.
     pub max_block_residual: f64,
     pub tau: f64,
     pub n_coeffs: usize,
+    /// Time-window shards the field was processed as.
+    pub n_shards: usize,
+    /// High-water mark of the engine's shard working sets (bytes) — the
+    /// memory the run needed beyond the input field itself.
+    pub peak_workspace_bytes: usize,
     pub elapsed_s: f64,
     pub progress_summary: String,
 }
@@ -68,6 +85,9 @@ pub struct GbatcCompressor<'a> {
     /// Decoder+TCN parameter counts from the manifest (CR accounting).
     pub decoder_params: usize,
     pub tcn_params: usize,
+    /// Options used by the [`Compressor`] trait entry points (the
+    /// explicit [`Self::compress`] takes options per call).
+    pub opts: CompressOptions,
 }
 
 impl<'a> GbatcCompressor<'a> {
@@ -76,254 +96,159 @@ impl<'a> GbatcCompressor<'a> {
             handle,
             decoder_params,
             tcn_params,
+            opts: CompressOptions::default(),
         }
     }
 
-    fn threads(opts: &CompressOptions) -> usize {
-        if opts.threads > 0 {
-            opts.threads
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        }
+    pub fn with_options(mut self, opts: CompressOptions) -> Self {
+        self.opts = opts;
+        self
     }
 
-    /// Compress a dataset.
+    /// The shard engine bound to this compressor's handle.
+    pub fn engine(&self) -> ShardEngine<'a> {
+        ShardEngine::new(self.handle, self.decoder_params, self.tcn_params)
+    }
+
+    /// Compress a dataset (shard-by-shard; see `CompressOptions::kt_window`).
     pub fn compress(&self, ds: &Dataset, opts: &CompressOptions) -> Result<CompressReport> {
-        let progress = Progress::new();
-        let spec = self.handle.spec();
-        if ds.ns != spec.species {
-            return Err(Error::shape(format!(
-                "dataset has {} species, model expects {}",
-                ds.ns, spec.species
-            )));
-        }
-        let shape = BlockShape {
-            kt: spec.block.0,
-            by: spec.block.1,
-            bx: spec.block.2,
-        };
-        let grid = BlockGrid::for_dataset(ds, shape)?;
-        let n_blocks = grid.n_blocks();
-        let d = shape.d();
-        let threads = Self::threads(opts);
-
-        // 1. normalize (per species, parallel over species)
-        let ranges = ds.species_ranges();
-        let norm = normalize_mass(ds, &ranges, threads);
-
-        // 2. AE encode -> latents
-        let pipeline = Pipeline {
-            queue_depth: opts.queue_depth,
-        };
-        let latents = pipeline.encode_all(&grid, &norm, self.handle, &progress)?;
-
-        // 3. latent quantization + Huffman
-        let (latent_blob, latents_deq) =
-            LatentCodec::encode(&latents, n_blocks, spec.latent, opts.latent_bin)?;
-
-        // 4. decode (+ TCN) from the *dequantized* latents — exactly what
-        // the decompressor will see
-        let recon_norm =
-            pipeline.decode_all(&grid, &latents_deq, self.handle, opts.use_tcn, &progress)?;
-
-        // 5. per-species guarantee (Algorithm 1), parallel over species.
-        // Certify against a 0.1%-conservative tau so that the f32
-        // denormalize/renormalize round trip on the decompressor side
-        // (worst for species with offset >> range, e.g. N2) cannot push a
-        // block past the user's bound.
-        let tau = opts.nrmse_target * (d as f64).sqrt();
-        let tau_cert = tau * 0.999;
-        let params = GuaranteeParams {
-            tau: tau_cert,
-            coeff_bin: tau_cert / (d as f64).sqrt(),
-            store_full_basis: opts.store_full_basis,
-        };
-        let sections: Vec<Mutex<Option<(SpeciesSection, f64, usize)>>> =
-            (0..ds.ns).map(|_| Mutex::new(None)).collect();
-        let err: Mutex<Option<Error>> = Mutex::new(None);
-        par_for(ds.ns, threads, |s| {
-            let t = std::time::Instant::now();
-            let mut orig_s = vec![0.0f32; n_blocks * d];
-            let mut recon_s = vec![0.0f32; n_blocks * d];
-            for b in 0..n_blocks {
-                grid.gather_species(&norm, b, s, &mut orig_s[b * d..(b + 1) * d]);
-                grid.gather_species(&recon_norm, b, s, &mut recon_s[b * d..(b + 1) * d]);
-            }
-            let res = guarantee_species(&orig_s, &recon_s, n_blocks, d, &params);
-            match CoeffCodec::encode(&res.per_block, d, effective_bin(&params, d)) {
-                Ok(coeffs) => {
-                    *sections[s].lock().unwrap() = Some((
-                        SpeciesSection {
-                            basis: res.basis,
-                            coeffs,
-                        },
-                        res.max_residual,
-                        res.n_coeffs,
-                    ));
-                }
-                Err(e) => {
-                    *err.lock().unwrap() = Some(e);
-                }
-            }
-            progress.add(&progress.species_guaranteed, 1);
-            progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
-        });
-        if let Some(e) = err.into_inner().unwrap() {
-            return Err(e);
-        }
-
-        let mut species = Vec::with_capacity(ds.ns);
-        let mut max_block_residual = 0.0f64;
-        let mut n_coeffs = 0usize;
-        let mut bases_bytes = 0usize;
-        let mut coeff_bytes = 0usize;
-        for slot in sections {
-            let (sec, maxr, nc) = slot.into_inner().unwrap().expect("species missing");
-            max_block_residual = max_block_residual.max(maxr);
-            n_coeffs += nc;
-            bases_bytes += sec.basis.payload_bytes();
-            coeff_bytes += sec.coeffs.len();
-            species.push(sec);
-        }
-
-        let model_params = self.decoder_params + if opts.use_tcn { self.tcn_params } else { 0 };
-        let model_bytes = model_param_bytes(model_params, opts.model_bytes_f32);
-        let archive = Archive {
-            tcn_used: opts.use_tcn,
-            dims: (ds.nt, ds.ns, ds.ny, ds.nx),
-            block: (shape.kt, shape.by, shape.bx),
-            latent_dim: spec.latent,
-            pressure: ds.pressure,
-            ranges,
-            latent_blob,
-            species,
-            model_param_bytes: model_bytes as u64,
-            nrmse_target: opts.nrmse_target,
-        };
-        let payload = archive.payload_bytes();
-        let breakdown = SizeBreakdown {
-            latents: archive.latent_blob.len(),
-            bases: bases_bytes,
-            coeffs: coeff_bytes,
-            header: payload
-                .saturating_sub(archive.latent_blob.len() + bases_bytes + coeff_bytes),
-            model_params: model_bytes,
-        };
-        Ok(CompressReport {
-            archive,
-            breakdown,
-            max_block_residual,
-            tau,
-            n_coeffs,
-            elapsed_s: progress.elapsed_s(),
-            progress_summary: progress.summary(),
-        })
+        self.engine().compress(ds, opts)
     }
 
     /// Decompress an archive back to mass fractions `[T, S, Y, X]`.
-    pub fn decompress(&self, archive: &Archive, threads: usize) -> Result<Vec<f32>> {
-        let progress = Progress::new();
-        let spec = self.handle.spec();
-        let (nt, ns, ny, nx) = archive.dims;
-        let shape = BlockShape {
-            kt: archive.block.0,
-            by: archive.block.1,
-            bx: archive.block.2,
-        };
-        let grid = BlockGrid::new((nt, ns, ny, nx), shape)?;
-        let n_blocks = grid.n_blocks();
-        let d = shape.d();
+    pub fn decompress(&self, archive: &Gba2Archive, threads: usize) -> Result<Vec<f32>> {
+        self.engine().decompress_all(archive, threads)
+    }
 
-        // 1. latents
-        let plane = LatentCodec::decode(&archive.latent_blob)?;
-        if plane.n != n_blocks || plane.dim != spec.latent {
-            return Err(Error::format(format!(
-                "latent plane {}x{} vs expected {}x{}",
-                plane.n, plane.dim, n_blocks, spec.latent
-            )));
-        }
+    /// Partial decode straight from a byte-range source (file, slice, or
+    /// counting wrapper) — see [`ShardEngine::decompress_range`].
+    pub fn extract<S: SectionSource + ?Sized>(
+        &self,
+        src: &S,
+        t0: usize,
+        t1: usize,
+        species: &[usize],
+        threads: usize,
+    ) -> Result<RangeDecode> {
+        self.engine().decompress_range(src, t0, t1, species, threads)
+    }
+}
 
-        // 2. decode + optional TCN
-        let pipeline = Pipeline { queue_depth: 4 };
-        let mut norm =
-            pipeline.decode_all(&grid, &plane.values, self.handle, archive.tcn_used, &progress)?;
-
-        // 3. apply per-species corrections (parallel over species — writes
-        // are species-disjoint, done via raw pointer wrapper)
-        let threads = if threads > 0 {
-            threads
+impl Compressor for GbatcCompressor<'_> {
+    fn name(&self) -> &str {
+        if self.opts.use_tcn {
+            "GBATC"
         } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        };
-        let norm_cell = SpeciesDisjoint(std::cell::UnsafeCell::new(norm.as_mut_slice()));
-        let err: Mutex<Option<Error>> = Mutex::new(None);
-        par_for(ns, threads, |s| {
-            let run = || -> Result<()> {
-                let coeffs = CoeffCodec::decode(&archive.species[s].coeffs)?;
-                let basis = &archive.species[s].basis;
-                let mass: &mut [f32] = unsafe { norm_cell.slice() };
-                let mut block_vec = vec![0.0f32; d];
-                for (b, per_block) in coeffs.per_block.iter().enumerate() {
-                    if per_block.is_empty() {
-                        continue;
-                    }
-                    grid.gather_species(mass, b, s, &mut block_vec);
-                    apply_correction(&mut block_vec, 1, d, basis, std::slice::from_ref(per_block));
-                    grid.scatter_species(mass, b, s, &block_vec);
-                }
-                Ok(())
-            };
-            if let Err(e) = run() {
-                *err.lock().unwrap() = Some(e);
-            }
-        });
-        if let Some(e) = err.into_inner().unwrap() {
-            return Err(e);
+            "GBA"
         }
+    }
 
-        // 4. denormalize
-        denormalize_in_place(&mut norm, &archive.ranges, nt, ns, ny * nx, threads);
-        Ok(norm)
+    fn compress_bytes(&self, ds: &Dataset, nrmse_target: f64) -> Result<Vec<u8>> {
+        let opts = CompressOptions {
+            nrmse_target,
+            ..self.opts.clone()
+        };
+        Ok(self.compress(ds, &opts)?.archive.into_bytes())
+    }
+
+    fn decompress_mass(&self, bytes: &[u8]) -> Result<Vec<f32>> {
+        let archive = AnyArchive::deserialize(bytes)?.into_v2()?;
+        self.engine().decompress_all(&archive, self.opts.threads)
+    }
+
+    fn archive_dims(&self, bytes: &[u8]) -> Result<(usize, usize, usize, usize)> {
+        if bytes.starts_with(MAGIC2) {
+            // header + TOC only — no full-archive copy
+            let (header, _toc) = Gba2Archive::read_toc(&SliceSource(bytes))?;
+            return Ok(header.dims);
+        }
+        Ok(AnyArchive::deserialize(bytes)?.dims())
+    }
+
+    fn decompress_range(
+        &self,
+        bytes: &[u8],
+        t0: usize,
+        t1: usize,
+        species: &[usize],
+    ) -> Result<Vec<f32>> {
+        if bytes.starts_with(MAGIC2) {
+            // GBA2 bytes are already section-addressable: skip the
+            // full-archive deserialize and read only the touched sections
+            let src = SliceSource(bytes);
+            return Ok(self
+                .engine()
+                .decompress_range(&src, t0, t1, species, self.opts.threads)?
+                .mass);
+        }
+        let archive = AnyArchive::deserialize(bytes)?.into_v2()?;
+        let src = SliceSource(&archive.bytes);
+        Ok(self
+            .engine()
+            .decompress_range(&src, t0, t1, species, self.opts.threads)?
+            .mass)
+    }
+
+    fn extra_bytes(&self) -> usize {
+        let params = self.decoder_params + if self.opts.use_tcn { self.tcn_params } else { 0 };
+        model_param_bytes(params, self.opts.model_bytes_f32)
     }
 }
 
 /// Wrapper asserting that concurrent accesses touch disjoint species slices.
-struct SpeciesDisjoint<'a>(std::cell::UnsafeCell<&'a mut [f32]>);
+pub(crate) struct SpeciesDisjoint<'a>(std::cell::UnsafeCell<&'a mut [f32]>);
 unsafe impl<'a> Sync for SpeciesDisjoint<'a> {}
 
 impl<'a> SpeciesDisjoint<'a> {
+    pub(crate) fn new(slice: &'a mut [f32]) -> Self {
+        Self(std::cell::UnsafeCell::new(slice))
+    }
+
     /// SAFETY: callers must only touch indices belonging to "their" species
     /// (the `[T,S,Y,X]` layout makes per-species index sets disjoint).
     #[allow(clippy::mut_from_ref)]
-    unsafe fn slice(&self) -> &mut [f32] {
+    pub(crate) unsafe fn slice(&self) -> &mut [f32] {
         &mut *self.0.get()
     }
 }
 
-fn effective_bin(params: &GuaranteeParams, d: usize) -> f64 {
+pub(crate) fn effective_bin(params: &GuaranteeParams, d: usize) -> f64 {
     params.coeff_bin.min(1.9 * params.tau / (d as f64).sqrt())
 }
 
-/// Normalize `[T,S,Y,X]` mass to per-species [0, 1] (parallel over species).
-pub fn normalize_mass(ds: &Dataset, ranges: &[(f32, f32)], threads: usize) -> Vec<f32> {
-    let npix = ds.ny * ds.nx;
-    let mut norm = vec![0.0f32; ds.mass.len()];
-    let cell = SpeciesDisjoint(std::cell::UnsafeCell::new(norm.as_mut_slice()));
-    par_for(ds.ns, threads, |s| {
+/// Normalize a `[nt, S, Y, X]` window of mass data to per-species [0, 1]
+/// using the *global* per-species ranges (parallel over species).
+pub fn normalize_window(
+    mass: &[f32],
+    ranges: &[(f32, f32)],
+    nt: usize,
+    ns: usize,
+    npix: usize,
+    threads: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(mass.len(), nt * ns * npix);
+    let mut norm = vec![0.0f32; mass.len()];
+    let cell = SpeciesDisjoint::new(norm.as_mut_slice());
+    par_for(ns, threads, |s| {
         let (lo, hi) = ranges[s];
         let inv = 1.0 / (hi - lo).max(1e-30);
         let out: &mut [f32] = unsafe { cell.slice() };
-        for t in 0..ds.nt {
-            let off = (t * ds.ns + s) * npix;
+        for t in 0..nt {
+            let off = (t * ns + s) * npix;
             for i in off..off + npix {
-                out[i] = (ds.mass[i] - lo) * inv;
+                out[i] = (mass[i] - lo) * inv;
             }
         }
     });
     norm
 }
 
-/// In-place denormalization (inverse of [`normalize_mass`]).
+/// Normalize a whole dataset (see [`normalize_window`]).
+pub fn normalize_mass(ds: &Dataset, ranges: &[(f32, f32)], threads: usize) -> Vec<f32> {
+    normalize_window(&ds.mass, ranges, ds.nt, ds.ns, ds.ny * ds.nx, threads)
+}
+
+/// In-place denormalization (inverse of [`normalize_window`]).
 pub fn denormalize_in_place(
     norm: &mut [f32],
     ranges: &[(f32, f32)],
@@ -332,7 +257,7 @@ pub fn denormalize_in_place(
     npix: usize,
     threads: usize,
 ) {
-    let cell = SpeciesDisjoint(std::cell::UnsafeCell::new(norm));
+    let cell = SpeciesDisjoint::new(norm);
     par_for(ns, threads, |s| {
         let (lo, hi) = ranges[s];
         let range = (hi - lo).max(1e-30);
@@ -361,5 +286,22 @@ mod tests {
         for (a, b) in norm.iter().zip(&ds.mass) {
             assert!((a - b).abs() <= 1e-6 * b.abs().max(1e-12) + 1e-9);
         }
+    }
+
+    #[test]
+    fn window_normalization_matches_full_slice() {
+        let ds = generate(Profile::Tiny, 4);
+        let ranges = ds.species_ranges();
+        let full = normalize_mass(&ds, &ranges, 2);
+        let stride = ds.ns * ds.ny * ds.nx;
+        let window = normalize_window(
+            &ds.mass[2 * stride..6 * stride],
+            &ranges,
+            4,
+            ds.ns,
+            ds.ny * ds.nx,
+            2,
+        );
+        assert_eq!(&full[2 * stride..6 * stride], &window[..]);
     }
 }

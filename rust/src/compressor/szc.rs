@@ -7,9 +7,7 @@
 //! eb = √3 · nrmse_target · range hits the target NRMSE from above;
 //! `eb_scale` lets the benches sweep around it.
 
-use std::sync::Mutex;
-
-use crate::coordinator::scheduler::par_for;
+use crate::coordinator::scheduler::par_try_map;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::sz::codec::{sz_compress, sz_decompress, SzMode};
@@ -103,6 +101,21 @@ impl SzArchive {
     pub fn total_bytes(&self) -> usize {
         self.serialize().len()
     }
+
+    /// Dims from the fixed header prefix only — no payload parse/copies
+    /// (the cheap path behind `Compressor::archive_dims`).
+    pub fn peek_dims(buf: &[u8]) -> Result<(usize, usize, usize, usize)> {
+        let mut r = ByteReader::new(buf);
+        if r.bytes(4)? != b"SZA1" {
+            return Err(Error::format("bad SZ archive magic"));
+        }
+        Ok((
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+            r.u32()? as usize,
+        ))
+    }
 }
 
 impl crate::compressor::traits::Compressor for SzCompressor {
@@ -117,6 +130,10 @@ impl crate::compressor::traits::Compressor for SzCompressor {
     fn decompress_mass(&self, bytes: &[u8]) -> Result<Vec<f32>> {
         self.decompress(&SzArchive::deserialize(bytes)?)
     }
+
+    fn archive_dims(&self, bytes: &[u8]) -> Result<(usize, usize, usize, usize)> {
+        SzArchive::peek_dims(bytes)
+    }
 }
 
 /// The SZ baseline compressor.
@@ -130,29 +147,18 @@ impl SzCompressor {
     }
 
     fn threads(&self) -> usize {
-        if self.opts.threads > 0 {
-            self.opts.threads
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-        }
+        crate::coordinator::engine::effective_threads(self.opts.threads)
     }
 
     /// Compress every species field in parallel.
     pub fn compress(&self, ds: &Dataset, nrmse_target: f64) -> Result<SzArchive> {
         let ranges = ds.species_ranges();
-        let slots: Vec<Mutex<Option<Result<SzField>>>> =
-            (0..ds.ns).map(|_| Mutex::new(None)).collect();
-        par_for(ds.ns, self.threads(), |s| {
+        let fields = par_try_map(ds.ns, self.threads(), |s| {
             let field = ds.species_field(s);
             let range = (ranges[s].1 - ranges[s].0).max(1e-30) as f64;
             let eb = (self.opts.eb_scale * 3f64.sqrt() * nrmse_target * range).max(1e-300);
-            let r = sz_compress(&field.data, (ds.nt, ds.ny, ds.nx), eb, self.opts.mode);
-            *slots[s].lock().unwrap() = Some(r);
-        });
-        let mut fields = Vec::with_capacity(ds.ns);
-        for slot in slots {
-            fields.push(slot.into_inner().unwrap().expect("missing field")?);
-        }
+            sz_compress(&field.data, (ds.nt, ds.ny, ds.nx), eb, self.opts.mode)
+        })?;
         Ok(SzArchive {
             dims: (ds.nt, ds.ns, ds.ny, ds.nx),
             fields,
@@ -162,15 +168,23 @@ impl SzCompressor {
     /// Decompress to mass fractions `[T, S, Y, X]`.
     pub fn decompress(&self, archive: &SzArchive) -> Result<Vec<f32>> {
         let (nt, ns, ny, nx) = archive.dims;
+        if archive.fields.len() != ns {
+            return Err(Error::format(format!(
+                "SZ archive has {} fields for {ns} species",
+                archive.fields.len()
+            )));
+        }
         let npix = ny * nx;
         let mut mass = vec![0.0f32; nt * ns * npix];
-        let slots: Vec<Mutex<Option<Result<Vec<f32>>>>> =
-            (0..ns).map(|_| Mutex::new(None)).collect();
-        par_for(ns, self.threads(), |s| {
-            *slots[s].lock().unwrap() = Some(sz_decompress(&archive.fields[s]));
-        });
-        for (s, slot) in slots.into_iter().enumerate() {
-            let field = slot.into_inner().unwrap().expect("missing")?;
+        let decoded = par_try_map(ns, self.threads(), |s| sz_decompress(&archive.fields[s]))?;
+        for (s, field) in decoded.into_iter().enumerate() {
+            if field.len() != nt * npix {
+                return Err(Error::format(format!(
+                    "SZ field {s} decoded to {} values, expected {}",
+                    field.len(),
+                    nt * npix
+                )));
+            }
             for t in 0..nt {
                 let off = (t * ns + s) * npix;
                 mass[off..off + npix].copy_from_slice(&field[t * npix..(t + 1) * npix]);

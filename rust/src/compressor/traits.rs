@@ -1,7 +1,24 @@
 //! Common compressor interface used by the benches and the CLI.
 
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
+
+/// Normalize a species selection: empty = all `ns`, otherwise ascending
+/// deduplicated indices, rejected if any is out of range.
+pub fn select_species(species: &[usize], ns: usize) -> Result<Vec<usize>> {
+    if species.is_empty() {
+        return Ok((0..ns).collect());
+    }
+    let mut v = species.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    if let Some(&bad) = v.iter().find(|&&s| s >= ns) {
+        return Err(Error::shape(format!(
+            "species index {bad} out of range (archive has {ns})"
+        )));
+    }
+    Ok(v)
+}
 
 /// An error-bounded dataset compressor.
 pub trait Compressor {
@@ -15,8 +32,46 @@ pub trait Compressor {
     /// Reconstruct mass fractions `[T, S, Y, X]` from compressed bytes.
     fn decompress_mass(&self, bytes: &[u8]) -> Result<Vec<f32>>;
 
+    /// `[T, S, Y, X]` dims recorded in a serialized archive (header parse).
+    fn archive_dims(&self, bytes: &[u8]) -> Result<(usize, usize, usize, usize)>;
+
     /// Bytes charged beyond the payload (e.g. model parameters).
     fn extra_bytes(&self) -> usize {
         0
+    }
+
+    /// Partial decode: timesteps `[t0, t1)` of the given species indices
+    /// (all species if empty), as row-major `[t1-t0, n_species, Y, X]`
+    /// with species in ascending index order.
+    ///
+    /// The default decodes everything and slices; format-aware
+    /// implementations (the `GBA2` TOC) override this to read and decode
+    /// only the touched sections.
+    fn decompress_range(
+        &self,
+        bytes: &[u8],
+        t0: usize,
+        t1: usize,
+        species: &[usize],
+    ) -> Result<Vec<f32>> {
+        let (nt, ns, ny, nx) = self.archive_dims(bytes)?;
+        if t0 >= t1 || t1 > nt {
+            return Err(Error::shape(format!(
+                "time range [{t0}, {t1}) out of bounds for nt {nt}"
+            )));
+        }
+        let sel = select_species(species, ns)?;
+        let full = self.decompress_mass(bytes)?;
+        let npix = ny * nx;
+        let nsel = sel.len();
+        let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
+        for t in t0..t1 {
+            for (k, &s) in sel.iter().enumerate() {
+                let src = (t * ns + s) * npix;
+                let dst = ((t - t0) * nsel + k) * npix;
+                out[dst..dst + npix].copy_from_slice(&full[src..src + npix]);
+            }
+        }
+        Ok(out)
     }
 }

@@ -1,0 +1,555 @@
+//! The shard-oriented compression engine — owns the executor handle,
+//! codecs, and guarantee stage, and drives time-window shards through the
+//! encode/decode pipelines.
+//!
+//! Compression processes `ceil(T / kt_window)` independent shards (see
+//! [`crate::data::shards`]), up to `shard_workers` concurrently; every
+//! worker funnels accelerator batches into the single [`ExecHandle`]
+//! service, which serializes them with queue-depth backpressure.  Peak
+//! working memory is bounded by the shard extent (times the worker count)
+//! rather than the full field — [`WorkspaceMeter`] accounts for it and the
+//! bound is reported in `CompressReport::peak_workspace_bytes`.
+//!
+//! Decompression walks the `GBA2` TOC.  [`ShardEngine::decompress_range`]
+//! reads and decodes only the shards intersecting the requested time
+//! window and, within them, only the requested species' guarantee
+//! sections, through any [`SectionSource`] (in-memory, file, counting).
+//! Its output is bit-identical to the same slice of a full decode: both
+//! paths run the exact same per-shard float pipeline.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::archive::{
+    Gba2Archive, Gba2Header, SectionSource, ShardPayload, ShardToc, SliceSource, SpeciesSection,
+};
+use crate::codec::{CoeffCodec, LatentCodec};
+use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
+use crate::compressor::gba::{
+    denormalize_in_place, effective_bin, normalize_window, CompressOptions, CompressReport,
+    SpeciesDisjoint,
+};
+use crate::coordinator::scheduler::{par_try_for, par_try_map};
+use crate::coordinator::{Pipeline, Progress};
+use crate::data::blocks::{BlockGrid, BlockShape};
+use crate::data::shards::ShardPlan;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::gae::guarantee::{apply_correction, guarantee_species, GuaranteeParams};
+use crate::runtime::ExecHandle;
+
+/// Worker threads for CPU stages (0 = all cores).
+pub(crate) fn effective_threads(threads: usize) -> usize {
+    if threads > 0 {
+        threads
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+    }
+}
+
+/// Tracks concurrent working-set charges; the high-water mark backs the
+/// `peak_workspace_bytes` accounting in `CompressReport`.
+#[derive(Debug, Default)]
+pub struct WorkspaceMeter {
+    current: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl WorkspaceMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `bytes` until the returned guard drops.
+    pub fn charge(&self, bytes: usize) -> WorkspaceCharge<'_> {
+        let now = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        WorkspaceCharge { meter: self, bytes }
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+pub struct WorkspaceCharge<'a> {
+    meter: &'a WorkspaceMeter,
+    bytes: usize,
+}
+
+impl Drop for WorkspaceCharge<'_> {
+    fn drop(&mut self) {
+        self.meter.current.fetch_sub(self.bytes, Ordering::Relaxed);
+    }
+}
+
+/// Working-set bytes one shard's compression pass needs: normalized input
+/// + reconstruction (shard-sized), the latent plane twice (raw +
+/// dequantized), and the per-species guarantee temporaries of up to
+/// `guarantee_threads` concurrent species passes.
+pub fn shard_workspace_bytes(
+    shard_values: usize,
+    n_blocks: usize,
+    latent: usize,
+    d: usize,
+    guarantee_threads: usize,
+) -> usize {
+    let norm = shard_values * 4;
+    let recon = shard_values * 4;
+    let latents = 2 * n_blocks * latent * 4;
+    // per species: orig + recon gathers, residuals, corrected (4 x nb*d
+    // f32) plus PCA covariance/basis (d*d f64 + f32)
+    let per_species = 16 * n_blocks * d + 12 * d * d;
+    norm + recon + latents + guarantee_threads * per_species
+}
+
+/// Bytes the encode/decode pipelines hold in flight for one shard:
+/// `queue_depth` queued batches plus a producer- and a consumer-side
+/// working batch, capped at two full shard copies.
+pub fn pipeline_workspace_bytes(
+    queue_depth: usize,
+    batch: usize,
+    instance_len: usize,
+    shard_values: usize,
+) -> usize {
+    ((queue_depth + 2) * batch * instance_len * 4).min(2 * shard_values * 4)
+}
+
+/// One selected time window + species subset, decoded.
+#[derive(Debug)]
+pub struct RangeDecode {
+    /// First timestep of the window.
+    pub t0: usize,
+    /// Timesteps decoded.
+    pub nt: usize,
+    pub ny: usize,
+    pub nx: usize,
+    /// Species indices, ascending (row order of `mass`).
+    pub species: Vec<usize>,
+    /// Row-major `[nt, species.len(), ny, nx]` mass fractions.
+    pub mass: Vec<f32>,
+}
+
+/// The shard-oriented engine; borrows an executor-service handle.
+pub struct ShardEngine<'a> {
+    handle: &'a ExecHandle,
+    /// Decoder+TCN parameter counts (CR accounting).
+    pub decoder_params: usize,
+    pub tcn_params: usize,
+}
+
+struct ShardOut {
+    payload: ShardPayload,
+    max_residual: f64,
+    n_coeffs: usize,
+    latent_bytes: usize,
+    bases_bytes: usize,
+    coeff_bytes: usize,
+}
+
+impl<'a> ShardEngine<'a> {
+    pub fn new(handle: &'a ExecHandle, decoder_params: usize, tcn_params: usize) -> Self {
+        Self {
+            handle,
+            decoder_params,
+            tcn_params,
+        }
+    }
+
+    /// Compress a dataset shard by shard into an indexed `GBA2` archive.
+    pub fn compress(&self, ds: &Dataset, opts: &CompressOptions) -> Result<CompressReport> {
+        let progress = Progress::new();
+        let spec = self.handle.spec();
+        if ds.ns != spec.species {
+            return Err(Error::shape(format!(
+                "dataset has {} species, model expects {}",
+                ds.ns, spec.species
+            )));
+        }
+        let shape = BlockShape {
+            kt: spec.block.0,
+            by: spec.block.1,
+            bx: spec.block.2,
+        };
+        // validate full-field divisibility up front
+        BlockGrid::for_dataset(ds, shape)?;
+        let d = shape.d();
+        let threads = effective_threads(opts.threads);
+        let plan = ShardPlan::new(ds.nt, shape.kt, opts.kt_window)?;
+        let n_shards = plan.len();
+        let shard_workers = opts.shard_workers.max(1).min(n_shards);
+        let inner_threads = (threads / shard_workers).max(1);
+        let npix = ds.ny * ds.nx;
+        let stride = ds.ns * npix;
+
+        let ranges = ds.species_ranges();
+        // Certify against a 0.1%-conservative tau so that the f32
+        // denormalize/renormalize round trip on the decompressor side
+        // (worst for species with offset >> range, e.g. N2) cannot push a
+        // block past the user's bound.
+        let tau = opts.nrmse_target * (d as f64).sqrt();
+        let tau_cert = tau * 0.999;
+        let params = GuaranteeParams {
+            tau: tau_cert,
+            coeff_bin: tau_cert / (d as f64).sqrt(),
+            store_full_basis: opts.store_full_basis,
+        };
+        let pipeline = Pipeline {
+            queue_depth: opts.queue_depth,
+        };
+        let meter = WorkspaceMeter::new();
+
+        let outs: Vec<ShardOut> = par_try_map(n_shards, shard_workers, |i| {
+            let w = plan.window(i);
+            let grid = BlockGrid::new((w.nt, ds.ns, ds.ny, ds.nx), shape)?;
+            let nb = grid.n_blocks();
+            let _charge = meter.charge(
+                shard_workspace_bytes(
+                    w.nt * stride,
+                    nb,
+                    spec.latent,
+                    d,
+                    inner_threads.min(ds.ns),
+                ) + pipeline_workspace_bytes(
+                    opts.queue_depth,
+                    spec.batch,
+                    grid.instance_len(),
+                    w.nt * stride,
+                ),
+            );
+
+            // 1. normalize the shard's contiguous view (global ranges)
+            let view = ds.shard_view(w)?;
+            let norm = normalize_window(view.mass, &ranges, w.nt, ds.ns, npix, inner_threads);
+
+            // 2. AE encode -> latents -> quantize + Huffman
+            let latents = pipeline.encode_all(&grid, &norm, self.handle, &progress)?;
+            let (latent_blob, deq) =
+                LatentCodec::encode(&latents, nb, spec.latent, opts.latent_bin)?;
+            drop(latents);
+
+            // 3. decode (+ TCN) from the *dequantized* latents — exactly
+            // what the decompressor will see
+            let recon = pipeline.decode_all(&grid, &deq, self.handle, opts.use_tcn, &progress)?;
+            drop(deq);
+
+            // 4. per-(shard, species) guarantee (Algorithm 1)
+            let species = par_try_map(ds.ns, inner_threads, |s| {
+                let t = std::time::Instant::now();
+                let mut orig_s = vec![0.0f32; nb * d];
+                let mut recon_s = vec![0.0f32; nb * d];
+                for b in 0..nb {
+                    grid.gather_species(&norm, b, s, &mut orig_s[b * d..(b + 1) * d]);
+                    grid.gather_species(&recon, b, s, &mut recon_s[b * d..(b + 1) * d]);
+                }
+                let res = guarantee_species(&orig_s, &recon_s, nb, d, &params);
+                let coeffs = CoeffCodec::encode(&res.per_block, d, effective_bin(&params, d))?;
+                progress.add(&progress.species_guaranteed, 1);
+                progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                Ok((
+                    SpeciesSection {
+                        basis: res.basis,
+                        coeffs,
+                    },
+                    res.max_residual,
+                    res.n_coeffs,
+                ))
+            })?;
+
+            let mut max_residual = 0.0f64;
+            let mut n_coeffs = 0usize;
+            let mut bases_bytes = 0usize;
+            let mut coeff_bytes = 0usize;
+            let mut sec_bytes = Vec::with_capacity(ds.ns);
+            for (sec, maxr, nc) in species {
+                max_residual = max_residual.max(maxr);
+                n_coeffs += nc;
+                bases_bytes += sec.basis.payload_bytes();
+                coeff_bytes += sec.coeffs.len();
+                sec_bytes.push(sec.to_bytes());
+            }
+            let latent_bytes = latent_blob.len();
+            Ok(ShardOut {
+                payload: ShardPayload {
+                    t0: w.t0,
+                    nt: w.nt,
+                    latent_blob,
+                    species: sec_bytes,
+                },
+                max_residual,
+                n_coeffs,
+                latent_bytes,
+                bases_bytes,
+                coeff_bytes,
+            })
+        })?;
+
+        let model_params = self.decoder_params + if opts.use_tcn { self.tcn_params } else { 0 };
+        let model_bytes = model_param_bytes(model_params, opts.model_bytes_f32);
+        let mut max_block_residual = 0.0f64;
+        let mut n_coeffs = 0usize;
+        let mut latents_bytes = 0usize;
+        let mut bases_bytes = 0usize;
+        let mut coeff_bytes = 0usize;
+        let mut payloads = Vec::with_capacity(outs.len());
+        for o in outs {
+            max_block_residual = max_block_residual.max(o.max_residual);
+            n_coeffs += o.n_coeffs;
+            latents_bytes += o.latent_bytes;
+            bases_bytes += o.bases_bytes;
+            coeff_bytes += o.coeff_bytes;
+            payloads.push(o.payload);
+        }
+        let header = Gba2Header {
+            tcn_used: opts.use_tcn,
+            dims: (ds.nt, ds.ns, ds.ny, ds.nx),
+            block: (shape.kt, shape.by, shape.bx),
+            latent_dim: spec.latent,
+            kt_window: plan.kt_window,
+            pressure: ds.pressure,
+            nrmse_target: opts.nrmse_target,
+            model_param_bytes: model_bytes as u64,
+            ranges,
+        };
+        let archive = Gba2Archive::build(header, payloads)?;
+        let payload = archive.payload_bytes();
+        let breakdown = SizeBreakdown {
+            latents: latents_bytes,
+            bases: bases_bytes,
+            coeffs: coeff_bytes,
+            header: payload.saturating_sub(latents_bytes + bases_bytes + coeff_bytes),
+            model_params: model_bytes,
+        };
+        Ok(CompressReport {
+            archive,
+            breakdown,
+            max_block_residual,
+            tau,
+            n_coeffs,
+            n_shards,
+            peak_workspace_bytes: meter.peak_bytes(),
+            elapsed_s: progress.elapsed_s(),
+            progress_summary: progress.summary(),
+        })
+    }
+
+    fn check_spec(&self, header: &Gba2Header) -> Result<()> {
+        let spec = self.handle.spec();
+        if header.dims.1 != spec.species
+            || header.block != spec.block
+            || header.latent_dim != spec.latent
+        {
+            return Err(Error::shape(format!(
+                "archive (S {}, block {:?}, latent {}) does not match runtime \
+                 (S {}, block {:?}, latent {})",
+                header.dims.1,
+                header.block,
+                header.latent_dim,
+                spec.species,
+                spec.block,
+                spec.latent
+            )));
+        }
+        Ok(())
+    }
+
+    /// Decode one shard to corrected *normalized* mass `[nt_sh, S, Y, X]`,
+    /// reading (and correcting) only the species in `sel`.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_shard_norm<S: SectionSource + ?Sized>(
+        &self,
+        header: &Gba2Header,
+        entry: &ShardToc,
+        src: &S,
+        sel: &[usize],
+        pipeline: Pipeline,
+        threads: usize,
+        progress: &Progress,
+    ) -> Result<Vec<f32>> {
+        let (_, ns, ny, nx) = header.dims;
+        let shape = BlockShape {
+            kt: header.block.0,
+            by: header.block.1,
+            bx: header.block.2,
+        };
+        let grid = BlockGrid::new((entry.nt, ns, ny, nx), shape)?;
+        let nb = grid.n_blocks();
+        let d = shape.d();
+
+        // 1. latent plane (one section read)
+        let latent_len = usize::try_from(entry.latent.1)
+            .map_err(|_| Error::format("latent section length overflows"))?;
+        let latent_bytes = src.read_at(entry.latent.0, latent_len)?;
+        let plane = LatentCodec::decode(&latent_bytes)?;
+        if plane.n != nb || plane.dim != header.latent_dim {
+            return Err(Error::format(format!(
+                "latent plane {}x{} vs expected {}x{}",
+                plane.n, plane.dim, nb, header.latent_dim
+            )));
+        }
+
+        // 2. decode + optional TCN
+        let mut norm =
+            pipeline.decode_all(&grid, &plane.values, self.handle, header.tcn_used, progress)?;
+
+        // 3. per-species corrections (parallel; writes are species-disjoint)
+        let cell = SpeciesDisjoint::new(norm.as_mut_slice());
+        par_try_for(sel.len(), threads, |k| {
+            let s = sel[k];
+            let range = *entry
+                .species
+                .get(s)
+                .ok_or_else(|| Error::format(format!("no TOC entry for species {s}")))?;
+            let sec_len = usize::try_from(range.1)
+                .map_err(|_| Error::format("species section length overflows"))?;
+            let sec = SpeciesSection::from_bytes(&src.read_at(range.0, sec_len)?)?;
+            let coeffs = CoeffCodec::decode(&sec.coeffs)?;
+            if coeffs.per_block.len() != nb || (coeffs.d != d && !coeffs.per_block.is_empty()) {
+                return Err(Error::codec(format!(
+                    "species {s}: {} coefficient blocks of dim {} vs grid {nb} x {d}",
+                    coeffs.per_block.len(),
+                    coeffs.d
+                )));
+            }
+            if coeffs
+                .per_block
+                .iter()
+                .flatten()
+                .any(|&(j, _)| j >= sec.basis.rank)
+            {
+                return Err(Error::codec(format!(
+                    "species {s}: coefficient index beyond basis rank {}",
+                    sec.basis.rank
+                )));
+            }
+            // SAFETY: each worker only touches its own species' indices.
+            let mass: &mut [f32] = unsafe { cell.slice() };
+            let mut block_vec = vec![0.0f32; d];
+            for (b, per_block) in coeffs.per_block.iter().enumerate() {
+                if per_block.is_empty() {
+                    continue;
+                }
+                grid.gather_species(mass, b, s, &mut block_vec);
+                apply_correction(&mut block_vec, 1, d, &sec.basis, std::slice::from_ref(per_block));
+                grid.scatter_species(mass, b, s, &block_vec);
+            }
+            Ok(())
+        })?;
+        Ok(norm)
+    }
+
+    /// Decompress a whole archive back to mass fractions `[T, S, Y, X]`.
+    pub fn decompress_all(&self, archive: &Gba2Archive, threads: usize) -> Result<Vec<f32>> {
+        let progress = Progress::new();
+        self.check_spec(&archive.header)?;
+        let (nt, ns, ny, nx) = archive.header.dims;
+        let npix = ny * nx;
+        let stride = ns * npix;
+        let threads = effective_threads(threads);
+        let pipeline = Pipeline::default();
+        let src = SliceSource(&archive.bytes);
+        let sel: Vec<usize> = (0..ns).collect();
+        let mut out = vec![0.0f32; nt * stride];
+        for entry in &archive.toc {
+            let norm = self.decode_shard_norm(
+                &archive.header,
+                entry,
+                &src,
+                &sel,
+                pipeline,
+                threads,
+                &progress,
+            )?;
+            out[entry.t0 * stride..(entry.t0 + entry.nt) * stride].copy_from_slice(&norm);
+        }
+        denormalize_in_place(&mut out, &archive.header.ranges, nt, ns, npix, threads);
+        Ok(out)
+    }
+
+    /// Random-access partial decode: reconstruct timesteps `[t0, t1)` of
+    /// the given species (all species if empty), reading only the touched
+    /// shards' latent planes and the selected species' sections from `src`.
+    ///
+    /// The output is bit-identical to the corresponding slice of
+    /// [`Self::decompress_all`].
+    pub fn decompress_range<S: SectionSource + ?Sized>(
+        &self,
+        src: &S,
+        t0: usize,
+        t1: usize,
+        species: &[usize],
+        threads: usize,
+    ) -> Result<RangeDecode> {
+        let progress = Progress::new();
+        let (header, toc) = Gba2Archive::read_toc(src)?;
+        self.check_spec(&header)?;
+        let (nt, ns, ny, nx) = header.dims;
+        if t0 >= t1 || t1 > nt {
+            return Err(Error::shape(format!(
+                "time range [{t0}, {t1}) out of bounds for nt {nt}"
+            )));
+        }
+        let sel = crate::compressor::traits::select_species(species, ns)?;
+        let nsel = sel.len();
+        let npix = ny * nx;
+        let threads = effective_threads(threads);
+        let pipeline = Pipeline::default();
+        let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
+        for entry in toc.iter().filter(|e| e.t0 < t1 && e.t0 + e.nt > t0) {
+            let norm =
+                self.decode_shard_norm(&header, entry, src, &sel, pipeline, threads, &progress)?;
+            let lo_t = t0.max(entry.t0);
+            let hi_t = t1.min(entry.t0 + entry.nt);
+            for t in lo_t..hi_t {
+                for (k, &s) in sel.iter().enumerate() {
+                    let (lo, hi) = header.ranges[s];
+                    let range = (hi - lo).max(1e-30);
+                    let src_off = ((t - entry.t0) * ns + s) * npix;
+                    let dst_off = ((t - t0) * nsel + k) * npix;
+                    let dst = &mut out[dst_off..dst_off + npix];
+                    dst.copy_from_slice(&norm[src_off..src_off + npix]);
+                    // same f32 op as denormalize_in_place — bit-identical
+                    for v in dst {
+                        *v = *v * range + lo;
+                    }
+                }
+            }
+        }
+        Ok(RangeDecode {
+            t0,
+            nt: t1 - t0,
+            ny,
+            nx,
+            species: sel,
+            mass: out,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_meter_tracks_concurrent_peak() {
+        let m = WorkspaceMeter::new();
+        {
+            let _a = m.charge(100);
+            {
+                let _b = m.charge(50);
+            }
+            let _c = m.charge(30);
+        }
+        assert_eq!(m.peak_bytes(), 150);
+        let _d = m.charge(10);
+        assert_eq!(m.peak_bytes(), 150);
+    }
+
+    #[test]
+    fn workspace_estimate_scales_with_shard() {
+        let small = shard_workspace_bytes(10_000, 100, 8, 80, 1);
+        let big = shard_workspace_bytes(80_000, 800, 8, 80, 1);
+        assert!(big > 4 * small, "{big} vs {small}");
+    }
+}

@@ -1,14 +1,17 @@
-//! L3 coordination: batching of blocks toward the AOT executable's fixed
-//! batch shapes, a work-stealing parallel-for for CPU-bound stages
-//! (per-species guarantee passes, SZ fields), a bounded two-stage pipeline
-//! (CPU workers feeding the PJRT executor service), and progress counters.
+//! L3 coordination: the shard-oriented compression engine, batching of
+//! blocks toward the AOT executable's fixed batch shapes, a work-stealing
+//! parallel-for for CPU-bound stages (per-species guarantee passes, SZ
+//! fields), a bounded two-stage pipeline (CPU workers feeding the executor
+//! service), and progress counters.
 
 pub mod batcher;
+pub mod engine;
 pub mod pipeline;
 pub mod progress;
 pub mod scheduler;
 
 pub use batcher::Batcher;
+pub use engine::{RangeDecode, ShardEngine, WorkspaceMeter};
 pub use pipeline::Pipeline;
 pub use progress::Progress;
-pub use scheduler::par_for;
+pub use scheduler::{par_for, par_map, par_try_for, par_try_map};

@@ -1,10 +1,18 @@
 //! Batch pipelines over the executor service.
 //!
 //! Encode: a producer thread gathers + normalizes blocks into batches
-//! (CPU) while the main loop keeps the PJRT executor busy — a bounded
-//! channel provides backpressure.  Decode: batches flow decoder -> point
-//! transform (CPU) -> TCN -> scatter, with the CPU transform overlapped
-//! against the next decoder execution.
+//! (CPU) while the main loop keeps the executor busy — a bounded channel
+//! provides backpressure.  Decode: batches flow decoder -> point transform
+//! (CPU) -> TCN -> scatter, with the CPU transform overlapped against the
+//! next decoder execution.
+//!
+//! Both pipelines are shard-agnostic: the [`crate::coordinator::engine`]
+//! drives one pipeline per time-window shard, so buffers here are bounded
+//! by the shard extent, not the full field.
+//!
+//! Error paths drain cleanly: the receiving side owns the channel receiver,
+//! so an early `?` drops it, the blocked sender observes the disconnect,
+//! and the scope joins without deadlocking.
 
 use std::sync::mpsc::sync_channel;
 use std::time::Instant;
@@ -42,10 +50,11 @@ impl Pipeline {
         let latent = spec.latent;
         let mut latents = vec![0.0f32; n_blocks * latent];
 
-        let (tx, rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.queue_depth);
-        let result: Result<()> = crossbeam_utils::thread::scope(|scope| {
-            // producer: gather + normalize (CPU)
-            scope.spawn(move |_| {
+        let (tx, rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.queue_depth.max(1));
+        let latents_ref = &mut latents;
+        let result: Result<()> = std::thread::scope(|scope| {
+            // producer: gather blocks into batches (CPU)
+            scope.spawn(move || {
                 for (start, n) in Batcher::new(n_blocks, spec.batch) {
                     let t = Instant::now();
                     let batch = gather_batch(grid, norm_mass, start, n);
@@ -55,24 +64,29 @@ impl Pipeline {
                     }
                 }
             });
-            // consumer: execute on the PJRT service
-            for (start, n, batch) in rx.iter() {
-                let t = Instant::now();
-                let out = handle.encode(batch, n)?;
-                progress.add(&progress.exec_ns, t.elapsed().as_nanos() as u64);
-                progress.add(&progress.exec_calls, 1);
-                progress.add(&progress.blocks_encoded, n as u64);
-                latents[start * latent..(start + n) * latent].copy_from_slice(&out);
-            }
-            Ok(())
-        })
-        .map_err(|_| Error::runtime("encode pipeline thread panicked"))?;
+            // consumer (this thread): execute on the executor service.  The
+            // closure owns `rx`, so an early error drops it and unblocks the
+            // producer before the scope joins.
+            let consume = move || -> Result<()> {
+                for (start, n, batch) in rx.iter() {
+                    let t = Instant::now();
+                    let out = handle.encode(batch, n)?;
+                    progress.add(&progress.exec_ns, t.elapsed().as_nanos() as u64);
+                    progress.add(&progress.exec_calls, 1);
+                    progress.add(&progress.blocks_encoded, n as u64);
+                    latents_ref[start * latent..(start + n) * latent].copy_from_slice(&out);
+                }
+                Ok(())
+            };
+            consume()
+        });
         result?;
         Ok(latents)
     }
 
     /// Decode all latents back to a normalized mass buffer (scattered), with
-    /// optional TCN correction.  Returns the reconstructed normalized mass.
+    /// optional TCN correction.  Returns the reconstructed normalized mass
+    /// for the grid's extent (one shard, or the whole field).
     pub fn decode_all(
         &self,
         grid: &BlockGrid,
@@ -84,7 +98,14 @@ impl Pipeline {
         let spec = handle.spec();
         let n_blocks = grid.n_blocks();
         let latent = spec.latent;
-        assert_eq!(latents.len(), n_blocks * latent);
+        if latents.len() != n_blocks * latent {
+            return Err(Error::shape(format!(
+                "latent plane has {} values, grid expects {} blocks x {}",
+                latents.len(),
+                n_blocks,
+                latent
+            )));
+        }
         let il = grid.instance_len();
         let d = grid.shape.d();
         let ns = grid.ns;
@@ -92,10 +113,10 @@ impl Pipeline {
 
         // stage A (this thread): decoder executions
         // stage B (worker): point transform + TCN + scatter
-        let (tx, rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.queue_depth);
+        let (tx, rx) = sync_channel::<(usize, usize, Vec<f32>)>(self.queue_depth.max(1));
         let norm_ref = &mut norm_out;
-        let result: Result<()> = crossbeam_utils::thread::scope(|scope| {
-            let consumer = scope.spawn(move |_| -> Result<()> {
+        let result: Result<()> = std::thread::scope(|scope| {
+            let consumer = scope.spawn(move || -> Result<()> {
                 for (start, n, mut batch) in rx.iter() {
                     if apply_tcn {
                         let t = Instant::now();
@@ -115,8 +136,7 @@ impl Pipeline {
                         while off < total {
                             let m = spec.points.min(total - off);
                             let te = Instant::now();
-                            let out = handle
-                                .tcn(pts[off * ns..(off + m) * ns].to_vec(), m)?;
+                            let out = handle.tcn(pts[off * ns..(off + m) * ns].to_vec(), m)?;
                             progress.add(&progress.exec_ns, te.elapsed().as_nanos() as u64);
                             progress.add(&progress.exec_calls, 1);
                             corrected[off * ns..(off + m) * ns].copy_from_slice(&out);
@@ -139,21 +159,26 @@ impl Pipeline {
                 Ok(())
             });
 
-            for (start, n) in Batcher::new(n_blocks, spec.batch) {
-                let t = Instant::now();
-                let out = handle.decode(latents[start * latent..(start + n) * latent].to_vec(), n)?;
-                progress.add(&progress.exec_ns, t.elapsed().as_nanos() as u64);
-                progress.add(&progress.exec_calls, 1);
-                if tx.send((start, n, out)).is_err() {
-                    break;
+            let produce = || -> Result<()> {
+                for (start, n) in Batcher::new(n_blocks, spec.batch) {
+                    let t = Instant::now();
+                    let out =
+                        handle.decode(latents[start * latent..(start + n) * latent].to_vec(), n)?;
+                    progress.add(&progress.exec_ns, t.elapsed().as_nanos() as u64);
+                    progress.add(&progress.exec_calls, 1);
+                    if tx.send((start, n, out)).is_err() {
+                        break; // consumer bailed
+                    }
                 }
-            }
-            drop(tx);
-            consumer
+                Ok(())
+            };
+            let produced = produce();
+            drop(tx); // let the consumer's rx.iter() terminate
+            let consumed = consumer
                 .join()
-                .map_err(|_| Error::runtime("decode consumer panicked"))?
-        })
-        .map_err(|_| Error::runtime("decode pipeline thread panicked"))?;
+                .map_err(|_| Error::runtime("decode consumer panicked"))?;
+            produced.and(consumed)
+        });
         result?;
         Ok(norm_out)
     }

@@ -1,10 +1,16 @@
-//! Work-stealing parallel-for over an index range using scoped threads
-//! (no rayon in the offline image).  Tasks pull indices from a shared
-//! atomic counter, so uneven per-item cost (e.g. species with very
+//! Work-stealing parallel-for over an index range using `std::thread::scope`
+//! (no rayon/crossbeam in the offline image).  Tasks pull indices from a
+//! shared atomic counter, so uneven per-item cost (e.g. species with very
 //! different coefficient loads) balances automatically.
+//!
+//! The `par_try_*` variants propagate `Result`s from the request path
+//! instead of panicking: the first error wins, remaining items still run
+//! (workers only pull cheap indices after an error is latched).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::error::{Error, Result};
 
 /// Run `f(i)` for every `i in 0..n` on up to `threads` workers.
 /// `f` must be `Sync` (called concurrently from many threads).
@@ -17,9 +23,9 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
         return;
     }
     let next = AtomicUsize::new(0);
-    crossbeam_utils::thread::scope(|scope| {
+    std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|_| loop {
+            scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
@@ -27,8 +33,7 @@ pub fn par_for<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
                 f(i);
             });
         }
-    })
-    .expect("scoped thread panicked");
+    });
 }
 
 /// Parallel map collecting results in index order.
@@ -41,6 +46,58 @@ pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F
     slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("missing result"))
+        .collect()
+}
+
+/// Fallible parallel-for: runs `f(i)` for every index, short-circuiting new
+/// work once an error is latched; returns the first error observed.
+pub fn par_try_for<F: Fn(usize) -> Result<()> + Sync>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Result<()> {
+    let failed = AtomicBool::new(false);
+    let err: Mutex<Option<Error>> = Mutex::new(None);
+    par_for(n, threads, |i| {
+        if failed.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Err(e) = f(i) {
+            failed.store(true, Ordering::Relaxed);
+            if let Ok(mut slot) = err.lock() {
+                slot.get_or_insert(e);
+            }
+        }
+    });
+    match err.into_inner() {
+        Ok(Some(e)) => Err(e),
+        Ok(None) => Ok(()),
+        Err(_) => Err(Error::runtime("parallel error slot poisoned")),
+    }
+}
+
+/// Fallible parallel map collecting results in index order; the first error
+/// aborts the map.
+pub fn par_try_map<T: Send, F: Fn(usize) -> Result<T> + Sync>(
+    n: usize,
+    threads: usize,
+    f: F,
+) -> Result<Vec<T>> {
+    let slots: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    par_try_for(n, threads, |i| {
+        let v = f(i)?;
+        *slots[i]
+            .lock()
+            .map_err(|_| Error::runtime("parallel result slot poisoned"))? = Some(v);
+        Ok(())
+    })?;
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .map_err(|_| Error::runtime("parallel result slot poisoned"))?
+                .ok_or_else(|| Error::runtime("missing parallel result"))
+        })
         .collect()
 }
 
@@ -79,5 +136,27 @@ mod tests {
         par_for(0, 4, |_| panic!("should not run"));
         let v: Vec<usize> = par_map(0, 4, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn try_for_propagates_first_error() {
+        let r = par_try_for(100, 4, |i| {
+            if i == 17 {
+                Err(Error::runtime("boom"))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(r.is_err());
+        assert!(par_try_for(50, 4, |_| Ok(())).is_ok());
+    }
+
+    #[test]
+    fn try_map_ordered_or_error() {
+        let v = par_try_map(64, 4, |i| Ok(i * 2)).unwrap();
+        assert_eq!(v[31], 62);
+        let r: Result<Vec<usize>> =
+            par_try_map(64, 4, |i| if i == 5 { Err(Error::runtime("x")) } else { Ok(i) });
+        assert!(r.is_err());
     }
 }

@@ -6,8 +6,10 @@
 pub mod blocks;
 pub mod field;
 pub mod io;
+pub mod shards;
 pub mod synth;
 
 pub use blocks::{BlockGrid, BlockShape};
 pub use field::{Dataset, Field3};
+pub use shards::{ShardPlan, ShardView, TimeWindow};
 pub use synth::{generate, Profile};

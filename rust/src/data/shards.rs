@@ -1,0 +1,193 @@
+//! Time-window shard planning — the data-layer half of the streaming
+//! engine.
+//!
+//! A `[T, S, Y, X]` field is processed as `ceil(T / kt_window)` independent
+//! shards, each covering a contiguous run of timesteps that is a multiple
+//! of the block extent `kt`.  Because the layout is time-major, a shard's
+//! mass data is a *contiguous slice* of the field — no gather copies; the
+//! per-shard working buffers (normalized input, reconstructed output,
+//! latent plane) are what bound peak memory.
+
+use crate::data::field::Dataset;
+use crate::error::{Error, Result};
+
+/// One shard's time extent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimeWindow {
+    /// First timestep covered.
+    pub t0: usize,
+    /// Number of timesteps (a multiple of the block `kt`).
+    pub nt: usize,
+}
+
+impl TimeWindow {
+    /// Exclusive end timestep.
+    pub fn end(&self) -> usize {
+        self.t0 + self.nt
+    }
+}
+
+/// Partition of `0..nt` into uniform windows of `kt_window` timesteps
+/// (the last window may be shorter, still a `kt` multiple).
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub nt: usize,
+    pub kt_window: usize,
+    windows: Vec<TimeWindow>,
+}
+
+impl ShardPlan {
+    /// Build a plan.  `kt_window == 0` selects the auto window
+    /// `min(4 * block_kt, nt)`; otherwise it must be a positive multiple of
+    /// `block_kt`.  `nt` must itself be divisible by `block_kt` (the same
+    /// precondition [`crate::data::blocks::BlockGrid`] enforces).
+    pub fn new(nt: usize, block_kt: usize, kt_window: usize) -> Result<ShardPlan> {
+        if block_kt == 0 || nt == 0 || nt % block_kt != 0 {
+            return Err(Error::shape(format!(
+                "shard plan: nt {nt} not divisible by block kt {block_kt}"
+            )));
+        }
+        let w = if kt_window == 0 {
+            (4 * block_kt).min(nt)
+        } else {
+            kt_window
+        };
+        if w % block_kt != 0 {
+            return Err(Error::shape(format!(
+                "kt_window {w} is not a multiple of block kt {block_kt}"
+            )));
+        }
+        let w = w.min(nt);
+        let windows = (0..nt)
+            .step_by(w)
+            .map(|t0| TimeWindow {
+                t0,
+                nt: w.min(nt - t0),
+            })
+            .collect();
+        Ok(ShardPlan {
+            nt,
+            kt_window: w,
+            windows,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn window(&self, i: usize) -> TimeWindow {
+        self.windows[i]
+    }
+
+    pub fn windows(&self) -> &[TimeWindow] {
+        &self.windows
+    }
+
+    /// Indices of the windows intersecting the half-open range `[t0, t1)`.
+    pub fn touching(&self, t0: usize, t1: usize) -> Result<std::ops::Range<usize>> {
+        if t0 >= t1 || t1 > self.nt {
+            return Err(Error::shape(format!(
+                "time range [{t0}, {t1}) out of bounds for nt {}",
+                self.nt
+            )));
+        }
+        // windows are uniform (last may be short), so index = t / width
+        Ok((t0 / self.kt_window)..((t1 - 1) / self.kt_window + 1))
+    }
+}
+
+/// A borrowed time-window view of a dataset's mass data (contiguous in the
+/// `[T, S, Y, X]` layout).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardView<'a> {
+    pub window: TimeWindow,
+    pub ns: usize,
+    pub ny: usize,
+    pub nx: usize,
+    /// `[window.nt, S, Y, X]` row-major.
+    pub mass: &'a [f32],
+}
+
+impl Dataset {
+    /// Borrow the contiguous mass slice of one time window.
+    pub fn shard_view(&self, window: TimeWindow) -> Result<ShardView<'_>> {
+        if window.end() > self.nt {
+            return Err(Error::shape(format!(
+                "shard window [{}, {}) exceeds nt {}",
+                window.t0,
+                window.end(),
+                self.nt
+            )));
+        }
+        let stride = self.ns * self.ny * self.nx;
+        Ok(ShardView {
+            window,
+            ns: self.ns,
+            ny: self.ny,
+            nx: self.nx,
+            mass: &self.mass[window.t0 * stride..window.end() * stride],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_covers_time_axis_exactly() {
+        let p = ShardPlan::new(24, 4, 8).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.window(0), TimeWindow { t0: 0, nt: 8 });
+        assert_eq!(p.window(2), TimeWindow { t0: 16, nt: 8 });
+        let covered: usize = p.windows().iter().map(|w| w.nt).sum();
+        assert_eq!(covered, 24);
+
+        // short last window, still a kt multiple
+        let p = ShardPlan::new(20, 4, 8).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.window(2), TimeWindow { t0: 16, nt: 4 });
+    }
+
+    #[test]
+    fn auto_window_and_degenerate_cases() {
+        let p = ShardPlan::new(8, 4, 0).unwrap();
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.kt_window, 8);
+        let p = ShardPlan::new(48, 4, 0).unwrap();
+        assert_eq!(p.kt_window, 16);
+        assert_eq!(p.len(), 3);
+        assert!(ShardPlan::new(10, 4, 0).is_err());
+        assert!(ShardPlan::new(8, 4, 6).is_err());
+        assert!(ShardPlan::new(0, 4, 4).is_err());
+    }
+
+    #[test]
+    fn touching_selects_overlapping_windows() {
+        let p = ShardPlan::new(32, 4, 8).unwrap();
+        assert_eq!(p.touching(0, 32).unwrap(), 0..4);
+        assert_eq!(p.touching(8, 16).unwrap(), 1..2);
+        assert_eq!(p.touching(7, 9).unwrap(), 0..2);
+        assert_eq!(p.touching(31, 32).unwrap(), 3..4);
+        assert!(p.touching(4, 4).is_err());
+        assert!(p.touching(0, 33).is_err());
+    }
+
+    #[test]
+    fn shard_view_is_contiguous_slice() {
+        let mut ds = Dataset::new(8, 2, 3, 3);
+        for (i, v) in ds.mass.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let v = ds.shard_view(TimeWindow { t0: 4, nt: 4 }).unwrap();
+        let stride = 2 * 3 * 3;
+        assert_eq!(v.mass.len(), 4 * stride);
+        assert_eq!(v.mass[0], (4 * stride) as f32);
+        assert!(ds.shard_view(TimeWindow { t0: 6, nt: 4 }).is_err());
+    }
+}

@@ -1,33 +1,60 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled — the offline image vendors no
+//! `thiserror`; the `xla` variant only exists under the `pjrt` feature).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every GBATC subsystem.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("xla/pjrt error: {0}")]
-    Xla(#[from] xla::Error),
+    #[cfg(feature = "pjrt")]
+    Xla(xla::Error),
 
-    #[error("format error: {0}")]
     Format(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("shape error: {0}")]
     Shape(String),
-
-    #[error("codec error: {0}")]
     Codec(String),
-
-    #[error("guarantee unsatisfiable: {0}")]
     Guarantee(String),
-
-    #[error("runtime error: {0}")]
     Runtime(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            #[cfg(feature = "pjrt")]
+            Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
+            Error::Format(m) => write!(f, "format error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Guarantee(m) => write!(f, "guarantee unsatisfiable: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

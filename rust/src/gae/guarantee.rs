@@ -106,8 +106,9 @@ pub fn guarantee_species(
                     .sum();
                 coeffs.push((j, c));
             }
-            // sort by squared contribution, descending
-            coeffs.sort_by(|a, b| (b.1 * b.1).partial_cmp(&(a.1 * a.1)).unwrap());
+            // sort by squared contribution, descending (total_cmp: NaN-safe
+            // on the request path)
+            coeffs.sort_by(|a, b| (b.1 * b.1).total_cmp(&(a.1 * a.1)));
 
             for &(j, c) in coeffs.iter() {
                 let q = quant.quantize(c);

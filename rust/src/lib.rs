@@ -2,19 +2,47 @@
 //!
 //! A production reproduction of *"Machine Learning Techniques for Data
 //! Reduction of CFD Applications"* (Lee et al., 2024): error-bounded learned
-//! compression of multi-species CFD fields.
+//! compression of multi-species CFD fields, grown into a shard-streaming
+//! service with random-access partial decode.  See `DESIGN.md` for the full
+//! architecture document.
 //!
-//! Three-layer architecture (see `DESIGN.md`):
-//! * **L1/L2 (build time, python)** — a Pallas fused-matmul kernel and a JAX
-//!   3D-conv autoencoder + tensor-correction network, trained once and
-//!   AOT-lowered to HLO text in `artifacts/`.
-//! * **L3 (this crate)** — the request-path coordinator: block partitioning,
-//!   PJRT execution of the AOT artifacts, latent/coefficient entropy coding,
-//!   the PCA residual guarantee (Algorithm 1), the SZ baseline, the QoI
-//!   chemistry substrate, metrics, and the archive container.
+//! ## Layers
+//!
+//! * **Build time (python)** — a Pallas fused-matmul kernel and a JAX 3D-conv
+//!   autoencoder + tensor-correction network, trained once and AOT-lowered to
+//!   HLO text in `artifacts/` (`python/compile/`).
+//! * **Data layer** ([`data`]) — the `[T, S, Y, X]` field container, the
+//!   `SDF1` interchange format, the paper's spatiotemporal block partitioner,
+//!   and *time-window shard views* ([`data::shards`]): a field is processed
+//!   as `ceil(T / kt_window)` independent shards so peak working memory is
+//!   bounded by the shard extent, not the field.
+//! * **Coordinator layer** ([`coordinator`]) — the shard engine
+//!   ([`coordinator::engine::ShardEngine`]) owns the executor handle, codecs,
+//!   and the Algorithm-1 guarantee stage, and drives shards through bounded
+//!   encode/decode pipelines with queue-depth backpressure; a work-stealing
+//!   `par_for`/`par_try_for` covers the CPU stages.
+//! * **Execution runtime** ([`runtime`]) — encoder/decoder/TCN behind one
+//!   [`runtime::ExecHandle`] service: the PJRT backend (AOT artifacts, `pjrt`
+//!   feature) or the deterministic pure-Rust reference backend.  Algorithm 1
+//!   certifies the same per-block ℓ2 bound against either, so the guarantees
+//!   do not depend on the backend.
+//! * **Archive layer** ([`archive`]) — the legacy single-shot `GBA1`
+//!   container and the indexed `GBA2` container: a table of contents maps
+//!   every (shard, species) payload to an absolute byte range, so
+//!   [`coordinator::engine::ShardEngine::decompress_range`] reconstructs a
+//!   time window × species subset while reading only the touched sections
+//!   through an [`archive::SectionSource`] (in-memory, file, or counting).
+//!   `GBA1` archives remain readable (and writable) behind
+//!   [`archive::AnyArchive`].
+//! * **API/CLI** — [`compressor::Compressor`] unifies GBA/GBATC/SZ, including
+//!   a `decompress_range` entry point; the `gbatc` binary adds `inspect`
+//!   (TOC + size breakdown) and `extract` (partial decode) subcommands.
 //!
 //! Python never runs on the compression/decompression path; after
-//! `make artifacts` the `gbatc` binary is self-contained.
+//! `make artifacts` the `gbatc` binary is self-contained, and with the
+//! default (reference) backend it needs no artifacts at all.
+
+#![allow(clippy::needless_range_loop)]
 
 pub mod archive;
 pub mod chem;

@@ -1,17 +1,18 @@
 //! `gbatc` CLI — the L3 leader binary: data generation, GBATC/GBA and SZ
-//! compression, decompression, and evaluation.  See `gbatc help`.
+//! compression, full and partial decompression, archive inspection, and
+//! evaluation.  See `gbatc help`.
 
-use gbatc::archive::Archive;
+use gbatc::archive::{AnyArchive, Archive, CountingSource, FileSource, Gba2Archive, SectionSource};
 use gbatc::chem::{self, Mechanism};
 use gbatc::cli::{Args, USAGE};
 use gbatc::compressor::{
-    CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor, SzArchive,
+    CompressOptions, GbatcCompressor, SzArchive, SzCompressOptions, SzCompressor,
 };
 use gbatc::config::Manifest;
 use gbatc::data::{self, io, Profile};
 use gbatc::error::{Error, Result};
 use gbatc::metrics;
-use gbatc::runtime::ExecService;
+use gbatc::runtime::{ExecService, RuntimeSpec};
 use gbatc::sz::codec::SzMode;
 
 fn main() {
@@ -33,6 +34,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "gen-data" => cmd_gen_data(args),
         "compress" => cmd_compress(args),
         "decompress" => cmd_decompress(args),
+        "extract" => cmd_extract(args),
+        "inspect" => cmd_inspect(args),
         "sz" => cmd_sz(args),
         "sz-decompress" => cmd_sz_decompress(args),
         "evaluate" => cmd_evaluate(args),
@@ -43,6 +46,41 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         other => Err(Error::config(format!("unknown command `{other}`; see `gbatc help`"))),
     }
+}
+
+/// Start the executor service: AOT artifacts by default, or the pure-Rust
+/// reference backend with `--reference`.  Returns (service, decoder_params,
+/// tcn_params) for CR accounting (the reference backend stores no model).
+fn start_service(args: &Args, queue_depth: usize) -> Result<(ExecService, usize, usize)> {
+    if args.has("reference") {
+        let service = ExecService::start_reference(RuntimeSpec::reference_default(), queue_depth)?;
+        Ok((service, 0, 0))
+    } else {
+        let artifacts = args.get_or("artifacts", "artifacts");
+        let manifest = Manifest::load(format!("{artifacts}/manifest.txt"))?;
+        let service = ExecService::start(artifacts, queue_depth)?;
+        Ok((service, manifest.decoder_params, manifest.tcn_params))
+    }
+}
+
+/// Parse `--species NAME[,NAME|INDEX...]` into ascending species indices.
+fn parse_species(args: &Args) -> Result<Vec<usize>> {
+    let Some(list) = args.get("species") else {
+        return Ok(Vec::new());
+    };
+    let mut out = Vec::new();
+    for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        if let Some(s) = chem::index_of(tok) {
+            out.push(s);
+        } else if let Ok(s) = tok.parse::<usize>() {
+            out.push(s);
+        } else {
+            return Err(Error::config(format!("unknown species `{tok}`")));
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -68,8 +106,7 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 fn cmd_compress(args: &Args) -> Result<()> {
     let input = args.require("input")?;
     let output = args.require("output")?;
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let opts = CompressOptions {
+    let mut opts = CompressOptions {
         nrmse_target: args.get_parse("nrmse", 1e-3)?,
         latent_bin: args.get_parse("latent-bin", 0.02)?,
         use_tcn: !args.has("no-tcn"),
@@ -77,25 +114,52 @@ fn cmd_compress(args: &Args) -> Result<()> {
         store_full_basis: args.has("full-basis"),
         model_bytes_f32: args.has("model-f32"),
         queue_depth: args.get_parse("queue-depth", 4)?,
+        kt_window: args.get_parse("kt-window", 0)?,
+        shard_workers: args.get_parse("shard-workers", 2)?,
     };
 
     let ds = io::read_dataset(input)?;
-    let manifest = Manifest::load(format!("{artifacts}/manifest.txt"))?;
-    let service = ExecService::start(artifacts, opts.queue_depth)?;
+    if args.has("v1") {
+        // fail fast: GBA1 export needs a single shard, so force the window
+        // to cover the whole time axis (and reject a conflicting request)
+        // before spending the compression run
+        if opts.kt_window != 0 && opts.kt_window < ds.nt {
+            return Err(Error::config(format!(
+                "--v1 needs a single shard; drop --kt-window or set it >= {}",
+                ds.nt
+            )));
+        }
+        opts.kt_window = opts.kt_window.max(ds.nt);
+    }
+    let (service, decoder_params, tcn_params) = start_service(args, opts.queue_depth)?;
     let handle = service.handle();
-    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+    let comp = GbatcCompressor::new(&handle, decoder_params, tcn_params);
 
     let report = comp.compress(&ds, &opts)?;
-    report.archive.write_file(output)?;
+    // report the ratio of the container actually written (GBA1 lacks the TOC)
+    let cr = if args.has("v1") {
+        let v1 = report.archive.to_v1()?;
+        v1.write_file(output)?;
+        v1.compression_ratio()
+    } else {
+        report.archive.write_file(output)?;
+        report.archive.compression_ratio()
+    };
     println!(
         "{} -> {} | CR {:.1} | target NRMSE {:.1e} | tau {:.3e} | max block residual {:.3e} | {} coeffs",
         input,
         output,
-        report.archive.compression_ratio(),
+        cr,
         opts.nrmse_target,
         report.tau,
         report.max_block_residual,
         report.n_coeffs
+    );
+    println!(
+        "  {} shards (kt_window {}) | peak workspace {:.1} MB",
+        report.n_shards,
+        report.archive.header.kt_window,
+        report.peak_workspace_bytes as f64 / 1e6
     );
     println!("  breakdown: {}", report.breakdown);
     println!("  {}", report.progress_summary);
@@ -105,21 +169,19 @@ fn cmd_compress(args: &Args) -> Result<()> {
 fn cmd_decompress(args: &Args) -> Result<()> {
     let input = args.require("input")?;
     let output = args.require("output")?;
-    let artifacts = args.get_or("artifacts", "artifacts");
     let threads = args.get_parse("threads", 0)?;
 
-    let archive = Archive::read_file(input)?;
-    let service = ExecService::start(artifacts, 4)?;
+    let archive = AnyArchive::read_file(input)?.into_v2()?;
+    let (service, decoder_params, tcn_params) = start_service(args, 4)?;
     let handle = service.handle();
-    let manifest = Manifest::load(format!("{artifacts}/manifest.txt"))?;
-    let comp = GbatcCompressor::new(&handle, manifest.decoder_params, manifest.tcn_params);
+    let comp = GbatcCompressor::new(&handle, decoder_params, tcn_params);
     let t = std::time::Instant::now();
     let mass = comp.decompress(&archive, threads)?;
 
-    let (nt, ns, ny, nx) = archive.dims;
+    let (nt, ns, ny, nx) = archive.header.dims;
     let mut ds = gbatc::data::Dataset::new(nt, ns, ny, nx);
     ds.mass = mass;
-    ds.pressure = archive.pressure;
+    ds.pressure = archive.header.pressure;
     if let Some(tf) = args.get("temp-from") {
         let src = io::read_dataset(tf)?;
         if (src.nt, src.ny, src.nx) != (nt, ny, nx) {
@@ -133,6 +195,102 @@ fn cmd_decompress(args: &Args) -> Result<()> {
         nt, ns, ny, nx,
         t.elapsed().as_secs_f64()
     );
+    Ok(())
+}
+
+fn cmd_extract(args: &Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = args.require("output")?;
+    let threads = args.get_parse("threads", 0)?;
+    let species = parse_species(args)?;
+
+    let file = FileSource::open(input)?;
+    // read the TOC once on the raw source for the --t1 default, so the
+    // counting wrapper reports only what the extract itself touches
+    let (header, _toc) = Gba2Archive::read_toc(&file)?;
+    let counting = CountingSource::new(&file);
+    let nt = header.dims.0;
+    let t0 = args.get_parse("t0", 0usize)?;
+    let t1 = args.get_parse("t1", nt)?;
+
+    let (service, decoder_params, tcn_params) = start_service(args, 4)?;
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, decoder_params, tcn_params);
+    let t = std::time::Instant::now();
+    let range = comp.extract(&counting, t0, t1, &species, threads)?;
+
+    let mut ds = gbatc::data::Dataset::new(range.nt, range.species.len(), range.ny, range.nx);
+    ds.mass = range.mass;
+    ds.pressure = header.pressure;
+    io::write_dataset(output, &ds)?;
+    let total = file.source_len();
+    println!(
+        "{input}[t {t0}..{t1}, {} species] -> {output} in {:.2}s",
+        range.species.len(),
+        t.elapsed().as_secs_f64()
+    );
+    println!(
+        "  read {} of {} archive bytes ({:.1}%) in {} ranged reads",
+        counting.bytes_read(),
+        total,
+        100.0 * counting.bytes_read() as f64 / total.max(1) as f64,
+        counting.reads()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args.require("archive")?;
+    let bytes = std::fs::read(path)?;
+    if bytes.starts_with(b"SZA1") {
+        return cmd_info(args);
+    }
+    let any = AnyArchive::deserialize(&bytes)?;
+    if any.version() == 1 {
+        println!("GBA1 (legacy single-shot) archive — per-section TOC only in GBA2:");
+        return cmd_info(args);
+    }
+    let a = any.into_v2()?;
+    let (nt, ns, ny, nx) = a.header.dims;
+    println!(
+        "GBATC archive (GBA2): {nt}x{ns}x{ny}x{nx}, block {:?}, latent {}, kt_window {}",
+        a.header.block, a.header.latent_dim, a.header.kt_window
+    );
+    println!(
+        "  tcn_used={} nrmse_target={:.1e} | payload {} B + model {} B => CR {:.1}",
+        a.header.tcn_used,
+        a.header.nrmse_target,
+        a.payload_bytes(),
+        a.header.model_param_bytes,
+        a.compression_ratio()
+    );
+    println!(
+        "  {:>5} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "shard", "t range", "offset", "bytes", "latent B", "sections B"
+    );
+    for (i, e) in a.toc.iter().enumerate() {
+        let sections: u64 = e.species.iter().map(|&(_, l)| l).sum();
+        println!(
+            "  {:>5} {:>3}..{:<4} {:>12} {:>12} {:>12} {:>12}",
+            i,
+            e.t0,
+            e.t0 + e.nt,
+            e.shard.0,
+            e.shard.1,
+            e.latent.1,
+            sections
+        );
+    }
+    // per-species totals across shards (top 5 heaviest)
+    let mut per: Vec<(usize, u64)> = (0..ns)
+        .map(|s| (s, a.toc.iter().map(|e| e.species[s].1).sum::<u64>()))
+        .collect();
+    per.sort_by_key(|&(_, b)| std::cmp::Reverse(b));
+    println!("  heaviest species sections:");
+    for &(s, b) in per.iter().take(5) {
+        let name = chem::SPECIES.get(s).map(|sp| sp.name).unwrap_or("?");
+        println!("    {:>12} (#{s:<3}) {b:>10} B", name);
+    }
     Ok(())
 }
 
@@ -214,7 +372,8 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
         let (qoi_per, qoi_mean) = qoi_errors(&orig, &recon, stride)?;
         println!("mean QoI NRMSE: {:.4e} (stride {stride})", qoi_mean);
         if let Some(name) = args.get("species") {
-            let s = chem::index_of(name).unwrap();
+            let s = chem::index_of(name)
+                .ok_or_else(|| Error::config(format!("unknown species {name}")))?;
             println!("{name}: QoI NRMSE {:.4e}", qoi_per[s]);
         }
     }
@@ -270,8 +429,14 @@ fn cmd_info(args: &Args) -> Result<()> {
     if bytes.starts_with(b"GBA1") {
         let a = Archive::deserialize(&bytes)?;
         let (nt, ns, ny, nx) = a.dims;
-        println!("GBATC archive: {nt}x{ns}x{ny}x{nx}, block {:?}, latent {}", a.block, a.latent_dim);
-        println!("  tcn_used={} nrmse_target={:.1e}", a.tcn_used, a.nrmse_target);
+        println!(
+            "GBATC archive: {nt}x{ns}x{ny}x{nx}, block {:?}, latent {}",
+            a.block, a.latent_dim
+        );
+        println!(
+            "  version GBA1 | tcn_used={} nrmse_target={:.1e}",
+            a.tcn_used, a.nrmse_target
+        );
         println!(
             "  payload {} B + model {} B => CR {:.1}",
             a.payload_bytes(),
@@ -281,9 +446,29 @@ fn cmd_info(args: &Args) -> Result<()> {
         let ranks: Vec<usize> = a.species.iter().map(|s| s.basis.rank).collect();
         println!(
             "  basis ranks: min {} max {} mean {:.1}",
-            ranks.iter().min().unwrap(),
-            ranks.iter().max().unwrap(),
-            ranks.iter().sum::<usize>() as f64 / ranks.len() as f64
+            ranks.iter().min().unwrap_or(&0),
+            ranks.iter().max().unwrap_or(&0),
+            ranks.iter().sum::<usize>() as f64 / ranks.len().max(1) as f64
+        );
+    } else if bytes.starts_with(b"GBA2") {
+        let a = Gba2Archive::deserialize(&bytes)?;
+        let (nt, ns, ny, nx) = a.header.dims;
+        println!(
+            "GBATC archive: {nt}x{ns}x{ny}x{nx}, block {:?}, latent {}",
+            a.header.block, a.header.latent_dim
+        );
+        println!(
+            "  version GBA2 | {} shards (kt_window {}) | tcn_used={} nrmse_target={:.1e}",
+            a.n_shards(),
+            a.header.kt_window,
+            a.header.tcn_used,
+            a.header.nrmse_target
+        );
+        println!(
+            "  payload {} B + model {} B => CR {:.1}",
+            a.payload_bytes(),
+            a.header.model_param_bytes,
+            a.compression_ratio()
         );
     } else if bytes.starts_with(b"SZA1") {
         let a = SzArchive::deserialize(&bytes)?;

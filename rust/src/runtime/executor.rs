@@ -1,10 +1,19 @@
 //! Compiled model executables (encoder / decoder / TCN) with fixed AOT
 //! batch shapes and tail padding.
+//!
+//! [`RuntimeSpec`] is backend-neutral; the PJRT-backed [`ModelRuntime`]
+//! only exists under the `pjrt` feature (the offline image has no `xla`
+//! crate — see [`crate::runtime::reference`] for the default backend).
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
 use crate::config::Manifest;
-use crate::error::{Error, Result};
+#[cfg(feature = "pjrt")]
+use crate::error::Error;
+#[cfg(feature = "pjrt")]
+use crate::error::Result;
+#[cfg(feature = "pjrt")]
 use crate::runtime::client::load_computation;
 
 /// Shapes baked into the AOT artifacts (from `manifest.txt`).
@@ -41,6 +50,7 @@ impl RuntimeSpec {
 
 /// The three compiled executables plus the PJRT client that owns them.
 /// `!Send` — lives on the executor-service thread (see `pool`).
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     pub spec: RuntimeSpec,
     client: xla::PjRtClient,
@@ -54,6 +64,7 @@ pub struct ModelRuntime {
     tcn_params: Vec<xla::Literal>,
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
     let n: usize = dims.iter().product();
     debug_assert_eq!(data.len(), n);
@@ -66,6 +77,7 @@ fn literal_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
 /// Load a `GBPR` params sidecar written by `aot.py::write_params_sidecar`:
 /// magic, u32 count, then per tensor: u32 name_len, name, u32 ndim,
 /// u32 dims..., f32 data — in the argument order the HLO expects.
+#[cfg(feature = "pjrt")]
 fn load_params_sidecar(path: &Path) -> Result<Vec<xla::Literal>> {
     let bytes = std::fs::read(path).map_err(|e| {
         Error::runtime(format!("params sidecar {}: {e}", path.display()))
@@ -106,6 +118,7 @@ fn load_params_sidecar(path: &Path) -> Result<Vec<xla::Literal>> {
     Ok(literals)
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Load and compile all artifacts from a directory.
     pub fn load<P: AsRef<Path>>(dir: P) -> Result<ModelRuntime> {

@@ -1,16 +1,29 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the request path.
+//! Execution runtime: serves encoder/decoder/TCN requests to the rest of
+//! the system through the [`ExecHandle`] service interface.
 //!
-//! The `xla` crate's PJRT handles are `!Send` (raw pointers), so the
-//! runtime lives on a dedicated executor-service thread
-//! ([`pool::ExecService`]); worker threads talk to it through bounded
-//! channels.  XLA CPU parallelizes each execution internally, so one
-//! service thread saturates the machine for our batch sizes.
+//! Two backends stand behind the same service:
+//! * **PJRT** (`pjrt` feature): loads the AOT HLO-text artifacts produced
+//!   by `python/compile/aot.py` and executes them via the `xla` crate.  The
+//!   PJRT handles are `!Send` (raw pointers), so the runtime lives on a
+//!   dedicated executor-service thread ([`pool::ExecService`]); worker
+//!   threads talk to it through bounded channels.  XLA CPU parallelizes
+//!   each execution internally, so one service thread saturates the machine
+//!   for our batch sizes.
+//! * **Reference** (default): a deterministic pure-Rust pooling
+//!   autoencoder ([`reference::ReferenceRuntime`]) — weak compression, but
+//!   Algorithm 1 certifies identical error bounds, so every request-path
+//!   code path runs (and is tested) in the offline image.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod executor;
 pub mod pool;
+pub mod reference;
 
+#[cfg(feature = "pjrt")]
 pub use client::load_computation;
-pub use executor::{ModelRuntime, RuntimeSpec};
+#[cfg(feature = "pjrt")]
+pub use executor::ModelRuntime;
+pub use executor::RuntimeSpec;
 pub use pool::{ExecHandle, ExecService};
+pub use reference::ReferenceRuntime;

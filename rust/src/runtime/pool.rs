@@ -1,14 +1,21 @@
-//! Executor service: a dedicated thread owning the (!Send) PJRT runtime,
+//! Executor service: a dedicated thread owning the execution backend,
 //! serving encode/decode/TCN requests over bounded channels.  Worker
 //! threads hold cloneable [`ExecHandle`]s; requests are processed FIFO,
-//! giving natural backpressure (the channel bound) while XLA parallelizes
-//! each execution internally.
+//! giving natural backpressure (the channel bound).
+//!
+//! The backend is either the PJRT runtime (`pjrt` feature; `!Send`, hence
+//! constructed *inside* the service thread) or the pure-Rust
+//! [`ReferenceRuntime`].  Shard workers from the coordinator engine all
+//! funnel into the same service, which serializes accelerator access.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 
+#[cfg(not(feature = "pjrt"))]
+use crate::config::Manifest;
 use crate::error::{Error, Result};
-use crate::runtime::executor::{ModelRuntime, RuntimeSpec};
+use crate::runtime::executor::RuntimeSpec;
+use crate::runtime::reference::ReferenceRuntime;
 
 enum Request {
     Encode {
@@ -28,6 +35,72 @@ enum Request {
     },
 }
 
+/// The execution backend living on the service thread.
+enum Backend {
+    Reference(ReferenceRuntime),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::executor::ModelRuntime),
+}
+
+impl Backend {
+    fn encode(&self, data: &[f32], n: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Reference(rt) => rt.encode(data, n),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.encode(data, n),
+        }
+    }
+
+    fn decode(&self, data: &[f32], n: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Reference(rt) => rt.decode(data, n),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.decode(data, n),
+        }
+    }
+
+    fn tcn(&self, data: &[f32], n: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Reference(rt) => rt.tcn(data, n),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.tcn(data, n),
+        }
+    }
+
+    fn spec(&self) -> RuntimeSpec {
+        match self {
+            Backend::Reference(rt) => rt.spec(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.spec,
+        }
+    }
+
+    fn has_tcn(&self) -> bool {
+        match self {
+            Backend::Reference(_) => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(rt) => rt.has_tcn(),
+        }
+    }
+}
+
+/// Build the artifact-directory backend: PJRT when the `pjrt` feature is
+/// on, otherwise a reference runtime shaped by the manifest.
+#[cfg(feature = "pjrt")]
+fn make_artifact_backend(dir: &str) -> Result<Backend> {
+    Ok(Backend::Pjrt(crate::runtime::executor::ModelRuntime::load(
+        dir,
+    )?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn make_artifact_backend(dir: &str) -> Result<Backend> {
+    let manifest = Manifest::load(format!("{dir}/manifest.txt"))?;
+    Ok(Backend::Reference(ReferenceRuntime::from_manifest(
+        &manifest,
+    )?))
+}
+
 /// Cloneable handle to the executor service.
 #[derive(Clone)]
 pub struct ExecHandle {
@@ -43,25 +116,44 @@ pub struct ExecService {
 }
 
 impl ExecService {
-    /// Spawn the service thread, loading artifacts from `dir`.
+    /// Spawn the service thread, loading artifacts from `dir`.  With the
+    /// `pjrt` feature this compiles the AOT artifacts; without it, the
+    /// manifest alone seeds a [`ReferenceRuntime`] with the same shapes.
     pub fn start(dir: &str, queue_depth: usize) -> Result<ExecService> {
+        let dir = dir.to_string();
+        Self::spawn(queue_depth, move || make_artifact_backend(&dir))
+    }
+
+    /// Spawn a service backed by the pure-Rust reference runtime with an
+    /// explicit spec — no artifacts or manifest needed (offline tests,
+    /// benches, and the CLI `--reference` flag).
+    pub fn start_reference(spec: RuntimeSpec, queue_depth: usize) -> Result<ExecService> {
+        Self::spawn(queue_depth, move || {
+            Ok(Backend::Reference(ReferenceRuntime::new(spec)?))
+        })
+    }
+
+    fn spawn<F>(queue_depth: usize, make: F) -> Result<ExecService>
+    where
+        F: FnOnce() -> Result<Backend> + Send + 'static,
+    {
         let (tx, rx) = sync_channel::<Request>(queue_depth.max(1));
         let (spec_tx, spec_rx) = sync_channel::<Result<(RuntimeSpec, bool)>>(1);
-        let dir = dir.to_string();
         let join = std::thread::Builder::new()
             .name("gbatc-exec".into())
             .spawn(move || {
-                let runtime = match ModelRuntime::load(&dir) {
-                    Ok(rt) => {
-                        let _ = spec_tx.send(Ok((rt.spec, rt.has_tcn())));
-                        rt
+                // the backend may be !Send (PJRT), so build it here
+                let backend = match make() {
+                    Ok(b) => {
+                        let _ = spec_tx.send(Ok((b.spec(), b.has_tcn())));
+                        b
                     }
                     Err(e) => {
                         let _ = spec_tx.send(Err(e));
                         return;
                     }
                 };
-                Self::serve(runtime, rx);
+                Self::serve(backend, rx);
             })
             .map_err(|e| Error::runtime(format!("spawn exec thread: {e}")))?;
         let (spec, has_tcn) = spec_rx
@@ -73,17 +165,17 @@ impl ExecService {
         })
     }
 
-    fn serve(runtime: ModelRuntime, rx: Receiver<Request>) {
+    fn serve(backend: Backend, rx: Receiver<Request>) {
         while let Ok(req) = rx.recv() {
             match req {
                 Request::Encode { data, n, reply } => {
-                    let _ = reply.send(runtime.encode(&data, n));
+                    let _ = reply.send(backend.encode(&data, n));
                 }
                 Request::Decode { data, n, reply } => {
-                    let _ = reply.send(runtime.decode(&data, n));
+                    let _ = reply.send(backend.decode(&data, n));
                 }
                 Request::Tcn { data, n, reply } => {
-                    let _ = reply.send(runtime.tcn(&data, n));
+                    let _ = reply.send(backend.tcn(&data, n));
                 }
             }
         }
@@ -142,5 +234,45 @@ impl ExecHandle {
     /// Tensor-correct `n` species vectors `[n, S]`.
     pub fn tcn(&self, data: Vec<f32>, n: usize) -> Result<Vec<f32>> {
         self.roundtrip(|reply| Request::Tcn { data, n, reply })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_service_roundtrips() {
+        let spec = RuntimeSpec {
+            species: 2,
+            block: (2, 2, 2),
+            latent: 4,
+            batch: 8,
+            points: 32,
+        };
+        let svc = ExecService::start_reference(spec, 2).unwrap();
+        let h = svc.handle();
+        assert_eq!(h.spec().latent, 4);
+        assert!(h.has_tcn());
+        let il = spec.instance_len();
+        let blocks = vec![0.5f32; 3 * il];
+        let z = h.encode(blocks, 3).unwrap();
+        assert_eq!(z.len(), 3 * 4);
+        let x = h.decode(z, 3).unwrap();
+        assert_eq!(x.len(), 3 * il);
+        let pts = vec![1.0f32; 5 * 2];
+        assert_eq!(h.tcn(pts.clone(), 5).unwrap(), pts);
+    }
+
+    #[test]
+    fn degenerate_spec_is_clean_error() {
+        let spec = RuntimeSpec {
+            species: 0,
+            block: (2, 2, 2),
+            latent: 4,
+            batch: 8,
+            points: 32,
+        };
+        assert!(ExecService::start_reference(spec, 2).is_err());
     }
 }

@@ -1,0 +1,200 @@
+//! Deterministic pure-Rust execution backend.
+//!
+//! Used whenever the `pjrt` feature (the vendored `xla` crate) is absent:
+//! a segment-pooling autoencoder whose encode averages `instance_len/latent`
+//! contiguous segments of the `[S, kt, by, bx]` instance and whose decode
+//! broadcasts each latent back over its segment, plus an identity TCN.
+//!
+//! This is a weak model on purpose — Algorithm 1 certifies the per-block
+//! error bound against whatever the decoder produces, so the *guarantees*
+//! of the system (and every archive/pipeline/shard code path) are exactly
+//! as testable as with the trained PJRT artifacts; only the compression
+//! ratio suffers.  It is also what `ExecService::start_reference` uses so
+//! tests, benches, and the CLI `--reference` flag run in the offline image.
+
+use crate::error::{Error, Result};
+use crate::runtime::executor::RuntimeSpec;
+
+/// Pure-Rust stand-in for the compiled encoder/decoder/TCN executables.
+pub struct ReferenceRuntime {
+    spec: RuntimeSpec,
+}
+
+impl ReferenceRuntime {
+    pub fn new(spec: RuntimeSpec) -> Result<ReferenceRuntime> {
+        if spec.species == 0 || spec.latent == 0 || spec.batch == 0 || spec.points == 0 {
+            return Err(Error::config(format!(
+                "reference runtime: degenerate spec {spec:?}"
+            )));
+        }
+        if spec.block.0 == 0 || spec.block.1 == 0 || spec.block.2 == 0 {
+            return Err(Error::config(format!(
+                "reference runtime: degenerate block {:?}",
+                spec.block
+            )));
+        }
+        Ok(ReferenceRuntime { spec })
+    }
+
+    pub fn from_manifest(m: &crate::config::Manifest) -> Result<ReferenceRuntime> {
+        Self::new(RuntimeSpec::from_manifest(m))
+    }
+
+    pub fn spec(&self) -> RuntimeSpec {
+        self.spec
+    }
+
+    /// Segment `j` of an instance: `[j*il/L, (j+1)*il/L)`.
+    #[inline]
+    fn segment(&self, j: usize) -> (usize, usize) {
+        let il = self.spec.instance_len();
+        let l = self.spec.latent;
+        (j * il / l, (j + 1) * il / l)
+    }
+
+    /// Encode `n` instances `[n, S, kt, by, bx]` to `[n, latent]` by
+    /// segment-averaging.
+    pub fn encode(&self, blocks: &[f32], n: usize) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let il = s.instance_len();
+        if blocks.len() != n * il || n > s.batch {
+            return Err(Error::shape(format!(
+                "reference encode: {} values for {} instances (batch {})",
+                blocks.len(),
+                n,
+                s.batch
+            )));
+        }
+        let mut out = vec![0.0f32; n * s.latent];
+        for k in 0..n {
+            let inst = &blocks[k * il..(k + 1) * il];
+            for j in 0..s.latent {
+                let (lo, hi) = self.segment(j);
+                if hi > lo {
+                    let sum: f64 = inst[lo..hi].iter().map(|&v| v as f64).sum();
+                    out[k * s.latent + j] = (sum / (hi - lo) as f64) as f32;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Decode `n` latents `[n, latent]` to `[n, S, kt, by, bx]` by
+    /// broadcasting each latent over its segment.
+    pub fn decode(&self, latents: &[f32], n: usize) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        let il = s.instance_len();
+        if latents.len() != n * s.latent || n > s.batch {
+            return Err(Error::shape(format!(
+                "reference decode: {} values for {} instances (batch {})",
+                latents.len(),
+                n,
+                s.batch
+            )));
+        }
+        let mut out = vec![0.0f32; n * il];
+        for k in 0..n {
+            let inst = &mut out[k * il..(k + 1) * il];
+            for j in 0..s.latent {
+                let (lo, hi) = self.segment(j);
+                let v = latents[k * s.latent + j];
+                for o in &mut inst[lo..hi] {
+                    *o = v;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Identity tensor-correction: `[n, S]` -> `[n, S]` unchanged.
+    pub fn tcn(&self, pts: &[f32], n: usize) -> Result<Vec<f32>> {
+        let s = &self.spec;
+        if pts.len() != n * s.species || n > s.points {
+            return Err(Error::shape(format!(
+                "reference tcn: {} values for {} points (cap {})",
+                pts.len(),
+                n,
+                s.points
+            )));
+        }
+        Ok(pts.to_vec())
+    }
+}
+
+impl RuntimeSpec {
+    /// The spec the offline CLI (`--reference`) and tests use when no AOT
+    /// manifest exists: the paper's 58-species 4x5x4 block, latent 36.
+    pub fn reference_default() -> RuntimeSpec {
+        RuntimeSpec {
+            species: crate::chem::species::NS,
+            block: (4, 5, 4),
+            latent: 36,
+            batch: 64,
+            points: 4096,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> RuntimeSpec {
+        RuntimeSpec {
+            species: 3,
+            block: (2, 2, 2),
+            latent: 4,
+            batch: 8,
+            points: 16,
+        }
+    }
+
+    #[test]
+    fn segments_partition_instance() {
+        let rt = ReferenceRuntime::new(spec()).unwrap();
+        let il = spec().instance_len();
+        let mut covered = vec![0usize; il];
+        for j in 0..spec().latent {
+            let (lo, hi) = rt.segment(j);
+            for c in &mut covered[lo..hi] {
+                *c += 1;
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "{covered:?}");
+    }
+
+    #[test]
+    fn encode_decode_shapes_and_determinism() {
+        let rt = ReferenceRuntime::new(spec()).unwrap();
+        let il = spec().instance_len();
+        let blocks: Vec<f32> = (0..2 * il).map(|i| (i % 13) as f32 * 0.1).collect();
+        let z1 = rt.encode(&blocks, 2).unwrap();
+        let z2 = rt.encode(&blocks, 2).unwrap();
+        assert_eq!(z1, z2);
+        assert_eq!(z1.len(), 2 * spec().latent);
+        let x = rt.decode(&z1, 2).unwrap();
+        assert_eq!(x.len(), 2 * il);
+        // constant instance reconstructs exactly
+        let c = vec![0.25f32; il];
+        let z = rt.encode(&c, 1).unwrap();
+        let xc = rt.decode(&z, 1).unwrap();
+        for v in xc {
+            assert!((v - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tcn_is_identity() {
+        let rt = ReferenceRuntime::new(spec()).unwrap();
+        let pts: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        assert_eq!(rt.tcn(&pts, 4).unwrap(), pts);
+    }
+
+    #[test]
+    fn bad_shapes_are_errors() {
+        let rt = ReferenceRuntime::new(spec()).unwrap();
+        assert!(rt.encode(&[0.0; 3], 1).is_err());
+        assert!(rt.decode(&[0.0; 3], 1).is_err());
+        assert!(rt.tcn(&[0.0; 5], 1).is_err());
+    }
+}

@@ -1,5 +1,6 @@
-//! SZ pipeline assembly: predictor -> bins -> Huffman (`IntCodec`) -> zstd,
-//! with per-field auto predictor selection (SZ3 behaviour).
+//! SZ pipeline assembly: predictor -> bins -> Huffman (`IntCodec`) -> RLE
+//! lossless backend, with per-field auto predictor selection (SZ3
+//! behaviour).
 
 use crate::entropy::IntCodec;
 use crate::error::{Error, Result};
@@ -94,8 +95,10 @@ fn compress_one(
         SzMode::Auto => unreachable!(),
     }
     let raw = encode_syms(&syms)?;
-    // lossless backend (zstd level 3, SZ3's default-ish)
-    zstd::bulk::compress(&raw, 3).map_err(|e| Error::codec(format!("zstd: {e}")))
+    // lossless backend: byte RLE (no zstd in the offline image) — the
+    // symbol stream is already Huffman-packed, so the residual gain from
+    // a heavier backend is small
+    Ok(crate::util::rle::compress(&raw))
 }
 
 /// Compress one scalar field `[nt, ny, nx]` under absolute error bound `eb`.
@@ -129,8 +132,7 @@ pub fn sz_compress(
 /// Decompress a field produced by [`sz_compress`].
 pub fn sz_decompress(f: &SzField) -> Result<Vec<f32>> {
     let n = f.dims.0 * f.dims.1 * f.dims.2;
-    let raw = zstd::bulk::decompress(&f.payload, n * 16 + (1 << 20))
-        .map_err(|e| Error::codec(format!("zstd: {e}")))?;
+    let raw = crate::util::rle::decompress(&f.payload, n * 16 + (1 << 20))?;
     let syms = decode_syms(&raw, n)?;
     let q = ErrorBoundQuantizer::new(f.eb);
     let mut out = vec![0.0f32; n];

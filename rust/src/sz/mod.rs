@@ -3,7 +3,7 @@
 //! Prediction-based: each scalar is predicted from already-*decompressed*
 //! neighbors, the prediction error is quantized on a linear scale bounded
 //! by the user's absolute error bound, the quantization bins are Huffman
-//! coded and the stream is zstd'd.  Two predictors, per-field auto-select
+//! coded and the stream gets a byte-RLE lossless pass.  Two predictors, per-field auto-select
 //! (SZ3 behaviour):
 //! * `lorenzo` — 3D Lorenzo (SZ1.4/SZ2 fallback predictor),
 //! * `interp`  — multilevel cubic/linear spline interpolation (SZ3's

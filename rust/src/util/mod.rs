@@ -6,6 +6,7 @@ pub mod bits;
 pub mod bytes;
 pub mod prng;
 pub mod prop;
+pub mod rle;
 pub mod timer;
 
 pub use bits::{BitReader, BitWriter};

@@ -1,0 +1,126 @@
+//! Byte-oriented run-length coding — the dependency-free lossless backend
+//! behind the SZ payloads (the offline image vendors no zstd).  The input
+//! stream is already Huffman-packed by `IntCodec`, so a heavier backend
+//! buys little; RLE crushes the long repeat runs that bit-packed
+//! all-same-symbol regions produce.
+//!
+//! Format: token `t < 0x80` copies the next `t + 1` literal bytes;
+//! token `t >= 0x80` repeats the following byte `t - 0x80 + 3` times
+//! (runs of 3..=130; longer runs chain).  Worst-case expansion is
+//! 1 byte per 128 literals.
+
+use crate::error::{Error, Result};
+
+const MIN_RUN: usize = 3;
+const MAX_LIT: usize = 128;
+const MAX_RUN: usize = 127 + MIN_RUN;
+
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() + input.len() / MAX_LIT + 16);
+    let mut i = 0;
+    let mut lit_start = 0;
+    while i < input.len() {
+        let b = input[i];
+        let mut run = 1;
+        while run < MAX_RUN && i + run < input.len() && input[i + run] == b {
+            run += 1;
+        }
+        if run >= MIN_RUN {
+            flush_literals(&mut out, &input[lit_start..i]);
+            out.push(0x80 + (run - MIN_RUN) as u8);
+            out.push(b);
+            i += run;
+            lit_start = i;
+        } else {
+            // short runs stay in the pending literal range
+            i += run;
+        }
+    }
+    flush_literals(&mut out, &input[lit_start..]);
+    out
+}
+
+fn flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+    while !lits.is_empty() {
+        let n = lits.len().min(MAX_LIT);
+        out.push((n - 1) as u8);
+        out.extend_from_slice(&lits[..n]);
+        lits = &lits[n..];
+    }
+}
+
+/// Decode, refusing to grow beyond `max_len` (corruption guard).
+pub fn decompress(input: &[u8], max_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < input.len() {
+        let tok = input[i] as usize;
+        i += 1;
+        if tok < 0x80 {
+            let n = tok + 1;
+            let lit = input
+                .get(i..i + n)
+                .ok_or_else(|| Error::codec("rle: truncated literal run"))?;
+            if out.len() + n > max_len {
+                return Err(Error::codec("rle: output exceeds cap"));
+            }
+            out.extend_from_slice(lit);
+            i += n;
+        } else {
+            let n = tok - 0x80 + MIN_RUN;
+            let b = *input
+                .get(i)
+                .ok_or_else(|| Error::codec("rle: truncated repeat run"))?;
+            i += 1;
+            if out.len() + n > max_len {
+                return Err(Error::codec("rle: output exceeds cap"));
+            }
+            out.extend(std::iter::repeat(b).take(n));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[1, 2, 3, 4, 5]);
+        roundtrip(&[0; 1000]);
+        roundtrip(&[9, 9, 9, 1, 1, 2, 2, 2, 2, 3]);
+        let mut rng = Prng::new(3);
+        let noisy: Vec<u8> = (0..5000).map(|_| rng.next_u64() as u8).collect();
+        roundtrip(&noisy);
+        let runny: Vec<u8> = (0..5000).map(|i| ((i / 200) % 7) as u8).collect();
+        roundtrip(&runny);
+    }
+
+    #[test]
+    fn runs_compress_noise_does_not_explode() {
+        let zeros = vec![0u8; 10_000];
+        assert!(compress(&zeros).len() < 200);
+        let mut rng = Prng::new(4);
+        let noisy: Vec<u8> = (0..10_000).map(|_| rng.next_u64() as u8).collect();
+        assert!(compress(&noisy).len() <= 10_000 + 10_000 / 128 + 16);
+    }
+
+    #[test]
+    fn truncation_and_caps_are_errors() {
+        let c = compress(&[5u8; 100]);
+        assert!(decompress(&c[..c.len() - 1], 1000).is_err());
+        assert!(decompress(&c, 10).is_err());
+        assert!(decompress(&[0x00], 10).is_err()); // literal run with no byte
+        assert!(decompress(&[0x85], 10).is_err()); // repeat run with no byte
+    }
+}

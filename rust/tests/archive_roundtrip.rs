@@ -1,0 +1,224 @@
+//! Property tests: `serialize → deserialize` is identity for randomized
+//! `GBA1` and `GBA2` archives, and corrupted/truncated containers are
+//! rejected with errors, never panics.
+
+use gbatc::archive::{Archive, Gba2Archive, Gba2Header, ShardPayload, SpeciesSection};
+use gbatc::gae::SpeciesBasis;
+use gbatc::linalg::Mat;
+use gbatc::util::prop::{check, Arbitrary};
+use gbatc::util::Prng;
+
+fn random_basis(rng: &mut Prng, d: usize) -> SpeciesBasis {
+    let mut m = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            m[(i, j)] = rng.normal();
+        }
+    }
+    let rank = rng.index(d + 1);
+    SpeciesBasis::from_mat(&m, rank)
+}
+
+fn random_blob(rng: &mut Prng, max: usize) -> Vec<u8> {
+    let n = rng.index(max.max(1));
+    (0..n).map(|_| rng.next_u64() as u8).collect()
+}
+
+#[derive(Clone, Debug)]
+struct V1Case(Archive);
+
+impl Arbitrary for V1Case {
+    fn generate(rng: &mut Prng) -> Self {
+        let kt = 1 + rng.index(4);
+        let tb = 1 + rng.index(3);
+        let ns = 1 + rng.index(5);
+        let d = 2 + rng.index(6);
+        let species = (0..ns)
+            .map(|_| SpeciesSection {
+                basis: random_basis(rng, d),
+                coeffs: random_blob(rng, 64),
+            })
+            .collect();
+        V1Case(Archive {
+            tcn_used: rng.next_f64() < 0.5,
+            dims: (kt * tb, ns, 5 + rng.index(10), 4 + rng.index(8)),
+            block: (kt, 1 + rng.index(5), 1 + rng.index(4)),
+            latent_dim: 1 + rng.index(64),
+            pressure: rng.uniform(1e5, 1e7),
+            ranges: (0..ns)
+                .map(|_| {
+                    let lo = rng.normal() as f32;
+                    (lo, lo + rng.next_f32().abs() + 0.1)
+                })
+                .collect(),
+            latent_blob: random_blob(rng, 256),
+            species,
+            model_param_bytes: rng.next_u64() % (1 << 32),
+            nrmse_target: rng.uniform(1e-5, 1e-1),
+        })
+    }
+}
+
+#[test]
+fn prop_gba1_serialize_deserialize_identity() {
+    check::<V1Case, _>(11, 60, |case| {
+        let a = &case.0;
+        let bytes = a.serialize();
+        let Ok(b) = Archive::deserialize(&bytes) else {
+            return false;
+        };
+        // identity is byte-level: re-serializing must reproduce the input
+        bytes == b.serialize()
+            && a.dims == b.dims
+            && a.block == b.block
+            && a.latent_dim == b.latent_dim
+            && a.ranges == b.ranges
+            && a.latent_blob == b.latent_blob
+            && a.species.len() == b.species.len()
+            && a.species
+                .iter()
+                .zip(&b.species)
+                .all(|(x, y)| x.coeffs == y.coeffs && x.basis.data == y.basis.data)
+            && a.model_param_bytes == b.model_param_bytes
+    });
+}
+
+#[derive(Clone, Debug)]
+struct V2Case {
+    header: Gba2Header,
+    shards: Vec<ShardPayload>,
+}
+
+impl Arbitrary for V2Case {
+    fn generate(rng: &mut Prng) -> Self {
+        let kt = 1 + rng.index(4);
+        let windows = 1 + rng.index(3); // kt blocks per window
+        let kt_window = kt * windows;
+        let n_shards = 1 + rng.index(4);
+        // full windows, except the last may be short
+        let mut shards_nt: Vec<usize> = vec![kt_window; n_shards];
+        let last = kt * (1 + rng.index(windows));
+        shards_nt[n_shards - 1] = last;
+        let nt: usize = shards_nt.iter().sum();
+        let ns = 1 + rng.index(5);
+        let d = 2 + rng.index(6);
+        let header = Gba2Header {
+            tcn_used: rng.next_f64() < 0.5,
+            dims: (nt, ns, 5 + rng.index(10), 4 + rng.index(8)),
+            block: (kt, 1 + rng.index(5), 1 + rng.index(4)),
+            latent_dim: 1 + rng.index(64),
+            kt_window,
+            pressure: rng.uniform(1e5, 1e7),
+            nrmse_target: rng.uniform(1e-5, 1e-1),
+            model_param_bytes: rng.next_u64() % (1 << 32),
+            ranges: (0..ns)
+                .map(|_| {
+                    let lo = rng.normal() as f32;
+                    (lo, lo + rng.next_f32().abs() + 0.1)
+                })
+                .collect(),
+        };
+        let mut t0 = 0;
+        let shards = shards_nt
+            .iter()
+            .map(|&w| {
+                let sh = ShardPayload {
+                    t0,
+                    nt: w,
+                    latent_blob: random_blob(rng, 256),
+                    species: (0..ns)
+                        .map(|_| {
+                            SpeciesSection {
+                                basis: random_basis(rng, d),
+                                coeffs: random_blob(rng, 64),
+                            }
+                            .to_bytes()
+                        })
+                        .collect(),
+                };
+                t0 += w;
+                sh
+            })
+            .collect();
+        V2Case { header, shards }
+    }
+}
+
+#[test]
+fn prop_gba2_build_deserialize_identity() {
+    check::<V2Case, _>(13, 60, |case| {
+        let Ok(a) = Gba2Archive::build(case.header.clone(), case.shards.clone()) else {
+            return false;
+        };
+        let Ok(b) = Gba2Archive::deserialize(&a.bytes) else {
+            return false;
+        };
+        if a.bytes != b.serialize() || a.toc.len() != case.shards.len() {
+            return false;
+        }
+        // every section round-trips byte-identically
+        case.shards.iter().enumerate().all(|(i, sh)| {
+            b.latent_bytes(i).map(|l| l == &sh.latent_blob[..]).unwrap_or(false)
+                && sh.species.iter().enumerate().all(|(s, sec)| {
+                    b.species_bytes(i, s).map(|x| x == &sec[..]).unwrap_or(false)
+                })
+        })
+    });
+}
+
+#[test]
+fn prop_gba2_truncation_always_rejected() {
+    check::<V2Case, _>(17, 25, |case| {
+        let Ok(a) = Gba2Archive::build(case.header.clone(), case.shards.clone()) else {
+            return false;
+        };
+        // any strict prefix must fail to parse (header, TOC, or payload
+        // extent checks), and must never panic
+        let n = a.bytes.len();
+        let step = (n / 23).max(1);
+        (0..n)
+            .step_by(step)
+            .chain([n - 1])
+            .all(|cut| Gba2Archive::deserialize(&a.bytes[..cut]).is_err())
+    });
+}
+
+#[test]
+fn prop_gba2_bit_flips_never_panic() {
+    check::<V2Case, _>(19, 15, |case| {
+        let Ok(a) = Gba2Archive::build(case.header.clone(), case.shards.clone()) else {
+            return false;
+        };
+        let mut rng = Prng::new(a.bytes.len() as u64);
+        for _ in 0..200 {
+            let i = rng.index(a.bytes.len());
+            let mut corrupt = a.bytes.clone();
+            corrupt[i] ^= 1 << rng.index(8);
+            let _ = Gba2Archive::deserialize(&corrupt); // Err is fine, panic is not
+        }
+        true
+    });
+}
+
+#[test]
+fn corrupted_header_fields_rejected() {
+    let mut rng = Prng::new(5);
+    let case = V2Case::generate(&mut rng);
+    let a = Gba2Archive::build(case.header, case.shards).unwrap();
+    // magic
+    let mut bad = a.bytes.clone();
+    bad[..4].copy_from_slice(b"NOPE");
+    assert!(Gba2Archive::deserialize(&bad).is_err());
+    // version
+    let mut bad = a.bytes.clone();
+    bad[4] = 0xFF;
+    assert!(Gba2Archive::deserialize(&bad).is_err());
+    // species count zeroed
+    let mut bad = a.bytes.clone();
+    bad[12..16].copy_from_slice(&0u32.to_le_bytes());
+    assert!(Gba2Archive::deserialize(&bad).is_err());
+    // shard count inflated — TOC now larger than the file
+    let mut bad = a.bytes.clone();
+    bad[44..48].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Gba2Archive::deserialize(&bad).is_err());
+}

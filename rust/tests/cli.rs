@@ -107,3 +107,77 @@ fn cli_missing_args_are_clean_errors() {
     let (ok, _) = run(&["evaluate"]);
     assert!(!ok);
 }
+
+/// The whole pipeline on the pure-Rust reference backend — no artifacts
+/// needed, so this runs in the offline image: gen-data -> sharded compress
+/// -> inspect (TOC) -> decompress -> evaluate -> extract (partial decode,
+/// verified bit-identical against the full reconstruction).
+#[test]
+fn cli_reference_pipeline_with_partial_decode() {
+    let dir = std::env::temp_dir().join("gbatc_cli_ref_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = dir.join("ds.sdf");
+    let gba = dir.join("ds.gba2");
+    let rec = dir.join("rec.sdf");
+    let ext = dir.join("win.sdf");
+
+    let (ok, text) = run(&[
+        "gen-data", "--out", ds.to_str().unwrap(), "--profile", "tiny", "--seed", "5",
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", gba.to_str().unwrap(), "--nrmse", "1e-3", "--kt-window", "4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("CR"), "{text}");
+    assert!(text.contains("2 shards"), "{text}");
+
+    let (ok, text) = run(&["inspect", "--archive", gba.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("GBA2"), "{text}");
+    assert!(text.contains("shard"), "{text}");
+
+    let (ok, text) = run(&[
+        "decompress", "--reference", "--input", gba.to_str().unwrap(),
+        "--output", rec.to_str().unwrap(), "--temp-from", ds.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "evaluate", "--orig", ds.to_str().unwrap(), "--recon", rec.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let mean: f64 = text
+        .lines()
+        .find(|l| l.contains("mean NRMSE"))
+        .and_then(|l| l.split(':').nth(1))
+        .and_then(|v| v.trim().parse().ok())
+        .expect("parse NRMSE");
+    assert!(mean <= 1.05e-3, "reference round trip NRMSE {mean}");
+
+    let (ok, text) = run(&[
+        "extract", "--reference", "--input", gba.to_str().unwrap(),
+        "--output", ext.to_str().unwrap(), "--t0", "4", "--t1", "8",
+        "--species", "C2H3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("archive bytes"), "{text}");
+
+    // the extracted window must bit-equal the same slice of the full decode
+    let full = gbatc::data::io::read_dataset(&rec).unwrap();
+    let part = gbatc::data::io::read_dataset(&ext).unwrap();
+    let s = gbatc::chem::index_of("C2H3").unwrap();
+    assert_eq!((part.nt, part.ns, part.ny, part.nx), (4, 1, full.ny, full.nx));
+    let npix = full.ny * full.nx;
+    for t in 4..8usize {
+        for p in 0..npix {
+            let a = full.mass[(t * full.ns + s) * npix + p];
+            let b = part.mass[(t - 4) * npix + p];
+            assert_eq!(a.to_bits(), b.to_bits(), "t={t} p={p}");
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,13 +1,17 @@
-//! Integration tests over the real AOT artifacts (require `make artifacts`).
-//! These exercise the full L3 stack: PJRT runtime, pipelines, Algorithm 1,
-//! archive round-trip, and the SZ baseline on the same data.
+//! Integration tests over the full L3 stack: runtime service, shard
+//! pipelines, Algorithm 1, archive round-trip, and the SZ baseline.
+//!
+//! Tests in the `aot` half exercise the real AOT artifacts and skip when
+//! `make artifacts` has not run; the `reference` half runs the identical
+//! request path on the pure-Rust backend, so the guarantees are verified
+//! in the offline image too.
 
-use gbatc::archive::Archive;
+use gbatc::archive::Gba2Archive;
 use gbatc::compressor::{CompressOptions, GbatcCompressor, SzCompressOptions, SzCompressor};
 use gbatc::config::Manifest;
 use gbatc::data::{generate, io, Profile};
 use gbatc::metrics;
-use gbatc::runtime::ExecService;
+use gbatc::runtime::{ExecService, RuntimeSpec};
 
 fn artifacts_dir() -> String {
     std::env::var("GBATC_ARTIFACTS").unwrap_or_else(|_| {
@@ -70,9 +74,9 @@ fn gbatc_end_to_end_respects_nrmse_target() {
     let cr = report.archive.compression_ratio();
     assert!(cr > 1.0, "CR {cr} <= 1");
 
-    // full round trip through bytes
+    // full round trip through bytes (GBA2)
     let bytes = report.archive.serialize();
-    let archive = Archive::deserialize(&bytes).unwrap();
+    let archive = Gba2Archive::deserialize(&bytes).unwrap();
     let mass = comp.decompress(&archive, 0).unwrap();
     assert_eq!(mass.len(), ds.mass.len());
 
@@ -102,7 +106,7 @@ fn gba_without_tcn_also_bounded() {
         ..Default::default()
     };
     let report = comp.compress(&ds, &opts).unwrap();
-    assert!(!report.archive.tcn_used);
+    assert!(!report.archive.header.tcn_used);
     let mass = comp.decompress(&report.archive, 0).unwrap();
     let (_, mean) = mean_species_nrmse(&ds.mass, &mass, (ds.nt, ds.ns, ds.ny, ds.nx));
     assert!(mean <= 3e-3 * 1.05, "GBA mean NRMSE {mean}");
@@ -181,6 +185,62 @@ fn encoder_produces_informative_latents() {
         mse < 0.25 * zero_mse,
         "AE no better than zeros: {mse:.3e} vs {zero_mse:.3e}"
     );
+}
+
+#[test]
+fn reference_end_to_end_respects_nrmse_target() {
+    // Same invariants as the AOT test, but on the pure-Rust backend — the
+    // guarantee stage makes the error bound independent of model quality,
+    // so this runs (and must pass) with no artifacts at all.
+    let ds = generate(Profile::Tiny, 83);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    let target = 1e-3;
+    let opts = CompressOptions {
+        nrmse_target: target,
+        kt_window: 4,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    assert_eq!(report.n_shards, 2);
+    assert!(
+        report.max_block_residual <= report.tau + 1e-9,
+        "residual {} > tau {}",
+        report.max_block_residual,
+        report.tau
+    );
+    let bytes = report.archive.serialize();
+    let archive = Gba2Archive::deserialize(&bytes).unwrap();
+    let mass = comp.decompress(&archive, 0).unwrap();
+    assert_eq!(mass.len(), ds.mass.len());
+    let (per, mean) = mean_species_nrmse(&ds.mass, &mass, (ds.nt, ds.ns, ds.ny, ds.nx));
+    assert!(
+        per.iter().all(|&e| e <= target * 1.05),
+        "a species exceeded the target: {per:?}"
+    );
+    assert!(mean <= target * 1.05, "mean NRMSE {mean}");
+}
+
+#[test]
+fn reference_single_window_round_trips() {
+    // kt_window >= nt collapses to one shard and must still round-trip
+    let ds = generate(Profile::Tiny, 84);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let opts = CompressOptions {
+        nrmse_target: 3e-3,
+        kt_window: 8,
+        use_tcn: false,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    assert_eq!(report.n_shards, 1);
+    let mass = comp.decompress(&report.archive, 0).unwrap();
+    let (_, mean) = mean_species_nrmse(&ds.mass, &mass, (ds.nt, ds.ns, ds.ny, ds.nx));
+    assert!(mean <= 3e-3 * 1.05, "mean NRMSE {mean}");
 }
 
 #[test]

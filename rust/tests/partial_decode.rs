@@ -1,0 +1,287 @@
+//! Shard-engine tests over the reference runtime: partial decode
+//! bit-equality with full decode, byte-counting IO savings, per-shard
+//! error-bound verification, GBA1 compatibility, and the shard-bounded
+//! peak-memory accounting.
+
+use gbatc::archive::{AnyArchive, CountingSource, SliceSource};
+use gbatc::compressor::{CompressOptions, Compressor, GbatcCompressor};
+use gbatc::coordinator::engine::{pipeline_workspace_bytes, shard_workspace_bytes};
+use gbatc::data::Dataset;
+use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::util::Prng;
+
+const NS: usize = 4;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn small_spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+/// Smooth multi-species field with per-species offsets and mild noise.
+fn make_ds(nt: usize, seed: u64) -> Dataset {
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    let mut rng = Prng::new(seed);
+    for t in 0..nt {
+        for s in 0..NS {
+            for y in 0..NY {
+                for x in 0..NX {
+                    let v = (t as f32 * 0.3 + s as f32 * 1.7).sin() * 0.2
+                        + (y as f32 * 0.17 + x as f32 * 0.11 + s as f32).cos() * 0.3
+                        + s as f32 * 0.5
+                        + rng.next_f32() * 0.02;
+                    let i = ds.idx(t, s, y, x);
+                    ds.mass[i] = v;
+                }
+            }
+        }
+    }
+    ds
+}
+
+fn compressor(handle: &gbatc::runtime::ExecHandle) -> GbatcCompressor<'_> {
+    GbatcCompressor::new(handle, 0, 0)
+}
+
+#[test]
+fn partial_decode_bit_equals_full_and_reads_fewer_bytes() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = compressor(&handle);
+    let ds = make_ds(16, 1);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        shard_workers: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    assert_eq!(report.n_shards, 4);
+    assert!(report.max_block_residual <= report.tau + 1e-9);
+    let archive = report.archive;
+    let full = comp.decompress(&archive, 2).unwrap();
+
+    let src = SliceSource(&archive.bytes);
+    let counting = CountingSource::new(&src);
+    let sel = [1usize, 3];
+    let (t0, t1) = (4usize, 8usize);
+    let out = comp.extract(&counting, t0, t1, &sel, 2).unwrap();
+    let npix = NY * NX;
+    assert_eq!(out.mass.len(), (t1 - t0) * sel.len() * npix);
+    assert_eq!(out.species, vec![1, 3]);
+
+    // bit-identical to the corresponding slice of the full decode
+    for t in t0..t1 {
+        for (k, &s) in sel.iter().enumerate() {
+            for p in 0..npix {
+                let a = full[(t * NS + s) * npix + p];
+                let b = out.mass[((t - t0) * sel.len() + k) * npix + p];
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "mismatch at t={t} s={s} p={p}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    // strictly fewer archive bytes than a full read — one of four shards,
+    // two of four species sections
+    let total = archive.bytes.len() as u64;
+    assert!(counting.bytes_read() < total, "read {} of {total}", counting.bytes_read());
+    assert!(
+        counting.bytes_read() * 2 < total,
+        "partial read {} not < half of {total}",
+        counting.bytes_read()
+    );
+}
+
+#[test]
+fn range_spanning_shards_and_all_species_matches_full() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = compressor(&handle);
+    let ds = make_ds(16, 2);
+    let opts = CompressOptions {
+        nrmse_target: 3e-3,
+        kt_window: 8,
+        threads: 2,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    assert_eq!(report.n_shards, 2);
+    let full = comp.decompress(&report.archive, 2).unwrap();
+    // [6, 10) straddles the shard boundary at t=8; empty species = all
+    let src = SliceSource(&report.archive.bytes);
+    let out = comp.extract(&src, 6, 10, &[], 2).unwrap();
+    let npix = NY * NX;
+    assert_eq!(out.species, vec![0, 1, 2, 3]);
+    for t in 6..10 {
+        for s in 0..NS {
+            for p in 0..npix {
+                let a = full[(t * NS + s) * npix + p];
+                let b = out.mass[((t - 6) * NS + s) * npix + p];
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+    // out-of-range queries are clean errors
+    assert!(comp.extract(&src, 8, 8, &[], 2).is_err());
+    assert!(comp.extract(&src, 0, 17, &[], 2).is_err());
+    assert!(comp.extract(&src, 0, 4, &[9], 2).is_err());
+}
+
+#[test]
+fn trait_decompress_range_agrees_with_default_impl() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = compressor(&handle);
+    let ds = make_ds(8, 3);
+    let bytes = comp.compress_bytes(&ds, 2e-3).unwrap();
+    // the TOC-walking override...
+    let fast = comp.decompress_range(&bytes, 4, 8, &[0, 2]).unwrap();
+    // ...must agree bit-for-bit with slicing a full decode (the trait's
+    // default strategy)
+    let full = comp.decompress_mass(&bytes).unwrap();
+    let npix = NY * NX;
+    let mut manual = Vec::new();
+    for t in 4..8 {
+        for &s in &[0usize, 2] {
+            manual.extend_from_slice(&full[(t * NS + s) * npix..(t * NS + s + 1) * npix]);
+        }
+    }
+    assert_eq!(fast.len(), manual.len());
+    for (a, b) in fast.iter().zip(&manual) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn per_species_guarantee_holds_on_every_shard() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = compressor(&handle);
+    let ds = make_ds(16, 4);
+    let target = 1e-3;
+    let opts = CompressOptions {
+        nrmse_target: target,
+        kt_window: 4,
+        threads: 2,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    let full = comp.decompress(&report.archive, 2).unwrap();
+    let ranges = ds.species_ranges();
+    let npix = NY * NX;
+    // NRMSE restricted to every shard window, normalized by the global
+    // species range (the units the guarantee certifies)
+    for shard in 0..4 {
+        let (w0, w1) = (shard * 4, shard * 4 + 4);
+        for s in 0..NS {
+            let range = (ranges[s].1 - ranges[s].0).max(1e-30) as f64;
+            let mut se = 0.0f64;
+            let mut n = 0usize;
+            for t in w0..w1 {
+                let off = (t * NS + s) * npix;
+                for p in 0..npix {
+                    let e = (ds.mass[off + p] - full[off + p]) as f64 / range;
+                    se += e * e;
+                    n += 1;
+                }
+            }
+            let nrmse = (se / n as f64).sqrt();
+            assert!(
+                nrmse <= target * 1.05,
+                "shard {shard} species {s}: NRMSE {nrmse} > {target}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gba1_archives_decode_through_the_new_api() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = compressor(&handle);
+    let ds = make_ds(8, 5);
+    // single shard so the archive is expressible as legacy GBA1
+    let opts = CompressOptions {
+        nrmse_target: 2e-3,
+        kt_window: 8,
+        threads: 2,
+        ..Default::default()
+    };
+    let report = comp.compress(&ds, &opts).unwrap();
+    assert_eq!(report.n_shards, 1);
+    let v2_mass = comp.decompress(&report.archive, 2).unwrap();
+
+    // export as GBA1 (seed format), then read it back through AnyArchive
+    let v1 = report.archive.to_v1().unwrap();
+    let v1_bytes = v1.serialize();
+    let any = AnyArchive::deserialize(&v1_bytes).unwrap();
+    assert_eq!(any.version(), 1);
+    assert_eq!(any.dims(), (8, NS, NY, NX));
+    let as_v2 = any.into_v2().unwrap();
+    let v1_mass = comp.decompress(&as_v2, 2).unwrap();
+    assert_eq!(v1_mass.len(), v2_mass.len());
+    for (a, b) in v1_mass.iter().zip(&v2_mass) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // the trait entry point accepts legacy bytes too
+    let trait_mass = comp.decompress_mass(&v1_bytes).unwrap();
+    assert_eq!(trait_mass, v1_mass);
+}
+
+#[test]
+fn peak_memory_bounded_by_shard_window() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = compressor(&handle);
+    // field is 8x the 4-step shard window
+    let ds = make_ds(32, 6);
+    let sharded = CompressOptions {
+        nrmse_target: 2e-3,
+        kt_window: 4,
+        shard_workers: 1,
+        threads: 2,
+        ..Default::default()
+    };
+    let r4 = comp.compress(&ds, &sharded).unwrap();
+    assert_eq!(r4.n_shards, 8);
+    let monolithic = CompressOptions {
+        kt_window: 32,
+        ..sharded.clone()
+    };
+    let r32 = comp.compress(&ds, &monolithic).unwrap();
+    assert_eq!(r32.n_shards, 1);
+
+    // sharded peak is bounded by one shard's analytic working set...
+    let npix = NY * NX;
+    let nb_shard = (4 / 4) * (NY / 5) * (NX / 4);
+    let shard_values = 4 * NS * npix;
+    let est = shard_workspace_bytes(shard_values, nb_shard, 6, 80, 2)
+        + pipeline_workspace_bytes(4, 8, NS * 80, shard_values);
+    assert!(
+        r4.peak_workspace_bytes <= est,
+        "peak {} exceeds shard estimate {est}",
+        r4.peak_workspace_bytes
+    );
+    // ...and is several times below the monolithic run on the same field
+    assert!(
+        r4.peak_workspace_bytes * 4 <= r32.peak_workspace_bytes,
+        "sharded peak {} not <= 1/4 of monolithic {}",
+        r4.peak_workspace_bytes,
+        r32.peak_workspace_bytes
+    );
+    // both runs produce the same reconstruction quality bound
+    assert!(r4.max_block_residual <= r4.tau + 1e-9);
+    assert!(r32.max_block_residual <= r32.tau + 1e-9);
+}
