@@ -1,0 +1,117 @@
+//! Codec-planner benchmark: one synthetic field compressed three ways —
+//! all-GBATC, all-SZ, and the rate–distortion planner (`auto`) — on the
+//! pure-Rust reference backend, reporting bytes / ratio / wall time and
+//! writing a machine-readable `BENCH_planner.json` artifact so CI can
+//! accumulate the perf trajectory:
+//!
+//! ```bash
+//! cargo bench --bench perf_codec_planner
+//! GBATC_BENCH_PROFILE=small GBATC_BENCH_OUT=out.json cargo bench --bench perf_codec_planner
+//! ```
+
+use gbatc::compressor::{CodecChoice, CompressOptions, GbatcCompressor};
+use gbatc::data::{generate, Profile};
+use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::util::Timer;
+
+struct Row {
+    name: &'static str,
+    bytes: usize,
+    ratio: f64,
+    wall_s: f64,
+    codec_sections: [usize; 3],
+}
+
+fn main() {
+    let profile = std::env::var("GBATC_BENCH_PROFILE")
+        .ok()
+        .and_then(|p| Profile::parse(&p))
+        .unwrap_or(Profile::Tiny);
+    let kt_window: usize = std::env::var("GBATC_KT_WINDOW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let out_path =
+        std::env::var("GBATC_BENCH_OUT").unwrap_or_else(|_| "BENCH_planner.json".to_string());
+
+    eprintln!("[bench] generating {profile:?} dataset...");
+    let ds = generate(profile, 42);
+    let pd = ds.pd_bytes();
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4)
+        .expect("reference service");
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    println!(
+        "== perf_codec_planner ({}x{}x{}x{}, kt_window {kt_window})",
+        ds.nt, ds.ns, ds.ny, ds.nx
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    for (name, codec) in [
+        ("gbatc", CodecChoice::Gbatc),
+        ("sz", CodecChoice::Sz),
+        ("auto", CodecChoice::Auto),
+    ] {
+        let opts = CompressOptions {
+            nrmse_target: 1e-3,
+            kt_window,
+            codec,
+            ..Default::default()
+        };
+        let t = Timer::start();
+        let report = comp.compress(&ds, &opts).expect("compress");
+        let wall_s = t.secs();
+        let bytes = report.archive.total_bytes();
+        let ratio = pd as f64 / bytes as f64;
+        let totals = report.archive.codec_totals();
+        let codec_sections = [totals[0].0, totals[1].0, totals[2].0];
+        println!(
+            "{name:>6}  {bytes:>10} B  CR {ratio:>6.1}  {wall_s:>7.2}s  sections G/S/D {}/{}/{}",
+            codec_sections[0], codec_sections[1], codec_sections[2]
+        );
+        rows.push(Row {
+            name,
+            bytes,
+            ratio,
+            wall_s,
+            codec_sections,
+        });
+    }
+
+    // hand-rolled JSON (no serde in the offline image)
+    let mut json = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"name\": \"{}\", \"bytes\": {}, \"ratio\": {:.3}, \"wall_time_s\": {:.4}, \
+             \"sections_gbatc\": {}, \"sections_sz\": {}, \"sections_dense\": {}}}{}\n",
+            r.name,
+            r.bytes,
+            r.ratio,
+            r.wall_s,
+            r.codec_sections[0],
+            r.codec_sections[1],
+            r.codec_sections[2],
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("]\n");
+    std::fs::write(&out_path, &json).expect("write bench json");
+    println!("wrote {out_path}");
+
+    // the planner must never lose to either single-codec run by more than
+    // the v3 TOC tag overhead — fail the bench loudly if it regresses
+    let auto = rows.iter().find(|r| r.name == "auto").unwrap().bytes;
+    let best = rows
+        .iter()
+        .filter(|r| r.name != "auto")
+        .map(|r| r.bytes)
+        .min()
+        .unwrap();
+    let kt = kt_window.max(1);
+    let n_shards = (0..ds.nt).step_by(kt).count();
+    let overhead = ds.ns * n_shards + 64;
+    assert!(
+        auto <= best + overhead,
+        "planner regression: auto {auto} B > best single {best} B + {overhead}"
+    );
+}

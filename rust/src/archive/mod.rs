@@ -20,8 +20,8 @@ pub mod toc;
 
 pub use format::{Archive, SpeciesSection, MAGIC};
 pub use toc::{
-    CountingSource, FileSource, Gba2Archive, Gba2Header, SectionSource, ShardPayload, ShardToc,
-    SliceSource, MAGIC2,
+    CodecTag, CountingSource, FileSource, Gba2Archive, Gba2Header, SectionSource, ShardPayload,
+    ShardToc, SliceSource, MAGIC2,
 };
 
 use crate::error::{Error, Result};
@@ -55,11 +55,11 @@ impl AnyArchive {
         Self::deserialize(&bytes)
     }
 
-    /// Format version (1 or 2).
+    /// Format version (1, 2, or 3 — mixed-codec containers report 3).
     pub fn version(&self) -> u16 {
         match self {
             AnyArchive::V1(_) => 1,
-            AnyArchive::V2(_) => 2,
+            AnyArchive::V2(a) => a.version(),
         }
     }
 

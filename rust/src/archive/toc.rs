@@ -3,7 +3,7 @@
 //! range, enabling random-access partial decode.
 //!
 //! ```text
-//! off  0  magic "GBA2" | version u16 | flags u16 (bit0: TCN used)
+//! off  0  magic "GBA2" | version u16 (2 or 3) | flags u16 (bit0: TCN used)
 //!      8  nt ns ny nx           u32 x4
 //!     24  block kt by bx        u32 x3
 //!     36  latent                u32
@@ -13,9 +13,10 @@
 //!     72  per-species ranges: ns x (lo f32, hi f32)
 //!      .  TOC: n_shards x { t0 u32, nt u32, shard (off,len) u64 x2,
 //!                           latent (off,len) u64 x2,
-//!                           ns x species (off,len) u64 x2 }
+//!                           ns x species (off,len) u64 x2,
+//!                           [version 3 only] ns x codec tag u8 }
 //!      .  shard payloads, contiguous: latent blob, then the ns
-//!         species sections (basis + coeff blob, same bytes as GBA1)
+//!         species sections (GBATC sections: same bytes as GBA1)
 //! ```
 //!
 //! All offsets are absolute file offsets, so a reader can fetch the TOC
@@ -23,6 +24,13 @@
 //! needs.  `GBA1` archives convert losslessly in both directions
 //! ([`Gba2Archive::from_v1`] / [`Gba2Archive::to_v1`]); the section bytes
 //! are identical between versions.
+//!
+//! **Mixed-codec archives** ([`CodecTag`]): version 3 records which codec
+//! stage encoded every (shard, species) section.  Archives whose sections
+//! are all GBATC (tag 0) serialize as version 2, byte-identical to the
+//! pre-registry format, so existing readers keep working; any other tag
+//! bumps the container to version 3.  Tags are validated while parsing
+//! the TOC — a corrupt tag is rejected before any section is decoded.
 
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom, Write};
@@ -36,10 +44,58 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub const MAGIC2: &[u8; 4] = b"GBA2";
 const VERSION2: u16 = 2;
+const VERSION3: u16 = 3;
 
 /// Bytes of the fixed prefix through `n_shards` — enough to size the rest
 /// of the header + TOC.
 const PREFIX_LEN: usize = 48;
+
+/// Which codec stage encoded one (shard, species) section.
+///
+/// Tag 0 is the classic GBATC payload (PCA basis + guarantee
+/// coefficients refining the shard's shared latent plane); tags 1 and 2
+/// are self-contained stages that need no latent plane.  The numeric
+/// values are the on-disk encoding in the version-3 TOC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum CodecTag {
+    /// AE latents + TCN + per-species PCA guarantee (basis + coeffs).
+    Gbatc = 0,
+    /// SZ predictor pipeline on the normalized section plane.
+    Sz = 1,
+    /// Dense uniform-quantized plane (bit-packed; the fallback stage).
+    Dense = 2,
+}
+
+impl CodecTag {
+    pub const ALL: [CodecTag; 3] = [CodecTag::Gbatc, CodecTag::Sz, CodecTag::Dense];
+
+    pub fn from_u8(v: u8) -> Result<CodecTag> {
+        match v {
+            0 => Ok(CodecTag::Gbatc),
+            1 => Ok(CodecTag::Sz),
+            2 => Ok(CodecTag::Dense),
+            _ => Err(Error::format(format!("unknown codec tag {v}"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecTag::Gbatc => "GBATC",
+            CodecTag::Sz => "SZ",
+            CodecTag::Dense => "DENSE",
+        }
+    }
+
+    /// One-letter abbreviation for compact TOC listings.
+    pub fn letter(self) -> char {
+        match self {
+            CodecTag::Gbatc => 'G',
+            CodecTag::Sz => 'S',
+            CodecTag::Dense => 'D',
+        }
+    }
+}
 
 /// Everything global to a `GBA2` archive (no payload).
 #[derive(Clone, Debug)]
@@ -65,10 +121,12 @@ pub struct ShardToc {
     pub nt: usize,
     /// Whole shard span (latent + species sections, contiguous).
     pub shard: (u64, u64),
-    /// Latent-plane blob.
+    /// Latent-plane blob (may be empty when no section is GBATC).
     pub latent: (u64, u64),
-    /// Per-species guarantee sections.
+    /// Per-species sections.
     pub species: Vec<(u64, u64)>,
+    /// Codec stage of each species section (all GBATC in version 2).
+    pub codecs: Vec<CodecTag>,
 }
 
 /// Input to [`Gba2Archive::build`]: one shard's serialized payloads.
@@ -77,8 +135,25 @@ pub struct ShardPayload {
     pub t0: usize,
     pub nt: usize,
     pub latent_blob: Vec<u8>,
-    /// Serialized [`SpeciesSection`] bytes, one per species.
+    /// Serialized section bytes, one per species ([`SpeciesSection`] for
+    /// GBATC sections; the stage's own format otherwise).
     pub species: Vec<Vec<u8>>,
+    /// Codec stage of each species section.
+    pub codecs: Vec<CodecTag>,
+}
+
+impl ShardPayload {
+    /// An all-GBATC shard (the classic payload shape).
+    pub fn gbatc(t0: usize, nt: usize, latent_blob: Vec<u8>, species: Vec<Vec<u8>>) -> Self {
+        let codecs = vec![CodecTag::Gbatc; species.len()];
+        Self {
+            t0,
+            nt,
+            latent_blob,
+            species,
+            codecs,
+        }
+    }
 }
 
 /// An in-memory `GBA2` archive: parsed header + TOC over the full
@@ -91,8 +166,19 @@ pub struct Gba2Archive {
     pub bytes: Vec<u8>,
 }
 
-fn header_len(ns: usize, n_shards: usize) -> usize {
-    72 + ns * 8 + n_shards * (40 + 16 * ns)
+fn header_len(ns: usize, n_shards: usize, version: u16) -> usize {
+    // v3 appends one codec-tag byte per species to every TOC entry
+    let entry = 40 + 16 * ns + if version >= VERSION3 { ns } else { 0 };
+    72 + ns * 8 + n_shards * entry
+}
+
+/// Absolute byte offset of the codec tag of (shard, species) in a
+/// version-3 container — derived from the same layout arithmetic the
+/// writer and parser use, so corruption tests target the right byte.
+pub fn codec_tag_offset(ns: usize, shard: usize, species: usize) -> usize {
+    // start of the entry = end of the header + `shard` full v3 entries;
+    // tags sit after the fixed fields and the ns (off, len) pairs
+    header_len(ns, shard, VERSION3) + 40 + 16 * ns + species
 }
 
 impl Gba2Archive {
@@ -124,11 +210,12 @@ impl Gba2Archive {
                     sh.t0, sh.nt
                 )));
             }
-            if sh.species.len() != ns {
+            if sh.species.len() != ns || sh.codecs.len() != ns {
                 return Err(Error::format(format!(
-                    "GBA2 build: shard at t0 {} has {} species sections, expected {ns}",
+                    "GBA2 build: shard at t0 {} has {} species sections and {} codec tags, expected {ns}",
                     sh.t0,
-                    sh.species.len()
+                    sh.species.len(),
+                    sh.codecs.len()
                 )));
             }
             expect_t0 += sh.nt;
@@ -139,7 +226,14 @@ impl Gba2Archive {
             )));
         }
 
-        let base = header_len(ns, shards.len()) as u64;
+        // all-GBATC archives stay on version 2 — byte-identical to the
+        // pre-registry container, so old readers keep working
+        let mixed = shards
+            .iter()
+            .any(|sh| sh.codecs.iter().any(|&c| c != CodecTag::Gbatc));
+        let version = if mixed { VERSION3 } else { VERSION2 };
+
+        let base = header_len(ns, shards.len(), version) as u64;
         let mut toc = Vec::with_capacity(shards.len());
         let mut off = base;
         for sh in &shards {
@@ -157,12 +251,13 @@ impl Gba2Archive {
                 shard: (shard_off, off - shard_off),
                 latent,
                 species,
+                codecs: sh.codecs.clone(),
             });
         }
 
         let mut w = ByteWriter::new();
         w.bytes(MAGIC2);
-        w.u16(VERSION2);
+        w.u16(version);
         w.u16(if header.tcn_used { 1 } else { 0 });
         for d in [header.dims.0, header.dims.1, header.dims.2, header.dims.3] {
             w.u32(d as u32);
@@ -191,6 +286,11 @@ impl Gba2Archive {
                 w.u64(o);
                 w.u64(l);
             }
+            if version >= VERSION3 {
+                for &c in &entry.codecs {
+                    w.u8(c as u8);
+                }
+            }
         }
         debug_assert_eq!(w.buf.len() as u64, base);
         for sh in &shards {
@@ -217,14 +317,42 @@ impl Gba2Archive {
     /// Read only the header + TOC from a byte-range source (two reads).
     pub fn read_toc<S: SectionSource + ?Sized>(src: &S) -> Result<(Gba2Header, Vec<ShardToc>)> {
         let prefix = src.read_at(0, PREFIX_LEN)?;
-        let (ns, n_shards) = parse_prefix(&prefix)?;
-        let hlen = header_len(ns, n_shards);
+        let (version, ns, n_shards) = parse_prefix(&prefix)?;
+        let hlen = header_len(ns, n_shards, version);
         let head = src.read_at(0, hlen)?;
         parse_header_toc(&head, src.source_len())
     }
 
     pub fn n_shards(&self) -> usize {
         self.toc.len()
+    }
+
+    /// Container version this archive serializes as: 2 when every section
+    /// is GBATC (pre-registry byte layout), 3 otherwise.
+    pub fn version(&self) -> u16 {
+        let mixed = self
+            .toc
+            .iter()
+            .any(|e| e.codecs.iter().any(|&c| c != CodecTag::Gbatc));
+        if mixed {
+            VERSION3
+        } else {
+            VERSION2
+        }
+    }
+
+    /// Per-codec totals across the TOC, indexed by `CodecTag as usize`:
+    /// (number of sections, section bytes).
+    pub fn codec_totals(&self) -> [(usize, u64); 3] {
+        let mut totals = [(0usize, 0u64); 3];
+        for entry in &self.toc {
+            for (&(_, len), &tag) in entry.species.iter().zip(&entry.codecs) {
+                let slot = &mut totals[tag as usize];
+                slot.0 += 1;
+                slot.1 += len;
+            }
+        }
+        totals
     }
 
     fn section(&self, range: (u64, u64), what: &str) -> Result<&[u8]> {
@@ -257,11 +385,19 @@ impl Gba2Archive {
         self.section(range, "species")
     }
 
-    /// Parse all species sections of one shard.
+    /// Parse all species sections of one shard as GBATC payloads (errors
+    /// with a clear message on sections encoded by other codec stages).
     pub fn species_sections(&self, shard: usize) -> Result<Vec<SpeciesSection>> {
         let ns = self.header.dims.1;
         let mut out = Vec::with_capacity(ns);
         for s in 0..ns {
+            if let Some(entry) = self.toc.get(shard) {
+                if entry.codecs.get(s).copied() != Some(CodecTag::Gbatc) {
+                    return Err(Error::format(format!(
+                        "shard {shard} species {s} is not a GBATC section"
+                    )));
+                }
+            }
             out.push(SpeciesSection::from_bytes(self.species_bytes(shard, s)?)?);
         }
         Ok(out)
@@ -318,23 +454,28 @@ impl Gba2Archive {
             model_param_bytes: a.model_param_bytes,
             ranges: a.ranges.clone(),
         };
-        let shard = ShardPayload {
-            t0: 0,
-            nt: a.dims.0,
-            latent_blob: a.latent_blob.clone(),
-            species: a.species.iter().map(|s| s.to_bytes()).collect(),
-        };
+        let shard = ShardPayload::gbatc(
+            0,
+            a.dims.0,
+            a.latent_blob.clone(),
+            a.species.iter().map(|s| s.to_bytes()).collect(),
+        );
         Self::build(header, vec![shard])
     }
 
-    /// Export as legacy `GBA1` — only possible for single-shard archives
-    /// (compress with `kt_window >= nt`).
+    /// Export as legacy `GBA1` — only possible for single-shard, all-GBATC
+    /// archives (compress with `kt_window >= nt` and the default codec).
     pub fn to_v1(&self) -> Result<Archive> {
         if self.toc.len() != 1 {
             return Err(Error::format(format!(
                 "GBA1 export needs a single shard, archive has {} (compress with kt_window >= nt)",
                 self.toc.len()
             )));
+        }
+        if self.version() != VERSION2 {
+            return Err(Error::format(
+                "GBA1 export needs all-GBATC sections (compress with --codec gbatc)",
+            ));
         }
         Ok(Archive {
             tcn_used: self.header.tcn_used,
@@ -352,14 +493,14 @@ impl Gba2Archive {
 }
 
 /// Parse just enough of the fixed prefix to size the header + TOC.
-fn parse_prefix(buf: &[u8]) -> Result<(usize, usize)> {
+fn parse_prefix(buf: &[u8]) -> Result<(u16, usize, usize)> {
     let mut r = ByteReader::new(buf);
     let magic = r.bytes(4)?;
     if magic != MAGIC2 {
         return Err(Error::format(format!("bad GBA2 magic {magic:?}")));
     }
     let version = r.u16()?;
-    if version != VERSION2 {
+    if version != VERSION2 && version != VERSION3 {
         return Err(Error::format(format!("unsupported GBA2 version {version}")));
     }
     let _flags = r.u16()?;
@@ -377,13 +518,13 @@ fn parse_prefix(buf: &[u8]) -> Result<(usize, usize)> {
     if n_shards == 0 || n_shards > 1 << 20 {
         return Err(Error::format(format!("implausible shard count {n_shards}")));
     }
-    Ok((ns, n_shards))
+    Ok((version, ns, n_shards))
 }
 
 /// Full header + TOC parse with structural validation against `file_len`.
 fn parse_header_toc(buf: &[u8], file_len: u64) -> Result<(Gba2Header, Vec<ShardToc>)> {
-    let (ns, n_shards) = parse_prefix(buf)?;
-    let hlen = header_len(ns, n_shards) as u64;
+    let (version, ns, n_shards) = parse_prefix(buf)?;
+    let hlen = header_len(ns, n_shards, version) as u64;
     if hlen > file_len {
         return Err(Error::format(format!(
             "GBA2 truncated: header + TOC need {hlen} bytes, file has {file_len}"
@@ -445,6 +586,16 @@ fn parse_header_toc(buf: &[u8], file_len: u64) -> Result<(Gba2Header, Vec<ShardT
         for _ in 0..ns {
             species.push((r.u64()?, r.u64()?));
         }
+        // codec tags are validated here, at TOC parse time — a corrupt
+        // tag never reaches a section decoder
+        let mut codecs = Vec::with_capacity(ns);
+        if version >= VERSION3 {
+            for _ in 0..ns {
+                codecs.push(CodecTag::from_u8(r.u8()?)?);
+            }
+        } else {
+            codecs.resize(ns, CodecTag::Gbatc);
+        }
         // uniform windows, last may be short (ShardPlan's invariant)
         let full = i + 1 < n_shards;
         if t0 != expect_t0
@@ -498,6 +649,7 @@ fn parse_header_toc(buf: &[u8], file_len: u64) -> Result<(Gba2Header, Vec<ShardT
             shard,
             latent,
             species,
+            codecs,
         });
     }
     if expect_t0 != dims.0 {
@@ -671,17 +823,44 @@ mod tests {
             ranges: vec![(0.0, 1.0), (-1.0, 2.0)],
         };
         let shards = vec![
+            ShardPayload::gbatc(0, 4, vec![1, 2, 3], vec![sec.clone(), sec.clone()]),
+            ShardPayload::gbatc(4, 4, vec![4, 5], vec![sec.clone(), sec]),
+        ];
+        Gba2Archive::build(header, shards).unwrap()
+    }
+
+    fn sample_mixed() -> Gba2Archive {
+        let basis = SpeciesBasis::from_mat(&Mat::identity(4), 2);
+        let sec = SpeciesSection {
+            basis,
+            coeffs: vec![9, 8, 7],
+        }
+        .to_bytes();
+        let header = Gba2Header {
+            tcn_used: false,
+            dims: (8, 2, 10, 8),
+            block: (4, 5, 4),
+            latent_dim: 6,
+            kt_window: 4,
+            pressure: 40.0e5,
+            nrmse_target: 1e-3,
+            model_param_bytes: 0,
+            ranges: vec![(0.0, 1.0), (-1.0, 2.0)],
+        };
+        let shards = vec![
             ShardPayload {
                 t0: 0,
                 nt: 4,
                 latent_blob: vec![1, 2, 3],
-                species: vec![sec.clone(), sec.clone()],
+                species: vec![sec.clone(), vec![0xAB; 17]],
+                codecs: vec![CodecTag::Gbatc, CodecTag::Sz],
             },
             ShardPayload {
                 t0: 4,
                 nt: 4,
-                latent_blob: vec![4, 5],
-                species: vec![sec.clone(), sec],
+                latent_blob: Vec::new(),
+                species: vec![vec![0xCD; 9], vec![0xEF; 5]],
+                codecs: vec![CodecTag::Dense, CodecTag::Sz],
             },
         ];
         Gba2Archive::build(header, shards).unwrap()
@@ -715,6 +894,57 @@ mod tests {
         assert_eq!(toc.len(), 2);
         assert_eq!(counting.reads(), 2);
         assert!(counting.bytes_read() < a.bytes.len() as u64);
+    }
+
+    #[test]
+    fn all_gbatc_archives_stay_on_version_2() {
+        let a = sample();
+        assert_eq!(a.version(), 2);
+        // version field in the serialized prefix is 2 — the pre-registry
+        // byte layout old readers accept
+        assert_eq!(u16::from_le_bytes([a.bytes[4], a.bytes[5]]), 2);
+        let totals = a.codec_totals();
+        assert_eq!(totals[CodecTag::Gbatc as usize].0, 4);
+        assert_eq!(totals[CodecTag::Sz as usize], (0, 0));
+    }
+
+    #[test]
+    fn mixed_codec_archives_use_version_3_and_roundtrip() {
+        let a = sample_mixed();
+        assert_eq!(a.version(), 3);
+        assert_eq!(u16::from_le_bytes([a.bytes[4], a.bytes[5]]), 3);
+        let b = Gba2Archive::deserialize(&a.bytes).unwrap();
+        assert_eq!(a.bytes, b.serialize());
+        assert_eq!(b.toc[0].codecs, vec![CodecTag::Gbatc, CodecTag::Sz]);
+        assert_eq!(b.toc[1].codecs, vec![CodecTag::Dense, CodecTag::Sz]);
+        // empty latent blob on the model-free shard is valid
+        assert_eq!(b.toc[1].latent.1, 0);
+        assert_eq!(b.species_bytes(1, 0).unwrap(), &[0xCD; 9][..]);
+        let totals = b.codec_totals();
+        assert_eq!(totals[CodecTag::Gbatc as usize].0, 1);
+        assert_eq!(totals[CodecTag::Sz as usize].0, 2);
+        assert_eq!(totals[CodecTag::Dense as usize], (1, 9));
+        // mixed archives cannot export as GBA1
+        assert!(a.to_v1().is_err());
+    }
+
+    #[test]
+    fn corrupt_codec_tag_rejected_at_toc_parse() {
+        let a = sample_mixed();
+        let ns = 2;
+        for shard in 0..2 {
+            for s in 0..ns {
+                let pos = codec_tag_offset(ns, shard, s);
+                // the helper points at the byte the writer put the tag in
+                assert_eq!(a.bytes[pos], a.toc[shard].codecs[s] as u8);
+                let mut bad = a.bytes.clone();
+                bad[pos] = 0xFF;
+                assert!(
+                    Gba2Archive::deserialize(&bad).is_err(),
+                    "tag ({shard},{s}) at byte {pos} accepted"
+                );
+            }
+        }
     }
 
     #[test]

@@ -77,12 +77,18 @@ COMMANDS:
   gen-data    --out <file> [--profile tiny|small|medium|paper] [--seed N]
               Generate a synthetic S3D-HCCI-like dataset (SDF1).
   compress    --input <sdf> --output <gba> [--nrmse 1e-3] [--no-tcn]
-              [--latent-bin 0.02] [--artifacts DIR | --reference]
-              [--threads N] [--kt-window N] [--shard-workers N]
+              [--codec auto|gbatc|sz|dense] [--latent-bin 0.02]
+              [--artifacts DIR | --reference] [--threads N]
+              [--kt-window N] [--shard-workers N]
               [--full-basis] [--model-f32] [--v1]
-              Shard-streaming GBATC/GBA compression with guaranteed block
-              error bounds into an indexed GBA2 archive (--v1 emits the
-              legacy single-shot GBA1 container; needs kt-window >= T).
+              Shard-streaming compression with guaranteed per-species
+              error bounds into an indexed GBA2 archive.  --codec auto
+              runs the rate-distortion planner: per (shard, species) it
+              trials GBATC, SZ, and a dense-plane fallback and keeps the
+              smallest encoding certifying the NRMSE bound (mixed-codec
+              v3 container; all-GBATC archives stay v2).  --v1 emits the
+              legacy single-shot GBA1 container (needs kt-window >= T and
+              --codec gbatc).
   decompress  --input <gba> --output <sdf> [--artifacts DIR | --reference]
               [--threads N] [--temp-from <sdf>]
               Reconstruct mass fractions (temperature copied from
@@ -94,7 +100,8 @@ COMMANDS:
               sections the query touches; reports archive bytes read.
   inspect     --archive <gba|gba2|szf>
               Print the GBA2 table of contents (per-shard and per-species
-              byte ranges) and size breakdown.
+              byte ranges), per-section codec tags, per-codec byte
+              totals, and size breakdown.
   sz          --input <sdf> --output <szf> [--nrmse 1e-3]
               [--mode auto|lorenzo|interp] [--eb-scale 1.0]
               SZ baseline compression.

@@ -15,13 +15,16 @@ pub struct SizeBreakdown {
     pub latents: usize,
     pub bases: usize,
     pub coeffs: usize,
+    /// Sections encoded by self-contained registry stages (SZ / dense)
+    /// in mixed-codec archives.
+    pub alt_sections: usize,
     pub header: usize,
     pub model_params: usize,
 }
 
 impl SizeBreakdown {
     pub fn payload(&self) -> usize {
-        self.latents + self.bases + self.coeffs + self.header
+        self.latents + self.bases + self.coeffs + self.alt_sections + self.header
     }
 
     pub fn total(&self) -> usize {
@@ -37,8 +40,9 @@ impl std::fmt::Display for SizeBreakdown {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "latents {} B | bases {} B | coeffs {} B | header {} B | model {} B | total {} B",
-            self.latents, self.bases, self.coeffs, self.header, self.model_params,
+            "latents {} B | bases {} B | coeffs {} B | sz/dense {} B | header {} B | model {} B | total {} B",
+            self.latents, self.bases, self.coeffs, self.alt_sections, self.header,
+            self.model_params,
             self.total()
         )
     }
@@ -62,7 +66,8 @@ mod tests {
         let b = SizeBreakdown {
             latents: 100,
             bases: 50,
-            coeffs: 30,
+            coeffs: 20,
+            alt_sections: 10,
             header: 20,
             model_params: 200,
         };

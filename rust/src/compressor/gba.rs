@@ -11,11 +11,12 @@
 
 use crate::archive::{AnyArchive, Gba2Archive, SectionSource, SliceSource, MAGIC2};
 use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
+use crate::compressor::registry::CodecChoice;
 use crate::compressor::traits::Compressor;
 use crate::coordinator::engine::{RangeDecode, ShardEngine};
 use crate::coordinator::scheduler::par_for;
 use crate::data::Dataset;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::gae::guarantee::GuaranteeParams;
 use crate::runtime::ExecHandle;
 
@@ -43,6 +44,9 @@ pub struct CompressOptions {
     /// Shards processed concurrently; peak working memory scales with
     /// `shard_workers * shard size`.
     pub shard_workers: usize,
+    /// Codec policy: classic all-GBATC (default), a single self-contained
+    /// stage, or the per-(shard, species) rate–distortion planner.
+    pub codec: CodecChoice,
 }
 
 impl Default for CompressOptions {
@@ -57,7 +61,41 @@ impl Default for CompressOptions {
             queue_depth: 4,
             kt_window: 0,
             shard_workers: 2,
+            codec: CodecChoice::Gbatc,
         }
+    }
+}
+
+impl CompressOptions {
+    /// Up-front validation of the user-facing knobs — typed config errors
+    /// instead of downstream panics or silent clamping.  `block_kt` is the
+    /// runtime's block time extent.
+    pub fn validate(&self, block_kt: usize) -> Result<()> {
+        if self.queue_depth == 0 {
+            return Err(Error::config("queue_depth must be at least 1"));
+        }
+        if self.shard_workers == 0 {
+            return Err(Error::config("shard_workers must be at least 1"));
+        }
+        if block_kt > 0 && self.kt_window != 0 && self.kt_window % block_kt != 0 {
+            return Err(Error::config(format!(
+                "kt_window {} is not a multiple of the block kt {block_kt}",
+                self.kt_window
+            )));
+        }
+        if self.nrmse_target.is_nan() || self.nrmse_target <= 0.0 {
+            return Err(Error::config(format!(
+                "nrmse_target {} must be positive",
+                self.nrmse_target
+            )));
+        }
+        if self.latent_bin.is_nan() || self.latent_bin <= 0.0 {
+            return Err(Error::config(format!(
+                "latent_bin {} must be positive",
+                self.latent_bin
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -286,6 +324,37 @@ mod tests {
         for (a, b) in norm.iter().zip(&ds.mass) {
             assert!((a - b).abs() <= 1e-6 * b.abs().max(1e-12) + 1e-9);
         }
+    }
+
+    #[test]
+    fn options_validated_up_front() {
+        let ok = CompressOptions::default();
+        assert!(ok.validate(4).is_ok());
+        let bad = CompressOptions {
+            queue_depth: 0,
+            ..Default::default()
+        };
+        assert!(matches!(bad.validate(4), Err(crate::Error::Config(_))));
+        let bad = CompressOptions {
+            shard_workers: 0,
+            ..Default::default()
+        };
+        assert!(matches!(bad.validate(4), Err(crate::Error::Config(_))));
+        let bad = CompressOptions {
+            kt_window: 6,
+            ..Default::default()
+        };
+        assert!(matches!(bad.validate(4), Err(crate::Error::Config(_))));
+        let bad = CompressOptions {
+            nrmse_target: 0.0,
+            ..Default::default()
+        };
+        assert!(matches!(bad.validate(4), Err(crate::Error::Config(_))));
+        let bad = CompressOptions {
+            latent_bin: -1.0,
+            ..Default::default()
+        };
+        assert!(matches!(bad.validate(4), Err(crate::Error::Config(_))));
     }
 
     #[test]

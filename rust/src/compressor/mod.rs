@@ -1,12 +1,19 @@
 //! Top-level compressors: GBA/GBATC (the paper's method) and the SZ
-//! baseline behind a common trait, plus compression-ratio accounting.
+//! baseline behind a common trait, the codec-stage registry with its
+//! per-(shard, species) rate–distortion planner, plus compression-ratio
+//! accounting.
 
 pub mod accounting;
 pub mod gba;
+pub mod registry;
 pub mod szc;
 pub mod traits;
 
 pub use accounting::SizeBreakdown;
 pub use gba::{CompressOptions, CompressReport, GbatcCompressor};
+pub use registry::{
+    CodecChoice, DensePlaneCodec, GbatcShardCodec, SectionCodec, SectionEncoding, SectionView,
+    SzSectionCodec,
+};
 pub use szc::{SzCompressOptions, SzCompressor, SzArchive};
 pub use traits::Compressor;

@@ -1,0 +1,870 @@
+//! The codec-stage registry and the per-(shard, species) rate–distortion
+//! planner primitives.
+//!
+//! A [`SectionCodec`] encodes/decodes one `[kt_window, 1, Y, X]` section —
+//! a single species' normalized time-window plane — to tagged bytes under
+//! a per-species NRMSE budget.  Three stages are registered:
+//!
+//! | tag | stage                | needs shard latent plane | trial cost |
+//! |-----|----------------------|--------------------------|------------|
+//! | 0   | [`GbatcShardCodec`]  | yes (shared per shard)   | shared-model trial: the AE encode + decode (+ TCN) runs once per shard; per species only the Algorithm-1 guarantee is re-run |
+//! | 1   | [`SzSectionCodec`]   | no                       | full trial: predictor encode + decode + measured NRMSE |
+//! | 2   | [`DensePlaneCodec`]  | no                       | full trial: uniform quantize + bit-pack + measured NRMSE |
+//!
+//! All stages operate in *normalized* units (per-species [0, 1] with the
+//! global ranges), so the engine's shared denormalize step applies
+//! uniformly and partial decode stays bit-identical to full decode.  SZ
+//! and Dense certify their budget by *measuring* the trial decode and
+//! tightening the error bound until the measured NRMSE fits (or giving
+//! up); GBATC certifies by construction (per-block ℓ2 ≤ τ ⇒ section
+//! NRMSE ≤ τ/√D).
+//!
+//! [`plan_shard`] is the planner's cost model: per shard, either pay the
+//! shared latent blob once and let every species pick the cheaper of its
+//! GBATC section and its best self-contained encoding, or drop the latent
+//! plane entirely and use self-contained stages everywhere — whichever
+//! total is smaller.  This is exact-optimal for the cost structure
+//! (the latent blob is the only shared term) and therefore never worse
+//! than all-GBATC or all-SZ on the same sections.
+
+use crate::archive::{CodecTag, SpeciesSection};
+use crate::codec::CoeffCodec;
+use crate::compressor::gba::effective_bin;
+use crate::data::blocks::BlockGrid;
+use crate::error::{Error, Result};
+use crate::gae::guarantee::{apply_correction, guarantee_species, GuaranteeParams};
+use crate::sz::codec::{sz_compress, sz_decompress, SzMode};
+use crate::sz::SzField;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::{BitReader, BitWriter};
+
+/// Compression-time codec policy (the CLI's `--codec` knob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecChoice {
+    /// Rate–distortion planner: trial the candidate stages per
+    /// (shard, species) and keep the smallest certifying encoding.
+    Auto,
+    /// Classic all-GBATC archives (version-2 container, default).
+    Gbatc,
+    /// SZ stage for every section (no model, no latent planes).
+    Sz,
+    /// Dense-plane stage for every section (diagnostic baseline).
+    Dense,
+}
+
+impl CodecChoice {
+    pub fn parse(s: &str) -> Option<CodecChoice> {
+        match s {
+            "auto" => Some(CodecChoice::Auto),
+            "gbatc" => Some(CodecChoice::Gbatc),
+            "sz" => Some(CodecChoice::Sz),
+            "dense" => Some(CodecChoice::Dense),
+            _ => None,
+        }
+    }
+}
+
+/// One species' normalized `[nt, Y, X]` plane of a shard.
+pub struct SectionView<'a> {
+    /// Species index within the shard (stages holding shard context use
+    /// it to reach their shared buffers).
+    pub species: usize,
+    pub nt: usize,
+    pub ny: usize,
+    pub nx: usize,
+    /// Row-major `[nt, ny, nx]`, normalized units.
+    pub norm: &'a [f32],
+}
+
+/// Outcome of one codec trial on one section.
+pub struct SectionEncoding {
+    pub tag: CodecTag,
+    pub bytes: Vec<u8>,
+    /// Certified NRMSE of the trial in normalized units (measured for
+    /// self-contained stages, τ/√D-derived for GBATC).
+    pub nrmse: f64,
+}
+
+/// One stage in the codec registry.
+pub trait SectionCodec: Sync {
+    fn tag(&self) -> CodecTag;
+    fn name(&self) -> &'static str;
+
+    /// Full encode trial under `budget` (normalized NRMSE).  Returns
+    /// `Ok(None)` when this stage cannot certify the budget on this
+    /// section (the planner then falls back to another stage).
+    fn encode(&self, view: &SectionView<'_>, budget: f64) -> Result<Option<SectionEncoding>>;
+
+    /// Decode into `out` (row-major `[nt, ny, nx]`, normalized units).
+    /// Stages that refine a shared-model reconstruction (GBATC) read the
+    /// prior plane already present in `out`; self-contained stages
+    /// overwrite it.
+    fn decode(&self, bytes: &[u8], nt: usize, ny: usize, nx: usize, out: &mut [f32]) -> Result<()>;
+}
+
+/// RMSE between two equal-length planes (normalized units, f64 accumulate).
+pub fn plane_rmse(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let se: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let e = x as f64 - y as f64;
+            e * e
+        })
+        .sum();
+    (se / a.len() as f64).sqrt()
+}
+
+/// Copy one species' `[nt, Y, X]` plane out of a `[nt, S, Y, X]` buffer.
+pub fn gather_plane(buf: &[f32], nt: usize, ns: usize, npix: usize, s: usize) -> Vec<f32> {
+    debug_assert_eq!(buf.len(), nt * ns * npix);
+    let mut out = vec![0.0f32; nt * npix];
+    for t in 0..nt {
+        let src = (t * ns + s) * npix;
+        out[t * npix..(t + 1) * npix].copy_from_slice(&buf[src..src + npix]);
+    }
+    out
+}
+
+/// Scatter a `[nt, Y, X]` plane back into a `[nt, S, Y, X]` buffer.
+pub fn scatter_plane(buf: &mut [f32], plane: &[f32], nt: usize, ns: usize, npix: usize, s: usize) {
+    debug_assert_eq!(buf.len(), nt * ns * npix);
+    debug_assert_eq!(plane.len(), nt * npix);
+    for t in 0..nt {
+        let dst = (t * ns + s) * npix;
+        buf[dst..dst + npix].copy_from_slice(&plane[t * npix..(t + 1) * npix]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SZ stage (tag 1)
+// ---------------------------------------------------------------------------
+
+/// SZ predictor pipeline on one normalized section plane.
+///
+/// Section bytes: `mode u8 (0 lorenzo / 1 interp) | eb f64 | payload blob`
+/// (dims come from the TOC/header).
+pub struct SzSectionCodec {
+    pub mode: SzMode,
+}
+
+/// The registry's SZ stage (per-field auto predictor selection).
+pub static SZ_STAGE: SzSectionCodec = SzSectionCodec { mode: SzMode::Auto };
+
+impl SectionCodec for SzSectionCodec {
+    fn tag(&self) -> CodecTag {
+        CodecTag::Sz
+    }
+
+    fn name(&self) -> &'static str {
+        "SZ"
+    }
+
+    fn encode(&self, view: &SectionView<'_>, budget: f64) -> Result<Option<SectionEncoding>> {
+        if budget.is_nan() || budget <= 0.0 {
+            return Ok(None);
+        }
+        let dims = (view.nt, view.ny, view.nx);
+        // uniform quantization error in [-eb, eb] gives RMSE ≈ eb/√3 in
+        // normalized units; certify by measuring the actual trial decode,
+        // tightening when the error budget saturates
+        let mut eb = (3f64.sqrt() * budget).max(1e-300);
+        for _ in 0..4 {
+            let field = sz_compress(view.norm, dims, eb, self.mode)?;
+            let back = sz_decompress(&field)?;
+            let nrmse = plane_rmse(view.norm, &back);
+            if nrmse <= budget {
+                let mode = match field.mode {
+                    SzMode::Lorenzo => 0u8,
+                    SzMode::Interp => 1u8,
+                    SzMode::Auto => {
+                        return Err(Error::codec("sz stage: Auto is not a stored mode"))
+                    }
+                };
+                let mut w = ByteWriter::new();
+                w.u8(mode);
+                w.f64(field.eb);
+                w.blob(&field.payload);
+                return Ok(Some(SectionEncoding {
+                    tag: CodecTag::Sz,
+                    bytes: w.finish(),
+                    nrmse,
+                }));
+            }
+            eb *= 0.5;
+        }
+        Ok(None)
+    }
+
+    fn decode(&self, bytes: &[u8], nt: usize, ny: usize, nx: usize, out: &mut [f32]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let mode = match r.u8()? {
+            0 => SzMode::Lorenzo,
+            1 => SzMode::Interp,
+            m => return Err(Error::codec(format!("sz section: bad mode {m}"))),
+        };
+        let eb = r.f64()?;
+        let payload = r.blob()?.to_vec();
+        if r.remaining() != 0 {
+            return Err(Error::codec(format!(
+                "sz section: {} trailing bytes",
+                r.remaining()
+            )));
+        }
+        let field = SzField {
+            mode,
+            eb,
+            dims: (nt, ny, nx),
+            payload,
+        };
+        let vals = sz_decompress(&field)?;
+        if vals.len() != out.len() {
+            return Err(Error::codec(format!(
+                "sz section decoded {} values, expected {}",
+                vals.len(),
+                out.len()
+            )));
+        }
+        out.copy_from_slice(&vals);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense-plane stage (tag 2)
+// ---------------------------------------------------------------------------
+
+/// Uniform scalar quantization of the whole plane, bit-packed at fixed
+/// width — the cheap fallback for near-constant or noise-dominated
+/// sections where prediction overhead loses.
+///
+/// Section bytes: `lo f32 | bin f64 | width u8 | packed blob`; a width of
+/// 0 encodes a constant plane (just `lo`).
+pub struct DensePlaneCodec;
+
+/// The registry's dense-plane stage.
+pub static DENSE_STAGE: DensePlaneCodec = DensePlaneCodec;
+
+impl DensePlaneCodec {
+    fn try_encode(norm: &[f32], lo: f32, bin: f64, maxq: u64) -> (Vec<u8>, f64) {
+        let width = if maxq == 0 {
+            0u32
+        } else {
+            64 - maxq.leading_zeros()
+        };
+        let mut bw = BitWriter::new();
+        let mut se = 0.0f64;
+        for &v in norm {
+            let qf = ((v - lo) as f64 / bin).round();
+            let q = if qf < 0.0 {
+                0
+            } else if qf > maxq as f64 {
+                maxq
+            } else {
+                qf as u64
+            };
+            // the exact decode-side expression, so the measured error is
+            // the stored error
+            let rec = (lo as f64 + q as f64 * bin) as f32;
+            let e = (v - rec) as f64;
+            se += e * e;
+            if width > 0 {
+                bw.write(q, width);
+            }
+        }
+        let rmse = (se / norm.len().max(1) as f64).sqrt();
+        let mut w = ByteWriter::new();
+        w.f32(lo);
+        w.f64(bin);
+        w.u8(width as u8);
+        w.blob(&bw.finish());
+        (w.finish(), rmse)
+    }
+}
+
+impl SectionCodec for DensePlaneCodec {
+    fn tag(&self) -> CodecTag {
+        CodecTag::Dense
+    }
+
+    fn name(&self) -> &'static str {
+        "DENSE"
+    }
+
+    fn encode(&self, view: &SectionView<'_>, budget: f64) -> Result<Option<SectionEncoding>> {
+        if budget.is_nan() || budget <= 0.0 {
+            return Ok(None);
+        }
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in view.norm {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() || !hi.is_finite() {
+            return Ok(None);
+        }
+        // |err| ≤ bin/2 = √3·budget in the worst case; the measured RMSE
+        // is usually ≈ budget and certifies the bound exactly
+        let mut bin = 2.0 * 3f64.sqrt() * budget;
+        for _ in 0..6 {
+            let range = (hi - lo) as f64;
+            let maxqf = (range / bin).round();
+            if !maxqf.is_finite() || maxqf >= (1u64 << 32) as f64 {
+                return Ok(None);
+            }
+            let (bytes, nrmse) = Self::try_encode(view.norm, lo, bin, maxqf as u64);
+            if nrmse <= budget {
+                return Ok(Some(SectionEncoding {
+                    tag: CodecTag::Dense,
+                    bytes,
+                    nrmse,
+                }));
+            }
+            bin *= 0.5;
+        }
+        Ok(None)
+    }
+
+    fn decode(&self, bytes: &[u8], nt: usize, ny: usize, nx: usize, out: &mut [f32]) -> Result<()> {
+        debug_assert_eq!(out.len(), nt * ny * nx);
+        let mut r = ByteReader::new(bytes);
+        let lo = r.f32()?;
+        let bin = r.f64()?;
+        let width = r.u8()? as u32;
+        let packed = r.blob()?;
+        if r.remaining() != 0 {
+            return Err(Error::codec(format!(
+                "dense section: {} trailing bytes",
+                r.remaining()
+            )));
+        }
+        if width == 0 {
+            if !packed.is_empty() {
+                return Err(Error::codec("dense section: payload on constant plane"));
+            }
+            out.fill(lo);
+            return Ok(());
+        }
+        if width > 32 {
+            return Err(Error::codec(format!("dense section: width {width} > 32")));
+        }
+        let expect = (out.len() * width as usize + 7) >> 3;
+        if packed.len() != expect {
+            return Err(Error::codec(format!(
+                "dense section: {} packed bytes, expected {expect}",
+                packed.len()
+            )));
+        }
+        let mut br = BitReader::new(packed);
+        for o in out.iter_mut() {
+            let q = br
+                .read(width)
+                .ok_or_else(|| Error::codec("dense section: bit stream underrun"))?;
+            *o = (lo as f64 + q as f64 * bin) as f32;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GBATC stage (tag 0)
+// ---------------------------------------------------------------------------
+
+/// Guarantee-pass statistics of one GBATC section (size-breakdown and
+/// report accounting).
+pub struct GbatcSectionStats {
+    pub max_residual: f64,
+    pub n_coeffs: usize,
+    pub bases_bytes: usize,
+    pub coeff_bytes: usize,
+}
+
+/// GBATC as a registry stage, bound to one shard's shared-model trial:
+/// the normalized input and the AE (+ TCN) reconstruction.  Per species
+/// it runs the Algorithm-1 guarantee and emits the same
+/// [`SpeciesSection`] bytes `GBA1`/`GBA2` always stored (tag 0) — the
+/// expensive model stages are shared across all species of the shard.
+pub struct GbatcShardCodec<'a> {
+    /// Full shard grid (`[nt, S, Y, X]` extents).
+    pub grid: &'a BlockGrid,
+    /// Normalized shard input, `[nt, S, Y, X]`.
+    pub norm: &'a [f32],
+    /// Shared-model reconstruction of the shard, `[nt, S, Y, X]`.
+    pub recon: &'a [f32],
+    pub params: GuaranteeParams,
+}
+
+impl GbatcShardCodec<'_> {
+    /// Run the guarantee for one species; returns the serialized section
+    /// and its stats.
+    pub fn encode_species(&self, s: usize) -> Result<(Vec<u8>, GbatcSectionStats)> {
+        let grid = self.grid;
+        let d = grid.shape.d();
+        let nb = grid.n_blocks();
+        let mut orig_s = vec![0.0f32; nb * d];
+        let mut recon_s = vec![0.0f32; nb * d];
+        for b in 0..nb {
+            grid.gather_species(self.norm, b, s, &mut orig_s[b * d..(b + 1) * d]);
+            grid.gather_species(self.recon, b, s, &mut recon_s[b * d..(b + 1) * d]);
+        }
+        let res = guarantee_species(&orig_s, &recon_s, nb, d, &self.params);
+        let coeffs = CoeffCodec::encode(&res.per_block, d, effective_bin(&self.params, d))?;
+        let stats = GbatcSectionStats {
+            max_residual: res.max_residual,
+            n_coeffs: res.n_coeffs,
+            bases_bytes: res.basis.payload_bytes(),
+            coeff_bytes: coeffs.len(),
+        };
+        let sec = SpeciesSection {
+            basis: res.basis,
+            coeffs,
+        };
+        Ok((sec.to_bytes(), stats))
+    }
+
+    /// Apply one decoded section's corrections to a single-species plane
+    /// (`prior` = the shared-model reconstruction of that plane).  The
+    /// block order of a `[nt, 1, Y, X]` grid matches the per-species
+    /// block order of the full shard grid, so this reproduces the
+    /// engine's in-place correction exactly.
+    pub fn correct_plane(
+        shape: crate::data::blocks::BlockShape,
+        bytes: &[u8],
+        nt: usize,
+        ny: usize,
+        nx: usize,
+        prior: &mut [f32],
+    ) -> Result<()> {
+        let grid = BlockGrid::new((nt, 1, ny, nx), shape)?;
+        let nb = grid.n_blocks();
+        let d = shape.d();
+        let sec = SpeciesSection::from_bytes(bytes)?;
+        let coeffs = CoeffCodec::decode(&sec.coeffs)?;
+        if coeffs.per_block.len() != nb || (coeffs.d != d && !coeffs.per_block.is_empty()) {
+            return Err(Error::codec(format!(
+                "gbatc section: {} coefficient blocks of dim {} vs grid {nb} x {d}",
+                coeffs.per_block.len(),
+                coeffs.d
+            )));
+        }
+        if coeffs
+            .per_block
+            .iter()
+            .flatten()
+            .any(|&(j, _)| j >= sec.basis.rank)
+        {
+            return Err(Error::codec(format!(
+                "gbatc section: coefficient index beyond basis rank {}",
+                sec.basis.rank
+            )));
+        }
+        let mut v = vec![0.0f32; d];
+        for (b, per_block) in coeffs.per_block.iter().enumerate() {
+            if per_block.is_empty() {
+                continue;
+            }
+            grid.gather_species(prior, b, 0, &mut v);
+            apply_correction(&mut v, 1, d, &sec.basis, std::slice::from_ref(per_block));
+            grid.scatter_species(prior, b, 0, &v);
+        }
+        Ok(())
+    }
+}
+
+impl SectionCodec for GbatcShardCodec<'_> {
+    fn tag(&self) -> CodecTag {
+        CodecTag::Gbatc
+    }
+
+    fn name(&self) -> &'static str {
+        "GBATC"
+    }
+
+    fn encode(&self, view: &SectionView<'_>, budget: f64) -> Result<Option<SectionEncoding>> {
+        let (bytes, stats) = self.encode_species(view.species)?;
+        if stats.max_residual > self.params.tau + 1e-12 {
+            // the guarantee loop could not reach τ (pathological input)
+            return Ok(None);
+        }
+        // section NRMSE² = Σ‖r_b‖² / (nb·D) ≤ max_residual²/D, so this is
+        // a certified bound — honor the caller's budget even when it is
+        // tighter than the τ the guarantee params were built for
+        let d = self.grid.shape.d() as f64;
+        let nrmse = stats.max_residual / d.sqrt();
+        if nrmse.is_nan() || nrmse > budget {
+            return Ok(None);
+        }
+        Ok(Some(SectionEncoding {
+            tag: CodecTag::Gbatc,
+            bytes,
+            nrmse,
+        }))
+    }
+
+    fn decode(&self, bytes: &[u8], nt: usize, ny: usize, nx: usize, out: &mut [f32]) -> Result<()> {
+        Self::correct_plane(self.grid.shape, bytes, nt, ny, nx, out)
+    }
+}
+
+/// Look up the self-contained decode stage for a tag.  GBATC sections
+/// decode through the shard engine (they need the shard's shared latent
+/// plane), so tag 0 is rejected here.
+pub fn decode_stage(tag: CodecTag) -> Result<&'static dyn SectionCodec> {
+    match tag {
+        CodecTag::Sz => Ok(&SZ_STAGE),
+        CodecTag::Dense => Ok(&DENSE_STAGE),
+        CodecTag::Gbatc => Err(Error::codec(
+            "GBATC sections decode through the shard engine (shared latent plane)",
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rate–distortion planner
+// ---------------------------------------------------------------------------
+
+/// One species' candidate costs for a shard: the GBATC section size
+/// (`None` when Algorithm 1 could not certify τ on this section) and the
+/// best self-contained alternative (if any stage certified).  Callers
+/// must ensure every species has at least one candidate before planning.
+pub struct SectionPlan {
+    pub gbatc: Option<usize>,
+    pub alt: Option<(CodecTag, usize)>,
+}
+
+/// Pick the byte-minimal codec assignment for one shard.
+///
+/// Cost model: the latent blob is shared by every GBATC section of the
+/// shard, self-contained sections carry no shared cost.  Two scenarios
+/// are exact-optimal under that structure:
+/// (b) pay `latent_bytes` once, each species picks
+///     `min(gbatc, alt)`; (a) no GBATC at all, every species uses its
+///     alternative (only valid when all have one).  Returns
+/// `(keep_latent, per-species tags)` for the smaller total.
+pub fn plan_shard(latent_bytes: usize, plans: &[SectionPlan]) -> (bool, Vec<CodecTag>) {
+    // scenario-b per-species choice: the cheaper available candidate
+    // (GBATC only when it certified)
+    let choose_b = |p: &SectionPlan| -> (CodecTag, usize) {
+        match (p.gbatc, p.alt) {
+            (Some(g), Some((t, a))) if a < g => (t, a),
+            (Some(g), _) => (CodecTag::Gbatc, g),
+            (None, Some((t, a))) => (t, a),
+            // unreachable when the caller upheld the one-candidate
+            // invariant; kept total so planning never panics
+            (None, None) => (CodecTag::Gbatc, 0),
+        }
+    };
+    let total_b: usize = latent_bytes + plans.iter().map(|p| choose_b(p).1).sum::<usize>();
+    let total_a: Option<usize> = plans.iter().map(|p| p.alt.map(|(_, a)| a)).sum();
+    match total_a {
+        Some(a) if a < total_b => (false, plans.iter().map(|p| p.alt.unwrap().0).collect()),
+        _ => (true, plans.iter().map(|p| choose_b(p).0).collect()),
+    }
+}
+
+/// Archive-level planning: per-shard [`plan_shard`] choices, refined by
+/// the model-parameter charge.  The decoder (+ TCN) bytes are paid once
+/// for the whole archive iff *any* section anywhere is GBATC, so the
+/// exact optimum is `min(B, A)` where B = per-shard payload minima +
+/// `model_bytes` (when they retain any GBATC section) and A = the fully
+/// model-free assignment (feasible only when every section has a
+/// certified self-contained alternative).  Returns one
+/// `(keep_latent, tags)` pair per shard.
+pub fn plan_archive(
+    shards: &[(usize, Vec<SectionPlan>)],
+    model_bytes: usize,
+) -> Vec<(bool, Vec<CodecTag>)> {
+    let per_shard: Vec<(bool, Vec<CodecTag>)> = shards
+        .iter()
+        .map(|(latent, plans)| plan_shard(*latent, plans))
+        .collect();
+    let any_gbatc = per_shard
+        .iter()
+        .any(|(_, tags)| tags.iter().any(|&t| t == CodecTag::Gbatc));
+    if model_bytes == 0 || !any_gbatc {
+        return per_shard;
+    }
+    let cost_b: usize = shards
+        .iter()
+        .zip(&per_shard)
+        .map(|((latent, plans), (keep, tags))| {
+            let sections: usize = tags
+                .iter()
+                .zip(plans)
+                .map(|(&t, p)| match t {
+                    CodecTag::Gbatc => p.gbatc.unwrap_or(0),
+                    _ => p.alt.map(|(_, a)| a).unwrap_or(0),
+                })
+                .sum();
+            sections + if *keep { *latent } else { 0 }
+        })
+        .sum::<usize>()
+        + model_bytes;
+    let cost_a: Option<usize> = shards
+        .iter()
+        .map(|(_, plans)| {
+            plans
+                .iter()
+                .map(|p| p.alt.map(|(_, a)| a))
+                .sum::<Option<usize>>()
+        })
+        .sum();
+    match cost_a {
+        Some(a) if a < cost_b => shards
+            .iter()
+            .map(|(_, plans)| (false, plans.iter().map(|p| p.alt.unwrap().0).collect()))
+            .collect(),
+        _ => per_shard,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blocks::BlockShape;
+    use crate::util::Prng;
+
+    fn smooth_plane(nt: usize, ny: usize, nx: usize) -> Vec<f32> {
+        let mut v = Vec::with_capacity(nt * ny * nx);
+        for t in 0..nt {
+            for y in 0..ny {
+                for x in 0..nx {
+                    v.push(
+                        0.5 + 0.3
+                            * ((t as f32) * 0.2 + (y as f32) * 0.11 + (x as f32) * 0.07).sin(),
+                    );
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn sz_stage_roundtrips_under_budget() {
+        let (nt, ny, nx) = (4, 20, 20);
+        let plane = smooth_plane(nt, ny, nx);
+        let view = SectionView {
+            species: 0,
+            nt,
+            ny,
+            nx,
+            norm: &plane,
+        };
+        let budget = 1e-3;
+        let enc = SZ_STAGE.encode(&view, budget).unwrap().expect("certifies");
+        assert_eq!(enc.tag, CodecTag::Sz);
+        assert!(enc.nrmse <= budget, "{}", enc.nrmse);
+        assert!(enc.bytes.len() < plane.len() * 4);
+        let mut out = vec![0.0f32; plane.len()];
+        SZ_STAGE.decode(&enc.bytes, nt, ny, nx, &mut out).unwrap();
+        assert!((plane_rmse(&plane, &out) - enc.nrmse).abs() < 1e-12);
+        // trailing garbage is rejected
+        let mut bad = enc.bytes.clone();
+        bad.push(0);
+        assert!(SZ_STAGE.decode(&bad, nt, ny, nx, &mut out).is_err());
+    }
+
+    #[test]
+    fn dense_stage_constant_plane_is_tiny_and_exact() {
+        let plane = vec![0.25f32; 4 * 10 * 10];
+        let view = SectionView {
+            species: 0,
+            nt: 4,
+            ny: 10,
+            nx: 10,
+            norm: &plane,
+        };
+        let enc = DENSE_STAGE.encode(&view, 1e-4).unwrap().expect("certifies");
+        assert!(enc.bytes.len() < 32, "{} B", enc.bytes.len());
+        assert_eq!(enc.nrmse, 0.0);
+        let mut out = vec![0.0f32; plane.len()];
+        DENSE_STAGE.decode(&enc.bytes, 4, 10, 10, &mut out).unwrap();
+        assert_eq!(out, plane);
+    }
+
+    #[test]
+    fn dense_stage_noise_bounded_and_validated() {
+        let mut rng = Prng::new(3);
+        let plane: Vec<f32> = (0..4 * 15 * 15).map(|_| rng.next_f32()).collect();
+        let view = SectionView {
+            species: 0,
+            nt: 4,
+            ny: 15,
+            nx: 15,
+            norm: &plane,
+        };
+        let budget = 5e-3;
+        let enc = DENSE_STAGE.encode(&view, budget).unwrap().expect("certifies");
+        let mut out = vec![0.0f32; plane.len()];
+        DENSE_STAGE.decode(&enc.bytes, 4, 15, 15, &mut out).unwrap();
+        let rmse = plane_rmse(&plane, &out);
+        assert!(rmse <= budget, "{rmse}");
+        assert!((rmse - enc.nrmse).abs() < 1e-12);
+        // truncated payload is a clean error
+        assert!(DENSE_STAGE
+            .decode(&enc.bytes[..enc.bytes.len() - 2], 4, 15, 15, &mut out)
+            .is_err());
+    }
+
+    #[test]
+    fn gbatc_stage_matches_engine_style_correction() {
+        let shape = BlockShape { kt: 4, by: 5, bx: 4 };
+        let (nt, ns, ny, nx) = (4, 2, 10, 8);
+        let grid = BlockGrid::new((nt, ns, ny, nx), shape).unwrap();
+        let mut rng = Prng::new(11);
+        let n = nt * ns * ny * nx;
+        let norm: Vec<f32> = (0..n).map(|_| rng.next_f32()).collect();
+        let recon: Vec<f32> = norm
+            .iter()
+            .map(|&v| v + (rng.normal() * 0.05) as f32)
+            .collect();
+        let d = shape.d();
+        let tau = 0.02 * (d as f64).sqrt();
+        let params = GuaranteeParams::for_tau(tau, d);
+        let codec = GbatcShardCodec {
+            grid: &grid,
+            norm: &norm,
+            recon: &recon,
+            params,
+        };
+        let npix = ny * nx;
+        for s in 0..ns {
+            let plane = gather_plane(&norm, nt, ns, npix, s);
+            let view = SectionView {
+                species: s,
+                nt,
+                ny,
+                nx,
+                norm: &plane,
+            };
+            let enc = codec.encode(&view, 0.02).unwrap().expect("certifies");
+            assert_eq!(enc.tag, CodecTag::Gbatc);
+            // trait decode refines the prior plane; every block must land
+            // within tau of the original
+            let mut prior = gather_plane(&recon, nt, ns, npix, s);
+            codec.decode(&enc.bytes, nt, ny, nx, &mut prior).unwrap();
+            let plane_grid = BlockGrid::new((nt, 1, ny, nx), shape).unwrap();
+            let mut ov = vec![0.0f32; d];
+            let mut cv = vec![0.0f32; d];
+            for b in 0..plane_grid.n_blocks() {
+                plane_grid.gather_species(&plane, b, 0, &mut ov);
+                plane_grid.gather_species(&prior, b, 0, &mut cv);
+                let e2: f64 = ov
+                    .iter()
+                    .zip(&cv)
+                    .map(|(&a, &b)| {
+                        let e = a as f64 - b as f64;
+                        e * e
+                    })
+                    .sum();
+                assert!(e2.sqrt() <= tau + 1e-9, "s {s} block {b}: {}", e2.sqrt());
+            }
+        }
+    }
+
+    #[test]
+    fn planner_picks_byte_minimal_scenario() {
+        // latent amortized across GBATC sections: keeping it wins here
+        let plans = vec![
+            SectionPlan { gbatc: Some(100), alt: Some((CodecTag::Sz, 400)) },
+            SectionPlan { gbatc: Some(120), alt: Some((CodecTag::Sz, 90)) },
+            SectionPlan { gbatc: Some(80), alt: None },
+        ];
+        let (keep, tags) = plan_shard(50, &plans);
+        assert!(keep);
+        assert_eq!(tags, vec![CodecTag::Gbatc, CodecTag::Sz, CodecTag::Gbatc]);
+
+        // dropping the latent wins when alternatives dominate
+        let plans = vec![
+            SectionPlan { gbatc: Some(100), alt: Some((CodecTag::Sz, 20)) },
+            SectionPlan { gbatc: Some(120), alt: Some((CodecTag::Dense, 10)) },
+        ];
+        let (keep, tags) = plan_shard(500, &plans);
+        assert!(!keep);
+        assert_eq!(tags, vec![CodecTag::Sz, CodecTag::Dense]);
+
+        // no alternative anywhere: classic all-GBATC
+        let plans = vec![SectionPlan { gbatc: Some(10), alt: None }];
+        let (keep, tags) = plan_shard(1000, &plans);
+        assert!(keep);
+        assert_eq!(tags, vec![CodecTag::Gbatc]);
+
+        // an uncertified GBATC candidate is never selected, even when the
+        // alternative is far more expensive
+        let plans = vec![SectionPlan { gbatc: None, alt: Some((CodecTag::Dense, 999)) }];
+        let (_, tags) = plan_shard(5, &plans);
+        assert_eq!(tags, vec![CodecTag::Dense]);
+    }
+
+    #[test]
+    fn archive_planner_drops_model_when_alternatives_dominate() {
+        // two shards; per-shard minima would keep one cheap GBATC section,
+        // but the archive-level model charge makes the model-free plan win
+        let shards = vec![
+            (
+                10usize,
+                vec![SectionPlan { gbatc: Some(50), alt: Some((CodecTag::Sz, 60)) }],
+            ),
+            (
+                10usize,
+                vec![SectionPlan { gbatc: Some(100), alt: Some((CodecTag::Sz, 40)) }],
+            ),
+        ];
+        // without a model charge, the per-shard choice keeps the cheap
+        // GBATC section of shard 0
+        let free = plan_archive(&shards, 0);
+        assert_eq!(free[0], (true, vec![CodecTag::Gbatc]));
+        assert_eq!(free[1], (false, vec![CodecTag::Sz]));
+        // with the model charged once per archive, going fully
+        // self-contained wins: (60 + 40) < (60 + 40 + 1000)
+        let with_model = plan_archive(&shards, 1000);
+        assert_eq!(with_model[0], (false, vec![CodecTag::Sz]));
+        assert_eq!(with_model[1], (false, vec![CodecTag::Sz]));
+        // a section without any certified alternative pins the model
+        let pinned = vec![(10usize, vec![SectionPlan { gbatc: Some(50), alt: None }])];
+        assert_eq!(plan_archive(&pinned, 1000)[0].1, vec![CodecTag::Gbatc]);
+    }
+
+    #[test]
+    fn planner_total_never_worse_than_single_codec() {
+        let mut rng = Prng::new(7);
+        for _ in 0..200 {
+            let ns = 1 + rng.index(6);
+            let latent = rng.index(2000);
+            let plans: Vec<SectionPlan> = (0..ns)
+                .map(|_| SectionPlan {
+                    gbatc: Some(1 + rng.index(1000)),
+                    alt: if rng.next_f64() < 0.8 {
+                        Some((CodecTag::Sz, 1 + rng.index(1000)))
+                    } else {
+                        None
+                    },
+                })
+                .collect();
+            let (keep, tags) = plan_shard(latent, &plans);
+            let total: usize = tags
+                .iter()
+                .zip(&plans)
+                .map(|(&t, p)| match t {
+                    CodecTag::Gbatc => p.gbatc.unwrap(),
+                    _ => p.alt.unwrap().1,
+                })
+                .sum::<usize>()
+                + if keep { latent } else { 0 };
+            let all_gbatc: usize = latent + plans.iter().map(|p| p.gbatc.unwrap()).sum::<usize>();
+            assert!(total <= all_gbatc, "{total} > all-GBATC {all_gbatc}");
+            if plans.iter().all(|p| p.alt.is_some()) {
+                let all_alt: usize = plans.iter().map(|p| p.alt.unwrap().1).sum();
+                assert!(total <= all_alt, "{total} > all-alt {all_alt}");
+            }
+            if !keep {
+                assert!(tags.iter().all(|&t| t != CodecTag::Gbatc));
+            }
+        }
+    }
+}

@@ -134,6 +134,53 @@ impl crate::compressor::traits::Compressor for SzCompressor {
     fn archive_dims(&self, bytes: &[u8]) -> Result<(usize, usize, usize, usize)> {
         SzArchive::peek_dims(bytes)
     }
+
+    /// Species-granular partial decode.  The SZ predictors run over each
+    /// species' whole `[T, Y, X]` trajectory, so the time axis cannot be
+    /// decoded partially — but decoding the *selected species only*, one
+    /// at a time, bounds peak extra memory at one species field plus the
+    /// output window instead of the full `[T, S, Y, X]` decode the trait
+    /// default would materialize.
+    fn decompress_range(
+        &self,
+        bytes: &[u8],
+        t0: usize,
+        t1: usize,
+        species: &[usize],
+    ) -> Result<Vec<f32>> {
+        let archive = SzArchive::deserialize(bytes)?;
+        let (nt, ns, ny, nx) = archive.dims;
+        if t0 >= t1 || t1 > nt {
+            return Err(Error::shape(format!(
+                "time range [{t0}, {t1}) out of bounds for nt {nt}"
+            )));
+        }
+        if archive.fields.len() != ns {
+            return Err(Error::format(format!(
+                "SZ archive has {} fields for {ns} species",
+                archive.fields.len()
+            )));
+        }
+        let sel = crate::compressor::traits::select_species(species, ns)?;
+        let npix = ny * nx;
+        let nsel = sel.len();
+        let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
+        for (k, &s) in sel.iter().enumerate() {
+            let field = sz_decompress(&archive.fields[s])?;
+            if field.len() != nt * npix {
+                return Err(Error::format(format!(
+                    "SZ field {s} decoded to {} values, expected {}",
+                    field.len(),
+                    nt * npix
+                )));
+            }
+            for t in t0..t1 {
+                let dst = ((t - t0) * nsel + k) * npix;
+                out[dst..dst + npix].copy_from_slice(&field[t * npix..(t + 1) * npix]);
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// The SZ baseline compressor.
@@ -238,6 +285,33 @@ mod tests {
         let m1 = szc.decompress(&archive).unwrap();
         let m2 = szc.decompress(&back).unwrap();
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn partial_decode_override_matches_default_slicing() {
+        use crate::compressor::traits::Compressor;
+        let ds = generate(Profile::Tiny, 24);
+        let szc = SzCompressor::new(SzCompressOptions::default());
+        let bytes = szc.compress_bytes(&ds, 1e-2).unwrap();
+        // the species-granular override...
+        let fast = szc.decompress_range(&bytes, 2, 5, &[1, 4]).unwrap();
+        // ...must agree bit-for-bit with slicing a full decode
+        let full = szc.decompress_mass(&bytes).unwrap();
+        let npix = ds.ny * ds.nx;
+        let mut manual = Vec::new();
+        for t in 2..5usize {
+            for &s in &[1usize, 4] {
+                let off = (t * ds.ns + s) * npix;
+                manual.extend_from_slice(&full[off..off + npix]);
+            }
+        }
+        assert_eq!(fast.len(), manual.len());
+        for (a, b) in fast.iter().zip(&manual) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // out-of-range queries are clean errors
+        assert!(szc.decompress_range(&bytes, 3, 3, &[]).is_err());
+        assert!(szc.decompress_range(&bytes, 0, ds.nt + 1, &[]).is_err());
     }
 
     #[test]

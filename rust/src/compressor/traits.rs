@@ -44,9 +44,15 @@ pub trait Compressor {
     /// (all species if empty), as row-major `[t1-t0, n_species, Y, X]`
     /// with species in ascending index order.
     ///
-    /// The default decodes everything and slices; format-aware
-    /// implementations (the `GBA2` TOC) override this to read and decode
-    /// only the touched sections.
+    /// The default decodes everything and slices, so its peak memory is
+    /// the full `[T, S, Y, X]` field *plus* the output window even for a
+    /// 1-timestep request — formats whose payload is only decodable end
+    /// to end pay that cost here.  Format-aware implementations override
+    /// it with what their container allows: the `GBA2` TOC decodes only
+    /// the touched shards/sections (memory bounded by one shard), and the
+    /// SZ archive decodes species-by-species (memory bounded by one
+    /// species' `[T, Y, X]` trajectory, since its predictors cannot skip
+    /// timesteps).
     fn decompress_range(
         &self,
         bytes: &[u8],

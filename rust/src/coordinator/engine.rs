@@ -1,6 +1,6 @@
-//! The shard-oriented compression engine — owns the executor handle,
-//! codecs, and guarantee stage, and drives time-window shards through the
-//! encode/decode pipelines.
+//! The shard-oriented compression engine — owns the executor handle, the
+//! codec-stage registry, and the guarantee stage, and drives time-window
+//! shards through the encode/decode pipelines.
 //!
 //! Compression processes `ceil(T / kt_window)` independent shards (see
 //! [`crate::data::shards`]), up to `shard_workers` concurrently; every
@@ -10,23 +10,36 @@
 //! rather than the full field — [`WorkspaceMeter`] accounts for it and the
 //! bound is reported in `CompressReport::peak_workspace_bytes`.
 //!
+//! Per (shard, species) section the engine runs the codec policy in
+//! [`CompressOptions::codec`]: classic all-GBATC, one self-contained
+//! registry stage (SZ / dense), or the rate–distortion planner
+//! ([`crate::compressor::registry::plan_shard`]) that trials the
+//! candidate stages and keeps the smallest encoding certifying the
+//! per-species NRMSE budget.  The chosen stage is recorded as a codec tag
+//! in the `GBA2` TOC; all-GBATC archives keep the version-2 byte layout.
+//!
 //! Decompression walks the `GBA2` TOC.  [`ShardEngine::decompress_range`]
 //! reads and decodes only the shards intersecting the requested time
-//! window and, within them, only the requested species' guarantee
-//! sections, through any [`SectionSource`] (in-memory, file, counting).
-//! Its output is bit-identical to the same slice of a full decode: both
-//! paths run the exact same per-shard float pipeline.
+//! window and, within them, only the requested species' sections,
+//! through any [`SectionSource`] (in-memory, file, counting), dispatching
+//! each section's decode by its codec tag — the shard's shared AE+TCN
+//! reconstruction runs only when a selected section is GBATC.  Its output
+//! is bit-identical to the same slice of a full decode: both paths run
+//! the exact same per-shard float pipeline.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::archive::{
-    Gba2Archive, Gba2Header, SectionSource, ShardPayload, ShardToc, SliceSource, SpeciesSection,
+    CodecTag, Gba2Archive, Gba2Header, SectionSource, ShardPayload, ShardToc, SliceSource,
 };
-use crate::codec::{CoeffCodec, LatentCodec};
+use crate::codec::LatentCodec;
 use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
 use crate::compressor::gba::{
-    denormalize_in_place, effective_bin, normalize_window, CompressOptions, CompressReport,
-    SpeciesDisjoint,
+    denormalize_in_place, normalize_window, CompressOptions, CompressReport, SpeciesDisjoint,
+};
+use crate::compressor::registry::{
+    self, plan_archive, CodecChoice, GbatcSectionStats, GbatcShardCodec, SectionCodec,
+    SectionEncoding, SectionPlan, SectionView, DENSE_STAGE, SZ_STAGE,
 };
 use crate::coordinator::scheduler::{par_try_for, par_try_map};
 use crate::coordinator::{Pipeline, Progress};
@@ -34,7 +47,7 @@ use crate::data::blocks::{BlockGrid, BlockShape};
 use crate::data::shards::ShardPlan;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
-use crate::gae::guarantee::{apply_correction, guarantee_species, GuaranteeParams};
+use crate::gae::guarantee::GuaranteeParams;
 use crate::runtime::ExecHandle;
 
 /// Worker threads for CPU stages (0 = all cores).
@@ -129,6 +142,9 @@ pub struct RangeDecode {
     pub species: Vec<usize>,
     /// Row-major `[nt, species.len(), ny, nx]` mass fractions.
     pub mass: Vec<f32>,
+    /// High-water mark of the decode working sets (output window + one
+    /// shard's buffers at a time — never the full `[T, S, Y, X]` field).
+    pub peak_workspace_bytes: usize,
 }
 
 /// The shard-oriented engine; borrows an executor-service handle.
@@ -146,6 +162,83 @@ struct ShardOut {
     latent_bytes: usize,
     bases_bytes: usize,
     coeff_bytes: usize,
+    /// Bytes of sections encoded by self-contained stages (SZ / dense).
+    alt_bytes: usize,
+}
+
+/// Per-species trial outcome of one shard (GBATC section + the best
+/// self-contained alternative when the planner runs).
+struct SpeciesTrial {
+    gbatc_bytes: Vec<u8>,
+    stats: GbatcSectionStats,
+    /// Whether the guarantee loop actually reached τ on this section
+    /// (false only on pathological inputs); the planner never selects an
+    /// uncertified GBATC candidate.
+    gbatc_certified: bool,
+    alt: Option<SectionEncoding>,
+}
+
+/// One shard's outcome from the parallel pass: already-final payloads
+/// (single-codec policies), or the candidate encodings the archive-level
+/// planner decides between after all shards finish.
+enum ShardStage {
+    Final(ShardOut),
+    Trials {
+        t0: usize,
+        nt: usize,
+        latent_blob: Vec<u8>,
+        trials: Vec<SpeciesTrial>,
+    },
+}
+
+/// Assemble one shard's payload from its trials and the planner's
+/// `(keep_latent, tags)` choice.
+fn assemble_shard(
+    t0: usize,
+    nt: usize,
+    latent_blob: Vec<u8>,
+    trials: Vec<SpeciesTrial>,
+    keep_latent: bool,
+    tags: Vec<CodecTag>,
+) -> Result<ShardOut> {
+    let mut max_residual = 0.0f64;
+    let mut n_coeffs = 0usize;
+    let mut bases_bytes = 0usize;
+    let mut coeff_bytes = 0usize;
+    let mut alt_bytes = 0usize;
+    let mut sec_bytes = Vec::with_capacity(trials.len());
+    for (tr, &tag) in trials.into_iter().zip(&tags) {
+        if tag == CodecTag::Gbatc {
+            max_residual = max_residual.max(tr.stats.max_residual);
+            n_coeffs += tr.stats.n_coeffs;
+            bases_bytes += tr.stats.bases_bytes;
+            coeff_bytes += tr.stats.coeff_bytes;
+            sec_bytes.push(tr.gbatc_bytes);
+        } else {
+            let enc = tr
+                .alt
+                .ok_or_else(|| Error::runtime("planner chose a missing alternative"))?;
+            alt_bytes += enc.bytes.len();
+            sec_bytes.push(enc.bytes);
+        }
+    }
+    let latent_blob = if keep_latent { latent_blob } else { Vec::new() };
+    let latent_bytes = latent_blob.len();
+    Ok(ShardOut {
+        payload: ShardPayload {
+            t0,
+            nt,
+            latent_blob,
+            species: sec_bytes,
+            codecs: tags,
+        },
+        max_residual,
+        n_coeffs,
+        latent_bytes,
+        bases_bytes,
+        coeff_bytes,
+        alt_bytes,
+    })
 }
 
 impl<'a> ShardEngine<'a> {
@@ -172,6 +265,8 @@ impl<'a> ShardEngine<'a> {
             by: spec.block.1,
             bx: spec.block.2,
         };
+        // typed config validation before any work is spent
+        opts.validate(shape.kt)?;
         // validate full-field divisibility up front
         BlockGrid::for_dataset(ds, shape)?;
         let d = shape.d();
@@ -200,10 +295,21 @@ impl<'a> ShardEngine<'a> {
         };
         let meter = WorkspaceMeter::new();
 
-        let outs: Vec<ShardOut> = par_try_map(n_shards, shard_workers, |i| {
+        // self-contained stages certify against the same 0.1%-conservative
+        // budget, so the f32 denormalize round trip cannot break the bound
+        let budget = opts.nrmse_target * 0.999;
+
+        let stages: Vec<ShardStage> = par_try_map(n_shards, shard_workers, |i| {
             let w = plan.window(i);
             let grid = BlockGrid::new((w.nt, ds.ns, ds.ny, ds.nx), shape)?;
             let nb = grid.n_blocks();
+            // non-GBATC policies run per-species section trials: one
+            // gathered plane plus trial encode/decode buffers per worker
+            let trial_extra = if opts.codec == CodecChoice::Gbatc {
+                0
+            } else {
+                3 * w.nt * npix * 4 * inner_threads.min(ds.ns)
+            };
             let _charge = meter.charge(
                 shard_workspace_bytes(
                     w.nt * stride,
@@ -216,14 +322,67 @@ impl<'a> ShardEngine<'a> {
                     spec.batch,
                     grid.instance_len(),
                     w.nt * stride,
-                ),
+                ) + trial_extra,
             );
 
             // 1. normalize the shard's contiguous view (global ranges)
             let view = ds.shard_view(w)?;
             let norm = normalize_window(view.mass, &ranges, w.nt, ds.ns, npix, inner_threads);
 
-            // 2. AE encode -> latents -> quantize + Huffman
+            // single self-contained stage: no model, no latent plane
+            if matches!(opts.codec, CodecChoice::Sz | CodecChoice::Dense) {
+                let stage: &dyn SectionCodec = match opts.codec {
+                    CodecChoice::Sz => &SZ_STAGE,
+                    _ => &DENSE_STAGE,
+                };
+                let encs = par_try_map(ds.ns, inner_threads, |s| {
+                    let t = std::time::Instant::now();
+                    let plane = registry::gather_plane(&norm, w.nt, ds.ns, npix, s);
+                    let sv = SectionView {
+                        species: s,
+                        nt: w.nt,
+                        ny: ds.ny,
+                        nx: ds.nx,
+                        norm: &plane,
+                    };
+                    let enc = stage.encode(&sv, budget)?.ok_or_else(|| {
+                        Error::guarantee(format!(
+                            "{} stage cannot certify NRMSE {:.3e} on shard t0 {} species {s}",
+                            stage.name(),
+                            opts.nrmse_target,
+                            w.t0
+                        ))
+                    })?;
+                    progress.add(&progress.species_guaranteed, 1);
+                    progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                    Ok(enc)
+                })?;
+                let mut sec_bytes = Vec::with_capacity(ds.ns);
+                let mut codecs = Vec::with_capacity(ds.ns);
+                let mut alt_bytes = 0usize;
+                for e in encs {
+                    alt_bytes += e.bytes.len();
+                    codecs.push(e.tag);
+                    sec_bytes.push(e.bytes);
+                }
+                return Ok(ShardStage::Final(ShardOut {
+                    payload: ShardPayload {
+                        t0: w.t0,
+                        nt: w.nt,
+                        latent_blob: Vec::new(),
+                        species: sec_bytes,
+                        codecs,
+                    },
+                    max_residual: 0.0,
+                    n_coeffs: 0,
+                    latent_bytes: 0,
+                    bases_bytes: 0,
+                    coeff_bytes: 0,
+                    alt_bytes,
+                }));
+            }
+
+            // 2. shared-model trial: AE encode -> latents -> quantize + Huffman
             let latents = pipeline.encode_all(&grid, &norm, self.handle, &progress)?;
             let (latent_blob, deq) =
                 LatentCodec::encode(&latents, nb, spec.latent, opts.latent_bin)?;
@@ -234,64 +393,138 @@ impl<'a> ShardEngine<'a> {
             let recon = pipeline.decode_all(&grid, &deq, self.handle, opts.use_tcn, &progress)?;
             drop(deq);
 
-            // 4. per-(shard, species) guarantee (Algorithm 1)
-            let species = par_try_map(ds.ns, inner_threads, |s| {
+            // 4. per-(shard, species) stages: the Algorithm-1 guarantee,
+            // plus (planner only) full SZ / dense trials on the section
+            let gbatc = GbatcShardCodec {
+                grid: &grid,
+                norm: &norm,
+                recon: &recon,
+                params,
+            };
+            let auto = opts.codec == CodecChoice::Auto;
+            let trials: Vec<SpeciesTrial> = par_try_map(ds.ns, inner_threads, |s| {
                 let t = std::time::Instant::now();
-                let mut orig_s = vec![0.0f32; nb * d];
-                let mut recon_s = vec![0.0f32; nb * d];
-                for b in 0..nb {
-                    grid.gather_species(&norm, b, s, &mut orig_s[b * d..(b + 1) * d]);
-                    grid.gather_species(&recon, b, s, &mut recon_s[b * d..(b + 1) * d]);
+                let (gbatc_bytes, stats) = gbatc.encode_species(s)?;
+                let gbatc_certified = stats.max_residual <= params.tau + 1e-12;
+                let alt = if auto {
+                    let plane = registry::gather_plane(&norm, w.nt, ds.ns, npix, s);
+                    let sv = SectionView {
+                        species: s,
+                        nt: w.nt,
+                        ny: ds.ny,
+                        nx: ds.nx,
+                        norm: &plane,
+                    };
+                    let sz = SZ_STAGE.encode(&sv, budget)?;
+                    let dn = DENSE_STAGE.encode(&sv, budget)?;
+                    match (sz, dn) {
+                        (Some(a), Some(b)) => {
+                            Some(if a.bytes.len() <= b.bytes.len() { a } else { b })
+                        }
+                        (a, b) => a.or(b),
+                    }
+                } else {
+                    None
+                };
+                if auto && !gbatc_certified && alt.is_none() {
+                    return Err(Error::guarantee(format!(
+                        "no stage certifies NRMSE {:.3e} on shard t0 {} species {s}",
+                        opts.nrmse_target, w.t0
+                    )));
                 }
-                let res = guarantee_species(&orig_s, &recon_s, nb, d, &params);
-                let coeffs = CoeffCodec::encode(&res.per_block, d, effective_bin(&params, d))?;
                 progress.add(&progress.species_guaranteed, 1);
                 progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
-                Ok((
-                    SpeciesSection {
-                        basis: res.basis,
-                        coeffs,
-                    },
-                    res.max_residual,
-                    res.n_coeffs,
-                ))
+                Ok(SpeciesTrial {
+                    gbatc_bytes,
+                    stats,
+                    gbatc_certified,
+                    alt,
+                })
             })?;
 
-            let mut max_residual = 0.0f64;
-            let mut n_coeffs = 0usize;
-            let mut bases_bytes = 0usize;
-            let mut coeff_bytes = 0usize;
-            let mut sec_bytes = Vec::with_capacity(ds.ns);
-            for (sec, maxr, nc) in species {
-                max_residual = max_residual.max(maxr);
-                n_coeffs += nc;
-                bases_bytes += sec.basis.payload_bytes();
-                coeff_bytes += sec.coeffs.len();
-                sec_bytes.push(sec.to_bytes());
-            }
-            let latent_bytes = latent_blob.len();
-            Ok(ShardOut {
-                payload: ShardPayload {
+            // 5. single-codec GBATC finalizes here; the planner defers the
+            // choice to the archive-level pass (the model-parameter charge
+            // is global, so per-shard decisions alone cannot be optimal)
+            if auto {
+                Ok(ShardStage::Trials {
                     t0: w.t0,
                     nt: w.nt,
                     latent_blob,
-                    species: sec_bytes,
-                },
-                max_residual,
-                n_coeffs,
-                latent_bytes,
-                bases_bytes,
-                coeff_bytes,
-            })
+                    trials,
+                })
+            } else {
+                Ok(ShardStage::Final(assemble_shard(
+                    w.t0,
+                    w.nt,
+                    latent_blob,
+                    trials,
+                    true,
+                    vec![CodecTag::Gbatc; ds.ns],
+                )?))
+            }
         })?;
 
-        let model_params = self.decoder_params + if opts.use_tcn { self.tcn_params } else { 0 };
-        let model_bytes = model_param_bytes(model_params, opts.model_bytes_f32);
+        // archive-level rate–distortion choice: per-shard byte minima,
+        // refined by the model charge (paid once iff any GBATC survives)
+        let model_bytes_full = model_param_bytes(
+            self.decoder_params + if opts.use_tcn { self.tcn_params } else { 0 },
+            opts.model_bytes_f32,
+        );
+        let mut outs: Vec<ShardOut> = Vec::with_capacity(stages.len());
+        let mut pending: Vec<(usize, usize, Vec<u8>, Vec<SpeciesTrial>)> = Vec::new();
+        for stage in stages {
+            match stage {
+                ShardStage::Final(o) => outs.push(o),
+                ShardStage::Trials {
+                    t0,
+                    nt,
+                    latent_blob,
+                    trials,
+                } => pending.push((t0, nt, latent_blob, trials)),
+            }
+        }
+        if !pending.is_empty() {
+            let costs: Vec<(usize, Vec<SectionPlan>)> = pending
+                .iter()
+                .map(|(_, _, latent_blob, trials)| {
+                    let plans = trials
+                        .iter()
+                        .map(|tr| SectionPlan {
+                            gbatc: tr.gbatc_certified.then_some(tr.gbatc_bytes.len()),
+                            alt: tr.alt.as_ref().map(|e| (e.tag, e.bytes.len())),
+                        })
+                        .collect();
+                    (latent_blob.len(), plans)
+                })
+                .collect();
+            let choices = plan_archive(&costs, model_bytes_full);
+            for ((t0, nt, latent_blob, trials), (keep_latent, tags)) in
+                pending.into_iter().zip(choices)
+            {
+                outs.push(assemble_shard(
+                    t0,
+                    nt,
+                    latent_blob,
+                    trials,
+                    keep_latent,
+                    tags,
+                )?);
+            }
+            outs.sort_by_key(|o| o.payload.t0);
+        }
+
+        // model parameters are charged only when some section actually
+        // decodes through the model (all-SZ/dense archives are model-free)
+        let any_gbatc = outs
+            .iter()
+            .any(|o| o.payload.codecs.iter().any(|&c| c == CodecTag::Gbatc));
+        let model_bytes = if any_gbatc { model_bytes_full } else { 0 };
         let mut max_block_residual = 0.0f64;
         let mut n_coeffs = 0usize;
         let mut latents_bytes = 0usize;
         let mut bases_bytes = 0usize;
         let mut coeff_bytes = 0usize;
+        let mut alt_bytes = 0usize;
         let mut payloads = Vec::with_capacity(outs.len());
         for o in outs {
             max_block_residual = max_block_residual.max(o.max_residual);
@@ -299,6 +532,7 @@ impl<'a> ShardEngine<'a> {
             latents_bytes += o.latent_bytes;
             bases_bytes += o.bases_bytes;
             coeff_bytes += o.coeff_bytes;
+            alt_bytes += o.alt_bytes;
             payloads.push(o.payload);
         }
         let header = Gba2Header {
@@ -318,7 +552,9 @@ impl<'a> ShardEngine<'a> {
             latents: latents_bytes,
             bases: bases_bytes,
             coeffs: coeff_bytes,
-            header: payload.saturating_sub(latents_bytes + bases_bytes + coeff_bytes),
+            alt_sections: alt_bytes,
+            header: payload
+                .saturating_sub(latents_bytes + bases_bytes + coeff_bytes + alt_bytes),
             model_params: model_bytes,
         };
         Ok(CompressReport {
@@ -355,7 +591,21 @@ impl<'a> ShardEngine<'a> {
     }
 
     /// Decode one shard to corrected *normalized* mass `[nt_sh, S, Y, X]`,
-    /// reading (and correcting) only the species in `sel`.
+    /// reading (and decoding) only the species in `sel`, dispatching every
+    /// section by its codec tag.  The shared AE+TCN reconstruction runs
+    /// only when a selected section is GBATC; otherwise the shard buffer
+    /// starts zeroed and self-contained stages overwrite their planes.
+    /// `meter` charges the real allocations so callers can bound peak
+    /// decode memory.
+    ///
+    /// Memory note: the returned buffer is always full `[nt_sh, S, Y, X]`
+    /// width — inherent for GBATC shards (one AE instance couples all
+    /// species), and kept for model-free shards too so both callers index
+    /// it uniformly; a species-packed layout for the model-free case
+    /// would save `(S - |sel|) / S` of one shard buffer at the cost of a
+    /// second indexing convention.  (The `SZA1` baseline's
+    /// species-granular `decompress_range` override covers the classic
+    /// all-SZ workload without this cost.)
     #[allow(clippy::too_many_arguments)]
     fn decode_shard_norm<S: SectionSource + ?Sized>(
         &self,
@@ -366,8 +616,10 @@ impl<'a> ShardEngine<'a> {
         pipeline: Pipeline,
         threads: usize,
         progress: &Progress,
+        meter: &WorkspaceMeter,
     ) -> Result<Vec<f32>> {
         let (_, ns, ny, nx) = header.dims;
+        let npix = ny * nx;
         let shape = BlockShape {
             kt: header.block.0,
             by: header.block.1,
@@ -375,25 +627,39 @@ impl<'a> ShardEngine<'a> {
         };
         let grid = BlockGrid::new((entry.nt, ns, ny, nx), shape)?;
         let nb = grid.n_blocks();
-        let d = shape.d();
-
-        // 1. latent plane (one section read)
-        let latent_len = usize::try_from(entry.latent.1)
-            .map_err(|_| Error::format("latent section length overflows"))?;
-        let latent_bytes = src.read_at(entry.latent.0, latent_len)?;
-        let plane = LatentCodec::decode(&latent_bytes)?;
-        if plane.n != nb || plane.dim != header.latent_dim {
+        if entry.codecs.len() != ns {
             return Err(Error::format(format!(
-                "latent plane {}x{} vs expected {}x{}",
-                plane.n, plane.dim, nb, header.latent_dim
+                "shard at t0 {} has {} codec tags for {ns} species",
+                entry.t0,
+                entry.codecs.len()
             )));
         }
+        let needs_model = sel
+            .iter()
+            .any(|&s| entry.codecs.get(s).copied() == Some(CodecTag::Gbatc));
+        let _shard_charge = meter.charge(entry.nt * ns * npix * 4);
 
-        // 2. decode + optional TCN
-        let mut norm =
-            pipeline.decode_all(&grid, &plane.values, self.handle, header.tcn_used, progress)?;
+        let mut norm = if needs_model {
+            // 1. latent plane (one section read)
+            let latent_len = usize::try_from(entry.latent.1)
+                .map_err(|_| Error::format("latent section length overflows"))?;
+            let latent_bytes = src.read_at(entry.latent.0, latent_len)?;
+            let _latent_charge = meter.charge(latent_bytes.len());
+            let plane = LatentCodec::decode(&latent_bytes)?;
+            if plane.n != nb || plane.dim != header.latent_dim {
+                return Err(Error::format(format!(
+                    "latent plane {}x{} vs expected {}x{}",
+                    plane.n, plane.dim, nb, header.latent_dim
+                )));
+            }
 
-        // 3. per-species corrections (parallel; writes are species-disjoint)
+            // 2. decode + optional TCN
+            pipeline.decode_all(&grid, &plane.values, self.handle, header.tcn_used, progress)?
+        } else {
+            vec![0.0f32; entry.nt * ns * npix]
+        };
+
+        // 3. per-species sections (parallel; writes are species-disjoint)
         let cell = SpeciesDisjoint::new(norm.as_mut_slice());
         par_try_for(sel.len(), threads, |k| {
             let s = sel[k];
@@ -403,37 +669,30 @@ impl<'a> ShardEngine<'a> {
                 .ok_or_else(|| Error::format(format!("no TOC entry for species {s}")))?;
             let sec_len = usize::try_from(range.1)
                 .map_err(|_| Error::format("species section length overflows"))?;
-            let sec = SpeciesSection::from_bytes(&src.read_at(range.0, sec_len)?)?;
-            let coeffs = CoeffCodec::decode(&sec.coeffs)?;
-            if coeffs.per_block.len() != nb || (coeffs.d != d && !coeffs.per_block.is_empty()) {
-                return Err(Error::codec(format!(
-                    "species {s}: {} coefficient blocks of dim {} vs grid {nb} x {d}",
-                    coeffs.per_block.len(),
-                    coeffs.d
-                )));
-            }
-            if coeffs
-                .per_block
-                .iter()
-                .flatten()
-                .any(|&(j, _)| j >= sec.basis.rank)
-            {
-                return Err(Error::codec(format!(
-                    "species {s}: coefficient index beyond basis rank {}",
-                    sec.basis.rank
-                )));
-            }
+            let sec_raw = src.read_at(range.0, sec_len)?;
             // SAFETY: each worker only touches its own species' indices.
             let mass: &mut [f32] = unsafe { cell.slice() };
-            let mut block_vec = vec![0.0f32; d];
-            for (b, per_block) in coeffs.per_block.iter().enumerate() {
-                if per_block.is_empty() {
-                    continue;
+            let _plane_charge = meter.charge(entry.nt * npix * 4);
+            let mut plane;
+            match entry.codecs[s] {
+                // GBATC refines the shared-model prior, gathered from the
+                // shard buffer — the one correction implementation, shared
+                // with the registry stage (the gather/scatter round trip
+                // is a bit-preserving copy)
+                CodecTag::Gbatc => {
+                    plane = registry::gather_plane(mass, entry.nt, ns, npix, s);
+                    GbatcShardCodec::correct_plane(shape, &sec_raw, entry.nt, ny, nx, &mut plane)
+                        .map_err(|e| Error::codec(format!("species {s}: {e}")))?;
                 }
-                grid.gather_species(mass, b, s, &mut block_vec);
-                apply_correction(&mut block_vec, 1, d, &sec.basis, std::slice::from_ref(per_block));
-                grid.scatter_species(mass, b, s, &block_vec);
+                // self-contained stages overwrite the whole plane — no
+                // prior to gather
+                tag => {
+                    plane = vec![0.0f32; entry.nt * npix];
+                    let stage = registry::decode_stage(tag)?;
+                    stage.decode(&sec_raw, entry.nt, ny, nx, &mut plane)?;
+                }
             }
+            registry::scatter_plane(mass, &plane, entry.nt, ns, npix, s);
             Ok(())
         })?;
         Ok(norm)
@@ -450,6 +709,7 @@ impl<'a> ShardEngine<'a> {
         let pipeline = Pipeline::default();
         let src = SliceSource(&archive.bytes);
         let sel: Vec<usize> = (0..ns).collect();
+        let meter = WorkspaceMeter::new();
         let mut out = vec![0.0f32; nt * stride];
         for entry in &archive.toc {
             let norm = self.decode_shard_norm(
@@ -460,6 +720,7 @@ impl<'a> ShardEngine<'a> {
                 pipeline,
                 threads,
                 &progress,
+                &meter,
             )?;
             out[entry.t0 * stride..(entry.t0 + entry.nt) * stride].copy_from_slice(&norm);
         }
@@ -495,10 +756,16 @@ impl<'a> ShardEngine<'a> {
         let npix = ny * nx;
         let threads = effective_threads(threads);
         let pipeline = Pipeline::default();
+        // decode memory is bounded by the output window plus one shard's
+        // working set at a time — never the full [T, S, Y, X] field; the
+        // meter charges the real allocations and tests assert the bound
+        let meter = WorkspaceMeter::new();
         let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
+        let _out_charge = meter.charge(out.len() * 4);
         for entry in toc.iter().filter(|e| e.t0 < t1 && e.t0 + e.nt > t0) {
-            let norm =
-                self.decode_shard_norm(&header, entry, src, &sel, pipeline, threads, &progress)?;
+            let norm = self.decode_shard_norm(
+                &header, entry, src, &sel, pipeline, threads, &progress, &meter,
+            )?;
             let lo_t = t0.max(entry.t0);
             let hi_t = t1.min(entry.t0 + entry.nt);
             for t in lo_t..hi_t {
@@ -516,6 +783,7 @@ impl<'a> ShardEngine<'a> {
                 }
             }
         }
+        let peak_workspace_bytes = meter.peak_bytes();
         Ok(RangeDecode {
             t0,
             nt: t1 - t0,
@@ -523,6 +791,7 @@ impl<'a> ShardEngine<'a> {
             nx,
             species: sel,
             mass: out,
+            peak_workspace_bytes,
         })
     }
 }

@@ -72,6 +72,9 @@ impl Error {
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
     }
+    pub fn guarantee(msg: impl Into<String>) -> Self {
+        Error::Guarantee(msg.into())
+    }
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
     }

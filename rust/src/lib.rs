@@ -17,10 +17,26 @@
 //!   as `ceil(T / kt_window)` independent shards so peak working memory is
 //!   bounded by the shard extent, not the field.
 //! * **Coordinator layer** ([`coordinator`]) — the shard engine
-//!   ([`coordinator::engine::ShardEngine`]) owns the executor handle, codecs,
-//!   and the Algorithm-1 guarantee stage, and drives shards through bounded
-//!   encode/decode pipelines with queue-depth backpressure; a work-stealing
-//!   `par_for`/`par_try_for` covers the CPU stages.
+//!   ([`coordinator::engine::ShardEngine`]) owns the executor handle, the
+//!   codec-stage registry, and the Algorithm-1 guarantee stage, and drives
+//!   shards through bounded encode/decode pipelines with queue-depth
+//!   backpressure; a work-stealing `par_for`/`par_try_for` covers the CPU
+//!   stages.  Per (shard, species) section a rate–distortion planner
+//!   ([`compressor::registry`]) can trial the registered codec stages —
+//!   GBATC (shared-model trial), SZ, and a dense-plane fallback — and keep
+//!   the smallest encoding that certifies the per-species NRMSE budget:
+//!
+//!   ```text
+//!   shard ──normalize──►  AE encode ► latents ► AE decode (+TCN)   (shared trial)
+//!            │                                        │
+//!            ├─ per species: GBATC guarantee ─────────┤  candidate sections
+//!            ├─ per species: SZ trial  ───────────────┤  (bytes + certified
+//!            └─ per species: dense trial ─────────────┘   NRMSE each)
+//!                                 │
+//!                        plan_shard() — keep latent plane + min per species,
+//!                        or drop it and go all self-contained; tags go into
+//!                        the GBA2 v3 TOC (all-GBATC archives stay v2)
+//!   ```
 //! * **Execution runtime** ([`runtime`]) — encoder/decoder/TCN behind one
 //!   [`runtime::ExecHandle`] service: the PJRT backend (AOT artifacts, `pjrt`
 //!   feature) or the deterministic pure-Rust reference backend.  Algorithm 1
@@ -28,15 +44,18 @@
 //!   do not depend on the backend.
 //! * **Archive layer** ([`archive`]) — the legacy single-shot `GBA1`
 //!   container and the indexed `GBA2` container: a table of contents maps
-//!   every (shard, species) payload to an absolute byte range, so
+//!   every (shard, species) payload to an absolute byte range plus its
+//!   codec tag ([`archive::CodecTag`]), so
 //!   [`coordinator::engine::ShardEngine::decompress_range`] reconstructs a
 //!   time window × species subset while reading only the touched sections
-//!   through an [`archive::SectionSource`] (in-memory, file, or counting).
-//!   `GBA1` archives remain readable (and writable) behind
-//!   [`archive::AnyArchive`].
+//!   through an [`archive::SectionSource`] (in-memory, file, or counting)
+//!   and dispatching each section's decode by tag.  `GBA1` archives remain
+//!   readable (and writable) behind [`archive::AnyArchive`], and all-GBATC
+//!   archives keep the pre-registry version-2 byte layout.
 //! * **API/CLI** — [`compressor::Compressor`] unifies GBA/GBATC/SZ, including
 //!   a `decompress_range` entry point; the `gbatc` binary adds `inspect`
-//!   (TOC + size breakdown) and `extract` (partial decode) subcommands.
+//!   (TOC, codec tags, size breakdown) and `extract` (partial decode)
+//!   subcommands, and `compress --codec` selects the codec policy.
 //!
 //! Python never runs on the compression/decompression path; after
 //! `make artifacts` the `gbatc` binary is self-contained, and with the

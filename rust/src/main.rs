@@ -2,11 +2,13 @@
 //! compression, full and partial decompression, archive inspection, and
 //! evaluation.  See `gbatc help`.
 
-use gbatc::archive::{AnyArchive, Archive, CountingSource, FileSource, Gba2Archive, SectionSource};
+use gbatc::archive::{
+    AnyArchive, Archive, CodecTag, CountingSource, FileSource, Gba2Archive, SectionSource,
+};
 use gbatc::chem::{self, Mechanism};
 use gbatc::cli::{Args, USAGE};
 use gbatc::compressor::{
-    CompressOptions, GbatcCompressor, SzArchive, SzCompressOptions, SzCompressor,
+    CodecChoice, CompressOptions, GbatcCompressor, SzArchive, SzCompressOptions, SzCompressor,
 };
 use gbatc::config::Manifest;
 use gbatc::data::{self, io, Profile};
@@ -106,6 +108,8 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
 fn cmd_compress(args: &Args) -> Result<()> {
     let input = args.require("input")?;
     let output = args.require("output")?;
+    let codec = CodecChoice::parse(args.get_or("codec", "gbatc"))
+        .ok_or_else(|| Error::config("bad --codec (auto|gbatc|sz|dense)"))?;
     let mut opts = CompressOptions {
         nrmse_target: args.get_parse("nrmse", 1e-3)?,
         latent_bin: args.get_parse("latent-bin", 0.02)?,
@@ -116,7 +120,13 @@ fn cmd_compress(args: &Args) -> Result<()> {
         queue_depth: args.get_parse("queue-depth", 4)?,
         kt_window: args.get_parse("kt-window", 0)?,
         shard_workers: args.get_parse("shard-workers", 2)?,
+        codec,
     };
+    if args.has("v1") && codec != CodecChoice::Gbatc {
+        return Err(Error::config(
+            "--v1 requires --codec gbatc (GBA1 cannot carry codec tags)",
+        ));
+    }
 
     let ds = io::read_dataset(input)?;
     if args.has("v1") {
@@ -161,9 +171,25 @@ fn cmd_compress(args: &Args) -> Result<()> {
         report.archive.header.kt_window,
         report.peak_workspace_bytes as f64 / 1e6
     );
+    if opts.codec != CodecChoice::Gbatc {
+        println!("  {}", codec_totals_line(&report.archive));
+    }
     println!("  breakdown: {}", report.breakdown);
     println!("  {}", report.progress_summary);
     Ok(())
+}
+
+/// Per-codec section totals of a GBA2 archive, one summary line.
+fn codec_totals_line(a: &Gba2Archive) -> String {
+    let totals = a.codec_totals();
+    let parts: Vec<String> = CodecTag::ALL
+        .iter()
+        .map(|&t| {
+            let (n, b) = totals[t as usize];
+            format!("{} {n} sections {b} B", t.name())
+        })
+        .collect();
+    format!("per-codec: {} (container v{})", parts.join(" | "), a.version())
 }
 
 fn cmd_decompress(args: &Args) -> Result<()> {
@@ -230,11 +256,12 @@ fn cmd_extract(args: &Args) -> Result<()> {
         t.elapsed().as_secs_f64()
     );
     println!(
-        "  read {} of {} archive bytes ({:.1}%) in {} ranged reads",
+        "  read {} of {} archive bytes ({:.1}%) in {} ranged reads | peak workspace {:.1} MB",
         counting.bytes_read(),
         total,
         100.0 * counting.bytes_read() as f64 / total.max(1) as f64,
-        counting.reads()
+        counting.reads(),
+        range.peak_workspace_bytes as f64 / 1e6
     );
     Ok(())
 }
@@ -265,22 +292,29 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         a.compression_ratio()
     );
     println!(
-        "  {:>5} {:>8} {:>12} {:>12} {:>12} {:>12}",
+        "  {:>5} {:>8} {:>12} {:>12} {:>12} {:>12}  codecs",
         "shard", "t range", "offset", "bytes", "latent B", "sections B"
     );
     for (i, e) in a.toc.iter().enumerate() {
         let sections: u64 = e.species.iter().map(|&(_, l)| l).sum();
+        // compact per-species codec tags, e.g. "GGSD" (capped for wide S)
+        let mut tags: String = e.codecs.iter().take(24).map(|c| c.letter()).collect();
+        if e.codecs.len() > 24 {
+            tags.push('…');
+        }
         println!(
-            "  {:>5} {:>3}..{:<4} {:>12} {:>12} {:>12} {:>12}",
+            "  {:>5} {:>3}..{:<4} {:>12} {:>12} {:>12} {:>12}  {}",
             i,
             e.t0,
             e.t0 + e.nt,
             e.shard.0,
             e.shard.1,
             e.latent.1,
-            sections
+            sections,
+            tags
         );
     }
+    println!("  {}", codec_totals_line(&a));
     // per-species totals across shards (top 5 heaviest)
     let mut per: Vec<(usize, u64)> = (0..ns)
         .map(|s| (s, a.toc.iter().map(|e| e.species[s].1).sum::<u64>()))

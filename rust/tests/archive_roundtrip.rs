@@ -1,8 +1,11 @@
 //! Property tests: `serialize → deserialize` is identity for randomized
-//! `GBA1` and `GBA2` archives, and corrupted/truncated containers are
-//! rejected with errors, never panics.
+//! `GBA1` and `GBA2` archives (including mixed-codec v3 containers),
+//! corrupted/truncated containers are rejected with errors (never
+//! panics), and corrupt codec tags are rejected at TOC validation.
 
-use gbatc::archive::{Archive, Gba2Archive, Gba2Header, ShardPayload, SpeciesSection};
+use gbatc::archive::{
+    AnyArchive, Archive, CodecTag, Gba2Archive, Gba2Header, ShardPayload, SpeciesSection,
+};
 use gbatc::gae::SpeciesBasis;
 use gbatc::linalg::Mat;
 use gbatc::util::prop::{check, Arbitrary};
@@ -118,23 +121,43 @@ impl Arbitrary for V2Case {
                 })
                 .collect(),
         };
+        // roughly half the cases are mixed-codec (v3) containers
+        let mixed = rng.next_f64() < 0.5;
         let mut t0 = 0;
         let shards = shards_nt
             .iter()
             .map(|&w| {
-                let sh = ShardPayload {
-                    t0,
-                    nt: w,
-                    latent_blob: random_blob(rng, 256),
-                    species: (0..ns)
-                        .map(|_| {
+                let codecs: Vec<CodecTag> = (0..ns)
+                    .map(|_| {
+                        if mixed {
+                            CodecTag::ALL[rng.index(3)]
+                        } else {
+                            CodecTag::Gbatc
+                        }
+                    })
+                    .collect();
+                let species = codecs
+                    .iter()
+                    .map(|&c| {
+                        if c == CodecTag::Gbatc {
                             SpeciesSection {
                                 basis: random_basis(rng, d),
                                 coeffs: random_blob(rng, 64),
                             }
                             .to_bytes()
-                        })
-                        .collect(),
+                        } else {
+                            // self-contained stages are opaque at the
+                            // container layer
+                            random_blob(rng, 96)
+                        }
+                    })
+                    .collect();
+                let sh = ShardPayload {
+                    t0,
+                    nt: w,
+                    latent_blob: random_blob(rng, 256),
+                    species,
+                    codecs,
                 };
                 t0 += w;
                 sh
@@ -156,13 +179,61 @@ fn prop_gba2_build_deserialize_identity() {
         if a.bytes != b.serialize() || a.toc.len() != case.shards.len() {
             return false;
         }
-        // every section round-trips byte-identically
+        // every section round-trips byte-identically, tags included
         case.shards.iter().enumerate().all(|(i, sh)| {
             b.latent_bytes(i).map(|l| l == &sh.latent_blob[..]).unwrap_or(false)
+                && b.toc[i].codecs == sh.codecs
                 && sh.species.iter().enumerate().all(|(s, sec)| {
                     b.species_bytes(i, s).map(|x| x == &sec[..]).unwrap_or(false)
                 })
         })
+    });
+}
+
+#[test]
+fn prop_mixed_codec_roundtrip_through_any_archive_and_tag_corruption() {
+    check::<V2Case, _>(29, 40, |case| {
+        let Ok(a) = Gba2Archive::build(case.header.clone(), case.shards.clone()) else {
+            return false;
+        };
+        // bit-identical round trip through the version-dispatching reader
+        let Ok(any) = AnyArchive::deserialize(&a.bytes) else {
+            return false;
+        };
+        let Ok(back) = any.into_v2() else {
+            return false;
+        };
+        if back.serialize() != a.bytes {
+            return false;
+        }
+        let mixed = case
+            .shards
+            .iter()
+            .any(|sh| sh.codecs.iter().any(|&c| c != CodecTag::Gbatc));
+        if a.version() != if mixed { 3 } else { 2 } {
+            return false;
+        }
+        if !mixed {
+            return true;
+        }
+        // corrupting any codec tag to an invalid value must be rejected
+        // at TOC validation (deserialize), not at section decode
+        let ns = case.header.dims.1;
+        for (i, sh) in case.shards.iter().enumerate() {
+            for s in 0..sh.codecs.len() {
+                let pos = gbatc::archive::toc::codec_tag_offset(ns, i, s);
+                // the helper must point at the byte the writer stored
+                if a.bytes[pos] != sh.codecs[s] as u8 {
+                    return false;
+                }
+                let mut bad = a.bytes.clone();
+                bad[pos] = 0xEE;
+                if Gba2Archive::deserialize(&bad).is_ok() {
+                    return false;
+                }
+            }
+        }
+        true
     });
 }
 

@@ -181,3 +181,111 @@ fn cli_reference_pipeline_with_partial_decode() {
 
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// `--codec auto` end to end on the reference backend: the planner
+/// archive inspects with per-section codec tags + per-codec byte totals,
+/// extracts bit-identically, and config errors are typed and early.
+#[test]
+fn cli_codec_planner_pipeline() {
+    let dir = std::env::temp_dir().join("gbatc_cli_codec_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ds = dir.join("ds.sdf");
+    let gba = dir.join("ds.auto.gba2");
+    let rec = dir.join("rec.sdf");
+    let ext = dir.join("win.sdf");
+
+    let (ok, text) = run(&[
+        "gen-data", "--out", ds.to_str().unwrap(), "--profile", "tiny", "--seed", "9",
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", gba.to_str().unwrap(), "--nrmse", "1e-3", "--kt-window", "4",
+        "--codec", "auto",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("per-codec"), "{text}");
+
+    let (ok, text) = run(&["inspect", "--archive", gba.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("codecs"), "{text}");
+    assert!(text.contains("per-codec"), "{text}");
+
+    // an all-SZ archive gives a *deterministic* per-codec totals line:
+    // zero GBATC sections, every section tagged SZ
+    let sz_gba = dir.join("ds.sz.gba2");
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", sz_gba.to_str().unwrap(), "--nrmse", "1e-3", "--kt-window", "4",
+        "--codec", "sz",
+    ]);
+    assert!(ok, "{text}");
+    let (ok, text) = run(&["inspect", "--archive", sz_gba.to_str().unwrap()]);
+    assert!(ok, "{text}");
+    assert!(text.contains("GBATC 0 sections 0 B"), "{text}");
+    // tiny profile = 58 species, kt-window 4 over 8 steps = 2 shards
+    assert!(text.contains("SZ 116 sections"), "{text}");
+
+    let (ok, text) = run(&[
+        "decompress", "--reference", "--input", gba.to_str().unwrap(),
+        "--output", rec.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+
+    let (ok, text) = run(&[
+        "extract", "--reference", "--input", gba.to_str().unwrap(),
+        "--output", ext.to_str().unwrap(), "--t0", "2", "--t1", "6",
+        "--species", "CO,N2",
+    ]);
+    assert!(ok, "{text}");
+
+    // bit-equality of the extracted window against the full decode
+    let full = gbatc::data::io::read_dataset(&rec).unwrap();
+    let part = gbatc::data::io::read_dataset(&ext).unwrap();
+    let sel = [
+        gbatc::chem::index_of("CO").unwrap(),
+        gbatc::chem::index_of("N2").unwrap(),
+    ];
+    let mut sel = sel.to_vec();
+    sel.sort_unstable();
+    let npix = full.ny * full.nx;
+    assert_eq!((part.nt, part.ns), (4, 2));
+    for t in 2..6usize {
+        for (k, &s) in sel.iter().enumerate() {
+            for p in 0..npix {
+                let a = full.mass[(t * full.ns + s) * npix + p];
+                let b = part.mass[((t - 2) * 2 + k) * npix + p];
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} s={s} p={p}");
+            }
+        }
+    }
+
+    // typed config errors, before any work is spent
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", gba.to_str().unwrap(), "--codec", "bogus",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--codec"), "{text}");
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", gba.to_str().unwrap(), "--kt-window", "3",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("config error"), "{text}");
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", gba.to_str().unwrap(), "--queue-depth", "0",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("config error"), "{text}");
+    let (ok, text) = run(&[
+        "compress", "--reference", "--input", ds.to_str().unwrap(),
+        "--output", gba.to_str().unwrap(), "--codec", "auto", "--v1",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--v1"), "{text}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,287 @@
+//! Rate–distortion planner tests over the reference runtime: `--codec
+//! auto` must never produce more bytes than either single-codec run at
+//! the same NRMSE target (beyond the v3 TOC tag overhead), every
+//! (shard, species) NRMSE must stay certified, and mixed-codec `GBA2`
+//! archives must partial-decode bit-identically to their full decode.
+
+use gbatc::archive::{AnyArchive, CodecTag, CountingSource, Gba2Archive, ShardPayload, SliceSource};
+use gbatc::compressor::registry::{SectionCodec, SectionView, DENSE_STAGE, SZ_STAGE};
+use gbatc::compressor::{CodecChoice, CompressOptions, GbatcCompressor};
+use gbatc::data::Dataset;
+use gbatc::runtime::{ExecService, RuntimeSpec};
+
+const NS: usize = 2;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+/// Species 0 is a smooth low-frequency field (SZ-friendly); species 1 is
+/// a high-frequency checkerboard under a slowly drifting amplitude
+/// (structured — the pooled reference AE leaves a low-rank residual).
+fn make_ds(nt: usize) -> Dataset {
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    for t in 0..nt {
+        for y in 0..NY {
+            for x in 0..NX {
+                let smooth = 0.5
+                    + 0.3 * ((t as f32) * 0.25 + (y as f32) * 0.07 + (x as f32) * 0.05).sin();
+                let sign = if (t + y + x) % 2 == 0 { 1.0f32 } else { -1.0 };
+                let amp = 0.2 + 0.05 * ((t as f32) * 0.3 + (y as f32) * 0.02).cos();
+                let i0 = ds.idx(t, 0, y, x);
+                ds.mass[i0] = smooth;
+                let i1 = ds.idx(t, 1, y, x);
+                ds.mass[i1] = 0.5 + sign * amp;
+            }
+        }
+    }
+    ds
+}
+
+fn opts(codec: CodecChoice) -> CompressOptions {
+    CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 8,
+        threads: 2,
+        shard_workers: 1,
+        codec,
+        ..Default::default()
+    }
+}
+
+/// Per-(shard window, species) NRMSE of `recon` against `ds`, normalized
+/// by the global species range (the units the engine certifies).
+fn section_nrmse(ds: &Dataset, recon: &[f32], t0: usize, t1: usize, s: usize) -> f64 {
+    let ranges = ds.species_ranges();
+    let range = (ranges[s].1 - ranges[s].0).max(1e-30) as f64;
+    let npix = ds.ny * ds.nx;
+    let mut se = 0.0f64;
+    let mut n = 0usize;
+    for t in t0..t1 {
+        let off = (t * ds.ns + s) * npix;
+        for p in 0..npix {
+            let e = (ds.mass[off + p] - recon[off + p]) as f64 / range;
+            se += e * e;
+            n += 1;
+        }
+    }
+    (se / n as f64).sqrt()
+}
+
+fn assert_range_matches_full(
+    comp: &GbatcCompressor<'_>,
+    archive: &Gba2Archive,
+    full: &[f32],
+    t0: usize,
+    t1: usize,
+    sel: &[usize],
+) {
+    let src = SliceSource(&archive.bytes);
+    let out = comp.extract(&src, t0, t1, sel, 2).unwrap();
+    let npix = NY * NX;
+    assert_eq!(out.mass.len(), (t1 - t0) * sel.len() * npix);
+    for t in t0..t1 {
+        for (k, &s) in sel.iter().enumerate() {
+            for p in 0..npix {
+                let a = full[(t * NS + s) * npix + p];
+                let b = out.mass[((t - t0) * sel.len() + k) * npix + p];
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} s={s} p={p}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_never_worse_than_single_codec_and_certifies() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let ds = make_ds(16);
+    let target = 1e-3;
+
+    let auto = comp.compress(&ds, &opts(CodecChoice::Auto)).unwrap();
+    let gbatc = comp.compress(&ds, &opts(CodecChoice::Gbatc)).unwrap();
+    let sz = comp.compress(&ds, &opts(CodecChoice::Sz)).unwrap();
+
+    let n_shards = auto.archive.n_shards();
+    assert_eq!(n_shards, 2);
+    let tag_overhead = n_shards * NS + 64;
+    let auto_bytes = auto.archive.payload_bytes();
+    let best_single = gbatc.archive.payload_bytes().min(sz.archive.payload_bytes());
+    eprintln!(
+        "auto {auto_bytes} B vs gbatc {} B / sz {} B; tags: {:?} {:?}",
+        gbatc.archive.payload_bytes(),
+        sz.archive.payload_bytes(),
+        auto.archive.toc[0].codecs,
+        auto.archive.toc[1].codecs,
+    );
+    assert!(
+        auto_bytes <= best_single + tag_overhead,
+        "auto {auto_bytes} B > min single-codec {best_single} B + {tag_overhead}"
+    );
+    // the bound also holds with the model-parameter charge included (the
+    // archive-level planner is model-aware)
+    let auto_total = auto.archive.total_bytes();
+    let best_total = gbatc.archive.total_bytes().min(sz.archive.total_bytes());
+    assert!(
+        auto_total <= best_total + tag_overhead,
+        "auto total {auto_total} B > min single-codec total {best_total} B + {tag_overhead}"
+    );
+
+    // every (shard, species) NRMSE of the planner archive stays certified
+    let full = comp.decompress(&auto.archive, 2).unwrap();
+    for entry in &auto.archive.toc {
+        for s in 0..NS {
+            let nrmse = section_nrmse(&ds, &full, entry.t0, entry.t0 + entry.nt, s);
+            assert!(
+                nrmse <= target * 1.05,
+                "shard t0 {} species {s} ({:?}): NRMSE {nrmse} > {target}",
+                entry.t0,
+                entry.codecs[s]
+            );
+        }
+    }
+
+    // partial decode of the planner archive is bit-identical to the full
+    // decode, across the shard boundary and per species
+    assert_range_matches_full(&comp, &auto.archive, &full, 6, 10, &[0, 1]);
+    assert_range_matches_full(&comp, &auto.archive, &full, 0, 8, &[1]);
+    assert_range_matches_full(&comp, &auto.archive, &full, 8, 16, &[0]);
+}
+
+#[test]
+fn all_sz_gba2_archive_is_model_free_and_partial_decodes() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let ds = make_ds(16);
+    let target = 1e-3;
+
+    let report = comp.compress(&ds, &opts(CodecChoice::Sz)).unwrap();
+    let archive = report.archive;
+    assert_eq!(archive.version(), 3);
+    assert_eq!(archive.header.model_param_bytes, 0);
+    for entry in &archive.toc {
+        assert!(entry.codecs.iter().all(|&c| c == CodecTag::Sz));
+        // no shared latent plane is stored for model-free shards
+        assert_eq!(entry.latent.1, 0);
+    }
+
+    let full = comp.decompress(&archive, 2).unwrap();
+    for entry in &archive.toc {
+        for s in 0..NS {
+            let nrmse = section_nrmse(&ds, &full, entry.t0, entry.t0 + entry.nt, s);
+            assert!(nrmse <= target * 1.05, "species {s}: NRMSE {nrmse}");
+        }
+    }
+
+    // partial decode touches strictly fewer bytes and matches bit-for-bit
+    let src = SliceSource(&archive.bytes);
+    let counting = CountingSource::new(&src);
+    let out = comp.extract(&counting, 8, 12, &[1], 2).unwrap();
+    let npix = NY * NX;
+    for t in 8..12usize {
+        for p in 0..npix {
+            let a = full[(t * NS + 1) * npix + p];
+            let b = out.mass[(t - 8) * npix + p];
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    assert!(counting.bytes_read() * 2 < archive.bytes.len() as u64);
+
+    // the version-3 container round-trips through the dispatching reader
+    let any = AnyArchive::deserialize(&archive.bytes).unwrap();
+    assert_eq!(any.version(), 3);
+    assert_eq!(any.into_v2().unwrap().serialize(), archive.bytes);
+}
+
+#[test]
+fn hand_spliced_mixed_archive_partial_decode_bit_identical() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let ds = make_ds(16);
+    let target = 1e-3;
+
+    let report = comp.compress(&ds, &opts(CodecChoice::Gbatc)).unwrap();
+    let base = report.archive;
+    assert_eq!(base.version(), 2);
+    assert_eq!(base.n_shards(), 2);
+
+    // re-encode (shard 0, species 1) with the SZ stage and (shard 1,
+    // species 0) with the dense stage, from the same normalized planes the
+    // engine used — a deterministic, guaranteed-mixed archive
+    let ranges = ds.species_ranges();
+    let norm = gbatc::compressor::gba::normalize_mass(&ds, &ranges, 2);
+    let npix = NY * NX;
+    let budget = target * 0.999;
+    let plane_of = |t0: usize, nt: usize, s: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(nt * npix);
+        for t in t0..t0 + nt {
+            let off = (t * NS + s) * npix;
+            out.extend_from_slice(&norm[off..off + npix]);
+        }
+        out
+    };
+
+    let mut shards = Vec::new();
+    for (i, entry) in base.toc.iter().enumerate() {
+        let mut species: Vec<Vec<u8>> = (0..NS)
+            .map(|s| base.species_bytes(i, s).unwrap().to_vec())
+            .collect();
+        let mut codecs = vec![CodecTag::Gbatc; NS];
+        let (stage, s): (&dyn SectionCodec, usize) =
+            if i == 0 { (&SZ_STAGE, 1) } else { (&DENSE_STAGE, 0) };
+        let plane = plane_of(entry.t0, entry.nt, s);
+        let sv = SectionView {
+            species: s,
+            nt: entry.nt,
+            ny: NY,
+            nx: NX,
+            norm: &plane,
+        };
+        let enc = stage
+            .encode(&sv, budget)
+            .unwrap()
+            .expect("stage certifies on synthetic plane");
+        species[s] = enc.bytes;
+        codecs[s] = enc.tag;
+        shards.push(ShardPayload {
+            t0: entry.t0,
+            nt: entry.nt,
+            latent_blob: base.latent_bytes(i).unwrap().to_vec(),
+            species,
+            codecs,
+        });
+    }
+    let mixed = Gba2Archive::build(base.header.clone(), shards).unwrap();
+    assert_eq!(mixed.version(), 3);
+
+    // the spliced sections still certify their per-section NRMSE, and the
+    // untouched GBATC sections decode as before
+    let full = comp.decompress(&mixed, 2).unwrap();
+    for entry in &mixed.toc {
+        for s in 0..NS {
+            let nrmse = section_nrmse(&ds, &full, entry.t0, entry.t0 + entry.nt, s);
+            assert!(
+                nrmse <= target * 1.05,
+                "shard t0 {} species {s} ({:?}): NRMSE {nrmse}",
+                entry.t0,
+                entry.codecs[s]
+            );
+        }
+    }
+
+    // partial decode == full decode, bit for bit, on the mixed container
+    assert_range_matches_full(&comp, &mixed, &full, 6, 10, &[0, 1]);
+    assert_range_matches_full(&comp, &mixed, &full, 0, 4, &[1]);
+    assert_range_matches_full(&comp, &mixed, &full, 12, 16, &[0]);
+}

@@ -101,6 +101,25 @@ fn partial_decode_bit_equals_full_and_reads_fewer_bytes() {
         "partial read {} not < half of {total}",
         counting.bytes_read()
     );
+
+    // decode-side workspace regression: a partial decode materializes the
+    // output window plus one shard's buffers at a time — never the full
+    // [T, S, Y, X] field (the trait default's cost)
+    let out_bytes = out.mass.len() * 4;
+    let shard_bytes = 4 * NS * npix * 4; // one kt_window=4 shard, normalized
+    // slack: latent blob + per-species correction planes of the workers
+    let bound = out_bytes + shard_bytes + (96 << 10);
+    assert!(
+        out.peak_workspace_bytes <= bound,
+        "decode peak {} exceeds window+shard bound {bound}",
+        out.peak_workspace_bytes
+    );
+    assert!(
+        out.peak_workspace_bytes < ds.mass.len() * 4,
+        "decode peak {} not below one full-field copy {}",
+        out.peak_workspace_bytes,
+        ds.mass.len() * 4
+    );
 }
 
 #[test]
