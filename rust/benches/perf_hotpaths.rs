@@ -1,158 +1,519 @@
-//! Hot-path microbenchmarks — the §Perf harness (EXPERIMENTS.md).
+//! Hot-path kernel benchmark — per-kernel before/after numbers for the
+//! three overhauled paths (guarantee/PCA, table-driven Huffman, planner
+//! trial reuse), on the pure-Rust reference backend so CI can run it
+//! without AOT artifacts:
 //!
-//! Covers every stage of the request path: PJRT executions (encoder /
-//! decoder / TCN), Huffman coding, PCA fit + guarantee loop, SZ predictors,
-//! block gather/scatter, and the end-to-end compress/decompress throughput.
+//! ```bash
+//! cargo bench --bench perf_hotpaths
+//! GBATC_BENCH_PROFILE=tiny GBATC_BENCH_OUT=BENCH_hotpaths.json \
+//!     cargo bench --bench perf_hotpaths
+//! ```
+//!
+//! Each "baseline" is a faithful copy of the pre-overhaul kernel (scalar
+//! per-column dots + separate re-measure, bit-position reader + canonical
+//! walk, per-bit symbol writes), and every (baseline, optimized) pair is
+//! asserted to produce identical results before it is timed — the
+//! overhaul's bit-identity contract, enforced where the numbers are
+//! produced.  Results land in `BENCH_hotpaths.json`; CI gates regressions
+//! with `scripts/bench_compare.py` against the committed baseline.
+//! `GBATC_BENCH_STRICT=1` additionally asserts the headline targets
+//! (guarantee >= 2x, Huffman decode >= 3x, auto within 1.2x of the best
+//! single-codec run) in-process.
 
-#[path = "common.rs"]
-mod common;
-
-use common::*;
-use gbatc::compressor::{CompressOptions, SzCompressOptions, SzCompressor};
-use gbatc::data::blocks::{BlockGrid, BlockShape};
-use gbatc::entropy::IntCodec;
-use gbatc::gae::guarantee::{guarantee_species, GuaranteeParams};
-use gbatc::sz::codec::{sz_compress, SzMode};
+use gbatc::compressor::{CodecChoice, CompressOptions, GbatcCompressor};
+use gbatc::data::{generate, Profile};
+use gbatc::entropy::Huffman;
+use gbatc::gae::guarantee::{guarantee_species_timed, GuaranteeParams};
+use gbatc::gae::SpeciesBasis;
+use gbatc::linalg::Pca;
+use gbatc::quant::UniformQuantizer;
+use gbatc::runtime::{ExecService, RuntimeSpec};
 use gbatc::util::timer::bench;
-use gbatc::util::Prng;
+use gbatc::util::{BitReader, BitWriter, Prng, Timer};
+
+/// Faithful copies of the pre-overhaul kernels, used as the "before"
+/// side of every measurement (the originals no longer exist in-tree).
+mod baseline {
+    use super::*;
+
+    /// Pre-overhaul Algorithm 1: per-block scalar column dots, separate
+    /// axpy + re-measure sweeps, eager corrected clone, and the second
+    /// `from_mat` conversion for the truncated basis.
+    #[allow(clippy::type_complexity)]
+    pub fn guarantee_species(
+        orig: &[f32],
+        recon: &[f32],
+        n_blocks: usize,
+        d: usize,
+        params: &GuaranteeParams,
+    ) -> (Vec<Vec<(usize, i64)>>, f64, usize) {
+        let tau = params.tau;
+        let bin = params.coeff_bin.min(1.9 * tau / (d as f64).sqrt());
+        let quant = UniformQuantizer::new(bin);
+        let mut residuals = vec![0.0f32; n_blocks * d];
+        for i in 0..n_blocks * d {
+            residuals[i] = orig[i] - recon[i];
+        }
+        let pca = Pca::fit(&residuals, n_blocks, d, false);
+        let full_basis = SpeciesBasis::from_mat(&pca.basis, d);
+
+        let mut per_block: Vec<Vec<(usize, i64)>> = Vec::with_capacity(n_blocks);
+        let mut corrected = recon.to_vec();
+        let mut n_coeffs = 0usize;
+        let mut max_residual = 0.0f64;
+        let mut max_index_used = 0usize;
+        let mut resid = vec![0.0f32; d];
+        let mut coeffs: Vec<(usize, f64)> = Vec::with_capacity(d);
+
+        for b in 0..n_blocks {
+            let r0 = &residuals[b * d..(b + 1) * d];
+            let mut delta2: f64 = r0.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let mut selected: Vec<(usize, i64)> = Vec::new();
+            if delta2.sqrt() > tau {
+                resid.copy_from_slice(r0);
+                coeffs.clear();
+                for j in 0..d {
+                    let col = full_basis.col(j);
+                    let c: f64 = col
+                        .iter()
+                        .zip(r0)
+                        .map(|(&u, &r)| u as f64 * r as f64)
+                        .sum();
+                    coeffs.push((j, c));
+                }
+                coeffs.sort_by(|a, b| (b.1 * b.1).total_cmp(&(a.1 * a.1)));
+                for &(j, c) in coeffs.iter() {
+                    let q = quant.quantize(c);
+                    if q == 0 {
+                        continue;
+                    }
+                    let cq = quant.dequantize(q) as f32;
+                    full_basis.axpy_col(j, -cq, &mut resid);
+                    delta2 = resid.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                    selected.push((j, q));
+                    if delta2.sqrt() <= tau {
+                        break;
+                    }
+                }
+                selected.sort_unstable_by_key(|&(j, _)| j);
+                let cb = &mut corrected[b * d..(b + 1) * d];
+                for i in 0..d {
+                    cb[i] = orig[b * d + i] - resid[i];
+                }
+                if let Some(&(j, _)) = selected.iter().max_by_key(|&&(j, _)| j) {
+                    max_index_used = max_index_used.max(j + 1);
+                }
+            }
+            n_coeffs += selected.len();
+            max_residual = max_residual.max(delta2.sqrt());
+            per_block.push(selected);
+        }
+        // the old path converted the Mat a second time for the truncation
+        let rank = if params.store_full_basis {
+            d
+        } else {
+            max_index_used
+        };
+        let basis = SpeciesBasis::from_mat(&pca.basis, rank);
+        std::hint::black_box(&basis);
+        std::hint::black_box(&corrected);
+        (per_block, max_residual, n_coeffs)
+    }
+
+    /// Pre-overhaul bit reader: byte-index/bit-offset arithmetic per read.
+    pub struct OldBitReader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> OldBitReader<'a> {
+        pub fn new(buf: &'a [u8]) -> Self {
+            Self { buf, pos: 0 }
+        }
+
+        #[inline]
+        pub fn read(&mut self, n: u32) -> Option<u64> {
+            if self.pos + n as usize > self.buf.len() * 8 {
+                return None;
+            }
+            let mut v = 0u64;
+            let mut got = 0u32;
+            while got < n {
+                let byte = self.buf[(self.pos + got as usize) / 8];
+                let bit_off = ((self.pos + got as usize) % 8) as u32;
+                let take = (8 - bit_off).min(n - got);
+                let bits = ((byte >> bit_off) as u64) & ((1u64 << take) - 1);
+                v |= bits << got;
+                got += take;
+            }
+            self.pos += n as usize;
+            Some(v)
+        }
+
+        #[inline]
+        pub fn read_bit(&mut self) -> Option<bool> {
+            self.read(1).map(|b| b != 0)
+        }
+    }
+
+    /// Canonical decode tables rebuilt from public code lengths (the
+    /// pre-table decoder's private state).
+    pub struct CanonicalWalk {
+        count: Vec<u64>,
+        first_code: Vec<u64>,
+        first_index: Vec<usize>,
+        sorted: Vec<u32>,
+        max_len: u32,
+    }
+
+    pub fn canonical_walk_tables(lens: &[u32]) -> CanonicalWalk {
+        let max_len = lens.iter().cloned().max().unwrap_or(0);
+        let mut sorted: Vec<u32> = (0..lens.len() as u32)
+            .filter(|&s| lens[s as usize] > 0)
+            .collect();
+        sorted.sort_by_key(|&s| (lens[s as usize], s));
+        let mut count = vec![0u64; (max_len + 1) as usize];
+        for &s in &sorted {
+            count[lens[s as usize] as usize] += 1;
+        }
+        let mut first_code = vec![0u64; (max_len + 1) as usize];
+        let mut first_index = vec![0usize; (max_len + 1) as usize];
+        let (mut code, mut idx) = (0u64, 0usize);
+        for l in 1..=max_len as usize {
+            first_code[l] = code;
+            first_index[l] = idx;
+            code = (code + count[l]) << 1;
+            idx += count[l] as usize;
+        }
+        CanonicalWalk {
+            count,
+            first_code,
+            first_index,
+            sorted,
+            max_len,
+        }
+    }
+
+    /// Pre-overhaul `decode_symbol`: one reader call per bit.
+    #[inline]
+    pub fn decode_symbol(t: &CanonicalWalk, r: &mut OldBitReader) -> Option<u32> {
+        let mut code = 0u64;
+        let mut l = 0usize;
+        loop {
+            let bit = r.read_bit()?;
+            code = (code << 1) | bit as u64;
+            l += 1;
+            if l > t.max_len as usize {
+                return None;
+            }
+            let c = t.count[l];
+            if c > 0 {
+                let fc = t.first_code[l];
+                if code >= fc && code < fc + c {
+                    return Some(t.sorted[t.first_index[l] + (code - fc) as usize]);
+                }
+            }
+        }
+    }
+
+    /// Pre-overhaul `encode_symbol`: one writer call per bit, MSB-first.
+    #[inline]
+    pub fn encode_symbol(w: &mut BitWriter, code: u64, len: u32) {
+        for i in (0..len).rev() {
+            w.write_bit((code >> i) & 1 == 1);
+        }
+    }
+}
+
+struct SpeedupRow {
+    kernel: &'static str,
+    baseline_ms: f64,
+    optimized_ms: f64,
+}
+
+impl SpeedupRow {
+    fn speedup(&self) -> f64 {
+        self.baseline_ms / self.optimized_ms.max(1e-9)
+    }
+}
 
 fn main() {
-    let env = BenchEnv::new(99);
-    let handle = env.handle();
-    let ds = &env.ds;
-    let spec = handle.spec();
-    println!("== perf_hotpaths ({}x{}x{}x{})", ds.nt, ds.ns, ds.ny, ds.nx);
+    let profile = std::env::var("GBATC_BENCH_PROFILE")
+        .ok()
+        .and_then(|p| Profile::parse(&p))
+        .unwrap_or(Profile::Tiny);
+    let reps: usize = std::env::var("GBATC_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let out_path =
+        std::env::var("GBATC_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());
+    let strict = std::env::var("GBATC_BENCH_STRICT").is_ok_and(|v| v == "1");
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    let mut rows: Vec<SpeedupRow> = Vec::new();
 
-    // --- PJRT executions ------------------------------------------------
-    let il = spec.instance_len();
-    let blocks = vec![0.1f32; spec.batch * il];
-    let st = bench(1, 5, || {
-        let _ = handle.encode(blocks.clone(), spec.batch).unwrap();
-    });
-    println!(
-        "encoder exec    [{} blocks]  {st}  ({:.1} blocks/s)",
-        spec.batch,
-        st.throughput(spec.batch as f64)
-    );
-    let latents = vec![0.1f32; spec.batch * spec.latent];
-    let st = bench(1, 5, || {
-        let _ = handle.decode(latents.clone(), spec.batch).unwrap();
-    });
-    println!(
-        "decoder exec    [{} blocks]  {st}  ({:.1} blocks/s)",
-        spec.batch,
-        st.throughput(spec.batch as f64)
-    );
-    let pts = vec![0.1f32; spec.points * spec.species];
-    let st = bench(1, 5, || {
-        let _ = handle.tcn(pts.clone(), spec.points).unwrap();
-    });
-    let tcn_flops = 2.0
-        * spec.points as f64
-        * (58.0 * 232.0 + 232.0 * 464.0 + 464.0 * 232.0 + 232.0 * 58.0);
-    println!(
-        "tcn exec        [{} pts]    {st}  ({:.2} GFLOP/s)",
-        spec.points,
-        tcn_flops / st.mean_s / 1e9
-    );
+    println!("== perf_hotpaths (kernel before/after, {threads} cores)");
 
-    // --- entropy coding ---------------------------------------------------
+    // --- guarantee / PCA kernel -------------------------------------------
+    // synthetic residuals with low-dim structure (like AE errors); sized so
+    // nearly every block is above tau and the projection dominates (the
+    // shared Jacobi eigensolve is O(d^3), so enough blocks are needed for
+    // the per-block work to be the signal)
+    let (n_blocks, d) = (2048usize, 80usize);
     let mut rng = Prng::new(1);
-    let syms: Vec<i64> = (0..1_000_000)
-        .map(|_| (rng.normal() * 3.0) as i64)
+    let dirs: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..d).map(|_| rng.normal() as f32).collect())
         .collect();
-    let st = bench(1, 5, || {
-        let _ = IntCodec::encode(&syms).unwrap();
-    });
-    println!(
-        "huffman encode  [1M syms]    {st}  ({:.1} Msym/s)",
-        1.0 / st.mean_s
-    );
-    let enc = IntCodec::encode(&syms).unwrap();
-    let st = bench(1, 5, || {
-        let _ = IntCodec::decode(&enc).unwrap();
-    });
-    println!(
-        "huffman decode  [1M syms]    {st}  ({:.1} Msym/s)",
-        1.0 / st.mean_s
-    );
-
-    // --- PCA + guarantee --------------------------------------------------
-    let grid = BlockGrid::for_dataset(ds, BlockShape::default()).unwrap();
-    let n_blocks = grid.n_blocks();
-    let d = grid.shape.d();
-    let mut orig_s = vec![0.0f32; n_blocks * d];
-    let mut recon_s = vec![0.0f32; n_blocks * d];
+    let orig: Vec<f32> = (0..n_blocks * d).map(|_| rng.normal() as f32).collect();
+    let mut recon = orig.clone();
     for b in 0..n_blocks {
-        grid.gather_species(&ds.mass, b, 5, &mut orig_s[b * d..(b + 1) * d]);
-    }
-    let mut rng = Prng::new(2);
-    for (r, o) in recon_s.iter_mut().zip(&orig_s) {
-        *r = o + 1e-4 * rng.normal() as f32;
-    }
-    let params = GuaranteeParams::for_tau(1e-3 * (d as f64).sqrt(), d);
-    let st = bench(1, 3, || {
-        let _ = guarantee_species(&orig_s, &recon_s, n_blocks, d, &params);
-    });
-    println!(
-        "guarantee pass  [{} blocks, 1 species]  {st}  ({:.0} blocks/s)",
-        n_blocks,
-        st.throughput(n_blocks as f64)
-    );
-
-    // --- block gather/scatter ----------------------------------------------
-    let mut inst = vec![0.0f32; grid.instance_len()];
-    let st = bench(1, 5, || {
-        for b in 0..n_blocks {
-            grid.gather(&ds.mass, b, &mut inst);
+        for dir in &dirs {
+            let c = rng.normal() as f32 * 0.3;
+            for i in 0..d {
+                recon[b * d + i] += c * dir[i];
+            }
         }
-    });
-    println!(
-        "block gather    [{} blocks]  {st}  ({:.1} GB/s)",
-        n_blocks,
-        (n_blocks * grid.instance_len() * 4) as f64 / st.mean_s / 1e9
-    );
-
-    // --- SZ predictors ------------------------------------------------------
-    let field = ds.species_field(5);
-    for mode in [SzMode::Lorenzo, SzMode::Interp] {
-        let st = bench(1, 3, || {
-            let _ = sz_compress(&field.data, (ds.nt, ds.ny, ds.nx), 1e-5, mode).unwrap();
-        });
-        println!(
-            "sz {:<12} [1 species]  {st}  ({:.1} MB/s)",
-            format!("{mode:?}"),
-            (field.data.len() * 4) as f64 / st.mean_s / 1e6
-        );
     }
+    let params = GuaranteeParams::for_tau(0.05, d);
 
-    // --- end-to-end ----------------------------------------------------------
-    let comp = env.compressor(&handle);
-    let opts = CompressOptions {
-        nrmse_target: 1e-3,
-        ..Default::default()
-    };
-    let st = bench(0, 2, || {
-        let _ = comp.compress(ds, &opts).unwrap();
+    // bit-identity contract first, then the clocks
+    let (new_res, _) = guarantee_species_timed(&orig, &recon, n_blocks, d, &params, threads);
+    let (old_blocks, old_maxres, old_ncoeffs) =
+        baseline::guarantee_species(&orig, &recon, n_blocks, d, &params);
+    assert_eq!(new_res.per_block, old_blocks, "guarantee kernels diverged");
+    assert_eq!(new_res.max_residual.to_bits(), old_maxres.to_bits());
+    assert_eq!(new_res.n_coeffs, old_ncoeffs);
+
+    let st_old = bench(1, reps, || {
+        let _ = baseline::guarantee_species(&orig, &recon, n_blocks, d, &params);
+    });
+    let st_new = bench(1, reps, || {
+        let _ = guarantee_species_timed(&orig, &recon, n_blocks, d, &params, threads);
     });
     println!(
-        "GBATC compress  [end-to-end]  {st}  ({:.1} MB/s)",
-        ds.pd_bytes() as f64 / st.mean_s / 1e6
+        "guarantee pass  [{n_blocks} blocks x {d}]  before {}  after {}  ({:.2}x)",
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
     );
-    let report = comp.compress(ds, &opts).unwrap();
-    let st = bench(0, 2, || {
-        let _ = comp.decompress(&report.archive, 0).unwrap();
+    rows.push(SpeedupRow {
+        kernel: "guarantee",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // --- PCA covariance fit (stripe-parallel, bit-identical) ---------------
+    let residuals: Vec<f32> = orig.iter().zip(&recon).map(|(a, b)| a - b).collect();
+    let seq = Pca::fit_threads(&residuals, n_blocks, d, false, 1);
+    let par = Pca::fit_threads(&residuals, n_blocks, d, false, threads);
+    assert_eq!(seq.basis.data, par.basis.data, "parallel PCA diverged");
+    let st_old = bench(1, reps, || {
+        let _ = Pca::fit_threads(&residuals, n_blocks, d, false, 1);
+    });
+    let st_new = bench(1, reps, || {
+        let _ = Pca::fit_threads(&residuals, n_blocks, d, false, threads);
     });
     println!(
-        "GBATC decompress[end-to-end]  {st}  ({:.1} MB/s)",
-        ds.pd_bytes() as f64 / st.mean_s / 1e6
+        "pca fit         [{n_blocks} x {d}]  before {}  after {}  ({:.2}x)",
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
     );
-    let szc = SzCompressor::new(SzCompressOptions::default());
-    let st = bench(0, 2, || {
-        let _ = szc.compress(ds, 1e-3).unwrap();
+    rows.push(SpeedupRow {
+        kernel: "pca_fit",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // --- Huffman decode / encode ------------------------------------------
+    let mut rng = Prng::new(2);
+    let n_syms = 1_000_000usize;
+    let symbols: Vec<u32> = (0..n_syms)
+        .map(|_| ((rng.normal() * 3.0).round().abs() as u32).min(31))
+        .collect();
+    let mut counts = vec![0u64; 32];
+    for &s in &symbols {
+        counts[s as usize] += 1;
+    }
+    let huff = Huffman::from_counts(&counts).expect("huffman");
+    let mut w = BitWriter::new();
+    for &s in &symbols {
+        huff.encode_symbol(&mut w, s);
+    }
+    let bytes = w.finish();
+    let walk = baseline::canonical_walk_tables(&huff.lens);
+
+    // equality contract: old and new decoders agree symbol for symbol
+    {
+        let mut fast = BitReader::new(&bytes);
+        let mut slow = baseline::OldBitReader::new(&bytes);
+        for (i, &want) in symbols.iter().enumerate() {
+            let a = huff.decode_symbol(&mut fast).expect("decode");
+            let b = baseline::decode_symbol(&walk, &mut slow).expect("decode");
+            assert_eq!(a, b, "symbol {i}");
+            assert_eq!(a, want, "symbol {i}");
+        }
+    }
+    let st_old = bench(1, reps, || {
+        let mut r = baseline::OldBitReader::new(&bytes);
+        let mut acc = 0u64;
+        for _ in 0..n_syms {
+            acc = acc.wrapping_add(baseline::decode_symbol(&walk, &mut r).unwrap() as u64);
+        }
+        std::hint::black_box(acc);
+    });
+    let st_new = bench(1, reps, || {
+        let mut r = BitReader::new(&bytes);
+        let mut acc = 0u64;
+        for _ in 0..n_syms {
+            acc = acc.wrapping_add(huff.decode_symbol(&mut r).unwrap() as u64);
+        }
+        std::hint::black_box(acc);
     });
     println!(
-        "SZ compress     [end-to-end]  {st}  ({:.1} MB/s)",
-        ds.pd_bytes() as f64 / st.mean_s / 1e6
+        "huffman decode  [1M syms]  before {}  after {}  ({:.2}x)",
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
     );
+    rows.push(SpeedupRow {
+        kernel: "huffman_decode",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // byte-identity of the accumulator encoder, then the clocks
+    {
+        let mut slow = BitWriter::new();
+        for &s in &symbols[..10_000] {
+            baseline::encode_symbol(&mut slow, huff.codes[s as usize], huff.lens[s as usize]);
+        }
+        let mut fast = BitWriter::new();
+        for &s in &symbols[..10_000] {
+            huff.encode_symbol(&mut fast, s);
+        }
+        assert_eq!(slow.finish(), fast.finish(), "encoders diverged");
+    }
+    let st_old = bench(1, reps, || {
+        let mut w = BitWriter::new();
+        for &s in &symbols {
+            baseline::encode_symbol(&mut w, huff.codes[s as usize], huff.lens[s as usize]);
+        }
+        std::hint::black_box(w.finish());
+    });
+    let st_new = bench(1, reps, || {
+        let mut w = BitWriter::new();
+        for &s in &symbols {
+            huff.encode_symbol(&mut w, s);
+        }
+        std::hint::black_box(w.finish());
+    });
+    println!(
+        "huffman encode  [1M syms]  before {}  after {}  ({:.2}x)",
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
+    );
+    rows.push(SpeedupRow {
+        kernel: "huffman_encode",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // --- planner: auto vs single-codec wall time ---------------------------
+    eprintln!("[bench] generating {profile:?} dataset...");
+    let ds = generate(profile, 42);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4)
+        .expect("reference service");
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let mut singles: Vec<(&'static str, usize, f64)> = Vec::new();
+    let mut auto_s = 0.0f64;
+    let mut auto_stages = String::new();
+    let mut stage_json = String::new();
+    for (name, codec) in [
+        ("gbatc", CodecChoice::Gbatc),
+        ("sz", CodecChoice::Sz),
+        ("dense", CodecChoice::Dense),
+        ("auto", CodecChoice::Auto),
+    ] {
+        let opts = CompressOptions {
+            nrmse_target: 1e-3,
+            kt_window: 4,
+            codec,
+            ..Default::default()
+        };
+        let t = Timer::start();
+        let report = comp.compress(&ds, &opts).expect("compress");
+        let wall = t.secs();
+        println!(
+            "compress {name:>6}  {:>10} B  {wall:>7.2}s  [{}]",
+            report.archive.total_bytes(),
+            report.stage_times
+        );
+        if name == "auto" {
+            auto_s = wall;
+            auto_stages = report.stage_times.to_string();
+            let st = report.stage_times;
+            stage_json = format!(
+                "{{\"kernel\": \"stage_times\", \"pca_fit_s\": {:.4}, \"guarantee_s\": {:.4}, \
+                 \"entropy_s\": {:.4}, \"planner_trials_s\": {:.4}}}",
+                st.pca_fit_s, st.guarantee_s, st.entropy_s, st.planner_trials_s
+            );
+        } else {
+            singles.push((name, report.archive.total_bytes(), wall));
+        }
+    }
+    // "best single codec" = the one you would otherwise run: smallest bytes
+    let &(best_name, _, best_s) = singles
+        .iter()
+        .min_by_key(|&&(_, bytes, _)| bytes)
+        .expect("singles");
+    let ratio = auto_s / best_s.max(1e-9);
+    // "trials and nothing more": auto runs the union of the single-codec
+    // stages once (one normalize, one model pass, zero-recompute trials,
+    // memoized bytes) — so it must not exceed the three single runs
+    // combined.  This is the machine-robust gate; the 1.2x-of-best figure
+    // is recorded and strict-asserted.
+    let sum_s: f64 = singles.iter().map(|&(_, _, s)| s).sum();
+    let ratio_vs_sum = auto_s / sum_s.max(1e-9);
+    println!(
+        "planner: auto {auto_s:.2}s vs best single ({best_name}) {best_s:.2}s -> {ratio:.2}x \
+         | vs all singles combined {sum_s:.2}s -> {ratio_vs_sum:.2}x"
+    );
+    println!("auto stage attribution: {auto_stages}");
+
+    // --- JSON artifact -----------------------------------------------------
+    let mut json = String::from("[\n");
+    for r in &rows {
+        json.push_str(&format!(
+            "  {{\"kernel\": \"{}\", \"baseline_ms\": {:.4}, \"optimized_ms\": {:.4}, \
+             \"speedup\": {:.3}}},\n",
+            r.kernel,
+            r.baseline_ms,
+            r.optimized_ms,
+            r.speedup()
+        ));
+    }
+    json.push_str(&format!(
+        "  {{\"kernel\": \"planner_auto\", \"auto_s\": {auto_s:.4}, \
+         \"best_single\": \"{best_name}\", \"best_single_s\": {best_s:.4}, \
+         \"ratio\": {ratio:.3}}},\n"
+    ));
+    json.push_str(&format!(
+        "  {{\"kernel\": \"planner_auto_vs_sum\", \"auto_s\": {auto_s:.4}, \
+         \"singles_sum_s\": {sum_s:.4}, \"ratio\": {ratio_vs_sum:.3}}},\n"
+    ));
+    json.push_str(&format!("  {stage_json}\n]\n"));
+    std::fs::write(&out_path, &json).expect("write bench json");
+    println!("wrote {out_path}");
+
+    if strict {
+        let get = |k: &str| rows.iter().find(|r| r.kernel == k).unwrap().speedup();
+        assert!(get("guarantee") >= 2.0, "guarantee < 2x: {}", get("guarantee"));
+        assert!(
+            get("huffman_decode") >= 3.0,
+            "huffman decode < 3x: {}",
+            get("huffman_decode")
+        );
+        assert!(ratio <= 1.2, "auto {ratio:.2}x > 1.2x of best single-codec");
+    }
 }

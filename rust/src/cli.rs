@@ -88,7 +88,9 @@ COMMANDS:
               smallest encoding certifying the NRMSE bound (mixed-codec
               v3 container; all-GBATC archives stay v2).  --v1 emits the
               legacy single-shot GBA1 container (needs kt-window >= T and
-              --codec gbatc).
+              --codec gbatc).  The report prints per-stage wall times
+              (PCA fit, guarantee loop, entropy encode, planner trials)
+              for perf attribution.
   decompress  --input <gba> --output <sdf> [--artifacts DIR | --reference]
               [--threads N] [--temp-from <sdf>]
               Reconstruct mass fractions (temperature copied from

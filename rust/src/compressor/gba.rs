@@ -14,6 +14,7 @@ use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
 use crate::compressor::registry::CodecChoice;
 use crate::compressor::traits::Compressor;
 use crate::coordinator::engine::{RangeDecode, ShardEngine};
+use crate::coordinator::progress::StageTimes;
 use crate::coordinator::scheduler::par_for;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
@@ -113,6 +114,9 @@ pub struct CompressReport {
     /// High-water mark of the engine's shard working sets (bytes) — the
     /// memory the run needed beyond the input field itself.
     pub peak_workspace_bytes: usize,
+    /// Per-stage wall-time attribution (PCA fit, guarantee loop, entropy
+    /// encode, planner trials), summed across workers.
+    pub stage_times: StageTimes,
     pub elapsed_s: f64,
     pub progress_summary: String,
 }

@@ -13,7 +13,7 @@ pub use accounting::SizeBreakdown;
 pub use gba::{CompressOptions, CompressReport, GbatcCompressor};
 pub use registry::{
     CodecChoice, DensePlaneCodec, GbatcShardCodec, SectionCodec, SectionEncoding, SectionView,
-    SzSectionCodec,
+    SzSectionCodec, TrialCache,
 };
 pub use szc::{SzCompressOptions, SzCompressor, SzArchive};
 pub use traits::Compressor;

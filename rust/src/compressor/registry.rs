@@ -8,8 +8,8 @@
 //! | tag | stage                | needs shard latent plane | trial cost |
 //! |-----|----------------------|--------------------------|------------|
 //! | 0   | [`GbatcShardCodec`]  | yes (shared per shard)   | shared-model trial: the AE encode + decode (+ TCN) runs once per shard; per species only the Algorithm-1 guarantee is re-run |
-//! | 1   | [`SzSectionCodec`]   | no                       | full trial: predictor encode + decode + measured NRMSE |
-//! | 2   | [`DensePlaneCodec`]  | no                       | full trial: uniform quantize + bit-pack + measured NRMSE |
+//! | 1   | [`SzSectionCodec`]   | no                       | encode-only trial: the predictor's working buffer *is* the decode, so the NRMSE measure pays no decode pass |
+//! | 2   | [`DensePlaneCodec`]  | no                       | encode-only trial: quantize + bit-pack with the error measured in the same sweep |
 //!
 //! All stages operate in *normalized* units (per-species [0, 1] with the
 //! global ranges), so the engine's shared denormalize step applies
@@ -32,8 +32,8 @@ use crate::codec::CoeffCodec;
 use crate::compressor::gba::effective_bin;
 use crate::data::blocks::BlockGrid;
 use crate::error::{Error, Result};
-use crate::gae::guarantee::{apply_correction, guarantee_species, GuaranteeParams};
-use crate::sz::codec::{sz_compress, sz_decompress, SzMode};
+use crate::gae::guarantee::{apply_correction, guarantee_species_timed, GuaranteeParams};
+use crate::sz::codec::{sz_compress_with_recon, sz_decompress, SzMode};
 use crate::sz::SzField;
 use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::{BitReader, BitWriter};
@@ -170,12 +170,13 @@ impl SectionCodec for SzSectionCodec {
         }
         let dims = (view.nt, view.ny, view.nx);
         // uniform quantization error in [-eb, eb] gives RMSE ≈ eb/√3 in
-        // normalized units; certify by measuring the actual trial decode,
-        // tightening when the error budget saturates
+        // normalized units; certify by measuring the reconstruction the
+        // compressor already tracked (bit-identical to a decode pass —
+        // zero-recompute trial), tightening when the error budget
+        // saturates
         let mut eb = (3f64.sqrt() * budget).max(1e-300);
         for _ in 0..4 {
-            let field = sz_compress(view.norm, dims, eb, self.mode)?;
-            let back = sz_decompress(&field)?;
+            let (field, back) = sz_compress_with_recon(view.norm, dims, eb, self.mode)?;
             let nrmse = plane_rmse(view.norm, &back);
             if nrmse <= budget {
                 let mode = match field.mode {
@@ -375,13 +376,19 @@ impl SectionCodec for DensePlaneCodec {
 // GBATC stage (tag 0)
 // ---------------------------------------------------------------------------
 
-/// Guarantee-pass statistics of one GBATC section (size-breakdown and
-/// report accounting).
+/// Guarantee-pass statistics of one GBATC section (size-breakdown,
+/// report accounting, and per-stage wall-time attribution).
 pub struct GbatcSectionStats {
     pub max_residual: f64,
     pub n_coeffs: usize,
     pub bases_bytes: usize,
     pub coeff_bytes: usize,
+    /// PCA covariance fit + eigendecomposition time.
+    pub pca_fit_ns: u64,
+    /// Projection + greedy coefficient loop time.
+    pub guarantee_ns: u64,
+    /// Coefficient entropy-encode time.
+    pub entropy_ns: u64,
 }
 
 /// GBATC as a registry stage, bound to one shard's shared-model trial:
@@ -397,6 +404,9 @@ pub struct GbatcShardCodec<'a> {
     /// Shared-model reconstruction of the shard, `[nt, S, Y, X]`.
     pub recon: &'a [f32],
     pub params: GuaranteeParams,
+    /// Thread budget for each species' PCA covariance fit (bit-identical
+    /// for any value; see `Pca::fit_threads`).
+    pub pca_threads: usize,
 }
 
 impl GbatcShardCodec<'_> {
@@ -412,13 +422,24 @@ impl GbatcShardCodec<'_> {
             grid.gather_species(self.norm, b, s, &mut orig_s[b * d..(b + 1) * d]);
             grid.gather_species(self.recon, b, s, &mut recon_s[b * d..(b + 1) * d]);
         }
-        let res = guarantee_species(&orig_s, &recon_s, nb, d, &self.params);
+        let (res, times) = guarantee_species_timed(
+            &orig_s,
+            &recon_s,
+            nb,
+            d,
+            &self.params,
+            self.pca_threads.max(1),
+        );
+        let t_ent = std::time::Instant::now();
         let coeffs = CoeffCodec::encode(&res.per_block, d, effective_bin(&self.params, d))?;
         let stats = GbatcSectionStats {
             max_residual: res.max_residual,
             n_coeffs: res.n_coeffs,
             bases_bytes: res.basis.payload_bytes(),
             coeff_bytes: coeffs.len(),
+            pca_fit_ns: times.pca_fit_ns,
+            guarantee_ns: times.loop_ns,
+            entropy_ns: t_ent.elapsed().as_nanos() as u64,
         };
         let sec = SpeciesSection {
             basis: res.basis,
@@ -535,6 +556,84 @@ pub fn decode_stage(tag: CodecTag) -> Result<&'static dyn SectionCodec> {
 pub struct SectionPlan {
     pub gbatc: Option<usize>,
     pub alt: Option<(CodecTag, usize)>,
+}
+
+/// Memoized trial outcomes of one (shard, species): one slot per registry
+/// stage, filled during the trial pass and drained by the archive writer.
+///
+/// Lifetime: a cache lives from the trial pass until its shard is
+/// assembled — [`plan_shard`]/[`plan_archive`] read only sizes from it,
+/// and the winning stage's *bytes* are emitted verbatim with
+/// [`Self::take`], so `--codec auto` costs exactly the trials and nothing
+/// more (no re-encode of the chosen stage).
+#[derive(Default)]
+pub struct TrialCache {
+    slots: [Option<SectionEncoding>; 3],
+}
+
+impl TrialCache {
+    pub fn new() -> TrialCache {
+        TrialCache::default()
+    }
+
+    /// Memoize one stage's trial (replacing an earlier trial of the same
+    /// stage).
+    pub fn insert(&mut self, enc: SectionEncoding) {
+        self.slots[enc.tag as usize] = Some(enc);
+    }
+
+    pub fn get(&self, tag: CodecTag) -> Option<&SectionEncoding> {
+        self.slots[tag as usize].as_ref()
+    }
+
+    /// Hand the winning encoding to the archive writer (consuming it).
+    pub fn take(&mut self, tag: CodecTag) -> Option<SectionEncoding> {
+        self.slots[tag as usize].take()
+    }
+
+    /// Smallest memoized self-contained (non-GBATC) trial.  Ties prefer
+    /// SZ, matching the pre-cache planner's choice so archives stay
+    /// byte-identical.
+    pub fn best_alt(&self) -> Option<(CodecTag, usize)> {
+        let mut best: Option<(CodecTag, usize)> = None;
+        for tag in [CodecTag::Sz, CodecTag::Dense] {
+            if let Some(e) = self.get(tag) {
+                let len = e.bytes.len();
+                match best {
+                    Some((_, b)) if b <= len => {}
+                    _ => best = Some((tag, len)),
+                }
+            }
+        }
+        best
+    }
+
+    /// Drop any memoized self-contained trial that [`Self::best_alt`] can
+    /// never select (the larger of SZ/dense).  The planner only ever
+    /// drains the winner, so evicting the loser frees its bytes during
+    /// the archive-level planning wait without changing any choice.
+    pub fn evict_losing_alt(&mut self) {
+        if let Some((keep, _)) = self.best_alt() {
+            for tag in [CodecTag::Sz, CodecTag::Dense] {
+                if tag != keep {
+                    self.slots[tag as usize] = None;
+                }
+            }
+        }
+    }
+
+    /// The planner's per-species cost row; `gbatc_certified` gates the
+    /// GBATC candidate (an uncertified section is never selectable).
+    pub fn plan(&self, gbatc_certified: bool) -> SectionPlan {
+        SectionPlan {
+            gbatc: if gbatc_certified {
+                self.get(CodecTag::Gbatc).map(|e| e.bytes.len())
+            } else {
+                None
+            },
+            alt: self.best_alt(),
+        }
+    }
 }
 
 /// Pick the byte-minimal codec assignment for one shard.
@@ -731,6 +830,7 @@ mod tests {
             norm: &norm,
             recon: &recon,
             params,
+            pca_threads: 1,
         };
         let npix = ny * nx;
         for s in 0..ns {
@@ -828,6 +928,38 @@ mod tests {
         // a section without any certified alternative pins the model
         let pinned = vec![(10usize, vec![SectionPlan { gbatc: Some(50), alt: None }])];
         assert_eq!(plan_archive(&pinned, 1000)[0].1, vec![CodecTag::Gbatc]);
+    }
+
+    #[test]
+    fn trial_cache_memoizes_and_drains() {
+        let enc = |tag: CodecTag, n: usize| SectionEncoding {
+            tag,
+            bytes: vec![0u8; n],
+            nrmse: 1e-4,
+        };
+        let mut cache = TrialCache::new();
+        assert!(cache.best_alt().is_none());
+        cache.insert(enc(CodecTag::Gbatc, 50));
+        cache.insert(enc(CodecTag::Dense, 40));
+        cache.insert(enc(CodecTag::Sz, 60));
+        // certified GBATC + cheaper dense alternative
+        let plan = cache.plan(true);
+        assert_eq!(plan.gbatc, Some(50));
+        assert_eq!(plan.alt, Some((CodecTag::Dense, 40)));
+        // uncertified GBATC never becomes a candidate
+        assert_eq!(cache.plan(false).gbatc, None);
+        // ties prefer SZ (the pre-cache planner's choice)
+        cache.insert(enc(CodecTag::Sz, 40));
+        assert_eq!(cache.best_alt(), Some((CodecTag::Sz, 40)));
+        // evicting the losing alternative frees it without changing the plan
+        cache.evict_losing_alt();
+        assert!(cache.get(CodecTag::Dense).is_none());
+        assert_eq!(cache.best_alt(), Some((CodecTag::Sz, 40)));
+        // the winner drains as the exact trial bytes — no re-encode
+        let won = cache.take(CodecTag::Sz).expect("memoized");
+        assert_eq!(won.bytes.len(), 40);
+        assert!(cache.take(CodecTag::Sz).is_none());
+        assert!(cache.get(CodecTag::Gbatc).is_some());
     }
 
     #[test]

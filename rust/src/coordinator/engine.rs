@@ -39,10 +39,10 @@ use crate::compressor::gba::{
 };
 use crate::compressor::registry::{
     self, plan_archive, CodecChoice, GbatcSectionStats, GbatcShardCodec, SectionCodec,
-    SectionEncoding, SectionPlan, SectionView, DENSE_STAGE, SZ_STAGE,
+    SectionEncoding, SectionPlan, SectionView, TrialCache, DENSE_STAGE, SZ_STAGE,
 };
 use crate::coordinator::scheduler::{par_try_for, par_try_map};
-use crate::coordinator::{Pipeline, Progress};
+use crate::coordinator::{Pipeline, Progress, StageClock};
 use crate::data::blocks::{BlockGrid, BlockShape};
 use crate::data::shards::ShardPlan;
 use crate::data::Dataset;
@@ -166,16 +166,18 @@ struct ShardOut {
     alt_bytes: usize,
 }
 
-/// Per-species trial outcome of one shard (GBATC section + the best
-/// self-contained alternative when the planner runs).
+/// Per-species trial outcome of one shard: every stage's memoized
+/// encoding (GBATC always; SZ/dense when the planner runs) plus the
+/// guarantee stats for report accounting.
 struct SpeciesTrial {
-    gbatc_bytes: Vec<u8>,
+    /// Memoized per-stage encodings; the archive writer drains the
+    /// winning stage's bytes from here — nothing is re-encoded.
+    trials: TrialCache,
     stats: GbatcSectionStats,
     /// Whether the guarantee loop actually reached τ on this section
     /// (false only on pathological inputs); the planner never selects an
     /// uncertified GBATC candidate.
     gbatc_certified: bool,
-    alt: Option<SectionEncoding>,
 }
 
 /// One shard's outcome from the parallel pass: already-final payloads
@@ -207,20 +209,22 @@ fn assemble_shard(
     let mut coeff_bytes = 0usize;
     let mut alt_bytes = 0usize;
     let mut sec_bytes = Vec::with_capacity(trials.len());
-    for (tr, &tag) in trials.into_iter().zip(&tags) {
+    for (mut tr, &tag) in trials.into_iter().zip(&tags) {
+        // emit the memoized trial bytes verbatim — the planner's choice
+        // never costs a re-encode
+        let enc = tr
+            .trials
+            .take(tag)
+            .ok_or_else(|| Error::runtime("planner chose a stage with no memoized trial"))?;
         if tag == CodecTag::Gbatc {
             max_residual = max_residual.max(tr.stats.max_residual);
             n_coeffs += tr.stats.n_coeffs;
             bases_bytes += tr.stats.bases_bytes;
             coeff_bytes += tr.stats.coeff_bytes;
-            sec_bytes.push(tr.gbatc_bytes);
         } else {
-            let enc = tr
-                .alt
-                .ok_or_else(|| Error::runtime("planner chose a missing alternative"))?;
             alt_bytes += enc.bytes.len();
-            sec_bytes.push(enc.bytes);
         }
+        sec_bytes.push(enc.bytes);
     }
     let latent_blob = if keep_latent { latent_blob } else { Vec::new() };
     let latent_bytes = latent_blob.len();
@@ -294,6 +298,10 @@ impl<'a> ShardEngine<'a> {
             queue_depth: opts.queue_depth,
         };
         let meter = WorkspaceMeter::new();
+        let clock = StageClock::new();
+        // species run concurrently inside a shard; leftover cores go to
+        // each species' PCA covariance fit (bit-identical at any count)
+        let pca_threads = (inner_threads / ds.ns.min(inner_threads).max(1)).max(1);
 
         // self-contained stages certify against the same 0.1%-conservative
         // budget, so the f32 denormalize round trip cannot break the bound
@@ -384,8 +392,10 @@ impl<'a> ShardEngine<'a> {
 
             // 2. shared-model trial: AE encode -> latents -> quantize + Huffman
             let latents = pipeline.encode_all(&grid, &norm, self.handle, &progress)?;
+            let t_ent = std::time::Instant::now();
             let (latent_blob, deq) =
                 LatentCodec::encode(&latents, nb, spec.latent, opts.latent_bin)?;
+            clock.add_ns(&clock.entropy_ns, t_ent.elapsed().as_nanos() as u64);
             drop(latents);
 
             // 3. decode (+ TCN) from the *dequantized* latents — exactly
@@ -400,13 +410,24 @@ impl<'a> ShardEngine<'a> {
                 norm: &norm,
                 recon: &recon,
                 params,
+                pca_threads,
             };
             let auto = opts.codec == CodecChoice::Auto;
             let trials: Vec<SpeciesTrial> = par_try_map(ds.ns, inner_threads, |s| {
                 let t = std::time::Instant::now();
                 let (gbatc_bytes, stats) = gbatc.encode_species(s)?;
                 let gbatc_certified = stats.max_residual <= params.tau + 1e-12;
-                let alt = if auto {
+                clock.add_ns(&clock.pca_fit_ns, stats.pca_fit_ns);
+                clock.add_ns(&clock.guarantee_ns, stats.guarantee_ns);
+                clock.add_ns(&clock.entropy_ns, stats.entropy_ns);
+                let mut trials = TrialCache::new();
+                trials.insert(SectionEncoding {
+                    tag: CodecTag::Gbatc,
+                    bytes: gbatc_bytes,
+                    nrmse: stats.max_residual / (d as f64).sqrt(),
+                });
+                if auto {
+                    let t_trial = std::time::Instant::now();
                     let plane = registry::gather_plane(&norm, w.nt, ds.ns, npix, s);
                     let sv = SectionView {
                         species: s,
@@ -415,30 +436,30 @@ impl<'a> ShardEngine<'a> {
                         nx: ds.nx,
                         norm: &plane,
                     };
-                    let sz = SZ_STAGE.encode(&sv, budget)?;
-                    let dn = DENSE_STAGE.encode(&sv, budget)?;
-                    match (sz, dn) {
-                        (Some(a), Some(b)) => {
-                            Some(if a.bytes.len() <= b.bytes.len() { a } else { b })
-                        }
-                        (a, b) => a.or(b),
+                    if let Some(enc) = SZ_STAGE.encode(&sv, budget)? {
+                        trials.insert(enc);
                     }
-                } else {
-                    None
-                };
-                if auto && !gbatc_certified && alt.is_none() {
-                    return Err(Error::guarantee(format!(
-                        "no stage certifies NRMSE {:.3e} on shard t0 {} species {s}",
-                        opts.nrmse_target, w.t0
-                    )));
+                    if let Some(enc) = DENSE_STAGE.encode(&sv, budget)? {
+                        trials.insert(enc);
+                    }
+                    // only best_alt's winner is ever selectable — free the
+                    // losing alternative's bytes before the archive-level
+                    // planning wait
+                    trials.evict_losing_alt();
+                    clock.add_ns(&clock.planner_trials_ns, t_trial.elapsed().as_nanos() as u64);
+                    if !gbatc_certified && trials.best_alt().is_none() {
+                        return Err(Error::guarantee(format!(
+                            "no stage certifies NRMSE {:.3e} on shard t0 {} species {s}",
+                            opts.nrmse_target, w.t0
+                        )));
+                    }
                 }
                 progress.add(&progress.species_guaranteed, 1);
                 progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
                 Ok(SpeciesTrial {
-                    gbatc_bytes,
+                    trials,
                     stats,
                     gbatc_certified,
-                    alt,
                 })
             })?;
 
@@ -489,10 +510,7 @@ impl<'a> ShardEngine<'a> {
                 .map(|(_, _, latent_blob, trials)| {
                     let plans = trials
                         .iter()
-                        .map(|tr| SectionPlan {
-                            gbatc: tr.gbatc_certified.then_some(tr.gbatc_bytes.len()),
-                            alt: tr.alt.as_ref().map(|e| (e.tag, e.bytes.len())),
-                        })
+                        .map(|tr| tr.trials.plan(tr.gbatc_certified))
                         .collect();
                     (latent_blob.len(), plans)
                 })
@@ -565,6 +583,7 @@ impl<'a> ShardEngine<'a> {
             n_coeffs,
             n_shards,
             peak_workspace_bytes: meter.peak_bytes(),
+            stage_times: clock.snapshot(),
             elapsed_s: progress.elapsed_s(),
             progress_summary: progress.summary(),
         })

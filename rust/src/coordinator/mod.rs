@@ -13,5 +13,5 @@ pub mod scheduler;
 pub use batcher::Batcher;
 pub use engine::{RangeDecode, ShardEngine, WorkspaceMeter};
 pub use pipeline::Pipeline;
-pub use progress::Progress;
+pub use progress::{Progress, StageClock, StageTimes};
 pub use scheduler::{par_for, par_map, par_try_for, par_try_map};

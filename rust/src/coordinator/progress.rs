@@ -56,9 +56,79 @@ impl Progress {
     }
 }
 
+/// Per-stage wall-time attribution of a compression run, summed across
+/// workers (so a stage can exceed the elapsed wall time on multi-core
+/// runs — it is "CPU-seconds spent in the stage").  Snapshotted into
+/// [`StageTimes`] on `CompressReport` so perf PRs have in-tree numbers.
+#[derive(Debug, Default)]
+pub struct StageClock {
+    /// PCA covariance fits + eigendecompositions.
+    pub pca_fit_ns: AtomicU64,
+    /// Guarantee projection + greedy coefficient loops.
+    pub guarantee_ns: AtomicU64,
+    /// Entropy encoding on the GBATC path (latent plane + coefficients).
+    pub entropy_ns: AtomicU64,
+    /// Self-contained stage trials run by the `--codec auto` planner.
+    pub planner_trials_ns: AtomicU64,
+}
+
+impl StageClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_ns(&self, counter: &AtomicU64, ns: u64) {
+        counter.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StageTimes {
+        StageTimes {
+            pca_fit_s: self.pca_fit_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            guarantee_s: self.guarantee_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            entropy_s: self.entropy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            planner_trials_s: self.planner_trials_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Snapshot of a [`StageClock`] in seconds — carried by `CompressReport`
+/// and printed by `gbatc compress` and the perf benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub pca_fit_s: f64,
+    pub guarantee_s: f64,
+    pub entropy_s: f64,
+    pub planner_trials_s: f64,
+}
+
+impl std::fmt::Display for StageTimes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "pca fit {:.3}s | guarantee loop {:.3}s | entropy encode {:.3}s | planner trials {:.3}s",
+            self.pca_fit_s, self.guarantee_s, self.entropy_s, self.planner_trials_s
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn stage_clock_snapshots_seconds() {
+        let c = StageClock::new();
+        c.add_ns(&c.pca_fit_ns, 1_500_000_000);
+        c.add_ns(&c.pca_fit_ns, 500_000_000);
+        c.add_ns(&c.planner_trials_ns, 250_000_000);
+        let t = c.snapshot();
+        assert!((t.pca_fit_s - 2.0).abs() < 1e-9);
+        assert!((t.planner_trials_s - 0.25).abs() < 1e-9);
+        assert_eq!(t.guarantee_s, 0.0);
+        let line = t.to_string();
+        assert!(line.contains("pca fit 2.000s"), "{line}");
+        assert!(line.contains("planner trials 0.250s"), "{line}");
+    }
 
     #[test]
     fn counters_accumulate() {

@@ -5,6 +5,16 @@
 //! wraps it for arbitrary `i64` symbol streams (quantized latents, PCA
 //! coefficients, SZ quantization bins): it builds the dictionary, encodes
 //! it (zigzag varints + lengths), and decodes without external state.
+//!
+//! Decoding is table-driven: the next [`TABLE_BITS`] stream bits index a
+//! prefix-lookup table holding `(symbol, length)` for every code short
+//! enough to fit, so the common case is one peek + one skip.  Codes longer
+//! than the table (rare tails of very skewed alphabets) fall back to the
+//! canonical bit-at-a-time walk, which is also the reference
+//! implementation the property tests compare against.  Encoding emits the
+//! bit-reversed canonical code with a single accumulator push instead of
+//! one call per bit.  Both directions produce/consume bit streams
+//! identical to the pre-table coder, so archive bytes are unchanged.
 
 use std::collections::BinaryHeap;
 use std::collections::HashMap;
@@ -16,6 +26,9 @@ use crate::util::{BitReader, BitWriter};
 /// Maximum code length we allow (bit-writer limit is 57).
 const MAX_LEN: u32 = 48;
 
+/// Width of the prefix-lookup decode table (4096 entries, 16 KiB).
+const TABLE_BITS: u32 = 12;
+
 /// Canonical Huffman code over a dense alphabet.
 #[derive(Clone, Debug)]
 pub struct Huffman {
@@ -23,12 +36,22 @@ pub struct Huffman {
     pub lens: Vec<u32>,
     /// Canonical code per symbol (MSB-first).
     pub codes: Vec<u64>,
+    /// Canonical code bit-reversed into the LSB-first stream order — one
+    /// `BitWriter::write` emits the same bits the MSB-first per-bit loop
+    /// used to.
+    codes_rev: Vec<u64>,
     // canonical decode tables, indexed by length l in 1..=max_len
     count: Vec<u64>,       // #codes of length l
     first_code: Vec<u64>,  // canonical first code of length l
     first_index: Vec<usize>, // index into sorted_symbols of first len-l symbol
     sorted_symbols: Vec<u32>,
     max_len: u32,
+    /// Prefix-lookup decode table indexed by the next `table_bits` stream
+    /// bits (LSB-first): entry = `sym << 8 | len`; 0 marks a code longer
+    /// than the table (slow path).  Empty when the alphabet is too wide
+    /// to pack (never in practice).
+    table: Vec<u32>,
+    table_bits: u32,
 }
 
 impl Huffman {
@@ -109,32 +132,90 @@ impl Huffman {
             codes[s as usize] = next[l];
             next[l] += 1;
         }
+
+        // bit-reversed codes: the stream stores the MSB-first code at
+        // ascending bit positions, which is exactly the l-bit reversal
+        let mut codes_rev = vec![0u64; lens.len()];
+        for &s in &sorted {
+            let l = lens[s as usize];
+            codes_rev[s as usize] = codes[s as usize].reverse_bits() >> (64 - l);
+        }
+
+        // prefix-lookup table: for a code of length l <= table_bits, every
+        // peeked value whose low l bits equal the reversed code decodes to
+        // that symbol — fill all 2^(table_bits - l) such slots
+        let mut table_bits = max_len.min(TABLE_BITS);
+        let table = if (lens.len() as u64) < (1u64 << 24) {
+            let mut t = vec![0u32; 1usize << table_bits];
+            for &s in &sorted {
+                let l = lens[s as usize];
+                if l > table_bits {
+                    continue;
+                }
+                let entry = (s << 8) | l;
+                let step = 1usize << l;
+                let mut slot = codes_rev[s as usize] as usize;
+                while slot < t.len() {
+                    t[slot] = entry;
+                    slot += step;
+                }
+            }
+            t
+        } else {
+            // symbols would not fit in sym << 8 — decode via the walk only
+            table_bits = 0;
+            Vec::new()
+        };
+
         Ok(Huffman {
             lens,
             codes,
+            codes_rev,
             count,
             first_code,
             first_index,
             sorted_symbols: sorted,
             max_len,
+            table,
+            table_bits,
         })
     }
 
-    /// Encode one symbol (MSB-first canonical code).
+    /// Encode one symbol (MSB-first canonical code) as a single
+    /// accumulator push of its bit-reversed form — the emitted bit stream
+    /// is identical to writing the code bit by bit.
     #[inline]
     pub fn encode_symbol(&self, w: &mut BitWriter, sym: u32) {
         let l = self.lens[sym as usize];
         debug_assert!(l > 0, "encoding absent symbol {sym}");
-        let code = self.codes[sym as usize];
-        // emit MSB-first so canonical decode works
-        for i in (0..l).rev() {
-            w.write_bit((code >> i) & 1 == 1);
-        }
+        w.write(self.codes_rev[sym as usize], l);
     }
 
-    /// Decode one symbol (canonical table walk, O(code length)).
+    /// Decode one symbol: a single prefix-table lookup for codes up to
+    /// `table_bits` long (the common case), the canonical walk for longer
+    /// codes and stream-end handling.
     #[inline]
     pub fn decode_symbol(&self, r: &mut BitReader) -> Result<u32> {
+        if self.table_bits > 0 {
+            let e = self.table[r.peek(self.table_bits) as usize];
+            let l = e & 0xFF;
+            if e != 0 && l as usize <= r.remaining() {
+                r.skip(l);
+                return Ok(e >> 8);
+            }
+            // e == 0: the prefix belongs to a code longer than the table
+            // (or to no code at all); l > remaining: the stream ends
+            // mid-symbol.  The exact walk below resolves both, erroring
+            // where the pre-table decoder did.
+        }
+        self.decode_symbol_walk(r)
+    }
+
+    /// Canonical bit-at-a-time decode — the pre-table reference
+    /// implementation, kept as the slow path for codes longer than
+    /// `table_bits` and as the oracle the property tests compare the
+    /// table-driven decoder against.
+    pub fn decode_symbol_walk(&self, r: &mut BitReader) -> Result<u32> {
         let mut code = 0u64;
         let mut l = 0usize;
         loop {
@@ -417,6 +498,164 @@ mod tests {
         for cut in [1usize, enc.len() / 2, enc.len() - 1] {
             let r = IntCodec::decode(&enc[..cut]);
             assert!(r.is_err() || r.unwrap() != vals);
+        }
+    }
+
+    /// Build a Huffman code from a random skewed histogram plus the
+    /// symbol stream drawn from it.
+    fn fuzz_code(rng: &mut Prng) -> (Huffman, Vec<u32>) {
+        let n_sym = 2 + rng.index(300);
+        // zipf-ish skew so both very short and very long codes appear
+        let counts: Vec<u64> = (0..n_sym)
+            .map(|i| {
+                let base = 1u64 + (1u64 << rng.index(20).min(19)) / (i as u64 + 1);
+                if rng.next_f64() < 0.1 {
+                    0
+                } else {
+                    base
+                }
+            })
+            .collect();
+        if counts.iter().all(|&c| c == 0) {
+            return fuzz_code(rng);
+        }
+        let huff = Huffman::from_counts(&counts).unwrap();
+        let present: Vec<u32> = (0..n_sym as u32)
+            .filter(|&s| huff.lens[s as usize] > 0)
+            .collect();
+        let stream: Vec<u32> = (0..rng.index(2000))
+            .map(|_| present[rng.index(present.len())])
+            .collect();
+        (huff, stream)
+    }
+
+    /// The table-driven decoder must be bit-identical to the canonical
+    /// walk (the pre-table implementation, kept as the slow path and the
+    /// oracle here) on fuzzed symbol streams: same symbols *and* the same
+    /// reader position after every symbol.
+    #[test]
+    fn prop_table_decode_matches_walk_oracle() {
+        let mut rng = Prng::new(23);
+        for case in 0..100 {
+            let (huff, stream) = fuzz_code(&mut rng);
+            let mut w = BitWriter::new();
+            for &s in &stream {
+                huff.encode_symbol(&mut w, s);
+            }
+            let bytes = w.finish();
+            let mut fast = BitReader::new(&bytes);
+            let mut walk = BitReader::new(&bytes);
+            for (i, &want) in stream.iter().enumerate() {
+                let a = huff.decode_symbol(&mut fast).unwrap();
+                let b = huff.decode_symbol_walk(&mut walk).unwrap();
+                assert_eq!(a, b, "case {case} symbol {i}: table vs walk");
+                assert_eq!(a, want, "case {case} symbol {i}: wrong symbol");
+                assert_eq!(
+                    fast.remaining(),
+                    walk.remaining(),
+                    "case {case} symbol {i}: reader positions diverged"
+                );
+            }
+        }
+    }
+
+    /// The single-write encoder must emit the same bytes as the
+    /// pre-overhaul MSB-first bit-by-bit loop.
+    #[test]
+    fn prop_single_write_encoder_is_bitwise_identical() {
+        let mut rng = Prng::new(31);
+        for _ in 0..50 {
+            let (huff, stream) = fuzz_code(&mut rng);
+            let mut fast = BitWriter::new();
+            let mut slow = BitWriter::new();
+            for &s in &stream {
+                huff.encode_symbol(&mut fast, s);
+                let l = huff.lens[s as usize];
+                let code = huff.codes[s as usize];
+                for i in (0..l).rev() {
+                    slow.write_bit((code >> i) & 1 == 1);
+                }
+            }
+            assert_eq!(fast.finish(), slow.finish());
+        }
+    }
+
+    /// Deep trees (codes longer than the 12-bit table) exercise the slow
+    /// path; Fibonacci-like weights force maximal depth.
+    #[test]
+    fn long_codes_roundtrip_through_slow_path() {
+        let mut counts = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for c in counts.iter_mut() {
+            *c = a;
+            let next = a.saturating_add(b);
+            b = a;
+            a = next;
+        }
+        let huff = Huffman::from_counts(&counts).unwrap();
+        assert!(
+            *huff.lens.iter().max().unwrap() > TABLE_BITS,
+            "tree not deep enough to test the slow path"
+        );
+        let mut rng = Prng::new(5);
+        let stream: Vec<u32> = (0..5000).map(|_| rng.index(40) as u32).collect();
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            huff.encode_symbol(&mut w, s);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        for &want in &stream {
+            assert_eq!(huff.decode_symbol(&mut r).unwrap(), want);
+        }
+    }
+
+    /// Truncated and corrupted bit streams through the word-refill reader:
+    /// the decoder must error (or misdecode) but never panic or read out
+    /// of bounds.
+    #[test]
+    fn truncated_and_corrupt_bits_are_errors_not_panics() {
+        let mut rng = Prng::new(57);
+        let (huff, stream) = fuzz_code(&mut rng);
+        if stream.is_empty() {
+            return;
+        }
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            huff.encode_symbol(&mut w, s);
+        }
+        let bytes = w.finish();
+        // truncation: decoding all symbols from a clipped stream must fail
+        // before producing more symbols than the bits can carry
+        for cut in [0usize, 1, bytes.len() / 2] {
+            let clipped = &bytes[..cut];
+            let mut r = BitReader::new(clipped);
+            let mut decoded = 0usize;
+            while decoded < stream.len() {
+                match huff.decode_symbol(&mut r) {
+                    Ok(_) => decoded += 1,
+                    Err(_) => break,
+                }
+            }
+            // every symbol costs at least one bit
+            assert!(
+                decoded <= clipped.len() * 8,
+                "decoded {decoded} symbols from {} bytes",
+                clipped.len()
+            );
+        }
+        // corruption: flip bytes, decode the full count — any outcome but
+        // a panic is acceptable
+        let mut corrupt = bytes.clone();
+        for _ in 0..8.min(corrupt.len()) {
+            let i = rng.index(corrupt.len());
+            corrupt[i] ^= rng.next_u64() as u8;
+        }
+        let mut r = BitReader::new(&corrupt);
+        for _ in 0..stream.len() {
+            if huff.decode_symbol(&mut r).is_err() {
+                break;
+            }
         }
     }
 }

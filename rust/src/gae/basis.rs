@@ -40,6 +40,17 @@ impl SpeciesBasis {
         &self.data[j * self.d..(j + 1) * self.d]
     }
 
+    /// Truncate to the first `rank` columns.  Column-major storage makes
+    /// this a prefix slice of `data` — bit-identical to re-running
+    /// [`Self::from_mat`] at the smaller rank, without converting the
+    /// whole matrix again.
+    pub fn truncated(mut self, rank: usize) -> SpeciesBasis {
+        let rank = rank.min(self.rank);
+        self.data.truncate(rank * self.d);
+        self.rank = rank;
+        self
+    }
+
     /// out += col(j) * c
     #[inline]
     pub fn axpy_col(&self, j: usize, c: f32, out: &mut [f32]) {
@@ -47,6 +58,24 @@ impl SpeciesBasis {
         for (o, &u) in out.iter_mut().zip(self.col(j)) {
             *o += c * u;
         }
+    }
+
+    /// out += col(j) * c, returning the updated ‖out‖₂² accumulated in
+    /// index order — the guarantee loop's axpy and residual re-measure
+    /// fused into one sweep.  Each out\[i\] is updated with the same f32
+    /// op as [`Self::axpy_col`] and the f64 sum of squares visits the
+    /// same values in the same order as a separate pass, so the result
+    /// is bit-identical to axpy-then-re-measure.
+    #[inline]
+    pub fn axpy_col_norm2(&self, j: usize, c: f32, out: &mut [f32]) -> f64 {
+        debug_assert_eq!(out.len(), self.d);
+        let mut acc = 0.0f64;
+        for (o, &u) in out.iter_mut().zip(self.col(j)) {
+            *o += c * u;
+            let v = *o as f64;
+            acc += v * v;
+        }
+        acc
     }
 
     /// Storage bytes (counted toward the compression ratio).
@@ -102,6 +131,48 @@ mod tests {
         let b2 = SpeciesBasis::deserialize(&mut r).unwrap();
         assert_eq!(b.data, b2.data);
         assert_eq!((b.d, b.rank), (b2.d, b2.rank));
+    }
+
+    #[test]
+    fn truncated_matches_from_mat() {
+        let mut m = Mat::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                m[(i, j)] = (i as f64 * 0.37 + j as f64 * 1.21).sin();
+            }
+        }
+        let full = SpeciesBasis::from_mat(&m, 5);
+        for rank in 0..=5usize {
+            let sliced = full.clone().truncated(rank);
+            let rebuilt = SpeciesBasis::from_mat(&m, rank);
+            assert_eq!(sliced.data, rebuilt.data, "rank {rank}");
+            assert_eq!((sliced.d, sliced.rank), (rebuilt.d, rebuilt.rank));
+        }
+        // truncating above the stored rank is a no-op
+        let same = full.clone().truncated(9);
+        assert_eq!(same.rank, 5);
+        assert_eq!(same.data, full.data);
+    }
+
+    #[test]
+    fn fused_axpy_norm_matches_two_pass() {
+        let mut m = Mat::zeros(7, 7);
+        for i in 0..7 {
+            for j in 0..7 {
+                m[(i, j)] = ((i * 7 + j) as f64 * 0.731).cos();
+            }
+        }
+        let b = SpeciesBasis::from_mat(&m, 7);
+        let start: Vec<f32> = (0..7).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        for j in 0..7 {
+            let mut fused = start.clone();
+            let n2 = b.axpy_col_norm2(j, -0.77, &mut fused);
+            let mut two_pass = start.clone();
+            b.axpy_col(j, -0.77, &mut two_pass);
+            let expect: f64 = two_pass.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            assert_eq!(fused, two_pass, "col {j}");
+            assert_eq!(n2, expect, "col {j}");
+        }
     }
 
     #[test]

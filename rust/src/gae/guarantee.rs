@@ -6,6 +6,17 @@
 //! *actual* corrected residual (including quantization and f32-basis
 //! rounding), so the bound it certifies is exactly what the decompressor
 //! reproduces.
+//!
+//! Hot-path layout (the §Perf overhaul): the per-block column-dot
+//! projection is a cache-blocked GEMM `C = R·Uᵀ` over all above-τ blocks
+//! at once, tiled over blocks and basis columns only — the d-long
+//! reduction of every dot stays a single sequential f64 chain, so each
+//! coefficient is bit-identical to the scalar projection it replaced,
+//! while four column dots run in independent accumulators to hide the
+//! add-latency chain.  The greedy loop's apply + re-measure is one fused
+//! sweep ([`SpeciesBasis::axpy_col_norm2`]), and the PCA covariance fit
+//! parallelizes across upper-triangular stripes
+//! ([`crate::linalg::Pca::fit_threads`]) without reordering any sum.
 
 use crate::gae::basis::SpeciesBasis;
 use crate::linalg::Pca;
@@ -33,13 +44,25 @@ impl GuaranteeParams {
     }
 }
 
+/// Wall-time attribution of one guarantee pass — the two measured
+/// kernels, surfaced through `CompressReport::stage_times`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GuaranteeTimes {
+    /// PCA covariance fit + eigendecomposition.
+    pub pca_fit_ns: u64,
+    /// Projection GEMM + greedy coefficient loop.
+    pub loop_ns: u64,
+}
+
 /// Output of the guarantee pass for one species.
 #[derive(Clone, Debug)]
 pub struct GuaranteeResult {
     /// Per block: (basis index, quantized coefficient) ascending by index.
     pub per_block: Vec<Vec<(usize, i64)>>,
-    /// Corrected blocks x^G = x^R + U c_q, row-major [n_blocks, d].
-    pub corrected: Vec<f32>,
+    /// Corrected blocks x^G = x^R + U c_q, row-major [n_blocks, d];
+    /// `None` when no block needed correction (the reconstruction already
+    /// meets τ everywhere — clean shards skip the allocation).
+    pub corrected: Option<Vec<f32>>,
     /// Stored basis (truncated to the highest used index unless
     /// `store_full_basis`).
     pub basis: SpeciesBasis,
@@ -51,6 +74,14 @@ pub struct GuaranteeResult {
     pub n_corrected_blocks: usize,
 }
 
+impl GuaranteeResult {
+    /// The corrected blocks, falling back to `recon` when nothing was
+    /// corrected (so callers never clone a clean shard).
+    pub fn corrected_or<'a>(&'a self, recon: &'a [f32]) -> &'a [f32] {
+        self.corrected.as_deref().unwrap_or(recon)
+    }
+}
+
 /// Run Algorithm 1 for one species.
 /// `orig`/`recon`: row-major `[n_blocks, d]` normalized block vectors.
 pub fn guarantee_species(
@@ -60,6 +91,20 @@ pub fn guarantee_species(
     d: usize,
     params: &GuaranteeParams,
 ) -> GuaranteeResult {
+    guarantee_species_timed(orig, recon, n_blocks, d, params, 1).0
+}
+
+/// [`guarantee_species`] with per-stage timing and a PCA thread budget —
+/// the engine's entry point.  Results are bit-identical for any
+/// `pca_threads` (see [`Pca::fit_threads`]).
+pub fn guarantee_species_timed(
+    orig: &[f32],
+    recon: &[f32],
+    n_blocks: usize,
+    d: usize,
+    params: &GuaranteeParams,
+    pca_threads: usize,
+) -> (GuaranteeResult, GuaranteeTimes) {
     assert_eq!(orig.len(), n_blocks * d);
     assert_eq!(recon.len(), n_blocks * d);
     let tau = params.tau;
@@ -73,37 +118,48 @@ pub fn guarantee_species(
     for i in 0..n_blocks * d {
         residuals[i] = orig[i] - recon[i];
     }
-    let pca = Pca::fit(&residuals, n_blocks, d, false);
+    let t_pca = std::time::Instant::now();
+    let pca = Pca::fit_threads(&residuals, n_blocks, d, false, pca_threads);
+    let pca_fit_ns = t_pca.elapsed().as_nanos() as u64;
     // f32 basis — identical to what the decompressor will use
     let full_basis = SpeciesBasis::from_mat(&pca.basis, d);
 
+    let t_loop = std::time::Instant::now();
+    // 2. initial per-block ℓ2²; only blocks above τ enter the guarantee
+    // loop (and need a coefficient projection)
+    let mut norms2 = vec![0.0f64; n_blocks];
+    let mut above: Vec<usize> = Vec::new();
+    for (b, r0) in residuals.chunks_exact(d).enumerate() {
+        let delta2: f64 = r0.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        norms2[b] = delta2;
+        if delta2.sqrt() > tau {
+            above.push(b);
+        }
+    }
+
+    // 3. project every above-τ residual at once: C = R·Uᵀ, cache-blocked
+    let coeffs_all = project_blocks(&residuals, &above, &full_basis, d);
+
     let mut per_block: Vec<Vec<(usize, i64)>> = Vec::with_capacity(n_blocks);
-    let mut corrected = recon.to_vec();
+    let mut corrected: Option<Vec<f32>> = None;
     let mut n_coeffs = 0usize;
     let mut max_residual = 0.0f64;
     let mut max_index_used = 0usize;
-    let mut n_corrected_blocks = 0usize;
 
     let mut resid = vec![0.0f32; d];
     let mut coeffs: Vec<(usize, f64)> = Vec::with_capacity(d);
+    let mut next_above = 0usize; // cursor into `above` / `coeffs_all`
 
     for b in 0..n_blocks {
-        let r0 = &residuals[b * d..(b + 1) * d];
-        let mut delta2: f64 = r0.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let mut delta2 = norms2[b];
         let mut selected: Vec<(usize, i64)> = Vec::new();
 
-        if delta2.sqrt() > tau {
-            n_corrected_blocks += 1;
-            resid.copy_from_slice(r0);
-            // project: c_j = u_j . r (f32 basis, f64 accumulate)
+        if next_above < above.len() && above[next_above] == b {
+            let crow = &coeffs_all[next_above * d..(next_above + 1) * d];
+            next_above += 1;
+            resid.copy_from_slice(&residuals[b * d..(b + 1) * d]);
             coeffs.clear();
-            for j in 0..d {
-                let col = full_basis.col(j);
-                let c: f64 = col
-                    .iter()
-                    .zip(r0)
-                    .map(|(&u, &r)| u as f64 * r as f64)
-                    .sum();
+            for (j, &c) in crow.iter().enumerate() {
                 coeffs.push((j, c));
             }
             // sort by squared contribution, descending (total_cmp: NaN-safe
@@ -117,21 +173,22 @@ pub fn guarantee_species(
                     continue;
                 }
                 let cq = quant.dequantize(q) as f32;
-                // apply and re-measure exactly
-                full_basis.axpy_col(j, -cq, &mut resid);
-                delta2 = resid.iter().map(|&v| (v as f64) * (v as f64)).sum();
+                // apply and re-measure exactly — one fused sweep
+                delta2 = full_basis.axpy_col_norm2(j, -cq, &mut resid);
                 selected.push((j, q));
                 if delta2.sqrt() <= tau {
                     break;
                 }
             }
             selected.sort_unstable_by_key(|&(j, _)| j);
-            // corrected block = recon + U c_q == orig - resid
-            let cb = &mut corrected[b * d..(b + 1) * d];
+            // corrected block = recon + U c_q == orig - resid; the buffer
+            // materializes lazily on the first corrected block
+            let all = corrected.get_or_insert_with(|| recon.to_vec());
+            let cb = &mut all[b * d..(b + 1) * d];
             for i in 0..d {
                 cb[i] = orig[b * d + i] - resid[i];
             }
-            if let Some(&(j, _)) = selected.iter().max_by_key(|&&(j, _)| j) {
+            if let Some(&(j, _)) = selected.last() {
                 max_index_used = max_index_used.max(j + 1);
             }
         }
@@ -140,22 +197,90 @@ pub fn guarantee_species(
         max_residual = max_residual.max(delta2.sqrt());
         per_block.push(selected);
     }
+    let loop_ns = t_loop.elapsed().as_nanos() as u64;
 
     let rank = if params.store_full_basis {
         d
     } else {
         max_index_used
     };
-    let basis = SpeciesBasis::from_mat(&pca.basis, rank);
+    // truncate the already-converted basis by slicing its column-major
+    // prefix — no second Mat conversion
+    let basis = full_basis.truncated(rank);
+    let n_corrected_blocks = above.len();
 
-    GuaranteeResult {
-        per_block,
-        corrected,
-        basis,
-        n_coeffs,
-        max_residual,
-        n_corrected_blocks,
+    (
+        GuaranteeResult {
+            per_block,
+            corrected,
+            basis,
+            n_coeffs,
+            max_residual,
+            n_corrected_blocks,
+        },
+        GuaranteeTimes {
+            pca_fit_ns,
+            loop_ns,
+        },
+    )
+}
+
+/// Cache-blocked projection `C[k][j] = Σ_i U[i,j] · r_k[i]` for the listed
+/// blocks.  Tiles iterate blocks × basis columns; the reduction over `i`
+/// is one sequential f64 chain per (k, j) — never split or re-associated —
+/// so every coefficient is bit-identical to the scalar `col · r` dot it
+/// replaces.  Within a tile, four column dots accumulate in independent
+/// registers, which pipelines the FMA latency without touching any
+/// per-dot order of operations.
+fn project_blocks(
+    residuals: &[f32],
+    above: &[usize],
+    basis: &SpeciesBasis,
+    d: usize,
+) -> Vec<f64> {
+    const MB: usize = 32; // blocks per tile: keeps the residual rows in L1
+    const NB: usize = 16; // basis columns per tile
+    let mut out = vec![0.0f64; above.len() * d];
+    for kb in (0..above.len()).step_by(MB) {
+        let kend = (kb + MB).min(above.len());
+        for jb in (0..d).step_by(NB) {
+            let jend = (jb + NB).min(d);
+            for k in kb..kend {
+                let r0 = &residuals[above[k] * d..above[k] * d + d];
+                let crow = &mut out[k * d..(k + 1) * d];
+                let mut j = jb;
+                while j + 4 <= jend {
+                    let c0 = basis.col(j);
+                    let c1 = basis.col(j + 1);
+                    let c2 = basis.col(j + 2);
+                    let c3 = basis.col(j + 3);
+                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+                    for i in 0..d {
+                        let r = r0[i] as f64;
+                        a0 += c0[i] as f64 * r;
+                        a1 += c1[i] as f64 * r;
+                        a2 += c2[i] as f64 * r;
+                        a3 += c3[i] as f64 * r;
+                    }
+                    crow[j] = a0;
+                    crow[j + 1] = a1;
+                    crow[j + 2] = a2;
+                    crow[j + 3] = a3;
+                    j += 4;
+                }
+                while j < jend {
+                    let col = basis.col(j);
+                    let mut a = 0.0f64;
+                    for i in 0..d {
+                        a += col[i] as f64 * r0[i] as f64;
+                    }
+                    crow[j] = a;
+                    j += 1;
+                }
+            }
+        }
     }
+    out
 }
 
 /// Decompressor side: apply stored coefficients to reconstructed blocks.
@@ -216,10 +341,11 @@ mod tests {
             res.max_residual
         );
         // verify block by block against the corrected output
+        let corrected = res.corrected_or(&recon);
         for b in 0..n {
             let e2: f64 = (0..d)
                 .map(|i| {
-                    let diff = (orig[b * d + i] - res.corrected[b * d + i]) as f64;
+                    let diff = (orig[b * d + i] - corrected[b * d + i]) as f64;
                     diff * diff
                 })
                 .sum();
@@ -245,7 +371,7 @@ mod tests {
             .collect();
         let mut recon2 = recon.clone();
         apply_correction(&mut recon2, n, d, &res.basis, &per_block_f);
-        for (a, b) in recon2.iter().zip(&res.corrected) {
+        for (a, b) in recon2.iter().zip(res.corrected_or(&recon)) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
     }
@@ -269,7 +395,9 @@ mod tests {
         assert_eq!(res.n_coeffs, 0);
         assert_eq!(res.n_corrected_blocks, 0);
         assert_eq!(res.basis.rank, 0);
-        assert_eq!(res.corrected, recon);
+        // satellite fix: a clean shard allocates no corrected copy
+        assert!(res.corrected.is_none());
+        assert_eq!(res.corrected_or(&recon), &recon[..]);
     }
 
     #[test]
@@ -284,5 +412,62 @@ mod tests {
         assert!(res.max_residual <= 0.3 + 1e-9);
         assert!(res.n_coeffs < n * 10, "stored {} coeffs", res.n_coeffs);
         assert!(res.basis.rank <= d);
+    }
+
+    /// The blocked-GEMM projection must reproduce the scalar per-column
+    /// dot exactly: same reduction order, same bits.
+    #[test]
+    fn projection_gemm_matches_scalar_dots_exactly() {
+        let mut rng = Prng::new(9);
+        for &(n, d) in &[(5usize, 7usize), (40, 33), (70, 80), (3, 4)] {
+            let residuals: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+            let m = {
+                let mut m = crate::linalg::Mat::zeros(d, d);
+                for i in 0..d {
+                    for j in 0..d {
+                        m[(i, j)] = rng.normal();
+                    }
+                }
+                m
+            };
+            let basis = SpeciesBasis::from_mat(&m, d);
+            let above: Vec<usize> = (0..n).filter(|b| b % 2 == 0).collect();
+            let gemm = project_blocks(&residuals, &above, &basis, d);
+            for (k, &b) in above.iter().enumerate() {
+                let r0 = &residuals[b * d..(b + 1) * d];
+                for j in 0..d {
+                    let scalar: f64 = basis
+                        .col(j)
+                        .iter()
+                        .zip(r0)
+                        .map(|(&u, &r)| u as f64 * r as f64)
+                        .sum();
+                    assert_eq!(
+                        gemm[k * d + j],
+                        scalar,
+                        "n {n} d {d} block {b} col {j}: GEMM diverged from scalar dot"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The timed/threaded entry point must match the plain one bit for
+    /// bit — same coefficients, same corrected blocks, same basis.
+    #[test]
+    fn timed_parallel_variant_is_bit_identical() {
+        let (n, d) = (48, 36);
+        let (orig, recon) = make_case(n, d, 0.3, 8);
+        let params = GuaranteeParams::for_tau(0.05, d);
+        let a = guarantee_species(&orig, &recon, n, d, &params);
+        let (b, times) = guarantee_species_timed(&orig, &recon, n, d, &params, 4);
+        assert_eq!(a.per_block, b.per_block);
+        assert_eq!(a.corrected, b.corrected);
+        assert_eq!(a.basis.data, b.basis.data);
+        assert_eq!(a.basis.rank, b.basis.rank);
+        assert_eq!(a.n_coeffs, b.n_coeffs);
+        assert_eq!(a.max_residual.to_bits(), b.max_residual.to_bits());
+        // the clocks ran
+        assert!(times.pca_fit_ns > 0 || times.loop_ns > 0);
     }
 }

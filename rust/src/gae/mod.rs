@@ -6,4 +6,6 @@ pub mod basis;
 pub mod guarantee;
 
 pub use basis::SpeciesBasis;
-pub use guarantee::{guarantee_species, GuaranteeParams, GuaranteeResult};
+pub use guarantee::{
+    guarantee_species, guarantee_species_timed, GuaranteeParams, GuaranteeResult, GuaranteeTimes,
+};

@@ -2,6 +2,12 @@
 //! eigensolver, and PCA on residual blocks — everything Algorithm 1 needs.
 //! Hand-rolled because the offline image ships no LAPACK/ndarray; the
 //! matrices involved are small (paper: 80 x 80 per species).
+//!
+//! Determinism invariant: every floating-point reduction in this module
+//! keeps a fixed sequential order.  `Pca::fit_threads` parallelizes over
+//! covariance row stripes (each entry still sums samples in row order),
+//! so results are bit-identical for any thread count — the property the
+//! guarantee pass and archive byte-stability tests rely on.
 
 pub mod jacobi;
 pub mod mat;

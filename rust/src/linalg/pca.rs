@@ -19,11 +19,34 @@ pub struct Pca {
     pub mean: Vec<f64>,
 }
 
+/// Sequential-path threshold: below this many multiply-adds the thread
+/// spawn cost dominates and `fit_threads` runs the scalar loop.
+const PAR_MIN_WORK: usize = 1 << 14;
+
 impl Pca {
     /// Fit from `n` samples of dimension `d` stored row-major in `samples`.
     /// `centered == false` skips mean subtraction (residuals are ~zero-mean
     /// by construction and Algorithm 1 reconstructs with `U c` alone).
     pub fn fit(samples: &[f32], n: usize, d: usize, centered: bool) -> Pca {
+        Self::fit_threads(samples, n, d, centered, 1)
+    }
+
+    /// Like [`Self::fit`], accumulating the covariance on up to `threads`
+    /// workers (`std::thread::scope`, as the shard engine's stages do).
+    ///
+    /// Parallelism is over upper-triangular covariance *row stripes*
+    /// (balanced by entry count), never over the sample reduction: every
+    /// entry C\[i\]\[j\] is summed over samples in row order by exactly one
+    /// worker, so the covariance — and therefore the eigenbasis, the
+    /// certified bounds, and the archive bytes — is bit-identical to the
+    /// single-threaded fit for any thread count.
+    pub fn fit_threads(
+        samples: &[f32],
+        n: usize,
+        d: usize,
+        centered: bool,
+        threads: usize,
+    ) -> Pca {
         assert_eq!(samples.len(), n * d);
         let mut mean = vec![0.0f64; d];
         if centered && n > 0 {
@@ -39,21 +62,74 @@ impl Pca {
 
         // covariance C = Σ (x-μ)(x-μ)ᵀ / n, accumulated upper-triangular
         let mut cov = Mat::zeros(d, d);
-        let mut xc = vec![0.0f64; d];
-        for row in samples.chunks_exact(d) {
-            for j in 0..d {
-                xc[j] = row[j] as f64 - mean[j];
+        let threads = threads.max(1).min(d.max(1));
+        if threads == 1 || n * d < PAR_MIN_WORK {
+            let mut xc = vec![0.0f64; d];
+            for row in samples.chunks_exact(d) {
+                for j in 0..d {
+                    xc[j] = row[j] as f64 - mean[j];
+                }
+                for i in 0..d {
+                    let xi = xc[i];
+                    if xi == 0.0 {
+                        continue;
+                    }
+                    let crow = cov.row_mut(i);
+                    for j in i..d {
+                        crow[j] += xi * xc[j];
+                    }
+                }
             }
+        } else {
+            // stripe boundaries balancing Σ (d - i) per worker: row i of
+            // the upper triangle holds d - i entries
+            let total = d * (d + 1) / 2;
+            let per = total.div_ceil(threads);
+            let mut bounds = vec![0usize];
+            let mut acc = 0usize;
             for i in 0..d {
-                let xi = xc[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let crow = cov.row_mut(i);
-                for j in i..d {
-                    crow[j] += xi * xc[j];
+                acc += d - i;
+                if acc >= per && bounds.len() < threads && i + 1 < d {
+                    bounds.push(i + 1);
+                    acc = 0;
                 }
             }
+            bounds.push(d);
+            // split the covariance into disjoint per-stripe row slices
+            let mut stripes: Vec<&mut [f64]> = Vec::with_capacity(bounds.len() - 1);
+            let mut rest: &mut [f64] = &mut cov.data;
+            for w in bounds.windows(2) {
+                let rows = w[1] - w[0];
+                let (head, tail) = rest.split_at_mut(rows * d);
+                stripes.push(head);
+                rest = tail;
+            }
+            let mean_ref = &mean;
+            std::thread::scope(|scope| {
+                for (w, stripe) in bounds.windows(2).zip(stripes) {
+                    let (lo, hi) = (w[0], w[1]);
+                    scope.spawn(move || {
+                        // per-thread centered tail of each sample (only
+                        // xc[lo..] is read by rows lo..hi)
+                        let mut xc = vec![0.0f64; d];
+                        for row in samples.chunks_exact(d) {
+                            for j in lo..d {
+                                xc[j] = row[j] as f64 - mean_ref[j];
+                            }
+                            for i in lo..hi {
+                                let xi = xc[i];
+                                if xi == 0.0 {
+                                    continue;
+                                }
+                                let crow = &mut stripe[(i - lo) * d..(i - lo + 1) * d];
+                                for j in i..d {
+                                    crow[j] += xi * xc[j];
+                                }
+                            }
+                        }
+                    });
+                }
+            });
         }
         let denom = (n.max(1)) as f64;
         for i in 0..d {
@@ -172,6 +248,26 @@ mod tests {
             assert!(w[0] >= w[1] - 1e-12);
         }
         assert!(pca.eigenvalues.iter().all(|&v| v > -1e-9));
+    }
+
+    #[test]
+    fn parallel_fit_is_bit_identical() {
+        // the stripe-parallel covariance must not change a single bit:
+        // same eigenvalues, same basis, for any thread count
+        // n * d comfortably above PAR_MIN_WORK so the threaded path runs
+        let (n, d) = (900, 24);
+        let samples = low_rank_samples(n, d, 4, 0.2, 12);
+        let seq = Pca::fit_threads(&samples, n, d, false, 1);
+        for threads in [2usize, 3, 7, 32] {
+            let par = Pca::fit_threads(&samples, n, d, false, threads);
+            assert_eq!(seq.basis.data, par.basis.data, "{threads} threads");
+            assert_eq!(seq.eigenvalues, par.eigenvalues, "{threads} threads");
+            assert_eq!(seq.mean, par.mean, "{threads} threads");
+        }
+        // centered path too
+        let seq = Pca::fit_threads(&samples, n, d, true, 1);
+        let par = Pca::fit_threads(&samples, n, d, true, 5);
+        assert_eq!(seq.basis.data, par.basis.data);
     }
 
     #[test]

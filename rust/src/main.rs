@@ -175,6 +175,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         println!("  {}", codec_totals_line(&report.archive));
     }
     println!("  breakdown: {}", report.breakdown);
+    println!("  stages: {}", report.stage_times);
     println!("  {}", report.progress_summary);
     Ok(())
 }

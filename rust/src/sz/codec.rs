@@ -83,7 +83,7 @@ fn compress_one(
     dims: (usize, usize, usize),
     eb: f64,
     mode: SzMode,
-) -> Result<Vec<u8>> {
+) -> Result<(Vec<u8>, Vec<f32>)> {
     let q = ErrorBoundQuantizer::new(eb);
     let mut work = field.to_vec();
     let mut syms = Vec::with_capacity(field.len());
@@ -98,7 +98,7 @@ fn compress_one(
     // lossless backend: byte RLE (no zstd in the offline image) — the
     // symbol stream is already Huffman-packed, so the residual gain from
     // a heavier backend is small
-    Ok(crate::util::rle::compress(&raw))
+    Ok((crate::util::rle::compress(&raw), work))
 }
 
 /// Compress one scalar field `[nt, ny, nx]` under absolute error bound `eb`.
@@ -108,25 +108,48 @@ pub fn sz_compress(
     eb: f64,
     mode: SzMode,
 ) -> Result<SzField> {
+    Ok(sz_compress_with_recon(field, dims, eb, mode)?.0)
+}
+
+/// [`sz_compress`] that also returns the reconstruction the decompressor
+/// will produce.  The predictors code every point against already-
+/// *reconstructed* neighbors (the property that keeps compressor and
+/// decompressor in lockstep), so the compressor's working buffer ends the
+/// pass holding exactly the decompressed field — trial callers such as
+/// the rate–distortion planner measure their certified error from it for
+/// free instead of paying a decode pass.  Bit-equality with
+/// [`sz_decompress`] is asserted in the tests below.
+pub fn sz_compress_with_recon(
+    field: &[f32],
+    dims: (usize, usize, usize),
+    eb: f64,
+    mode: SzMode,
+) -> Result<(SzField, Vec<f32>)> {
     assert_eq!(field.len(), dims.0 * dims.1 * dims.2);
-    let (mode, payload) = match mode {
+    let (mode, payload, recon) = match mode {
         SzMode::Auto => {
-            let lz = compress_one(field, dims, eb, SzMode::Lorenzo)?;
-            let ip = compress_one(field, dims, eb, SzMode::Interp)?;
+            let (lz, lz_recon) = compress_one(field, dims, eb, SzMode::Lorenzo)?;
+            let (ip, ip_recon) = compress_one(field, dims, eb, SzMode::Interp)?;
             if ip.len() <= lz.len() {
-                (SzMode::Interp, ip)
+                (SzMode::Interp, ip, ip_recon)
             } else {
-                (SzMode::Lorenzo, lz)
+                (SzMode::Lorenzo, lz, lz_recon)
             }
         }
-        m => (m, compress_one(field, dims, eb, m)?),
+        m => {
+            let (payload, recon) = compress_one(field, dims, eb, m)?;
+            (m, payload, recon)
+        }
     };
-    Ok(SzField {
-        mode,
-        eb,
-        dims,
-        payload,
-    })
+    Ok((
+        SzField {
+            mode,
+            eb,
+            dims,
+            payload,
+        },
+        recon,
+    ))
 }
 
 /// Decompress a field produced by [`sz_compress`].
@@ -204,6 +227,22 @@ mod tests {
         let tight = sz_compress(&f.data, dims, 1e-7, SzMode::Interp).unwrap();
         let loose = sz_compress(&f.data, dims, 1e-3, SzMode::Interp).unwrap();
         assert!(tight.payload.len() > loose.payload.len());
+    }
+
+    /// The compressor's working buffer must be the decompressor's output,
+    /// bit for bit — the zero-recompute planner trial depends on it.
+    #[test]
+    fn compressor_recon_is_bit_identical_to_decompress() {
+        let ds = generate(Profile::Tiny, 21);
+        let dims = (ds.nt, ds.ny, ds.nx);
+        for s in [0usize, 5] {
+            let f = ds.species_field(s);
+            for mode in [SzMode::Lorenzo, SzMode::Interp, SzMode::Auto] {
+                let (field, recon) = sz_compress_with_recon(&f.data, dims, 1e-5, mode).unwrap();
+                let decoded = sz_decompress(&field).unwrap();
+                assert_eq!(recon, decoded, "species {s} mode {mode:?}");
+            }
+        }
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! LSB-first bit streams used by the Huffman coder and the Fig.-2 index
-//! codec.  Writes accumulate into a u64 register and spill whole bytes.
+//! codec.  Writes accumulate into a u64 register and spill whole bytes;
+//! reads refill a u64 accumulator from whole-word loads (byte loads only
+//! on the tail), so multi-bit reads — and the Huffman prefix-table fast
+//! path via [`BitReader::peek`]/[`BitReader::skip`] — touch memory once
+//! per ~7 bytes instead of once per bit.
 
 /// Append-only bit writer (LSB-first within each byte).
 #[derive(Default)]
@@ -66,39 +70,108 @@ impl BitWriter {
 }
 
 /// Reader matching [`BitWriter`]'s layout.
+///
+/// Internally the next bits of the stream sit LSB-first in a u64
+/// accumulator; [`Self::refill`] tops it up with one `u64::from_le_bytes`
+/// load while at least 8 input bytes remain.  All the public reads are
+/// served from the accumulator, so the per-bit cost of the old
+/// byte-index/bit-offset arithmetic is gone.
 pub struct BitReader<'a> {
     buf: &'a [u8],
-    pos: usize, // bit position
+    /// Next stream bits, LSB-first; bits at and above `acc_bits` are zero.
+    acc: u64,
+    /// Valid bit count in `acc`.
+    acc_bits: u32,
+    /// Next byte of `buf` to load into `acc`.
+    byte_pos: usize,
 }
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {
-        Self { buf, pos: 0 }
+        Self {
+            buf,
+            acc: 0,
+            acc_bits: 0,
+            byte_pos: 0,
+        }
     }
 
-    /// Read `n` bits (n <= 57); returns None past end-of-stream.
+    /// Top up `acc` to >= 57 valid bits (or until the buffer drains):
+    /// whole-word loads while 8 bytes remain, byte loads on the tail.
+    #[inline]
+    fn refill(&mut self) {
+        while self.acc_bits <= 56 {
+            if self.byte_pos + 8 <= self.buf.len() {
+                let w = u64::from_le_bytes(
+                    self.buf[self.byte_pos..self.byte_pos + 8]
+                        .try_into()
+                        .expect("8-byte window"),
+                );
+                // only whole bytes are consumed, so `byte_pos` stays exact
+                let take_bytes = ((64 - self.acc_bits) / 8) as usize;
+                let take_bits = (take_bytes * 8) as u32;
+                let w = if take_bits == 64 {
+                    w
+                } else {
+                    w & ((1u64 << take_bits) - 1)
+                };
+                self.acc |= w << self.acc_bits;
+                self.acc_bits += take_bits;
+                self.byte_pos += take_bytes;
+            } else if self.byte_pos < self.buf.len() {
+                self.acc |= (self.buf[self.byte_pos] as u64) << self.acc_bits;
+                self.acc_bits += 8;
+                self.byte_pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Read `n` bits (n <= 57); returns None past end-of-stream (the
+    /// reader position is unchanged in that case).
     #[inline]
     pub fn read(&mut self, n: u32) -> Option<u64> {
-        if self.pos + n as usize > self.buf.len() * 8 {
-            return None;
+        debug_assert!(n <= 57);
+        if self.acc_bits < n {
+            self.refill();
+            if self.acc_bits < n {
+                return None;
+            }
         }
-        let mut v = 0u64;
-        let mut got = 0u32;
-        while got < n {
-            let byte = self.buf[(self.pos + got as usize) / 8];
-            let bit_off = ((self.pos + got as usize) % 8) as u32;
-            let take = (8 - bit_off).min(n - got);
-            let bits = ((byte >> bit_off) as u64) & ((1u64 << take) - 1);
-            v |= bits << got;
-            got += take;
-        }
-        self.pos += n as usize;
+        let v = self.acc & ((1u64 << n) - 1);
+        self.acc >>= n;
+        self.acc_bits -= n;
         Some(v)
     }
 
     #[inline]
     pub fn read_bit(&mut self) -> Option<bool> {
         self.read(1).map(|b| b != 0)
+    }
+
+    /// Look at the next `n` bits (n <= 57) without consuming them; bits
+    /// past the end of the stream read as zero (check [`Self::remaining`]
+    /// before consuming).
+    #[inline]
+    pub fn peek(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        if self.acc_bits < n {
+            self.refill();
+        }
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Consume `n` previously peeked bits; `n` must not exceed
+    /// [`Self::remaining`].
+    #[inline]
+    pub fn skip(&mut self, n: u32) {
+        if self.acc_bits < n {
+            self.refill();
+        }
+        debug_assert!(self.acc_bits >= n, "skip past end of stream");
+        self.acc >>= n;
+        self.acc_bits -= n;
     }
 
     pub fn read_unary(&mut self) -> Option<u64> {
@@ -122,7 +195,7 @@ impl<'a> BitReader<'a> {
 
     /// Bits remaining.
     pub fn remaining(&self) -> usize {
-        self.buf.len() * 8 - self.pos
+        (self.buf.len() - self.byte_pos) * 8 + self.acc_bits as usize
     }
 }
 
@@ -189,6 +262,85 @@ mod tests {
         let bytes = w.finish();
         let mut r = BitReader::new(&bytes);
         assert_eq!(r.read(8), Some(0b11)); // padded zeros
+        assert_eq!(r.read(1), None);
+    }
+
+    /// Reference reader with the pre-overhaul byte-index arithmetic; the
+    /// word-refill reader must agree bit for bit on arbitrary read plans.
+    struct NaiveReader<'a> {
+        buf: &'a [u8],
+        pos: usize,
+    }
+
+    impl<'a> NaiveReader<'a> {
+        fn read(&mut self, n: u32) -> Option<u64> {
+            if self.pos + n as usize > self.buf.len() * 8 {
+                return None;
+            }
+            let mut v = 0u64;
+            let mut got = 0u32;
+            while got < n {
+                let byte = self.buf[(self.pos + got as usize) / 8];
+                let bit_off = ((self.pos + got as usize) % 8) as u32;
+                let take = (8 - bit_off).min(n - got);
+                let bits = ((byte >> bit_off) as u64) & ((1u64 << take) - 1);
+                v |= bits << got;
+                got += take;
+            }
+            self.pos += n as usize;
+            Some(v)
+        }
+    }
+
+    #[test]
+    fn word_refill_matches_naive_reader() {
+        let mut rng = Prng::new(41);
+        for case in 0..50 {
+            let len = rng.index(64);
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            let mut fast = BitReader::new(&bytes);
+            let mut slow = NaiveReader { buf: &bytes, pos: 0 };
+            loop {
+                let n = 1 + rng.index(57) as u32;
+                let a = fast.read(n);
+                let b = slow.read(n);
+                assert_eq!(a, b, "case {case}: {n}-bit read diverged");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn peek_and_skip_match_read() {
+        let mut rng = Prng::new(17);
+        let bytes: Vec<u8> = (0..37).map(|_| rng.next_u64() as u8).collect();
+        let mut a = BitReader::new(&bytes);
+        let mut b = BitReader::new(&bytes);
+        loop {
+            let n = 1 + rng.index(30) as u32;
+            if a.remaining() < n as usize {
+                break;
+            }
+            let peeked = a.peek(n);
+            a.skip(n);
+            assert_eq!(b.read(n), Some(peeked));
+        }
+    }
+
+    #[test]
+    fn peek_past_end_zero_pads() {
+        let mut w = BitWriter::new();
+        w.write(0b1011, 4);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        // one stored byte = 8 real bits; the peek beyond them is zero
+        assert_eq!(r.peek(12), 0b0000_1011);
+        assert_eq!(r.remaining(), 8);
+        r.skip(8);
+        assert_eq!(r.remaining(), 0);
+        assert_eq!(r.peek(12), 0);
         assert_eq!(r.read(1), None);
     }
 }

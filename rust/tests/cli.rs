@@ -133,6 +133,9 @@ fn cli_reference_pipeline_with_partial_decode() {
     assert!(ok, "{text}");
     assert!(text.contains("CR"), "{text}");
     assert!(text.contains("2 shards"), "{text}");
+    // per-stage wall-time attribution is part of the compress report
+    assert!(text.contains("stages: pca fit"), "{text}");
+    assert!(text.contains("guarantee loop"), "{text}");
 
     let (ok, text) = run(&["inspect", "--archive", gba.to_str().unwrap()]);
     assert!(ok, "{text}");

@@ -243,6 +243,44 @@ fn reference_single_window_round_trips() {
     assert!(mean <= 3e-3 * 1.05, "mean NRMSE {mean}");
 }
 
+/// The hot-path overhaul's determinism contract: thread counts, worker
+/// counts, and the parallel PCA must not change a single archive byte.
+/// (Every parallel reduction keeps its sequential order — see
+/// `Pca::fit_threads` and the guarantee GEMM.)
+#[test]
+fn archive_bytes_independent_of_thread_counts() {
+    let ds = generate(Profile::Tiny, 85);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    for codec in [
+        gbatc::compressor::CodecChoice::Gbatc,
+        gbatc::compressor::CodecChoice::Auto,
+    ] {
+        let mut first: Option<Vec<u8>> = None;
+        for (threads, shard_workers) in [(1usize, 1usize), (2, 1), (4, 2), (8, 2)] {
+            let opts = CompressOptions {
+                nrmse_target: 1e-3,
+                kt_window: 4,
+                threads,
+                shard_workers,
+                codec,
+                ..Default::default()
+            };
+            let report = comp.compress(&ds, &opts).unwrap();
+            let bytes = report.archive.serialize();
+            match &first {
+                None => first = Some(bytes),
+                Some(r) => assert_eq!(
+                    r, &bytes,
+                    "{codec:?} archive changed with threads={threads} workers={shard_workers}"
+                ),
+            }
+        }
+    }
+}
+
 #[test]
 fn sz_baseline_same_data() {
     let ds = generate(Profile::Tiny, 77);

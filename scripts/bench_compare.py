@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Threshold gate for the hot-path kernel bench.
+
+Compares a fresh ``BENCH_hotpaths.json`` (written by
+``cargo bench --bench perf_hotpaths``) against the committed baseline and
+fails on a >TOLERANCE relative regression.  Only *machine-relative*
+metrics are gated — per-kernel speedups (baseline kernel vs optimized
+kernel timed on the same machine in the same process) and the planner's
+auto/best-single wall-time ratio — so the gate is meaningful on any
+runner; absolute milliseconds are reported but never compared.
+
+Usage:
+    python3 scripts/bench_compare.py CURRENT.json BASELINE.json [--tolerance 0.25]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path):
+    with open(path) as f:
+        rows = json.load(f)
+    return {row["kernel"]: row for row in rows}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly measured BENCH_hotpaths.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.25,
+        help="allowed relative regression (default 0.25 = 25%%)",
+    )
+    args = ap.parse_args()
+
+    current = load_rows(args.current)
+    baseline = load_rows(args.baseline)
+    tol = args.tolerance
+    failures = []
+
+    print(f"{'kernel':<16} {'metric':<8} {'baseline':>10} {'current':>10} {'floor/cap':>10}")
+    for kernel, base in baseline.items():
+        cur = current.get(kernel)
+        if cur is None:
+            failures.append(f"{kernel}: missing from current results")
+            continue
+        if "speedup" in base:
+            floor = base["speedup"] * (1.0 - tol)
+            got = cur.get("speedup", 0.0)
+            print(f"{kernel:<16} {'speedup':<8} {base['speedup']:>10.2f} {got:>10.2f} {floor:>10.2f}")
+            if got < floor:
+                failures.append(
+                    f"{kernel}: speedup {got:.2f}x fell below floor {floor:.2f}x "
+                    f"(baseline {base['speedup']:.2f}x - {tol:.0%})"
+                )
+        elif "ratio" in base:
+            cap = base["ratio"] * (1.0 + tol)
+            got = cur.get("ratio", float("inf"))
+            print(f"{kernel:<16} {'ratio':<8} {base['ratio']:>10.2f} {got:>10.2f} {cap:>10.2f}")
+            if got > cap:
+                failures.append(
+                    f"{kernel}: ratio {got:.2f}x exceeded cap {cap:.2f}x "
+                    f"(baseline {base['ratio']:.2f}x + {tol:.0%})"
+                )
+        # rows without speedup/ratio (e.g. stage_times) are informational
+
+    if failures:
+        print("\nREGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nall hot-path metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
