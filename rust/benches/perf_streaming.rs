@@ -1,0 +1,171 @@
+//! Streaming-session benchmark: one synthetic field compressed one-shot
+//! (`ShardEngine::compress`) and through the push-based
+//! `api::CompressSession`, on the pure-Rust reference backend.  Reports
+//! wall time and the *peak workspace* of each path, asserts the session
+//! stays O(shard) — its peak must not grow with the field while the
+//! field/shard ratio does — and writes `BENCH_streaming.json`:
+//!
+//! ```bash
+//! cargo bench --bench perf_streaming
+//! GBATC_BENCH_PROFILE=small GBATC_BENCH_OUT=out.json cargo bench --bench perf_streaming
+//! ```
+
+use std::io::Cursor;
+
+use gbatc::api::{CompressorBuilder, ErrorPolicy, FieldSpec};
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::{generate, Dataset, Profile};
+use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::util::Timer;
+
+struct Row {
+    name: &'static str,
+    nt: usize,
+    field_bytes: usize,
+    archive_bytes: usize,
+    peak_workspace: usize,
+    wall_s: f64,
+}
+
+/// Tile a dataset along time to `nt` timesteps (cheaply grows the field
+/// so the O(shard)-vs-O(field) gap is visible at bench scale).
+fn tile_time(ds: &Dataset, nt: usize) -> Dataset {
+    let mut out = Dataset::new(nt, ds.ns, ds.ny, ds.nx);
+    let stride = ds.ns * ds.ny * ds.nx;
+    for t in 0..nt {
+        let src = (t % ds.nt) * stride;
+        out.mass[t * stride..(t + 1) * stride].copy_from_slice(&ds.mass[src..src + stride]);
+    }
+    out.pressure = ds.pressure;
+    out
+}
+
+fn main() {
+    let profile = std::env::var("GBATC_BENCH_PROFILE")
+        .ok()
+        .and_then(|p| Profile::parse(&p))
+        .unwrap_or(Profile::Tiny);
+    let kt_window: usize = std::env::var("GBATC_KT_WINDOW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let out_path =
+        std::env::var("GBATC_BENCH_OUT").unwrap_or_else(|_| "BENCH_streaming.json".to_string());
+
+    eprintln!("[bench] generating {profile:?} dataset...");
+    let base = generate(profile, 77);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4)
+        .expect("reference service");
+    let handle = service.handle();
+
+    println!(
+        "== perf_streaming ({}x{}x{} grid, kt_window {kt_window})",
+        base.ns, base.ny, base.nx
+    );
+    let mut rows: Vec<Row> = Vec::new();
+    // same shard width, growing field: a session's peak workspace must
+    // track the shard, not the field
+    for nt in [base.nt, base.nt * 2, base.nt * 4] {
+        let ds = tile_time(&base, nt);
+        let opts = CompressOptions {
+            nrmse_target: 1e-3,
+            kt_window,
+            shard_workers: 1,
+            // fixed thread budget keeps the per-shard workspace charge
+            // machine-independent, so the O(shard) gate is deterministic
+            threads: 2,
+            ..Default::default()
+        };
+
+        let comp = GbatcCompressor::new(&handle, 0, 0);
+        let t = Timer::start();
+        let report = comp.compress(&ds, &opts).expect("one-shot compress");
+        rows.push(Row {
+            name: "one_shot",
+            nt,
+            field_bytes: ds.pd_bytes(),
+            archive_bytes: report.archive.payload_bytes(),
+            peak_workspace: report.peak_workspace_bytes,
+            wall_s: t.secs(),
+        });
+
+        let builder = CompressorBuilder::from_options(&opts).error_policy(ErrorPolicy::Uniform(1e-3));
+        let t = Timer::start();
+        let mut session = builder
+            .session_on(
+                &handle,
+                0,
+                0,
+                FieldSpec::from_dataset(&ds),
+                Cursor::new(Vec::new()),
+            )
+            .expect("open session");
+        session.push_dataset(&ds).expect("push");
+        let (sreport, sink) = session.finish_into().expect("finish");
+        let streamed = sink.into_inner();
+        assert_eq!(
+            streamed, report.archive.bytes,
+            "streamed archive must be byte-identical to one-shot"
+        );
+        rows.push(Row {
+            name: "session",
+            nt,
+            field_bytes: ds.pd_bytes(),
+            archive_bytes: streamed.len(),
+            peak_workspace: sreport.peak_workspace_bytes,
+            wall_s: t.secs(),
+        });
+    }
+
+    for r in &rows {
+        println!(
+            "{:>8}  nt {:>4}  field {:>12} B  archive {:>10} B  peak workspace {:>11} B  {:>6.2}s",
+            r.name, r.nt, r.field_bytes, r.archive_bytes, r.peak_workspace, r.wall_s
+        );
+    }
+
+    // hand-rolled JSON (no serde in the offline image)
+    let mut json = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "  {{\"name\": \"{}\", \"nt\": {}, \"field_bytes\": {}, \"archive_bytes\": {}, \
+             \"peak_workspace_bytes\": {}, \"wall_time_s\": {:.4}}}{}\n",
+            r.name,
+            r.nt,
+            r.field_bytes,
+            r.archive_bytes,
+            r.peak_workspace,
+            r.wall_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("]\n");
+    std::fs::write(&out_path, &json).expect("write bench json");
+    println!("wrote {out_path}");
+
+    // the gate: session peak workspace is O(shard) — quadrupling the
+    // field must not move it by more than the fp/accounting noise floor
+    let peaks: Vec<usize> = rows
+        .iter()
+        .filter(|r| r.name == "session")
+        .map(|r| r.peak_workspace)
+        .collect();
+    let (first, last) = (peaks[0], peaks[peaks.len() - 1]);
+    assert!(
+        last <= first + first / 10,
+        "session peak workspace grew with the field: {first} B -> {last} B (not O(shard))"
+    );
+    // and it must stay well under the field itself once the field dwarfs
+    // one shard
+    let big = rows.last().unwrap();
+    assert!(
+        last < big.field_bytes,
+        "session peak workspace {last} B >= field {} B",
+        big.field_bytes
+    );
+    println!(
+        "session peak workspace stable at {first} B across a {}x field growth (field {} B)",
+        rows.last().unwrap().nt / rows[0].nt,
+        big.field_bytes
+    );
+}

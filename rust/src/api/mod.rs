@@ -1,0 +1,28 @@
+//! The supported way in and out of the system.
+//!
+//! * **Ingest** — [`CompressorBuilder`] → [`CompressSession`]: a
+//!   push-based session for live producers.  Timesteps arrive one
+//!   `[S, Y, X]` frame at a time; at most one `kt_window` of them is
+//!   buffered; every filled window runs the exact one-shot shard path
+//!   and streams its payload to any `io::Write + io::Seek` sink through
+//!   the incremental `GBA2` writer.  Streamed archives are byte-identical
+//!   to one-shot compression of the assembled field.
+//! * **Accuracy** — [`ErrorPolicy`]: the typed replacement for the scalar
+//!   NRMSE knob.  Uniform, or per-species budgets addressed by index or
+//!   mechanism name ([`SpeciesBudget`]), each certified per
+//!   (shard, species) like the scalar knob always was.
+//! * **Egress** — [`ArchiveReader`] + [`Query`]: typed random-access
+//!   partial decode (`time: t0..t1`, `species: SpeciesSel`), reading only
+//!   the sections a query touches, bit-identical to full decode.
+//!
+//! The legacy surfaces — the [`Compressor`](crate::compressor::Compressor)
+//! trait with its one-call `compress_bytes`, and the `gbatc` CLI — are
+//! thin adapters over this module.
+
+pub mod policy;
+pub mod reader;
+pub mod session;
+
+pub use policy::{ErrorPolicy, SpeciesBudget, SpeciesSel};
+pub use reader::{ArchiveReader, Query};
+pub use session::{Backend, CompressReport, CompressSession, CompressorBuilder, FieldSpec};

@@ -1,0 +1,211 @@
+//! Typed accuracy and species-selection knobs.
+//!
+//! [`ErrorPolicy`] replaces the scalar NRMSE knob: a live solver can ask
+//! for one bound everywhere ([`ErrorPolicy::Uniform`]) or budget accuracy
+//! per quantity of interest ([`ErrorPolicy::PerSpecies`]) — e.g. a tight
+//! bound on the minor species whose production rates amplify error and a
+//! loose one on N2.  Budgets address species by index or by mechanism
+//! name ([`SpeciesSel`]); each resolved (shard, species) section is
+//! planned and certified against its own budget, exactly as the scalar
+//! knob certified every section against one.
+
+use crate::chem;
+use crate::compressor::traits::select_species;
+use crate::error::{Error, Result};
+
+/// A species subset — everything, explicit indices, or mechanism names
+/// (numeric tokens in a name list are treated as indices, so CLI lists
+/// like `OH,7,CO` work).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpeciesSel {
+    /// Every species of the archive / field.
+    All,
+    /// Explicit indices on the species axis.
+    Indices(Vec<usize>),
+    /// Mechanism species names, resolved via [`chem::resolve_species`]
+    /// (unknown names error listing the available ones).
+    Names(Vec<String>),
+}
+
+impl SpeciesSel {
+    /// Parse a comma-separated CLI list of names and/or indices; an
+    /// empty list selects all species.
+    pub fn parse(list: &str) -> SpeciesSel {
+        let toks: Vec<String> = list
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(str::to_string)
+            .collect();
+        if toks.is_empty() {
+            SpeciesSel::All
+        } else {
+            SpeciesSel::Names(toks)
+        }
+    }
+
+    /// Resolve to ascending, deduplicated indices over an `ns`-species
+    /// axis.  Every selection — including `All` — is rejected on a
+    /// zero-species archive (see
+    /// [`select_species`](crate::compressor::traits::select_species)).
+    pub fn resolve(&self, ns: usize) -> Result<Vec<usize>> {
+        match self {
+            SpeciesSel::All => select_species(&[], ns),
+            SpeciesSel::Indices(idx) => select_species(idx, ns),
+            SpeciesSel::Names(names) => {
+                let mut idx = Vec::with_capacity(names.len());
+                for tok in names {
+                    match tok.parse::<usize>() {
+                        Ok(i) => idx.push(i),
+                        Err(_) => idx.push(chem::resolve_species(tok)?),
+                    }
+                }
+                select_species(&idx, ns)
+            }
+        }
+    }
+}
+
+/// One [`ErrorPolicy::PerSpecies`] entry: an NRMSE target for a species
+/// subset.
+#[derive(Clone, Debug)]
+pub struct SpeciesBudget {
+    pub species: SpeciesSel,
+    pub nrmse: f64,
+}
+
+impl SpeciesBudget {
+    /// Catch-all budget (the usual first entry).
+    pub fn all(nrmse: f64) -> SpeciesBudget {
+        SpeciesBudget {
+            species: SpeciesSel::All,
+            nrmse,
+        }
+    }
+
+    /// Budget for one species index.
+    pub fn index(s: usize, nrmse: f64) -> SpeciesBudget {
+        SpeciesBudget {
+            species: SpeciesSel::Indices(vec![s]),
+            nrmse,
+        }
+    }
+
+    /// Budget for one mechanism species by name.
+    pub fn name(name: impl Into<String>, nrmse: f64) -> SpeciesBudget {
+        SpeciesBudget {
+            species: SpeciesSel::Names(vec![name.into()]),
+            nrmse,
+        }
+    }
+}
+
+/// The typed accuracy knob of a compression session.
+#[derive(Clone, Debug)]
+pub enum ErrorPolicy {
+    /// One NRMSE target for every species (the paper's scalar knob).
+    Uniform(f64),
+    /// Per-species targets.  Entries apply in order — later entries
+    /// override earlier ones, so `[SpeciesBudget::all(1e-3),
+    /// SpeciesBudget::name("OH", 1e-5)]` tightens one species — and
+    /// together they must cover every species.
+    PerSpecies(Vec<SpeciesBudget>),
+}
+
+impl ErrorPolicy {
+    /// Resolve to one positive NRMSE target per species.
+    pub fn resolve(&self, ns: usize) -> Result<Vec<f64>> {
+        fn check(nrmse: f64) -> Result<f64> {
+            if nrmse.is_nan() || nrmse <= 0.0 {
+                return Err(Error::config(format!(
+                    "NRMSE target {nrmse} must be positive"
+                )));
+            }
+            Ok(nrmse)
+        }
+        match self {
+            ErrorPolicy::Uniform(t) => Ok(vec![check(*t)?; ns]),
+            ErrorPolicy::PerSpecies(budgets) => {
+                if budgets.is_empty() {
+                    return Err(Error::config(
+                        "per-species error policy needs at least one budget",
+                    ));
+                }
+                let mut targets: Vec<Option<f64>> = vec![None; ns];
+                for b in budgets {
+                    let t = check(b.nrmse)?;
+                    for s in b.species.resolve(ns)? {
+                        targets[s] = Some(t);
+                    }
+                }
+                let uncovered: Vec<usize> = targets
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.is_none())
+                    .map(|(s, _)| s)
+                    .collect();
+                if !uncovered.is_empty() {
+                    return Err(Error::config(format!(
+                        "per-species error policy leaves species {uncovered:?} unbudgeted; \
+                         start with a catch-all SpeciesBudget::all(...)"
+                    )));
+                }
+                Ok(targets.into_iter().map(|t| t.unwrap_or(0.0)).collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_policy_repeats_and_validates() {
+        assert_eq!(ErrorPolicy::Uniform(1e-3).resolve(3).unwrap(), vec![1e-3; 3]);
+        assert!(ErrorPolicy::Uniform(0.0).resolve(3).is_err());
+        assert!(ErrorPolicy::Uniform(f64::NAN).resolve(3).is_err());
+    }
+
+    #[test]
+    fn per_species_later_entries_override() {
+        let oh = chem::resolve_species("OH").unwrap();
+        let policy = ErrorPolicy::PerSpecies(vec![
+            SpeciesBudget::all(1e-3),
+            SpeciesBudget::name("OH", 1e-5),
+            SpeciesBudget::index(0, 5e-4),
+        ]);
+        let targets = policy.resolve(chem::NS).unwrap();
+        assert_eq!(targets[oh], 1e-5);
+        assert_eq!(targets[0], 5e-4);
+        assert_eq!(targets[1], 1e-3);
+    }
+
+    #[test]
+    fn per_species_must_cover_everything() {
+        let policy = ErrorPolicy::PerSpecies(vec![SpeciesBudget::index(0, 1e-3)]);
+        let err = policy.resolve(3).unwrap_err().to_string();
+        assert!(err.contains("unbudgeted"), "{err}");
+        assert!(ErrorPolicy::PerSpecies(Vec::new()).resolve(3).is_err());
+        let bad = ErrorPolicy::PerSpecies(vec![SpeciesBudget::all(-1.0)]);
+        assert!(bad.resolve(3).is_err());
+    }
+
+    #[test]
+    fn species_sel_parses_and_resolves() {
+        assert_eq!(SpeciesSel::parse(""), SpeciesSel::All);
+        assert_eq!(SpeciesSel::All.resolve(3).unwrap(), vec![0, 1, 2]);
+        let sel = SpeciesSel::parse("CO, 2 ,OH");
+        let co = chem::resolve_species("CO").unwrap();
+        let oh = chem::resolve_species("OH").unwrap();
+        let mut expect = vec![co, 2, oh];
+        expect.sort_unstable();
+        assert_eq!(sel.resolve(chem::NS).unwrap(), expect);
+        // unknown names list the available species
+        let err = SpeciesSel::parse("NO,bogus").resolve(chem::NS).unwrap_err();
+        assert!(err.to_string().contains("available"), "{err}");
+        // indices out of range and zero-species axes are rejected
+        assert!(SpeciesSel::Indices(vec![9]).resolve(3).is_err());
+        assert!(SpeciesSel::All.resolve(0).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! Typed egress: [`ArchiveReader`] + [`Query`].
+//!
+//! An `ArchiveReader` wraps any archive — a `GBA2` file read section by
+//! section, in-memory bytes, or a legacy `GBA1` archive (converted to its
+//! one-shard `GBA2` view on open) — behind one typed query API over the
+//! engine's random-access partial decode.  Queries read only the shards
+//! and species sections they touch; the output is bit-identical to the
+//! corresponding slice of a full decode.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::api::policy::SpeciesSel;
+use crate::api::session::Backend;
+use crate::archive::{
+    AnyArchive, FileSource, Gba2Archive, Gba2Header, MemSource, SectionSource, ShardToc, MAGIC,
+};
+use crate::coordinator::engine::{RangeDecode, ShardEngine};
+use crate::error::{Error, Result};
+use crate::runtime::{ExecHandle, ExecService};
+
+/// A typed partial-decode request: a half-open time window plus a
+/// species subset.
+#[derive(Clone, Debug)]
+pub struct Query {
+    /// Timesteps `[start, end)`.
+    pub time: std::ops::Range<usize>,
+    pub species: SpeciesSel,
+}
+
+impl Query {
+    /// The full time axis, all species.
+    pub fn all(nt: usize) -> Query {
+        Query {
+            time: 0..nt,
+            species: SpeciesSel::All,
+        }
+    }
+
+    /// A time window, all species.
+    pub fn window(time: std::ops::Range<usize>) -> Query {
+        Query {
+            time,
+            species: SpeciesSel::All,
+        }
+    }
+
+    /// Restrict to a species subset.
+    pub fn species(mut self, species: SpeciesSel) -> Query {
+        self.species = species;
+        self
+    }
+}
+
+/// Owning section source with always-on IO counters (the `gbatc extract`
+/// savings report and the partial-decode tests read them).
+struct CountingBox {
+    inner: Box<dyn SectionSource>,
+    bytes: AtomicU64,
+    reads: AtomicU64,
+}
+
+impl SectionSource for CountingBox {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        let out = self.inner.read_at(off, len)?;
+        self.bytes.fetch_add(out.len() as u64, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    fn source_len(&self) -> u64 {
+        self.inner.source_len()
+    }
+}
+
+/// Typed reader over an archive; see the module docs.
+///
+/// ```
+/// use std::io::Cursor;
+/// use gbatc::api::{
+///     ArchiveReader, Backend, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesSel,
+/// };
+///
+/// # let (nt, ns, ny, nx) = (4, 58, 5, 4);
+/// # let field = FieldSpec { nt, ns, ny, nx, pressure: 40.0e5, ranges: vec![(0.0, 1.0); ns] };
+/// # let mut session = CompressorBuilder::new()
+/// #     .error_policy(ErrorPolicy::Uniform(1e-2))
+/// #     .session(field, Cursor::new(Vec::new()))?;
+/// # for t in 0..nt {
+/// #     let frame: Vec<f32> = (0..ns * ny * nx)
+/// #         .map(|i| 0.5 + 0.3 * ((i + t * 31) as f32 * 0.11).sin())
+/// #         .collect();
+/// #     session.push_timestep(&frame)?;
+/// # }
+/// # let (_report, sink) = session.finish_into()?;
+/// let reader = ArchiveReader::from_bytes(sink.into_inner(), &Backend::Reference, 0)?;
+/// let decode = reader.query(&Query {
+///     time: 0..2,
+///     species: SpeciesSel::Names(vec!["OH".into(), "CO".into()]),
+/// })?;
+/// assert_eq!(decode.species.len(), 2);
+/// assert_eq!(decode.mass.len(), 2 * 2 * ny * nx);
+/// # Ok::<(), gbatc::Error>(())
+/// ```
+pub struct ArchiveReader {
+    /// Keeps a reader-started service alive (`with_handle` borrows an
+    /// external one instead).
+    _service: Option<ExecService>,
+    handle: ExecHandle,
+    src: CountingBox,
+    header: Gba2Header,
+    toc: Vec<ShardToc>,
+    threads: usize,
+}
+
+impl ArchiveReader {
+    /// Open an archive file.  `GBA2` files are read section by section
+    /// (queries touch only the byte ranges they need); legacy `GBA1`
+    /// files are loaded and converted to their one-shard `GBA2` view.
+    pub fn open_file<P: AsRef<Path>>(
+        path: P,
+        backend: &Backend,
+        threads: usize,
+    ) -> Result<ArchiveReader> {
+        let file = FileSource::open(path.as_ref())?;
+        let magic = file.read_at(0, 4)?;
+        let src: Box<dyn SectionSource> = if magic == *MAGIC {
+            let bytes = std::fs::read(path.as_ref())?;
+            Box::new(MemSource(v2_bytes(bytes)?))
+        } else {
+            Box::new(file)
+        };
+        let (service, _, _) = backend.start(4)?;
+        let handle = service.handle();
+        Self::build(Some(service), handle, src, threads)
+    }
+
+    /// Open over owned serialized bytes of either container version.
+    pub fn from_bytes(bytes: Vec<u8>, backend: &Backend, threads: usize) -> Result<ArchiveReader> {
+        let (service, _, _) = backend.start(4)?;
+        let handle = service.handle();
+        Self::build(Some(service), handle, Box::new(MemSource(v2_bytes(bytes)?)), threads)
+    }
+
+    /// Open over owned bytes on an already-running executor handle (no
+    /// second service is spawned).
+    pub fn with_handle(
+        handle: &ExecHandle,
+        bytes: Vec<u8>,
+        threads: usize,
+    ) -> Result<ArchiveReader> {
+        Self::build(
+            None,
+            handle.clone(),
+            Box::new(MemSource(v2_bytes(bytes)?)),
+            threads,
+        )
+    }
+
+    fn build(
+        service: Option<ExecService>,
+        handle: ExecHandle,
+        src: Box<dyn SectionSource>,
+        threads: usize,
+    ) -> Result<ArchiveReader> {
+        let src = CountingBox {
+            inner: src,
+            bytes: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+        };
+        let (header, toc) = Gba2Archive::read_toc(&src)?;
+        Ok(ArchiveReader {
+            _service: service,
+            handle,
+            src,
+            header,
+            toc,
+            threads,
+        })
+    }
+
+    /// The parsed archive header (dims, block, ranges, targets...).
+    pub fn header(&self) -> &Gba2Header {
+        &self.header
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.toc.len()
+    }
+
+    /// Total serialized archive bytes.
+    pub fn archive_bytes(&self) -> u64 {
+        self.src.source_len()
+    }
+
+    /// Archive bytes read since open / the last reset.
+    pub fn bytes_read(&self) -> u64 {
+        self.src.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Ranged reads served since open / the last reset.
+    pub fn reads(&self) -> u64 {
+        self.src.reads.load(Ordering::Relaxed)
+    }
+
+    /// Zero the IO counters (e.g. to exclude the TOC reads at open from
+    /// a per-query savings report).
+    pub fn reset_io_stats(&self) {
+        self.src.bytes.store(0, Ordering::Relaxed);
+        self.src.reads.store(0, Ordering::Relaxed);
+    }
+
+    /// Decode a typed query, reading only the shards/sections it
+    /// touches.  The output is bit-identical to the same slice of a full
+    /// decode (see
+    /// [`ShardEngine::decompress_range`](crate::coordinator::engine::ShardEngine::decompress_range)).
+    pub fn query(&self, q: &Query) -> Result<RangeDecode> {
+        let sel = q.species.resolve(self.header.dims.1)?;
+        let engine = ShardEngine::new(&self.handle, 0, 0);
+        engine.decompress_range(&self.src, q.time.start, q.time.end, &sel, self.threads)
+    }
+
+    /// Decode the whole field back to mass fractions `[T, S, Y, X]`.
+    pub fn decompress_all(&self) -> Result<Vec<f32>> {
+        Ok(self.query(&Query::all(self.header.dims.0))?.mass)
+    }
+}
+
+/// Normalize serialized archive bytes to the `GBA2` working layout
+/// (legacy `GBA1` converts to its one-shard view; anything else is
+/// rejected with a clear error).
+fn v2_bytes(bytes: Vec<u8>) -> Result<Vec<u8>> {
+    if bytes.starts_with(MAGIC) {
+        Ok(AnyArchive::deserialize(&bytes)?.into_v2()?.into_bytes())
+    } else if bytes.starts_with(crate::archive::MAGIC2) {
+        Ok(bytes)
+    } else {
+        Err(Error::format(
+            "unknown archive magic (expected GBA1 or GBA2)",
+        ))
+    }
+}

@@ -1,0 +1,731 @@
+//! Push-based compression sessions.
+//!
+//! [`CompressorBuilder`] resolves every knob (backend, codec policy,
+//! [`ErrorPolicy`], shard/pipeline settings) up front and opens a
+//! [`CompressSession`]: a live producer (a running CFD solver) hands over
+//! one `[S, Y, X]` timestep at a time, the session buffers at most one
+//! `kt_window` of them, and every filled window runs through the exact
+//! shard path one-shot compression uses
+//! ([`ShardEngine::shard_stage`](crate::coordinator::engine::ShardEngine))
+//! before its payload streams out to the sink through the incremental
+//! `GBA2` writer ([`crate::archive::Gba2StreamWriter`]).  Peak working
+//! memory is bounded by one shard window — never the whole field — and
+//! the finished archive is **byte-identical** to what
+//! `ShardEngine::compress` would have produced from the assembled field
+//! (property-tested in `tests/streaming_session.rs`).
+//!
+//! With `--codec auto` the per-shard *float* work still happens as each
+//! window fills, but the payload choice is deferred to
+//! [`CompressSession::finish`]: the rate–distortion planner needs every
+//! shard's candidate sizes because the model-parameter charge is
+//! archive-global.  Only encoded candidates are held in the meantime.
+
+use std::io::{Seek, Write};
+
+use crate::api::policy::ErrorPolicy;
+use crate::archive::stream::{Gba2StreamWriter, StreamLayout};
+use crate::archive::toc::{VERSION2, VERSION3};
+use crate::archive::{CodecTag, Gba2Header};
+use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
+use crate::compressor::gba::CompressOptions;
+use crate::compressor::registry::CodecChoice;
+use crate::config::Manifest;
+use crate::coordinator::engine::{
+    effective_threads, plan_trials, PendingShard, ShardEngine, ShardRunCtx, ShardStage,
+    ShardTotals, WorkspaceMeter,
+};
+use crate::coordinator::{Progress, StageClock, StageTimes};
+use crate::data::blocks::{BlockGrid, BlockShape};
+use crate::data::shards::ShardPlan;
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::runtime::{ExecHandle, ExecService, RuntimeSpec};
+
+/// Which execution backend a [`CompressorBuilder`] or
+/// [`crate::api::ArchiveReader`] starts.
+#[derive(Clone, Debug, Default)]
+pub enum Backend {
+    /// The deterministic pure-Rust reference runtime — no artifacts
+    /// needed, identical error guarantees.
+    #[default]
+    Reference,
+    /// An AOT artifacts directory (PJRT when the `pjrt` feature is on,
+    /// otherwise a manifest-shaped reference runtime).
+    Artifacts(String),
+}
+
+impl Backend {
+    /// Start the executor service; returns `(service, decoder_params,
+    /// tcn_params)` — the parameter counts feed compression-ratio
+    /// accounting (the reference backend stores no model).
+    pub fn start(&self, queue_depth: usize) -> Result<(ExecService, usize, usize)> {
+        match self {
+            Backend::Reference => {
+                let service =
+                    ExecService::start_reference(RuntimeSpec::reference_default(), queue_depth)?;
+                Ok((service, 0, 0))
+            }
+            Backend::Artifacts(dir) => {
+                let manifest = Manifest::load(format!("{dir}/manifest.txt"))?;
+                let service = ExecService::start(dir, queue_depth)?;
+                Ok((service, manifest.decoder_params, manifest.tcn_params))
+            }
+        }
+    }
+}
+
+/// Everything a push-based session must know about the incoming field
+/// before the first timestep arrives.  A live solver knows all of it: the
+/// run length, the grid, and the physical per-species bounds that become
+/// the archive's normalization ranges.
+#[derive(Clone, Debug)]
+pub struct FieldSpec {
+    pub nt: usize,
+    pub ns: usize,
+    pub ny: usize,
+    pub nx: usize,
+    /// Ambient pressure [Pa] (recorded in the archive header).
+    pub pressure: f64,
+    /// Global per-species `(lo, hi)` normalization ranges.  One-shot
+    /// compression derives these from the full field
+    /// ([`Dataset::species_ranges`]); a streaming producer supplies its
+    /// physical bounds (values outside normalize linearly past [0, 1] —
+    /// correctness is unaffected, compression ratio may suffer).
+    pub ranges: Vec<(f32, f32)>,
+}
+
+impl FieldSpec {
+    /// The spec one-shot compression would use for `ds` — with these
+    /// exact ranges, a session fed `ds` timestep-by-timestep produces a
+    /// byte-identical archive.
+    pub fn from_dataset(ds: &Dataset) -> FieldSpec {
+        FieldSpec {
+            nt: ds.nt,
+            ns: ds.ns,
+            ny: ds.ny,
+            nx: ds.nx,
+            pressure: ds.pressure,
+            ranges: ds.species_ranges(),
+        }
+    }
+
+    /// Values in one `[S, Y, X]` timestep frame.
+    pub fn timestep_len(&self) -> usize {
+        self.ns * self.ny * self.nx
+    }
+}
+
+/// Builder for compression sessions — the supported way into the system.
+/// Every knob is validated when the session opens (absorbing what used to
+/// be scattered across `CompressOptions::validate` and the CLI), so a
+/// misconfiguration fails before the first timestep is accepted.
+///
+/// ```
+/// use std::io::Cursor;
+/// use gbatc::api::{CompressorBuilder, ErrorPolicy, FieldSpec, SpeciesBudget};
+///
+/// let (nt, ns, ny, nx) = (4, 58, 5, 4);
+/// let field = FieldSpec {
+///     nt,
+///     ns,
+///     ny,
+///     nx,
+///     pressure: 40.0e5,
+///     ranges: vec![(0.0, 1.0); ns],
+/// };
+/// let mut session = CompressorBuilder::new()
+///     .error_policy(ErrorPolicy::PerSpecies(vec![
+///         SpeciesBudget::all(1e-2),
+///         SpeciesBudget::name("OH", 1e-3),
+///     ]))
+///     .session(field, Cursor::new(Vec::new()))?;
+/// for t in 0..nt {
+///     // one [S, Y, X] frame per solver step
+///     let frame: Vec<f32> = (0..ns * ny * nx)
+///         .map(|i| 0.5 + 0.3 * ((i + t * 31) as f32 * 0.11).sin())
+///         .collect();
+///     session.push_timestep(&frame)?;
+/// }
+/// let (report, sink) = session.finish_into()?;
+/// assert_eq!(report.n_shards, 1);
+/// assert_eq!(sink.get_ref().len() as u64, report.archive_bytes);
+/// # Ok::<(), gbatc::Error>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct CompressorBuilder {
+    backend: Backend,
+    policy: ErrorPolicy,
+    /// Single source of truth for the engine knobs — new
+    /// `CompressOptions` fields flow through the builder automatically
+    /// (`nrmse_target` is superseded by `policy`).
+    opts: CompressOptions,
+}
+
+impl Default for CompressorBuilder {
+    fn default() -> Self {
+        Self::from_options(&CompressOptions::default())
+    }
+}
+
+impl CompressorBuilder {
+    /// Reference backend, uniform 1e-3 NRMSE, default knobs.
+    pub fn new() -> CompressorBuilder {
+        CompressorBuilder::default()
+    }
+
+    /// Mirror an engine-level `CompressOptions` (the `Compressor` trait
+    /// adapter's bridge); the accuracy knob becomes a uniform policy.
+    pub fn from_options(opts: &CompressOptions) -> CompressorBuilder {
+        CompressorBuilder {
+            backend: Backend::Reference,
+            policy: ErrorPolicy::Uniform(opts.nrmse_target),
+            opts: opts.clone(),
+        }
+    }
+
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Use the pure-Rust reference backend (the default).
+    pub fn reference(self) -> Self {
+        self.backend(Backend::Reference)
+    }
+
+    /// Load AOT artifacts from `dir`.
+    pub fn artifacts(self, dir: impl Into<String>) -> Self {
+        self.backend(Backend::Artifacts(dir.into()))
+    }
+
+    /// Accuracy policy (uniform or per-species budgets).
+    pub fn error_policy(mut self, policy: ErrorPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Codec policy: all-GBATC (default), all-SZ/dense, or the
+    /// rate–distortion planner (`auto`).
+    pub fn codec(mut self, codec: CodecChoice) -> Self {
+        self.opts.codec = codec;
+        self
+    }
+
+    /// Latent quantization bin width.
+    pub fn latent_bin(mut self, bin: f64) -> Self {
+        self.opts.latent_bin = bin;
+        self
+    }
+
+    /// Apply the tensor-correction network (GBATC) or not (GBA).
+    pub fn use_tcn(mut self, on: bool) -> Self {
+        self.opts.use_tcn = on;
+        self
+    }
+
+    /// Worker threads for CPU stages (0 = all cores).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.opts.threads = threads;
+        self
+    }
+
+    /// Store full D×D bases (ablation).
+    pub fn store_full_basis(mut self, on: bool) -> Self {
+        self.opts.store_full_basis = on;
+        self
+    }
+
+    /// Charge model parameters at f32 instead of 8-bit (ablation).
+    pub fn model_bytes_f32(mut self, on: bool) -> Self {
+        self.opts.model_bytes_f32 = on;
+        self
+    }
+
+    /// Batches in flight in the encode/decode pipelines.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.opts.queue_depth = depth;
+        self
+    }
+
+    /// Shard time-window width in timesteps (0 = auto).
+    pub fn kt_window(mut self, kt_window: usize) -> Self {
+        self.opts.kt_window = kt_window;
+        self
+    }
+
+    /// Shards processed concurrently by *one-shot* compression (a session
+    /// is inherently sequential — timesteps arrive in order — but the
+    /// knob passes through to [`Compressor`](crate::compressor)
+    /// adapters).
+    pub fn shard_workers(mut self, workers: usize) -> Self {
+        self.opts.shard_workers = workers;
+        self
+    }
+
+    /// The engine options this builder resolves to; `max_target` fills
+    /// the legacy scalar knob (header display, back-compat paths).
+    pub(crate) fn options(&self, max_target: f64) -> CompressOptions {
+        CompressOptions {
+            nrmse_target: max_target,
+            ..self.opts.clone()
+        }
+    }
+
+    /// Start the configured backend and open a push session writing to
+    /// `sink`.
+    pub fn session<W: Write + Seek>(
+        &self,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<CompressSession<W>> {
+        let (service, decoder_params, tcn_params) = self.backend.start(self.opts.queue_depth)?;
+        let handle = service.handle();
+        CompressSession::start(
+            Some(service),
+            handle,
+            decoder_params,
+            tcn_params,
+            self,
+            field,
+            sink,
+        )
+    }
+
+    /// Open a session on an already-running executor handle (no second
+    /// service is spawned; the backend knob is ignored).  The parameter
+    /// counts feed compression-ratio accounting.
+    pub fn session_on<W: Write + Seek>(
+        &self,
+        handle: &ExecHandle,
+        decoder_params: usize,
+        tcn_params: usize,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<CompressSession<W>> {
+        CompressSession::start(
+            None,
+            handle.clone(),
+            decoder_params,
+            tcn_params,
+            self,
+            field,
+            sink,
+        )
+    }
+}
+
+/// Where a session's payloads go before `finish()`.
+enum SinkState<W: Write + Seek> {
+    /// Single-codec policies stream each finished shard immediately.
+    Stream(Gba2StreamWriter<W>),
+    /// `--codec auto` defers payload emission to `finish()` (the planner
+    /// is archive-global); the raw sink waits here.
+    Deferred(W),
+}
+
+/// Outcome of a [`CompressSession`] — the one-shot
+/// [`CompressReport`](crate::compressor::CompressReport) minus the
+/// in-memory archive (it went to the sink), plus the stream totals.
+#[derive(Debug)]
+pub struct CompressReport {
+    /// `[T, S, Y, X]` of the compressed field.
+    pub dims: (usize, usize, usize, usize),
+    pub kt_window: usize,
+    pub n_shards: usize,
+    /// Serialized archive bytes written to the sink.
+    pub archive_bytes: u64,
+    /// Container version emitted (2 = all-GBATC layout, 3 = tagged).
+    pub version: u16,
+    /// Per-codec (sections, section bytes), indexed by `CodecTag as
+    /// usize`.
+    pub codec_totals: [(usize, u64); 3],
+    /// Model-parameter bytes charged to the compression ratio.
+    pub model_param_bytes: usize,
+    pub breakdown: SizeBreakdown,
+    /// Max per-block ℓ2 residual observed — within each species' own τ.
+    pub max_block_residual: f64,
+    /// Loosest per-block bound (per-species bounds are tighter).
+    pub tau: f64,
+    pub n_coeffs: usize,
+    /// High-water mark of the session's working sets — bounded by one
+    /// shard window, not the field (`benches/perf_streaming.rs` meters
+    /// it).
+    pub peak_workspace_bytes: usize,
+    pub stage_times: StageTimes,
+    pub elapsed_s: f64,
+    pub progress_summary: String,
+}
+
+impl CompressReport {
+    /// Compression ratio against the raw field bytes (model charge
+    /// included, as the paper accounts it).
+    pub fn compression_ratio(&self) -> f64 {
+        let (nt, ns, ny, nx) = self.dims;
+        (nt * ns * ny * nx * 4) as f64
+            / (self.archive_bytes as usize + self.model_param_bytes).max(1) as f64
+    }
+}
+
+/// A push-based compression session; see the module docs.
+pub struct CompressSession<W: Write + Seek> {
+    /// Keeps a builder-started service alive for the session's lifetime
+    /// (`session_on` borrows an external one instead).
+    _service: Option<ExecService>,
+    handle: ExecHandle,
+    decoder_params: usize,
+    tcn_params: usize,
+    opts: CompressOptions,
+    ctx: ShardRunCtx,
+    field: FieldSpec,
+    plan: ShardPlan,
+    sink: SinkState<W>,
+    /// One shard window of raw timesteps — the only field-sized-per-shard
+    /// buffer the session owns.
+    window: Vec<f32>,
+    /// Timesteps buffered in `window`.
+    w_fill: usize,
+    /// Timesteps received in total.
+    t_pushed: usize,
+    next_shard: usize,
+    /// Set when a window flush failed: the archive stream is no longer
+    /// consistent, so every later call returns a typed error instead of
+    /// pushing into (or sealing) a half-written shard.
+    poisoned: bool,
+    /// Deferred `--codec auto` shards (encoded candidates only).
+    pending: Vec<PendingShard>,
+    totals: ShardTotals,
+    meter: WorkspaceMeter,
+    clock: StageClock,
+    progress: Progress,
+}
+
+impl<W: Write + Seek> CompressSession<W> {
+    fn start(
+        service: Option<ExecService>,
+        handle: ExecHandle,
+        decoder_params: usize,
+        tcn_params: usize,
+        builder: &CompressorBuilder,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<CompressSession<W>> {
+        let spec = handle.spec();
+        if field.ns != spec.species {
+            return Err(Error::shape(format!(
+                "field has {} species, model expects {}",
+                field.ns, spec.species
+            )));
+        }
+        // garbage normalization bounds would silently destroy the archive
+        // deep into the run — reject them before the first timestep.
+        // (lo == hi is allowed: a genuinely constant species normalizes to
+        // zero, exactly as one-shot compression handles it.)
+        for (s, &(lo, hi)) in field.ranges.iter().enumerate() {
+            if !lo.is_finite() || !hi.is_finite() || lo > hi {
+                return Err(Error::config(format!(
+                    "species {s}: invalid normalization range ({lo}, {hi})"
+                )));
+            }
+        }
+        let targets = builder.policy.resolve(field.ns)?;
+        let max_target = targets.iter().fold(f64::NEG_INFINITY, |a, &t| a.max(t));
+        let opts = builder.options(max_target);
+        // typed config validation before the first timestep is accepted
+        opts.validate(spec.block.0)?;
+        let plan = ShardPlan::new(field.nt, spec.block.0, opts.kt_window)?;
+        // fail fast on grid divisibility (the same check one-shot
+        // compression runs on the whole field)
+        let shape = BlockShape {
+            kt: spec.block.0,
+            by: spec.block.1,
+            bx: spec.block.2,
+        };
+        BlockGrid::new((plan.window(0).nt, field.ns, field.ny, field.nx), shape)?;
+        // one window in flight at a time: every core works inside it
+        let threads = effective_threads(opts.threads);
+        let ctx = ShardRunCtx::new(
+            &opts,
+            &targets,
+            spec,
+            (field.ns, field.ny, field.nx),
+            field.ranges.clone(),
+            threads,
+        )?;
+        let window = vec![0.0f32; plan.kt_window * field.timestep_len()];
+        let sink = if opts.codec == CodecChoice::Auto {
+            SinkState::Deferred(sink)
+        } else {
+            let version = if opts.codec == CodecChoice::Gbatc {
+                VERSION2
+            } else {
+                VERSION3
+            };
+            SinkState::Stream(Gba2StreamWriter::new(
+                sink,
+                StreamLayout {
+                    nt: field.nt,
+                    ns: field.ns,
+                    kt_window: plan.kt_window,
+                    n_shards: plan.len(),
+                    version,
+                },
+            )?)
+        };
+        Ok(CompressSession {
+            _service: service,
+            handle,
+            decoder_params,
+            tcn_params,
+            opts,
+            ctx,
+            field,
+            plan,
+            sink,
+            window,
+            w_fill: 0,
+            t_pushed: 0,
+            next_shard: 0,
+            poisoned: false,
+            pending: Vec::new(),
+            totals: ShardTotals::default(),
+            meter: WorkspaceMeter::new(),
+            clock: StageClock::new(),
+            progress: Progress::new(),
+        })
+    }
+
+    /// The field this session was opened for.
+    pub fn field(&self) -> &FieldSpec {
+        &self.field
+    }
+
+    /// Timesteps received so far.
+    pub fn timesteps_pushed(&self) -> usize {
+        self.t_pushed
+    }
+
+    /// Shards fully compressed so far.
+    pub fn shards_compressed(&self) -> usize {
+        self.next_shard
+    }
+
+    /// Hand over one `[S, Y, X]` timestep.  When the buffered window
+    /// reaches `kt_window` timesteps it is compressed and (single-codec
+    /// policies) written out before this call returns.
+    pub fn push_timestep(&mut self, frame: &[f32]) -> Result<()> {
+        self.check_poisoned()?;
+        let stride = self.field.timestep_len();
+        if frame.len() != stride {
+            return Err(Error::shape(format!(
+                "timestep frame has {} values, field expects {stride} ([S, Y, X] = [{}, {}, {}])",
+                frame.len(),
+                self.field.ns,
+                self.field.ny,
+                self.field.nx
+            )));
+        }
+        if self.t_pushed == self.field.nt {
+            return Err(Error::shape(format!(
+                "session already received all {} timesteps",
+                self.field.nt
+            )));
+        }
+        let off = self.w_fill * stride;
+        self.window[off..off + stride].copy_from_slice(frame);
+        self.w_fill += 1;
+        self.t_pushed += 1;
+        if self.w_fill == self.plan.window(self.next_shard).nt {
+            // a failed flush leaves the stream inconsistent — poison the
+            // session so later pushes get a typed error, not a panic
+            if let Err(e) = self.flush_window() {
+                self.poisoned = true;
+                return Err(e);
+            }
+        }
+        Ok(())
+    }
+
+    /// Typed guard for every entry point after a failed flush.
+    fn check_poisoned(&self) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::runtime(
+                "session unusable after an earlier failure (discard it and start over)",
+            ));
+        }
+        Ok(())
+    }
+
+    /// Push `k` consecutive timesteps from one contiguous
+    /// `[k, S, Y, X]` buffer.
+    pub fn push_timesteps(&mut self, frames: &[f32]) -> Result<()> {
+        let stride = self.field.timestep_len();
+        if stride == 0 || frames.len() % stride != 0 {
+            return Err(Error::shape(format!(
+                "{} values is not a whole number of {stride}-value timesteps",
+                frames.len()
+            )));
+        }
+        for frame in frames.chunks_exact(stride) {
+            self.push_timestep(frame)?;
+        }
+        Ok(())
+    }
+
+    /// Feed an in-memory dataset timestep-by-timestep (the one-shot
+    /// convenience path; dims must match the session's field).
+    pub fn push_dataset(&mut self, ds: &Dataset) -> Result<()> {
+        if (ds.nt, ds.ns, ds.ny, ds.nx)
+            != (self.field.nt, self.field.ns, self.field.ny, self.field.nx)
+        {
+            return Err(Error::shape(format!(
+                "dataset {}x{}x{}x{} does not match the session field {}x{}x{}x{}",
+                ds.nt, ds.ns, ds.ny, ds.nx, self.field.nt, self.field.ns, self.field.ny,
+                self.field.nx
+            )));
+        }
+        self.push_timesteps(&ds.mass)
+    }
+
+    /// Compress the buffered window through the shared shard path.
+    fn flush_window(&mut self) -> Result<()> {
+        let w = self.plan.window(self.next_shard);
+        let stride = self.field.timestep_len();
+        let stage = {
+            let engine = ShardEngine::new(&self.handle, self.decoder_params, self.tcn_params);
+            // the buffered window is live working memory during the pass
+            let _window_charge = self.meter.charge(self.window.len() * 4);
+            engine.shard_stage(
+                &self.ctx,
+                &self.window[..w.nt * stride],
+                w.t0,
+                w.nt,
+                &self.meter,
+                &self.clock,
+                &self.progress,
+            )?
+        };
+        match stage {
+            ShardStage::Final(out) => {
+                match &mut self.sink {
+                    SinkState::Stream(writer) => writer.write_shard(&out.payload)?,
+                    SinkState::Deferred(_) => {
+                        return Err(Error::runtime(
+                            "single-codec shard stage in a deferred (auto) session",
+                        ))
+                    }
+                }
+                self.totals.add(&out);
+            }
+            ShardStage::Trials(p) => self.pending.push(p),
+        }
+        self.next_shard += 1;
+        self.w_fill = 0;
+        Ok(())
+    }
+
+    /// Seal the archive: every declared timestep must have been pushed.
+    /// For `--codec auto`, the archive-level planner resolves the
+    /// deferred shards here, then all payloads stream out in one pass.
+    pub fn finish(self) -> Result<CompressReport> {
+        Ok(self.finish_into()?.0)
+    }
+
+    /// [`Self::finish`], additionally handing back the sink (useful for
+    /// in-memory `Cursor` sinks).
+    pub fn finish_into(self) -> Result<(CompressReport, W)> {
+        self.check_poisoned()?;
+        let CompressSession {
+            handle,
+            decoder_params,
+            tcn_params,
+            opts,
+            ctx,
+            field,
+            plan,
+            sink,
+            t_pushed,
+            pending,
+            mut totals,
+            meter,
+            clock,
+            progress,
+            ..
+        } = self;
+        if t_pushed != field.nt {
+            return Err(Error::shape(format!(
+                "session received {} of {} timesteps at finish",
+                t_pushed, field.nt
+            )));
+        }
+        let model_bytes_full = model_param_bytes(
+            decoder_params + if opts.use_tcn { tcn_params } else { 0 },
+            opts.model_bytes_f32,
+        );
+        let spec = handle.spec();
+        let make_header = |model_bytes: usize| Gba2Header {
+            tcn_used: opts.use_tcn,
+            dims: (field.nt, field.ns, field.ny, field.nx),
+            block: (spec.block.0, spec.block.1, spec.block.2),
+            latent_dim: spec.latent,
+            kt_window: plan.kt_window,
+            pressure: field.pressure,
+            nrmse_target: ctx.max_target(),
+            model_param_bytes: model_bytes as u64,
+            ranges: field.ranges.clone(),
+        };
+        let (sink, summary, model_bytes) = match sink {
+            SinkState::Stream(writer) => {
+                // model parameters are charged only when some section
+                // decodes through the model
+                let model_bytes = if totals.any_gbatc { model_bytes_full } else { 0 };
+                let (sink, summary) = writer.finish(&make_header(model_bytes))?;
+                (sink, summary, model_bytes)
+            }
+            SinkState::Deferred(raw) => {
+                // archive-global planning over the memoized candidates,
+                // then stream the winning payloads out in one pass
+                let mut outs = plan_trials(pending, model_bytes_full)?;
+                outs.sort_by_key(|o| o.payload.t0);
+                let mixed = outs
+                    .iter()
+                    .any(|o| o.payload.codecs.iter().any(|&c| c != CodecTag::Gbatc));
+                let version = if mixed { VERSION3 } else { VERSION2 };
+                let mut writer = Gba2StreamWriter::new(
+                    raw,
+                    StreamLayout {
+                        nt: field.nt,
+                        ns: field.ns,
+                        kt_window: plan.kt_window,
+                        n_shards: plan.len(),
+                        version,
+                    },
+                )?;
+                for o in outs {
+                    totals.add(&o);
+                    writer.write_shard(&o.payload)?;
+                }
+                let model_bytes = if totals.any_gbatc { model_bytes_full } else { 0 };
+                let (sink, summary) = writer.finish(&make_header(model_bytes))?;
+                (sink, summary, model_bytes)
+            }
+        };
+        let report = CompressReport {
+            dims: (field.nt, field.ns, field.ny, field.nx),
+            kt_window: plan.kt_window,
+            n_shards: plan.len(),
+            archive_bytes: summary.bytes,
+            version: summary.version,
+            codec_totals: summary.codec_totals,
+            model_param_bytes: model_bytes,
+            breakdown: totals.breakdown(summary.bytes as usize, model_bytes),
+            max_block_residual: totals.max_residual,
+            tau: ctx.max_tau(),
+            n_coeffs: totals.n_coeffs,
+            peak_workspace_bytes: meter.peak_bytes(),
+            stage_times: clock.snapshot(),
+            elapsed_s: progress.elapsed_s(),
+            progress_summary: progress.summary(),
+        };
+        Ok((report, sink))
+    }
+}

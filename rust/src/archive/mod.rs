@@ -16,12 +16,14 @@
 //! "network parameters".
 
 pub mod format;
+pub mod stream;
 pub mod toc;
 
 pub use format::{Archive, SpeciesSection, MAGIC};
+pub use stream::{Gba2StreamWriter, StreamLayout, StreamSummary};
 pub use toc::{
-    CodecTag, CountingSource, FileSource, Gba2Archive, Gba2Header, SectionSource, ShardPayload,
-    ShardToc, SliceSource, MAGIC2,
+    CodecTag, CountingSource, FileSource, Gba2Archive, Gba2Header, MemSource, SectionSource,
+    ShardPayload, ShardToc, SliceSource, MAGIC2,
 };
 
 use crate::error::{Error, Result};

@@ -1,0 +1,355 @@
+//! Incremental `GBA2` writing for the streaming session API.
+//!
+//! [`Gba2StreamWriter`] emits an archive to any `io::Write + io::Seek`
+//! sink *shard by shard*: the header + TOC region is reserved (zeroed)
+//! up front, each finished shard's payload is appended immediately — so
+//! a compression session never holds more than the shard it is working
+//! on — and `finish()` seeks back and patches the real header + TOC into
+//! the reserved region.
+//!
+//! The prefix is serialized by the same function
+//! (`archive::toc::write_header_toc`) the one-shot
+//! [`Gba2Archive::build`](crate::archive::Gba2Archive::build) uses, and
+//! payload bytes land at identical offsets, so a streamed archive is
+//! **byte-identical** to the batch-built archive for the same shards —
+//! today's readers parse it with no changes (a trailing footer TOC was
+//! rejected for exactly that reason; see DESIGN.md "Session API").
+//!
+//! The container version (2 = all-GBATC layout, 3 = per-section codec
+//! tags) must be declared at construction because the reserved region's
+//! size depends on it; `finish()` re-derives the version from the tags
+//! actually written and rejects a mismatch, so a misdeclared writer can
+//! never emit an archive `Gba2Archive::build` would have laid out
+//! differently.
+
+use std::io::{Seek, SeekFrom, Write};
+
+use crate::archive::toc::{
+    header_toc_len, write_header_toc, CodecTag, Gba2Header, ShardPayload, ShardToc, VERSION2,
+    VERSION3,
+};
+use crate::error::{Error, Result};
+use crate::util::bytes::ByteWriter;
+
+/// Shape of one streaming archive, fixed before the first shard arrives.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamLayout {
+    /// Total timesteps the shards must tile.
+    pub nt: usize,
+    /// Species per shard section list.
+    pub ns: usize,
+    /// Shard time-window width (last shard may be shorter).
+    pub kt_window: usize,
+    /// Shards that will be written (`ceil(nt / kt_window)`).
+    pub n_shards: usize,
+    /// Container version: 2 iff every section will be GBATC.
+    pub version: u16,
+}
+
+/// Totals the writer reports once the archive is sealed.
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    /// Total serialized archive bytes (header + TOC + payloads).
+    pub bytes: u64,
+    /// Container version actually emitted (2 or 3).
+    pub version: u16,
+    /// Per-codec (sections, section bytes), indexed by `CodecTag as usize`.
+    pub codec_totals: [(usize, u64); 3],
+}
+
+/// Incremental `GBA2` writer over a seekable sink.
+pub struct Gba2StreamWriter<W: Write + Seek> {
+    sink: W,
+    layout: StreamLayout,
+    base: u64,
+    off: u64,
+    toc: Vec<ShardToc>,
+    expect_t0: usize,
+}
+
+impl<W: Write + Seek> Gba2StreamWriter<W> {
+    /// Start an archive on `sink` (which must be empty and positioned at
+    /// its start).  Reserves the header + TOC region with zeros so shard
+    /// payloads can stream out before the TOC contents are known.
+    pub fn new(mut sink: W, layout: StreamLayout) -> Result<Gba2StreamWriter<W>> {
+        if layout.version != VERSION2 && layout.version != VERSION3 {
+            return Err(Error::format(format!(
+                "GBA2 stream: unsupported version {}",
+                layout.version
+            )));
+        }
+        if layout.ns == 0 || layout.n_shards == 0 || layout.kt_window == 0 {
+            return Err(Error::format(format!(
+                "GBA2 stream: degenerate layout (ns {}, shards {}, kt_window {})",
+                layout.ns, layout.n_shards, layout.kt_window
+            )));
+        }
+        let base = header_toc_len(layout.ns, layout.n_shards, layout.version) as u64;
+        sink.seek(SeekFrom::Start(0))?;
+        sink.write_all(&vec![0u8; base as usize])?;
+        Ok(Gba2StreamWriter {
+            sink,
+            layout,
+            base,
+            off: base,
+            toc: Vec::with_capacity(layout.n_shards),
+            expect_t0: 0,
+        })
+    }
+
+    /// Shards written so far.
+    pub fn shards_written(&self) -> usize {
+        self.toc.len()
+    }
+
+    /// Append one shard's payload (latent blob + species sections) and
+    /// record its TOC entry.  Shards must arrive in time order and tile
+    /// the time axis — the same invariants `Gba2Archive::build` enforces,
+    /// checked here as each shard lands so a bad stream fails early.
+    pub fn write_shard(&mut self, sh: &ShardPayload) -> Result<()> {
+        let l = &self.layout;
+        if self.toc.len() == l.n_shards {
+            return Err(Error::format(format!(
+                "GBA2 stream: shard at t0 {} beyond the declared {} shards",
+                sh.t0, l.n_shards
+            )));
+        }
+        let full = self.toc.len() + 1 < l.n_shards;
+        if sh.t0 != self.expect_t0
+            || sh.nt == 0
+            || sh.nt > l.kt_window
+            || (full && sh.nt != l.kt_window)
+        {
+            return Err(Error::format(format!(
+                "GBA2 stream: shard at t0 {} (nt {}) does not tile (expected t0 {})",
+                sh.t0, sh.nt, self.expect_t0
+            )));
+        }
+        if sh.species.len() != l.ns || sh.codecs.len() != l.ns {
+            return Err(Error::format(format!(
+                "GBA2 stream: shard at t0 {} has {} species sections and {} codec tags, expected {}",
+                sh.t0,
+                sh.species.len(),
+                sh.codecs.len(),
+                l.ns
+            )));
+        }
+        if l.version == VERSION2 && sh.codecs.iter().any(|&c| c != CodecTag::Gbatc) {
+            return Err(Error::format(
+                "GBA2 stream: non-GBATC section in a version-2 stream",
+            ));
+        }
+
+        let shard_off = self.off;
+        self.sink.write_all(&sh.latent_blob)?;
+        let latent = (shard_off, sh.latent_blob.len() as u64);
+        let mut off = shard_off + latent.1;
+        let mut species = Vec::with_capacity(l.ns);
+        for sec in &sh.species {
+            self.sink.write_all(sec)?;
+            species.push((off, sec.len() as u64));
+            off += sec.len() as u64;
+        }
+        self.toc.push(ShardToc {
+            t0: sh.t0,
+            nt: sh.nt,
+            shard: (shard_off, off - shard_off),
+            latent,
+            species,
+            codecs: sh.codecs.clone(),
+        });
+        self.expect_t0 += sh.nt;
+        self.off = off;
+        Ok(())
+    }
+
+    /// Seal the archive: validate coverage, back-patch the header + TOC
+    /// into the reserved region, flush, and hand the sink back.  The
+    /// header's dims/kt_window must match the declared layout.
+    pub fn finish(mut self, header: &Gba2Header) -> Result<(W, StreamSummary)> {
+        let l = self.layout;
+        if self.toc.len() != l.n_shards || self.expect_t0 != l.nt {
+            return Err(Error::format(format!(
+                "GBA2 stream: {} of {} shards covering {} of {} timesteps at finish",
+                self.toc.len(),
+                l.n_shards,
+                self.expect_t0,
+                l.nt
+            )));
+        }
+        if header.dims.0 != l.nt
+            || header.dims.1 != l.ns
+            || header.kt_window != l.kt_window
+            || header.ranges.len() != l.ns
+        {
+            return Err(Error::format(format!(
+                "GBA2 stream: header (dims {:?}, kt_window {}, {} ranges) does not match \
+                 the declared layout (nt {}, ns {}, kt_window {})",
+                header.dims,
+                header.kt_window,
+                header.ranges.len(),
+                l.nt,
+                l.ns,
+                l.kt_window
+            )));
+        }
+        // the version governs the TOC entry size, so a misdeclaration
+        // would shift every payload offset — re-derive and reject
+        let mixed = self
+            .toc
+            .iter()
+            .any(|e| e.codecs.iter().any(|&c| c != CodecTag::Gbatc));
+        let derived = if mixed { VERSION3 } else { VERSION2 };
+        if derived != l.version {
+            return Err(Error::format(format!(
+                "GBA2 stream: declared version {} but sections require version {derived}",
+                l.version
+            )));
+        }
+
+        let mut w = ByteWriter::new();
+        write_header_toc(&mut w, header, &self.toc, l.version);
+        let prefix = w.finish();
+        debug_assert_eq!(prefix.len() as u64, self.base);
+        self.sink.seek(SeekFrom::Start(0))?;
+        self.sink.write_all(&prefix)?;
+        self.sink.seek(SeekFrom::Start(self.off))?;
+        self.sink.flush()?;
+
+        let mut codec_totals = [(0usize, 0u64); 3];
+        for e in &self.toc {
+            for (&(_, len), &tag) in e.species.iter().zip(&e.codecs) {
+                let slot = &mut codec_totals[tag as usize];
+                slot.0 += 1;
+                slot.1 += len;
+            }
+        }
+        Ok((
+            self.sink,
+            StreamSummary {
+                bytes: self.off,
+                version: l.version,
+                codec_totals,
+            },
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archive::Gba2Archive;
+    use std::io::Cursor;
+
+    fn header(model: u64) -> Gba2Header {
+        Gba2Header {
+            tcn_used: true,
+            dims: (8, 2, 10, 8),
+            block: (4, 5, 4),
+            latent_dim: 6,
+            kt_window: 4,
+            pressure: 40.0e5,
+            nrmse_target: 1e-3,
+            model_param_bytes: model,
+            ranges: vec![(0.0, 1.0), (-1.0, 2.0)],
+        }
+    }
+
+    fn shards_v2() -> Vec<ShardPayload> {
+        vec![
+            ShardPayload::gbatc(0, 4, vec![1, 2, 3], vec![vec![9; 7], vec![8; 5]]),
+            ShardPayload::gbatc(4, 4, vec![4, 5], vec![vec![7; 3], vec![6; 11]]),
+        ]
+    }
+
+    fn shards_v3() -> Vec<ShardPayload> {
+        vec![
+            ShardPayload {
+                t0: 0,
+                nt: 4,
+                latent_blob: vec![1, 2, 3],
+                species: vec![vec![9; 7], vec![0xAB; 17]],
+                codecs: vec![CodecTag::Gbatc, CodecTag::Sz],
+            },
+            ShardPayload {
+                t0: 4,
+                nt: 4,
+                latent_blob: Vec::new(),
+                species: vec![vec![0xCD; 9], vec![0xEF; 5]],
+                codecs: vec![CodecTag::Dense, CodecTag::Sz],
+            },
+        ]
+    }
+
+    fn layout(version: u16) -> StreamLayout {
+        StreamLayout {
+            nt: 8,
+            ns: 2,
+            kt_window: 4,
+            n_shards: 2,
+            version,
+        }
+    }
+
+    /// The streamed bytes must equal `Gba2Archive::build` exactly — the
+    /// invariant the session's byte-identity property test rests on.
+    #[test]
+    fn streamed_archive_is_byte_identical_to_build() {
+        for (version, shards) in [(2u16, shards_v2()), (3, shards_v3())] {
+            let batch = Gba2Archive::build(header(0), shards.clone()).unwrap();
+            let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(version)).unwrap();
+            for sh in &shards {
+                w.write_shard(sh).unwrap();
+            }
+            let (sink, summary) = w.finish(&header(0)).unwrap();
+            let streamed = sink.into_inner();
+            assert_eq!(summary.bytes as usize, streamed.len());
+            assert_eq!(summary.version, version);
+            assert_eq!(streamed, batch.bytes, "version {version} bytes differ");
+            // and it parses back with the right TOC
+            let back = Gba2Archive::deserialize(&streamed).unwrap();
+            assert_eq!(back.toc.len(), 2);
+            assert_eq!(back.version(), version);
+        }
+    }
+
+    #[test]
+    fn stream_misuse_is_rejected() {
+        // non-tiling shard
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+        let mut bad = shards_v2()[1].clone();
+        bad.t0 = 2;
+        assert!(w.write_shard(&bad).is_err());
+        // v2 stream refuses tagged sections
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+        assert!(w.write_shard(&shards_v3()[0]).is_err());
+        // finishing before every shard arrived
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+        w.write_shard(&shards_v2()[0]).unwrap();
+        assert!(w.finish(&header(0)).is_err());
+        // declared v3 but all sections GBATC — layout mismatch at finish
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(3)).unwrap();
+        for sh in shards_v2() {
+            w.write_shard(&sh).unwrap();
+        }
+        assert!(w.finish(&header(0)).is_err());
+        // header inconsistent with the declared layout
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+        for sh in shards_v2() {
+            w.write_shard(&sh).unwrap();
+        }
+        let mut h = header(0);
+        h.kt_window = 8;
+        assert!(w.finish(&h).is_err());
+    }
+
+    #[test]
+    fn extra_shards_rejected() {
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+        for sh in shards_v2() {
+            w.write_shard(&sh).unwrap();
+        }
+        let extra = ShardPayload::gbatc(8, 4, Vec::new(), vec![vec![1], vec![2]]);
+        assert!(w.write_shard(&extra).is_err());
+    }
+}

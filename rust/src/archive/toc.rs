@@ -43,8 +43,8 @@ use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub const MAGIC2: &[u8; 4] = b"GBA2";
-const VERSION2: u16 = 2;
-const VERSION3: u16 = 3;
+pub(crate) const VERSION2: u16 = 2;
+pub(crate) const VERSION3: u16 = 3;
 
 /// Bytes of the fixed prefix through `n_shards` — enough to size the rest
 /// of the header + TOC.
@@ -181,6 +181,62 @@ pub fn codec_tag_offset(ns: usize, shard: usize, species: usize) -> usize {
     header_len(ns, shard, VERSION3) + 40 + 16 * ns + species
 }
 
+/// Header + TOC size in bytes for `ns` species and `n_shards` shards —
+/// where the first payload byte lands.  Exposed for the incremental
+/// writer, which must reserve this region before any payload is written.
+pub(crate) fn header_toc_len(ns: usize, n_shards: usize, version: u16) -> usize {
+    header_len(ns, n_shards, version)
+}
+
+/// Serialize the header + TOC prefix (everything before the payloads).
+/// Both [`Gba2Archive::build`] and the incremental
+/// [`crate::archive::stream::Gba2StreamWriter`] emit their prefix through
+/// this one function, so streamed archives are byte-identical to
+/// batch-built ones.
+pub(crate) fn write_header_toc(
+    w: &mut ByteWriter,
+    header: &Gba2Header,
+    toc: &[ShardToc],
+    version: u16,
+) {
+    w.bytes(MAGIC2);
+    w.u16(version);
+    w.u16(if header.tcn_used { 1 } else { 0 });
+    for d in [header.dims.0, header.dims.1, header.dims.2, header.dims.3] {
+        w.u32(d as u32);
+    }
+    for d in [header.block.0, header.block.1, header.block.2] {
+        w.u32(d as u32);
+    }
+    w.u32(header.latent_dim as u32);
+    w.u32(header.kt_window as u32);
+    w.u32(toc.len() as u32);
+    w.f64(header.pressure);
+    w.f64(header.nrmse_target);
+    w.u64(header.model_param_bytes);
+    for &(lo, hi) in &header.ranges {
+        w.f32(lo);
+        w.f32(hi);
+    }
+    for entry in toc {
+        w.u32(entry.t0 as u32);
+        w.u32(entry.nt as u32);
+        w.u64(entry.shard.0);
+        w.u64(entry.shard.1);
+        w.u64(entry.latent.0);
+        w.u64(entry.latent.1);
+        for &(o, l) in &entry.species {
+            w.u64(o);
+            w.u64(l);
+        }
+        if version >= VERSION3 {
+            for &c in &entry.codecs {
+                w.u8(c as u8);
+            }
+        }
+    }
+}
+
 impl Gba2Archive {
     /// Assemble an archive from per-shard payloads.  Shards must tile the
     /// time axis in order.
@@ -256,42 +312,7 @@ impl Gba2Archive {
         }
 
         let mut w = ByteWriter::new();
-        w.bytes(MAGIC2);
-        w.u16(version);
-        w.u16(if header.tcn_used { 1 } else { 0 });
-        for d in [header.dims.0, header.dims.1, header.dims.2, header.dims.3] {
-            w.u32(d as u32);
-        }
-        for d in [header.block.0, header.block.1, header.block.2] {
-            w.u32(d as u32);
-        }
-        w.u32(header.latent_dim as u32);
-        w.u32(header.kt_window as u32);
-        w.u32(shards.len() as u32);
-        w.f64(header.pressure);
-        w.f64(header.nrmse_target);
-        w.u64(header.model_param_bytes);
-        for &(lo, hi) in &header.ranges {
-            w.f32(lo);
-            w.f32(hi);
-        }
-        for entry in &toc {
-            w.u32(entry.t0 as u32);
-            w.u32(entry.nt as u32);
-            w.u64(entry.shard.0);
-            w.u64(entry.shard.1);
-            w.u64(entry.latent.0);
-            w.u64(entry.latent.1);
-            for &(o, l) in &entry.species {
-                w.u64(o);
-                w.u64(l);
-            }
-            if version >= VERSION3 {
-                for &c in &entry.codecs {
-                    w.u8(c as u8);
-                }
-            }
-        }
+        write_header_toc(&mut w, &header, &toc, version);
         debug_assert_eq!(w.buf.len() as u64, base);
         for sh in &shards {
             w.bytes(&sh.latent_blob);
@@ -707,6 +728,22 @@ impl SectionSource for SliceSource<'_> {
                     self.0.len()
                 ))
             })
+    }
+
+    fn source_len(&self) -> u64 {
+        self.0.len() as u64
+    }
+}
+
+/// Owning in-memory source — [`SliceSource`] without the borrow, for
+/// readers that hold the serialized archive themselves (e.g.
+/// `api::ArchiveReader` over bytes, or a legacy `GBA1` archive converted
+/// to its `GBA2` view).
+pub struct MemSource(pub Vec<u8>);
+
+impl SectionSource for MemSource {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        SliceSource(&self.0).read_at(off, len)
     }
 
     fn source_len(&self) -> u64 {

@@ -139,6 +139,23 @@ impl Mechanism {
     }
 }
 
+/// All mechanism species names, table order (the dataset's species axis).
+pub fn species_names() -> Vec<&'static str> {
+    SPECIES.iter().map(|s| s.name).collect()
+}
+
+/// Resolve a mechanism species *name* to its index on the species axis.
+/// Unknown names are a typed config error that lists every available
+/// name, so callers (the CLI, `api::SpeciesSel`) never guess.
+pub fn resolve_species(name: &str) -> crate::error::Result<usize> {
+    crate::chem::species::index_of(name).ok_or_else(|| {
+        crate::error::Error::config(format!(
+            "unknown species `{name}`; available: {}",
+            species_names().join(", ")
+        ))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -181,6 +198,18 @@ mod tests {
                 "reaction {i}: {lhs} vs {rhs}"
             );
         }
+    }
+
+    #[test]
+    fn species_names_resolve_with_helpful_errors() {
+        assert_eq!(resolve_species("OH").unwrap(), 9);
+        assert_eq!(resolve_species("nC7H16").unwrap(), 0);
+        let err = resolve_species("unobtainium").unwrap_err().to_string();
+        // the error lists the available names so the caller can fix the
+        // query without a round trip to the docs
+        assert!(err.contains("unobtainium"), "{err}");
+        assert!(err.contains("nC7H16"), "{err}");
+        assert!(err.contains("NNH"), "{err}");
     }
 
     #[test]

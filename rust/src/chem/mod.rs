@@ -13,6 +13,6 @@ pub mod mechanism;
 pub mod production;
 pub mod species;
 
-pub use mechanism::{Mechanism, Reaction};
+pub use mechanism::{resolve_species, species_names, Mechanism, Reaction};
 pub use production::production_rates;
 pub use species::{index_of, Role, Species, MAJORS, MINOR_C2H3, MINOR_LOWT, NS, SPECIES};

@@ -77,29 +77,42 @@ COMMANDS:
   gen-data    --out <file> [--profile tiny|small|medium|paper] [--seed N]
               Generate a synthetic S3D-HCCI-like dataset (SDF1).
   compress    --input <sdf> --output <gba> [--nrmse 1e-3] [--no-tcn]
+              [--species-nrmse NAME=T[,NAME=T...]]
               [--codec auto|gbatc|sz|dense] [--latent-bin 0.02]
               [--artifacts DIR | --reference] [--threads N]
               [--kt-window N] [--shard-workers N]
               [--full-basis] [--model-f32] [--v1]
-              Shard-streaming compression with guaranteed per-species
-              error bounds into an indexed GBA2 archive.  --codec auto
-              runs the rate-distortion planner: per (shard, species) it
-              trials GBATC, SZ, and a dense-plane fallback and keeps the
-              smallest encoding certifying the NRMSE bound (mixed-codec
-              v3 container; all-GBATC archives stay v2).  --v1 emits the
-              legacy single-shot GBA1 container (needs kt-window >= T and
-              --codec gbatc).  The report prints per-stage wall times
-              (PCA fit, guarantee loop, entropy encode, planner trials)
-              for perf attribution.
+              Streams the dataset through a push-based api session
+              (gbatc::api::CompressSession): guaranteed per-species
+              error bounds, shard payloads written to the output file as
+              each kt-window finishes, peak memory bounded by one shard.
+              A session compresses windows in arrival order (all cores
+              work inside the current shard); --shard-workers applies to
+              the library's one-shot ShardEngine::compress path.
+              --nrmse is the uniform accuracy target; --species-nrmse
+              overrides it per species (by mechanism name or index),
+              e.g. --species-nrmse OH=1e-5,nC7H16=5e-4 — each
+              (shard, species) is certified against its own budget.
+              --codec auto runs the rate-distortion planner: per
+              (shard, species) it trials GBATC, SZ, and a dense-plane
+              fallback and keeps the smallest encoding certifying that
+              species' bound (mixed-codec v3 container; all-GBATC
+              archives stay v2).  --v1 emits the legacy single-shot GBA1
+              container (needs kt-window >= T and --codec gbatc).  The
+              report prints per-stage wall times (PCA fit, guarantee
+              loop, entropy encode, planner trials) for perf attribution.
   decompress  --input <gba> --output <sdf> [--artifacts DIR | --reference]
               [--threads N] [--temp-from <sdf>]
               Reconstruct mass fractions (temperature copied from
               --temp-from if given, else zeros).  Accepts GBA1 and GBA2.
   extract     --input <gba2> --output <sdf> [--t0 N] [--t1 N]
-              [--species NAME[,NAME...]] [--artifacts DIR | --reference]
-              [--threads N]
-              Random-access partial decode: reads only the shards/species
+              [--species NAME|INDEX[,NAME|INDEX...]]
+              [--artifacts DIR | --reference] [--threads N]
+              Random-access partial decode through the typed api query
+              (gbatc::api::ArchiveReader): reads only the shards/species
               sections the query touches; reports archive bytes read.
+              Species are mechanism names (e.g. OH,CO) or numeric
+              indices; unknown names list the available ones.
   inspect     --archive <gba|gba2|szf>
               Print the GBA2 table of contents (per-shard and per-species
               byte ranges), per-section codec tags, per-codec byte

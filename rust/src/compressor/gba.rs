@@ -157,6 +157,19 @@ impl<'a> GbatcCompressor<'a> {
         self.engine().compress(ds, opts)
     }
 
+    /// [`Self::compress`] under a typed [`crate::api::ErrorPolicy`] —
+    /// per-species budgets thread through the planner and guarantee
+    /// stage, certified per (shard, species).
+    pub fn compress_with_policy(
+        &self,
+        ds: &Dataset,
+        opts: &CompressOptions,
+        policy: &crate::api::ErrorPolicy,
+    ) -> Result<CompressReport> {
+        let targets = policy.resolve(ds.ns)?;
+        self.engine().compress_with_budgets(ds, opts, &targets)
+    }
+
     /// Decompress an archive back to mass fractions `[T, S, Y, X]`.
     pub fn decompress(&self, archive: &Gba2Archive, threads: usize) -> Result<Vec<f32>> {
         self.engine().decompress_all(archive, threads)
@@ -186,11 +199,23 @@ impl Compressor for GbatcCompressor<'_> {
     }
 
     fn compress_bytes(&self, ds: &Dataset, nrmse_target: f64) -> Result<Vec<u8>> {
+        // thin adapter over the api facade: one-shot compression is a
+        // push session fed from the in-memory dataset into a Cursor sink
+        // (byte-identical to the engine's parallel one-shot pass)
         let opts = CompressOptions {
             nrmse_target,
             ..self.opts.clone()
         };
-        Ok(self.compress(ds, &opts)?.archive.into_bytes())
+        let mut session = crate::api::CompressorBuilder::from_options(&opts).session_on(
+            self.handle,
+            self.decoder_params,
+            self.tcn_params,
+            crate::api::FieldSpec::from_dataset(ds),
+            std::io::Cursor::new(Vec::new()),
+        )?;
+        session.push_dataset(ds)?;
+        let (_report, sink) = session.finish_into()?;
+        Ok(sink.into_inner())
     }
 
     fn decompress_mass(&self, bytes: &[u8]) -> Result<Vec<f32>> {

@@ -403,16 +403,26 @@ pub struct GbatcShardCodec<'a> {
     pub norm: &'a [f32],
     /// Shared-model reconstruction of the shard, `[nt, S, Y, X]`.
     pub recon: &'a [f32],
-    pub params: GuaranteeParams,
+    /// Per-species guarantee parameters (`ErrorPolicy` budgets resolve
+    /// to one τ per species; a uniform policy repeats the same value).
+    pub params: &'a [GuaranteeParams],
     /// Thread budget for each species' PCA covariance fit (bit-identical
     /// for any value; see `Pca::fit_threads`).
     pub pca_threads: usize,
 }
 
 impl GbatcShardCodec<'_> {
+    /// This species' guarantee parameters.
+    fn species_params(&self, s: usize) -> Result<&GuaranteeParams> {
+        self.params
+            .get(s)
+            .ok_or_else(|| Error::codec(format!("no guarantee params for species {s}")))
+    }
+
     /// Run the guarantee for one species; returns the serialized section
     /// and its stats.
     pub fn encode_species(&self, s: usize) -> Result<(Vec<u8>, GbatcSectionStats)> {
+        let params = *self.species_params(s)?;
         let grid = self.grid;
         let d = grid.shape.d();
         let nb = grid.n_blocks();
@@ -427,11 +437,11 @@ impl GbatcShardCodec<'_> {
             &recon_s,
             nb,
             d,
-            &self.params,
+            &params,
             self.pca_threads.max(1),
         );
         let t_ent = std::time::Instant::now();
-        let coeffs = CoeffCodec::encode(&res.per_block, d, effective_bin(&self.params, d))?;
+        let coeffs = CoeffCodec::encode(&res.per_block, d, effective_bin(&params, d))?;
         let stats = GbatcSectionStats {
             max_residual: res.max_residual,
             n_coeffs: res.n_coeffs,
@@ -507,8 +517,9 @@ impl SectionCodec for GbatcShardCodec<'_> {
     }
 
     fn encode(&self, view: &SectionView<'_>, budget: f64) -> Result<Option<SectionEncoding>> {
+        let tau = self.species_params(view.species)?.tau;
         let (bytes, stats) = self.encode_species(view.species)?;
-        if stats.max_residual > self.params.tau + 1e-12 {
+        if stats.max_residual > tau + 1e-12 {
             // the guarantee loop could not reach τ (pathological input)
             return Ok(None);
         }
@@ -824,12 +835,12 @@ mod tests {
             .collect();
         let d = shape.d();
         let tau = 0.02 * (d as f64).sqrt();
-        let params = GuaranteeParams::for_tau(tau, d);
+        let params = vec![GuaranteeParams::for_tau(tau, d); ns];
         let codec = GbatcShardCodec {
             grid: &grid,
             norm: &norm,
             recon: &recon,
-            params,
+            params: &params,
             pca_threads: 1,
         };
         let npix = ny * nx;

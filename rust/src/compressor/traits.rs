@@ -5,7 +5,17 @@ use crate::error::{Error, Result};
 
 /// Normalize a species selection: empty = all `ns`, otherwise ascending
 /// deduplicated indices, rejected if any is out of range.
+///
+/// A zero-species archive is rejected outright — *every* selection
+/// (including "all") would otherwise resolve to an empty set and the
+/// caller would hand back an empty-but-"successful" buffer for a request
+/// that can never be satisfied.
 pub fn select_species(species: &[usize], ns: usize) -> Result<Vec<usize>> {
+    if ns == 0 {
+        return Err(Error::shape(
+            "species selection on a zero-species archive",
+        ));
+    }
     if species.is_empty() {
         return Ok((0..ns).collect());
     }
@@ -79,5 +89,51 @@ pub trait Compressor {
             }
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn select_species_normalizes_and_validates() {
+        assert_eq!(select_species(&[], 3).unwrap(), vec![0, 1, 2]);
+        assert_eq!(select_species(&[2, 0, 2], 3).unwrap(), vec![0, 2]);
+        assert!(matches!(
+            select_species(&[3], 3),
+            Err(Error::Shape(_))
+        ));
+    }
+
+    /// Regression: a zero-species archive must be a typed shape error for
+    /// *any* selection — not an empty Vec that flows into an
+    /// empty-but-"successful" `decompress_range` buffer.
+    #[test]
+    fn zero_species_archive_is_a_typed_error() {
+        assert!(matches!(select_species(&[], 0), Err(Error::Shape(_))));
+        assert!(matches!(select_species(&[0], 0), Err(Error::Shape(_))));
+
+        /// Minimal compressor whose archive claims zero species, driving
+        /// the trait's *default* `decompress_range` implementation.
+        struct ZeroSpecies;
+        impl Compressor for ZeroSpecies {
+            fn name(&self) -> &str {
+                "zero"
+            }
+            fn compress_bytes(&self, _ds: &Dataset, _t: f64) -> Result<Vec<u8>> {
+                Ok(Vec::new())
+            }
+            fn decompress_mass(&self, _bytes: &[u8]) -> Result<Vec<f32>> {
+                Ok(Vec::new())
+            }
+            fn archive_dims(&self, _bytes: &[u8]) -> Result<(usize, usize, usize, usize)> {
+                Ok((4, 0, 8, 8))
+            }
+        }
+        let err = ZeroSpecies.decompress_range(&[], 0, 2, &[]);
+        assert!(matches!(err, Err(Error::Shape(_))), "{err:?}");
+        let err = ZeroSpecies.decompress_range(&[], 0, 2, &[1]);
+        assert!(matches!(err, Err(Error::Shape(_))), "{err:?}");
     }
 }

@@ -155,21 +155,21 @@ pub struct ShardEngine<'a> {
     pub tcn_params: usize,
 }
 
-struct ShardOut {
-    payload: ShardPayload,
-    max_residual: f64,
-    n_coeffs: usize,
-    latent_bytes: usize,
-    bases_bytes: usize,
-    coeff_bytes: usize,
+pub(crate) struct ShardOut {
+    pub(crate) payload: ShardPayload,
+    pub(crate) max_residual: f64,
+    pub(crate) n_coeffs: usize,
+    pub(crate) latent_bytes: usize,
+    pub(crate) bases_bytes: usize,
+    pub(crate) coeff_bytes: usize,
     /// Bytes of sections encoded by self-contained stages (SZ / dense).
-    alt_bytes: usize,
+    pub(crate) alt_bytes: usize,
 }
 
 /// Per-species trial outcome of one shard: every stage's memoized
 /// encoding (GBATC always; SZ/dense when the planner runs) plus the
 /// guarantee stats for report accounting.
-struct SpeciesTrial {
+pub(crate) struct SpeciesTrial {
     /// Memoized per-stage encodings; the archive writer drains the
     /// winning stage's bytes from here — nothing is re-encoded.
     trials: TrialCache,
@@ -180,17 +180,208 @@ struct SpeciesTrial {
     gbatc_certified: bool,
 }
 
-/// One shard's outcome from the parallel pass: already-final payloads
+/// An `--codec auto` shard whose codec choice is deferred to the
+/// archive-level planner (the model-parameter charge is global, so
+/// per-shard decisions alone cannot be optimal).  Holds only *encoded*
+/// candidates — the shard's float working buffers are long gone, which
+/// is what keeps a streaming session's peak workspace at one shard even
+/// though planning happens at `finish()`.
+pub(crate) struct PendingShard {
+    pub(crate) t0: usize,
+    pub(crate) nt: usize,
+    pub(crate) latent_blob: Vec<u8>,
+    pub(crate) trials: Vec<SpeciesTrial>,
+}
+
+/// One shard's outcome from a compression pass: an already-final payload
 /// (single-codec policies), or the candidate encodings the archive-level
 /// planner decides between after all shards finish.
-enum ShardStage {
+pub(crate) enum ShardStage {
     Final(ShardOut),
-    Trials {
-        t0: usize,
-        nt: usize,
-        latent_blob: Vec<u8>,
-        trials: Vec<SpeciesTrial>,
-    },
+    Trials(PendingShard),
+}
+
+/// Resolve the deferred `--codec auto` shards: run the archive-level
+/// rate–distortion planner over the memoized trial costs and assemble
+/// each shard's payload from its winning encodings.
+pub(crate) fn plan_trials(
+    pending: Vec<PendingShard>,
+    model_bytes_full: usize,
+) -> Result<Vec<ShardOut>> {
+    let costs: Vec<(usize, Vec<SectionPlan>)> = pending
+        .iter()
+        .map(|p| {
+            let plans = p
+                .trials
+                .iter()
+                .map(|tr| tr.trials.plan(tr.gbatc_certified))
+                .collect();
+            (p.latent_blob.len(), plans)
+        })
+        .collect();
+    let choices = plan_archive(&costs, model_bytes_full);
+    pending
+        .into_iter()
+        .zip(choices)
+        .map(|(p, (keep, tags))| assemble_shard(p.t0, p.nt, p.latent_blob, p.trials, keep, tags))
+        .collect()
+}
+
+/// Running totals over finished shards — the accounting both the one-shot
+/// [`ShardEngine::compress`] pass and the streaming session accumulate.
+#[derive(Default)]
+pub(crate) struct ShardTotals {
+    pub(crate) max_residual: f64,
+    pub(crate) n_coeffs: usize,
+    pub(crate) latents: usize,
+    pub(crate) bases: usize,
+    pub(crate) coeffs: usize,
+    pub(crate) alt: usize,
+    /// Whether any section decodes through the model (decides whether the
+    /// model-parameter bytes are charged).
+    pub(crate) any_gbatc: bool,
+}
+
+impl ShardTotals {
+    pub(crate) fn add(&mut self, o: &ShardOut) {
+        self.max_residual = self.max_residual.max(o.max_residual);
+        self.n_coeffs += o.n_coeffs;
+        self.latents += o.latent_bytes;
+        self.bases += o.bases_bytes;
+        self.coeffs += o.coeff_bytes;
+        self.alt += o.alt_bytes;
+        self.any_gbatc |= o.payload.codecs.iter().any(|&c| c == CodecTag::Gbatc);
+    }
+
+    pub(crate) fn breakdown(&self, archive_bytes: usize, model_bytes: usize) -> SizeBreakdown {
+        SizeBreakdown {
+            latents: self.latents,
+            bases: self.bases,
+            coeffs: self.coeffs,
+            alt_sections: self.alt,
+            header: archive_bytes
+                .saturating_sub(self.latents + self.bases + self.coeffs + self.alt),
+            model_params: model_bytes,
+        }
+    }
+}
+
+/// Immutable per-run configuration shared by every shard of one
+/// compression pass — one-shot or streaming session.  Resolving it once
+/// (per-species guarantee params, conservative budgets, thread split)
+/// guarantees both drivers feed [`ShardEngine::shard_stage`] identical
+/// numbers, which is what makes streamed archives byte-identical to
+/// batch-compressed ones.
+pub(crate) struct ShardRunCtx {
+    pub(crate) shape: BlockShape,
+    pub(crate) spec: crate::runtime::RuntimeSpec,
+    pub(crate) ns: usize,
+    pub(crate) ny: usize,
+    pub(crate) nx: usize,
+    pub(crate) ranges: Vec<(f32, f32)>,
+    /// Raw per-species NRMSE targets (error messages, header display).
+    pub(crate) targets: Vec<f64>,
+    /// Per-species guarantee parameters (0.1%-conservative τ, see below).
+    pub(crate) params: Vec<GuaranteeParams>,
+    /// Per-species budgets for the self-contained stages, equally
+    /// conservative.
+    pub(crate) budgets: Vec<f64>,
+    pub(crate) codec: CodecChoice,
+    pub(crate) use_tcn: bool,
+    pub(crate) latent_bin: f64,
+    pub(crate) queue_depth: usize,
+    pub(crate) inner_threads: usize,
+    pub(crate) pca_threads: usize,
+}
+
+impl ShardRunCtx {
+    /// Resolve options + per-species NRMSE targets into the run context.
+    /// `targets` must have one positive entry per species — the
+    /// `api::ErrorPolicy` resolves to exactly this vector (a uniform
+    /// policy repeats one value).
+    pub(crate) fn new(
+        opts: &CompressOptions,
+        targets: &[f64],
+        spec: crate::runtime::RuntimeSpec,
+        dims: (usize, usize, usize),
+        ranges: Vec<(f32, f32)>,
+        inner_threads: usize,
+    ) -> Result<ShardRunCtx> {
+        let (ns, ny, nx) = dims;
+        if targets.len() != ns {
+            return Err(Error::config(format!(
+                "{} NRMSE targets for {ns} species",
+                targets.len()
+            )));
+        }
+        for (s, &t) in targets.iter().enumerate() {
+            if t.is_nan() || t <= 0.0 {
+                return Err(Error::config(format!(
+                    "species {s}: NRMSE target {t} must be positive"
+                )));
+            }
+        }
+        if ranges.len() != ns {
+            return Err(Error::shape(format!(
+                "{} normalization ranges for {ns} species",
+                ranges.len()
+            )));
+        }
+        let shape = BlockShape {
+            kt: spec.block.0,
+            by: spec.block.1,
+            bx: spec.block.2,
+        };
+        let d = shape.d();
+        // Certify against a 0.1%-conservative tau so that the f32
+        // denormalize/renormalize round trip on the decompressor side
+        // (worst for species with offset >> range, e.g. N2) cannot push a
+        // block past the user's bound.
+        let params = targets
+            .iter()
+            .map(|&t| {
+                let tau = t * (d as f64).sqrt();
+                let tau_cert = tau * 0.999;
+                GuaranteeParams {
+                    tau: tau_cert,
+                    coeff_bin: tau_cert / (d as f64).sqrt(),
+                    store_full_basis: opts.store_full_basis,
+                }
+            })
+            .collect();
+        let budgets = targets.iter().map(|&t| t * 0.999).collect();
+        // species run concurrently inside a shard; leftover cores go to
+        // each species' PCA covariance fit (bit-identical at any count)
+        let pca_threads = (inner_threads / ns.min(inner_threads).max(1)).max(1);
+        Ok(ShardRunCtx {
+            shape,
+            spec,
+            ns,
+            ny,
+            nx,
+            ranges,
+            targets: targets.to_vec(),
+            params,
+            budgets,
+            codec: opts.codec,
+            use_tcn: opts.use_tcn,
+            latent_bin: opts.latent_bin,
+            queue_depth: opts.queue_depth,
+            inner_threads,
+            pca_threads,
+        })
+    }
+
+    /// Loosest per-species target (header display; certification is
+    /// per-species and stricter).
+    pub(crate) fn max_target(&self) -> f64 {
+        self.targets.iter().fold(f64::NEG_INFINITY, |a, &t| a.max(t))
+    }
+
+    /// Loosest per-block ℓ2 bound τ = max target · √D (report display).
+    pub(crate) fn max_tau(&self) -> f64 {
+        self.max_target() * (self.shape.d() as f64).sqrt()
+    }
 }
 
 /// Assemble one shard's payload from its trials and the planner's
@@ -254,8 +445,24 @@ impl<'a> ShardEngine<'a> {
         }
     }
 
-    /// Compress a dataset shard by shard into an indexed `GBA2` archive.
+    /// Compress a dataset shard by shard into an indexed `GBA2` archive
+    /// with a uniform per-species NRMSE target (`opts.nrmse_target`).
     pub fn compress(&self, ds: &Dataset, opts: &CompressOptions) -> Result<CompressReport> {
+        let targets = vec![opts.nrmse_target; ds.ns];
+        self.compress_with_budgets(ds, opts, &targets)
+    }
+
+    /// [`Self::compress`] with one NRMSE target per species — the engine
+    /// half of the `api::ErrorPolicy` knob.  Each (shard, species) section
+    /// is planned and certified against its own budget; the report's
+    /// `tau` is the loosest per-block bound (each species' residuals are
+    /// additionally within its own, tighter τ).
+    pub fn compress_with_budgets(
+        &self,
+        ds: &Dataset,
+        opts: &CompressOptions,
+        targets: &[f64],
+    ) -> Result<CompressReport> {
         let progress = Progress::new();
         let spec = self.handle.spec();
         if ds.ns != spec.species {
@@ -273,216 +480,26 @@ impl<'a> ShardEngine<'a> {
         opts.validate(shape.kt)?;
         // validate full-field divisibility up front
         BlockGrid::for_dataset(ds, shape)?;
-        let d = shape.d();
         let threads = effective_threads(opts.threads);
         let plan = ShardPlan::new(ds.nt, shape.kt, opts.kt_window)?;
         let n_shards = plan.len();
         let shard_workers = opts.shard_workers.max(1).min(n_shards);
         let inner_threads = (threads / shard_workers).max(1);
-        let npix = ds.ny * ds.nx;
-        let stride = ds.ns * npix;
-
-        let ranges = ds.species_ranges();
-        // Certify against a 0.1%-conservative tau so that the f32
-        // denormalize/renormalize round trip on the decompressor side
-        // (worst for species with offset >> range, e.g. N2) cannot push a
-        // block past the user's bound.
-        let tau = opts.nrmse_target * (d as f64).sqrt();
-        let tau_cert = tau * 0.999;
-        let params = GuaranteeParams {
-            tau: tau_cert,
-            coeff_bin: tau_cert / (d as f64).sqrt(),
-            store_full_basis: opts.store_full_basis,
-        };
-        let pipeline = Pipeline {
-            queue_depth: opts.queue_depth,
-        };
+        let ctx = ShardRunCtx::new(
+            opts,
+            targets,
+            spec,
+            (ds.ns, ds.ny, ds.nx),
+            ds.species_ranges(),
+            inner_threads,
+        )?;
         let meter = WorkspaceMeter::new();
         let clock = StageClock::new();
-        // species run concurrently inside a shard; leftover cores go to
-        // each species' PCA covariance fit (bit-identical at any count)
-        let pca_threads = (inner_threads / ds.ns.min(inner_threads).max(1)).max(1);
-
-        // self-contained stages certify against the same 0.1%-conservative
-        // budget, so the f32 denormalize round trip cannot break the bound
-        let budget = opts.nrmse_target * 0.999;
 
         let stages: Vec<ShardStage> = par_try_map(n_shards, shard_workers, |i| {
             let w = plan.window(i);
-            let grid = BlockGrid::new((w.nt, ds.ns, ds.ny, ds.nx), shape)?;
-            let nb = grid.n_blocks();
-            // non-GBATC policies run per-species section trials: one
-            // gathered plane plus trial encode/decode buffers per worker
-            let trial_extra = if opts.codec == CodecChoice::Gbatc {
-                0
-            } else {
-                3 * w.nt * npix * 4 * inner_threads.min(ds.ns)
-            };
-            let _charge = meter.charge(
-                shard_workspace_bytes(
-                    w.nt * stride,
-                    nb,
-                    spec.latent,
-                    d,
-                    inner_threads.min(ds.ns),
-                ) + pipeline_workspace_bytes(
-                    opts.queue_depth,
-                    spec.batch,
-                    grid.instance_len(),
-                    w.nt * stride,
-                ) + trial_extra,
-            );
-
-            // 1. normalize the shard's contiguous view (global ranges)
             let view = ds.shard_view(w)?;
-            let norm = normalize_window(view.mass, &ranges, w.nt, ds.ns, npix, inner_threads);
-
-            // single self-contained stage: no model, no latent plane
-            if matches!(opts.codec, CodecChoice::Sz | CodecChoice::Dense) {
-                let stage: &dyn SectionCodec = match opts.codec {
-                    CodecChoice::Sz => &SZ_STAGE,
-                    _ => &DENSE_STAGE,
-                };
-                let encs = par_try_map(ds.ns, inner_threads, |s| {
-                    let t = std::time::Instant::now();
-                    let plane = registry::gather_plane(&norm, w.nt, ds.ns, npix, s);
-                    let sv = SectionView {
-                        species: s,
-                        nt: w.nt,
-                        ny: ds.ny,
-                        nx: ds.nx,
-                        norm: &plane,
-                    };
-                    let enc = stage.encode(&sv, budget)?.ok_or_else(|| {
-                        Error::guarantee(format!(
-                            "{} stage cannot certify NRMSE {:.3e} on shard t0 {} species {s}",
-                            stage.name(),
-                            opts.nrmse_target,
-                            w.t0
-                        ))
-                    })?;
-                    progress.add(&progress.species_guaranteed, 1);
-                    progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
-                    Ok(enc)
-                })?;
-                let mut sec_bytes = Vec::with_capacity(ds.ns);
-                let mut codecs = Vec::with_capacity(ds.ns);
-                let mut alt_bytes = 0usize;
-                for e in encs {
-                    alt_bytes += e.bytes.len();
-                    codecs.push(e.tag);
-                    sec_bytes.push(e.bytes);
-                }
-                return Ok(ShardStage::Final(ShardOut {
-                    payload: ShardPayload {
-                        t0: w.t0,
-                        nt: w.nt,
-                        latent_blob: Vec::new(),
-                        species: sec_bytes,
-                        codecs,
-                    },
-                    max_residual: 0.0,
-                    n_coeffs: 0,
-                    latent_bytes: 0,
-                    bases_bytes: 0,
-                    coeff_bytes: 0,
-                    alt_bytes,
-                }));
-            }
-
-            // 2. shared-model trial: AE encode -> latents -> quantize + Huffman
-            let latents = pipeline.encode_all(&grid, &norm, self.handle, &progress)?;
-            let t_ent = std::time::Instant::now();
-            let (latent_blob, deq) =
-                LatentCodec::encode(&latents, nb, spec.latent, opts.latent_bin)?;
-            clock.add_ns(&clock.entropy_ns, t_ent.elapsed().as_nanos() as u64);
-            drop(latents);
-
-            // 3. decode (+ TCN) from the *dequantized* latents — exactly
-            // what the decompressor will see
-            let recon = pipeline.decode_all(&grid, &deq, self.handle, opts.use_tcn, &progress)?;
-            drop(deq);
-
-            // 4. per-(shard, species) stages: the Algorithm-1 guarantee,
-            // plus (planner only) full SZ / dense trials on the section
-            let gbatc = GbatcShardCodec {
-                grid: &grid,
-                norm: &norm,
-                recon: &recon,
-                params,
-                pca_threads,
-            };
-            let auto = opts.codec == CodecChoice::Auto;
-            let trials: Vec<SpeciesTrial> = par_try_map(ds.ns, inner_threads, |s| {
-                let t = std::time::Instant::now();
-                let (gbatc_bytes, stats) = gbatc.encode_species(s)?;
-                let gbatc_certified = stats.max_residual <= params.tau + 1e-12;
-                clock.add_ns(&clock.pca_fit_ns, stats.pca_fit_ns);
-                clock.add_ns(&clock.guarantee_ns, stats.guarantee_ns);
-                clock.add_ns(&clock.entropy_ns, stats.entropy_ns);
-                let mut trials = TrialCache::new();
-                trials.insert(SectionEncoding {
-                    tag: CodecTag::Gbatc,
-                    bytes: gbatc_bytes,
-                    nrmse: stats.max_residual / (d as f64).sqrt(),
-                });
-                if auto {
-                    let t_trial = std::time::Instant::now();
-                    let plane = registry::gather_plane(&norm, w.nt, ds.ns, npix, s);
-                    let sv = SectionView {
-                        species: s,
-                        nt: w.nt,
-                        ny: ds.ny,
-                        nx: ds.nx,
-                        norm: &plane,
-                    };
-                    if let Some(enc) = SZ_STAGE.encode(&sv, budget)? {
-                        trials.insert(enc);
-                    }
-                    if let Some(enc) = DENSE_STAGE.encode(&sv, budget)? {
-                        trials.insert(enc);
-                    }
-                    // only best_alt's winner is ever selectable — free the
-                    // losing alternative's bytes before the archive-level
-                    // planning wait
-                    trials.evict_losing_alt();
-                    clock.add_ns(&clock.planner_trials_ns, t_trial.elapsed().as_nanos() as u64);
-                    if !gbatc_certified && trials.best_alt().is_none() {
-                        return Err(Error::guarantee(format!(
-                            "no stage certifies NRMSE {:.3e} on shard t0 {} species {s}",
-                            opts.nrmse_target, w.t0
-                        )));
-                    }
-                }
-                progress.add(&progress.species_guaranteed, 1);
-                progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
-                Ok(SpeciesTrial {
-                    trials,
-                    stats,
-                    gbatc_certified,
-                })
-            })?;
-
-            // 5. single-codec GBATC finalizes here; the planner defers the
-            // choice to the archive-level pass (the model-parameter charge
-            // is global, so per-shard decisions alone cannot be optimal)
-            if auto {
-                Ok(ShardStage::Trials {
-                    t0: w.t0,
-                    nt: w.nt,
-                    latent_blob,
-                    trials,
-                })
-            } else {
-                Ok(ShardStage::Final(assemble_shard(
-                    w.t0,
-                    w.nt,
-                    latent_blob,
-                    trials,
-                    true,
-                    vec![CodecTag::Gbatc; ds.ns],
-                )?))
-            }
+            self.shard_stage(&ctx, view.mass, w.t0, w.nt, &meter, &clock, &progress)
         })?;
 
         // archive-level rate–distortion choice: per-shard byte minima,
@@ -492,67 +509,27 @@ impl<'a> ShardEngine<'a> {
             opts.model_bytes_f32,
         );
         let mut outs: Vec<ShardOut> = Vec::with_capacity(stages.len());
-        let mut pending: Vec<(usize, usize, Vec<u8>, Vec<SpeciesTrial>)> = Vec::new();
+        let mut pending: Vec<PendingShard> = Vec::new();
         for stage in stages {
             match stage {
                 ShardStage::Final(o) => outs.push(o),
-                ShardStage::Trials {
-                    t0,
-                    nt,
-                    latent_blob,
-                    trials,
-                } => pending.push((t0, nt, latent_blob, trials)),
+                ShardStage::Trials(p) => pending.push(p),
             }
         }
         if !pending.is_empty() {
-            let costs: Vec<(usize, Vec<SectionPlan>)> = pending
-                .iter()
-                .map(|(_, _, latent_blob, trials)| {
-                    let plans = trials
-                        .iter()
-                        .map(|tr| tr.trials.plan(tr.gbatc_certified))
-                        .collect();
-                    (latent_blob.len(), plans)
-                })
-                .collect();
-            let choices = plan_archive(&costs, model_bytes_full);
-            for ((t0, nt, latent_blob, trials), (keep_latent, tags)) in
-                pending.into_iter().zip(choices)
-            {
-                outs.push(assemble_shard(
-                    t0,
-                    nt,
-                    latent_blob,
-                    trials,
-                    keep_latent,
-                    tags,
-                )?);
-            }
+            outs.extend(plan_trials(pending, model_bytes_full)?);
             outs.sort_by_key(|o| o.payload.t0);
         }
 
         // model parameters are charged only when some section actually
         // decodes through the model (all-SZ/dense archives are model-free)
-        let any_gbatc = outs
-            .iter()
-            .any(|o| o.payload.codecs.iter().any(|&c| c == CodecTag::Gbatc));
-        let model_bytes = if any_gbatc { model_bytes_full } else { 0 };
-        let mut max_block_residual = 0.0f64;
-        let mut n_coeffs = 0usize;
-        let mut latents_bytes = 0usize;
-        let mut bases_bytes = 0usize;
-        let mut coeff_bytes = 0usize;
-        let mut alt_bytes = 0usize;
+        let mut totals = ShardTotals::default();
         let mut payloads = Vec::with_capacity(outs.len());
         for o in outs {
-            max_block_residual = max_block_residual.max(o.max_residual);
-            n_coeffs += o.n_coeffs;
-            latents_bytes += o.latent_bytes;
-            bases_bytes += o.bases_bytes;
-            coeff_bytes += o.coeff_bytes;
-            alt_bytes += o.alt_bytes;
+            totals.add(&o);
             payloads.push(o.payload);
         }
+        let model_bytes = if totals.any_gbatc { model_bytes_full } else { 0 };
         let header = Gba2Header {
             tcn_used: opts.use_tcn,
             dims: (ds.nt, ds.ns, ds.ny, ds.nx),
@@ -560,33 +537,227 @@ impl<'a> ShardEngine<'a> {
             latent_dim: spec.latent,
             kt_window: plan.kt_window,
             pressure: ds.pressure,
-            nrmse_target: opts.nrmse_target,
+            nrmse_target: ctx.max_target(),
             model_param_bytes: model_bytes as u64,
-            ranges,
+            ranges: ctx.ranges.clone(),
         };
         let archive = Gba2Archive::build(header, payloads)?;
         let payload = archive.payload_bytes();
-        let breakdown = SizeBreakdown {
-            latents: latents_bytes,
-            bases: bases_bytes,
-            coeffs: coeff_bytes,
-            alt_sections: alt_bytes,
-            header: payload
-                .saturating_sub(latents_bytes + bases_bytes + coeff_bytes + alt_bytes),
-            model_params: model_bytes,
-        };
+        let breakdown = totals.breakdown(payload, model_bytes);
         Ok(CompressReport {
             archive,
             breakdown,
-            max_block_residual,
-            tau,
-            n_coeffs,
+            max_block_residual: totals.max_residual,
+            tau: ctx.max_tau(),
+            n_coeffs: totals.n_coeffs,
             n_shards,
             peak_workspace_bytes: meter.peak_bytes(),
             stage_times: clock.snapshot(),
             elapsed_s: progress.elapsed_s(),
             progress_summary: progress.summary(),
         })
+    }
+
+    /// Compress one raw time window `[nt_w, S, Y, X]` (a contiguous shard
+    /// of the field) into its shard stage — the unit of work both the
+    /// parallel one-shot pass above and the push-based
+    /// `api::CompressSession` drive.  Identical inputs produce identical
+    /// bytes regardless of the driver or thread counts (the determinism
+    /// contract `tests/integration.rs` asserts).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn shard_stage(
+        &self,
+        ctx: &ShardRunCtx,
+        mass: &[f32],
+        t0: usize,
+        nt_w: usize,
+        meter: &WorkspaceMeter,
+        clock: &StageClock,
+        progress: &Progress,
+    ) -> Result<ShardStage> {
+        let (ns, ny, nx) = (ctx.ns, ctx.ny, ctx.nx);
+        let npix = ny * nx;
+        let stride = ns * npix;
+        if mass.len() != nt_w * stride {
+            return Err(Error::shape(format!(
+                "shard at t0 {t0}: {} mass values for a [{nt_w}, {ns}, {ny}, {nx}] window",
+                mass.len()
+            )));
+        }
+        let spec = ctx.spec;
+        let shape = ctx.shape;
+        let d = shape.d();
+        let inner_threads = ctx.inner_threads;
+        let grid = BlockGrid::new((nt_w, ns, ny, nx), shape)?;
+        let nb = grid.n_blocks();
+        // non-GBATC policies run per-species section trials: one
+        // gathered plane plus trial encode/decode buffers per worker
+        let trial_extra = if ctx.codec == CodecChoice::Gbatc {
+            0
+        } else {
+            3 * nt_w * npix * 4 * inner_threads.min(ns)
+        };
+        let _charge = meter.charge(
+            shard_workspace_bytes(nt_w * stride, nb, spec.latent, d, inner_threads.min(ns))
+                + pipeline_workspace_bytes(
+                    ctx.queue_depth,
+                    spec.batch,
+                    grid.instance_len(),
+                    nt_w * stride,
+                )
+                + trial_extra,
+        );
+        let pipeline = Pipeline {
+            queue_depth: ctx.queue_depth,
+        };
+
+        // 1. normalize the shard's contiguous window (global ranges)
+        let norm = normalize_window(mass, &ctx.ranges, nt_w, ns, npix, inner_threads);
+
+        // single self-contained stage: no model, no latent plane
+        if matches!(ctx.codec, CodecChoice::Sz | CodecChoice::Dense) {
+            let stage: &dyn SectionCodec = match ctx.codec {
+                CodecChoice::Sz => &SZ_STAGE,
+                _ => &DENSE_STAGE,
+            };
+            let encs = par_try_map(ns, inner_threads, |s| {
+                let t = std::time::Instant::now();
+                let plane = registry::gather_plane(&norm, nt_w, ns, npix, s);
+                let sv = SectionView {
+                    species: s,
+                    nt: nt_w,
+                    ny,
+                    nx,
+                    norm: &plane,
+                };
+                let enc = stage.encode(&sv, ctx.budgets[s])?.ok_or_else(|| {
+                    Error::guarantee(format!(
+                        "{} stage cannot certify NRMSE {:.3e} on shard t0 {t0} species {s}",
+                        stage.name(),
+                        ctx.targets[s],
+                    ))
+                })?;
+                progress.add(&progress.species_guaranteed, 1);
+                progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+                Ok(enc)
+            })?;
+            let mut sec_bytes = Vec::with_capacity(ns);
+            let mut codecs = Vec::with_capacity(ns);
+            let mut alt_bytes = 0usize;
+            for e in encs {
+                alt_bytes += e.bytes.len();
+                codecs.push(e.tag);
+                sec_bytes.push(e.bytes);
+            }
+            return Ok(ShardStage::Final(ShardOut {
+                payload: ShardPayload {
+                    t0,
+                    nt: nt_w,
+                    latent_blob: Vec::new(),
+                    species: sec_bytes,
+                    codecs,
+                },
+                max_residual: 0.0,
+                n_coeffs: 0,
+                latent_bytes: 0,
+                bases_bytes: 0,
+                coeff_bytes: 0,
+                alt_bytes,
+            }));
+        }
+
+        // 2. shared-model trial: AE encode -> latents -> quantize + Huffman
+        let latents = pipeline.encode_all(&grid, &norm, self.handle, progress)?;
+        let t_ent = std::time::Instant::now();
+        let (latent_blob, deq) = LatentCodec::encode(&latents, nb, spec.latent, ctx.latent_bin)?;
+        clock.add_ns(&clock.entropy_ns, t_ent.elapsed().as_nanos() as u64);
+        drop(latents);
+
+        // 3. decode (+ TCN) from the *dequantized* latents — exactly
+        // what the decompressor will see
+        let recon = pipeline.decode_all(&grid, &deq, self.handle, ctx.use_tcn, progress)?;
+        drop(deq);
+
+        // 4. per-(shard, species) stages: the Algorithm-1 guarantee,
+        // plus (planner only) full SZ / dense trials on the section
+        let gbatc = GbatcShardCodec {
+            grid: &grid,
+            norm: &norm,
+            recon: &recon,
+            params: &ctx.params,
+            pca_threads: ctx.pca_threads,
+        };
+        let auto = ctx.codec == CodecChoice::Auto;
+        let trials: Vec<SpeciesTrial> = par_try_map(ns, inner_threads, |s| {
+            let t = std::time::Instant::now();
+            let (gbatc_bytes, stats) = gbatc.encode_species(s)?;
+            let gbatc_certified = stats.max_residual <= ctx.params[s].tau + 1e-12;
+            clock.add_ns(&clock.pca_fit_ns, stats.pca_fit_ns);
+            clock.add_ns(&clock.guarantee_ns, stats.guarantee_ns);
+            clock.add_ns(&clock.entropy_ns, stats.entropy_ns);
+            let mut trials = TrialCache::new();
+            trials.insert(SectionEncoding {
+                tag: CodecTag::Gbatc,
+                bytes: gbatc_bytes,
+                nrmse: stats.max_residual / (d as f64).sqrt(),
+            });
+            if auto {
+                let t_trial = std::time::Instant::now();
+                let plane = registry::gather_plane(&norm, nt_w, ns, npix, s);
+                let sv = SectionView {
+                    species: s,
+                    nt: nt_w,
+                    ny,
+                    nx,
+                    norm: &plane,
+                };
+                if let Some(enc) = SZ_STAGE.encode(&sv, ctx.budgets[s])? {
+                    trials.insert(enc);
+                }
+                if let Some(enc) = DENSE_STAGE.encode(&sv, ctx.budgets[s])? {
+                    trials.insert(enc);
+                }
+                // only best_alt's winner is ever selectable — free the
+                // losing alternative's bytes before the archive-level
+                // planning wait
+                trials.evict_losing_alt();
+                clock.add_ns(&clock.planner_trials_ns, t_trial.elapsed().as_nanos() as u64);
+                if !gbatc_certified && trials.best_alt().is_none() {
+                    return Err(Error::guarantee(format!(
+                        "no stage certifies NRMSE {:.3e} on shard t0 {t0} species {s}",
+                        ctx.targets[s],
+                    )));
+                }
+            }
+            progress.add(&progress.species_guaranteed, 1);
+            progress.add(&progress.cpu_ns, t.elapsed().as_nanos() as u64);
+            Ok(SpeciesTrial {
+                trials,
+                stats,
+                gbatc_certified,
+            })
+        })?;
+
+        // 5. single-codec GBATC finalizes here; the planner defers the
+        // choice to the archive-level pass (the model-parameter charge
+        // is global, so per-shard decisions alone cannot be optimal)
+        if auto {
+            Ok(ShardStage::Trials(PendingShard {
+                t0,
+                nt: nt_w,
+                latent_blob,
+                trials,
+            }))
+        } else {
+            Ok(ShardStage::Final(assemble_shard(
+                t0,
+                nt_w,
+                latent_blob,
+                trials,
+                true,
+                vec![CodecTag::Gbatc; ns],
+            )?))
+        }
     }
 
     fn check_spec(&self, header: &Gba2Header) -> Result<()> {

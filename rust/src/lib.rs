@@ -52,10 +52,28 @@
 //!   and dispatching each section's decode by tag.  `GBA1` archives remain
 //!   readable (and writable) behind [`archive::AnyArchive`], and all-GBATC
 //!   archives keep the pre-registry version-2 byte layout.
-//! * **API/CLI** — [`compressor::Compressor`] unifies GBA/GBATC/SZ, including
-//!   a `decompress_range` entry point; the `gbatc` binary adds `inspect`
-//!   (TOC, codec tags, size breakdown) and `extract` (partial decode)
-//!   subcommands, and `compress --codec` selects the codec policy.
+//! * **API facade** ([`api`]) — the supported way in and out:
+//!
+//!   ```text
+//!   ingest   CompressorBuilder ──► CompressSession::push_timestep(&[f32])
+//!              backend | codec        │  buffers ≤ 1 kt_window
+//!              ErrorPolicy ───────────┤  per-species budgets → planner +
+//!              (Uniform | PerSpecies) │  guarantee stage, certified per
+//!                                     ▼  (shard, species)
+//!            ShardEngine::shard_stage ──► Gba2StreamWriter (incremental:
+//!            payloads stream out as shards finish; header + TOC
+//!            back-patched at finish() — byte-identical to one-shot)
+//!
+//!   egress   ArchiveReader::query(Query { time: t0..t1, species })
+//!            └─ TOC walk, reads only touched sections, bit-identical
+//!               to the same slice of a full decode
+//!   ```
+//! * **Compressor trait / CLI** — [`compressor::Compressor`] unifies
+//!   GBA/GBATC/SZ as a thin adapter over [`api`] (`compress_bytes` stays
+//!   as the one-call convenience); the `gbatc` binary routes `compress`
+//!   through a session, `extract` through [`api::ArchiveReader`] (species
+//!   by mechanism *name* or index), and adds `inspect` (TOC, codec tags,
+//!   size breakdown).
 //!
 //! Python never runs on the compression/decompression path; after
 //! `make artifacts` the `gbatc` binary is self-contained, and with the
@@ -63,6 +81,7 @@
 
 #![allow(clippy::needless_range_loop)]
 
+pub mod api;
 pub mod archive;
 pub mod chem;
 pub mod cli;

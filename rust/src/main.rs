@@ -2,19 +2,17 @@
 //! compression, full and partial decompression, archive inspection, and
 //! evaluation.  See `gbatc help`.
 
-use gbatc::archive::{
-    AnyArchive, Archive, CodecTag, CountingSource, FileSource, Gba2Archive, SectionSource,
+use gbatc::api::{
+    ArchiveReader, Backend, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesBudget,
+    SpeciesSel,
 };
+use gbatc::archive::{AnyArchive, Archive, CodecTag, Gba2Archive};
 use gbatc::chem::{self, Mechanism};
 use gbatc::cli::{Args, USAGE};
-use gbatc::compressor::{
-    CodecChoice, CompressOptions, GbatcCompressor, SzArchive, SzCompressOptions, SzCompressor,
-};
-use gbatc::config::Manifest;
+use gbatc::compressor::{CodecChoice, SzArchive, SzCompressOptions, SzCompressor};
 use gbatc::data::{self, io, Profile};
 use gbatc::error::{Error, Result};
 use gbatc::metrics;
-use gbatc::runtime::{ExecService, RuntimeSpec};
 use gbatc::sz::codec::SzMode;
 
 fn main() {
@@ -50,39 +48,54 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
-/// Start the executor service: AOT artifacts by default, or the pure-Rust
-/// reference backend with `--reference`.  Returns (service, decoder_params,
-/// tcn_params) for CR accounting (the reference backend stores no model).
-fn start_service(args: &Args, queue_depth: usize) -> Result<(ExecService, usize, usize)> {
+/// Execution backend from the CLI flags: AOT artifacts by default, the
+/// pure-Rust reference backend with `--reference`.
+fn backend(args: &Args) -> Backend {
     if args.has("reference") {
-        let service = ExecService::start_reference(RuntimeSpec::reference_default(), queue_depth)?;
-        Ok((service, 0, 0))
+        Backend::Reference
     } else {
-        let artifacts = args.get_or("artifacts", "artifacts");
-        let manifest = Manifest::load(format!("{artifacts}/manifest.txt"))?;
-        let service = ExecService::start(artifacts, queue_depth)?;
-        Ok((service, manifest.decoder_params, manifest.tcn_params))
+        Backend::Artifacts(args.get_or("artifacts", "artifacts").to_string())
     }
 }
 
-/// Parse `--species NAME[,NAME|INDEX...]` into ascending species indices.
-fn parse_species(args: &Args) -> Result<Vec<usize>> {
-    let Some(list) = args.get("species") else {
-        return Ok(Vec::new());
-    };
-    let mut out = Vec::new();
-    for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
-        if let Some(s) = chem::index_of(tok) {
-            out.push(s);
-        } else if let Ok(s) = tok.parse::<usize>() {
-            out.push(s);
-        } else {
-            return Err(Error::config(format!("unknown species `{tok}`")));
-        }
+/// Parse `--species NAME[,NAME|INDEX...]` into a typed selection.
+/// Mechanism names resolve through `chem::mechanism` when the query runs;
+/// unknown names list the available ones in the error.
+fn parse_species_sel(args: &Args) -> SpeciesSel {
+    match args.get("species") {
+        Some(list) => SpeciesSel::parse(list),
+        None => SpeciesSel::All,
     }
-    out.sort_unstable();
-    out.dedup();
-    Ok(out)
+}
+
+/// Accuracy policy from `--nrmse` plus optional `--species-nrmse`
+/// `NAME=TARGET[,NAME=TARGET...]` overrides (names or indices).
+fn parse_policy(args: &Args, nrmse: f64) -> Result<ErrorPolicy> {
+    let Some(list) = args.get("species-nrmse") else {
+        return Ok(ErrorPolicy::Uniform(nrmse));
+    };
+    let mut budgets = vec![SpeciesBudget::all(nrmse)];
+    for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let (name, val) = tok.split_once('=').ok_or_else(|| {
+            Error::config(format!("--species-nrmse entry `{tok}` is not NAME=TARGET"))
+        })?;
+        // an empty NAME would parse as "all species" and silently
+        // override every other budget — reject it
+        if name.trim().is_empty() {
+            return Err(Error::config(format!(
+                "--species-nrmse entry `{tok}` has an empty species name"
+            )));
+        }
+        let target: f64 = val
+            .trim()
+            .parse()
+            .map_err(|e| Error::config(format!("--species-nrmse {tok}: {e}")))?;
+        budgets.push(SpeciesBudget {
+            species: SpeciesSel::parse(name),
+            nrmse: target,
+        });
+    }
+    Ok(ErrorPolicy::PerSpecies(budgets))
 }
 
 fn cmd_gen_data(args: &Args) -> Result<()> {
@@ -110,18 +123,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let output = args.require("output")?;
     let codec = CodecChoice::parse(args.get_or("codec", "gbatc"))
         .ok_or_else(|| Error::config("bad --codec (auto|gbatc|sz|dense)"))?;
-    let mut opts = CompressOptions {
-        nrmse_target: args.get_parse("nrmse", 1e-3)?,
-        latent_bin: args.get_parse("latent-bin", 0.02)?,
-        use_tcn: !args.has("no-tcn"),
-        threads: args.get_parse("threads", 0)?,
-        store_full_basis: args.has("full-basis"),
-        model_bytes_f32: args.has("model-f32"),
-        queue_depth: args.get_parse("queue-depth", 4)?,
-        kt_window: args.get_parse("kt-window", 0)?,
-        shard_workers: args.get_parse("shard-workers", 2)?,
-        codec,
-    };
+    let nrmse = args.get_parse("nrmse", 1e-3)?;
     if args.has("v1") && codec != CodecChoice::Gbatc {
         return Err(Error::config(
             "--v1 requires --codec gbatc (GBA1 cannot carry codec tags)",
@@ -129,55 +131,101 @@ fn cmd_compress(args: &Args) -> Result<()> {
     }
 
     let ds = io::read_dataset(input)?;
+    let mut kt_window: usize = args.get_parse("kt-window", 0)?;
     if args.has("v1") {
         // fail fast: GBA1 export needs a single shard, so force the window
         // to cover the whole time axis (and reject a conflicting request)
         // before spending the compression run
-        if opts.kt_window != 0 && opts.kt_window < ds.nt {
+        if kt_window != 0 && kt_window < ds.nt {
             return Err(Error::config(format!(
                 "--v1 needs a single shard; drop --kt-window or set it >= {}",
                 ds.nt
             )));
         }
-        opts.kt_window = opts.kt_window.max(ds.nt);
+        kt_window = kt_window.max(ds.nt);
     }
-    let (service, decoder_params, tcn_params) = start_service(args, opts.queue_depth)?;
-    let handle = service.handle();
-    let comp = GbatcCompressor::new(&handle, decoder_params, tcn_params);
 
-    let report = comp.compress(&ds, &opts)?;
+    // the builder owns every knob and validates them when the session
+    // opens — the CLI is a thin adapter over `gbatc::api`
+    let builder = CompressorBuilder::new()
+        .backend(backend(args))
+        .error_policy(parse_policy(args, nrmse)?)
+        .codec(codec)
+        .latent_bin(args.get_parse("latent-bin", 0.02)?)
+        .use_tcn(!args.has("no-tcn"))
+        .threads(args.get_parse("threads", 0)?)
+        .store_full_basis(args.has("full-basis"))
+        .model_bytes_f32(args.has("model-f32"))
+        .queue_depth(args.get_parse("queue-depth", 4)?)
+        .kt_window(kt_window)
+        .shard_workers(args.get_parse("shard-workers", 2)?);
+    let field = FieldSpec::from_dataset(&ds);
+
     // report the ratio of the container actually written (GBA1 lacks the TOC)
-    let cr = if args.has("v1") {
-        let v1 = report.archive.to_v1()?;
+    let (report, cr) = if args.has("v1") {
+        // in-memory sink, then convert to the legacy container
+        let mut session = builder.session(field, std::io::Cursor::new(Vec::new()))?;
+        session.push_dataset(&ds)?;
+        let (report, sink) = session.finish_into()?;
+        let v1 = AnyArchive::deserialize(sink.get_ref())?.into_v2()?.to_v1()?;
         v1.write_file(output)?;
-        v1.compression_ratio()
+        let cr = v1.compression_ratio();
+        (report, cr)
     } else {
-        report.archive.write_file(output)?;
-        report.archive.compression_ratio()
+        // stream into a .part file shard by shard, renaming into place
+        // only once the archive is sealed — a failed run never leaves a
+        // truncated archive at the output path (or clobbers a good one)
+        let part = format!("{output}.part");
+        let run = || -> Result<gbatc::api::CompressReport> {
+            let mut session = builder.session(field, std::fs::File::create(&part)?)?;
+            session.push_dataset(&ds)?;
+            session.finish()
+        };
+        match run() {
+            Ok(report) => {
+                std::fs::rename(&part, output)?;
+                let cr = report.compression_ratio();
+                (report, cr)
+            }
+            Err(e) => {
+                let _ = std::fs::remove_file(&part);
+                return Err(e);
+            }
+        }
     };
     println!(
         "{} -> {} | CR {:.1} | target NRMSE {:.1e} | tau {:.3e} | max block residual {:.3e} | {} coeffs",
-        input,
-        output,
-        cr,
-        opts.nrmse_target,
-        report.tau,
-        report.max_block_residual,
-        report.n_coeffs
+        input, output, cr, nrmse, report.tau, report.max_block_residual, report.n_coeffs
     );
     println!(
         "  {} shards (kt_window {}) | peak workspace {:.1} MB",
         report.n_shards,
-        report.archive.header.kt_window,
+        report.kt_window,
         report.peak_workspace_bytes as f64 / 1e6
     );
-    if opts.codec != CodecChoice::Gbatc {
-        println!("  {}", codec_totals_line(&report.archive));
+    if codec != CodecChoice::Gbatc {
+        println!("  {}", report_codec_totals_line(&report));
     }
     println!("  breakdown: {}", report.breakdown);
     println!("  stages: {}", report.stage_times);
     println!("  {}", report.progress_summary);
     Ok(())
+}
+
+/// Per-codec section totals of a session report, one summary line.
+fn report_codec_totals_line(report: &gbatc::api::CompressReport) -> String {
+    let parts: Vec<String> = CodecTag::ALL
+        .iter()
+        .map(|&t| {
+            let (n, b) = report.codec_totals[t as usize];
+            format!("{} {n} sections {b} B", t.name())
+        })
+        .collect();
+    format!(
+        "per-codec: {} (container v{})",
+        parts.join(" | "),
+        report.version
+    )
 }
 
 /// Per-codec section totals of a GBA2 archive, one summary line.
@@ -198,17 +246,15 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     let output = args.require("output")?;
     let threads = args.get_parse("threads", 0)?;
 
-    let archive = AnyArchive::read_file(input)?.into_v2()?;
-    let (service, decoder_params, tcn_params) = start_service(args, 4)?;
-    let handle = service.handle();
-    let comp = GbatcCompressor::new(&handle, decoder_params, tcn_params);
     let t = std::time::Instant::now();
-    let mass = comp.decompress(&archive, threads)?;
+    let reader = ArchiveReader::open_file(input, &backend(args), threads)?;
+    let (nt, ns, ny, nx) = reader.header().dims;
+    let pressure = reader.header().pressure;
+    let mass = reader.decompress_all()?;
 
-    let (nt, ns, ny, nx) = archive.header.dims;
     let mut ds = gbatc::data::Dataset::new(nt, ns, ny, nx);
     ds.mass = mass;
-    ds.pressure = archive.header.pressure;
+    ds.pressure = pressure;
     if let Some(tf) = args.get("temp-from") {
         let src = io::read_dataset(tf)?;
         if (src.nt, src.ny, src.nx) != (nt, ny, nx) {
@@ -229,39 +275,37 @@ fn cmd_extract(args: &Args) -> Result<()> {
     let input = args.require("input")?;
     let output = args.require("output")?;
     let threads = args.get_parse("threads", 0)?;
-    let species = parse_species(args)?;
+    let species = parse_species_sel(args);
 
-    let file = FileSource::open(input)?;
-    // read the TOC once on the raw source for the --t1 default, so the
-    // counting wrapper reports only what the extract itself touches
-    let (header, _toc) = Gba2Archive::read_toc(&file)?;
-    let counting = CountingSource::new(&file);
-    let nt = header.dims.0;
+    let reader = ArchiveReader::open_file(input, &backend(args), threads)?;
+    let nt = reader.header().dims.0;
+    let pressure = reader.header().pressure;
     let t0 = args.get_parse("t0", 0usize)?;
     let t1 = args.get_parse("t1", nt)?;
-
-    let (service, decoder_params, tcn_params) = start_service(args, 4)?;
-    let handle = service.handle();
-    let comp = GbatcCompressor::new(&handle, decoder_params, tcn_params);
+    // count only what the extract itself touches, not the TOC at open
+    reader.reset_io_stats();
     let t = std::time::Instant::now();
-    let range = comp.extract(&counting, t0, t1, &species, threads)?;
+    let range = reader.query(&Query {
+        time: t0..t1,
+        species,
+    })?;
 
     let mut ds = gbatc::data::Dataset::new(range.nt, range.species.len(), range.ny, range.nx);
     ds.mass = range.mass;
-    ds.pressure = header.pressure;
+    ds.pressure = pressure;
     io::write_dataset(output, &ds)?;
-    let total = file.source_len();
+    let total = reader.archive_bytes();
     println!(
         "{input}[t {t0}..{t1}, {} species] -> {output} in {:.2}s",
-        range.species.len(),
+        ds.ns,
         t.elapsed().as_secs_f64()
     );
     println!(
         "  read {} of {} archive bytes ({:.1}%) in {} ranged reads | peak workspace {:.1} MB",
-        counting.bytes_read(),
+        reader.bytes_read(),
         total,
-        100.0 * counting.bytes_read() as f64 / total.max(1) as f64,
-        counting.reads(),
+        100.0 * reader.bytes_read() as f64 / total.max(1) as f64,
+        reader.reads(),
         range.peak_workspace_bytes as f64 / 1e6
     );
     Ok(())

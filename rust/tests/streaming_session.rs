@@ -1,0 +1,463 @@
+//! Streaming session API tests: a `CompressSession` fed timestep-by-
+//! timestep must produce archives **byte-identical** to one-shot
+//! `ShardEngine::compress` for the same options/policy (including
+//! mixed-codec `--codec auto` plans), `ErrorPolicy::PerSpecies` budgets
+//! must certify each species against its own target, and session misuse
+//! must be typed errors.
+
+use std::io::{Cursor, Seek, SeekFrom, Write};
+
+use gbatc::api::{
+    ArchiveReader, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesBudget, SpeciesSel,
+};
+use gbatc::compressor::{CodecChoice, CompressOptions, Compressor, GbatcCompressor};
+use gbatc::data::{generate, Dataset, Profile};
+use gbatc::runtime::{ExecHandle, ExecService, RuntimeSpec};
+use gbatc::util::prop::{check, Arbitrary};
+use gbatc::util::Prng;
+
+const NS: usize = 2;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+/// Species 0 is a smooth low-frequency field (SZ-friendly); species 1 is
+/// a high-frequency checkerboard under a drifting amplitude (leaves a
+/// structured residual for the guarantee stage) — the same shape the
+/// planner tests use, so `--codec auto` genuinely mixes codecs.
+fn make_ds(nt: usize, seed: u64) -> Dataset {
+    let mut rng = Prng::new(seed);
+    let (p0, p1, p2) = (
+        rng.uniform(0.04, 0.09) as f32,
+        rng.uniform(0.2, 0.3) as f32,
+        rng.uniform(0.01, 0.03) as f32,
+    );
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    for t in 0..nt {
+        for y in 0..NY {
+            for x in 0..NX {
+                let smooth =
+                    0.5 + 0.3 * ((t as f32) * p1 + (y as f32) * p0 + (x as f32) * 0.05).sin();
+                let sign = if (t + y + x) % 2 == 0 { 1.0f32 } else { -1.0 };
+                let amp = 0.2 + 0.05 * ((t as f32) * 0.3 + (y as f32) * p2).cos();
+                let i0 = ds.idx(t, 0, y, x);
+                ds.mass[i0] = smooth;
+                let i1 = ds.idx(t, 1, y, x);
+                ds.mass[i1] = 0.5 + sign * amp;
+            }
+        }
+    }
+    ds
+}
+
+fn session_bytes(
+    handle: &ExecHandle,
+    ds: &Dataset,
+    opts: &CompressOptions,
+    policy: &ErrorPolicy,
+) -> (Vec<u8>, usize) {
+    let mut session = CompressorBuilder::from_options(opts)
+        .error_policy(policy.clone())
+        .session_on(handle, 0, 0, FieldSpec::from_dataset(ds), Cursor::new(Vec::new()))
+        .expect("open session");
+    // strictly one timestep at a time — the live-solver call pattern
+    let stride = ds.ns * ds.ny * ds.nx;
+    for t in 0..ds.nt {
+        session
+            .push_timestep(&ds.mass[t * stride..(t + 1) * stride])
+            .expect("push");
+        assert_eq!(session.timesteps_pushed(), t + 1);
+    }
+    let (report, sink) = session.finish_into().expect("finish");
+    let bytes = sink.into_inner();
+    assert_eq!(report.archive_bytes as usize, bytes.len());
+    (bytes, report.peak_workspace_bytes)
+}
+
+#[derive(Clone, Debug)]
+struct SessionCase {
+    seed: u64,
+    nt: usize,
+    kt_window: usize,
+    codec: CodecChoice,
+    nrmse: f64,
+}
+
+impl Arbitrary for SessionCase {
+    fn generate(rng: &mut Prng) -> Self {
+        let codec = [
+            CodecChoice::Gbatc,
+            CodecChoice::Auto,
+            CodecChoice::Sz,
+            CodecChoice::Dense,
+        ][rng.index(4)];
+        SessionCase {
+            seed: rng.next_u64(),
+            nt: [8, 12, 16][rng.index(3)],
+            kt_window: [4, 8][rng.index(2)],
+            codec,
+            nrmse: [1e-2, 1e-3][rng.index(2)],
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.nt > 8 {
+            let mut c = self.clone();
+            c.nt = 8;
+            out.push(c);
+        }
+        if self.codec != CodecChoice::Gbatc {
+            let mut c = self.clone();
+            c.codec = CodecChoice::Gbatc;
+            out.push(c);
+        }
+        out
+    }
+}
+
+/// The acceptance-criterion property: streamed == one-shot, byte for
+/// byte, across codec policies (including deferred `auto` planning).
+#[test]
+fn prop_session_byte_identical_to_one_shot() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    check::<SessionCase, _>(23, 10, |case| {
+        let ds = make_ds(case.nt, case.seed);
+        let opts = CompressOptions {
+            nrmse_target: case.nrmse,
+            kt_window: case.kt_window,
+            threads: 2,
+            shard_workers: 2,
+            codec: case.codec,
+            ..Default::default()
+        };
+        let comp = GbatcCompressor::new(&handle, 0, 0);
+        let one_shot = comp.compress(&ds, &opts).expect("one-shot").archive;
+        let (streamed, _) =
+            session_bytes(&handle, &ds, &opts, &ErrorPolicy::Uniform(case.nrmse));
+        streamed == one_shot.bytes
+    });
+}
+
+/// The `Compressor` trait's `compress_bytes` is now a session adapter —
+/// it must keep producing the engine's exact bytes.
+#[test]
+fn compress_bytes_adapter_matches_engine() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(8, 5);
+    for codec in [CodecChoice::Gbatc, CodecChoice::Auto] {
+        let opts = CompressOptions {
+            nrmse_target: 1e-3,
+            kt_window: 4,
+            codec,
+            ..Default::default()
+        };
+        let comp = GbatcCompressor::new(&handle, 0, 0).with_options(opts.clone());
+        let report = comp.compress(&ds, &opts).unwrap();
+        let bytes = comp.compress_bytes(&ds, 1e-3).unwrap();
+        assert_eq!(bytes, report.archive.bytes, "{codec:?}");
+    }
+}
+
+/// Per-species NRMSE over the denormalized field (range-normalized, the
+/// certification metric).
+fn per_species_nrmse(ds: &Dataset, recon: &[f32]) -> Vec<f64> {
+    let npix = ds.ny * ds.nx;
+    let ranges = ds.species_ranges();
+    (0..ds.ns)
+        .map(|s| {
+            let mut se = 0.0f64;
+            let mut n = 0usize;
+            for t in 0..ds.nt {
+                let off = (t * ds.ns + s) * npix;
+                for i in off..off + npix {
+                    let e = (ds.mass[i] - recon[i]) as f64;
+                    se += e * e;
+                    n += 1;
+                }
+            }
+            let range = (ranges[s].1 - ranges[s].0).max(1e-30) as f64;
+            (se / n as f64).sqrt() / range
+        })
+        .collect()
+}
+
+/// `ErrorPolicy::PerSpecies`: each species is certified against its own
+/// budget, the session stays byte-identical to one-shot under the same
+/// policy, and the loosest target lands in the header.
+#[test]
+fn per_species_budgets_certify_each_species() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(16, 9);
+    let targets = [5e-3, 2e-4];
+    let policy = ErrorPolicy::PerSpecies(vec![
+        SpeciesBudget::index(0, targets[0]),
+        SpeciesBudget::index(1, targets[1]),
+    ]);
+    for codec in [CodecChoice::Gbatc, CodecChoice::Auto] {
+        let opts = CompressOptions {
+            nrmse_target: 1e-3, // ignored: the policy wins
+            kt_window: 8,
+            codec,
+            ..Default::default()
+        };
+        let comp = GbatcCompressor::new(&handle, 0, 0);
+        let report = comp.compress_with_policy(&ds, &opts, &policy).unwrap();
+        // the header records the loosest target for display
+        assert_eq!(report.archive.header.nrmse_target, targets[0]);
+        let recon = comp.decompress(&report.archive, 0).unwrap();
+        let per = per_species_nrmse(&ds, &recon);
+        for (s, (&err, &target)) in per.iter().zip(&targets).enumerate() {
+            assert!(
+                err <= target * 1.05,
+                "{codec:?} species {s}: NRMSE {err:.3e} exceeds its budget {target:.1e}"
+            );
+        }
+        // streamed session under the same policy: byte-identical
+        let (streamed, _) = session_bytes(&handle, &ds, &opts, &policy);
+        assert_eq!(streamed, report.archive.bytes, "{codec:?}");
+    }
+}
+
+/// Name-addressed budgets on the full 58-species mechanism: the tight
+/// species obeys its tighter bound.
+#[test]
+fn named_budgets_resolve_through_the_mechanism() {
+    let ds = generate(Profile::Tiny, 31);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4).unwrap();
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let policy = ErrorPolicy::PerSpecies(vec![
+        SpeciesBudget::all(3e-3),
+        SpeciesBudget::name("OH", 3e-4),
+    ]);
+    let opts = CompressOptions::default();
+    let report = comp.compress_with_policy(&ds, &opts, &policy).unwrap();
+    let recon = comp.decompress(&report.archive, 0).unwrap();
+    let per = per_species_nrmse(&ds, &recon);
+    let oh = gbatc::chem::resolve_species("OH").unwrap();
+    assert!(per[oh] <= 3e-4 * 1.05, "OH NRMSE {:.3e}", per[oh]);
+    for (s, &err) in per.iter().enumerate() {
+        assert!(err <= 3e-3 * 1.05, "species {s}: NRMSE {err:.3e}");
+    }
+    // an unknown name in a budget is a typed, listing error
+    let bad = ErrorPolicy::PerSpecies(vec![SpeciesBudget::name("unobtainium", 1e-3)]);
+    let err = comp
+        .compress_with_policy(&ds, &opts, &bad)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("available"), "{err}");
+}
+
+/// Session peak workspace is the one-shot shard workspace plus exactly
+/// one window buffer — O(shard), never O(field).
+#[test]
+fn session_workspace_bounded_by_one_window() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(16, 3);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        threads: 2,
+        shard_workers: 1,
+        ..Default::default()
+    };
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let one_shot_peak = comp.compress(&ds, &opts).unwrap().peak_workspace_bytes;
+    let (_, session_peak) =
+        session_bytes(&handle, &ds, &opts, &ErrorPolicy::Uniform(1e-3));
+    let window_bytes = opts.kt_window * ds.ns * ds.ny * ds.nx * 4;
+    assert!(
+        session_peak >= one_shot_peak && session_peak <= one_shot_peak + window_bytes,
+        "session peak {session_peak} vs one-shot {one_shot_peak} + window {window_bytes}"
+    );
+}
+
+/// Session misuse is typed errors, never a corrupt archive.
+#[test]
+fn session_misuse_is_rejected() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(8, 7);
+    let opts = CompressOptions {
+        kt_window: 4,
+        ..Default::default()
+    };
+    let open = || {
+        CompressorBuilder::from_options(&opts)
+            .session_on(
+                &handle,
+                0,
+                0,
+                FieldSpec::from_dataset(&ds),
+                Cursor::new(Vec::new()),
+            )
+            .unwrap()
+    };
+    let stride = ds.ns * ds.ny * ds.nx;
+
+    // wrong frame length
+    let mut s = open();
+    assert!(s.push_timestep(&ds.mass[..stride - 1]).is_err());
+
+    // finishing before every declared timestep arrived
+    let mut s = open();
+    s.push_timestep(&ds.mass[..stride]).unwrap();
+    assert!(s.finish().is_err());
+
+    // pushing past the declared run length
+    let mut s = open();
+    s.push_dataset(&ds).unwrap();
+    assert!(s.push_timestep(&ds.mass[..stride]).is_err());
+
+    // config errors surface at open, before any timestep is accepted
+    let bad = CompressOptions {
+        kt_window: 3, // not a multiple of block kt
+        ..Default::default()
+    };
+    assert!(CompressorBuilder::from_options(&bad)
+        .session_on(
+            &handle,
+            0,
+            0,
+            FieldSpec::from_dataset(&ds),
+            Cursor::new(Vec::new()),
+        )
+        .is_err());
+    let bad = ErrorPolicy::Uniform(-1.0);
+    assert!(CompressorBuilder::from_options(&opts)
+        .error_policy(bad)
+        .session_on(
+            &handle,
+            0,
+            0,
+            FieldSpec::from_dataset(&ds),
+            Cursor::new(Vec::new()),
+        )
+        .is_err());
+    let bad_ranges = FieldSpec {
+        ranges: vec![(0.0, f32::NAN); ds.ns],
+        ..FieldSpec::from_dataset(&ds)
+    };
+    assert!(CompressorBuilder::from_options(&opts)
+        .session_on(&handle, 0, 0, bad_ranges, Cursor::new(Vec::new()))
+        .is_err());
+}
+
+/// A sink that errors once more than `budget` bytes ever landed in it —
+/// drives the failed-flush path.
+struct FailingSink {
+    inner: Cursor<Vec<u8>>,
+    budget: usize,
+}
+
+impl Write for FailingSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.inner.position() as usize + buf.len() > self.budget {
+            return Err(std::io::Error::other("sink full"));
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+impl Seek for FailingSink {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        self.inner.seek(pos)
+    }
+}
+
+/// A failed window flush poisons the session: every later call is a
+/// typed error, never a panic into the half-written stream.
+#[test]
+fn failed_flush_poisons_the_session() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(8, 13);
+    let opts = CompressOptions {
+        kt_window: 4,
+        ..Default::default()
+    };
+    // large enough for the reserved header + TOC region, far too small
+    // for the first shard's payload
+    let sink = FailingSink {
+        inner: Cursor::new(Vec::new()),
+        budget: 300,
+    };
+    let mut s = CompressorBuilder::from_options(&opts)
+        .session_on(&handle, 0, 0, FieldSpec::from_dataset(&ds), sink)
+        .unwrap();
+    let stride = ds.ns * ds.ny * ds.nx;
+    let mut failed = false;
+    for t in 0..ds.nt {
+        if s.push_timestep(&ds.mass[t * stride..(t + 1) * stride]).is_err() {
+            failed = true;
+            break;
+        }
+    }
+    assert!(failed, "the failing sink never surfaced an error");
+    assert!(s.push_timestep(&ds.mass[..stride]).is_err());
+    assert!(s.finish().is_err());
+}
+
+/// The typed egress: `ArchiveReader::query` over a streamed archive is
+/// bit-identical to slicing the full decode, and species resolve by
+/// name.
+#[test]
+fn archive_reader_query_matches_full_decode() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(16, 11);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        codec: CodecChoice::Auto,
+        ..Default::default()
+    };
+    let (bytes, _) = session_bytes(&handle, &ds, &opts, &ErrorPolicy::Uniform(1e-3));
+    let reader = ArchiveReader::with_handle(&handle, bytes, 0).unwrap();
+    assert_eq!(reader.n_shards(), 4);
+    let full = reader.decompress_all().unwrap();
+
+    reader.reset_io_stats();
+    let q = Query {
+        time: 5..9,
+        species: SpeciesSel::Indices(vec![1]),
+    };
+    let dec = reader.query(&q).unwrap();
+    assert_eq!(dec.species, vec![1]);
+    let npix = ds.ny * ds.nx;
+    for t in 5..9usize {
+        for p in 0..npix {
+            let a = full[(t * NS + 1) * npix + p];
+            let b = dec.mass[(t - 5) * npix + p];
+            assert_eq!(a.to_bits(), b.to_bits(), "t={t} p={p}");
+        }
+    }
+    // partial reads must touch strictly fewer bytes than the archive
+    assert!(reader.bytes_read() < reader.archive_bytes());
+    // out-of-range / zero selections are typed errors
+    assert!(reader.query(&Query::window(9..9)).is_err());
+    assert!(reader
+        .query(&Query {
+            time: 0..1,
+            species: SpeciesSel::Indices(vec![NS]),
+        })
+        .is_err());
+}
