@@ -1,0 +1,158 @@
+//! Query-cache benchmark: the same query mix against an `ArchiveStore`
+//! cold (every plane decoded) and warm (every plane cached), on a
+//! multi-shard archive over the pure-Rust reference backend.  Reports
+//! latency, the warm/cold speedup, and the warm hit rate, asserts the
+//! warm pass decodes zero new sections and returns bit-identical bytes,
+//! and writes `BENCH_query.json` (gated against
+//! `BENCH_query_baseline.json` by `scripts/bench_compare.py` — the
+//! speedup is machine-relative, so the gate is meaningful on any
+//! runner):
+//!
+//! ```bash
+//! cargo bench --bench perf_query_cache
+//! GBATC_BENCH_PROFILE=small GBATC_BENCH_OUT=out.json cargo bench --bench perf_query_cache
+//! ```
+
+use gbatc::api::{Query, SpeciesSel};
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::{generate, Profile};
+use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::util::Timer;
+
+fn main() {
+    let profile = std::env::var("GBATC_BENCH_PROFILE")
+        .ok()
+        .and_then(|p| Profile::parse(&p))
+        .unwrap_or(Profile::Tiny);
+    let kt_window: usize = std::env::var("GBATC_KT_WINDOW")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let reps: usize = std::env::var("GBATC_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let out_path =
+        std::env::var("GBATC_BENCH_OUT").unwrap_or_else(|_| "BENCH_query.json".to_string());
+
+    eprintln!("[bench] generating {profile:?} dataset...");
+    let ds = generate(profile, 55);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4)
+        .expect("reference service");
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window,
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let report = comp.compress(&ds, &opts).expect("compress");
+    let n_shards = report.n_shards;
+    let bytes = report.archive.into_bytes();
+    eprintln!(
+        "[bench] compressed {}x{}x{}x{} into {n_shards} shards ({} B) in {:.1}s",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        bytes.len(),
+        t.secs()
+    );
+
+    let store = ArchiveStore::with_handle(
+        &handle,
+        StoreConfig {
+            threads: 2,
+            cache_bytes: 512 << 20,
+            cache_shards: 16,
+            ..StoreConfig::default()
+        },
+    );
+    store.mount_bytes("bench", bytes).expect("mount");
+
+    // the repeated-small-query access pattern of post-hoc analysis: per
+    // shard window, a single species, a pair, and a cross-shard sweep
+    let w = kt_window.min(ds.nt);
+    let mut queries: Vec<Query> = Vec::new();
+    for t0 in (0..ds.nt).step_by(w) {
+        let t1 = (t0 + w).min(ds.nt);
+        queries.push(Query {
+            time: t0..t1,
+            species: SpeciesSel::Indices(vec![ds.ns / 2]),
+        });
+        queries.push(Query {
+            time: t0..t1,
+            species: SpeciesSel::Indices(vec![0, ds.ns - 1]),
+        });
+    }
+    queries.push(Query {
+        time: 0..ds.nt,
+        species: SpeciesSel::Indices(vec![ds.ns / 3]),
+    });
+
+    let run_all = |tag: &str| -> (f64, Vec<Vec<f32>>) {
+        let t = Timer::start();
+        let out: Vec<Vec<f32>> = queries
+            .iter()
+            .map(|q| store.query("bench", q).expect(tag).mass)
+            .collect();
+        (t.secs(), out)
+    };
+
+    println!(
+        "== perf_query_cache ({}x{}x{}x{}, {n_shards} shards, {} queries)",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        queries.len()
+    );
+
+    let (cold_s, cold_out) = run_all("cold query");
+    let decoded_after_cold = store.stats().decoded_sections;
+
+    let mut warm_s = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let (s, warm_out) = run_all("warm query");
+        warm_s = warm_s.min(s);
+        // warm responses must be bit-identical to the cold (uncached) pass
+        assert_eq!(cold_out.len(), warm_out.len());
+        for (a, b) in cold_out.iter().zip(&warm_out) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert!(x.to_bits() == y.to_bits(), "warm decode diverged");
+            }
+        }
+    }
+    let stats = store.stats();
+    assert_eq!(
+        stats.decoded_sections, decoded_after_cold,
+        "warm passes must decode zero new sections"
+    );
+    let hit_rate = stats.cache.hit_rate();
+    let speedup = cold_s / warm_s.max(1e-12);
+
+    println!("cold   {:>9.3} ms  ({} sections decoded)", cold_s * 1e3, decoded_after_cold);
+    println!("warm   {:>9.3} ms  (0 sections decoded)", warm_s * 1e3);
+    println!(
+        "speedup {speedup:.1}x | overall hit rate {:.1}% | cache {}",
+        100.0 * hit_rate,
+        stats.cache
+    );
+
+    // hand-rolled JSON (no serde in the offline image)
+    let json = format!(
+        "[\n  {{\"kernel\": \"query_cache\", \"cold_ms\": {:.4}, \"warm_ms\": {:.4}, \
+         \"speedup\": {:.3}}},\n  {{\"kernel\": \"query_cache_hit_rate\", \
+         \"hit_rate\": {:.4}, \"decoded_sections\": {}}}\n]\n",
+        cold_s * 1e3,
+        warm_s * 1e3,
+        speedup,
+        hit_rate,
+        decoded_after_cold
+    );
+    std::fs::write(&out_path, &json).expect("write bench json");
+    println!("wrote {out_path}");
+}

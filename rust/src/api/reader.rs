@@ -8,12 +8,12 @@
 //! corresponding slice of a full decode.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::api::policy::SpeciesSel;
 use crate::api::session::Backend;
 use crate::archive::{
-    AnyArchive, FileSource, Gba2Archive, Gba2Header, MemSource, SectionSource, ShardToc, MAGIC,
+    AnyArchive, FileSource, Gba2Archive, Gba2Header, IoStats, MemSource, MeteredSource,
+    SectionSource, ShardToc, MAGIC,
 };
 use crate::coordinator::engine::{RangeDecode, ShardEngine};
 use crate::error::{Error, Result};
@@ -52,27 +52,6 @@ impl Query {
     }
 }
 
-/// Owning section source with always-on IO counters (the `gbatc extract`
-/// savings report and the partial-decode tests read them).
-struct CountingBox {
-    inner: Box<dyn SectionSource>,
-    bytes: AtomicU64,
-    reads: AtomicU64,
-}
-
-impl SectionSource for CountingBox {
-    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
-        let out = self.inner.read_at(off, len)?;
-        self.bytes.fetch_add(out.len() as u64, Ordering::Relaxed);
-        self.reads.fetch_add(1, Ordering::Relaxed);
-        Ok(out)
-    }
-
-    fn source_len(&self) -> u64 {
-        self.inner.source_len()
-    }
-}
-
 /// Typed reader over an archive; see the module docs.
 ///
 /// ```
@@ -107,7 +86,7 @@ pub struct ArchiveReader {
     /// external one instead).
     _service: Option<ExecService>,
     handle: ExecHandle,
-    src: CountingBox,
+    src: MeteredSource,
     header: Gba2Header,
     toc: Vec<ShardToc>,
     threads: usize,
@@ -122,24 +101,21 @@ impl ArchiveReader {
         backend: &Backend,
         threads: usize,
     ) -> Result<ArchiveReader> {
-        let file = FileSource::open(path.as_ref())?;
-        let magic = file.read_at(0, 4)?;
-        let src: Box<dyn SectionSource> = if magic == *MAGIC {
-            let bytes = std::fs::read(path.as_ref())?;
-            Box::new(MemSource(v2_bytes(bytes)?))
-        } else {
-            Box::new(file)
-        };
         let (service, _, _) = backend.start(4)?;
         let handle = service.handle();
-        Self::build(Some(service), handle, src, threads)
+        Self::build(Some(service), handle, open_metered(path.as_ref())?, threads)
     }
 
     /// Open over owned serialized bytes of either container version.
     pub fn from_bytes(bytes: Vec<u8>, backend: &Backend, threads: usize) -> Result<ArchiveReader> {
         let (service, _, _) = backend.start(4)?;
         let handle = service.handle();
-        Self::build(Some(service), handle, Box::new(MemSource(v2_bytes(bytes)?)), threads)
+        Self::build(
+            Some(service),
+            handle,
+            MeteredSource::new(Box::new(MemSource(v2_bytes(bytes)?))),
+            threads,
+        )
     }
 
     /// Open over owned bytes on an already-running executor handle (no
@@ -152,7 +128,7 @@ impl ArchiveReader {
         Self::build(
             None,
             handle.clone(),
-            Box::new(MemSource(v2_bytes(bytes)?)),
+            MeteredSource::new(Box::new(MemSource(v2_bytes(bytes)?))),
             threads,
         )
     }
@@ -160,15 +136,14 @@ impl ArchiveReader {
     fn build(
         service: Option<ExecService>,
         handle: ExecHandle,
-        src: Box<dyn SectionSource>,
+        src: MeteredSource,
         threads: usize,
     ) -> Result<ArchiveReader> {
-        let src = CountingBox {
-            inner: src,
-            bytes: AtomicU64::new(0),
-            reads: AtomicU64::new(0),
-        };
         let (header, toc) = Gba2Archive::read_toc(&src)?;
+        // the payload region starts at the first shard's offset; every
+        // read below it (including the TOC re-read each query performs)
+        // meters as a header/TOC read from here on
+        src.set_header_limit(payload_base(&toc, &src));
         Ok(ArchiveReader {
             _service: service,
             handle,
@@ -193,21 +168,29 @@ impl ArchiveReader {
         self.src.source_len()
     }
 
-    /// Archive bytes read since open / the last reset.
+    /// Archive bytes read since open / the last reset — header/TOC *and*
+    /// payload (earlier versions missed the TOC reads).
     pub fn bytes_read(&self) -> u64 {
-        self.src.bytes.load(Ordering::Relaxed)
+        self.src.stats().bytes()
     }
 
     /// Ranged reads served since open / the last reset.
     pub fn reads(&self) -> u64 {
-        self.src.reads.load(Ordering::Relaxed)
+        self.src.stats().reads()
     }
 
-    /// Zero the IO counters (e.g. to exclude the TOC reads at open from
-    /// a per-query savings report).
+    /// Classified IO counters: header/TOC reads (open + the re-read each
+    /// query performs) separately from payload section reads.  Surfaced
+    /// by `gbatc inspect --stats`, `gbatc extract`, and the query
+    /// server's `/stats` endpoint.
+    pub fn io_stats(&self) -> IoStats {
+        self.src.stats()
+    }
+
+    /// Zero the IO counters (e.g. to meter one query in isolation,
+    /// excluding the reads at open).
     pub fn reset_io_stats(&self) {
-        self.src.bytes.store(0, Ordering::Relaxed);
-        self.src.reads.store(0, Ordering::Relaxed);
+        self.src.reset();
     }
 
     /// Decode a typed query, reading only the shards/sections it
@@ -226,10 +209,39 @@ impl ArchiveReader {
     }
 }
 
+/// Open an archive file behind a metered source: `GBA2` files stay on
+/// disk and are read section by section; legacy `GBA1` files are loaded
+/// whole (charged to the payload counters) and converted to their
+/// one-shard `GBA2` view in memory.  Shared by [`ArchiveReader`] and
+/// [`crate::store::ArchiveStore`].
+pub(crate) fn open_metered(path: &Path) -> Result<MeteredSource> {
+    let file = FileSource::open(path)?;
+    let magic = file.read_at(0, 4)?;
+    if magic == *MAGIC {
+        let bytes = std::fs::read(path)?;
+        let loaded = bytes.len() as u64;
+        let src = MeteredSource::new(Box::new(MemSource(v2_bytes(bytes)?)));
+        // the whole-file conversion load, plus the magic probe above
+        src.add_toc(1, 4);
+        src.add_payload(1, loaded);
+        Ok(src)
+    } else {
+        let src = MeteredSource::new(Box::new(file));
+        src.add_toc(1, 4);
+        Ok(src)
+    }
+}
+
+/// First payload byte of a parsed TOC (the header/TOC region ends where
+/// the first shard begins).
+pub(crate) fn payload_base(toc: &[ShardToc], src: &MeteredSource) -> u64 {
+    toc.first().map(|e| e.shard.0).unwrap_or_else(|| src.source_len())
+}
+
 /// Normalize serialized archive bytes to the `GBA2` working layout
 /// (legacy `GBA1` converts to its one-shard view; anything else is
 /// rejected with a clear error).
-fn v2_bytes(bytes: Vec<u8>) -> Result<Vec<u8>> {
+pub(crate) fn v2_bytes(bytes: Vec<u8>) -> Result<Vec<u8>> {
     if bytes.starts_with(MAGIC) {
         Ok(AnyArchive::deserialize(&bytes)?.into_v2()?.into_bytes())
     } else if bytes.starts_with(crate::archive::MAGIC2) {

@@ -1,0 +1,162 @@
+//! IO-metered section source — the one counting wrapper behind
+//! [`crate::api::ArchiveReader`] and `gbatc::store`'s mounted archives.
+//!
+//! Unlike the borrow-based [`CountingSource`](crate::archive::CountingSource)
+//! (a test/bench helper), `MeteredSource` *owns* its inner source and
+//! splits the counters into **header/TOC** reads and **payload section**
+//! reads: every `read_at` that falls entirely inside the header + TOC
+//! region is metered separately from section reads, so savings reports
+//! can show what a query paid for indexing versus data.  The split point
+//! is the first payload byte ([`MeteredSource::set_header_limit`], set
+//! once the TOC has been parsed); until then every read counts as a
+//! header read — which is exactly what reads before the TOC is known are.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::archive::toc::SectionSource;
+use crate::error::Result;
+
+/// Snapshot of a [`MeteredSource`]'s counters.  `toc_*` covers
+/// header/TOC reads (including the re-read each ranged decode performs);
+/// `payload_*` covers section (latent + species) reads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoStats {
+    pub toc_reads: u64,
+    pub toc_bytes: u64,
+    pub payload_reads: u64,
+    pub payload_bytes: u64,
+}
+
+impl IoStats {
+    /// All ranged reads served.
+    pub fn reads(&self) -> u64 {
+        self.toc_reads + self.payload_reads
+    }
+
+    /// All bytes served — header/TOC *and* payload.
+    pub fn bytes(&self) -> u64 {
+        self.toc_bytes + self.payload_bytes
+    }
+}
+
+impl fmt::Display for IoStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "toc {} B in {} reads | payload {} B in {} reads",
+            self.toc_bytes, self.toc_reads, self.payload_bytes, self.payload_reads
+        )
+    }
+}
+
+/// Owning section source with always-on, classified IO counters.
+pub struct MeteredSource {
+    inner: Box<dyn SectionSource + Send + Sync>,
+    /// First payload byte; reads ending at or below it are header/TOC
+    /// reads.  Starts at `u64::MAX` (everything before the TOC is parsed
+    /// *is* a header read).
+    header_limit: AtomicU64,
+    toc_reads: AtomicU64,
+    toc_bytes: AtomicU64,
+    payload_reads: AtomicU64,
+    payload_bytes: AtomicU64,
+}
+
+impl MeteredSource {
+    pub fn new(inner: Box<dyn SectionSource + Send + Sync>) -> MeteredSource {
+        MeteredSource {
+            inner,
+            header_limit: AtomicU64::new(u64::MAX),
+            toc_reads: AtomicU64::new(0),
+            toc_bytes: AtomicU64::new(0),
+            payload_reads: AtomicU64::new(0),
+            payload_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Record where the payload region begins (the first shard's offset)
+    /// so later reads classify exactly.
+    pub fn set_header_limit(&self, first_payload_byte: u64) {
+        self.header_limit
+            .store(first_payload_byte, Ordering::Relaxed);
+    }
+
+    /// Charge an out-of-band payload load (e.g. the whole-file read a
+    /// legacy `GBA1` conversion performs before this wrapper sees bytes).
+    pub fn add_payload(&self, reads: u64, bytes: u64) {
+        self.payload_reads.fetch_add(reads, Ordering::Relaxed);
+        self.payload_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Charge an out-of-band header probe (e.g. a magic sniff performed
+    /// on the raw file before wrapping it).
+    pub fn add_toc(&self, reads: u64, bytes: u64) {
+        self.toc_reads.fetch_add(reads, Ordering::Relaxed);
+        self.toc_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> IoStats {
+        IoStats {
+            toc_reads: self.toc_reads.load(Ordering::Relaxed),
+            toc_bytes: self.toc_bytes.load(Ordering::Relaxed),
+            payload_reads: self.payload_reads.load(Ordering::Relaxed),
+            payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero every counter (e.g. to meter one query in isolation).
+    pub fn reset(&self) {
+        self.toc_reads.store(0, Ordering::Relaxed);
+        self.toc_bytes.store(0, Ordering::Relaxed);
+        self.payload_reads.store(0, Ordering::Relaxed);
+        self.payload_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+impl SectionSource for MeteredSource {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        let out = self.inner.read_at(off, len)?;
+        let end = off.saturating_add(out.len() as u64);
+        if end <= self.header_limit.load(Ordering::Relaxed) {
+            self.toc_reads.fetch_add(1, Ordering::Relaxed);
+            self.toc_bytes.fetch_add(out.len() as u64, Ordering::Relaxed);
+        } else {
+            self.payload_reads.fetch_add(1, Ordering::Relaxed);
+            self.payload_bytes
+                .fetch_add(out.len() as u64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    fn source_len(&self) -> u64 {
+        self.inner.source_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archive::toc::MemSource;
+
+    #[test]
+    fn reads_classify_by_header_limit() {
+        let src = MeteredSource::new(Box::new(MemSource(vec![0u8; 100])));
+        // before the limit is known everything is a header read
+        src.read_at(0, 10).unwrap();
+        src.set_header_limit(20);
+        src.read_at(0, 20).unwrap(); // ends exactly at the limit -> toc
+        src.read_at(20, 30).unwrap(); // payload
+        src.read_at(4, 60).unwrap(); // crosses the limit -> payload
+        let s = src.stats();
+        assert_eq!((s.toc_reads, s.toc_bytes), (2, 30));
+        assert_eq!((s.payload_reads, s.payload_bytes), (2, 90));
+        assert_eq!(s.reads(), 4);
+        assert_eq!(s.bytes(), 120);
+        src.add_payload(1, 5);
+        src.add_toc(1, 2);
+        assert_eq!(src.stats().bytes(), 127);
+        src.reset();
+        assert_eq!(src.stats(), IoStats::default());
+    }
+}

@@ -113,10 +113,31 @@ COMMANDS:
               sections the query touches; reports archive bytes read.
               Species are mechanism names (e.g. OH,CO) or numeric
               indices; unknown names list the available ones.
-  inspect     --archive <gba|gba2|szf>
+  inspect     --archive <gba|gba2|szf> [--stats]
               Print the GBA2 table of contents (per-shard and per-species
               byte ranges), per-section codec tags, per-codec byte
-              totals, and size breakdown.
+              totals, and size breakdown.  --stats additionally reopens
+              the archive through the metered reader and reports the
+              classified open IO (header/TOC reads vs payload reads).
+  serve       --mount NAME=PATH[,NAME=PATH...] [--listen 127.0.0.1:7070]
+              [--workers 4] [--queue 64] [--cache-mb 256]
+              [--max-response-mb 256] [--threads N]
+              [--artifacts DIR | --reference]
+              Mount archives under named dataset keys and serve them over
+              HTTP/1.1 (gbatc::store + gbatc::serve): a fixed worker pool
+              with a bounded request queue executes typed queries through
+              a sharded LRU cache of decoded (shard, species) planes —
+              warm queries decode nothing and read no archive bytes, and
+              responses are bit-identical to a local decode.  Endpoints:
+              GET /datasets (catalog), GET /query?dataset=..&t0=..&t1=..
+              &species=.. (binary f32 body + X-Gbatc-Meta JSON header),
+              GET /stats (cache/decode/IO/server counters).
+  query       DATASET [--server 127.0.0.1:7070] [--t0 N] [--t1 N]
+              [--species NAME|INDEX[,...]] [--output <sdf>]
+              Remote partial decode against a running `gbatc serve`:
+              fetches the window/species subset over HTTP and optionally
+              writes it as an SDF1 dataset.  Defaults to the full time
+              axis and all species.
   sz          --input <sdf> --output <szf> [--nrmse 1e-3]
               [--mode auto|lorenzo|interp] [--eb-scale 1.0]
               SZ baseline compression.

@@ -129,6 +129,21 @@ pub fn pipeline_workspace_bytes(
     ((queue_depth + 2) * batch * instance_len * 4).min(2 * shard_values * 4)
 }
 
+/// Copy one normalized `[Y, X]` row and denormalize it in place with a
+/// species' archive range.  This is *the* per-element egress op — both
+/// [`ShardEngine::decompress_range`] and the `gbatc::store` cached
+/// assembly call it (and it mirrors `denormalize_in_place`), so the
+/// bit-identity of cached and uncached reads is structural rather than a
+/// convention two copied loops would have to keep.
+#[inline]
+pub fn denorm_row_into(dst: &mut [f32], src: &[f32], lo: f32, hi: f32) {
+    let range = (hi - lo).max(1e-30);
+    dst.copy_from_slice(src);
+    for v in dst {
+        *v = *v * range + lo;
+    }
+}
+
 /// One selected time window + species subset, decoded.
 #[derive(Debug)]
 pub struct RangeDecode {
@@ -760,7 +775,7 @@ impl<'a> ShardEngine<'a> {
         }
     }
 
-    fn check_spec(&self, header: &Gba2Header) -> Result<()> {
+    pub(crate) fn check_spec(&self, header: &Gba2Header) -> Result<()> {
         let spec = self.handle.spec();
         if header.dims.1 != spec.species
             || header.block != spec.block
@@ -888,6 +903,54 @@ impl<'a> ShardEngine<'a> {
         Ok(norm)
     }
 
+    /// Decode the selected species of one shard to *normalized*
+    /// per-species planes (`[nt_sh, Y, X]` each, returned in `sel`
+    /// order), reading only that shard's touched sections.
+    ///
+    /// This is the fill path of the `gbatc::store` decoded-block cache:
+    /// a plane's bits are independent of which *other* species were
+    /// selected alongside it (the shared AE+TCN reconstruction covers all
+    /// blocks, and each species' correction is self-contained), so planes
+    /// are cacheable per (shard, species) and a query assembled from
+    /// cached planes is bit-identical to a fresh
+    /// [`Self::decompress_range`].
+    ///
+    /// `sel` must be strictly ascending, deduplicated species indices —
+    /// the shape every [`crate::api::SpeciesSel`] resolves to.
+    pub fn decode_shard_planes<S: SectionSource + ?Sized>(
+        &self,
+        header: &Gba2Header,
+        entry: &ShardToc,
+        src: &S,
+        sel: &[usize],
+        threads: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.check_spec(header)?;
+        let (_, ns, ny, nx) = header.dims;
+        let npix = ny * nx;
+        if sel.windows(2).any(|w| w[0] >= w[1]) || sel.iter().any(|&s| s >= ns) {
+            return Err(Error::shape(format!(
+                "decode_shard_planes selection {sel:?} is not ascending unique indices < {ns}"
+            )));
+        }
+        let progress = Progress::new();
+        let meter = WorkspaceMeter::new();
+        let norm = self.decode_shard_norm(
+            header,
+            entry,
+            src,
+            sel,
+            Pipeline::default(),
+            effective_threads(threads),
+            &progress,
+            &meter,
+        )?;
+        Ok(sel
+            .iter()
+            .map(|&s| registry::gather_plane(&norm, entry.nt, ns, npix, s))
+            .collect())
+    }
+
     /// Decompress a whole archive back to mass fractions `[T, S, Y, X]`.
     pub fn decompress_all(&self, archive: &Gba2Archive, threads: usize) -> Result<Vec<f32>> {
         let progress = Progress::new();
@@ -961,15 +1024,14 @@ impl<'a> ShardEngine<'a> {
             for t in lo_t..hi_t {
                 for (k, &s) in sel.iter().enumerate() {
                     let (lo, hi) = header.ranges[s];
-                    let range = (hi - lo).max(1e-30);
                     let src_off = ((t - entry.t0) * ns + s) * npix;
                     let dst_off = ((t - t0) * nsel + k) * npix;
-                    let dst = &mut out[dst_off..dst_off + npix];
-                    dst.copy_from_slice(&norm[src_off..src_off + npix]);
-                    // same f32 op as denormalize_in_place — bit-identical
-                    for v in dst {
-                        *v = *v * range + lo;
-                    }
+                    denorm_row_into(
+                        &mut out[dst_off..dst_off + npix],
+                        &norm[src_off..src_off + npix],
+                        lo,
+                        hi,
+                    );
                 }
             }
         }

@@ -8,6 +8,21 @@ use std::fmt;
 pub enum Error {
     Io(std::io::Error),
 
+    /// An IO failure annotated with *what* was being done — the serving
+    /// request path wraps socket/file errors in this so a worker thread
+    /// can log "writing query response: broken pipe" instead of a bare
+    /// errno (and never panics on a client disconnect).
+    IoContext {
+        what: String,
+        source: std::io::Error,
+    },
+
+    /// A malformed network request/response: bad request line, unknown
+    /// endpoint parameters, oversized head, truncated framing.  Every
+    /// protocol failure on the serve path is this variant — typed, never
+    /// a panic.
+    Protocol(String),
+
     #[cfg(feature = "pjrt")]
     Xla(xla::Error),
 
@@ -23,6 +38,8 @@ impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             Error::Io(e) => write!(f, "io error: {e}"),
+            Error::IoContext { what, source } => write!(f, "{what}: {source}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
             #[cfg(feature = "pjrt")]
             Error::Xla(e) => write!(f, "xla/pjrt error: {e}"),
             Error::Format(m) => write!(f, "format error: {m}"),
@@ -39,6 +56,7 @@ impl std::error::Error for Error {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             Error::Io(e) => Some(e),
+            Error::IoContext { source, .. } => Some(source),
             _ => None,
         }
     }
@@ -77,5 +95,15 @@ impl Error {
     }
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
+    }
+    pub fn protocol(msg: impl Into<String>) -> Self {
+        Error::Protocol(msg.into())
+    }
+    /// Wrap an IO error with what was being attempted.
+    pub fn io_ctx(what: impl Into<String>, source: std::io::Error) -> Self {
+        Error::IoContext {
+            what: what.into(),
+            source,
+        }
     }
 }

@@ -68,6 +68,29 @@
 //!            └─ TOC walk, reads only touched sections, bit-identical
 //!               to the same slice of a full decode
 //!   ```
+//! * **Serving layer** ([`store`] + [`serve`]) — the read side at scale:
+//!   an [`store::ArchiveStore`] mounts many archives under named dataset
+//!   keys and executes [`api::Query`]s through a sharded, byte-metered
+//!   LRU cache of decoded (shard, species) planes (per-shard locking, no
+//!   global mutex on the hot path; cached and uncached reads are
+//!   bit-identical), and [`serve::QueryServer`] exposes it over a
+//!   dependency-free `std::net` HTTP/1.1 thread-pool:
+//!
+//!   ```text
+//!   clients ──► TcpListener ──► bounded queue ──► worker pool
+//!                 (503 on overflow)                │ GET /datasets
+//!                                                  │ GET /query?dataset=..
+//!                                                  │     &t0=..&t1=..&species=..
+//!                                                  │ GET /stats
+//!                                                  ▼
+//!                 ArchiveStore ── SectionCache (sharded LRU) ── miss?
+//!                      │               hit: zero decode, zero IO   │
+//!                      └── mounted GBA1/GBA2 archives ◄── decode one
+//!                          (TOC parsed once, IO metered)   shard's planes
+//!   ```
+//!
+//!   `serve::QueryClient` is the matching blocking client (`gbatc serve`
+//!   / `gbatc query` front both).
 //! * **Compressor trait / CLI** — [`compressor::Compressor`] unifies
 //!   GBA/GBATC/SZ as a thin adapter over [`api`] (`compress_bytes` stays
 //!   as the one-call convenience); the `gbatc` binary routes `compress`
@@ -97,6 +120,8 @@ pub mod linalg;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
+pub mod store;
 pub mod sz;
 pub mod util;
 

@@ -2,6 +2,8 @@
 //! compression, full and partial decompression, archive inspection, and
 //! evaluation.  See `gbatc help`.
 
+use std::sync::Arc;
+
 use gbatc::api::{
     ArchiveReader, Backend, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesBudget,
     SpeciesSel,
@@ -13,6 +15,8 @@ use gbatc::compressor::{CodecChoice, SzArchive, SzCompressOptions, SzCompressor}
 use gbatc::data::{self, io, Profile};
 use gbatc::error::{Error, Result};
 use gbatc::metrics;
+use gbatc::serve::{QueryClient, QueryServer, ServerConfig};
+use gbatc::store::{ArchiveStore, StoreConfig};
 use gbatc::sz::codec::SzMode;
 
 fn main() {
@@ -36,6 +40,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "decompress" => cmd_decompress(args),
         "extract" => cmd_extract(args),
         "inspect" => cmd_inspect(args),
+        "serve" => cmd_serve(args),
+        "query" => cmd_query(args),
         "sz" => cmd_sz(args),
         "sz-decompress" => cmd_sz_decompress(args),
         "evaluate" => cmd_evaluate(args),
@@ -300,14 +306,107 @@ fn cmd_extract(args: &Args) -> Result<()> {
         ds.ns,
         t.elapsed().as_secs_f64()
     );
+    let iostats = reader.io_stats();
     println!(
-        "  read {} of {} archive bytes ({:.1}%) in {} ranged reads | peak workspace {:.1} MB",
+        "  read {} of {} archive bytes ({:.1}%) in {} ranged reads ({iostats}) | peak workspace {:.1} MB",
         reader.bytes_read(),
         total,
         100.0 * reader.bytes_read() as f64 / total.max(1) as f64,
         reader.reads(),
         range.peak_workspace_bytes as f64 / 1e6
     );
+    Ok(())
+}
+
+/// Mount `NAME=PATH[,NAME=PATH...]` archives into a store.
+fn mount_all(store: &ArchiveStore, list: &str) -> Result<()> {
+    for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let (name, path) = tok.split_once('=').ok_or_else(|| {
+            Error::config(format!("--mount entry `{tok}` is not NAME=PATH"))
+        })?;
+        store.mount_file(name.trim(), path.trim())?;
+        let info = store.dataset_info(name.trim())?;
+        let (nt, ns, ny, nx) = info.dims;
+        println!(
+            "mounted {:<16} {nt}x{ns}x{ny}x{nx} ({} shards, {} B, NRMSE {:.1e}) <- {}",
+            name.trim(),
+            info.n_shards,
+            info.archive_bytes,
+            info.nrmse_target,
+            path.trim()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let mounts = args.require("mount")?;
+    let store = Arc::new(ArchiveStore::new(StoreConfig {
+        backend: backend(args),
+        threads: args.get_parse("threads", 0)?,
+        cache_bytes: args.get_parse::<usize>("cache-mb", 256)? << 20,
+        cache_shards: 16,
+    })?);
+    mount_all(&store, mounts)?;
+    let server = QueryServer::bind(
+        Arc::clone(&store),
+        listen,
+        ServerConfig {
+            workers: args.get_parse("workers", 4)?,
+            queue: args.get_parse("queue", 64)?,
+            max_response_bytes: args.get_parse::<usize>("max-response-mb", 256)? << 20,
+            ..ServerConfig::default()
+        },
+    )?;
+    println!(
+        "serving {} dataset(s) on http://{} — GET /datasets, /query, /stats",
+        store.datasets().len(),
+        server.addr()
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let dataset = args.positional.first().ok_or_else(|| {
+        Error::config("usage: gbatc query DATASET [--server ADDR] [--t0 N] [--t1 N] [--species ...]")
+    })?;
+    let client = QueryClient::new(args.get_or("server", "127.0.0.1:7070"));
+    let parse_opt = |name: &str| -> Result<Option<usize>> {
+        match args.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|e| Error::config(format!("--{name} {v}: {e}"))),
+        }
+    };
+    let t = std::time::Instant::now();
+    let dec = client.query(
+        dataset,
+        parse_opt("t0")?,
+        parse_opt("t1")?,
+        args.get_or("species", ""),
+    )?;
+    println!(
+        "{dataset}[t {}..{}, {} species] -> {} values ({} B) in {:.2}s | certified NRMSE {:.1e}",
+        dec.t0,
+        dec.t0 + dec.nt,
+        dec.species.len(),
+        dec.mass.len(),
+        dec.mass.len() * 4,
+        t.elapsed().as_secs_f64(),
+        dec.nrmse_target
+    );
+    if let Some(out) = args.get("output") {
+        let mut ds = gbatc::data::Dataset::new(dec.nt, dec.species.len(), dec.ny, dec.nx);
+        ds.mass = dec.mass;
+        ds.pressure = dec.pressure;
+        io::write_dataset(out, &ds)?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -357,6 +456,18 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             e.latent.1,
             sections,
             tags
+        );
+    }
+    if args.has("stats") {
+        // reopen through the metered reader: shows what indexing costs
+        // (header + TOC reads, classified) before any payload is touched
+        let reader = ArchiveReader::open_file(path, &Backend::Reference, 0)?;
+        let iostats = reader.io_stats();
+        println!(
+            "  open IO: {iostats} | indexing read {} of {} archive bytes ({:.2}%)",
+            iostats.bytes(),
+            reader.archive_bytes(),
+            100.0 * iostats.bytes() as f64 / reader.archive_bytes().max(1) as f64
         );
     }
     println!("  {}", codec_totals_line(&a));

@@ -1,0 +1,175 @@
+//! Blocking query client — the consumer half of the wire protocol, used
+//! by `gbatc query` and the loopback tests.
+//!
+//! One request per TCP connection (`Connection: close`), so the client
+//! is trivially thread-safe: share one [`QueryClient`] across threads
+//! and call it concurrently.
+
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::http::{self, HttpResponse};
+
+/// A blocking client for one server address.
+#[derive(Clone, Debug)]
+pub struct QueryClient {
+    addr: String,
+    timeout: Duration,
+}
+
+/// A decoded `/query` response.
+#[derive(Clone, Debug)]
+pub struct ClientDecode {
+    /// First timestep of the window.
+    pub t0: usize,
+    /// Timesteps decoded.
+    pub nt: usize,
+    pub ny: usize,
+    pub nx: usize,
+    /// Resolved species indices, ascending (row order of `mass`).
+    pub species: Vec<usize>,
+    /// Loosest certified NRMSE target of the dataset.
+    pub nrmse_target: f64,
+    /// Ambient pressure [Pa] from the archive header.
+    pub pressure: f64,
+    /// Row-major `[nt, species.len(), ny, nx]` mass fractions —
+    /// bit-identical to a local decode of the same range.
+    pub mass: Vec<f32>,
+    /// The raw `X-Gbatc-Meta` JSON, for fields not parsed above.
+    pub meta_json: String,
+}
+
+impl QueryClient {
+    /// A client for `addr` (e.g. `127.0.0.1:7070`) with a 30 s timeout.
+    pub fn new(addr: impl Into<String>) -> QueryClient {
+        QueryClient {
+            addr: addr.into(),
+            timeout: Duration::from_secs(30),
+        }
+    }
+
+    /// Override the connect/read/write timeout.
+    pub fn timeout(mut self, timeout: Duration) -> QueryClient {
+        self.timeout = timeout;
+        self
+    }
+
+    /// Connect with the configured timeout (not the OS default, which
+    /// can be minutes), trying each resolved address.
+    fn connect(&self) -> Result<TcpStream> {
+        let addrs = self
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| Error::io_ctx(format!("resolving {}", self.addr), e))?;
+        let mut last: Option<std::io::Error> = None;
+        for a in addrs {
+            match TcpStream::connect_timeout(&a, self.timeout) {
+                Ok(s) => return Ok(s),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(Error::io_ctx(
+            format!("connecting to {}", self.addr),
+            last.unwrap_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::NotFound, "no addresses resolved")
+            }),
+        ))
+    }
+
+    fn get(&self, target: &str) -> Result<HttpResponse> {
+        let mut stream = self.connect()?;
+        let _ = stream.set_read_timeout(Some(self.timeout));
+        let _ = stream.set_write_timeout(Some(self.timeout));
+        let req = format!(
+            "GET {target} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\r\n",
+            self.addr
+        );
+        stream
+            .write_all(req.as_bytes())
+            .map_err(|e| Error::io_ctx("sending request", e))?;
+        http::read_response(&mut stream)
+    }
+
+    fn get_ok(&self, target: &str) -> Result<HttpResponse> {
+        let resp = self.get(target)?;
+        if resp.status != 200 {
+            return Err(Error::protocol(format!(
+                "{target}: HTTP {} — {}",
+                resp.status,
+                String::from_utf8_lossy(&resp.body)
+            )));
+        }
+        Ok(resp)
+    }
+
+    /// Raw JSON catalog from `GET /datasets`.
+    pub fn datasets_json(&self) -> Result<String> {
+        let resp = self.get_ok("/datasets")?;
+        String::from_utf8(resp.body).map_err(|_| Error::protocol("/datasets body is not UTF-8"))
+    }
+
+    /// Raw JSON counters from `GET /stats`.
+    pub fn stats_json(&self) -> Result<String> {
+        let resp = self.get_ok("/stats")?;
+        String::from_utf8(resp.body).map_err(|_| Error::protocol("/stats body is not UTF-8"))
+    }
+
+    /// Run a remote query.  `t0`/`t1` default to the dataset's full time
+    /// axis; `species` is the CLI list syntax (names and/or indices,
+    /// empty = all).
+    pub fn query(
+        &self,
+        dataset: &str,
+        t0: Option<usize>,
+        t1: Option<usize>,
+        species: &str,
+    ) -> Result<ClientDecode> {
+        let mut target = format!("/query?dataset={dataset}");
+        if let Some(t0) = t0 {
+            target.push_str(&format!("&t0={t0}"));
+        }
+        if let Some(t1) = t1 {
+            target.push_str(&format!("&t1={t1}"));
+        }
+        if !species.is_empty() {
+            target.push_str(&format!("&species={species}"));
+        }
+        let resp = self.get_ok(&target)?;
+        let meta = resp
+            .header("x-gbatc-meta")
+            .ok_or_else(|| Error::protocol("query response lacks the X-Gbatc-Meta header"))?
+            .to_string();
+        let t0 = http::json_u64(&meta, "t0")? as usize;
+        let nt = http::json_u64(&meta, "nt")? as usize;
+        let ny = http::json_u64(&meta, "ny")? as usize;
+        let nx = http::json_u64(&meta, "nx")? as usize;
+        let species = http::json_usize_array(&meta, "species")?;
+        let nrmse_target = http::json_f64(&meta, "nrmse_target")?;
+        let pressure = http::json_f64(&meta, "pressure")?;
+        let expect = nt * species.len() * ny * nx * 4;
+        if resp.body.len() != expect {
+            return Err(Error::protocol(format!(
+                "query body is {} bytes, meta implies {expect}",
+                resp.body.len()
+            )));
+        }
+        let mass = resp
+            .body
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(ClientDecode {
+            t0,
+            nt,
+            ny,
+            nx,
+            species,
+            nrmse_target,
+            pressure,
+            mass,
+            meta_json: meta,
+        })
+    }
+}

@@ -1,0 +1,345 @@
+//! Minimal HTTP/1.1 framing — just enough protocol for the query server
+//! and its blocking client, with zero dependencies.
+//!
+//! Scope (deliberate): `GET`-only requests, one request per connection
+//! (`Connection: close` everywhere), `Content-Length`-framed bodies, no
+//! percent-decoding (dataset names and species lists are plain tokens —
+//! enforced at mount).  Every malformed input is a typed
+//! [`Error::Protocol`]; every socket failure is a typed
+//! [`Error::IoContext`] — nothing on this path panics.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::error::{Error, Result};
+
+/// Head-size cap for *responses* read by the client (the meta header
+/// carries a species index array, so it is roomier than the server's
+/// request cap).
+pub const MAX_RESPONSE_HEAD: usize = 64 * 1024;
+
+/// Message prefix of the over-cap head error — the one protocol failure
+/// the server maps to its own status (`431`), so the mapping keys on
+/// this shared constant rather than on incidental wording.
+pub const OVERSIZE_MARK: &str = "oversized head:";
+
+/// A parsed request line + query string.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string, e.g. `/query`.
+    pub path: String,
+    /// `key=value` pairs of the query string, in order.
+    pub params: Vec<(String, String)>,
+}
+
+impl Request {
+    /// First value of a query parameter.
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.params
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Byte offset just past the `\r\n\r\n` head terminator, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Read from `stream` until a full head (`\r\n\r\n`) is buffered,
+/// rejecting heads over `max_bytes`.  Returns the buffer and the offset
+/// where the body (if any) begins inside it — chunked reads may have
+/// pulled body bytes in already.
+fn read_head(stream: &mut TcpStream, max_bytes: usize, what: &str) -> Result<(Vec<u8>, usize)> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    loop {
+        if let Some(end) = head_end(&buf) {
+            return Ok((buf, end));
+        }
+        if buf.len() > max_bytes {
+            return Err(Error::protocol(format!(
+                "{OVERSIZE_MARK} {what} head over {max_bytes} bytes"
+            )));
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| Error::io_ctx(format!("reading {what}"), e))?;
+        if n == 0 {
+            return Err(Error::protocol(format!(
+                "connection closed before a full {what} head"
+            )));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Read and parse one request head.  `max_bytes` bounds the head (GET
+/// requests carry no body we care about).
+pub fn read_request(stream: &mut TcpStream, max_bytes: usize) -> Result<Request> {
+    let (buf, end) = read_head(stream, max_bytes, "request")?;
+    let head = std::str::from_utf8(&buf[..end])
+        .map_err(|_| Error::protocol("request head is not UTF-8"))?;
+    let line = head
+        .lines()
+        .next()
+        .ok_or_else(|| Error::protocol("empty request"))?;
+    let mut toks = line.split_whitespace();
+    let (method, target, version) = match (toks.next(), toks.next(), toks.next(), toks.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => {
+            return Err(Error::protocol(format!(
+                "malformed request line `{line}`"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::protocol(format!("unsupported version `{version}`")));
+    }
+    if !target.starts_with('/') {
+        return Err(Error::protocol(format!("malformed target `{target}`")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let params = query
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect();
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        params,
+    })
+}
+
+/// Standard reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Content Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one complete `Connection: close` response.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
+        reason(status),
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let ctx = |e| Error::io_ctx("writing response", e);
+    stream.write_all(head.as_bytes()).map_err(ctx)?;
+    stream.write_all(body).map_err(ctx)?;
+    stream.flush().map_err(ctx)
+}
+
+/// A complete response as the blocking client reads it.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    /// `(lowercased name, value)` pairs.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Header value by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one `Content-Length`-framed response off `stream`.
+pub fn read_response(stream: &mut TcpStream) -> Result<HttpResponse> {
+    let (buf, end) = read_head(stream, MAX_RESPONSE_HEAD, "response")?;
+    let head = std::str::from_utf8(&buf[..end])
+        .map_err(|_| Error::protocol("response head is not UTF-8"))?;
+    let mut lines = head.lines();
+    let status_line = lines
+        .next()
+        .ok_or_else(|| Error::protocol("empty response"))?;
+    // "HTTP/1.1 200 OK"
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::protocol(format!("malformed status line `{status_line}`")))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| Error::protocol(format!("malformed header `{line}`")))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let content_length: usize = headers
+        .iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .ok_or_else(|| Error::protocol("response has no valid Content-Length"))?;
+    let mut body = buf[end..].to_vec();
+    if body.len() > content_length {
+        return Err(Error::protocol(format!(
+            "response body overruns Content-Length {content_length}"
+        )));
+    }
+    let have = body.len();
+    body.resize(content_length, 0);
+    stream
+        .read_exact(&mut body[have..])
+        .map_err(|e| Error::io_ctx("reading response body", e))?;
+    Ok(HttpResponse {
+        status,
+        headers,
+        body,
+    })
+}
+
+// ---- tiny JSON helpers (no serde in the offline image) ----------------
+
+/// Escape a string for a JSON literal.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `{"error":"..."}` body for error responses.
+pub fn json_error(msg: &str) -> String {
+    format!("{{\"error\":\"{}\"}}", json_escape(msg))
+}
+
+/// The raw token after `"key":` in flat JSON (up to `,`, `}`, or `]`).
+fn json_token<'a>(json: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = json
+        .find(&pat)
+        .ok_or_else(|| Error::protocol(format!("JSON field `{key}` missing")))?;
+    let rest = &json[at + pat.len()..];
+    let end = rest
+        .find(|c| c == ',' || c == '}' || c == ']')
+        .unwrap_or(rest.len());
+    Ok(rest[..end].trim())
+}
+
+/// Parse `"key": <unsigned integer>` out of flat JSON.
+pub fn json_u64(json: &str, key: &str) -> Result<u64> {
+    json_token(json, key)?
+        .parse()
+        .map_err(|e| Error::protocol(format!("JSON field `{key}`: {e}")))
+}
+
+/// Parse `"key": <number>` out of flat JSON.
+pub fn json_f64(json: &str, key: &str) -> Result<f64> {
+    json_token(json, key)?
+        .parse()
+        .map_err(|e| Error::protocol(format!("JSON field `{key}`: {e}")))
+}
+
+/// Parse `"key": [i0, i1, ...]` out of flat JSON.
+pub fn json_usize_array(json: &str, key: &str) -> Result<Vec<usize>> {
+    let pat = format!("\"{key}\":");
+    let at = json
+        .find(&pat)
+        .ok_or_else(|| Error::protocol(format!("JSON field `{key}` missing")))?;
+    let rest = json[at + pat.len()..].trim_start();
+    let rest = rest
+        .strip_prefix('[')
+        .ok_or_else(|| Error::protocol(format!("JSON field `{key}` is not an array")))?;
+    let end = rest
+        .find(']')
+        .ok_or_else(|| Error::protocol(format!("JSON array `{key}` unterminated")))?;
+    rest[..end]
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.parse()
+                .map_err(|e| Error::protocol(format!("JSON array `{key}` entry `{t}`: {e}")))
+        })
+        .collect()
+}
+
+/// Render `[i0,i1,...]`.
+pub fn json_usize_list(v: &[usize]) -> String {
+    let mut out = String::from("[");
+    for (i, x) in v.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&x.to_string());
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_helpers_round_trip() {
+        let meta = "{\"t0\":3,\"nt\":4,\"nrmse\":1e-3,\"species\":[1, 3, 7],\"tail\":0}";
+        assert_eq!(json_u64(meta, "t0").unwrap(), 3);
+        assert_eq!(json_u64(meta, "nt").unwrap(), 4);
+        assert_eq!(json_f64(meta, "nrmse").unwrap(), 1e-3);
+        assert_eq!(json_usize_array(meta, "species").unwrap(), vec![1, 3, 7]);
+        assert_eq!(json_usize_array("{\"s\":[]}", "s").unwrap(), Vec::<usize>::new());
+        assert!(json_u64(meta, "missing").is_err());
+        assert!(json_usize_array(meta, "t0").is_err());
+        assert_eq!(json_usize_list(&[1, 3, 7]), "[1,3,7]");
+        assert_eq!(json_usize_list(&[]), "[]");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert!(json_error("boom").contains("\"error\""));
+    }
+
+    #[test]
+    fn head_end_detection() {
+        assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\nBODY"), Some(18));
+        assert_eq!(head_end(b"partial\r\n"), None);
+    }
+}

@@ -1,0 +1,29 @@
+//! Network query serving — the wire on top of [`crate::store`].
+//!
+//! A dependency-free `std::net` HTTP/1.1 stack in three parts:
+//!
+//! * [`http`] — minimal framing (GET-only requests, `Content-Length`
+//!   bodies, `Connection: close`) plus the hand-rolled JSON helpers the
+//!   offline image needs.
+//! * [`server`] — [`QueryServer`]: a fixed thread-pool over a
+//!   `TcpListener` with a bounded request queue (overflow answers `503`),
+//!   graceful shutdown, and per-outcome counters.  Endpoints:
+//!   `GET /datasets`, `GET /query?dataset=..&t0=..&t1=..&species=..`
+//!   (binary f32 body + `X-Gbatc-Meta` JSON header), `GET /stats`.
+//! * [`client`] — [`QueryClient`]: the small blocking client behind
+//!   `gbatc query` and the loopback tests; responses decode to
+//!   [`ClientDecode`] with bytes bit-identical to a local
+//!   [`ArchiveReader`](crate::api::ArchiveReader) query.
+//!
+//! The request path is an unwrap-free zone: malformed query strings,
+//! oversized requests, and client disconnects surface as
+//! [`Error::Protocol`](crate::Error::Protocol) /
+//! [`Error::IoContext`](crate::Error::IoContext) and map to HTTP
+//! statuses — a worker thread never panics.
+
+pub mod client;
+pub mod http;
+pub mod server;
+
+pub use client::{ClientDecode, QueryClient};
+pub use server::{QueryServer, ServeStats, ServerConfig};

@@ -1,0 +1,534 @@
+//! Concurrent query server — a fixed thread-pool over a `TcpListener`.
+//!
+//! External demand drives the concurrency here (unlike the engine's
+//! internal shard workers): the accept loop pushes connections into a
+//! *bounded* queue and `workers` threads drain it, so a traffic burst
+//! degrades to fast `503`s instead of unbounded thread or memory growth.
+//! Every request failure — malformed query string, oversized head,
+//! client disconnect mid-response — is a typed error mapped to an HTTP
+//! status (or swallowed into a counter when the socket is gone); worker
+//! threads never panic and never exit early.
+//!
+//! Endpoints:
+//! * `GET /datasets` — JSON catalog of mounted datasets.
+//! * `GET /query?dataset=D&t0=A&t1=B&species=OH,CO` — binary
+//!   little-endian f32 body (`[nt, |species|, Y, X]` row-major) plus an
+//!   `X-Gbatc-Meta` JSON header with dims, resolved species indices, and
+//!   the certified error target.  `t0`/`t1`/`species` are optional
+//!   (defaults: full axis, all species).
+//! * `GET /stats` — JSON cache / decode / IO / server counters.
+//!
+//! Shutdown is graceful: [`QueryServer::shutdown`] stops accepting,
+//! lets the workers drain the queue and finish in-flight responses, and
+//! joins every thread.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::api::{Query, SpeciesSel};
+use crate::error::{Error, Result};
+use crate::serve::http::{self, json_error, json_escape, json_usize_list, Request};
+use crate::store::ArchiveStore;
+
+const JSON: &str = "application/json";
+const BINARY: &str = "application/octet-stream";
+
+/// Knobs of a [`QueryServer`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Worker threads handling requests.
+    pub workers: usize,
+    /// Bounded connection queue between accept and the workers; overflow
+    /// is answered `503` immediately.
+    pub queue: usize,
+    /// Request-head byte cap (oversized requests get `431`).
+    pub max_head_bytes: usize,
+    /// Response-body byte cap per `/query` (larger requests get `413`
+    /// before any decode) — the bounded queue limits connections, this
+    /// limits bytes: at most `workers * max_response_bytes * 2` of
+    /// response/decode buffers are ever in flight.
+    pub max_response_bytes: usize,
+    /// Per-connection socket read timeout.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            queue: 64,
+            max_head_bytes: 8 * 1024,
+            max_response_bytes: 256 << 20,
+            read_timeout_ms: 30_000,
+        }
+    }
+}
+
+/// Counter snapshot of a server; see the field docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Connections accepted.
+    pub accepted: u64,
+    /// `200` responses written.
+    pub served: u64,
+    /// `4xx` responses (bad request / unknown dataset / oversized head).
+    pub client_errors: u64,
+    /// `5xx` responses (decode failures surfaced to the client).
+    pub server_errors: u64,
+    /// Connections refused with `503` because the queue was full.
+    pub rejected_queue_full: u64,
+    /// Sockets that died mid-request/response (timeouts, disconnects).
+    pub io_errors: u64,
+}
+
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "accepted {} | served {} | 4xx {} | 5xx {} | busy-rejected {} | io errors {}",
+            self.accepted,
+            self.served,
+            self.client_errors,
+            self.server_errors,
+            self.rejected_queue_full,
+            self.io_errors
+        )
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    accepted: AtomicU64,
+    served: AtomicU64,
+    client_errors: AtomicU64,
+    server_errors: AtomicU64,
+    rejected_queue_full: AtomicU64,
+    io_errors: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            served: self.served.load(Ordering::Relaxed),
+            client_errors: self.client_errors.load(Ordering::Relaxed),
+            server_errors: self.server_errors.load(Ordering::Relaxed),
+            rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            io_errors: self.io_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A running server; see the module docs.
+pub struct QueryServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    counters: Arc<Counters>,
+}
+
+impl QueryServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7070`, port `0` for ephemeral) and
+    /// start serving `store` on `cfg.workers` threads.
+    pub fn bind(store: Arc<ArchiveStore>, addr: &str, cfg: ServerConfig) -> Result<QueryServer> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::io_ctx(format!("binding {addr}"), e))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::io_ctx("resolving listener address", e))?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(cfg.queue.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let store = Arc::clone(&store);
+            let counters = Arc::clone(&counters);
+            let handle = std::thread::Builder::new()
+                .name(format!("gbatc-serve-{i}"))
+                .spawn(move || worker_loop(rx, store, counters, cfg))
+                .map_err(|e| Error::io_ctx("spawning server worker", e))?;
+            workers.push(handle);
+        }
+        let accept = {
+            let shutdown = Arc::clone(&shutdown);
+            let counters = Arc::clone(&counters);
+            std::thread::Builder::new()
+                .name("gbatc-serve-accept".to_string())
+                .spawn(move || accept_loop(listener, tx, shutdown, counters))
+                .map_err(|e| Error::io_ctx("spawning accept thread", e))?
+        };
+        Ok(QueryServer {
+            addr: local,
+            shutdown,
+            accept: Some(accept),
+            workers,
+            counters,
+        })
+    }
+
+    /// The bound address (resolves port `0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Counter snapshot (also served at `/stats`).
+    pub fn stats(&self) -> ServeStats {
+        self.counters.snapshot()
+    }
+
+    /// Graceful shutdown: stop accepting, drain the queue, finish
+    /// in-flight responses, join every thread.  Returns the final
+    /// counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.request_stop();
+        if let Some(j) = self.accept.take() {
+            let _ = j.join();
+        }
+        for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+        self.counters.snapshot()
+    }
+
+    fn request_stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+    }
+}
+
+impl Drop for QueryServer {
+    fn drop(&mut self) {
+        // dropped without `shutdown()`: stop accepting and let the
+        // workers drain; joining here could block an unwinding thread,
+        // so the worker handles are simply released
+        if self.accept.is_some() {
+            self.request_stop();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    tx: SyncSender<TcpStream>,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<Counters>,
+) {
+    loop {
+        let conn = match listener.accept() {
+            Ok((conn, _)) => conn,
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(10));
+                continue;
+            }
+        };
+        if shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection itself lands here
+        }
+        counters.accepted.fetch_add(1, Ordering::Relaxed);
+        match tx.try_send(conn) {
+            Ok(()) => {}
+            Err(TrySendError::Full(mut conn)) => {
+                counters.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
+                let _ = http::write_response(
+                    &mut conn,
+                    503,
+                    JSON,
+                    &[],
+                    json_error("request queue full, retry later").as_bytes(),
+                );
+            }
+            Err(TrySendError::Disconnected(_)) => break,
+        }
+    }
+    // dropping `tx` here disconnects the workers once the queue drains
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<TcpStream>>>,
+    store: Arc<ArchiveStore>,
+    counters: Arc<Counters>,
+    cfg: ServerConfig,
+) {
+    loop {
+        // hold the receiver lock only for the dequeue, not the request
+        let conn = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.recv()
+        };
+        let mut conn = match conn {
+            Ok(c) => c,
+            Err(_) => break, // accept loop gone and queue drained
+        };
+        let _ = conn.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms.max(1))));
+        let _ = conn.set_nodelay(true);
+        handle_conn(&mut conn, &store, &counters, cfg);
+    }
+}
+
+/// Serve one connection end to end.  Every outcome lands in a counter;
+/// nothing here panics or kills the worker.
+fn handle_conn(
+    conn: &mut TcpStream,
+    store: &ArchiveStore,
+    counters: &Counters,
+    cfg: ServerConfig,
+) {
+    let req = match http::read_request(conn, cfg.max_head_bytes) {
+        Ok(r) => r,
+        Err(Error::Protocol(msg)) => {
+            counters.client_errors.fetch_add(1, Ordering::Relaxed);
+            let status = if msg.starts_with(http::OVERSIZE_MARK) { 431 } else { 400 };
+            if http::write_response(conn, status, JSON, &[], json_error(&msg).as_bytes()).is_err()
+            {
+                counters.io_errors.fetch_add(1, Ordering::Relaxed);
+            }
+            // the request head was never fully consumed; drain what the
+            // client is still sending so close() sends FIN, not RST (an
+            // RST can destroy the error response in flight)
+            drain(conn);
+            return;
+        }
+        Err(_) => {
+            // read timeout or disconnect before a full request
+            counters.io_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let (status, content_type, extra, body) = route(&req, store, counters, &cfg);
+    match status {
+        200 => counters.served.fetch_add(1, Ordering::Relaxed),
+        400..=499 => counters.client_errors.fetch_add(1, Ordering::Relaxed),
+        _ => counters.server_errors.fetch_add(1, Ordering::Relaxed),
+    };
+    let headers: Vec<(&str, &str)> = extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+    if http::write_response(conn, status, content_type, &headers, &body).is_err() {
+        counters.io_errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Read and discard whatever request bytes are still arriving, bounded
+/// in time and volume, so the socket closes cleanly (FIN) with an empty
+/// receive queue.
+fn drain(conn: &mut TcpStream) {
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(200)));
+    let mut scratch = [0u8; 4096];
+    for _ in 0..64 {
+        match conn.read(&mut scratch) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+    }
+}
+
+type Routed = (u16, &'static str, Vec<(String, String)>, Vec<u8>);
+
+fn route(req: &Request, store: &ArchiveStore, counters: &Counters, cfg: &ServerConfig) -> Routed {
+    if req.method != "GET" {
+        return (
+            405,
+            JSON,
+            Vec::new(),
+            json_error("only GET is supported").into_bytes(),
+        );
+    }
+    match req.path.as_str() {
+        "/datasets" => (200, JSON, Vec::new(), datasets_json(store).into_bytes()),
+        "/stats" => (
+            200,
+            JSON,
+            Vec::new(),
+            stats_json(store, counters).into_bytes(),
+        ),
+        "/query" => handle_query(req, store, cfg.max_response_bytes),
+        other => (
+            404,
+            JSON,
+            Vec::new(),
+            json_error(&format!(
+                "no endpoint `{other}` (try /datasets, /query, /stats)"
+            ))
+            .into_bytes(),
+        ),
+    }
+}
+
+fn parse_opt_usize(req: &Request, key: &str) -> Result<Option<usize>> {
+    match req.param(key) {
+        None | Some("") => Ok(None),
+        Some(v) => v
+            .parse()
+            .map(Some)
+            .map_err(|e| Error::protocol(format!("query parameter {key}={v}: {e}"))),
+    }
+}
+
+fn handle_query(req: &Request, store: &ArchiveStore, max_response_bytes: usize) -> Routed {
+    let bad = |msg: &str| (400, JSON, Vec::new(), json_error(msg).into_bytes());
+    let dataset = match req.param("dataset") {
+        Some(d) if !d.is_empty() => d,
+        _ => return bad("missing dataset parameter"),
+    };
+    let info = match store.dataset_info(dataset) {
+        Ok(i) => i,
+        // a missing mount is the client's 404; anything else (e.g. a
+        // poisoned mount table) is a server-side 500, not a fake 404
+        Err(Error::Config(msg)) => return (404, JSON, Vec::new(), json_error(&msg).into_bytes()),
+        Err(e) => return (500, JSON, Vec::new(), json_error(&e.to_string()).into_bytes()),
+    };
+    let (t0, t1) = match (parse_opt_usize(req, "t0"), parse_opt_usize(req, "t1")) {
+        (Ok(t0), Ok(t1)) => (t0.unwrap_or(0), t1.unwrap_or(info.dims.0)),
+        (Err(e), _) | (_, Err(e)) => return bad(&e.to_string()),
+    };
+    let species = SpeciesSel::parse(req.param("species").unwrap_or(""));
+    // bound the response volume before any decode: the bounded queue
+    // limits concurrent connections, this limits bytes per response
+    let (_, ns, ny, nx) = info.dims;
+    let nsel = match species.resolve(ns) {
+        Ok(sel) => sel.len(),
+        Err(e) => return bad(&e.to_string()),
+    };
+    let want = t1
+        .saturating_sub(t0)
+        .saturating_mul(nsel)
+        .saturating_mul(ny)
+        .saturating_mul(nx)
+        .saturating_mul(4);
+    if want > max_response_bytes {
+        return (
+            413,
+            JSON,
+            Vec::new(),
+            json_error(&format!(
+                "response would be {want} bytes (cap {max_response_bytes}); \
+                 narrow t0/t1 or the species list"
+            ))
+            .into_bytes(),
+        );
+    }
+    let q = Query {
+        time: t0..t1,
+        species,
+    };
+    match store.query(dataset, &q) {
+        Ok(dec) => {
+            let meta = format!(
+                "{{\"dataset\":\"{}\",\"t0\":{},\"nt\":{},\"ny\":{},\"nx\":{},\"species\":{},\
+                 \"nrmse_target\":{:e},\"pressure\":{:e}}}",
+                json_escape(dataset),
+                dec.t0,
+                dec.nt,
+                dec.ny,
+                dec.nx,
+                json_usize_list(&dec.species),
+                info.nrmse_target,
+                info.pressure
+            );
+            let mut body = Vec::with_capacity(dec.mass.len() * 4);
+            for v in &dec.mass {
+                body.extend_from_slice(&v.to_le_bytes());
+            }
+            (
+                200,
+                BINARY,
+                vec![("X-Gbatc-Meta".to_string(), meta)],
+                body,
+            )
+        }
+        Err(e) => {
+            let status = match e {
+                // raced an unmount between the info lookup and the query
+                Error::Config(_) if !store.contains(dataset) => 404,
+                Error::Shape(_) | Error::Config(_) | Error::Protocol(_) => 400,
+                _ => 500,
+            };
+            (status, JSON, Vec::new(), json_error(&e.to_string()).into_bytes())
+        }
+    }
+}
+
+fn datasets_json(store: &ArchiveStore) -> String {
+    let mut out = String::from("{\"datasets\":[");
+    for (i, d) in store.datasets().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let (nt, ns, ny, nx) = d.dims;
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"nt\":{nt},\"ns\":{ns},\"ny\":{ny},\"nx\":{nx},\
+             \"n_shards\":{},\"kt_window\":{},\"nrmse_target\":{:e},\"archive_bytes\":{}}}",
+            json_escape(&d.name),
+            d.n_shards,
+            d.kt_window,
+            d.nrmse_target,
+            d.archive_bytes
+        ));
+    }
+    out.push_str("]}");
+    out
+}
+
+fn stats_json(store: &ArchiveStore, counters: &Counters) -> String {
+    let st = store.stats();
+    let sv = counters.snapshot();
+    let c = st.cache;
+    let mut out = format!(
+        "{{\"queries\":{},\"decoded_sections\":{},\"decoded_bytes\":{},\
+         \"cache\":{{\"hits\":{},\"misses\":{},\"admitted\":{},\"rejected\":{},\
+         \"evicted\":{},\"resident_sections\":{},\"resident_bytes\":{},\
+         \"capacity_bytes\":{},\"lock_shards\":{}}},\
+         \"server\":{{\"accepted\":{},\"served\":{},\"client_errors\":{},\
+         \"server_errors\":{},\"rejected_queue_full\":{},\"io_errors\":{}}},\
+         \"datasets\":[",
+        st.queries,
+        st.decoded_sections,
+        st.decoded_bytes,
+        c.hits,
+        c.misses,
+        c.admitted,
+        c.rejected,
+        c.evicted,
+        c.resident_sections,
+        c.resident_bytes,
+        c.capacity_bytes,
+        c.lock_shards,
+        sv.accepted,
+        sv.served,
+        sv.client_errors,
+        sv.server_errors,
+        sv.rejected_queue_full,
+        sv.io_errors
+    );
+    for (i, d) in st.datasets.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"name\":\"{}\",\"archive_bytes\":{},\"toc_reads\":{},\"toc_bytes\":{},\
+             \"payload_reads\":{},\"payload_bytes\":{}}}",
+            json_escape(&d.name),
+            d.archive_bytes,
+            d.io.toc_reads,
+            d.io.toc_bytes,
+            d.io.payload_reads,
+            d.io.payload_bytes
+        ));
+    }
+    out.push_str("]}");
+    out
+}

@@ -1,0 +1,357 @@
+//! Sharded, byte-metered LRU cache of decoded (dataset, shard, species)
+//! planes.
+//!
+//! The hot path of a query server is *re*-decoding: post-hoc analysis
+//! issues many small overlapping spatiotemporal/species queries against
+//! the same reduced dataset, and every one of them would otherwise pay
+//! the AE+TCN reconstruction and entropy decode again.  This cache keeps
+//! the decoded **normalized per-species planes** (`[nt_sh, Y, X]` f32)
+//! keyed by `(dataset id, shard index, species index)` — the exact unit
+//! [`ShardEngine::decode_shard_planes`](crate::coordinator::engine::ShardEngine::decode_shard_planes)
+//! produces deterministically, so a response assembled from cached planes
+//! is bit-identical to an uncached decode.
+//!
+//! Concurrency: the key space is split over `lock_shards` independent
+//! `Mutex`es (key-hash selects the lock), so concurrent queries touching
+//! different planes never serialize on a global mutex; the only shared
+//! mutable state on the hot path is one atomic recency counter.  The byte
+//! budget is divided evenly across lock shards and enforced per shard —
+//! each insert evicts that shard's least-recently-used planes until its
+//! slice of the budget holds.  Entries larger than one shard's slice are
+//! never admitted (counted in `rejected`): a plane that would evict an
+//! entire lock shard's working set is better decoded on demand.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// `(dataset id, shard index, species index)`.
+pub type CacheKey = (u32, u32, u32);
+
+/// Bookkeeping bytes charged per resident entry on top of the plane
+/// itself (map slot + LRU order node, roughly).
+const ENTRY_OVERHEAD: usize = 96;
+
+struct Slot {
+    plane: Arc<Vec<f32>>,
+    stamp: u64,
+    bytes: usize,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<CacheKey, Slot>,
+    /// Recency order: stamp -> key.  Stamps come from one global monotone
+    /// counter, so they are unique and the first entry is the LRU.
+    order: BTreeMap<u64, CacheKey>,
+    bytes: usize,
+}
+
+/// Counter snapshot of a [`SectionCache`]; see the field docs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Plane lookups served from the cache.
+    pub hits: u64,
+    /// Plane lookups that required a decode.
+    pub misses: u64,
+    /// Planes admitted (inserted or replaced).
+    pub admitted: u64,
+    /// Planes refused admission (larger than one lock shard's budget).
+    pub rejected: u64,
+    /// Planes evicted to make room.
+    pub evicted: u64,
+    /// Planes currently resident.
+    pub resident_sections: u64,
+    /// Bytes currently resident (planes + per-entry overhead).
+    pub resident_bytes: u64,
+    /// Configured byte budget.
+    pub capacity_bytes: u64,
+    /// Independent lock shards.
+    pub lock_shards: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction of all lookups (0 when none were made).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+impl fmt::Display for CacheStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} hits / {} misses ({:.1}%) | resident {} planes {} B of {} B | \
+             admitted {} rejected {} evicted {}",
+            self.hits,
+            self.misses,
+            100.0 * self.hit_rate(),
+            self.resident_sections,
+            self.resident_bytes,
+            self.capacity_bytes,
+            self.admitted,
+            self.rejected,
+            self.evicted
+        )
+    }
+}
+
+/// The sharded LRU itself; see the module docs.
+pub struct SectionCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Byte budget of one lock shard (total capacity / lock shards).
+    per_shard_cap: usize,
+    capacity: usize,
+    stamp: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl SectionCache {
+    /// A cache with `capacity` bytes split over `lock_shards` mutexes.
+    pub fn new(capacity: usize, lock_shards: usize) -> SectionCache {
+        let n = lock_shards.max(1);
+        SectionCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap: (capacity / n).max(1),
+            capacity,
+            stamp: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    fn next_stamp(&self) -> u64 {
+        self.stamp.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// A panic while a lock was held must not wedge the whole server;
+    /// the map/order invariants are maintained by value updates, so the
+    /// inner state stays usable.
+    fn lock(&self, key: CacheKey) -> MutexGuard<'_, Shard> {
+        let mut h = (key.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^= (key.1 as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F);
+        h ^= (key.2 as u64).wrapping_mul(0x1656_67B1_9E37_79F9);
+        h ^= h >> 29;
+        let idx = (h as usize) % self.shards.len();
+        match self.shards[idx].lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Look a plane up, refreshing its recency on a hit.
+    pub fn get(&self, key: CacheKey) -> Option<Arc<Vec<f32>>> {
+        let found = {
+            let mut guard = self.lock(key);
+            let sh = &mut *guard;
+            match sh.map.get_mut(&key) {
+                Some(slot) => {
+                    let stamp = self.stamp.fetch_add(1, Ordering::Relaxed);
+                    let old = slot.stamp;
+                    slot.stamp = stamp;
+                    let plane = slot.plane.clone();
+                    sh.order.remove(&old);
+                    sh.order.insert(stamp, key);
+                    Some(plane)
+                }
+                None => None,
+            }
+        };
+        if found.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        found
+    }
+
+    /// Admit a freshly decoded plane, evicting this lock shard's LRU
+    /// entries until its slice of the byte budget holds.  Returns whether
+    /// the plane was admitted.  Two threads racing the same miss both
+    /// insert; the later call replaces the earlier plane (same bits — the
+    /// decode is deterministic), which only costs the duplicate decode.
+    pub fn insert(&self, key: CacheKey, plane: Arc<Vec<f32>>) -> bool {
+        let bytes = plane.len() * 4 + ENTRY_OVERHEAD;
+        if bytes > self.per_shard_cap {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let mut evictions = 0u64;
+        {
+            let mut guard = self.lock(key);
+            let sh = &mut *guard;
+            let stamp = self.next_stamp();
+            if let Some(old) = sh.map.insert(key, Slot { plane, stamp, bytes }) {
+                sh.order.remove(&old.stamp);
+                sh.bytes -= old.bytes;
+            }
+            sh.order.insert(stamp, key);
+            sh.bytes += bytes;
+            while sh.bytes > self.per_shard_cap {
+                // the loop terminates: the entry just inserted alone fits
+                let Some((_, victim)) = sh.order.pop_first() else {
+                    break;
+                };
+                if let Some(slot) = sh.map.remove(&victim) {
+                    sh.bytes -= slot.bytes;
+                    evictions += 1;
+                }
+            }
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.evicted.fetch_add(evictions, Ordering::Relaxed);
+        true
+    }
+
+    /// Drop every plane of one dataset (unmount support).
+    pub fn purge_dataset(&self, dataset: u32) {
+        for m in &self.shards {
+            let mut guard = match m.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let sh = &mut *guard;
+            let victims: Vec<CacheKey> = sh
+                .map
+                .keys()
+                .filter(|k| k.0 == dataset)
+                .copied()
+                .collect();
+            for k in victims {
+                if let Some(slot) = sh.map.remove(&k) {
+                    sh.order.remove(&slot.stamp);
+                    sh.bytes -= slot.bytes;
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut resident_sections = 0u64;
+        let mut resident_bytes = 0u64;
+        for m in &self.shards {
+            let guard = match m.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            resident_sections += guard.map.len() as u64;
+            resident_bytes += guard.bytes as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+            resident_sections,
+            resident_bytes,
+            capacity_bytes: self.capacity as u64,
+            lock_shards: self.shards.len() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plane(v: f32, n: usize) -> Arc<Vec<f32>> {
+        Arc::new(vec![v; n])
+    }
+
+    #[test]
+    fn hit_miss_and_recency() {
+        let c = SectionCache::new(1 << 20, 4);
+        assert!(c.get((0, 0, 0)).is_none());
+        assert!(c.insert((0, 0, 0), plane(1.0, 10)));
+        let got = c.get((0, 0, 0)).expect("hit");
+        assert_eq!(got[0], 1.0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.admitted), (1, 1, 1));
+        assert_eq!(s.resident_sections, 1);
+        assert!(s.resident_bytes >= 40);
+    }
+
+    #[test]
+    fn evicts_lru_within_byte_budget() {
+        // one lock shard so the budget and the order are deterministic;
+        // room for two 100-f32 planes (400 B + overhead each), not three
+        let c = SectionCache::new(2 * (400 + ENTRY_OVERHEAD) + 50, 1);
+        assert!(c.insert((0, 0, 0), plane(0.0, 100)));
+        assert!(c.insert((0, 0, 1), plane(1.0, 100)));
+        // refresh (0,0,0) so (0,0,1) is the LRU
+        assert!(c.get((0, 0, 0)).is_some());
+        assert!(c.insert((0, 0, 2), plane(2.0, 100)));
+        assert!(c.get((0, 0, 1)).is_none(), "LRU entry must be evicted");
+        assert!(c.get((0, 0, 0)).is_some());
+        assert!(c.get((0, 0, 2)).is_some());
+        let s = c.stats();
+        assert_eq!(s.evicted, 1);
+        assert_eq!(s.resident_sections, 2);
+        assert!(s.resident_bytes <= s.capacity_bytes);
+    }
+
+    #[test]
+    fn oversized_planes_are_rejected_and_replace_updates_bytes() {
+        let c = SectionCache::new(1000, 1);
+        assert!(!c.insert((0, 0, 0), plane(0.0, 100_000)));
+        assert_eq!(c.stats().rejected, 1);
+        assert_eq!(c.stats().resident_sections, 0);
+        // replacing a key keeps byte accounting exact
+        assert!(c.insert((0, 0, 1), plane(1.0, 50)));
+        let before = c.stats().resident_bytes;
+        assert!(c.insert((0, 0, 1), plane(2.0, 50)));
+        assert_eq!(c.stats().resident_bytes, before);
+        assert_eq!(c.stats().resident_sections, 1);
+        assert_eq!(c.get((0, 0, 1)).expect("hit")[0], 2.0);
+    }
+
+    #[test]
+    fn purge_dataset_frees_only_that_dataset() {
+        let c = SectionCache::new(1 << 20, 8);
+        for s in 0..10u32 {
+            assert!(c.insert((1, 0, s), plane(1.0, 10)));
+            assert!(c.insert((2, 0, s), plane(2.0, 10)));
+        }
+        c.purge_dataset(1);
+        let s = c.stats();
+        assert_eq!(s.resident_sections, 10);
+        assert!(c.get((1, 0, 3)).is_none());
+        assert!(c.get((2, 0, 3)).is_some());
+    }
+
+    #[test]
+    fn concurrent_mixed_ops_keep_counters_consistent() {
+        let c = Arc::new(SectionCache::new(64 << 10, 4));
+        std::thread::scope(|scope| {
+            for w in 0..4u32 {
+                let c = Arc::clone(&c);
+                scope.spawn(move || {
+                    for i in 0..200u32 {
+                        let key = (w % 2, i % 16, (i * 7) % 8);
+                        if c.get(key).is_none() {
+                            c.insert(key, plane(i as f32, 64));
+                        }
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 800);
+        assert!(s.resident_bytes <= s.capacity_bytes);
+        assert!(s.resident_sections > 0);
+    }
+}

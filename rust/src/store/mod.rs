@@ -1,0 +1,424 @@
+//! Multi-archive query-serving store.
+//!
+//! [`ArchiveStore`] mounts many `GBA1`/`GBA2` archives under named
+//! dataset keys and executes typed [`Query`]s against them through a
+//! sharded LRU cache of decoded (shard, species) planes
+//! ([`SectionCache`]).  It is the process-wide read side the network
+//! server ([`crate::serve`]) fronts: one executor service, one cache, any
+//! number of mounted datasets, any number of querying threads.
+//!
+//! * **Cache unit** — the normalized per-species plane of one shard
+//!   (`[nt_sh, Y, X]` f32), exactly what
+//!   [`ShardEngine::decode_shard_planes`](crate::coordinator::engine::ShardEngine::decode_shard_planes)
+//!   produces.  Decode is deterministic, so responses assembled from
+//!   cached planes are **bit-identical** to a fresh
+//!   `decompress_range` — property-tested in `tests/query_store.rs`.
+//! * **Locking** — per-lock-shard mutexes in the cache plus an `RwLock`
+//!   around the mount table (write-locked only by mount/unmount); the
+//!   query hot path takes no global mutex.
+//! * **Metering** — hit/miss/eviction counters ([`CacheStats`]),
+//!   decoded-section/bytes totals, and per-dataset IO counters
+//!   ([`crate::archive::IoStats`], header/TOC and payload classified)
+//!   surfaced through [`StoreStats`] and the server's `/stats` endpoint.
+//!
+//! A warm cache makes repeated analysis queries decode-free *and*
+//! IO-free: the TOC is parsed once at mount, so a fully cached query
+//! touches neither the archive source nor the executor.
+
+pub mod cache;
+
+pub use cache::{CacheStats, SectionCache};
+
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::api::reader::{open_metered, payload_base, v2_bytes};
+use crate::api::{Backend, Query};
+use crate::archive::{
+    Gba2Archive, Gba2Header, IoStats, MemSource, MeteredSource, SectionSource, ShardToc,
+};
+use crate::coordinator::engine::{denorm_row_into, RangeDecode, ShardEngine};
+use crate::error::{Error, Result};
+use crate::runtime::{ExecHandle, ExecService};
+
+/// Knobs of an [`ArchiveStore`].
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Execution backend for shard decodes (the store starts one service
+    /// shared by all datasets and queries).
+    pub backend: Backend,
+    /// Worker threads per query decode (0 = all cores).
+    pub threads: usize,
+    /// Byte budget of the decoded-plane cache.
+    pub cache_bytes: usize,
+    /// Independent lock shards of the cache.
+    pub cache_shards: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig {
+            backend: Backend::Reference,
+            threads: 0,
+            cache_bytes: 256 << 20,
+            cache_shards: 16,
+        }
+    }
+}
+
+/// One mounted archive: its parsed index plus the metered byte source.
+struct Mount {
+    id: u32,
+    src: MeteredSource,
+    header: Gba2Header,
+    toc: Vec<ShardToc>,
+}
+
+/// Catalog info for one mounted dataset (the `/datasets` endpoint body).
+#[derive(Clone, Debug)]
+pub struct DatasetInfo {
+    pub name: String,
+    /// `[T, S, Y, X]`.
+    pub dims: (usize, usize, usize, usize),
+    pub n_shards: usize,
+    pub kt_window: usize,
+    /// Loosest certified NRMSE target (per-species budgets are tighter).
+    pub nrmse_target: f64,
+    pub pressure: f64,
+    pub archive_bytes: u64,
+    /// Classified archive reads since mount.
+    pub io: IoStats,
+}
+
+/// Counter snapshot of a store — cache, decode, and per-dataset IO.
+#[derive(Clone, Debug)]
+pub struct StoreStats {
+    /// Queries served (all datasets).
+    pub queries: u64,
+    /// (shard, species) planes decoded — cache misses that did work.
+    pub decoded_sections: u64,
+    /// Decoded f32 bytes those planes amount to.
+    pub decoded_bytes: u64,
+    pub cache: CacheStats,
+    pub datasets: Vec<DatasetInfo>,
+}
+
+impl fmt::Display for StoreStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} queries | decoded {} sections ({} B) | cache {} | {} datasets",
+            self.queries,
+            self.decoded_sections,
+            self.decoded_bytes,
+            self.cache,
+            self.datasets.len()
+        )
+    }
+}
+
+/// The multi-archive store; see the module docs.
+///
+/// ```
+/// use std::io::Cursor;
+/// use std::sync::Arc;
+/// use gbatc::api::{CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesSel};
+/// use gbatc::store::{ArchiveStore, StoreConfig};
+///
+/// # let (nt, ns, ny, nx) = (4, 58, 5, 4);
+/// # let field = FieldSpec { nt, ns, ny, nx, pressure: 40.0e5, ranges: vec![(0.0, 1.0); ns] };
+/// # let mut session = CompressorBuilder::new()
+/// #     .error_policy(ErrorPolicy::Uniform(1e-2))
+/// #     .session(field, Cursor::new(Vec::new()))?;
+/// # for t in 0..nt {
+/// #     let frame: Vec<f32> = (0..ns * ny * nx)
+/// #         .map(|i| 0.5 + 0.3 * ((i + t * 31) as f32 * 0.11).sin())
+/// #         .collect();
+/// #     session.push_timestep(&frame)?;
+/// # }
+/// # let (_report, sink) = session.finish_into()?;
+/// let store = Arc::new(ArchiveStore::new(StoreConfig::default())?);
+/// store.mount_bytes("hcci", sink.into_inner())?;
+///
+/// let q = Query { time: 0..2, species: SpeciesSel::Names(vec!["OH".into()]) };
+/// let cold = store.query("hcci", &q)?;
+/// let warm = store.query("hcci", &q)?;          // served from the cache
+/// assert_eq!(cold.mass, warm.mass);             // bit-identical
+/// let stats = store.stats();
+/// assert_eq!(stats.cache.hits, 1);              // second query hit
+/// assert_eq!(stats.decoded_sections, 1);        // ...and decoded nothing
+/// # Ok::<(), gbatc::Error>(())
+/// ```
+pub struct ArchiveStore {
+    /// Keeps a store-started service alive (`with_handle` borrows an
+    /// external one instead).
+    _service: Option<ExecService>,
+    handle: ExecHandle,
+    threads: usize,
+    cache: SectionCache,
+    mounts: RwLock<HashMap<String, Arc<Mount>>>,
+    next_id: AtomicU32,
+    queries: AtomicU64,
+    decoded_sections: AtomicU64,
+    decoded_bytes: AtomicU64,
+}
+
+impl ArchiveStore {
+    /// Start the configured backend and open an empty store.
+    pub fn new(cfg: StoreConfig) -> Result<ArchiveStore> {
+        let (service, _, _) = cfg.backend.start(4)?;
+        let handle = service.handle();
+        Ok(Self::build(Some(service), handle, &cfg))
+    }
+
+    /// A store on an already-running executor handle (no second service
+    /// is spawned; `cfg.backend` is ignored).
+    pub fn with_handle(handle: &ExecHandle, cfg: StoreConfig) -> ArchiveStore {
+        Self::build(None, handle.clone(), &cfg)
+    }
+
+    fn build(service: Option<ExecService>, handle: ExecHandle, cfg: &StoreConfig) -> ArchiveStore {
+        ArchiveStore {
+            _service: service,
+            handle,
+            threads: cfg.threads,
+            cache: SectionCache::new(cfg.cache_bytes, cfg.cache_shards),
+            mounts: RwLock::new(HashMap::new()),
+            next_id: AtomicU32::new(0),
+            queries: AtomicU64::new(0),
+            decoded_sections: AtomicU64::new(0),
+            decoded_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Mount an archive file under `name`.  `GBA2` files stay on disk
+    /// and are read section by section; legacy `GBA1` files are converted
+    /// to their one-shard `GBA2` view in memory.
+    pub fn mount_file<P: AsRef<Path>>(&self, name: &str, path: P) -> Result<()> {
+        self.mount_src(name, open_metered(path.as_ref())?)
+    }
+
+    /// Mount serialized archive bytes of either container version.
+    pub fn mount_bytes(&self, name: &str, bytes: Vec<u8>) -> Result<()> {
+        self.mount_src(
+            name,
+            MeteredSource::new(Box::new(MemSource(v2_bytes(bytes)?))),
+        )
+    }
+
+    fn mount_src(&self, name: &str, src: MeteredSource) -> Result<()> {
+        if name.is_empty() || name.contains(|c: char| c == '&' || c == '=' || c.is_whitespace()) {
+            return Err(Error::config(format!(
+                "dataset name `{name}` must be non-empty without `&`, `=`, or whitespace \
+                 (it travels in query strings)"
+            )));
+        }
+        let (header, toc) = Gba2Archive::read_toc(&src)?;
+        // fail at mount, not first query, if the archive needs a
+        // different model than the store's executor serves
+        ShardEngine::new(&self.handle, 0, 0).check_spec(&header)?;
+        src.set_header_limit(payload_base(&toc, &src));
+        let mount = Arc::new(Mount {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            src,
+            header,
+            toc,
+        });
+        let mut guard = self
+            .mounts
+            .write()
+            .map_err(|_| Error::runtime("store mount table lock poisoned"))?;
+        if guard.contains_key(name) {
+            return Err(Error::config(format!(
+                "dataset `{name}` is already mounted (unmount it first)"
+            )));
+        }
+        guard.insert(name.to_string(), mount);
+        Ok(())
+    }
+
+    /// Unmount a dataset and purge its cached planes.
+    pub fn unmount(&self, name: &str) -> Result<()> {
+        let mount = {
+            let mut guard = self
+                .mounts
+                .write()
+                .map_err(|_| Error::runtime("store mount table lock poisoned"))?;
+            guard
+                .remove(name)
+                .ok_or_else(|| Error::config(format!("no dataset `{name}` mounted")))?
+        };
+        self.cache.purge_dataset(mount.id);
+        Ok(())
+    }
+
+    /// Whether `name` is currently mounted.
+    pub fn contains(&self, name: &str) -> bool {
+        self.mounts
+            .read()
+            .map(|g| g.contains_key(name))
+            .unwrap_or(false)
+    }
+
+    fn mount(&self, name: &str) -> Result<Arc<Mount>> {
+        let guard = self
+            .mounts
+            .read()
+            .map_err(|_| Error::runtime("store mount table lock poisoned"))?;
+        guard.get(name).cloned().ok_or_else(|| {
+            let mut names: Vec<&str> = guard.keys().map(|s| s.as_str()).collect();
+            names.sort_unstable();
+            Error::config(format!(
+                "no dataset `{name}` mounted (available: {})",
+                if names.is_empty() {
+                    "none".to_string()
+                } else {
+                    names.join(", ")
+                }
+            ))
+        })
+    }
+
+    /// Catalog of mounted datasets, sorted by name.
+    pub fn datasets(&self) -> Vec<DatasetInfo> {
+        let guard = match self.mounts.read() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let mut out: Vec<DatasetInfo> = guard
+            .iter()
+            .map(|(name, m)| DatasetInfo {
+                name: name.clone(),
+                dims: m.header.dims,
+                n_shards: m.toc.len(),
+                kt_window: m.header.kt_window,
+                nrmse_target: m.header.nrmse_target,
+                pressure: m.header.pressure,
+                archive_bytes: m.src.source_len(),
+                io: m.src.stats(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Catalog entry of one mounted dataset.
+    pub fn dataset_info(&self, name: &str) -> Result<DatasetInfo> {
+        let m = self.mount(name)?;
+        Ok(DatasetInfo {
+            name: name.to_string(),
+            dims: m.header.dims,
+            n_shards: m.toc.len(),
+            kt_window: m.header.kt_window,
+            nrmse_target: m.header.nrmse_target,
+            pressure: m.header.pressure,
+            archive_bytes: m.src.source_len(),
+            io: m.src.stats(),
+        })
+    }
+
+    /// Execute a typed query against a mounted dataset through the plane
+    /// cache.  Missing planes of each touched shard are decoded in one
+    /// engine pass and admitted; the response is assembled with the exact
+    /// per-element ops
+    /// [`decompress_range`](crate::coordinator::engine::ShardEngine::decompress_range)
+    /// runs, so cached and uncached reads return bit-identical bytes.
+    ///
+    /// `peak_workspace_bytes` of the result covers the response buffer
+    /// (the shard-decode internals are metered by the engine pass and
+    /// bounded by one shard, as always).
+    pub fn query(&self, dataset: &str, q: &Query) -> Result<RangeDecode> {
+        let m = self.mount(dataset)?;
+        let (nt, ns, ny, nx) = m.header.dims;
+        let sel = q.species.resolve(ns)?;
+        let (t0, t1) = (q.time.start, q.time.end);
+        if t0 >= t1 || t1 > nt {
+            return Err(Error::shape(format!(
+                "time range [{t0}, {t1}) out of bounds for nt {nt}"
+            )));
+        }
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        let npix = ny * nx;
+        let nsel = sel.len();
+        let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
+        let engine = ShardEngine::new(&self.handle, 0, 0);
+        for (si, entry) in m.toc.iter().enumerate() {
+            if entry.t0 >= t1 || entry.t0 + entry.nt <= t0 {
+                continue;
+            }
+            // cache lookups per (shard, species); collect what's missing
+            let mut planes: Vec<Option<Arc<Vec<f32>>>> = sel
+                .iter()
+                .map(|&s| self.cache.get((m.id, si as u32, s as u32)))
+                .collect();
+            let missing_pos: Vec<usize> =
+                (0..nsel).filter(|&k| planes[k].is_none()).collect();
+            if !missing_pos.is_empty() {
+                let missing_sel: Vec<usize> = missing_pos.iter().map(|&k| sel[k]).collect();
+                let decoded = engine.decode_shard_planes(
+                    &m.header,
+                    entry,
+                    &m.src,
+                    &missing_sel,
+                    self.threads,
+                )?;
+                self.decoded_sections
+                    .fetch_add(decoded.len() as u64, Ordering::Relaxed);
+                for (&k, plane) in missing_pos.iter().zip(decoded) {
+                    self.decoded_bytes
+                        .fetch_add(plane.len() as u64 * 4, Ordering::Relaxed);
+                    let plane = Arc::new(plane);
+                    self.cache
+                        .insert((m.id, si as u32, sel[k] as u32), Arc::clone(&plane));
+                    planes[k] = Some(plane);
+                }
+            }
+            // assemble through the same shared denorm op decompress_range
+            // uses — bit-identity of cached and uncached reads is
+            // structural, not a convention
+            let lo_t = t0.max(entry.t0);
+            let hi_t = t1.min(entry.t0 + entry.nt);
+            for t in lo_t..hi_t {
+                for (k, &s) in sel.iter().enumerate() {
+                    let plane = planes[k]
+                        .as_ref()
+                        .ok_or_else(|| Error::runtime("decoded plane missing (store bug)"))?;
+                    let (lo, hi) = m.header.ranges[s];
+                    let src_off = (t - entry.t0) * npix;
+                    let dst_off = ((t - t0) * nsel + k) * npix;
+                    denorm_row_into(
+                        &mut out[dst_off..dst_off + npix],
+                        &plane[src_off..src_off + npix],
+                        lo,
+                        hi,
+                    );
+                }
+            }
+        }
+        let peak_workspace_bytes = out.len() * 4;
+        Ok(RangeDecode {
+            t0,
+            nt: t1 - t0,
+            ny,
+            nx,
+            species: sel,
+            mass: out,
+            peak_workspace_bytes,
+        })
+    }
+
+    /// Counter snapshot across the cache, decode totals, and every
+    /// mounted dataset's IO.
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            queries: self.queries.load(Ordering::Relaxed),
+            decoded_sections: self.decoded_sections.load(Ordering::Relaxed),
+            decoded_bytes: self.decoded_bytes.load(Ordering::Relaxed),
+            cache: self.cache.stats(),
+            datasets: self.datasets(),
+        }
+    }
+}

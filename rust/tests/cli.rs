@@ -142,6 +142,13 @@ fn cli_reference_pipeline_with_partial_decode() {
     assert!(text.contains("GBA2"), "{text}");
     assert!(text.contains("shard"), "{text}");
 
+    // --stats reopens through the metered reader and reports classified
+    // open IO (header/TOC reads must now be counted, not just payload)
+    let (ok, text) = run(&["inspect", "--archive", gba.to_str().unwrap(), "--stats"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("open IO: toc"), "{text}");
+    assert!(text.contains("payload 0 B"), "{text}");
+
     let (ok, text) = run(&[
         "decompress", "--reference", "--input", gba.to_str().unwrap(),
         "--output", rec.to_str().unwrap(), "--temp-from", ds.to_str().unwrap(),

@@ -1,0 +1,278 @@
+//! `gbatc::store` correctness: cached and uncached query paths must
+//! return bit-identical bytes, warm queries must decode zero new
+//! sections and read zero archive bytes, eviction under a tiny byte
+//! budget must never corrupt responses, and N concurrent threads issuing
+//! randomized overlapping queries must each match a fresh
+//! single-threaded `decompress_range`.
+
+use std::sync::Arc;
+
+use gbatc::api::{Query, SpeciesSel};
+use gbatc::archive::{Gba2Archive, SliceSource};
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::Dataset;
+use gbatc::runtime::{ExecHandle, ExecService, RuntimeSpec};
+use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::util::Prng;
+
+const NS: usize = 4;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn small_spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+/// Smooth multi-species field with per-species offsets and mild noise.
+fn make_ds(nt: usize, seed: u64) -> Dataset {
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    let mut rng = Prng::new(seed);
+    for t in 0..nt {
+        for s in 0..NS {
+            for y in 0..NY {
+                for x in 0..NX {
+                    let v = (t as f32 * 0.3 + s as f32 * 1.7).sin() * 0.2
+                        + (y as f32 * 0.17 + x as f32 * 0.11 + s as f32).cos() * 0.3
+                        + s as f32 * 0.5
+                        + rng.next_f32() * 0.02;
+                    let i = ds.idx(t, s, y, x);
+                    ds.mass[i] = v;
+                }
+            }
+        }
+    }
+    ds
+}
+
+/// Compress a 16-timestep field into a 4-shard archive.
+fn build_archive(handle: &ExecHandle, nt: usize, kt_window: usize) -> Vec<u8> {
+    let comp = GbatcCompressor::new(handle, 0, 0);
+    let ds = make_ds(nt, 1);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window,
+        shard_workers: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    comp.compress(&ds, &opts).expect("compress").archive.into_bytes()
+}
+
+fn store_cfg(cache_bytes: usize, cache_shards: usize) -> StoreConfig {
+    StoreConfig {
+        threads: 2,
+        cache_bytes,
+        cache_shards,
+        ..StoreConfig::default()
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn warm_cache_decodes_zero_sections_and_is_bit_identical() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16, 4);
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    let store = ArchiveStore::with_handle(&handle, store_cfg(32 << 20, 8));
+    store.mount_bytes("ds", bytes.clone()).unwrap();
+
+    // t 2..10 touches shards 0, 1, 2; two species => 6 planes
+    let q = Query {
+        time: 2..10,
+        species: SpeciesSel::Indices(vec![1, 3]),
+    };
+    let cold = store.query("ds", &q).unwrap();
+    let oracle = comp.extract(&SliceSource(&bytes), 2, 10, &[1, 3], 2).unwrap();
+    assert_eq!(cold.species, oracle.species);
+    assert_bits_eq(&cold.mass, &oracle.mass, "cold vs decompress_range");
+
+    let s1 = store.stats();
+    assert_eq!(s1.decoded_sections, 6);
+    assert_eq!(s1.cache.misses, 6);
+    assert_eq!(s1.cache.hits, 0);
+    let io1 = s1.datasets[0].io;
+    assert!(io1.payload_bytes > 0);
+
+    let warm = store.query("ds", &q).unwrap();
+    assert_bits_eq(&warm.mass, &cold.mass, "warm vs cold");
+    let s2 = store.stats();
+    assert_eq!(
+        s2.decoded_sections, 6,
+        "warm query must decode zero new sections"
+    );
+    assert_eq!(s2.cache.hits, 6);
+    assert_eq!(s2.cache.misses, 6);
+    // ...and touch the archive source not at all (the TOC was parsed at
+    // mount; planes came from the cache)
+    assert_eq!(s2.datasets[0].io, io1, "warm query must read zero archive bytes");
+
+    // a partially-warm query decodes only the genuinely new planes:
+    // same window, one cached species + one new one
+    let q2 = Query {
+        time: 2..10,
+        species: SpeciesSel::Indices(vec![0, 1]),
+    };
+    let mixed = store.query("ds", &q2).unwrap();
+    let oracle2 = comp.extract(&SliceSource(&bytes), 2, 10, &[0, 1], 2).unwrap();
+    assert_bits_eq(&mixed.mass, &oracle2.mass, "mixed vs decompress_range");
+    let s3 = store.stats();
+    assert_eq!(s3.decoded_sections, 9, "3 shards x 1 new species");
+}
+
+#[test]
+fn concurrent_randomized_queries_match_fresh_decode() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let nt = 16;
+    let bytes = Arc::new(build_archive(&handle, nt, 4));
+
+    let store = Arc::new(ArchiveStore::with_handle(&handle, store_cfg(32 << 20, 8)));
+    store.mount_bytes("ds", bytes.as_ref().clone()).unwrap();
+
+    // pass 0 races cold misses (including duplicate decodes of the same
+    // plane); pass 1 runs the same seeds over a warm cache
+    for pass in 0..2u64 {
+        std::thread::scope(|scope| {
+            for w in 0..4u64 {
+                let store = Arc::clone(&store);
+                let bytes = Arc::clone(&bytes);
+                let handle = &handle;
+                scope.spawn(move || {
+                    let comp = GbatcCompressor::new(handle, 0, 0);
+                    let mut rng = Prng::new(1000 + pass * 10 + w);
+                    for _ in 0..6 {
+                        let t0 = rng.index(nt);
+                        let t1 = t0 + 1 + rng.index(nt - t0);
+                        let mut sel: Vec<usize> =
+                            (0..NS).filter(|_| rng.next_f32() < 0.5).collect();
+                        if sel.is_empty() {
+                            sel.push(rng.index(NS));
+                        }
+                        let q = Query {
+                            time: t0..t1,
+                            species: SpeciesSel::Indices(sel.clone()),
+                        };
+                        let dec = store.query("ds", &q).unwrap();
+                        let oracle = comp
+                            .extract(&SliceSource(&bytes), t0, t1, &sel, 1)
+                            .unwrap();
+                        assert_eq!(dec.species, oracle.species);
+                        assert_bits_eq(
+                            &dec.mass,
+                            &oracle.mass,
+                            &format!("pass {pass} worker {w} t {t0}..{t1} sel {sel:?}"),
+                        );
+                    }
+                });
+            }
+        });
+    }
+    let s = store.stats();
+    assert!(s.cache.hits > 0, "warm pass must hit the cache");
+    assert!(
+        s.cache.resident_sections <= (4 * NS) as u64,
+        "at most one plane per (shard, species): {}",
+        s.cache.resident_sections
+    );
+    assert_eq!(s.queries, 2 * 4 * 6);
+}
+
+#[test]
+fn tiny_cache_evicts_under_pressure_without_corruption() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16, 4);
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    // one plane is 4 * 40 * 40 * 4 = 25600 B; budget holds ~2 of 16
+    let store = ArchiveStore::with_handle(&handle, store_cfg(60_000, 1));
+    store.mount_bytes("ds", bytes.clone()).unwrap();
+
+    let q = Query {
+        time: 0..16,
+        species: SpeciesSel::All,
+    };
+    let oracle = comp.extract(&SliceSource(&bytes), 0, 16, &[], 2).unwrap();
+    for round in 0..2 {
+        let dec = store.query("ds", &q).unwrap();
+        assert_bits_eq(&dec.mass, &oracle.mass, &format!("evicting round {round}"));
+    }
+    let s = store.stats();
+    assert!(s.cache.evicted > 0, "tiny budget must evict");
+    assert!(
+        s.cache.resident_bytes <= s.cache.capacity_bytes,
+        "resident {} over capacity {}",
+        s.cache.resident_bytes,
+        s.cache.capacity_bytes
+    );
+}
+
+#[test]
+fn typed_errors_unmount_purge_and_gba1_mounts() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16, 4);
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let store = ArchiveStore::with_handle(&handle, store_cfg(32 << 20, 4));
+
+    store.mount_bytes("ds", bytes.clone()).unwrap();
+    // unknown dataset lists what is mounted
+    let err = store
+        .query("nope", &Query { time: 0..4, species: SpeciesSel::All })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("available"), "{err}");
+    // bad ranges and duplicate/invalid mounts are typed errors
+    assert!(store
+        .query("ds", &Query { time: 8..4, species: SpeciesSel::All })
+        .is_err());
+    assert!(store
+        .query("ds", &Query { time: 0..99, species: SpeciesSel::All })
+        .is_err());
+    let err = store.mount_bytes("ds", bytes.clone()).unwrap_err().to_string();
+    assert!(err.contains("already mounted"), "{err}");
+    assert!(store.mount_bytes("bad name", bytes.clone()).is_err());
+    assert!(store.mount_bytes("garbage", b"not an archive".to_vec()).is_err());
+
+    // unmount purges the cache
+    store
+        .query("ds", &Query { time: 0..4, species: SpeciesSel::All })
+        .unwrap();
+    assert!(store.stats().cache.resident_sections > 0);
+    store.unmount("ds").unwrap();
+    assert!(!store.contains("ds"));
+    assert_eq!(store.stats().cache.resident_sections, 0);
+    assert!(store.unmount("ds").is_err());
+
+    // a legacy GBA1 archive mounts as its one-shard GBA2 view and
+    // queries bit-identically to the v2 original
+    let single = build_archive(&handle, 4, 4);
+    let v1 = Gba2Archive::deserialize(&single)
+        .unwrap()
+        .to_v1()
+        .unwrap()
+        .serialize();
+    store.mount_bytes("legacy", v1).unwrap();
+    let dec = store
+        .query(
+            "legacy",
+            &Query { time: 1..3, species: SpeciesSel::Indices(vec![0, 2]) },
+        )
+        .unwrap();
+    let oracle = comp.extract(&SliceSource(&single), 1, 3, &[0, 2], 1).unwrap();
+    assert_bits_eq(&dec.mass, &oracle.mass, "GBA1 mount vs v2 decode");
+}

@@ -1,0 +1,230 @@
+//! End-to-end loopback tests of `gbatc::serve`: a real server on an
+//! ephemeral port, concurrent clients whose responses must be
+//! bit-identical to a local decode, protocol-abuse survival (malformed,
+//! oversized, unknown — workers must answer the next request fine), and
+//! graceful shutdown with accurate counters.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use gbatc::archive::SliceSource;
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::Dataset;
+use gbatc::runtime::{ExecHandle, ExecService, RuntimeSpec};
+use gbatc::serve::{QueryClient, QueryServer, ServerConfig};
+use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::util::Prng;
+
+const NS: usize = 4;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn small_spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+fn make_ds(nt: usize, seed: u64) -> Dataset {
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    let mut rng = Prng::new(seed);
+    for t in 0..nt {
+        for s in 0..NS {
+            for y in 0..NY {
+                for x in 0..NX {
+                    let v = (t as f32 * 0.3 + s as f32 * 1.7).sin() * 0.2
+                        + (y as f32 * 0.17 + x as f32 * 0.11 + s as f32).cos() * 0.3
+                        + s as f32 * 0.5
+                        + rng.next_f32() * 0.02;
+                    let i = ds.idx(t, s, y, x);
+                    ds.mass[i] = v;
+                }
+            }
+        }
+    }
+    ds
+}
+
+fn build_archive(handle: &ExecHandle, nt: usize) -> Vec<u8> {
+    let comp = GbatcCompressor::new(handle, 0, 0);
+    let ds = make_ds(nt, 1);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        shard_workers: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    comp.compress(&ds, &opts).expect("compress").archive.into_bytes()
+}
+
+fn start_server(
+    handle: &ExecHandle,
+    bytes: &[u8],
+    cfg: ServerConfig,
+) -> (QueryServer, Arc<ArchiveStore>, String) {
+    let store = Arc::new(ArchiveStore::with_handle(
+        handle,
+        StoreConfig {
+            threads: 1,
+            cache_bytes: 32 << 20,
+            cache_shards: 8,
+            ..StoreConfig::default()
+        },
+    ));
+    store.mount_bytes("hcci", bytes.to_vec()).unwrap();
+    let server = QueryServer::bind(Arc::clone(&store), "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+    (server, store, addr)
+}
+
+/// One raw request, whole response as text (the server closes for us).
+fn raw(addr: &str, req: &[u8]) -> String {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    // the server may answer (and close) before consuming everything we
+    // send, so a late write failure is acceptable here
+    let _ = s.write_all(req);
+    let mut buf = Vec::new();
+    let _ = s.read_to_end(&mut buf);
+    String::from_utf8_lossy(&buf).into_owned()
+}
+
+#[test]
+fn loopback_concurrent_clients_bit_identical() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16);
+    let (server, _store, addr) = start_server(
+        &handle,
+        &bytes,
+        ServerConfig {
+            workers: 4,
+            queue: 16,
+            ..ServerConfig::default()
+        },
+    );
+
+    // >= 4 concurrent clients with overlapping windows/species; every
+    // wire response must match a fresh local decompress_range bit for bit
+    std::thread::scope(|scope| {
+        for w in 0..6usize {
+            let addr = addr.clone();
+            let bytes = &bytes;
+            let handle = &handle;
+            scope.spawn(move || {
+                let client = QueryClient::new(addr);
+                let comp = GbatcCompressor::new(handle, 0, 0);
+                let (t0, t1) = match w % 3 {
+                    0 => (0usize, 8usize),
+                    1 => (4, 12),
+                    _ => (2, 16),
+                };
+                let sel: Vec<usize> = if w % 2 == 0 { vec![1, 3] } else { vec![0, 2] };
+                let list = sel
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let dec = client.query("hcci", Some(t0), Some(t1), &list).unwrap();
+                let oracle = comp.extract(&SliceSource(bytes), t0, t1, &sel, 1).unwrap();
+                assert_eq!(dec.species, sel);
+                assert_eq!((dec.t0, dec.nt, dec.ny, dec.nx), (t0, t1 - t0, NY, NX));
+                assert_eq!(dec.mass.len(), oracle.mass.len());
+                for (i, (a, b)) in dec.mass.iter().zip(&oracle.mass).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "client {w} t {t0}..{t1} sel {sel:?} idx {i}"
+                    );
+                }
+            });
+        }
+    });
+
+    let client = QueryClient::new(addr);
+    let cat = client.datasets_json().unwrap();
+    assert!(cat.contains("\"name\":\"hcci\""), "{cat}");
+    assert!(cat.contains("\"nt\":16"), "{cat}");
+    let stats = client.stats_json().unwrap();
+    assert!(stats.contains("\"hits\""), "{stats}");
+    assert!(stats.contains("\"server\""), "{stats}");
+    assert!(stats.contains("\"payload_bytes\""), "{stats}");
+
+    let st = server.shutdown();
+    assert_eq!(st.served, 8, "6 queries + /datasets + /stats: {st}");
+    assert_eq!(st.io_errors, 0, "{st}");
+    assert_eq!(st.accepted, 8, "{st}");
+}
+
+#[test]
+fn server_survives_protocol_abuse_then_serves() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 8);
+    let (server, _store, addr) = start_server(
+        &handle,
+        &bytes,
+        ServerConfig {
+            workers: 2,
+            queue: 8,
+            ..ServerConfig::default()
+        },
+    );
+
+    // malformed request line
+    let r = raw(&addr, b"NONSENSE\r\n\r\n");
+    assert!(r.starts_with("HTTP/1.1 400"), "{r}");
+    // oversized head (default cap 8 KiB)
+    let big = format!(
+        "GET /query?dataset={} HTTP/1.1\r\n\r\n",
+        "x".repeat(20_000)
+    );
+    let r = raw(&addr, big.as_bytes());
+    assert!(r.starts_with("HTTP/1.1 431"), "{r}");
+    // wrong method / unknown endpoint
+    let r = raw(&addr, b"POST /query HTTP/1.1\r\n\r\n");
+    assert!(r.starts_with("HTTP/1.1 405"), "{r}");
+    let r = raw(&addr, b"GET /nothing HTTP/1.1\r\n\r\n");
+    assert!(r.starts_with("HTTP/1.1 404"), "{r}");
+    // missing dataset parameter
+    let r = raw(&addr, b"GET /query HTTP/1.1\r\n\r\n");
+    assert!(r.starts_with("HTTP/1.1 400"), "{r}");
+
+    // typed client-side errors carry the status and the server's message
+    let client = QueryClient::new(addr.clone());
+    let err = client.query("nope", None, None, "").unwrap_err().to_string();
+    assert!(err.contains("404"), "{err}");
+    let err = client.query("hcci", Some(6), Some(2), "").unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+    let err = client
+        .query("hcci", None, None, "not_a_species")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("400"), "{err}");
+    let err = client
+        .query("hcci", Some(0), Some(999), "")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("400"), "{err}");
+
+    // after all the abuse, the same workers serve a correct response —
+    // defaults resolve to the full axis and all species
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let dec = client.query("hcci", None, None, "").unwrap();
+    assert_eq!((dec.t0, dec.nt), (0, 8));
+    assert_eq!(dec.species, vec![0, 1, 2, 3]);
+    let oracle = comp.extract(&SliceSource(&bytes), 0, 8, &[], 1).unwrap();
+    for (a, b) in dec.mass.iter().zip(&oracle.mass) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    let st = server.shutdown();
+    assert_eq!(st.served, 1, "{st}");
+    assert!(st.client_errors >= 9, "{st}");
+    assert_eq!(st.server_errors, 0, "{st}");
+}
