@@ -1,7 +1,8 @@
 //! Hot-path kernel benchmark — per-kernel before/after numbers for the
-//! three overhauled paths (guarantee/PCA, table-driven Huffman, planner
-//! trial reuse), on the pure-Rust reference backend so CI can run it
-//! without AOT artifacts:
+//! overhauled paths (guarantee/PCA, table-driven Huffman, planner trial
+//! reuse, the SIMD-dispatched NRMSE sweep, and the Lorenzo interior fast
+//! path), on the pure-Rust reference backend so CI can run it without
+//! AOT artifacts:
 //!
 //! ```bash
 //! cargo bench --bench perf_hotpaths
@@ -28,6 +29,8 @@ use gbatc::gae::SpeciesBasis;
 use gbatc::linalg::Pca;
 use gbatc::quant::UniformQuantizer;
 use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::sz::lorenzo::Lorenzo3;
+use gbatc::sz::ErrorBoundQuantizer;
 use gbatc::util::timer::bench;
 use gbatc::util::{BitReader, BitWriter, Prng, Timer};
 
@@ -223,6 +226,83 @@ mod baseline {
             w.write_bit((code >> i) & 1 == 1);
         }
     }
+
+    /// Pre-SIMD NRMSE: one sequential squared-error chain plus a
+    /// sequential min/max sweep (the scalar loops `gbatc::simd`'s
+    /// fixed-lane kernels replaced).
+    pub fn nrmse(orig: &[f32], recon: &[f32]) -> f64 {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in orig {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        let mse: f64 = orig
+            .iter()
+            .zip(recon)
+            .map(|(&a, &b)| {
+                let d = a as f64 - b as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / orig.len() as f64;
+        let range = (hi - lo) as f64;
+        if range <= 0.0 {
+            return if mse == 0.0 { 0.0 } else { f64::INFINITY };
+        }
+        mse.sqrt() / range
+    }
+
+    /// Pre-fast-path Lorenzo pass: the all-branches predictor at every
+    /// cell (the interior fast path's oracle), same raster walk.
+    pub fn lorenzo_compress(
+        nt: usize,
+        ny: usize,
+        nx: usize,
+        data: &mut [f32],
+        q: &ErrorBoundQuantizer,
+        syms: &mut Vec<gbatc::sz::quantizer::Sym>,
+    ) {
+        let at = |r: &[f32], tt: usize, yy: usize, xx: usize| -> f64 {
+            r[(tt * ny + yy) * nx + xx] as f64
+        };
+        for t in 0..nt {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let mut p = 0.0f64;
+                    if x > 0 {
+                        p += at(data, t, y, x - 1);
+                    }
+                    if y > 0 {
+                        p += at(data, t, y - 1, x);
+                    }
+                    if t > 0 {
+                        p += at(data, t - 1, y, x);
+                    }
+                    if x > 0 && y > 0 {
+                        p -= at(data, t, y - 1, x - 1);
+                    }
+                    if x > 0 && t > 0 {
+                        p -= at(data, t - 1, y, x - 1);
+                    }
+                    if y > 0 && t > 0 {
+                        p -= at(data, t - 1, y - 1, x);
+                    }
+                    if x > 0 && y > 0 && t > 0 {
+                        p += at(data, t - 1, y - 1, x - 1);
+                    }
+                    let i = (t * ny + y) * nx + x;
+                    let (sym, recon) = q.quantize(data[i] as f64, p);
+                    syms.push(sym);
+                    data[i] = recon as f32;
+                }
+            }
+        }
+    }
 }
 
 struct SpeedupRow {
@@ -414,6 +494,85 @@ fn main() {
     );
     rows.push(SpeedupRow {
         kernel: "huffman_encode",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // --- NRMSE sweep (fixed-lane SIMD kernels) ----------------------------
+    let mut rng = Prng::new(3);
+    let n_pts = 4_000_000usize;
+    let a: Vec<f32> = (0..n_pts).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = a
+        .iter()
+        .map(|&v| v + rng.normal() as f32 * 1e-3)
+        .collect();
+    // the lane reduction redefines the canonical sum order, so old and
+    // new agree to rounding (dispatch == scalar-oracle bit-identity is
+    // asserted where it holds: src/simd property tests)
+    let (old_v, new_v) = (baseline::nrmse(&a, &b), gbatc::metrics::nrmse(&a, &b));
+    assert!(
+        (old_v - new_v).abs() <= 1e-12 * old_v.abs().max(1e-30),
+        "nrmse kernels diverged: {old_v} vs {new_v}"
+    );
+    let st_old = bench(1, reps, || {
+        std::hint::black_box(baseline::nrmse(&a, &b));
+    });
+    let st_new = bench(1, reps, || {
+        std::hint::black_box(gbatc::metrics::nrmse(&a, &b));
+    });
+    println!(
+        "nrmse sweep     [{}M pts]  before {}  after {}  ({:.2}x)",
+        n_pts / 1_000_000,
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
+    );
+    rows.push(SpeedupRow {
+        kernel: "nrmse_sweep",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // --- Lorenzo predictor (interior fast path) ---------------------------
+    let (lnt, lny, lnx) = (16usize, 96usize, 96usize);
+    let mut rng = Prng::new(4);
+    let field: Vec<f32> = (0..lnt * lny * lnx)
+        .map(|i| {
+            let t = i / (lny * lnx);
+            ((t as f32) * 0.3).sin() + ((i % lnx) as f32 * 0.15).cos() + rng.normal() as f32 * 0.01
+        })
+        .collect();
+    let q = ErrorBoundQuantizer::new(1e-4);
+    let lz = Lorenzo3::new(lnt, lny, lnx);
+    // bit-identity contract: same symbols, same reconstructions
+    {
+        let mut old_work = field.clone();
+        let mut old_syms = Vec::new();
+        baseline::lorenzo_compress(lnt, lny, lnx, &mut old_work, &q, &mut old_syms);
+        let mut new_work = field.clone();
+        let mut new_syms = Vec::new();
+        lz.compress(&mut new_work, &q, &mut new_syms);
+        assert_eq!(old_syms, new_syms, "lorenzo symbol streams diverged");
+        assert_eq!(old_work, new_work, "lorenzo reconstructions diverged");
+    }
+    let st_old = bench(1, reps, || {
+        let mut work = field.clone();
+        let mut syms = Vec::new();
+        baseline::lorenzo_compress(lnt, lny, lnx, &mut work, &q, &mut syms);
+        std::hint::black_box(syms.len());
+    });
+    let st_new = bench(1, reps, || {
+        let mut work = field.clone();
+        let mut syms = Vec::new();
+        lz.compress(&mut work, &q, &mut syms);
+        std::hint::black_box(syms.len());
+    });
+    println!(
+        "lorenzo predict [{lnt}x{lny}x{lnx}]  before {}  after {}  ({:.2}x)",
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
+    );
+    rows.push(SpeedupRow {
+        kernel: "lorenzo_predict",
         baseline_ms: st_old.mean_s * 1e3,
         optimized_ms: st_new.mean_s * 1e3,
     });

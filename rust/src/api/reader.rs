@@ -13,7 +13,7 @@ use crate::api::policy::SpeciesSel;
 use crate::api::session::Backend;
 use crate::archive::{
     AnyArchive, FileSource, Gba2Archive, Gba2Header, IoStats, MemSource, MeteredSource,
-    SectionSource, ShardToc, MAGIC,
+    MmapSource, SectionSource, ShardToc, MAGIC,
 };
 use crate::coordinator::engine::{RangeDecode, ShardEngine};
 use crate::error::{Error, Result};
@@ -210,10 +210,14 @@ impl ArchiveReader {
 }
 
 /// Open an archive file behind a metered source: `GBA2` files stay on
-/// disk and are read section by section; legacy `GBA1` files are loaded
-/// whole (charged to the payload counters) and converted to their
-/// one-shard `GBA2` view in memory.  Shared by [`ArchiveReader`] and
-/// [`crate::store::ArchiveStore`].
+/// disk — memory-mapped when the platform allows it ([`MmapSource`],
+/// zero-copy page-cache reads, visible in [`IoStats::mmap_bytes`]), a
+/// seek/read [`FileSource`] otherwise — and are read section by section;
+/// legacy `GBA1` files are loaded whole (charged to the payload
+/// counters) and converted to their one-shard `GBA2` view in memory.
+/// Shared by [`ArchiveReader`] and [`crate::store::ArchiveStore`].
+/// Either source yields bit-identical section bytes, asserted by the
+/// `zero_copy` integration tests.
 pub(crate) fn open_metered(path: &Path) -> Result<MeteredSource> {
     let file = FileSource::open(path)?;
     let magic = file.read_at(0, 4)?;
@@ -226,7 +230,10 @@ pub(crate) fn open_metered(path: &Path) -> Result<MeteredSource> {
         src.add_payload(1, loaded);
         Ok(src)
     } else {
-        let src = MeteredSource::new(Box::new(file));
+        let src = match MmapSource::open(path) {
+            Ok(map) => MeteredSource::new_mapped(Box::new(map)),
+            Err(_) => MeteredSource::new(Box::new(file)),
+        };
         src.add_toc(1, 4);
         Ok(src)
     }

@@ -26,6 +26,14 @@ pub struct IoStats {
     pub toc_bytes: u64,
     pub payload_reads: u64,
     pub payload_bytes: u64,
+    /// Reads served by a memory-mapped source (zero-copy page-cache
+    /// borrows rather than `read(2)` into fresh buffers).  Always a
+    /// subset of the toc/payload totals above — mmap-backed sources
+    /// still classify every read — so `mmap_bytes == bytes()` means the
+    /// whole archive was served without a syscall per section.
+    pub mmap_reads: u64,
+    /// Bytes served by the memory-mapped path (see [`IoStats::mmap_reads`]).
+    pub mmap_bytes: u64,
 }
 
 impl IoStats {
@@ -44,8 +52,13 @@ impl fmt::Display for IoStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "toc {} B in {} reads | payload {} B in {} reads",
-            self.toc_bytes, self.toc_reads, self.payload_bytes, self.payload_reads
+            "toc {} B in {} reads | payload {} B in {} reads | mmap {} B in {} reads",
+            self.toc_bytes,
+            self.toc_reads,
+            self.payload_bytes,
+            self.payload_reads,
+            self.mmap_bytes,
+            self.mmap_reads
         )
     }
 }
@@ -57,22 +70,47 @@ pub struct MeteredSource {
     /// reads.  Starts at `u64::MAX` (everything before the TOC is parsed
     /// *is* a header read).
     header_limit: AtomicU64,
+    /// True when `inner` is a memory-mapped source: every read is also
+    /// charged to the mmap counters.
+    mapped: bool,
     toc_reads: AtomicU64,
     toc_bytes: AtomicU64,
     payload_reads: AtomicU64,
     payload_bytes: AtomicU64,
+    mmap_reads: AtomicU64,
+    mmap_bytes: AtomicU64,
 }
 
 impl MeteredSource {
     pub fn new(inner: Box<dyn SectionSource + Send + Sync>) -> MeteredSource {
+        Self::with_mapped(inner, false)
+    }
+
+    /// Like [`Self::new`] for a memory-mapped inner source (e.g.
+    /// [`crate::archive::MmapSource`]): reads are additionally charged
+    /// to [`IoStats::mmap_reads`]/[`IoStats::mmap_bytes`] so the
+    /// zero-copy path is observable in `inspect --stats`.
+    pub fn new_mapped(inner: Box<dyn SectionSource + Send + Sync>) -> MeteredSource {
+        Self::with_mapped(inner, true)
+    }
+
+    fn with_mapped(inner: Box<dyn SectionSource + Send + Sync>, mapped: bool) -> MeteredSource {
         MeteredSource {
             inner,
             header_limit: AtomicU64::new(u64::MAX),
+            mapped,
             toc_reads: AtomicU64::new(0),
             toc_bytes: AtomicU64::new(0),
             payload_reads: AtomicU64::new(0),
             payload_bytes: AtomicU64::new(0),
+            mmap_reads: AtomicU64::new(0),
+            mmap_bytes: AtomicU64::new(0),
         }
+    }
+
+    /// Whether the inner source is memory-mapped.
+    pub fn is_mapped(&self) -> bool {
+        self.mapped
     }
 
     /// Record where the payload region begins (the first shard's offset)
@@ -102,6 +140,8 @@ impl MeteredSource {
             toc_bytes: self.toc_bytes.load(Ordering::Relaxed),
             payload_reads: self.payload_reads.load(Ordering::Relaxed),
             payload_bytes: self.payload_bytes.load(Ordering::Relaxed),
+            mmap_reads: self.mmap_reads.load(Ordering::Relaxed),
+            mmap_bytes: self.mmap_bytes.load(Ordering::Relaxed),
         }
     }
 
@@ -111,6 +151,8 @@ impl MeteredSource {
         self.toc_bytes.store(0, Ordering::Relaxed);
         self.payload_reads.store(0, Ordering::Relaxed);
         self.payload_bytes.store(0, Ordering::Relaxed);
+        self.mmap_reads.store(0, Ordering::Relaxed);
+        self.mmap_bytes.store(0, Ordering::Relaxed);
     }
 }
 
@@ -125,6 +167,10 @@ impl SectionSource for MeteredSource {
             self.payload_reads.fetch_add(1, Ordering::Relaxed);
             self.payload_bytes
                 .fetch_add(out.len() as u64, Ordering::Relaxed);
+        }
+        if self.mapped {
+            self.mmap_reads.fetch_add(1, Ordering::Relaxed);
+            self.mmap_bytes.fetch_add(out.len() as u64, Ordering::Relaxed);
         }
         Ok(out)
     }
@@ -158,5 +204,22 @@ mod tests {
         assert_eq!(src.stats().bytes(), 127);
         src.reset();
         assert_eq!(src.stats(), IoStats::default());
+    }
+
+    #[test]
+    fn mapped_sources_charge_the_mmap_counters() {
+        let src = MeteredSource::new_mapped(Box::new(MemSource(vec![0u8; 64])));
+        assert!(src.is_mapped());
+        src.set_header_limit(16);
+        src.read_at(0, 16).unwrap(); // toc + mmap
+        src.read_at(16, 40).unwrap(); // payload + mmap
+        let s = src.stats();
+        assert_eq!((s.mmap_reads, s.mmap_bytes), (2, 56));
+        assert_eq!(s.mmap_bytes, s.bytes(), "every read was mmap-served");
+
+        let plain = MeteredSource::new(Box::new(MemSource(vec![0u8; 64])));
+        assert!(!plain.is_mapped());
+        plain.read_at(0, 16).unwrap();
+        assert_eq!(plain.stats().mmap_reads, 0);
     }
 }

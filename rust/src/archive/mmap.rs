@@ -1,0 +1,203 @@
+//! Memory-mapped [`SectionSource`]: TOC-addressed section reads borrow
+//! the page cache instead of copying through a `File` seek/read pair.
+//!
+//! The mapping is hand-rolled over the platform's `mmap(2)`/`munmap(2)`
+//! (raw `extern "C"` declarations — the crate stays dependency-free) and
+//! gated to Unix; on other platforms [`MmapSource::open`] returns an
+//! error and callers fall back to [`super::FileSource`], which is also
+//! the runtime fallback when `mmap` itself fails (exotic filesystems,
+//! resource limits).
+//!
+//! ## Safety argument
+//!
+//! * The mapping is `PROT_READ` + `MAP_PRIVATE`: nothing can write
+//!   through it, and private mode keeps other processes' writes from
+//!   being required to appear (a truncation by another process can still
+//!   SIGBUS — the same exposure every mmap'd reader accepts; archives
+//!   are immutable once written, see `DESIGN.md`).
+//! * The fd may be closed right after `mmap` returns: POSIX keeps the
+//!   mapping alive until `munmap`, so the `File` handle is dropped at
+//!   the end of `open` without affecting the slice.
+//! * `as_slice` hands out `&[u8]` borrowing `self`, and the pointer is
+//!   unmapped exactly once, in `Drop` — so no view can outlive the
+//!   mapping.
+//! * `Send`/`Sync` are sound because the mapping is immutable shared
+//!   memory with no interior mutability.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::toc::{SectionSource, SliceSource};
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x02;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// Read-only memory-mapped archive file.  See the module docs for the
+/// safety argument; construct with [`MmapSource::open`].
+pub struct MmapSource {
+    /// Base of the mapping; null for a zero-length file (nothing mapped).
+    #[cfg(unix)]
+    ptr: *const u8,
+    #[cfg(unix)]
+    len: usize,
+}
+
+// SAFETY: the mapping is PROT_READ/MAP_PRIVATE shared immutable memory —
+// no &mut access exists and no interior mutability; concurrent reads
+// from any thread are sound.
+unsafe impl Send for MmapSource {}
+unsafe impl Sync for MmapSource {}
+
+impl MmapSource {
+    /// Map `path` read-only.  Errors on non-Unix platforms, on open
+    /// failure, and on `mmap` failure (callers fall back to
+    /// [`super::FileSource`]).
+    #[cfg(unix)]
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<MmapSource> {
+        use std::os::unix::io::AsRawFd;
+
+        let file = std::fs::File::open(path.as_ref())?;
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(Error::format("mmap: file larger than address space"));
+        }
+        let len = len as usize;
+        if len == 0 {
+            return Ok(MmapSource {
+                ptr: std::ptr::null(),
+                len: 0,
+            });
+        }
+        // SAFETY: len > 0, fd is a freshly opened readable file, and we
+        // request a private read-only mapping at a kernel-chosen address.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(std::io::Error::last_os_error().into());
+        }
+        // `file` drops (closes the fd) here; the mapping persists.
+        Ok(MmapSource {
+            ptr: ptr as *const u8,
+            len,
+        })
+    }
+
+    /// Mapping is not implemented off Unix; callers use the
+    /// [`super::FileSource`] fallback.
+    #[cfg(not(unix))]
+    pub fn open<P: AsRef<Path>>(_path: P) -> Result<MmapSource> {
+        Err(Error::runtime("mmap: unsupported on this platform"))
+    }
+
+    /// The whole mapped file as a borrowed byte slice.
+    pub fn as_slice(&self) -> &[u8] {
+        #[cfg(unix)]
+        {
+            if self.len == 0 {
+                return &[];
+            }
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // self; the borrow cannot outlive the Drop that unmaps it.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+        #[cfg(not(unix))]
+        {
+            &[]
+        }
+    }
+}
+
+impl Drop for MmapSource {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if !self.ptr.is_null() {
+            // SAFETY: ptr/len came from a successful mmap and are
+            // unmapped exactly once.
+            unsafe {
+                sys::munmap(self.ptr as *mut _, self.len);
+            }
+        }
+    }
+}
+
+impl SectionSource for MmapSource {
+    fn read_at(&self, off: u64, len: usize) -> Result<Vec<u8>> {
+        // same bounds checks and error text as any in-memory source
+        SliceSource(self.as_slice()).read_at(off, len)
+    }
+
+    fn source_len(&self) -> u64 {
+        self.as_slice().len() as u64
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("gbatc_mmap_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn maps_and_reads_like_a_slice() {
+        let path = tmp_path("basic");
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let m = MmapSource::open(&path).unwrap();
+        assert_eq!(m.as_slice(), &data[..]);
+        assert_eq!(m.source_len(), data.len() as u64);
+        assert_eq!(m.read_at(13, 100).unwrap(), data[13..113].to_vec());
+        // out-of-bounds errors match the slice source's contract
+        assert!(m.read_at(data.len() as u64 - 1, 2).is_err());
+        drop(m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn zero_length_file_maps_to_empty_slice() {
+        let path = tmp_path("empty");
+        std::fs::write(&path, b"").unwrap();
+        let m = MmapSource::open(&path).unwrap();
+        assert_eq!(m.as_slice(), &[] as &[u8]);
+        assert_eq!(m.source_len(), 0);
+        assert!(m.read_at(0, 1).is_err());
+        assert_eq!(m.read_at(0, 0).unwrap(), Vec::<u8>::new());
+        drop(m);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_error() {
+        assert!(MmapSource::open(tmp_path("definitely_missing")).is_err());
+    }
+}

@@ -17,11 +17,13 @@
 
 pub mod format;
 pub mod metered;
+pub mod mmap;
 pub mod stream;
 pub mod toc;
 
 pub use format::{Archive, SpeciesSection, MAGIC};
 pub use metered::{IoStats, MeteredSource};
+pub use mmap::MmapSource;
 pub use stream::{Gba2StreamWriter, StreamLayout, StreamSummary};
 pub use toc::{
     CodecTag, CountingSource, FileSource, Gba2Archive, Gba2Header, MemSource, SectionSource,

@@ -118,7 +118,9 @@ COMMANDS:
               byte ranges), per-section codec tags, per-codec byte
               totals, and size breakdown.  --stats additionally reopens
               the archive through the metered reader and reports the
-              classified open IO (header/TOC reads vs payload reads).
+              classified open IO (header/TOC reads vs payload reads) and
+              how the bytes were served: zero-copy mmap vs buffered
+              read(2).
   serve       --mount NAME=PATH[,NAME=PATH...] [--listen 127.0.0.1:7070]
               [--workers 4] [--queue 64] [--cache-mb 256]
               [--max-response-mb 256] [--threads N]

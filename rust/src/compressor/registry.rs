@@ -121,13 +121,27 @@ pub fn plane_rmse(a: &[f32], b: &[f32]) -> f64 {
 
 /// Copy one species' `[nt, Y, X]` plane out of a `[nt, S, Y, X]` buffer.
 pub fn gather_plane(buf: &[f32], nt: usize, ns: usize, npix: usize, s: usize) -> Vec<f32> {
-    debug_assert_eq!(buf.len(), nt * ns * npix);
     let mut out = vec![0.0f32; nt * npix];
+    gather_plane_into(&mut out, buf, nt, ns, npix, s);
+    out
+}
+
+/// [`gather_plane`] into a caller-owned buffer (`dst.len() == nt * npix`)
+/// — the zero-copy fill path of the store cache's `Arc<[f32]>` planes.
+pub fn gather_plane_into(
+    dst: &mut [f32],
+    buf: &[f32],
+    nt: usize,
+    ns: usize,
+    npix: usize,
+    s: usize,
+) {
+    debug_assert_eq!(buf.len(), nt * ns * npix);
+    debug_assert_eq!(dst.len(), nt * npix);
     for t in 0..nt {
         let src = (t * ns + s) * npix;
-        out[t * npix..(t + 1) * npix].copy_from_slice(&buf[src..src + npix]);
+        dst[t * npix..(t + 1) * npix].copy_from_slice(&buf[src..src + npix]);
     }
-    out
 }
 
 /// Scatter a `[nt, Y, X]` plane back into a `[nt, S, Y, X]` buffer.

@@ -293,7 +293,9 @@ pub(crate) struct ShardRunCtx {
     pub(crate) ns: usize,
     pub(crate) ny: usize,
     pub(crate) nx: usize,
-    pub(crate) ranges: Vec<(f32, f32)>,
+    /// Per-species normalization ranges, shared (not cloned) by every
+    /// shard pass and the header build.
+    pub(crate) ranges: std::sync::Arc<[(f32, f32)]>,
     /// Raw per-species NRMSE targets (error messages, header display).
     pub(crate) targets: Vec<f64>,
     /// Per-species guarantee parameters (0.1%-conservative τ, see below).
@@ -374,7 +376,7 @@ impl ShardRunCtx {
             ns,
             ny,
             nx,
-            ranges,
+            ranges: ranges.into(),
             targets: targets.to_vec(),
             params,
             budgets,
@@ -554,7 +556,7 @@ impl<'a> ShardEngine<'a> {
             pressure: ds.pressure,
             nrmse_target: ctx.max_target(),
             model_param_bytes: model_bytes as u64,
-            ranges: ctx.ranges.clone(),
+            ranges: ctx.ranges.to_vec(),
         };
         let archive = Gba2Archive::build(header, payloads)?;
         let payload = archive.payload_bytes();
@@ -803,7 +805,7 @@ impl<'a> ShardEngine<'a> {
     /// `meter` charges the real allocations so callers can bound peak
     /// decode memory.
     ///
-    /// Memory note: the returned buffer is always full `[nt_sh, S, Y, X]`
+    /// Memory note: the `norm` buffer is always full `[nt_sh, S, Y, X]`
     /// width — inherent for GBATC shards (one AE instance couples all
     /// species), and kept for model-free shards too so both callers index
     /// it uniformly; a species-packed layout for the model-free case
@@ -811,8 +813,13 @@ impl<'a> ShardEngine<'a> {
     /// second indexing convention.  (The `SZA1` baseline's
     /// species-granular `decompress_range` override covers the classic
     /// all-SZ workload without this cost.)
+    ///
+    /// `norm` is a caller-owned arena: multi-shard drivers pass the same
+    /// `Vec` every iteration so the shard buffer is allocated once and
+    /// reused (`clear` + `resize` keeps the capacity; the model path
+    /// replaces the allocation because the pipeline owns its output).
     #[allow(clippy::too_many_arguments)]
-    fn decode_shard_norm<S: SectionSource + ?Sized>(
+    fn decode_shard_norm_into<S: SectionSource + ?Sized>(
         &self,
         header: &Gba2Header,
         entry: &ShardToc,
@@ -822,7 +829,8 @@ impl<'a> ShardEngine<'a> {
         threads: usize,
         progress: &Progress,
         meter: &WorkspaceMeter,
-    ) -> Result<Vec<f32>> {
+        norm: &mut Vec<f32>,
+    ) -> Result<()> {
         let (_, ns, ny, nx) = header.dims;
         let npix = ny * nx;
         let shape = BlockShape {
@@ -844,7 +852,7 @@ impl<'a> ShardEngine<'a> {
             .any(|&s| entry.codecs.get(s).copied() == Some(CodecTag::Gbatc));
         let _shard_charge = meter.charge(entry.nt * ns * npix * 4);
 
-        let mut norm = if needs_model {
+        if needs_model {
             // 1. latent plane (one section read)
             let latent_len = usize::try_from(entry.latent.1)
                 .map_err(|_| Error::format("latent section length overflows"))?;
@@ -859,10 +867,13 @@ impl<'a> ShardEngine<'a> {
             }
 
             // 2. decode + optional TCN
-            pipeline.decode_all(&grid, &plane.values, self.handle, header.tcn_used, progress)?
+            *norm =
+                pipeline.decode_all(&grid, &plane.values, self.handle, header.tcn_used, progress)?;
         } else {
-            vec![0.0f32; entry.nt * ns * npix]
-        };
+            // arena reuse: re-zero while keeping the capacity
+            norm.clear();
+            norm.resize(entry.nt * ns * npix, 0.0);
+        }
 
         // 3. per-species sections (parallel; writes are species-disjoint)
         let cell = SpeciesDisjoint::new(norm.as_mut_slice());
@@ -900,7 +911,7 @@ impl<'a> ShardEngine<'a> {
             registry::scatter_plane(mass, &plane, entry.nt, ns, npix, s);
             Ok(())
         })?;
-        Ok(norm)
+        Ok(())
     }
 
     /// Decode the selected species of one shard to *normalized*
@@ -925,6 +936,36 @@ impl<'a> ShardEngine<'a> {
         sel: &[usize],
         threads: usize,
     ) -> Result<Vec<Vec<f32>>> {
+        let (_, _, ny, nx) = header.dims;
+        let npix = ny * nx;
+        let mut planes: Vec<Vec<f32>> = sel.iter().map(|_| vec![0.0f32; entry.nt * npix]).collect();
+        {
+            let mut outs: Vec<&mut [f32]> = planes.iter_mut().map(|p| p.as_mut_slice()).collect();
+            let mut scratch = Vec::new();
+            self.decode_shard_planes_into(header, entry, src, sel, threads, &mut scratch, &mut outs)?;
+        }
+        Ok(planes)
+    }
+
+    /// [`Self::decode_shard_planes`] into caller-owned buffers — the
+    /// zero-copy fill path of the `gbatc::store` cache: the store decodes
+    /// straight into freshly allocated `Arc<[f32]>` planes (no
+    /// intermediate `Vec` per plane) and reuses `norm_scratch` as the
+    /// shard-wide decode arena across shards of one query.
+    ///
+    /// `outs` must hold one `nt_sh * ny * nx` buffer per selected
+    /// species, in `sel` order; bits written are identical to
+    /// [`Self::decode_shard_planes`]'s return value.
+    pub fn decode_shard_planes_into<S: SectionSource + ?Sized>(
+        &self,
+        header: &Gba2Header,
+        entry: &ShardToc,
+        src: &S,
+        sel: &[usize],
+        threads: usize,
+        norm_scratch: &mut Vec<f32>,
+        outs: &mut [&mut [f32]],
+    ) -> Result<()> {
         self.check_spec(header)?;
         let (_, ns, ny, nx) = header.dims;
         let npix = ny * nx;
@@ -933,9 +974,17 @@ impl<'a> ShardEngine<'a> {
                 "decode_shard_planes selection {sel:?} is not ascending unique indices < {ns}"
             )));
         }
+        if outs.len() != sel.len() || outs.iter().any(|o| o.len() != entry.nt * npix) {
+            return Err(Error::shape(format!(
+                "decode_shard_planes_into: {} output buffers for {} selected species of {} values",
+                outs.len(),
+                sel.len(),
+                entry.nt * npix
+            )));
+        }
         let progress = Progress::new();
         let meter = WorkspaceMeter::new();
-        let norm = self.decode_shard_norm(
+        self.decode_shard_norm_into(
             header,
             entry,
             src,
@@ -944,11 +993,12 @@ impl<'a> ShardEngine<'a> {
             effective_threads(threads),
             &progress,
             &meter,
+            norm_scratch,
         )?;
-        Ok(sel
-            .iter()
-            .map(|&s| registry::gather_plane(&norm, entry.nt, ns, npix, s))
-            .collect())
+        for (k, &s) in sel.iter().enumerate() {
+            registry::gather_plane_into(outs[k], norm_scratch, entry.nt, ns, npix, s);
+        }
+        Ok(())
     }
 
     /// Decompress a whole archive back to mass fractions `[T, S, Y, X]`.
@@ -964,8 +1014,10 @@ impl<'a> ShardEngine<'a> {
         let sel: Vec<usize> = (0..ns).collect();
         let meter = WorkspaceMeter::new();
         let mut out = vec![0.0f32; nt * stride];
+        // one shard-wide decode arena reused across shards
+        let mut norm = Vec::new();
         for entry in &archive.toc {
-            let norm = self.decode_shard_norm(
+            self.decode_shard_norm_into(
                 &archive.header,
                 entry,
                 &src,
@@ -974,6 +1026,7 @@ impl<'a> ShardEngine<'a> {
                 threads,
                 &progress,
                 &meter,
+                &mut norm,
             )?;
             out[entry.t0 * stride..(entry.t0 + entry.nt) * stride].copy_from_slice(&norm);
         }
@@ -1015,9 +1068,11 @@ impl<'a> ShardEngine<'a> {
         let meter = WorkspaceMeter::new();
         let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
         let _out_charge = meter.charge(out.len() * 4);
+        // one shard-wide decode arena reused across the touched shards
+        let mut norm = Vec::new();
         for entry in toc.iter().filter(|e| e.t0 < t1 && e.t0 + e.nt > t0) {
-            let norm = self.decode_shard_norm(
-                &header, entry, src, &sel, pipeline, threads, &progress, &meter,
+            self.decode_shard_norm_into(
+                &header, entry, src, &sel, pipeline, threads, &progress, &meter, &mut norm,
             )?;
             let lo_t = t0.max(entry.t0);
             let hi_t = t1.min(entry.t0 + entry.nt);

@@ -237,6 +237,67 @@ impl Huffman {
         }
     }
 
+    /// Decode `n` symbols into `emit` — the word-batched hot loop.
+    ///
+    /// Instead of one `peek` (with its refill check) per symbol, this
+    /// refills the reader's accumulator once and then decodes as many
+    /// table-hit symbols as the buffered bits allow, budgeting against
+    /// [`BitReader::buffered`].  Position-identical to calling
+    /// [`Self::decode_symbol`] `n` times — the fast route only fires when
+    /// a full `table_bits` window is buffered (so the masked
+    /// [`BitReader::peek_buffered`] equals what `peek` would return, and
+    /// `len <= table_bits <= buffered <= remaining` forces the same
+    /// branch), table misses take the identical canonical walk, and the
+    /// stream tail falls back to the per-symbol decoder — so errors and
+    /// symbols match exactly, which the property tests assert.
+    pub fn decode_symbols<F: FnMut(u32)>(
+        &self,
+        r: &mut BitReader,
+        n: usize,
+        mut emit: F,
+    ) -> Result<()> {
+        if self.table_bits == 0 {
+            for _ in 0..n {
+                emit(self.decode_symbol_walk(r)?);
+            }
+            return Ok(());
+        }
+        let mask = (1u64 << self.table_bits) - 1;
+        let mut i = 0usize;
+        'refill: while i < n {
+            r.fill();
+            let mut avail = r.buffered();
+            if avail < self.table_bits {
+                // stream tail: fewer buffered bits than a table window —
+                // decode_symbol handles short final codes and EOF exactly
+                break;
+            }
+            while i < n {
+                let e = self.table[(r.peek_buffered() & mask) as usize];
+                let l = e & 0xFF;
+                if e == 0 {
+                    // code longer than the table: canonical walk, exactly
+                    // decode_symbol's fallback; it moves the bit position
+                    // arbitrarily, so our `avail` budget is stale — refill
+                    emit(self.decode_symbol_walk(r)?);
+                    i += 1;
+                    continue 'refill;
+                }
+                r.skip(l);
+                avail -= l;
+                emit(e >> 8);
+                i += 1;
+                if avail < self.table_bits {
+                    continue 'refill;
+                }
+            }
+        }
+        for _ in i..n {
+            emit(self.decode_symbol(r)?);
+        }
+        Ok(())
+    }
+
     /// Mean code length in bits under the given counts (for diagnostics).
     pub fn mean_bits(&self, counts: &[u64]) -> f64 {
         let total: u64 = counts.iter().sum();
@@ -391,9 +452,7 @@ impl IntCodec {
             .ok_or_else(|| Error::codec("intcodec: truncated bitstream"))?;
         let mut r = BitReader::new(bits);
         let mut out = Vec::with_capacity(n_values);
-        for _ in 0..n_values {
-            out.push(alphabet[huff.decode_symbol(&mut r)? as usize]);
-        }
+        huff.decode_symbols(&mut r, n_values, |s| out.push(alphabet[s as usize]))?;
         Ok(out)
     }
 }
@@ -557,6 +616,103 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The word-batched decoder must match `n` calls of the per-symbol
+    /// decoder exactly: same symbols, same reader position after the
+    /// batch, and the same error behavior on truncated streams.  Fuzzed
+    /// codes include deep trees (table misses mid-batch).
+    #[test]
+    fn prop_batched_decode_matches_per_symbol() {
+        let mut rng = Prng::new(47);
+        for case in 0..100 {
+            let (huff, stream) = fuzz_code(&mut rng);
+            let mut w = BitWriter::new();
+            for &s in &stream {
+                huff.encode_symbol(&mut w, s);
+            }
+            let bytes = w.finish();
+
+            let mut batched = BitReader::new(&bytes);
+            let mut got = Vec::with_capacity(stream.len());
+            huff.decode_symbols(&mut batched, stream.len(), |s| got.push(s))
+                .unwrap();
+            let mut single = BitReader::new(&bytes);
+            let want: Vec<u32> = (0..stream.len())
+                .map(|_| huff.decode_symbol(&mut single).unwrap())
+                .collect();
+            assert_eq!(got, want, "case {case}: symbols diverged");
+            assert_eq!(got, stream, "case {case}: wrong symbols");
+            assert_eq!(
+                batched.remaining(),
+                single.remaining(),
+                "case {case}: reader positions diverged"
+            );
+
+            // truncated stream: both decoders must fail at the same
+            // symbol count
+            if !bytes.is_empty() {
+                let clipped = &bytes[..bytes.len() / 2];
+                let mut br = BitReader::new(clipped);
+                let mut n_batch = 0usize;
+                let batch_err = huff
+                    .decode_symbols(&mut br, stream.len(), |_| n_batch += 1)
+                    .is_err();
+                let mut sr = BitReader::new(clipped);
+                let mut n_single = 0usize;
+                let mut single_err = false;
+                for _ in 0..stream.len() {
+                    match huff.decode_symbol(&mut sr) {
+                        Ok(_) => n_single += 1,
+                        Err(_) => {
+                            single_err = true;
+                            break;
+                        }
+                    }
+                }
+                assert_eq!(
+                    (n_batch, batch_err),
+                    (n_single, single_err),
+                    "case {case}: truncation behavior diverged"
+                );
+            }
+        }
+    }
+
+    /// Deep Fibonacci-weight trees route every long code through the
+    /// batch decoder's walk fallback; symbols and positions must still
+    /// match the per-symbol decoder.
+    #[test]
+    fn batched_decode_handles_table_misses() {
+        let mut counts = vec![0u64; 40];
+        let (mut a, mut b) = (1u64, 1u64);
+        for c in counts.iter_mut() {
+            *c = a;
+            let next = a.saturating_add(b);
+            b = a;
+            a = next;
+        }
+        let huff = Huffman::from_counts(&counts).unwrap();
+        assert!(*huff.lens.iter().max().unwrap() > TABLE_BITS);
+        let mut rng = Prng::new(61);
+        let stream: Vec<u32> = (0..5000).map(|_| rng.index(40) as u32).collect();
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            huff.encode_symbol(&mut w, s);
+        }
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let mut got = Vec::new();
+        huff.decode_symbols(&mut r, stream.len(), |s| got.push(s))
+            .unwrap();
+        assert_eq!(got, stream);
+        assert_eq!(r.remaining(), {
+            let mut s = BitReader::new(&bytes);
+            for _ in 0..stream.len() {
+                huff.decode_symbol(&mut s).unwrap();
+            }
+            s.remaining()
+        });
     }
 
     /// The single-write encoder must emit the same bytes as the

@@ -229,9 +229,10 @@ pub fn guarantee_species_timed(
 /// blocks.  Tiles iterate blocks × basis columns; the reduction over `i`
 /// is one sequential f64 chain per (k, j) — never split or re-associated —
 /// so every coefficient is bit-identical to the scalar `col · r` dot it
-/// replaces.  Within a tile, four column dots accumulate in independent
-/// registers, which pipelines the FMA latency without touching any
-/// per-dot order of operations.
+/// replaces.  Within a tile, [`crate::simd::dot4_cols`] advances four
+/// column dots in lockstep (one column per SIMD lane on AVX2, four
+/// independent registers on the scalar path), which pipelines the
+/// multiply-add latency without touching any per-dot order of operations.
 fn project_blocks(
     residuals: &[f32],
     above: &[usize],
@@ -254,14 +255,7 @@ fn project_blocks(
                     let c1 = basis.col(j + 1);
                     let c2 = basis.col(j + 2);
                     let c3 = basis.col(j + 3);
-                    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-                    for i in 0..d {
-                        let r = r0[i] as f64;
-                        a0 += c0[i] as f64 * r;
-                        a1 += c1[i] as f64 * r;
-                        a2 += c2[i] as f64 * r;
-                        a3 += c3[i] as f64 * r;
-                    }
+                    let [a0, a1, a2, a3] = crate::simd::dot4_cols(c0, c1, c2, c3, r0);
                     crow[j] = a0;
                     crow[j + 1] = a1;
                     crow[j + 2] = a2;
@@ -269,12 +263,8 @@ fn project_blocks(
                     j += 4;
                 }
                 while j < jend {
-                    let col = basis.col(j);
-                    let mut a = 0.0f64;
-                    for i in 0..d {
-                        a += col[i] as f64 * r0[i] as f64;
-                    }
-                    crow[j] = a;
+                    // single dot: sequential by the determinism invariant
+                    crow[j] = crate::simd::dot_col(basis.col(j), r0);
                     j += 1;
                 }
             }

@@ -90,7 +90,17 @@
 //!   ```
 //!
 //!   `serve::QueryClient` is the matching blocking client (`gbatc serve`
-//!   / `gbatc query` front both).
+//!   / `gbatc query` front both).  GBA2 archives opened from a path are
+//!   mmap-backed ([`archive::MmapSource`], `FileSource` fallback), cache
+//!   planes are `Arc<[f32]>` (a warm hit is a refcount bump, zero bytes
+//!   copied), and shard decode workspaces are arena-reused across shards.
+//! * **SIMD kernels** ([`simd`]) — runtime-dispatched (AVX2 via
+//!   `is_x86_feature_detected!`, scalar fallback/oracle, `GBATC_NO_SIMD`
+//!   force-off) vectorized hot loops for the guarantee-pass GEMM, PCA
+//!   covariance, and NRMSE/minmax sweeps; fixed-width lane accumulators
+//!   with a sequential combine keep every reduction bit-identical at any
+//!   lane width, so archive bytes and certified bounds never depend on
+//!   the ISA.
 //! * **Compressor trait / CLI** — [`compressor::Compressor`] unifies
 //!   GBA/GBATC/SZ as a thin adapter over [`api`] (`compress_bytes` stays
 //!   as the one-call convenience); the `gbatc` binary routes `compress`
@@ -121,6 +131,7 @@ pub mod metrics;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod simd;
 pub mod store;
 pub mod sz;
 pub mod util;

@@ -66,18 +66,14 @@ impl Pca {
         if threads == 1 || n * d < PAR_MIN_WORK {
             let mut xc = vec![0.0f64; d];
             for row in samples.chunks_exact(d) {
-                for j in 0..d {
-                    xc[j] = row[j] as f64 - mean[j];
-                }
+                crate::simd::center_f32_to_f64(&mut xc, row, &mean);
                 for i in 0..d {
                     let xi = xc[i];
                     if xi == 0.0 {
                         continue;
                     }
                     let crow = cov.row_mut(i);
-                    for j in i..d {
-                        crow[j] += xi * xc[j];
-                    }
+                    crate::simd::axpy_f64(&mut crow[i..], xi, &xc[i..]);
                 }
             }
         } else {
@@ -113,18 +109,18 @@ impl Pca {
                         // xc[lo..] is read by rows lo..hi)
                         let mut xc = vec![0.0f64; d];
                         for row in samples.chunks_exact(d) {
-                            for j in lo..d {
-                                xc[j] = row[j] as f64 - mean_ref[j];
-                            }
+                            crate::simd::center_f32_to_f64(
+                                &mut xc[lo..],
+                                &row[lo..],
+                                &mean_ref[lo..],
+                            );
                             for i in lo..hi {
                                 let xi = xc[i];
                                 if xi == 0.0 {
                                     continue;
                                 }
                                 let crow = &mut stripe[(i - lo) * d..(i - lo + 1) * d];
-                                for j in i..d {
-                                    crow[j] += xi * xc[j];
-                                }
+                                crate::simd::axpy_f64(&mut crow[i..], xi, &xc[i..]);
                             }
                         }
                     });

@@ -469,6 +469,13 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             reader.archive_bytes(),
             100.0 * iostats.bytes() as f64 / reader.archive_bytes().max(1) as f64
         );
+        println!(
+            "  IO path: {} B zero-copy (mmap) vs {} B buffered read(2) in {} + {} reads",
+            iostats.mmap_bytes,
+            iostats.bytes() - iostats.mmap_bytes,
+            iostats.mmap_reads,
+            iostats.reads() - iostats.mmap_reads
+        );
     }
     println!("  {}", codec_totals_line(&a));
     // per-species totals across shards (top 5 heaviest)

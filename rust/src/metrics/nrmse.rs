@@ -1,5 +1,9 @@
 //! NRMSE (paper Eq. 3): RMSE normalized by the original data's range.
 //! The paper's overall score is the *average of per-species NRMSEs*.
+//!
+//! The squared-error and min/max sweeps run through [`crate::simd`]'s
+//! fixed-lane kernels: the lane order is the canonical reduction order on
+//! every ISA, so the reported NRMSE is bit-identical with SIMD on or off.
 
 /// NRMSE of `recon` against `orig`, normalizing by (max - min) of `orig`.
 pub fn nrmse(orig: &[f32], recon: &[f32]) -> f64 {
@@ -13,15 +17,7 @@ pub fn nrmse_with_range(orig: &[f32], recon: &[f32], lo: f32, hi: f32) -> f64 {
     if orig.is_empty() {
         return 0.0;
     }
-    let mse: f64 = orig
-        .iter()
-        .zip(recon)
-        .map(|(&a, &b)| {
-            let d = a as f64 - b as f64;
-            d * d
-        })
-        .sum::<f64>()
-        / orig.len() as f64;
+    let mse: f64 = crate::simd::sum_sq_diff(orig, recon) / orig.len() as f64;
     let range = (hi - lo) as f64;
     if range <= 0.0 {
         return if mse == 0.0 { 0.0 } else { f64::INFINITY };
@@ -30,17 +26,7 @@ pub fn nrmse_with_range(orig: &[f32], recon: &[f32], lo: f32, hi: f32) -> f64 {
 }
 
 fn range(xs: &[f32]) -> (f32, f32) {
-    let mut lo = f32::INFINITY;
-    let mut hi = f32::NEG_INFINITY;
-    for &v in xs {
-        if v < lo {
-            lo = v;
-        }
-        if v > hi {
-            hi = v;
-        }
-    }
-    (lo, hi)
+    crate::simd::minmax(xs)
 }
 
 /// Per-species NRMSE over species-major data `[S, n]` plus their average

@@ -1,0 +1,617 @@
+//! Runtime-dispatched SIMD kernels for the measured hot loops.
+//!
+//! Every kernel here has exactly two implementations: a portable scalar
+//! one (the reference the property tests treat as the oracle, and the
+//! fallback on non-x86 targets or when `GBATC_NO_SIMD` is set) and an
+//! AVX2 one selected once per process by [`active`] via
+//! `is_x86_feature_detected!`.  The pair is **bit-identical by
+//! construction**, which is what lets the SIMD paths sit under the
+//! archive-bytes determinism contract (`DESIGN.md` §Hot paths):
+//!
+//! * **Elementwise kernels** ([`axpy_f64`], [`center_f32_to_f64`]) touch
+//!   each output element with the same two IEEE ops (`mul` then `add`,
+//!   never a fused multiply-add) in both implementations, so lane width
+//!   cannot change a single bit.
+//! * **Multi-accumulator dots** ([`dot4_cols`]) map one basis column per
+//!   lane; each column's `d`-long f64 reduction stays one sequential
+//!   chain exactly as the blocked scalar GEMM runs it.
+//! * **Lane reductions** ([`sum_sq_diff`], [`minmax`]) use *fixed-width*
+//!   lane accumulators ([`LANES_F64`]/[`LANES_F32`] lanes, independent of
+//!   the ISA) combined sequentially in lane order at the end.  The scalar
+//!   fallback emulates the identical lane pattern, so the result is the
+//!   same with SIMD on, off, or unavailable — the lane order itself is
+//!   the canonical reduction order, not an approximation of one.
+//!
+//! Single-chain reductions whose order is certified (e.g. the guarantee
+//! pass's per-coefficient dot, [`dot_col`]) are *not* lane-split on any
+//! path: the determinism invariant forbids it, so they stay scalar
+//! everywhere and SIMD is applied across independent outputs instead.
+
+use std::sync::OnceLock;
+
+/// f64 accumulator lanes of the canonical lane-reduction order.  Fixed —
+/// not a property of the selected ISA.
+pub const LANES_F64: usize = 4;
+
+/// f32 lanes of the canonical min/max sweep.  Fixed — not a property of
+/// the selected ISA.
+pub const LANES_F32: usize = 8;
+
+/// Instruction-set path selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// 256-bit AVX2 paths (x86-64 with runtime-detected support).
+    Avx2,
+    /// Portable scalar paths emulating the same fixed lane pattern.
+    Scalar,
+}
+
+impl Isa {
+    /// Short name for logs and `inspect --stats`.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx2 => "avx2",
+            Isa::Scalar => "scalar",
+        }
+    }
+}
+
+/// The ISA selected for this process: AVX2 when the CPU supports it and
+/// the `GBATC_NO_SIMD` environment variable is unset (or `0`/empty),
+/// scalar otherwise.  Decided once and cached — kernels dispatch on a
+/// single branch.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        if simd_disabled_by_env() {
+            return Isa::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+        }
+        Isa::Scalar
+    })
+}
+
+fn simd_disabled_by_env() -> bool {
+    match std::env::var_os("GBATC_NO_SIMD") {
+        Some(v) => !v.is_empty() && v != "0",
+        None => false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane reductions (canonical fixed-lane order on every path)
+// ---------------------------------------------------------------------------
+
+/// Σ (a\[i\] − b\[i\])² in f64, accumulated over [`LANES_F64`] fixed
+/// lanes (element `i` feeds lane `i % LANES_F64`) with a sequential
+/// final combine in lane order.  This *is* the canonical reduction order
+/// of the NRMSE numerator — identical bits whichever ISA runs it.
+///
+/// NaN/inf inputs propagate exactly as the scalar lane loop would
+/// (a NaN difference poisons its lane and therefore the combine).
+pub fn sum_sq_diff(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() == Isa::Avx2 {
+        // SAFETY: AVX2 support was runtime-verified by `active()`.
+        return unsafe { sum_sq_diff_avx2(a, b) };
+    }
+    sum_sq_diff_scalar(a, b)
+}
+
+/// Scalar oracle of [`sum_sq_diff`] — the same fixed-lane pattern
+/// without intrinsics.
+pub(crate) fn sum_sq_diff_scalar(a: &[f32], b: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES_F64];
+    let whole = a.len() / LANES_F64 * LANES_F64;
+    let mut i = 0;
+    while i < whole {
+        for l in 0..LANES_F64 {
+            let d = a[i + l] as f64 - b[i + l] as f64;
+            acc[l] += d * d;
+        }
+        i += LANES_F64;
+    }
+    for (l, k) in (i..a.len()).enumerate() {
+        let d = a[k] as f64 - b[k] as f64;
+        acc[l] += d * d;
+    }
+    combine_lanes_f64(&acc)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sum_sq_diff_avx2(a: &[f32], b: &[f32]) -> f64 {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    let whole = n / LANES_F64 * LANES_F64;
+    let mut accv = _mm256_setzero_pd();
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut i = 0;
+    while i < whole {
+        // 4 f32 pairs -> 4 exact f64 lanes; sub, mul, add are the same
+        // three IEEE ops the scalar lane loop performs (no FMA)
+        let av = _mm256_cvtps_pd(_mm_loadu_ps(ap.add(i)));
+        let bv = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(i)));
+        let d = _mm256_sub_pd(av, bv);
+        accv = _mm256_add_pd(accv, _mm256_mul_pd(d, d));
+        i += LANES_F64;
+    }
+    let mut acc = [0.0f64; LANES_F64];
+    _mm256_storeu_pd(acc.as_mut_ptr(), accv);
+    for (l, k) in (i..n).enumerate() {
+        let d = a[k] as f64 - b[k] as f64;
+        acc[l] += d * d;
+    }
+    combine_lanes_f64(&acc)
+}
+
+#[inline]
+fn combine_lanes_f64(acc: &[f64; LANES_F64]) -> f64 {
+    // sequential in lane order: (((0 + l0) + l1) + l2) + l3
+    let mut s = 0.0f64;
+    for &v in acc {
+        s += v;
+    }
+    s
+}
+
+/// `(min, max)` of `xs` over [`LANES_F32`] fixed lanes (element `i`
+/// feeds lane `i % LANES_F32`) combined sequentially in lane order.
+/// Comparison semantics match the pre-SIMD sweep exactly: a value
+/// replaces the running bound only when `v < lo` / `v > hi` holds, so
+/// NaNs never enter and an all-NaN (or empty) input returns
+/// `(inf, -inf)` as before.
+pub fn minmax(xs: &[f32]) -> (f32, f32) {
+    #[cfg(target_arch = "x86_64")]
+    if active() == Isa::Avx2 {
+        // SAFETY: AVX2 support was runtime-verified by `active()`.
+        return unsafe { minmax_avx2(xs) };
+    }
+    minmax_scalar(xs)
+}
+
+/// Scalar oracle of [`minmax`] — the same fixed-lane pattern without
+/// intrinsics.
+pub(crate) fn minmax_scalar(xs: &[f32]) -> (f32, f32) {
+    let mut lo = [f32::INFINITY; LANES_F32];
+    let mut hi = [f32::NEG_INFINITY; LANES_F32];
+    let whole = xs.len() / LANES_F32 * LANES_F32;
+    let mut i = 0;
+    while i < whole {
+        for l in 0..LANES_F32 {
+            let v = xs[i + l];
+            if v < lo[l] {
+                lo[l] = v;
+            }
+            if v > hi[l] {
+                hi[l] = v;
+            }
+        }
+        i += LANES_F32;
+    }
+    for (l, k) in (i..xs.len()).enumerate() {
+        let v = xs[k];
+        if v < lo[l] {
+            lo[l] = v;
+        }
+        if v > hi[l] {
+            hi[l] = v;
+        }
+    }
+    combine_lanes_minmax(&lo, &hi)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn minmax_avx2(xs: &[f32]) -> (f32, f32) {
+    use std::arch::x86_64::*;
+    let n = xs.len();
+    let whole = n / LANES_F32 * LANES_F32;
+    // vminps(v, lo) = v < lo ? v : lo (lo on NaN) — exactly the scalar
+    // `if v < lo { lo = v }`, including signed-zero and NaN behavior
+    let mut lov = _mm256_set1_ps(f32::INFINITY);
+    let mut hiv = _mm256_set1_ps(f32::NEG_INFINITY);
+    let p = xs.as_ptr();
+    let mut i = 0;
+    while i < whole {
+        let v = _mm256_loadu_ps(p.add(i));
+        lov = _mm256_min_ps(v, lov);
+        hiv = _mm256_max_ps(v, hiv);
+        i += LANES_F32;
+    }
+    let mut lo = [f32::INFINITY; LANES_F32];
+    let mut hi = [f32::NEG_INFINITY; LANES_F32];
+    _mm256_storeu_ps(lo.as_mut_ptr(), lov);
+    _mm256_storeu_ps(hi.as_mut_ptr(), hiv);
+    for (l, k) in (i..n).enumerate() {
+        let v = xs[k];
+        if v < lo[l] {
+            lo[l] = v;
+        }
+        if v > hi[l] {
+            hi[l] = v;
+        }
+    }
+    combine_lanes_minmax(&lo, &hi)
+}
+
+#[inline]
+fn combine_lanes_minmax(lo: &[f32; LANES_F32], hi: &[f32; LANES_F32]) -> (f32, f32) {
+    let (mut l, mut h) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..LANES_F32 {
+        if lo[i] < l {
+            l = lo[i];
+        }
+        if hi[i] > h {
+            h = hi[i];
+        }
+    }
+    (l, h)
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels (lane width cannot change a bit)
+// ---------------------------------------------------------------------------
+
+/// `acc[j] += x * v[j]` — the PCA covariance row update.  Every element
+/// sees exactly one `mul` and one `add` (no FMA) on both paths, so each
+/// covariance entry's sample-order reduction chain is untouched and the
+/// eigenbasis (and the archive bytes behind it) is bit-identical at any
+/// lane width.
+pub fn axpy_f64(acc: &mut [f64], x: f64, v: &[f64]) {
+    assert_eq!(acc.len(), v.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() == Isa::Avx2 {
+        // SAFETY: AVX2 support was runtime-verified by `active()`.
+        unsafe { axpy_f64_avx2(acc, x, v) };
+        return;
+    }
+    axpy_f64_scalar(acc, x, v);
+}
+
+/// Scalar oracle of [`axpy_f64`].
+pub(crate) fn axpy_f64_scalar(acc: &mut [f64], x: f64, v: &[f64]) {
+    for (a, &b) in acc.iter_mut().zip(v) {
+        *a += x * b;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f64_avx2(acc: &mut [f64], x: f64, v: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let whole = n / 4 * 4;
+    let xv = _mm256_set1_pd(x);
+    let ap = acc.as_mut_ptr();
+    let vp = v.as_ptr();
+    let mut i = 0;
+    while i < whole {
+        let a = _mm256_loadu_pd(ap.add(i));
+        let b = _mm256_loadu_pd(vp.add(i));
+        // mul then add — never vfmadd, which would fuse the rounding
+        _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, _mm256_mul_pd(xv, b)));
+        i += 4;
+    }
+    while i < n {
+        acc[i] += x * v[i];
+        i += 1;
+    }
+}
+
+/// `out[j] = row[j] as f64 - mean[j]` — the PCA sample-centering sweep.
+/// The f32→f64 widening is exact and the subtraction elementwise, so the
+/// paths agree bit for bit.
+pub fn center_f32_to_f64(out: &mut [f64], row: &[f32], mean: &[f64]) {
+    assert_eq!(out.len(), row.len());
+    assert_eq!(out.len(), mean.len());
+    #[cfg(target_arch = "x86_64")]
+    if active() == Isa::Avx2 {
+        // SAFETY: AVX2 support was runtime-verified by `active()`.
+        unsafe { center_f32_to_f64_avx2(out, row, mean) };
+        return;
+    }
+    center_f32_to_f64_scalar(out, row, mean);
+}
+
+/// Scalar oracle of [`center_f32_to_f64`].
+pub(crate) fn center_f32_to_f64_scalar(out: &mut [f64], row: &[f32], mean: &[f64]) {
+    for j in 0..out.len() {
+        out[j] = row[j] as f64 - mean[j];
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn center_f32_to_f64_avx2(out: &mut [f64], row: &[f32], mean: &[f64]) {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let whole = n / 4 * 4;
+    let op = out.as_mut_ptr();
+    let rp = row.as_ptr();
+    let mp = mean.as_ptr();
+    let mut i = 0;
+    while i < whole {
+        let r = _mm256_cvtps_pd(_mm_loadu_ps(rp.add(i)));
+        let m = _mm256_loadu_pd(mp.add(i));
+        _mm256_storeu_pd(op.add(i), _mm256_sub_pd(r, m));
+        i += 4;
+    }
+    while i < n {
+        out[i] = row[i] as f64 - mean[i];
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-accumulator column dots (one column per lane, chains sequential)
+// ---------------------------------------------------------------------------
+
+/// Four simultaneous column dots `aₖ = Σᵢ cₖ[i]·r[i]` in f64 — the
+/// guarantee pass's projection GEMM inner tile.  One basis column per
+/// lane: each column's `d`-long reduction is a single sequential f64
+/// chain (the certified order), and the four chains advance in lockstep.
+/// Bit-identical to four independent scalar dots.
+pub fn dot4_cols(c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32], r: &[f32]) -> [f64; 4] {
+    let d = r.len();
+    assert!(c0.len() == d && c1.len() == d && c2.len() == d && c3.len() == d);
+    #[cfg(target_arch = "x86_64")]
+    if active() == Isa::Avx2 {
+        // SAFETY: AVX2 support was runtime-verified by `active()`.
+        return unsafe { dot4_cols_avx2(c0, c1, c2, c3, r) };
+    }
+    dot4_cols_scalar(c0, c1, c2, c3, r)
+}
+
+/// Scalar oracle of [`dot4_cols`] — four independent accumulators, as
+/// the blocked GEMM ran before dispatch.
+pub(crate) fn dot4_cols_scalar(
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+    r: &[f32],
+) -> [f64; 4] {
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    for i in 0..r.len() {
+        let x = r[i] as f64;
+        a0 += c0[i] as f64 * x;
+        a1 += c1[i] as f64 * x;
+        a2 += c2[i] as f64 * x;
+        a3 += c3[i] as f64 * x;
+    }
+    [a0, a1, a2, a3]
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_cols_avx2(c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32], r: &[f32]) -> [f64; 4] {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..r.len() {
+        // lane k holds column k's accumulator; the gather across the
+        // four column arrays keeps each per-column chain sequential
+        let cols = _mm256_cvtps_pd(_mm_set_ps(c3[i], c2[i], c1[i], c0[i]));
+        let x = _mm256_set1_pd(r[i] as f64);
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(cols, x));
+    }
+    let mut out = [0.0f64; 4];
+    _mm256_storeu_pd(out.as_mut_ptr(), acc);
+    out
+}
+
+/// One column dot `Σᵢ c[i]·r[i]` as a single sequential f64 chain.
+/// Deliberately scalar on every ISA: this reduction's order is part of
+/// the certified-bound contract and may not be lane-split.
+pub fn dot_col(c: &[f32], r: &[f32]) -> f64 {
+    debug_assert_eq!(c.len(), r.len());
+    let mut a = 0.0f64;
+    for i in 0..r.len() {
+        a += c[i] as f64 * r[i] as f64;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn fuzz(rng: &mut Prng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 3.0) as f32).collect()
+    }
+
+    /// Every lane-unaligned length around the lane widths, so
+    /// `len % lanes` covers every residue in {0, .., lanes-1}.
+    fn lengths() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..=2 * LANES_F32 + 3).collect();
+        v.extend([61, 64, 127, 128, 1000, 1003]);
+        v
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn have_avx2() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    #[test]
+    fn sum_sq_diff_simd_is_bit_identical_to_scalar_oracle() {
+        let mut rng = Prng::new(11);
+        for n in lengths() {
+            let a = fuzz(&mut rng, n);
+            let b = fuzz(&mut rng, n);
+            let want = sum_sq_diff_scalar(&a, &b);
+            assert_eq!(sum_sq_diff(&a, &b).to_bits(), want.to_bits(), "len {n}");
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                let got = unsafe { sum_sq_diff_avx2(&a, &b) };
+                assert_eq!(got.to_bits(), want.to_bits(), "avx2 len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn minmax_simd_is_bit_identical_to_scalar_oracle() {
+        let mut rng = Prng::new(13);
+        for n in lengths() {
+            let xs = fuzz(&mut rng, n);
+            let want = minmax_scalar(&xs);
+            let got = minmax(&xs);
+            assert_eq!(got.0.to_bits(), want.0.to_bits(), "len {n} lo");
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "len {n} hi");
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                let v = unsafe { minmax_avx2(&xs) };
+                assert_eq!(v.0.to_bits(), want.0.to_bits(), "avx2 len {n} lo");
+                assert_eq!(v.1.to_bits(), want.1.to_bits(), "avx2 len {n} hi");
+            }
+        }
+    }
+
+    #[test]
+    fn minmax_matches_presimd_sequential_sweep_on_finite_data() {
+        // min/max with the `v < lo` update rule is order-insensitive on
+        // finite data without signed-zero mixes, so the fixed-lane order
+        // must agree with the historical sequential sweep
+        let mut rng = Prng::new(17);
+        for n in lengths() {
+            let xs = fuzz(&mut rng, n);
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &v in &xs {
+                if v < lo {
+                    lo = v;
+                }
+                if v > hi {
+                    hi = v;
+                }
+            }
+            assert_eq!(minmax(&xs), (lo, hi), "len {n}");
+        }
+    }
+
+    #[test]
+    fn nan_and_inf_inputs_agree_across_paths() {
+        let mut rng = Prng::new(19);
+        for n in lengths() {
+            let mut a = fuzz(&mut rng, n);
+            let mut b = fuzz(&mut rng, n);
+            // sprinkle NaN/±inf through both operands
+            for k in 0..n {
+                match k % 7 {
+                    1 => a[k] = f32::NAN,
+                    3 => a[k] = f32::INFINITY,
+                    5 => b[k] = f32::NEG_INFINITY,
+                    _ => {}
+                }
+            }
+            let (wl, wh) = minmax_scalar(&a);
+            let (gl, gh) = minmax(&a);
+            assert_eq!(gl.to_bits(), wl.to_bits(), "len {n} lo");
+            assert_eq!(gh.to_bits(), wh.to_bits(), "len {n} hi");
+            // NaNs never enter the running bounds
+            assert!(!gl.is_nan() && !gh.is_nan(), "len {n}");
+            let want = sum_sq_diff_scalar(&a, &b);
+            let got = sum_sq_diff(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {n} sq");
+            if n > 1 {
+                assert!(got.is_nan(), "len {n}: NaN must poison the sum");
+            }
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                let v = unsafe { minmax_avx2(&a) };
+                assert_eq!((v.0.to_bits(), v.1.to_bits()), (wl.to_bits(), wh.to_bits()));
+                let s = unsafe { sum_sq_diff_avx2(&a, &b) };
+                assert_eq!(s.to_bits(), want.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn empty_slices_are_well_defined() {
+        assert_eq!(sum_sq_diff(&[], &[]), 0.0);
+        assert_eq!(minmax(&[]), (f32::INFINITY, f32::NEG_INFINITY));
+        assert_eq!(dot_col(&[], &[]), 0.0);
+        assert_eq!(dot4_cols(&[], &[], &[], &[], &[]), [0.0; 4]);
+        let mut acc: [f64; 0] = [];
+        axpy_f64(&mut acc, 2.0, &[]);
+        let mut out: [f64; 0] = [];
+        center_f32_to_f64(&mut out, &[], &[]);
+    }
+
+    #[test]
+    fn axpy_and_center_simd_are_bit_identical_to_scalar_oracle() {
+        let mut rng = Prng::new(23);
+        for n in lengths() {
+            let row = fuzz(&mut rng, n);
+            let mean: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = rng.normal();
+
+            let mut want = vec![0.0f64; n];
+            center_f32_to_f64_scalar(&mut want, &row, &mean);
+            let mut got = vec![0.0f64; n];
+            center_f32_to_f64(&mut got, &row, &mean);
+            assert_eq!(bits64(&got), bits64(&want), "center len {n}");
+
+            let mut acc_want = want.clone();
+            axpy_f64_scalar(&mut acc_want, x, &v);
+            let mut acc_got = want.clone();
+            axpy_f64(&mut acc_got, x, &v);
+            assert_eq!(bits64(&acc_got), bits64(&acc_want), "axpy len {n}");
+
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                let mut g = vec![0.0f64; n];
+                unsafe { center_f32_to_f64_avx2(&mut g, &row, &mean) };
+                assert_eq!(bits64(&g), bits64(&want), "avx2 center len {n}");
+                let mut ga = want.clone();
+                unsafe { axpy_f64_avx2(&mut ga, x, &v) };
+                assert_eq!(bits64(&ga), bits64(&acc_want), "avx2 axpy len {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot4_simd_is_bit_identical_to_scalar_oracle() {
+        let mut rng = Prng::new(29);
+        for n in lengths() {
+            let cols: Vec<Vec<f32>> = (0..4).map(|_| fuzz(&mut rng, n)).collect();
+            let r = fuzz(&mut rng, n);
+            let want = dot4_cols_scalar(&cols[0], &cols[1], &cols[2], &cols[3], &r);
+            let got = dot4_cols(&cols[0], &cols[1], &cols[2], &cols[3], &r);
+            for k in 0..4 {
+                assert_eq!(got[k].to_bits(), want[k].to_bits(), "len {n} lane {k}");
+                // the lane chain must equal the plain sequential dot too
+                assert_eq!(
+                    want[k].to_bits(),
+                    dot_col(&cols[k], &r).to_bits(),
+                    "len {n} lane {k} vs dot_col"
+                );
+            }
+            #[cfg(target_arch = "x86_64")]
+            if have_avx2() {
+                let v = unsafe { dot4_cols_avx2(&cols[0], &cols[1], &cols[2], &cols[3], &r) };
+                for k in 0..4 {
+                    assert_eq!(v[k].to_bits(), want[k].to_bits(), "avx2 len {n} lane {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn active_is_stable_and_named() {
+        let a = active();
+        assert_eq!(a, active());
+        assert!(a.name() == "avx2" || a.name() == "scalar");
+    }
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+}

@@ -11,6 +11,13 @@
 //! produces deterministically, so a response assembled from cached planes
 //! is bit-identical to an uncached decode.
 //!
+//! **Sharing contract**: planes are stored as `Arc<[f32]>` and are
+//! immutable once inserted — the decode fills the allocation *before*
+//! the `Arc` is shared (`Arc::get_mut` on the still-unique handle), and
+//! no API ever hands out mutable access afterwards.  A warm hit is
+//! therefore one refcount bump; readers denormalize straight out of the
+//! shared allocation and never copy the plane.
+//!
 //! Concurrency: the key space is split over `lock_shards` independent
 //! `Mutex`es (key-hash selects the lock), so concurrent queries touching
 //! different planes never serialize on a global mutex; the only shared
@@ -34,7 +41,10 @@ pub type CacheKey = (u32, u32, u32);
 const ENTRY_OVERHEAD: usize = 96;
 
 struct Slot {
-    plane: Arc<Vec<f32>>,
+    /// Shared plane storage: a hit hands out an `Arc` clone (one
+    /// refcount bump, zero bytes of plane data copied) of the same
+    /// allocation the decode filled.
+    plane: Arc<[f32]>,
     stamp: u64,
     bytes: usize,
 }
@@ -152,8 +162,10 @@ impl SectionCache {
         }
     }
 
-    /// Look a plane up, refreshing its recency on a hit.
-    pub fn get(&self, key: CacheKey) -> Option<Arc<Vec<f32>>> {
+    /// Look a plane up, refreshing its recency on a hit.  A hit is a
+    /// refcount bump on the resident allocation — never a plane copy
+    /// (`warm_hits_share_one_allocation` asserts pointer identity).
+    pub fn get(&self, key: CacheKey) -> Option<Arc<[f32]>> {
         let found = {
             let mut guard = self.lock(key);
             let sh = &mut *guard;
@@ -183,7 +195,7 @@ impl SectionCache {
     /// the plane was admitted.  Two threads racing the same miss both
     /// insert; the later call replaces the earlier plane (same bits — the
     /// decode is deterministic), which only costs the duplicate decode.
-    pub fn insert(&self, key: CacheKey, plane: Arc<Vec<f32>>) -> bool {
+    pub fn insert(&self, key: CacheKey, plane: Arc<[f32]>) -> bool {
         let bytes = plane.len() * 4 + ENTRY_OVERHEAD;
         if bytes > self.per_shard_cap {
             self.rejected.fetch_add(1, Ordering::Relaxed);
@@ -268,8 +280,8 @@ impl SectionCache {
 mod tests {
     use super::*;
 
-    fn plane(v: f32, n: usize) -> Arc<Vec<f32>> {
-        Arc::new(vec![v; n])
+    fn plane(v: f32, n: usize) -> Arc<[f32]> {
+        Arc::from(vec![v; n])
     }
 
     #[test]
@@ -283,6 +295,23 @@ mod tests {
         assert_eq!((s.hits, s.misses, s.admitted), (1, 1, 1));
         assert_eq!(s.resident_sections, 1);
         assert!(s.resident_bytes >= 40);
+    }
+
+    /// The zero-copy contract: every warm hit returns the *same
+    /// allocation* that was inserted — pointer identity, not an equal
+    /// copy — so a hit moves zero plane bytes.
+    #[test]
+    fn warm_hits_share_one_allocation() {
+        let c = SectionCache::new(1 << 20, 2);
+        let p: Arc<[f32]> = Arc::from(vec![3.5f32; 500]);
+        assert!(c.insert((7, 1, 2), Arc::clone(&p)));
+        let a = c.get((7, 1, 2)).expect("hit");
+        let b = c.get((7, 1, 2)).expect("hit");
+        assert!(Arc::ptr_eq(&a, &p), "hit must alias the inserted plane");
+        assert!(Arc::ptr_eq(&a, &b), "every hit aliases the same plane");
+        // original + resident slot + two hits
+        assert_eq!(Arc::strong_count(&p), 4);
+        assert_eq!(&a[..], &p[..]);
     }
 
     #[test]

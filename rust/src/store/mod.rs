@@ -8,11 +8,14 @@
 //! number of mounted datasets, any number of querying threads.
 //!
 //! * **Cache unit** — the normalized per-species plane of one shard
-//!   (`[nt_sh, Y, X]` f32), exactly what
-//!   [`ShardEngine::decode_shard_planes`](crate::coordinator::engine::ShardEngine::decode_shard_planes)
-//!   produces.  Decode is deterministic, so responses assembled from
-//!   cached planes are **bit-identical** to a fresh
-//!   `decompress_range` — property-tested in `tests/query_store.rs`.
+//!   (`[nt_sh, Y, X]` f32, held as `Arc<[f32]>`), exactly what
+//!   [`ShardEngine::decode_shard_planes_into`](crate::coordinator::engine::ShardEngine::decode_shard_planes_into)
+//!   produces.  Misses decode **directly into** the plane allocation
+//!   that the cache will own (no post-decode copy), and warm hits hand
+//!   back an `Arc` clone — a refcount bump, zero plane bytes moved.
+//!   Decode is deterministic, so responses assembled from cached planes
+//!   are **bit-identical** to a fresh `decompress_range` —
+//!   property-tested in `tests/query_store.rs`.
 //! * **Locking** — per-lock-shard mutexes in the cache plus an `RwLock`
 //!   around the mount table (write-locked only by mount/unmount); the
 //!   query hot path takes no global mutex.
@@ -345,12 +348,16 @@ impl ArchiveStore {
         let nsel = sel.len();
         let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
         let engine = ShardEngine::new(&self.handle, 0, 0);
+        // one denormalized-shard scratch reused across every missing
+        // shard of this query (arena reuse; decode_shard_planes_into
+        // sizes it per shard)
+        let mut norm_scratch: Vec<f32> = Vec::new();
         for (si, entry) in m.toc.iter().enumerate() {
             if entry.t0 >= t1 || entry.t0 + entry.nt <= t0 {
                 continue;
             }
             // cache lookups per (shard, species); collect what's missing
-            let mut planes: Vec<Option<Arc<Vec<f32>>>> = sel
+            let mut planes: Vec<Option<Arc<[f32]>>> = sel
                 .iter()
                 .map(|&s| self.cache.get((m.id, si as u32, s as u32)))
                 .collect();
@@ -358,19 +365,36 @@ impl ArchiveStore {
                 (0..nsel).filter(|&k| planes[k].is_none()).collect();
             if !missing_pos.is_empty() {
                 let missing_sel: Vec<usize> = missing_pos.iter().map(|&k| sel[k]).collect();
-                let decoded = engine.decode_shard_planes(
-                    &m.header,
-                    entry,
-                    &m.src,
-                    &missing_sel,
-                    self.threads,
-                )?;
+                // allocate the exact planes the cache will own and decode
+                // straight into them — the `Arc`s are uniquely held here,
+                // so `get_mut` hands out the fill buffers without a copy
+                let plane_len = entry.nt * npix;
+                let mut fresh: Vec<Arc<[f32]>> = missing_pos
+                    .iter()
+                    .map(|_| Arc::<[f32]>::from(vec![0.0f32; plane_len]))
+                    .collect();
+                {
+                    let mut outs: Vec<&mut [f32]> = fresh
+                        .iter_mut()
+                        .map(|a| {
+                            Arc::get_mut(a).expect("freshly allocated plane is uniquely owned")
+                        })
+                        .collect();
+                    engine.decode_shard_planes_into(
+                        &m.header,
+                        entry,
+                        &m.src,
+                        &missing_sel,
+                        self.threads,
+                        &mut norm_scratch,
+                        &mut outs,
+                    )?;
+                }
                 self.decoded_sections
-                    .fetch_add(decoded.len() as u64, Ordering::Relaxed);
-                for (&k, plane) in missing_pos.iter().zip(decoded) {
+                    .fetch_add(fresh.len() as u64, Ordering::Relaxed);
+                for (&k, plane) in missing_pos.iter().zip(fresh) {
                     self.decoded_bytes
                         .fetch_add(plane.len() as u64 * 4, Ordering::Relaxed);
-                    let plane = Arc::new(plane);
                     self.cache
                         .insert((m.id, si as u32, sel[k] as u32), Arc::clone(&plane));
                     planes[k] = Some(plane);

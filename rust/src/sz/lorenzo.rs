@@ -27,6 +27,24 @@ impl Lorenzo3 {
     fn predict(&self, r: &[f32], t: usize, y: usize, x: usize) -> f64 {
         let nx = self.nx;
         let ny = self.ny;
+        if t > 0 && y > 0 && x > 0 {
+            // interior cells (the vast majority): all seven neighbors
+            // exist, so compute one base index and use fixed offsets —
+            // same seven terms in the same order as the branchy path
+            // below, including the `0.0 + a` start (signed-zero bits)
+            let sy = nx;
+            let st = ny * nx;
+            let i = (t * ny + y) * nx + x;
+            let mut p = 0.0f64;
+            p += r[i - 1] as f64;
+            p += r[i - sy] as f64;
+            p += r[i - st] as f64;
+            p -= r[i - sy - 1] as f64;
+            p -= r[i - st - 1] as f64;
+            p -= r[i - st - sy] as f64;
+            p += r[i - st - sy - 1] as f64;
+            return p;
+        }
         let at = |tt: usize, yy: usize, xx: usize| -> f64 { r[(tt * ny + yy) * nx + xx] as f64 };
         let mut p = 0.0;
         if x > 0 {
@@ -136,6 +154,65 @@ mod tests {
         }
         // decompressor output must equal compressor's reconstruction
         assert_eq!(out, work);
+    }
+
+    /// Original all-branches predictor — the oracle for the interior
+    /// fast path.
+    fn predict_ref(lz: &Lorenzo3, r: &[f32], t: usize, y: usize, x: usize) -> f64 {
+        let nx = lz.nx;
+        let ny = lz.ny;
+        let at = |tt: usize, yy: usize, xx: usize| -> f64 { r[(tt * ny + yy) * nx + xx] as f64 };
+        let mut p = 0.0;
+        if x > 0 {
+            p += at(t, y, x - 1);
+        }
+        if y > 0 {
+            p += at(t, y - 1, x);
+        }
+        if t > 0 {
+            p += at(t - 1, y, x);
+        }
+        if x > 0 && y > 0 {
+            p -= at(t, y - 1, x - 1);
+        }
+        if x > 0 && t > 0 {
+            p -= at(t - 1, y, x - 1);
+        }
+        if y > 0 && t > 0 {
+            p -= at(t - 1, y - 1, x);
+        }
+        if x > 0 && y > 0 && t > 0 {
+            p += at(t - 1, y - 1, x - 1);
+        }
+        p
+    }
+
+    #[test]
+    fn interior_fast_path_is_bit_identical_to_branchy_predictor() {
+        let (nt, ny, nx) = (4, 7, 9);
+        let mut rng = Prng::new(5);
+        let mut field: Vec<f32> = (0..nt * ny * nx)
+            .map(|_| (rng.normal() * 2.0) as f32)
+            .collect();
+        // include exact zeros and negative zeros: the fast path must
+        // preserve the branchy path's signed-zero arithmetic bit for bit
+        field[3] = 0.0;
+        field[10] = -0.0;
+        field[17] = -0.0;
+        let lz = Lorenzo3::new(nt, ny, nx);
+        for t in 0..nt {
+            for y in 0..ny {
+                for x in 0..nx {
+                    let got = lz.predict(&field, t, y, x);
+                    let want = predict_ref(&lz, &field, t, y, x);
+                    assert_eq!(
+                        got.to_bits(),
+                        want.to_bits(),
+                        "({t},{y},{x}): {got} vs {want}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

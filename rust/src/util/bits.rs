@@ -197,6 +197,29 @@ impl<'a> BitReader<'a> {
     pub fn remaining(&self) -> usize {
         (self.buf.len() - self.byte_pos) * 8 + self.acc_bits as usize
     }
+
+    /// Valid bits currently buffered in the accumulator (the batch
+    /// Huffman decoder budgets table lookups against this without
+    /// touching memory).
+    #[inline]
+    pub fn buffered(&self) -> u32 {
+        self.acc_bits
+    }
+
+    /// Top the accumulator up to >= 57 buffered bits (or until the
+    /// stream drains) — one amortized refill for a run of
+    /// [`Self::peek_buffered`]/[`Self::skip`] calls.
+    #[inline]
+    pub fn fill(&mut self) {
+        self.refill();
+    }
+
+    /// The buffered bits, LSB-first, without refilling; bits at and
+    /// above [`Self::buffered`] are zero.  Mask to the width you need.
+    #[inline]
+    pub fn peek_buffered(&self) -> u64 {
+        self.acc
+    }
 }
 
 #[cfg(test)]
@@ -327,6 +350,69 @@ mod tests {
             a.skip(n);
             assert_eq!(b.read(n), Some(peeked));
         }
+    }
+
+    #[test]
+    fn truncated_last_word_tail_is_exact() {
+        // streams whose byte length leaves the final refill a partial
+        // word (len % 8 != 0) exercise the byte-at-a-time tail of
+        // `refill`; every read/peek/remaining near the end must match
+        // the naive reader exactly, including reads that straddle the
+        // last whole-word boundary
+        let mut rng = Prng::new(73);
+        for tail in 1..8usize {
+            let len = 24 + tail; // 3 whole words + a truncated last word
+            let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            for first in [1u32, 7, 13, 57] {
+                let mut fast = BitReader::new(&bytes);
+                let mut slow = NaiveReader { buf: &bytes, pos: 0 };
+                // land the reader just before the truncated word, then
+                // walk across it bit by bit and in odd widths
+                assert_eq!(fast.read(first), slow.read(first));
+                loop {
+                    assert_eq!(fast.remaining(), bytes.len() * 8 - slow.pos);
+                    let n = 1 + (rng.index(12) as u32);
+                    let want = slow.read(n);
+                    if want.is_some() {
+                        // peek must agree with the upcoming read
+                        assert_eq!(fast.peek(n), want.unwrap(), "tail {tail} width {n}");
+                    }
+                    assert_eq!(fast.read(n), want, "tail {tail} width {n}");
+                    if want.is_none() {
+                        break;
+                    }
+                }
+                // fully drained: trailing peeks zero-pad, reads fail
+                assert_eq!(fast.peek(13) & ((1 << fast.remaining()) - 1), fast.peek(13));
+                assert_eq!(fast.read(fast.remaining() as u32 + 1), None);
+            }
+        }
+    }
+
+    #[test]
+    fn buffered_fill_and_peek_buffered_expose_accumulator() {
+        let mut rng = Prng::new(91);
+        let bytes: Vec<u8> = (0..21).map(|_| rng.next_u64() as u8).collect();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.buffered(), 0);
+        r.fill();
+        assert!(r.buffered() >= 57);
+        // the buffered view is exactly what peek() serves
+        let n = 13;
+        assert_eq!(r.peek_buffered() & ((1 << n) - 1), r.peek(n));
+        r.skip(n);
+        assert_eq!(r.buffered(), 64 - n);
+        // drain to the tail: after a fill the accumulator either holds
+        // >= 57 bits or the entire rest of the stream
+        while r.remaining() > 0 {
+            r.fill();
+            // after a fill with bits left, the accumulator is non-empty
+            assert!(r.buffered() >= 57 || r.buffered() as usize == r.remaining());
+            let take = r.buffered().min(9);
+            r.skip(take);
+        }
+        assert_eq!(r.buffered(), 0);
+        assert_eq!(r.peek_buffered(), 0);
     }
 
     #[test]

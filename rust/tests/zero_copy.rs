@@ -1,0 +1,174 @@
+//! Zero-copy read-path equivalence: a memory-mapped archive file must
+//! serve bit-identical section bytes and query responses to the
+//! seek/read [`FileSource`](gbatc::archive::FileSource) and to an
+//! in-memory reader, and the mmap path must be observable in the
+//! metered IO counters (`IoStats::mmap_bytes`).
+
+use std::io::Cursor;
+use std::path::PathBuf;
+
+use gbatc::api::{
+    ArchiveReader, Backend, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesSel,
+};
+use gbatc::store::{ArchiveStore, StoreConfig};
+
+const NT: usize = 4;
+const NS: usize = 58;
+const NY: usize = 5;
+const NX: usize = 4;
+
+/// Compress a small deterministic field through the session API and
+/// return the serialized `GBA2` archive bytes.
+fn archive_bytes() -> Vec<u8> {
+    let field = FieldSpec {
+        nt: NT,
+        ns: NS,
+        ny: NY,
+        nx: NX,
+        pressure: 40.0e5,
+        ranges: vec![(0.0, 1.0); NS],
+    };
+    let mut session = CompressorBuilder::new()
+        .error_policy(ErrorPolicy::Uniform(1e-2))
+        .session(field, Cursor::new(Vec::new()))
+        .expect("session");
+    for t in 0..NT {
+        let frame: Vec<f32> = (0..NS * NY * NX)
+            .map(|i| 0.5 + 0.3 * ((i + t * 31) as f32 * 0.11).sin())
+            .collect();
+        session.push_timestep(&frame).expect("push");
+    }
+    let (_report, sink) = session.finish_into().expect("finish");
+    sink.into_inner()
+}
+
+/// Write `bytes` to a unique temp file and return its path.
+fn temp_archive(bytes: &[u8], tag: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(format!(
+        "gbatc_zero_copy_{}_{}.gba2",
+        tag,
+        std::process::id()
+    ));
+    std::fs::write(&path, bytes).expect("write temp archive");
+    path
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: mismatch at {i}: {x} vs {y}");
+    }
+}
+
+#[cfg(unix)]
+#[test]
+fn mmap_source_reads_bit_identical_to_file_source() {
+    use gbatc::archive::{FileSource, MmapSource, SectionSource};
+
+    let bytes = archive_bytes();
+    let path = temp_archive(&bytes, "raw");
+    let map = MmapSource::open(&path).expect("mmap");
+    let file = FileSource::open(&path).expect("open");
+
+    assert_eq!(map.source_len(), bytes.len() as u64);
+    assert_eq!(map.source_len(), file.source_len());
+
+    let n = bytes.len();
+    let windows: [(u64, usize); 5] = [
+        (0, 4),             // magic
+        (0, n),             // whole file
+        (n as u64 - 7, 7),  // tail
+        (13, n / 2),        // interior
+        (5, 0),             // empty read
+    ];
+    for (off, len) in windows {
+        let a = map.read_at(off, len).expect("mmap read");
+        let b = file.read_at(off, len).expect("file read");
+        assert_eq!(a, b, "read_at({off}, {len}) differs between mmap and file");
+        assert_eq!(a, bytes[off as usize..off as usize + len]);
+    }
+    // both sources reject out-of-range spans
+    assert!(map.read_at(n as u64 - 1, 2).is_err());
+    assert!(file.read_at(n as u64 - 1, 2).is_err());
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn file_reader_queries_match_in_memory_reader() {
+    let bytes = archive_bytes();
+    let path = temp_archive(&bytes, "reader");
+
+    let on_disk = ArchiveReader::open_file(&path, &Backend::Reference, 0).expect("open_file");
+    let in_mem = ArchiveReader::from_bytes(bytes, &Backend::Reference, 0).expect("from_bytes");
+
+    let queries = [
+        Query::all(NT),
+        Query::window(1..3),
+        Query {
+            time: 0..2,
+            species: SpeciesSel::Indices(vec![0, 7, 31]),
+        },
+    ];
+    for q in &queries {
+        let a = on_disk.query(q).expect("disk query");
+        let b = in_mem.query(q).expect("mem query");
+        assert_eq!(a.species, b.species);
+        assert_bits_eq(&a.mass, &b.mass, "file-backed vs in-memory query");
+    }
+
+    // on unix the GBA2 file is memory-mapped, and every byte the queries
+    // read is served by the mapping (visible in the classified counters);
+    // only the out-of-band 4-byte magic probe at open bypasses it
+    let io = on_disk.io_stats();
+    if cfg!(unix) {
+        assert!(io.mmap_bytes > 0, "mmap counters must move: {io}");
+        assert_eq!(io.mmap_bytes, io.bytes() - 4, "all but the magic probe mmap-served: {io}");
+        assert_eq!(io.mmap_reads, io.reads() - 1, "all but the magic probe mmap-served: {io}");
+    } else {
+        assert_eq!(io.mmap_bytes, 0);
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn store_mounted_file_queries_match_mounted_bytes() {
+    let bytes = archive_bytes();
+    let path = temp_archive(&bytes, "store");
+
+    let store = ArchiveStore::new(StoreConfig::default()).expect("store");
+    store.mount_file("disk", &path).expect("mount_file");
+    store.mount_bytes("mem", bytes).expect("mount_bytes");
+
+    let q = Query {
+        time: 0..NT,
+        species: SpeciesSel::Indices(vec![2, 3, 40]),
+    };
+    let cold_disk = store.query("disk", &q).expect("disk query");
+    let cold_mem = store.query("mem", &q).expect("mem query");
+    assert_bits_eq(&cold_disk.mass, &cold_mem.mass, "mounted file vs mounted bytes");
+
+    // warm repeat: decode totals must not move, and the response stays
+    // bit-identical (planes came back as shared cache Arcs)
+    let decoded_before = store.stats().decoded_sections;
+    let warm_disk = store.query("disk", &q).expect("warm disk query");
+    assert_bits_eq(&warm_disk.mass, &cold_disk.mass, "warm vs cold mounted file");
+    let stats = store.stats();
+    assert_eq!(
+        stats.decoded_sections, decoded_before,
+        "warm query must decode zero new sections"
+    );
+
+    if cfg!(unix) {
+        let disk_io = stats
+            .datasets
+            .iter()
+            .find(|d| d.name == "disk")
+            .expect("dataset info")
+            .io;
+        assert!(disk_io.mmap_bytes > 0, "mounted file must be mmap-served: {disk_io}");
+    }
+
+    let _ = std::fs::remove_file(&path);
+}
