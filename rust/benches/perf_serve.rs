@@ -1,0 +1,234 @@
+//! Serving-tier load benchmark: a real [`QueryServer`] on loopback under
+//! a skewed hot/cold query mix from many concurrent clients, run twice —
+//! keep-alive (one connection per client) vs connection-per-request —
+//! and reports throughput, latency percentiles, and the store hit rate.
+//! The gated metrics are machine-relative: the keep-alive/close
+//! throughput ratio (same machine, same process, same mix) and the cache
+//! hit rate of the mix, so the gate in `scripts/bench_compare.py` is
+//! meaningful on any runner.  Writes `BENCH_serve.json` (gated against
+//! `BENCH_serve_baseline.json`):
+//!
+//! ```bash
+//! cargo bench --bench perf_serve
+//! GBATC_BENCH_PROFILE=small GBATC_BENCH_OUT=out.json cargo bench --bench perf_serve
+//! ```
+
+use std::sync::Arc;
+
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::{generate, Profile};
+use gbatc::runtime::{ExecService, RuntimeSpec};
+use gbatc::serve::{QueryClient, QueryServer, ServerConfig};
+use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::util::Timer;
+
+/// One request of the mix: a `/query` window + species list.
+#[derive(Clone)]
+struct Req {
+    t0: usize,
+    t1: usize,
+    species: String,
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let profile = std::env::var("GBATC_BENCH_PROFILE")
+        .ok()
+        .and_then(|p| Profile::parse(&p))
+        .unwrap_or(Profile::Tiny);
+    let clients: usize = std::env::var("GBATC_SERVE_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let reps: usize = std::env::var("GBATC_REPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3);
+    let out_path =
+        std::env::var("GBATC_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+
+    eprintln!("[bench] generating {profile:?} dataset...");
+    let ds = generate(profile, 55);
+    let service = ExecService::start_reference(RuntimeSpec::reference_default(), 4)
+        .expect("reference service");
+    let handle = service.handle();
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        ..Default::default()
+    };
+    let t = Timer::start();
+    let report = comp.compress(&ds, &opts).expect("compress");
+    let bytes = report.archive.into_bytes();
+    eprintln!(
+        "[bench] compressed {}x{}x{}x{} ({} B) in {:.1}s",
+        ds.nt,
+        ds.ns,
+        ds.ny,
+        ds.nx,
+        bytes.len(),
+        t.secs()
+    );
+
+    let store = Arc::new(ArchiveStore::with_handle(
+        &handle,
+        StoreConfig {
+            threads: 2,
+            cache_bytes: 512 << 20,
+            cache_shards: 16,
+            ..StoreConfig::default()
+        },
+    ));
+    store.mount_bytes("bench", bytes).expect("mount");
+    let server = QueryServer::bind(
+        Arc::clone(&store),
+        "127.0.0.1:0",
+        ServerConfig {
+            workers: 4,
+            queue: 256,
+            max_conns: 4 * clients + 16,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("bind");
+    let addr = server.addr().to_string();
+    eprintln!(
+        "[bench] serving on {addr} ({})",
+        if server.event_driven() {
+            "epoll event loop"
+        } else {
+            "thread-pool fallback"
+        }
+    );
+
+    // skewed hot/cold mix: 80% of requests replay one hot window (warm
+    // after its first decode), 20% walk cold windows across the axis
+    let w = 4usize.min(ds.nt);
+    let hot = Req {
+        t0: 0,
+        t1: w,
+        species: format!("{}", ds.ns / 2),
+    };
+    let mut cold: Vec<Req> = Vec::new();
+    for t0 in (0..ds.nt).step_by(w) {
+        cold.push(Req {
+            t0,
+            t1: (t0 + w).min(ds.nt),
+            species: format!("0,{}", ds.ns - 1),
+        });
+    }
+    let per_client = (reps.max(1) * 5 * cold.len()).clamp(20, 400);
+    let mix: Vec<Req> = (0..per_client)
+        .map(|i| {
+            if i % 5 == 0 {
+                cold[(i / 5) % cold.len()].clone()
+            } else {
+                hot.clone()
+            }
+        })
+        .collect();
+
+    // warm every distinct window once so both phases measure the same
+    // steady-state warm/cold profile
+    {
+        let c = QueryClient::new(addr.clone());
+        c.query("bench", Some(hot.t0), Some(hot.t1), &hot.species)
+            .expect("warmup hot");
+        for r in &cold {
+            c.query("bench", Some(r.t0), Some(r.t1), &r.species)
+                .expect("warmup cold");
+        }
+    }
+
+    // one timed phase: `clients` threads, each running the mix on its
+    // own client; returns (requests/sec, sorted per-request latencies)
+    let run_phase = |reuse: bool| -> (f64, Vec<f64>) {
+        let wall = Timer::start();
+        let mut lat: Vec<f64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    let addr = addr.clone();
+                    let mix = &mix;
+                    scope.spawn(move || {
+                        let client = QueryClient::new(addr).reuse(reuse);
+                        let mut lat = Vec::with_capacity(mix.len());
+                        for r in mix {
+                            let t = Timer::start();
+                            let dec = client
+                                .query("bench", Some(r.t0), Some(r.t1), &r.species)
+                                .expect("bench query");
+                            lat.push(t.secs() * 1e3);
+                            assert!(!dec.mass.is_empty());
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("client thread"))
+                .collect()
+        });
+        let secs = wall.secs();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ((clients * per_client) as f64 / secs.max(1e-9), lat)
+    };
+
+    println!(
+        "== perf_serve ({}x{}x{}x{}, {clients} clients x {per_client} reqs, 80/20 hot/cold)",
+        ds.nt, ds.ns, ds.ny, ds.nx
+    );
+
+    let (close_rps, close_lat) = run_phase(false);
+    let (ka_rps, ka_lat) = run_phase(true);
+    let speedup = ka_rps / close_rps.max(1e-9);
+
+    let stats = store.stats();
+    let hit_rate = stats.cache.hit_rate();
+    let st = server.shutdown();
+    assert_eq!(st.io_errors, 0, "clean load must not count io errors: {st}");
+    assert_eq!(st.server_errors, 0, "{st}");
+
+    let report_phase = |tag: &str, rps: f64, lat: &[f64]| {
+        println!(
+            "{tag:<10} {rps:>9.0} req/s | p50 {:>7.3} ms  p95 {:>7.3} ms  p99 {:>7.3} ms",
+            percentile(lat, 0.50),
+            percentile(lat, 0.95),
+            percentile(lat, 0.99)
+        );
+    };
+    report_phase("close", close_rps, &close_lat);
+    report_phase("keep-alive", ka_rps, &ka_lat);
+    println!(
+        "keep-alive/close speedup {speedup:.2}x | hit rate {:.1}% | {st}",
+        100.0 * hit_rate
+    );
+
+    // hand-rolled JSON (no serde in the offline image)
+    let json = format!(
+        "[\n  {{\"kernel\": \"serve_keepalive\", \"close_rps\": {:.1}, \
+         \"keepalive_rps\": {:.1}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \
+         \"p99_ms\": {:.4}, \"speedup\": {:.3}}},\n  \
+         {{\"kernel\": \"serve_hit_rate\", \"hit_rate\": {:.4}, \
+         \"keepalive_reuse\": {}, \"pipelined\": {}}}\n]\n",
+        close_rps,
+        ka_rps,
+        percentile(&ka_lat, 0.50),
+        percentile(&ka_lat, 0.95),
+        percentile(&ka_lat, 0.99),
+        speedup,
+        hit_rate,
+        st.keepalive_reuse,
+        st.pipelined
+    );
+    std::fs::write(&out_path, &json).expect("write bench json");
+    println!("wrote {out_path}");
+}

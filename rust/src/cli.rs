@@ -122,24 +122,29 @@ COMMANDS:
               how the bytes were served: zero-copy mmap vs buffered
               read(2).
   serve       --mount NAME=PATH[,NAME=PATH...] [--listen 127.0.0.1:7070]
-              [--workers 4] [--queue 64] [--cache-mb 256]
-              [--max-response-mb 256] [--threads N]
+              [--workers 4] [--queue 64] [--replicas 1] [--max-conns 1024]
+              [--cache-mb 256] [--max-response-mb 256] [--threads N]
               [--artifacts DIR | --reference]
               Mount archives under named dataset keys and serve them over
-              HTTP/1.1 (gbatc::store + gbatc::serve): a fixed worker pool
-              with a bounded request queue executes typed queries through
-              a sharded LRU cache of decoded (shard, species) planes —
-              warm queries decode nothing and read no archive bytes, and
-              responses are bit-identical to a local decode.  Endpoints:
-              GET /datasets (catalog), GET /query?dataset=..&t0=..&t1=..
-              &species=.. (binary f32 body + X-Gbatc-Meta JSON header),
-              GET /stats (cache/decode/IO/server counters).
+              HTTP/1.1 (gbatc::store + gbatc::serve).  On Linux an epoll
+              event loop handles keep-alive + pipelined connections with
+              admission control (connection cap, bounded decode queue,
+              idle reaping); elsewhere (or with GBATC_NO_EPOLL=1) a
+              thread pool speaks the same protocol.  --replicas N
+              consistent-hashes datasets across N in-process store
+              replicas (warm-cache affinity).  Warm queries decode
+              nothing and read no archive bytes, and responses are
+              bit-identical to a local decode.  Endpoints: GET /datasets
+              (catalog), GET /query?dataset=..&t0=..&t1=..&species=..
+              (binary f32 body + X-Gbatc-Meta JSON header), GET /stats
+              (cache/decode/IO/server/event-loop/replica counters).
   query       DATASET [--server 127.0.0.1:7070] [--t0 N] [--t1 N]
               [--species NAME|INDEX[,...]] [--output <sdf>]
               Remote partial decode against a running `gbatc serve`:
-              fetches the window/species subset over HTTP and optionally
-              writes it as an SDF1 dataset.  Defaults to the full time
-              axis and all species.
+              fetches the window/species subset over HTTP keep-alive
+              (one reused connection) and optionally writes it as an
+              SDF1 dataset.  Defaults to the full time axis and all
+              species.
   sz          --input <sdf> --output <szf> [--nrmse 1e-3]
               [--mode auto|lorenzo|interp] [--eb-scale 1.0]
               SZ baseline compression.

@@ -74,23 +74,32 @@
 //!   LRU cache of decoded (shard, species) planes (per-shard locking, no
 //!   global mutex on the hot path; cached and uncached reads are
 //!   bit-identical), and [`serve::QueryServer`] exposes it over a
-//!   dependency-free `std::net` HTTP/1.1 thread-pool:
+//!   dependency-free `std::net` HTTP/1.1 stack — an epoll event loop on
+//!   Linux (keep-alive, pipelining, fairness, admission control), a
+//!   thread pool speaking the identical protocol elsewhere:
 //!
 //!   ```text
-//!   clients ──► TcpListener ──► bounded queue ──► worker pool
-//!                 (503 on overflow)                │ GET /datasets
-//!                                                  │ GET /query?dataset=..
-//!                                                  │     &t0=..&t1=..&species=..
-//!                                                  │ GET /stats
-//!                                                  ▼
-//!                 ArchiveStore ── SectionCache (sharded LRU) ── miss?
+//!   keep-alive clients ──► epoll reactor (1 thread, nonblocking conns)
+//!     (pipelined GETs)      │ HttpParser: incremental framing
+//!                           │ admission: conn cap ► 503, byte-metered
+//!                           │   read buffers, per-conn in-flight cap,
+//!                           │   idle reap; round-robin readiness
+//!                           ├── warm + small ──► answered inline
+//!                           └── cold /query ──► bounded job queue
+//!                                (503 on overflow)  ──► decode workers
+//!                           ▼  in-order per-conn response queue
+//!               QueryRouter ── consistent-hash ring (vnodes) ──►
+//!                      │        dataset → home replica (affinity,
+//!                      │        mount failover to ring sibling)
+//!               ArchiveStore replica ── SectionCache (sharded LRU) ── miss?
 //!                      │               hit: zero decode, zero IO   │
 //!                      └── mounted GBA1/GBA2 archives ◄── decode one
 //!                          (TOC parsed once, IO metered)   shard's planes
 //!   ```
 //!
-//!   `serve::QueryClient` is the matching blocking client (`gbatc serve`
-//!   / `gbatc query` front both).  GBA2 archives opened from a path are
+//!   `serve::QueryClient` is the matching blocking keep-alive client
+//!   (`gbatc serve` / `gbatc query` front both).  GBA2 archives opened
+//!   from a path are
 //!   mmap-backed ([`archive::MmapSource`], `FileSource` fallback), cache
 //!   planes are `Arc<[f32]>` (a warm hit is a refcount bump, zero bytes
 //!   copied), and shard decode workspaces are arena-reused across shards.

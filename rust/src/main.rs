@@ -15,8 +15,8 @@ use gbatc::compressor::{CodecChoice, SzArchive, SzCompressOptions, SzCompressor}
 use gbatc::data::{self, io, Profile};
 use gbatc::error::{Error, Result};
 use gbatc::metrics;
-use gbatc::serve::{QueryClient, QueryServer, ServerConfig};
-use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::serve::{QueryClient, QueryRouter, QueryServer, RouterConfig, ServerConfig};
+use gbatc::store::StoreConfig;
 use gbatc::sz::codec::SzMode;
 
 fn main() {
@@ -319,16 +319,16 @@ fn cmd_extract(args: &Args) -> Result<()> {
 }
 
 /// Mount `NAME=PATH[,NAME=PATH...]` archives into a store.
-fn mount_all(store: &ArchiveStore, list: &str) -> Result<()> {
+fn mount_all(router: &QueryRouter, list: &str) -> Result<()> {
     for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty()) {
         let (name, path) = tok.split_once('=').ok_or_else(|| {
             Error::config(format!("--mount entry `{tok}` is not NAME=PATH"))
         })?;
-        store.mount_file(name.trim(), path.trim())?;
-        let info = store.dataset_info(name.trim())?;
+        let replica = router.mount_file(name.trim(), path.trim())?;
+        let info = router.dataset_info(name.trim())?;
         let (nt, ns, ny, nx) = info.dims;
         println!(
-            "mounted {:<16} {nt}x{ns}x{ny}x{nx} ({} shards, {} B, NRMSE {:.1e}) <- {}",
+            "mounted {:<16} {nt}x{ns}x{ny}x{nx} ({} shards, {} B, NRMSE {:.1e}, replica {replica}) <- {}",
             name.trim(),
             info.n_shards,
             info.archive_bytes,
@@ -342,27 +342,40 @@ fn mount_all(store: &ArchiveStore, list: &str) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let listen = args.get_or("listen", "127.0.0.1:7070");
     let mounts = args.require("mount")?;
-    let store = Arc::new(ArchiveStore::new(StoreConfig {
+    let store_cfg = StoreConfig {
         backend: backend(args),
         threads: args.get_parse("threads", 0)?,
         cache_bytes: args.get_parse::<usize>("cache-mb", 256)? << 20,
         cache_shards: 16,
+    };
+    let replicas: usize = args.get_parse("replicas", 1)?;
+    let router = Arc::new(QueryRouter::new(RouterConfig {
+        replicas: replicas.max(1),
+        store: store_cfg,
+        ..RouterConfig::default()
     })?);
-    mount_all(&store, mounts)?;
-    let server = QueryServer::bind(
-        Arc::clone(&store),
+    mount_all(&router, mounts)?;
+    let server = QueryServer::bind_router(
+        Arc::clone(&router),
         listen,
         ServerConfig {
             workers: args.get_parse("workers", 4)?,
             queue: args.get_parse("queue", 64)?,
             max_response_bytes: args.get_parse::<usize>("max-response-mb", 256)? << 20,
+            max_conns: args.get_parse("max-conns", 1024)?,
             ..ServerConfig::default()
         },
     )?;
     println!(
-        "serving {} dataset(s) on http://{} — GET /datasets, /query, /stats",
-        store.datasets().len(),
-        server.addr()
+        "serving {} dataset(s) on http://{} ({} loop, {} replica(s)) — GET /datasets, /query, /stats",
+        router.datasets().len(),
+        server.addr(),
+        if server.event_driven() {
+            "epoll event"
+        } else {
+            "thread-pool"
+        },
+        router.replica_count()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

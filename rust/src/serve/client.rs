@@ -1,22 +1,52 @@
 //! Blocking query client — the consumer half of the wire protocol, used
 //! by `gbatc query` and the loopback tests.
 //!
-//! One request per TCP connection (`Connection: close`), so the client
-//! is trivially thread-safe: share one [`QueryClient`] across threads
-//! and call it concurrently.
+//! The client speaks HTTP/1.1 keep-alive: one TCP connection is cached
+//! and reused across requests (requests run in lockstep — write, then
+//! read the full response — so reuse is always safe).  The connection is
+//! dropped when the server answers `Connection: close`, and a request
+//! that fails on a cached socket is retried exactly once on a fresh
+//! connection (the server may have reaped the idle socket between
+//! requests — that is normal keep-alive behavior, not an error).
+//!
+//! [`QueryClient::connections_opened`] counts the physical TCP connects,
+//! so tests can assert that N sequential queries used exactly one
+//! connection.  Cloning a client clones the address and timeout but
+//! **not** the cached socket or the counter — each clone owns its own
+//! connection, which keeps concurrent use trivially correct.
 
 use std::io::Write;
 use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::serve::http::{self, HttpResponse};
 
-/// A blocking client for one server address.
-#[derive(Clone, Debug)]
+/// A blocking keep-alive client for one server address.
+#[derive(Debug)]
 pub struct QueryClient {
     addr: String,
     timeout: Duration,
+    reuse: bool,
+    /// The cached keep-alive connection (lockstep request/response, so
+    /// one at a time; concurrent callers serialize here).
+    sock: Mutex<Option<TcpStream>>,
+    /// Physical TCP connections opened over this client's lifetime.
+    opened: AtomicU64,
+}
+
+impl Clone for QueryClient {
+    fn clone(&self) -> QueryClient {
+        QueryClient {
+            addr: self.addr.clone(),
+            timeout: self.timeout,
+            reuse: self.reuse,
+            sock: Mutex::new(None),
+            opened: AtomicU64::new(0),
+        }
+    }
 }
 
 /// A decoded `/query` response.
@@ -47,6 +77,9 @@ impl QueryClient {
         QueryClient {
             addr: addr.into(),
             timeout: Duration::from_secs(30),
+            reuse: true,
+            sock: Mutex::new(None),
+            opened: AtomicU64::new(0),
         }
     }
 
@@ -54,6 +87,18 @@ impl QueryClient {
     pub fn timeout(mut self, timeout: Duration) -> QueryClient {
         self.timeout = timeout;
         self
+    }
+
+    /// Disable keep-alive reuse: every request opens a fresh connection
+    /// and sends `Connection: close` (the pre-keep-alive behavior).
+    pub fn reuse(mut self, reuse: bool) -> QueryClient {
+        self.reuse = reuse;
+        self
+    }
+
+    /// Physical TCP connections this client has opened so far.
+    pub fn connections_opened(&self) -> u64 {
+        self.opened.load(Ordering::Relaxed)
     }
 
     /// Connect with the configured timeout (not the OS default, which
@@ -66,7 +111,13 @@ impl QueryClient {
         let mut last: Option<std::io::Error> = None;
         for a in addrs {
             match TcpStream::connect_timeout(&a, self.timeout) {
-                Ok(s) => return Ok(s),
+                Ok(s) => {
+                    self.opened.fetch_add(1, Ordering::Relaxed);
+                    let _ = s.set_nodelay(true);
+                    let _ = s.set_read_timeout(Some(self.timeout));
+                    let _ = s.set_write_timeout(Some(self.timeout));
+                    return Ok(s);
+                }
                 Err(e) => last = Some(e),
             }
         }
@@ -78,18 +129,53 @@ impl QueryClient {
         ))
     }
 
-    fn get(&self, target: &str) -> Result<HttpResponse> {
-        let mut stream = self.connect()?;
-        let _ = stream.set_read_timeout(Some(self.timeout));
-        let _ = stream.set_write_timeout(Some(self.timeout));
+    /// One request/response exchange on `stream`.
+    fn exchange(&self, stream: &mut TcpStream, target: &str) -> Result<HttpResponse> {
+        let connection = if self.reuse { "keep-alive" } else { "close" };
         let req = format!(
-            "GET {target} HTTP/1.1\r\nHost: {}\r\nConnection: close\r\n\r\n",
+            "GET {target} HTTP/1.1\r\nHost: {}\r\nConnection: {connection}\r\n\r\n",
             self.addr
         );
         stream
             .write_all(req.as_bytes())
             .map_err(|e| Error::io_ctx("sending request", e))?;
-        http::read_response(&mut stream)
+        http::read_response(stream)
+    }
+
+    fn get(&self, target: &str) -> Result<HttpResponse> {
+        if !self.reuse {
+            let mut stream = self.connect()?;
+            return self.exchange(&mut stream, target);
+        }
+        let mut guard = match self.sock.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        // a cached socket may have been reaped server-side while idle;
+        // one failed exchange on a *reused* socket earns one retry on a
+        // fresh connection, after which errors are real
+        let mut fresh = false;
+        let mut stream = match guard.take() {
+            Some(s) => s,
+            None => {
+                fresh = true;
+                self.connect()?
+            }
+        };
+        let resp = match self.exchange(&mut stream, target) {
+            Ok(resp) => resp,
+            Err(e) => {
+                if fresh {
+                    return Err(e);
+                }
+                stream = self.connect()?;
+                self.exchange(&mut stream, target)?
+            }
+        };
+        if !resp.closes_connection() {
+            *guard = Some(stream);
+        }
+        Ok(resp)
     }
 
     fn get_ok(&self, target: &str) -> Result<HttpResponse> {

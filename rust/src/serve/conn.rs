@@ -1,0 +1,282 @@
+//! Non-blocking connection state machine for the event-driven server.
+//!
+//! One [`Conn`] per accepted socket.  It owns the incremental
+//! [`HttpParser`] and an **in-order response queue**: every admitted
+//! request reserves a slot (`begin_request` → sequence id), responses
+//! complete in any order (`complete`), and only the contiguous ready
+//! prefix is ever staged to the socket — pipelined clients get their
+//! responses strictly in request order even when a cold decode for
+//! request 1 finishes after a cache-warm request 2.
+//!
+//! The struct is deliberately platform-neutral (plain nonblocking
+//! `TcpStream` I/O, no epoll types) so its tests run everywhere and the
+//! reactor in `serve::server` stays the only Linux-gated code.
+//!
+//! Backpressure lives here as observable state, policy lives in the
+//! server: [`Conn::write_backlog`] and `HttpParser::buffered` are the
+//! meters; the event loop parks read interest when either passes its
+//! cap and resumes it when [`Conn::flush`] drains.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+use super::http::HttpParser;
+
+/// What a nonblocking read pass produced.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// Bytes were fed to the parser.
+    Data(usize),
+    /// Socket has nothing right now (`EWOULDBLOCK`).
+    WouldBlock,
+    /// Peer sent FIN (or the socket errored terminally).
+    Closed,
+}
+
+/// What a flush pass left behind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteOutcome {
+    /// Everything staged was written; the write buffer is empty.
+    Done,
+    /// A short write hit `EWOULDBLOCK`; re-arm write interest.
+    Blocked,
+}
+
+pub struct Conn {
+    pub stream: TcpStream,
+    pub parser: HttpParser,
+    /// Generation stamped into this slot's epoll token; a stale event
+    /// for a recycled slot fails the generation check and is dropped.
+    pub generation: u32,
+    /// In-order response slots: `None` = response still being computed.
+    queue: VecDeque<Option<Vec<u8>>>,
+    /// Sequence id of `queue.front()`.
+    head_seq: u64,
+    /// Sequence id the next admitted request will get.
+    next_seq: u64,
+    /// Bytes sitting in ready-but-unstaged slots (backlog accounting).
+    ready_bytes: usize,
+    /// Staged output and how much of it already reached the socket.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests admitted whose response slot is still `None`.
+    pub inflight: usize,
+    /// Requests parsed on this connection (keep-alive reuse = all past
+    /// the first).
+    pub requests: u64,
+    /// Stop reading **and parsing**; close once the response queue and
+    /// write buffer drain (`Connection: close`, parse error, shutdown).
+    pub close_after: bool,
+    /// Peer sent FIN (half-close): no more reads, but requests already
+    /// buffered still parse and their responses still get written —
+    /// a pipelining client may legally shut down its write side early.
+    pub peer_eof: bool,
+    /// Last socket activity, for idle reaping.
+    pub last_activity: Instant,
+    /// Interest bits currently registered in the reactor (the server
+    /// diffs desired-vs-registered to skip redundant `epoll_ctl`s).
+    pub reg_read: bool,
+    pub reg_write: bool,
+    /// Parser bytes charged against the server's global read meter.
+    pub metered: usize,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, max_head: usize, generation: u32, now: Instant) -> Conn {
+        Conn {
+            stream,
+            parser: HttpParser::new(max_head),
+            generation,
+            queue: VecDeque::new(),
+            head_seq: 0,
+            next_seq: 0,
+            ready_bytes: 0,
+            wbuf: Vec::new(),
+            wpos: 0,
+            inflight: 0,
+            requests: 0,
+            close_after: false,
+            peer_eof: false,
+            last_activity: now,
+            reg_read: false,
+            reg_write: false,
+            metered: 0,
+        }
+    }
+
+    /// One nonblocking read; bytes go straight into the parser.
+    pub fn read_some(&mut self, scratch: &mut [u8]) -> ReadOutcome {
+        loop {
+            match self.stream.read(scratch) {
+                Ok(0) => return ReadOutcome::Closed,
+                Ok(n) => {
+                    self.parser.feed(&scratch[..n]);
+                    return ReadOutcome::Data(n);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return ReadOutcome::WouldBlock,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return ReadOutcome::Closed,
+            }
+        }
+    }
+
+    /// Admit a parsed request: reserve its in-order response slot and
+    /// return the sequence id its response must complete under.
+    pub fn begin_request(&mut self) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(None);
+        self.inflight += 1;
+        self.requests += 1;
+        seq
+    }
+
+    /// Deliver the serialized response for `seq`.  Tolerates unknown or
+    /// already-filled sequence ids (a worker may complete after the
+    /// connection died and its slot was recycled — the generation check
+    /// in the server makes that a no-op before it ever reaches here).
+    pub fn complete(&mut self, seq: u64, bytes: Vec<u8>) {
+        if seq < self.head_seq {
+            return;
+        }
+        let idx = (seq - self.head_seq) as usize;
+        if let Some(slot) = self.queue.get_mut(idx) {
+            if slot.is_none() {
+                self.ready_bytes += bytes.len();
+                *slot = Some(bytes);
+                self.inflight -= 1;
+            }
+        }
+    }
+
+    /// Move the contiguous ready prefix of the queue into the write
+    /// buffer.  A `None` at the front blocks everything behind it —
+    /// that is exactly the in-order guarantee.
+    fn stage_ready(&mut self) {
+        while let Some(Some(_)) = self.queue.front() {
+            if let Some(Some(bytes)) = self.queue.pop_front() {
+                self.head_seq += 1;
+                self.ready_bytes -= bytes.len();
+                self.wbuf.extend_from_slice(&bytes);
+            }
+        }
+        if self.wpos > 0 && self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        }
+    }
+
+    /// Write as much staged output as the socket accepts.
+    pub fn flush(&mut self) -> Result<WriteOutcome> {
+        self.stage_ready();
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(Error::protocol("peer closed mid-response")),
+                Ok(n) => {
+                    self.wpos += n;
+                    self.stage_ready();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(WriteOutcome::Blocked),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(Error::io_ctx("writing response", e)),
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+        Ok(WriteOutcome::Done)
+    }
+
+    /// Output bytes not yet on the wire (staged + ready-but-unstaged).
+    /// This is the bounded-write-buffer meter: a slow reader's backlog
+    /// grows here and the server parks its read interest at the cap.
+    pub fn write_backlog(&self) -> usize {
+        (self.wbuf.len() - self.wpos) + self.ready_bytes
+    }
+
+    /// Whether any response bytes are waiting for the socket.
+    pub fn wants_write(&self) -> bool {
+        self.wpos < self.wbuf.len() || matches!(self.queue.front(), Some(Some(_)))
+    }
+
+    /// All admitted requests answered and all bytes written — a
+    /// `close_after` connection can now shut down gracefully (FIN after
+    /// the last response, never an RST that races it).
+    pub fn drained(&self) -> bool {
+        self.queue.is_empty() && self.wpos >= self.wbuf.len()
+    }
+
+    pub fn idle_millis(&self, now: Instant) -> u128 {
+        now.duration_since(self.last_activity).as_millis()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let c = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (s, _) = l.accept().unwrap();
+        s.set_nonblocking(true).unwrap();
+        (s, c)
+    }
+
+    #[test]
+    fn out_of_order_completion_writes_in_order() {
+        let (server, mut client) = pair();
+        let mut conn = Conn::new(server, 8 * 1024, 0, Instant::now());
+        let a = conn.begin_request();
+        let b = conn.begin_request();
+        let c = conn.begin_request();
+        assert_eq!(conn.inflight, 3);
+
+        // responses land out of order: c, a, b
+        conn.complete(c, b"CC".to_vec());
+        assert!(!conn.wants_write(), "front slot still pending");
+        conn.complete(a, b"AA".to_vec());
+        assert!(conn.wants_write());
+        assert_eq!(conn.flush().unwrap(), WriteOutcome::Done);
+        conn.complete(b, b"BB".to_vec());
+        assert_eq!(conn.flush().unwrap(), WriteOutcome::Done);
+        assert_eq!(conn.inflight, 0);
+        assert!(conn.drained());
+
+        let mut got = [0u8; 6];
+        client.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"AABBCC");
+    }
+
+    #[test]
+    fn backlog_counts_staged_and_ready_bytes() {
+        let (server, _client) = pair();
+        let mut conn = Conn::new(server, 8 * 1024, 0, Instant::now());
+        let a = conn.begin_request();
+        let b = conn.begin_request();
+        conn.complete(b, vec![0u8; 100]); // ready but blocked behind `a`
+        assert_eq!(conn.write_backlog(), 100);
+        conn.complete(a, vec![0u8; 50]);
+        assert_eq!(conn.write_backlog(), 150);
+        conn.flush().unwrap();
+        assert_eq!(conn.write_backlog(), 0);
+    }
+
+    #[test]
+    fn stale_and_duplicate_completions_are_noops() {
+        let (server, _client) = pair();
+        let mut conn = Conn::new(server, 8 * 1024, 0, Instant::now());
+        let a = conn.begin_request();
+        conn.complete(a, b"X".to_vec());
+        conn.complete(a, b"Y".to_vec()); // duplicate: ignored
+        conn.complete(a + 5, b"Z".to_vec()); // never admitted: ignored
+        conn.flush().unwrap();
+        conn.complete(a, b"W".to_vec()); // already flushed: ignored
+        assert_eq!(conn.inflight, 0);
+        assert!(conn.drained());
+    }
+}

@@ -1,12 +1,18 @@
 //! Minimal HTTP/1.1 framing — just enough protocol for the query server
 //! and its blocking client, with zero dependencies.
 //!
-//! Scope (deliberate): `GET`-only requests, one request per connection
-//! (`Connection: close` everywhere), `Content-Length`-framed bodies, no
-//! percent-decoding (dataset names and species lists are plain tokens —
-//! enforced at mount).  Every malformed input is a typed
-//! [`Error::Protocol`]; every socket failure is a typed
+//! Scope (deliberate): `GET`-only requests, `Content-Length`-framed
+//! bodies, keep-alive and pipelining via [`HttpParser`] (incremental by
+//! construction — bytes may arrive one at a time, split anywhere,
+//! including mid-CRLF), no percent-decoding (dataset names and species
+//! lists are plain tokens — enforced at mount).  Every malformed input
+//! is a typed [`Error::Protocol`]; every socket failure is a typed
 //! [`Error::IoContext`] — nothing on this path panics.
+//!
+//! The same parser feeds both servers: the epoll event loop hands it
+//! whatever a nonblocking `read(2)` returned, the thread-pool fallback
+//! hands it blocking-read chunks, and the dribble tests hand it one
+//! byte at a time — framing never depends on how reads were sized.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -23,7 +29,8 @@ pub const MAX_RESPONSE_HEAD: usize = 64 * 1024;
 /// this shared constant rather than on incidental wording.
 pub const OVERSIZE_MARK: &str = "oversized head:";
 
-/// A parsed request line + query string.
+/// A parsed request line + query string + the little header state the
+/// server acts on.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub method: String,
@@ -31,6 +38,13 @@ pub struct Request {
     pub path: String,
     /// `key=value` pairs of the query string, in order.
     pub params: Vec<(String, String)>,
+    /// Client asked to end the connection after this exchange
+    /// (`Connection: close`, or HTTP/1.0 without `keep-alive`).
+    pub close: bool,
+    /// This request was already buffered when the previous one was
+    /// parsed — i.e. the client pipelined it (no socket read between
+    /// the two yields).  Feeds the server's `pipelined` counter.
+    pub pipelined: bool,
 }
 
 impl Request {
@@ -46,6 +60,235 @@ impl Request {
 /// Byte offset just past the `\r\n\r\n` head terminator, if present.
 fn head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Incremental request framing: feed bytes as they arrive, pull zero or
+/// more complete requests out.  One parser per connection; its buffer
+/// carries pipelined requests and partial heads across reads, and a
+/// declared `Content-Length` body is discarded before the next request
+/// is framed (GET bodies are ignored but must not desync the stream).
+#[derive(Debug)]
+pub struct HttpParser {
+    buf: Vec<u8>,
+    max_head: usize,
+    /// Body bytes of the previous request still to discard.
+    skip: usize,
+    /// Whether `feed` ran since the last yielded request — when it did
+    /// not, the next request was pipelined in the same segment.
+    fed_since_yield: bool,
+}
+
+impl HttpParser {
+    /// A parser rejecting heads over `max_head` bytes.
+    pub fn new(max_head: usize) -> HttpParser {
+        HttpParser {
+            buf: Vec::new(),
+            max_head,
+            skip: 0,
+            fed_since_yield: true,
+        }
+    }
+
+    /// Append freshly read bytes (any split, including mid-CRLF).
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+        self.fed_since_yield = true;
+    }
+
+    /// Bytes currently buffered (the server's read-buffer byte meter).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether a complete, not-yet-parsed request may be sitting in the
+    /// buffer (cheap check used to resume parsing after throttling).
+    pub fn has_buffered_data(&self) -> bool {
+        self.buf.len() > self.skip
+    }
+
+    /// Try to frame the next request out of the buffer.  `Ok(None)`
+    /// means "need more bytes"; errors are fatal to the connection (the
+    /// stream cannot be re-synchronized after a malformed head).
+    pub fn next_request(&mut self) -> Result<Option<Request>> {
+        // discard the previous request's declared body first
+        if self.skip > 0 {
+            let n = self.skip.min(self.buf.len());
+            self.buf.drain(..n);
+            self.skip -= n;
+            if self.skip > 0 {
+                return Ok(None);
+            }
+        }
+        let end = match head_end(&self.buf) {
+            Some(end) => end,
+            None => {
+                if self.buf.len() > self.max_head {
+                    return Err(Error::protocol(format!(
+                        "{OVERSIZE_MARK} request head over {} bytes",
+                        self.max_head
+                    )));
+                }
+                return Ok(None);
+            }
+        };
+        if end > self.max_head {
+            return Err(Error::protocol(format!(
+                "{OVERSIZE_MARK} request head over {} bytes",
+                self.max_head
+            )));
+        }
+        let pipelined = !self.fed_since_yield;
+        let (mut req, body_len) = parse_request_head(&self.buf[..end])?;
+        if body_len > self.max_head {
+            return Err(Error::protocol(format!(
+                "request body of {body_len} bytes on a GET-only endpoint"
+            )));
+        }
+        req.pipelined = pipelined;
+        self.buf.drain(..end);
+        // queue the body discard (may span future reads)
+        self.skip = body_len;
+        let n = self.skip.min(self.buf.len());
+        self.buf.drain(..n);
+        self.skip -= n;
+        self.fed_since_yield = false;
+        Ok(Some(req))
+    }
+}
+
+/// Parse one complete request head (including the blank line).  Returns
+/// the request plus its declared `Content-Length` (0 when absent).
+fn parse_request_head(head_bytes: &[u8]) -> Result<(Request, usize)> {
+    let head = std::str::from_utf8(head_bytes)
+        .map_err(|_| Error::protocol("request head is not UTF-8"))?;
+    let mut lines = head.lines();
+    let line = lines
+        .next()
+        .ok_or_else(|| Error::protocol("empty request"))?;
+    let mut toks = line.split_whitespace();
+    let (method, target, version) = match (toks.next(), toks.next(), toks.next(), toks.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => {
+            return Err(Error::protocol(format!(
+                "malformed request line `{line}`"
+            )))
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(Error::protocol(format!("unsupported version `{version}`")));
+    }
+    if !target.starts_with('/') {
+        return Err(Error::protocol(format!("malformed target `{target}`")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let params = query
+        .split('&')
+        .filter(|kv| !kv.is_empty())
+        .map(|kv| match kv.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (kv.to_string(), String::new()),
+        })
+        .collect();
+
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close
+    let mut close = version == "HTTP/1.0";
+    let mut body_len = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            break;
+        }
+        let Some((k, v)) = line.split_once(':') else {
+            return Err(Error::protocol(format!("malformed header `{line}`")));
+        };
+        let name = k.trim().to_ascii_lowercase();
+        let value = v.trim();
+        match name.as_str() {
+            "connection" => {
+                let value = value.to_ascii_lowercase();
+                if value.contains("close") {
+                    close = true;
+                } else if value.contains("keep-alive") {
+                    close = false;
+                }
+            }
+            "content-length" => {
+                body_len = value.parse().map_err(|e| {
+                    Error::protocol(format!("bad Content-Length `{value}`: {e}"))
+                })?;
+            }
+            _ => {}
+        }
+    }
+    Ok((
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            params,
+            close,
+            pipelined: false,
+        },
+        body_len,
+    ))
+}
+
+/// Standard reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Content Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one complete response (head + body) into a byte buffer —
+/// what the event loop queues on a connection's write side.
+pub fn serialize_response(
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Write one complete response on a blocking stream.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> Result<()> {
+    let bytes = serialize_response(status, content_type, extra_headers, body, keep_alive);
+    let ctx = |e| Error::io_ctx("writing response", e);
+    stream.write_all(&bytes).map_err(ctx)?;
+    stream.flush().map_err(ctx)
 }
 
 /// Read from `stream` until a full head (`\r\n\r\n`) is buffered,
@@ -76,91 +319,6 @@ fn read_head(stream: &mut TcpStream, max_bytes: usize, what: &str) -> Result<(Ve
     }
 }
 
-/// Read and parse one request head.  `max_bytes` bounds the head (GET
-/// requests carry no body we care about).
-pub fn read_request(stream: &mut TcpStream, max_bytes: usize) -> Result<Request> {
-    let (buf, end) = read_head(stream, max_bytes, "request")?;
-    let head = std::str::from_utf8(&buf[..end])
-        .map_err(|_| Error::protocol("request head is not UTF-8"))?;
-    let line = head
-        .lines()
-        .next()
-        .ok_or_else(|| Error::protocol("empty request"))?;
-    let mut toks = line.split_whitespace();
-    let (method, target, version) = match (toks.next(), toks.next(), toks.next(), toks.next()) {
-        (Some(m), Some(t), Some(v), None) => (m, t, v),
-        _ => {
-            return Err(Error::protocol(format!(
-                "malformed request line `{line}`"
-            )))
-        }
-    };
-    if !version.starts_with("HTTP/1.") {
-        return Err(Error::protocol(format!("unsupported version `{version}`")));
-    }
-    if !target.starts_with('/') {
-        return Err(Error::protocol(format!("malformed target `{target}`")));
-    }
-    let (path, query) = match target.split_once('?') {
-        Some((p, q)) => (p, q),
-        None => (target, ""),
-    };
-    let params = query
-        .split('&')
-        .filter(|kv| !kv.is_empty())
-        .map(|kv| match kv.split_once('=') {
-            Some((k, v)) => (k.to_string(), v.to_string()),
-            None => (kv.to_string(), String::new()),
-        })
-        .collect();
-    Ok(Request {
-        method: method.to_string(),
-        path: path.to_string(),
-        params,
-    })
-}
-
-/// Standard reason phrase for the statuses this server emits.
-pub fn reason(status: u16) -> &'static str {
-    match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        413 => "Content Too Large",
-        431 => "Request Header Fields Too Large",
-        500 => "Internal Server Error",
-        503 => "Service Unavailable",
-        _ => "Unknown",
-    }
-}
-
-/// Write one complete `Connection: close` response.
-pub fn write_response(
-    stream: &mut TcpStream,
-    status: u16,
-    content_type: &str,
-    extra_headers: &[(&str, &str)],
-    body: &[u8],
-) -> Result<()> {
-    let mut head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n",
-        reason(status),
-        body.len()
-    );
-    for (k, v) in extra_headers {
-        head.push_str(k);
-        head.push_str(": ");
-        head.push_str(v);
-        head.push_str("\r\n");
-    }
-    head.push_str("\r\n");
-    let ctx = |e| Error::io_ctx("writing response", e);
-    stream.write_all(head.as_bytes()).map_err(ctx)?;
-    stream.write_all(body).map_err(ctx)?;
-    stream.flush().map_err(ctx)
-}
-
 /// A complete response as the blocking client reads it.
 #[derive(Clone, Debug)]
 pub struct HttpResponse {
@@ -179,9 +337,20 @@ impl HttpResponse {
             .find(|(k, _)| *k == name)
             .map(|(_, v)| v.as_str())
     }
+
+    /// Whether the server will close the connection after this response
+    /// (the client must not reuse its socket).
+    pub fn closes_connection(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.to_ascii_lowercase().contains("close"))
+            .unwrap_or(false)
+    }
 }
 
-/// Read one `Content-Length`-framed response off `stream`.
+/// Read one `Content-Length`-framed response off `stream`.  Reads
+/// exactly one response's bytes: the client drives requests in
+/// lockstep, so nothing past the body can be in flight yet and the
+/// stream stays aligned for keep-alive reuse.
 pub fn read_response(stream: &mut TcpStream) -> Result<HttpResponse> {
     let (buf, end) = read_head(stream, MAX_RESPONSE_HEAD, "response")?;
     let head = std::str::from_utf8(&buf[..end])
@@ -341,5 +510,100 @@ mod tests {
     fn head_end_detection() {
         assert_eq!(head_end(b"GET / HTTP/1.1\r\n\r\nBODY"), Some(18));
         assert_eq!(head_end(b"partial\r\n"), None);
+    }
+
+    #[test]
+    fn parser_one_byte_dribble_with_split_crlfs() {
+        // the framing bug this guards: a head arriving one byte at a
+        // time — every CRLF split across feeds — must still parse
+        let raw = b"GET /query?dataset=d&t0=1 HTTP/1.1\r\nHost: x\r\nConnection: keep-alive\r\n\r\n";
+        let mut p = HttpParser::new(8 * 1024);
+        for (i, b) in raw.iter().enumerate() {
+            p.feed(&[*b]);
+            let got = p.next_request().unwrap();
+            if i + 1 < raw.len() {
+                assert!(got.is_none(), "yielded early at byte {i}");
+            } else {
+                let req = got.expect("full head must parse");
+                assert_eq!(req.method, "GET");
+                assert_eq!(req.path, "/query");
+                assert_eq!(req.param("dataset"), Some("d"));
+                assert_eq!(req.param("t0"), Some("1"));
+                assert!(!req.close);
+                assert!(!req.pipelined);
+            }
+        }
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn parser_pipelined_requests_in_one_segment() {
+        let mut p = HttpParser::new(8 * 1024);
+        let mut seg = Vec::new();
+        for i in 0..3 {
+            seg.extend_from_slice(format!("GET /r{i} HTTP/1.1\r\n\r\n").as_bytes());
+        }
+        p.feed(&seg);
+        for i in 0..3 {
+            let req = p.next_request().unwrap().expect("buffered request");
+            assert_eq!(req.path, format!("/r{i}"));
+            assert_eq!(req.pipelined, i > 0, "request {i}");
+        }
+        assert!(p.next_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn parser_discards_declared_bodies_between_requests() {
+        let mut p = HttpParser::new(8 * 1024);
+        p.feed(b"GET /a HTTP/1.1\r\nContent-Length: 5\r\n\r\nBOD");
+        let req = p.next_request().unwrap().expect("first request");
+        assert_eq!(req.path, "/a");
+        // body incomplete: no next request yet
+        assert!(p.next_request().unwrap().is_none());
+        p.feed(b"Y!GET /b HTTP/1.1\r\n\r\n");
+        let req = p.next_request().unwrap().expect("second request");
+        assert_eq!(req.path, "/b");
+    }
+
+    #[test]
+    fn parser_connection_and_version_semantics() {
+        let mut p = HttpParser::new(8 * 1024);
+        p.feed(b"GET /a HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(p.next_request().unwrap().unwrap().close);
+        p.feed(b"GET /b HTTP/1.0\r\n\r\n");
+        assert!(p.next_request().unwrap().unwrap().close, "1.0 defaults to close");
+        p.feed(b"GET /c HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(!p.next_request().unwrap().unwrap().close);
+        p.feed(b"GET /d HTTP/1.1\r\n\r\n");
+        assert!(!p.next_request().unwrap().unwrap().close, "1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parser_rejects_oversized_and_malformed() {
+        let mut p = HttpParser::new(64);
+        p.feed(&vec![b'x'; 100]);
+        let err = p.next_request().unwrap_err().to_string();
+        assert!(err.contains("oversized"), "{err}");
+
+        let mut p = HttpParser::new(8 * 1024);
+        p.feed(b"NONSENSE\r\n\r\n");
+        assert!(p.next_request().is_err());
+
+        let mut p = HttpParser::new(8 * 1024);
+        p.feed(b"GET /a HTTP/1.1\r\nContent-Length: nope\r\n\r\n");
+        assert!(p.next_request().is_err());
+    }
+
+    #[test]
+    fn serialize_response_frames_both_modes() {
+        let ka = serialize_response(200, "application/json", &[("X-K", "v")], b"{}", true);
+        let s = String::from_utf8(ka).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Connection: keep-alive\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 2\r\n"), "{s}");
+        assert!(s.contains("X-K: v\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\n{}"), "{s}");
+        let cl = serialize_response(400, "application/json", &[], b"", false);
+        assert!(String::from_utf8(cl).unwrap().contains("Connection: close\r\n"));
     }
 }

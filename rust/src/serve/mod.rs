@@ -1,17 +1,29 @@
 //! Network query serving — the wire on top of [`crate::store`].
 //!
-//! A dependency-free `std::net` HTTP/1.1 stack in three parts:
+//! A dependency-free `std::net` HTTP/1.1 stack:
 //!
-//! * [`http`] — minimal framing (GET-only requests, `Content-Length`
-//!   bodies, `Connection: close`) plus the hand-rolled JSON helpers the
-//!   offline image needs.
-//! * [`server`] — [`QueryServer`]: a fixed thread-pool over a
-//!   `TcpListener` with a bounded request queue (overflow answers `503`),
-//!   graceful shutdown, and per-outcome counters.  Endpoints:
-//!   `GET /datasets`, `GET /query?dataset=..&t0=..&t1=..&species=..`
-//!   (binary f32 body + `X-Gbatc-Meta` JSON header), `GET /stats`.
-//! * [`client`] — [`QueryClient`]: the small blocking client behind
-//!   `gbatc query` and the loopback tests; responses decode to
+//! * [`http`] — incremental framing ([`http::HttpParser`]: GET-only
+//!   requests, `Connection` semantics, pipelining-safe head/body
+//!   splitting) plus the hand-rolled JSON helpers the offline image
+//!   needs.
+//! * [`reactor`] — a hand-rolled `epoll(7)` + `eventfd(2)` readiness
+//!   layer (Linux; typed errors elsewhere so the server falls back to
+//!   its thread pool).
+//! * [`conn`] — the per-connection state machine: nonblocking reads
+//!   into the parser, an in-order response queue for pipelined
+//!   requests, and backlog meters the server's backpressure policy
+//!   reads.
+//! * [`router`] — [`QueryRouter`]: consistent-hash placement of dataset
+//!   keys across N in-process store replicas, with warm-cache affinity
+//!   and mount failover.
+//! * [`server`] — [`QueryServer`]: an event-driven loop (keep-alive,
+//!   pipelining, fairness, admission control) with a decode worker
+//!   pool; off Linux it degrades to a blocking thread pool speaking
+//!   the identical protocol.  Endpoints: `GET /datasets`,
+//!   `GET /query?dataset=..&t0=..&t1=..&species=..` (binary f32 body +
+//!   `X-Gbatc-Meta` JSON header), `GET /stats`.
+//! * [`client`] — [`QueryClient`]: the small blocking keep-alive client
+//!   behind `gbatc query` and the loopback tests; responses decode to
 //!   [`ClientDecode`] with bytes bit-identical to a local
 //!   [`ArchiveReader`](crate::api::ArchiveReader) query.
 //!
@@ -19,11 +31,15 @@
 //! oversized requests, and client disconnects surface as
 //! [`Error::Protocol`](crate::Error::Protocol) /
 //! [`Error::IoContext`](crate::Error::IoContext) and map to HTTP
-//! statuses — a worker thread never panics.
+//! statuses — neither the reactor thread nor a worker ever panics.
 
 pub mod client;
+pub mod conn;
 pub mod http;
+pub mod reactor;
+pub mod router;
 pub mod server;
 
 pub use client::{ClientDecode, QueryClient};
+pub use router::{QueryRouter, RouterConfig};
 pub use server::{QueryServer, ServeStats, ServerConfig};

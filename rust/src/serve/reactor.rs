@@ -1,0 +1,387 @@
+//! Readiness reactor — a hand-rolled `epoll(7)` wrapper plus an
+//! `eventfd(2)` waker, raw `extern "C"` declarations only (the crate
+//! stays dependency-free, same policy as `archive::mmap`).
+//!
+//! Linux-only by design: `epoll` has no portable twin in `std`, so off
+//! Linux [`Reactor::new`] returns a typed error and the server falls
+//! back to the blocking thread-pool implementation (the same
+//! typed-fallback shape `MmapSource` uses).  `GBATC_NO_EPOLL=1` forces
+//! that fallback on Linux too, which is how CI keeps both servers green.
+//!
+//! The reactor is **level-triggered**: the event loop must either drain
+//! a ready fd or drop the interest bit (see `serve::conn` — read
+//! interest is parked while a connection is throttled), otherwise
+//! `wait` would spin.  Tokens are caller-chosen `u64`s carried in
+//! `epoll_event.data`; the connection table pairs a slot index with a
+//! generation counter so a stale event harvested in the same batch as a
+//! close can never touch a recycled slot.
+
+use crate::error::{Error, Result};
+
+/// One readiness notification out of [`Reactor::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token registered with the fd.
+    pub token: u64,
+    /// Readable (or a pending accept on a listener).
+    pub readable: bool,
+    /// Writable again after a short write.
+    pub writable: bool,
+    /// Peer hung up or the fd errored — the connection is done.
+    pub hangup: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_DEL: c_int = 2;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
+
+    /// `struct epoll_event`: packed on x86_64 only (kernel ABI).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn eventfd(initval: u32, flags: c_int) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// The epoll instance.  `fd`s are raw (`i32`) so callers pass
+/// `AsRawFd::as_raw_fd()` without this module needing platform traits.
+pub struct Reactor {
+    #[cfg(target_os = "linux")]
+    epfd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl Reactor {
+    /// Create an epoll instance (`EPOLL_CLOEXEC`).
+    pub fn new() -> Result<Reactor> {
+        // SAFETY: plain syscall wrapper, no pointers involved.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(Error::io_ctx(
+                "epoll_create1",
+                std::io::Error::last_os_error(),
+            ));
+        }
+        Ok(Reactor { epfd })
+    }
+
+    fn mask(readable: bool, writable: bool) -> u32 {
+        let mut m = sys::EPOLLRDHUP; // always learn about peer shutdown
+        if readable {
+            m |= sys::EPOLLIN;
+        }
+        if writable {
+            m |= sys::EPOLLOUT;
+        }
+        m
+    }
+
+    fn ctl(&self, op: i32, fd: i32, events: u32, token: u64, what: &str) -> Result<()> {
+        let mut ev = sys::EpollEvent {
+            events,
+            data: token,
+        };
+        // SAFETY: `ev` outlives the call; the kernel copies it.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(Error::io_ctx(
+                format!("epoll_ctl {what}"),
+                std::io::Error::last_os_error(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Register `fd` under `token` with the given interest set.
+    pub fn add(&self, fd: i32, token: u64, readable: bool, writable: bool) -> Result<()> {
+        self.ctl(
+            sys::EPOLL_CTL_ADD,
+            fd,
+            Self::mask(readable, writable),
+            token,
+            "add",
+        )
+    }
+
+    /// Change the interest set of a registered `fd`.
+    pub fn modify(&self, fd: i32, token: u64, readable: bool, writable: bool) -> Result<()> {
+        self.ctl(
+            sys::EPOLL_CTL_MOD,
+            fd,
+            Self::mask(readable, writable),
+            token,
+            "mod",
+        )
+    }
+
+    /// Deregister `fd` (also implicit when the fd closes).
+    pub fn del(&self, fd: i32) -> Result<()> {
+        self.ctl(sys::EPOLL_CTL_DEL, fd, 0, 0, "del")
+    }
+
+    /// Block up to `timeout_ms` (-1 = forever) and append ready events to
+    /// `out`.  Returns how many arrived; `EINTR` reports zero events.
+    pub fn wait(&self, out: &mut Vec<Event>, timeout_ms: i32) -> Result<usize> {
+        let mut buf = [sys::EpollEvent { events: 0, data: 0 }; 128];
+        // SAFETY: buf is a live array of `maxevents` entries.
+        let n = unsafe {
+            sys::epoll_wait(self.epfd, buf.as_mut_ptr(), buf.len() as i32, timeout_ms)
+        };
+        if n < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(Error::io_ctx("epoll_wait", e));
+        }
+        for ev in buf.iter().take(n as usize) {
+            // copy fields out of the (possibly packed) struct
+            let bits = ev.events;
+            let token = ev.data;
+            out.push(Event {
+                token,
+                readable: bits & sys::EPOLLIN != 0,
+                writable: bits & sys::EPOLLOUT != 0,
+                hangup: bits & (sys::EPOLLERR | sys::EPOLLHUP | sys::EPOLLRDHUP) != 0,
+            });
+        }
+        Ok(n as usize)
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Reactor {
+    fn drop(&mut self) {
+        // SAFETY: epfd came from a successful epoll_create1, closed once.
+        unsafe {
+            sys::close(self.epfd);
+        }
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Reactor {
+    /// No epoll off Linux: the server catches this typed error and runs
+    /// the blocking thread-pool fallback instead.
+    pub fn new() -> Result<Reactor> {
+        Err(Error::runtime(
+            "epoll: unsupported on this platform (thread-pool fallback)",
+        ))
+    }
+
+    pub fn add(&self, _fd: i32, _token: u64, _r: bool, _w: bool) -> Result<()> {
+        Err(Error::runtime("epoll: unsupported on this platform"))
+    }
+
+    pub fn modify(&self, _fd: i32, _token: u64, _r: bool, _w: bool) -> Result<()> {
+        Err(Error::runtime("epoll: unsupported on this platform"))
+    }
+
+    pub fn del(&self, _fd: i32) -> Result<()> {
+        Err(Error::runtime("epoll: unsupported on this platform"))
+    }
+
+    pub fn wait(&self, _out: &mut Vec<Event>, _timeout_ms: i32) -> Result<usize> {
+        Err(Error::runtime("epoll: unsupported on this platform"))
+    }
+}
+
+/// Cross-thread wakeup for the event loop: decode workers signal
+/// response completions through an `eventfd`, registered in the reactor
+/// like any other fd.  The write side is `Sync` (an 8-byte eventfd write
+/// is atomic), so worker threads share one [`Waker`] behind an `Arc`.
+pub struct Waker {
+    #[cfg(target_os = "linux")]
+    fd: i32,
+}
+
+#[cfg(target_os = "linux")]
+impl Waker {
+    pub fn new() -> Result<Waker> {
+        // SAFETY: plain syscall wrapper.
+        let fd = unsafe { sys::eventfd(0, sys::EFD_CLOEXEC | sys::EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(Error::io_ctx("eventfd", std::io::Error::last_os_error()));
+        }
+        Ok(Waker { fd })
+    }
+
+    /// The fd to register in the reactor (read interest).
+    pub fn fd(&self) -> i32 {
+        self.fd
+    }
+
+    /// Signal the loop.  Never blocks: if the counter is saturated the
+    /// loop is already overdue for a wake, so the failure is ignored.
+    pub fn wake(&self) {
+        let one = 1u64.to_ne_bytes();
+        // SAFETY: fd is a live eventfd; the buffer is 8 valid bytes.
+        unsafe {
+            libc_write(self.fd, one.as_ptr(), one.len());
+        }
+    }
+
+    /// Drain pending wakeups so level-triggered polling goes quiet.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 8];
+        // SAFETY: fd is a live nonblocking eventfd; buffer is 8 bytes.
+        unsafe {
+            libc_read(self.fd, buf.as_mut_ptr(), buf.len());
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    #[link_name = "write"]
+    fn libc_write(fd: i32, buf: *const u8, count: usize) -> isize;
+    #[link_name = "read"]
+    fn libc_read(fd: i32, buf: *mut u8, count: usize) -> isize;
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Waker {
+    fn drop(&mut self) {
+        // SAFETY: fd came from a successful eventfd, closed once.
+        unsafe {
+            sys::close(self.fd);
+        }
+    }
+}
+
+// SAFETY: the waker only carries an fd; eventfd reads/writes are atomic
+// syscalls with no shared userspace state.
+#[cfg(target_os = "linux")]
+unsafe impl Send for Waker {}
+#[cfg(target_os = "linux")]
+unsafe impl Sync for Waker {}
+
+#[cfg(not(target_os = "linux"))]
+impl Waker {
+    pub fn new() -> Result<Waker> {
+        Err(Error::runtime(
+            "eventfd: unsupported on this platform (thread-pool fallback)",
+        ))
+    }
+
+    pub fn fd(&self) -> i32 {
+        -1
+    }
+
+    pub fn wake(&self) {}
+
+    pub fn drain(&self) {}
+}
+
+#[cfg(all(test, target_os = "linux"))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn readiness_round_trip() {
+        let reactor = Reactor::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        reactor
+            .add(listener.as_raw_fd(), 7, true, false)
+            .unwrap();
+
+        // nothing pending: a short wait times out empty
+        let mut events = Vec::new();
+        reactor.wait(&mut events, 10).unwrap();
+        assert!(events.is_empty());
+
+        // a connect makes the listener readable
+        let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        events.clear();
+        reactor.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable));
+
+        let (mut server_side, _) = listener.accept().unwrap();
+        server_side.set_nonblocking(true).unwrap();
+        reactor
+            .add(server_side.as_raw_fd(), 9, true, false)
+            .unwrap();
+        client.write_all(b"ping").unwrap();
+        events.clear();
+        reactor.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.readable));
+        let mut buf = [0u8; 8];
+        assert_eq!(server_side.read(&mut buf).unwrap(), 4);
+
+        // interest can be modified and removed
+        reactor
+            .modify(server_side.as_raw_fd(), 9, true, true)
+            .unwrap();
+        events.clear();
+        reactor.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.writable));
+        reactor.del(server_side.as_raw_fd()).unwrap();
+
+        // peer close surfaces as hangup on a registered fd
+        reactor
+            .add(server_side.as_raw_fd(), 11, true, false)
+            .unwrap();
+        drop(client);
+        events.clear();
+        reactor.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 11 && e.hangup));
+    }
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let reactor = Reactor::new().unwrap();
+        let waker = Waker::new().unwrap();
+        reactor.add(waker.fd(), 99, true, false).unwrap();
+
+        let mut events = Vec::new();
+        reactor.wait(&mut events, 10).unwrap();
+        assert!(events.is_empty());
+
+        waker.wake();
+        waker.wake(); // coalesces
+        events.clear();
+        reactor.wait(&mut events, 1000).unwrap();
+        assert!(events.iter().any(|e| e.token == 99 && e.readable));
+
+        waker.drain();
+        events.clear();
+        reactor.wait(&mut events, 10).unwrap();
+        assert!(
+            events.iter().all(|e| e.token != 99),
+            "drained waker must go quiet"
+        );
+    }
+}

@@ -1,0 +1,369 @@
+//! Consistent-hash routing across in-process [`ArchiveStore`] replicas.
+//!
+//! The in-process step of the ROADMAP's scale-out plan: one
+//! [`QueryRouter`] owns N store replicas, each with its **own decoded
+//! plane cache**, and hashes dataset keys onto a ring of virtual nodes
+//! so every dataset has a stable home replica.  Repeat queries for the
+//! same dataset land on the same replica and hit the same warm cache
+//! (warm-cache affinity) — the property the `serve_event` tests assert
+//! via per-replica hit counters.  All replicas share **one executor
+//! service**: replica 0 starts it, siblings are built
+//! [`ArchiveStore::with_handle`] on its [`ArchiveStore::exec_handle`],
+//! so N replicas do not mean N model backends.
+//!
+//! Virtual nodes (default 64 per replica) smooth the ring: with plain
+//! modulo hashing, adding a replica would remap nearly every dataset;
+//! on the ring, only the keys in the new replica's arcs move.
+//!
+//! **Failover**: a mount that fails on its home replica walks the ring
+//! to the next *distinct* replica and tries there.  The placement map
+//! records where a dataset actually lives — routing consults it first,
+//! so failover placements keep their affinity too.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use crate::api::Query;
+use crate::coordinator::engine::RangeDecode;
+use crate::error::{Error, Result};
+use crate::store::{ArchiveStore, DatasetInfo, StoreConfig, StoreStats};
+
+/// Knobs of a [`QueryRouter`].
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// In-process store replicas (>= 1).
+    pub replicas: usize,
+    /// Virtual nodes per replica on the hash ring.
+    pub vnodes: usize,
+    /// Per-replica store configuration.  `cache_bytes` is **per
+    /// replica** — N replicas hold N separate caches of this size.
+    pub store: StoreConfig,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            replicas: 1,
+            vnodes: 64,
+            store: StoreConfig::default(),
+        }
+    }
+}
+
+/// FNV-1a with a splitmix-style avalanche; good enough key mixing for
+/// ring placement without pulling in a hash dependency.
+fn hash64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h
+}
+
+/// The replica front tier; see the module docs.
+pub struct QueryRouter {
+    replicas: Vec<Arc<ArchiveStore>>,
+    /// Sorted ring of `(point, replica index)` virtual nodes.
+    ring: Vec<(u64, usize)>,
+    /// Where each mounted dataset actually lives (home replica, or its
+    /// failover sibling).
+    placement: RwLock<HashMap<String, usize>>,
+}
+
+impl QueryRouter {
+    /// Build `cfg.replicas` stores sharing one executor service.
+    pub fn new(cfg: RouterConfig) -> Result<QueryRouter> {
+        if cfg.replicas == 0 {
+            return Err(Error::config("router needs at least 1 replica"));
+        }
+        let first = Arc::new(ArchiveStore::new(cfg.store.clone())?);
+        let mut replicas = vec![Arc::clone(&first)];
+        for _ in 1..cfg.replicas {
+            replicas.push(Arc::new(ArchiveStore::with_handle(
+                first.exec_handle(),
+                cfg.store.clone(),
+            )));
+        }
+        Ok(Self::assemble(replicas, cfg.vnodes))
+    }
+
+    /// Wrap one existing store as a single-replica router — how
+    /// `QueryServer::bind` keeps the plain-store API: every dataset
+    /// routes to replica 0, including ones mounted on the store
+    /// directly before or after the wrap.
+    pub fn single(store: Arc<ArchiveStore>) -> QueryRouter {
+        Self::assemble(vec![store], 1)
+    }
+
+    /// Assemble a router over caller-built replicas — for embedders
+    /// (and tests) that manage their own executor service.  The
+    /// replicas should share one service (build siblings with
+    /// [`ArchiveStore::with_handle`]); nothing here enforces it, but N
+    /// independent backends defeat the point of in-process replicas.
+    pub fn from_replicas(replicas: Vec<Arc<ArchiveStore>>, vnodes: usize) -> Result<QueryRouter> {
+        if replicas.is_empty() {
+            return Err(Error::config("router needs at least 1 replica"));
+        }
+        Ok(Self::assemble(replicas, vnodes))
+    }
+
+    fn assemble(replicas: Vec<Arc<ArchiveStore>>, vnodes: usize) -> QueryRouter {
+        let mut ring = Vec::with_capacity(replicas.len() * vnodes.max(1));
+        for r in 0..replicas.len() {
+            for v in 0..vnodes.max(1) {
+                ring.push((hash64(format!("replica-{r}-vnode-{v}").as_bytes()), r));
+            }
+        }
+        ring.sort_unstable();
+        QueryRouter {
+            replicas,
+            ring,
+            placement: RwLock::new(HashMap::new()),
+        }
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Direct replica access (tests assert per-replica cache counters).
+    pub fn replica(&self, idx: usize) -> &Arc<ArchiveStore> {
+        &self.replicas[idx]
+    }
+
+    /// The replica the hash ring names as home for `dataset` (before
+    /// any failover placement).
+    pub fn primary_of(&self, dataset: &str) -> usize {
+        let h = hash64(dataset.as_bytes());
+        let idx = self.ring.partition_point(|&(p, _)| p < h);
+        let idx = if idx == self.ring.len() { 0 } else { idx };
+        self.ring[idx].1
+    }
+
+    /// Ring walk from the home position yielding each distinct replica
+    /// once — the mount failover order.
+    fn candidates(&self, dataset: &str) -> Vec<usize> {
+        let h = hash64(dataset.as_bytes());
+        let start = {
+            let i = self.ring.partition_point(|&(p, _)| p < h);
+            if i == self.ring.len() {
+                0
+            } else {
+                i
+            }
+        };
+        let mut out = Vec::with_capacity(self.replicas.len());
+        for k in 0..self.ring.len() {
+            let r = self.ring[(start + k) % self.ring.len()].1;
+            if !out.contains(&r) {
+                out.push(r);
+                if out.len() == self.replicas.len() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Which replica serves `dataset`: its recorded placement, else the
+    /// ring primary (covers `single()`-wrapped stores with datasets
+    /// mounted out-of-band).
+    pub fn route_of(&self, dataset: &str) -> usize {
+        let placed = self
+            .placement
+            .read()
+            .ok()
+            .and_then(|g| g.get(dataset).copied());
+        placed.unwrap_or_else(|| self.primary_of(dataset))
+    }
+
+    fn record_placement(&self, dataset: &str, replica: usize) -> Result<()> {
+        self.placement
+            .write()
+            .map_err(|_| Error::runtime("router placement lock poisoned"))?
+            .insert(dataset.to_string(), replica);
+        Ok(())
+    }
+
+    fn mount_with<F>(&self, name: &str, mut mount: F) -> Result<usize>
+    where
+        F: FnMut(&ArchiveStore) -> Result<()>,
+    {
+        let mut last_err = None;
+        for r in self.candidates(name) {
+            match mount(&self.replicas[r]) {
+                Ok(()) => {
+                    self.record_placement(name, r)?;
+                    return Ok(r);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::config("router has no replicas")))
+    }
+
+    /// Mount an archive file on the dataset's home replica, failing over
+    /// along the ring.  Returns the replica index that took it.
+    pub fn mount_file<P: AsRef<std::path::Path>>(&self, name: &str, path: P) -> Result<usize> {
+        let path = path.as_ref();
+        self.mount_with(name, |store| store.mount_file(name, path))
+    }
+
+    /// Mount serialized archive bytes (see [`QueryRouter::mount_file`]).
+    pub fn mount_bytes(&self, name: &str, bytes: Vec<u8>) -> Result<usize> {
+        // the closure may run once per candidate; clone per attempt
+        self.mount_with(name, |store| store.mount_bytes(name, bytes.clone()))
+    }
+
+    /// Unmount a dataset from whichever replica holds it.
+    pub fn unmount(&self, name: &str) -> Result<()> {
+        let r = self.route_of(name);
+        self.replicas[r].unmount(name)?;
+        if let Ok(mut g) = self.placement.write() {
+            g.remove(name);
+        }
+        Ok(())
+    }
+
+    /// Whether any replica serves `name`.
+    pub fn contains(&self, name: &str) -> bool {
+        self.replicas[self.route_of(name)].contains(name)
+    }
+
+    /// Execute a query on the dataset's replica (warm-cache affinity).
+    pub fn query(&self, dataset: &str, q: &Query) -> Result<RangeDecode> {
+        self.replicas[self.route_of(dataset)].query(dataset, q)
+    }
+
+    /// Side-effect-free warmth probe on the dataset's replica.
+    pub fn is_warm(&self, dataset: &str, q: &Query) -> bool {
+        self.replicas[self.route_of(dataset)].is_warm(dataset, q)
+    }
+
+    /// Catalog entry of one dataset, from its replica.
+    pub fn dataset_info(&self, name: &str) -> Result<DatasetInfo> {
+        self.replicas[self.route_of(name)].dataset_info(name)
+    }
+
+    /// Union catalog across all replicas, sorted by name.
+    pub fn datasets(&self) -> Vec<DatasetInfo> {
+        let mut out: Vec<DatasetInfo> = self
+            .replicas
+            .iter()
+            .flat_map(|r| r.datasets())
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Per-replica counter snapshots, in replica order.
+    pub fn replica_stats(&self) -> Vec<StoreStats> {
+        self.replicas.iter().map(|r| r.stats()).collect()
+    }
+
+    /// Aggregate snapshot: counters summed across replicas, dataset
+    /// catalog unioned.  `cache.capacity_bytes`/`lock_shards` sum too —
+    /// the fleet-wide budget, matching the per-replica note on
+    /// [`RouterConfig::store`].
+    pub fn stats(&self) -> StoreStats {
+        let per = self.replica_stats();
+        let mut agg = StoreStats {
+            queries: 0,
+            decoded_sections: 0,
+            decoded_bytes: 0,
+            cache: Default::default(),
+            datasets: self.datasets(),
+        };
+        for s in &per {
+            agg.queries += s.queries;
+            agg.decoded_sections += s.decoded_sections;
+            agg.decoded_bytes += s.decoded_bytes;
+            agg.cache.hits += s.cache.hits;
+            agg.cache.misses += s.cache.misses;
+            agg.cache.admitted += s.cache.admitted;
+            agg.cache.rejected += s.cache.rejected;
+            agg.cache.evicted += s.cache.evicted;
+            agg.cache.resident_sections += s.cache.resident_sections;
+            agg.cache.resident_bytes += s.cache.resident_bytes;
+            agg.cache.capacity_bytes += s.cache.capacity_bytes;
+            agg.cache.lock_shards += s.cache.lock_shards;
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router(replicas: usize) -> QueryRouter {
+        QueryRouter::new(RouterConfig {
+            replicas,
+            vnodes: 64,
+            store: StoreConfig {
+                cache_bytes: 1 << 20,
+                cache_shards: 2,
+                ..Default::default()
+            },
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn ring_is_stable_and_covers_all_replicas() {
+        let r = router(4);
+        let names: Vec<String> = (0..200).map(|i| format!("ds-{i}")).collect();
+        let homes: Vec<usize> = names.iter().map(|n| r.primary_of(n)).collect();
+        // deterministic
+        for (n, &h) in names.iter().zip(&homes) {
+            assert_eq!(r.primary_of(n), h);
+        }
+        // with 64 vnodes/replica, 200 keys must touch every replica
+        for replica in 0..4 {
+            assert!(
+                homes.iter().any(|&h| h == replica),
+                "replica {replica} owns no keys"
+            );
+        }
+    }
+
+    #[test]
+    fn adding_a_replica_moves_few_keys() {
+        let small = router(3);
+        let big = router(4);
+        let badly_moved = (0..500)
+            .map(|i| format!("ds-{i}"))
+            .filter(|n| {
+                let before = small.primary_of(n);
+                let after = big.primary_of(n);
+                // consistent hashing: keys either stay put or move onto
+                // the new replica — never shuffle between old replicas
+                after != before && after != 3
+            })
+            .count();
+        assert_eq!(badly_moved, 0, "keys must only move onto the new replica");
+    }
+
+    #[test]
+    fn single_routes_everything_to_replica_zero() {
+        let store = Arc::new(ArchiveStore::new(StoreConfig::default()).unwrap());
+        let r = QueryRouter::single(store);
+        assert_eq!(r.replica_count(), 1);
+        for i in 0..50 {
+            assert_eq!(r.route_of(&format!("ds-{i}")), 0);
+        }
+    }
+
+    #[test]
+    fn aggregate_stats_sum_replica_counters() {
+        let r = router(3);
+        let agg = r.stats();
+        assert_eq!(agg.cache.lock_shards, 3 * 2);
+        assert_eq!(agg.cache.capacity_bytes, 3 << 20);
+        assert_eq!(agg.queries, 0);
+    }
+}

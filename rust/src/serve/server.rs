@@ -1,13 +1,35 @@
-//! Concurrent query server — a fixed thread-pool over a `TcpListener`.
+//! Concurrent query server — event-driven on Linux, thread-pool
+//! fallback elsewhere.
 //!
-//! External demand drives the concurrency here (unlike the engine's
-//! internal shard workers): the accept loop pushes connections into a
-//! *bounded* queue and `workers` threads drain it, so a traffic burst
-//! degrades to fast `503`s instead of unbounded thread or memory growth.
-//! Every request failure — malformed query string, oversized head,
-//! client disconnect mid-response — is a typed error mapped to an HTTP
-//! status (or swallowed into a counter when the socket is gone); worker
-//! threads never panic and never exit early.
+//! The primary implementation is a readiness-based event loop: one
+//! reactor thread owns the listener, every connection state machine
+//! ([`Conn`]), and a hand-rolled `epoll(7)` instance
+//! ([`crate::serve::reactor`]).  Connections are non-blocking with
+//! incremental HTTP/1.1 framing, keep-alive, and pipelining (responses
+//! strictly in request order).  Decode work runs on a small worker pool
+//! fed through a bounded job channel; **cache-warm** queries small
+//! enough (`inline_warm_bytes`) are executed right on the reactor
+//! thread — a warm hit is a refcount bump plus serialization, no
+//! handoff.  Fairness and admission control:
+//!
+//! * connection cap (`max_conns`) — overload answers `503` and closes;
+//! * bounded job queue — overflow answers `503` per request;
+//! * per-connection in-flight cap and write-buffer cap, plus a global
+//!   read-buffer byte meter — a pipelining blaster or a slow reader is
+//!   throttled by parking its read interest, never by blocking the
+//!   loop;
+//! * round-robin event processing, so one hot fd cannot starve others;
+//! * an idle timeout reaps slowlorises and abandoned keep-alives.
+//!
+//! Off Linux — or with `GBATC_NO_EPOLL=1` — the server falls back to
+//! the blocking thread-pool implementation (bounded connection queue,
+//! one connection per worker), upgraded to speak the same keep-alive +
+//! pipelining protocol through the same [`HttpParser`], so both servers
+//! produce identical responses and counters.
+//!
+//! Requests route through a [`QueryRouter`]: dataset keys consistent-
+//! hash onto N in-process store replicas with warm-cache affinity
+//! (`bind` wraps a single store as a 1-replica router).
 //!
 //! Endpoints:
 //! * `GET /datasets` — JSON catalog of mounted datasets.
@@ -16,23 +38,27 @@
 //!   `X-Gbatc-Meta` JSON header with dims, resolved species indices, and
 //!   the certified error target.  `t0`/`t1`/`species` are optional
 //!   (defaults: full axis, all species).
-//! * `GET /stats` — JSON cache / decode / IO / server counters.
+//! * `GET /stats` — JSON cache / decode / IO / server / event-loop /
+//!   per-replica counters.
 //!
 //! Shutdown is graceful: [`QueryServer::shutdown`] stops accepting,
-//! lets the workers drain the queue and finish in-flight responses, and
-//! joins every thread.
+//! finishes every admitted request, flushes every response, and joins
+//! every thread; counters are exact at return.
 
-use std::io::Read;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::{Query, SpeciesSel};
 use crate::error::{Error, Result};
-use crate::serve::http::{self, json_error, json_escape, json_usize_list, Request};
+use crate::serve::http::{self, json_error, json_escape, json_usize_list, HttpParser, Request};
+#[cfg(target_os = "linux")]
+use crate::serve::reactor::{Reactor, Waker};
+use crate::serve::router::QueryRouter;
 use crate::store::ArchiveStore;
 
 const JSON: &str = "application/json";
@@ -41,20 +67,36 @@ const BINARY: &str = "application/octet-stream";
 /// Knobs of a [`QueryServer`].
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// Worker threads handling requests.
+    /// Decode worker threads behind the event loop (or connection
+    /// workers in the thread-pool fallback).
     pub workers: usize,
-    /// Bounded connection queue between accept and the workers; overflow
+    /// Bounded decode-job queue (fallback: connection queue); overflow
     /// is answered `503` immediately.
     pub queue: usize,
     /// Request-head byte cap (oversized requests get `431`).
     pub max_head_bytes: usize,
     /// Response-body byte cap per `/query` (larger requests get `413`
-    /// before any decode) — the bounded queue limits connections, this
-    /// limits bytes: at most `workers * max_response_bytes * 2` of
-    /// response/decode buffers are ever in flight.
+    /// before any decode).
     pub max_response_bytes: usize,
-    /// Per-connection socket read timeout.
+    /// Idle timeout: a connection with no socket progress for this long
+    /// is reaped (slowloris / abandoned keep-alive).  Also the fallback
+    /// server's per-connection read deadline.
     pub read_timeout_ms: u64,
+    /// Connection cap of the event loop; excess accepts get `503` and
+    /// close.  (The fallback's bounded queue is its own cap.)
+    pub max_conns: usize,
+    /// Max pipelined requests in flight per connection; further
+    /// requests wait in the read buffer (read interest parked).
+    pub max_inflight: usize,
+    /// Per-connection write-buffer cap: a slow reader whose backlog
+    /// passes this stops being read from until it drains.
+    pub write_buf_bytes: usize,
+    /// Global read-buffer byte meter across all connections (replaces
+    /// the old bounded connection queue as the memory bound).
+    pub read_buf_bytes: usize,
+    /// Cache-warm `/query` responses up to this many body bytes are
+    /// served inline on the reactor thread (zero handoff).
+    pub inline_warm_bytes: usize,
 }
 
 impl Default for ServerConfig {
@@ -65,6 +107,11 @@ impl Default for ServerConfig {
             max_head_bytes: 8 * 1024,
             max_response_bytes: 256 << 20,
             read_timeout_ms: 30_000,
+            max_conns: 1024,
+            max_inflight: 8,
+            write_buf_bytes: 4 << 20,
+            read_buf_bytes: 1 << 20,
+            inline_warm_bytes: 4 << 20,
         }
     }
 }
@@ -80,23 +127,42 @@ pub struct ServeStats {
     pub client_errors: u64,
     /// `5xx` responses (decode failures surfaced to the client).
     pub server_errors: u64,
-    /// Connections refused with `503` because the queue was full.
+    /// Requests refused with `503` because the job queue was full.
     pub rejected_queue_full: u64,
+    /// Connections refused with `503` at the connection cap.
+    pub rejected_conn_cap: u64,
     /// Sockets that died mid-request/response (timeouts, disconnects).
     pub io_errors: u64,
+    /// Requests served on an already-used connection (keep-alive hits:
+    /// every request past a connection's first).
+    pub keepalive_reuse: u64,
+    /// Idle connections reaped by the timeout after serving at least
+    /// one request.
+    pub reaped_idle: u64,
+    /// Requests parsed from bytes already buffered when the previous
+    /// request finished parsing (client pipelining).
+    pub pipelined: u64,
+    /// Connections currently open (gauge; `0` after shutdown).
+    pub active_conns: u64,
 }
 
 impl std::fmt::Display for ServeStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "accepted {} | served {} | 4xx {} | 5xx {} | busy-rejected {} | io errors {}",
+            "accepted {} | served {} | 4xx {} | 5xx {} | busy-rejected {} | conn-cap {} | \
+             io errors {} | keep-alive reuse {} | pipelined {} | reaped idle {} | active {}",
             self.accepted,
             self.served,
             self.client_errors,
             self.server_errors,
             self.rejected_queue_full,
-            self.io_errors
+            self.rejected_conn_cap,
+            self.io_errors,
+            self.keepalive_reuse,
+            self.pipelined,
+            self.reaped_idle,
+            self.active_conns
         )
     }
 }
@@ -108,7 +174,12 @@ struct Counters {
     client_errors: AtomicU64,
     server_errors: AtomicU64,
     rejected_queue_full: AtomicU64,
+    rejected_conn_cap: AtomicU64,
     io_errors: AtomicU64,
+    keepalive_reuse: AtomicU64,
+    reaped_idle: AtomicU64,
+    pipelined: AtomicU64,
+    active_conns: AtomicU64,
 }
 
 impl Counters {
@@ -119,9 +190,33 @@ impl Counters {
             client_errors: self.client_errors.load(Ordering::Relaxed),
             server_errors: self.server_errors.load(Ordering::Relaxed),
             rejected_queue_full: self.rejected_queue_full.load(Ordering::Relaxed),
+            rejected_conn_cap: self.rejected_conn_cap.load(Ordering::Relaxed),
             io_errors: self.io_errors.load(Ordering::Relaxed),
+            keepalive_reuse: self.keepalive_reuse.load(Ordering::Relaxed),
+            reaped_idle: self.reaped_idle.load(Ordering::Relaxed),
+            pipelined: self.pipelined.load(Ordering::Relaxed),
+            active_conns: self.active_conns.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Bump the status-class counter exactly once per produced response —
+/// the one place both server modes and both execution paths (inline,
+/// worker) count, so the modes stay counter-identical.
+fn count_status(counters: &Counters, status: u16) {
+    match status {
+        200 => counters.served.fetch_add(1, Ordering::Relaxed),
+        400..=499 => counters.client_errors.fetch_add(1, Ordering::Relaxed),
+        _ => counters.server_errors.fetch_add(1, Ordering::Relaxed),
+    };
+}
+
+/// `GBATC_NO_EPOLL=1` forces the thread-pool fallback on Linux too
+/// (CI runs the serve suites in both modes).
+fn epoll_disabled() -> bool {
+    std::env::var("GBATC_NO_EPOLL")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
 }
 
 /// A running server; see the module docs.
@@ -131,12 +226,26 @@ pub struct QueryServer {
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     counters: Arc<Counters>,
+    router: Arc<QueryRouter>,
+    event_driven: bool,
 }
 
 impl QueryServer {
     /// Bind `addr` (e.g. `127.0.0.1:7070`, port `0` for ephemeral) and
-    /// start serving `store` on `cfg.workers` threads.
+    /// serve one store (wrapped as a 1-replica router).
     pub fn bind(store: Arc<ArchiveStore>, addr: &str, cfg: ServerConfig) -> Result<QueryServer> {
+        Self::bind_router(Arc::new(QueryRouter::single(store)), addr, cfg)
+    }
+
+    /// Bind `addr` and serve a replica router.  Picks the epoll event
+    /// loop when the platform has it (and `GBATC_NO_EPOLL` is unset),
+    /// else the blocking thread-pool fallback — same protocol, same
+    /// counters, either way.
+    pub fn bind_router(
+        router: Arc<QueryRouter>,
+        addr: &str,
+        cfg: ServerConfig,
+    ) -> Result<QueryServer> {
         let listener =
             TcpListener::bind(addr).map_err(|e| Error::io_ctx(format!("binding {addr}"), e))?;
         let local = listener
@@ -144,17 +253,39 @@ impl QueryServer {
             .map_err(|e| Error::io_ctx("resolving listener address", e))?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let counters = Arc::new(Counters::default());
+        #[cfg(target_os = "linux")]
+        {
+            if !epoll_disabled() {
+                if let (Ok(reactor), Ok(waker)) = (Reactor::new(), Waker::new()) {
+                    return event::start(
+                        listener, local, reactor, waker, router, counters, shutdown, cfg,
+                    );
+                }
+            }
+        }
+        Self::start_pool(listener, local, router, counters, shutdown, cfg)
+    }
+
+    /// Blocking thread-pool fallback (also the only mode off Linux).
+    fn start_pool(
+        listener: TcpListener,
+        addr: SocketAddr,
+        router: Arc<QueryRouter>,
+        counters: Arc<Counters>,
+        shutdown: Arc<AtomicBool>,
+        cfg: ServerConfig,
+    ) -> Result<QueryServer> {
         let (tx, rx) = std::sync::mpsc::sync_channel::<TcpStream>(cfg.queue.max(1));
         let rx = Arc::new(Mutex::new(rx));
-
         let mut workers = Vec::with_capacity(cfg.workers.max(1));
         for i in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
-            let store = Arc::clone(&store);
+            let router = Arc::clone(&router);
             let counters = Arc::clone(&counters);
+            let shutdown = Arc::clone(&shutdown);
             let handle = std::thread::Builder::new()
                 .name(format!("gbatc-serve-{i}"))
-                .spawn(move || worker_loop(rx, store, counters, cfg))
+                .spawn(move || pool_worker_loop(rx, router, counters, cfg, shutdown))
                 .map_err(|e| Error::io_ctx("spawning server worker", e))?;
             workers.push(handle);
         }
@@ -167,11 +298,13 @@ impl QueryServer {
                 .map_err(|e| Error::io_ctx("spawning accept thread", e))?
         };
         Ok(QueryServer {
-            addr: local,
+            addr,
             shutdown,
             accept: Some(accept),
             workers,
             counters,
+            router,
+            event_driven: false,
         })
     }
 
@@ -180,14 +313,25 @@ impl QueryServer {
         self.addr
     }
 
+    /// Whether the epoll event loop is serving (false: thread-pool
+    /// fallback).
+    pub fn event_driven(&self) -> bool {
+        self.event_driven
+    }
+
+    /// The router this server fronts (replica counters live here).
+    pub fn router(&self) -> &Arc<QueryRouter> {
+        &self.router
+    }
+
     /// Counter snapshot (also served at `/stats`).
     pub fn stats(&self) -> ServeStats {
         self.counters.snapshot()
     }
 
-    /// Graceful shutdown: stop accepting, drain the queue, finish
-    /// in-flight responses, join every thread.  Returns the final
-    /// counters.
+    /// Graceful shutdown: stop accepting, finish every admitted
+    /// request, flush every response, join every thread.  Returns the
+    /// final counters.
     pub fn shutdown(mut self) -> ServeStats {
         self.request_stop();
         if let Some(j) = self.accept.take() {
@@ -201,7 +345,8 @@ impl QueryServer {
 
     fn request_stop(&self) {
         self.shutdown.store(true, Ordering::SeqCst);
-        // wake the blocking accept with a throwaway connection
+        // wake the loop (or the blocking accept) with a throwaway
+        // connection
         let _ = TcpStream::connect(self.addr);
     }
 }
@@ -209,13 +354,15 @@ impl QueryServer {
 impl Drop for QueryServer {
     fn drop(&mut self) {
         // dropped without `shutdown()`: stop accepting and let the
-        // workers drain; joining here could block an unwinding thread,
-        // so the worker handles are simply released
+        // threads drain; joining here could block an unwinding thread,
+        // so the handles are simply released
         if self.accept.is_some() {
             self.request_stop();
         }
     }
 }
+
+// ---- thread-pool fallback --------------------------------------------
 
 fn accept_loop(
     listener: TcpListener,
@@ -248,6 +395,7 @@ fn accept_loop(
                     JSON,
                     &[],
                     json_error("request queue full, retry later").as_bytes(),
+                    false,
                 );
             }
             Err(TrySendError::Disconnected(_)) => break,
@@ -256,14 +404,15 @@ fn accept_loop(
     // dropping `tx` here disconnects the workers once the queue drains
 }
 
-fn worker_loop(
+fn pool_worker_loop(
     rx: Arc<Mutex<Receiver<TcpStream>>>,
-    store: Arc<ArchiveStore>,
+    router: Arc<QueryRouter>,
     counters: Arc<Counters>,
     cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
 ) {
     loop {
-        // hold the receiver lock only for the dequeue, not the request
+        // hold the receiver lock only for the dequeue, not the requests
         let conn = {
             let guard = match rx.lock() {
                 Ok(g) => g,
@@ -275,50 +424,123 @@ fn worker_loop(
             Ok(c) => c,
             Err(_) => break, // accept loop gone and queue drained
         };
-        let _ = conn.set_read_timeout(Some(Duration::from_millis(cfg.read_timeout_ms.max(1))));
-        let _ = conn.set_nodelay(true);
-        handle_conn(&mut conn, &store, &counters, cfg);
+        counters.active_conns.fetch_add(1, Ordering::Relaxed);
+        serve_pool_conn(&mut conn, &router, &counters, &cfg, &shutdown);
+        counters.active_conns.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-/// Serve one connection end to end.  Every outcome lands in a counter;
-/// nothing here panics or kills the worker.
-fn handle_conn(
+/// Serve one connection end to end on a worker thread: keep-alive loop
+/// through the same incremental parser as the event loop.  Reads poll
+/// with a short timeout so an idle keep-alive client neither wedges
+/// graceful shutdown nor outlives the idle deadline.  Every outcome
+/// lands in a counter; nothing here panics or kills the worker.
+fn serve_pool_conn(
     conn: &mut TcpStream,
-    store: &ArchiveStore,
+    router: &QueryRouter,
     counters: &Counters,
-    cfg: ServerConfig,
+    cfg: &ServerConfig,
+    shutdown: &AtomicBool,
 ) {
-    let req = match http::read_request(conn, cfg.max_head_bytes) {
-        Ok(r) => r,
-        Err(Error::Protocol(msg)) => {
-            counters.client_errors.fetch_add(1, Ordering::Relaxed);
-            let status = if msg.starts_with(http::OVERSIZE_MARK) { 431 } else { 400 };
-            if http::write_response(conn, status, JSON, &[], json_error(&msg).as_bytes()).is_err()
-            {
-                counters.io_errors.fetch_add(1, Ordering::Relaxed);
+    let _ = conn.set_nodelay(true);
+    let poll_ms = cfg.read_timeout_ms.clamp(1, 250);
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(poll_ms)));
+    let mut parser = HttpParser::new(cfg.max_head_bytes);
+    let mut scratch = [0u8; 16 * 1024];
+    let mut nreq = 0u64;
+    let mut last_activity = Instant::now();
+    loop {
+        // answer everything already parseable before reading more
+        loop {
+            match parser.next_request() {
+                Ok(Some(req)) => {
+                    nreq += 1;
+                    if nreq > 1 {
+                        counters.keepalive_reuse.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if req.pipelined {
+                        counters.pipelined.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let keep = !req.close && !shutdown.load(Ordering::SeqCst);
+                    let (status, content_type, extra, body) =
+                        route(&req, router, counters, cfg);
+                    count_status(counters, status);
+                    let headers: Vec<(&str, &str)> =
+                        extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+                    let bytes =
+                        http::serialize_response(status, content_type, &headers, &body, keep);
+                    if conn.write_all(&bytes).and_then(|_| conn.flush()).is_err() {
+                        counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    last_activity = Instant::now();
+                    if !keep {
+                        if parser.has_buffered_data() {
+                            drain(conn);
+                        }
+                        return;
+                    }
+                }
+                Ok(None) => break,
+                Err(Error::Protocol(msg)) => {
+                    counters.client_errors.fetch_add(1, Ordering::Relaxed);
+                    let status = if msg.starts_with(http::OVERSIZE_MARK) {
+                        431
+                    } else {
+                        400
+                    };
+                    if http::write_response(
+                        conn,
+                        status,
+                        JSON,
+                        &[],
+                        json_error(&msg).as_bytes(),
+                        false,
+                    )
+                    .is_err()
+                    {
+                        counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                    }
+                    // the stream can't be re-synchronized; drain what the
+                    // client is still sending so close() sends FIN, not
+                    // RST (an RST can destroy the error response in
+                    // flight)
+                    drain(conn);
+                    return;
+                }
+                Err(_) => return,
             }
-            // the request head was never fully consumed; drain what the
-            // client is still sending so close() sends FIN, not RST (an
-            // RST can destroy the error response in flight)
-            drain(conn);
-            return;
         }
-        Err(_) => {
-            // read timeout or disconnect before a full request
-            counters.io_errors.fetch_add(1, Ordering::Relaxed);
-            return;
+        match conn.read(&mut scratch) {
+            Ok(0) => {
+                if parser.has_buffered_data() {
+                    // died mid-request (partial head / body)
+                    counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+            Ok(n) => {
+                parser.feed(&scratch[..n]);
+                last_activity = Instant::now();
+            }
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return; // graceful: drop the idle keep-alive
+                }
+                if last_activity.elapsed().as_millis() >= cfg.read_timeout_ms as u128 {
+                    if nreq == 0 {
+                        counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        counters.reaped_idle.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return;
+                }
+            }
+            Err(_) => {
+                counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
         }
-    };
-    let (status, content_type, extra, body) = route(&req, store, counters, &cfg);
-    match status {
-        200 => counters.served.fetch_add(1, Ordering::Relaxed),
-        400..=499 => counters.client_errors.fetch_add(1, Ordering::Relaxed),
-        _ => counters.server_errors.fetch_add(1, Ordering::Relaxed),
-    };
-    let headers: Vec<(&str, &str)> = extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
-    if http::write_response(conn, status, content_type, &headers, &body).is_err() {
-        counters.io_errors.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -336,9 +558,11 @@ fn drain(conn: &mut TcpStream) {
     }
 }
 
+// ---- request routing (shared by both modes) --------------------------
+
 type Routed = (u16, &'static str, Vec<(String, String)>, Vec<u8>);
 
-fn route(req: &Request, store: &ArchiveStore, counters: &Counters, cfg: &ServerConfig) -> Routed {
+fn route(req: &Request, router: &QueryRouter, counters: &Counters, cfg: &ServerConfig) -> Routed {
     if req.method != "GET" {
         return (
             405,
@@ -348,14 +572,14 @@ fn route(req: &Request, store: &ArchiveStore, counters: &Counters, cfg: &ServerC
         );
     }
     match req.path.as_str() {
-        "/datasets" => (200, JSON, Vec::new(), datasets_json(store).into_bytes()),
+        "/datasets" => (200, JSON, Vec::new(), datasets_json(router).into_bytes()),
         "/stats" => (
             200,
             JSON,
             Vec::new(),
-            stats_json(store, counters).into_bytes(),
+            stats_json(router, counters).into_bytes(),
         ),
-        "/query" => handle_query(req, store, cfg.max_response_bytes),
+        "/query" => handle_query(req, router, cfg.max_response_bytes),
         other => (
             404,
             JSON,
@@ -378,13 +602,44 @@ fn parse_opt_usize(req: &Request, key: &str) -> Result<Option<usize>> {
     }
 }
 
-fn handle_query(req: &Request, store: &ArchiveStore, max_response_bytes: usize) -> Routed {
+/// Parse the `/query` parameters far enough to know the dataset, the
+/// typed query, and the response size.  `None` means the request will
+/// fail (or be capped) before any decode — always cheap to answer
+/// inline.
+fn query_plan(req: &Request, router: &QueryRouter) -> Option<(String, Query, usize)> {
+    let dataset = match req.param("dataset") {
+        Some(d) if !d.is_empty() => d,
+        _ => return None,
+    };
+    let info = router.dataset_info(dataset).ok()?;
+    let t0 = parse_opt_usize(req, "t0").ok()?.unwrap_or(0);
+    let t1 = parse_opt_usize(req, "t1").ok()?.unwrap_or(info.dims.0);
+    let species = SpeciesSel::parse(req.param("species").unwrap_or(""));
+    let (_, ns, ny, nx) = info.dims;
+    let nsel = species.resolve(ns).ok()?.len();
+    let want = t1
+        .saturating_sub(t0)
+        .saturating_mul(nsel)
+        .saturating_mul(ny)
+        .saturating_mul(nx)
+        .saturating_mul(4);
+    Some((
+        dataset.to_string(),
+        Query {
+            time: t0..t1,
+            species,
+        },
+        want,
+    ))
+}
+
+fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) -> Routed {
     let bad = |msg: &str| (400, JSON, Vec::new(), json_error(msg).into_bytes());
     let dataset = match req.param("dataset") {
         Some(d) if !d.is_empty() => d,
         _ => return bad("missing dataset parameter"),
     };
-    let info = match store.dataset_info(dataset) {
+    let info = match router.dataset_info(dataset) {
         Ok(i) => i,
         // a missing mount is the client's 404; anything else (e.g. a
         // poisoned mount table) is a server-side 500, not a fake 404
@@ -396,8 +651,7 @@ fn handle_query(req: &Request, store: &ArchiveStore, max_response_bytes: usize) 
         (Err(e), _) | (_, Err(e)) => return bad(&e.to_string()),
     };
     let species = SpeciesSel::parse(req.param("species").unwrap_or(""));
-    // bound the response volume before any decode: the bounded queue
-    // limits concurrent connections, this limits bytes per response
+    // bound the response volume before any decode
     let (_, ns, ny, nx) = info.dims;
     let nsel = match species.resolve(ns) {
         Ok(sel) => sel.len(),
@@ -425,7 +679,7 @@ fn handle_query(req: &Request, store: &ArchiveStore, max_response_bytes: usize) 
         time: t0..t1,
         species,
     };
-    match store.query(dataset, &q) {
+    match router.query(dataset, &q) {
         Ok(dec) => {
             let meta = format!(
                 "{{\"dataset\":\"{}\",\"t0\":{},\"nt\":{},\"ny\":{},\"nx\":{},\"species\":{},\
@@ -443,28 +697,28 @@ fn handle_query(req: &Request, store: &ArchiveStore, max_response_bytes: usize) 
             for v in &dec.mass {
                 body.extend_from_slice(&v.to_le_bytes());
             }
-            (
-                200,
-                BINARY,
-                vec![("X-Gbatc-Meta".to_string(), meta)],
-                body,
-            )
+            (200, BINARY, vec![("X-Gbatc-Meta".to_string(), meta)], body)
         }
         Err(e) => {
             let status = match e {
                 // raced an unmount between the info lookup and the query
-                Error::Config(_) if !store.contains(dataset) => 404,
+                Error::Config(_) if !router.contains(dataset) => 404,
                 Error::Shape(_) | Error::Config(_) | Error::Protocol(_) => 400,
                 _ => 500,
             };
-            (status, JSON, Vec::new(), json_error(&e.to_string()).into_bytes())
+            (
+                status,
+                JSON,
+                Vec::new(),
+                json_error(&e.to_string()).into_bytes(),
+            )
         }
     }
 }
 
-fn datasets_json(store: &ArchiveStore) -> String {
+fn datasets_json(router: &QueryRouter) -> String {
     let mut out = String::from("{\"datasets\":[");
-    for (i, d) in store.datasets().iter().enumerate() {
+    for (i, d) in router.datasets().iter().enumerate() {
         if i > 0 {
             out.push(',');
         }
@@ -483,8 +737,8 @@ fn datasets_json(store: &ArchiveStore) -> String {
     out
 }
 
-fn stats_json(store: &ArchiveStore, counters: &Counters) -> String {
-    let st = store.stats();
+fn stats_json(router: &QueryRouter, counters: &Counters) -> String {
+    let st = router.stats();
     let sv = counters.snapshot();
     let c = st.cache;
     let mut out = format!(
@@ -493,8 +747,10 @@ fn stats_json(store: &ArchiveStore, counters: &Counters) -> String {
          \"evicted\":{},\"resident_sections\":{},\"resident_bytes\":{},\
          \"capacity_bytes\":{},\"lock_shards\":{}}},\
          \"server\":{{\"accepted\":{},\"served\":{},\"client_errors\":{},\
-         \"server_errors\":{},\"rejected_queue_full\":{},\"io_errors\":{}}},\
-         \"datasets\":[",
+         \"server_errors\":{},\"rejected_queue_full\":{},\"io_errors\":{},\
+         \"rejected_conn_cap\":{},\"keepalive_reuse\":{},\"reaped_idle\":{},\
+         \"pipelined\":{},\"active_conns\":{}}},\
+         \"replicas\":[",
         st.queries,
         st.decoded_sections,
         st.decoded_bytes,
@@ -512,8 +768,27 @@ fn stats_json(store: &ArchiveStore, counters: &Counters) -> String {
         sv.client_errors,
         sv.server_errors,
         sv.rejected_queue_full,
-        sv.io_errors
+        sv.io_errors,
+        sv.rejected_conn_cap,
+        sv.keepalive_reuse,
+        sv.reaped_idle,
+        sv.pipelined,
+        sv.active_conns
     );
+    for (i, r) in router.replica_stats().iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"replica\":{i},\"queries\":{},\"cache_hits\":{},\"cache_misses\":{},\
+             \"datasets\":{}}}",
+            r.queries,
+            r.cache.hits,
+            r.cache.misses,
+            r.datasets.len()
+        ));
+    }
+    out.push_str("],\"datasets\":[");
     for (i, d) in st.datasets.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -531,4 +806,648 @@ fn stats_json(store: &ArchiveStore, counters: &Counters) -> String {
     }
     out.push_str("]}");
     out
+}
+
+// ---- event-driven implementation (Linux) -----------------------------
+
+#[cfg(target_os = "linux")]
+mod event {
+    use std::collections::VecDeque;
+    use std::io::{Read, Write};
+    use std::net::{SocketAddr, TcpListener};
+    use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+    use std::sync::{Arc, Mutex};
+    use std::time::Instant;
+
+    use crate::error::{Error, Result};
+    use crate::serve::conn::{Conn, ReadOutcome};
+    use crate::serve::http::{self, json_error, Request};
+    use crate::serve::reactor::{Event, Reactor, Waker};
+    use crate::serve::router::QueryRouter;
+
+    use super::{count_status, route, Counters, QueryServer, ServerConfig, JSON};
+
+    /// Reserved tokens: real connection tokens are `slot | gen << 32`
+    /// with `slot < max_conns`, so they can never collide with these.
+    const TOKEN_LISTENER: u64 = u64::MAX;
+    const TOKEN_WAKER: u64 = u64::MAX - 1;
+
+    fn token_of(slot: usize, generation: u32) -> u64 {
+        (slot as u64 & 0xffff_ffff) | ((generation as u64) << 32)
+    }
+
+    fn token_slot(token: u64) -> usize {
+        (token & 0xffff_ffff) as usize
+    }
+
+    fn token_gen(token: u64) -> u32 {
+        (token >> 32) as u32
+    }
+
+    /// One offloaded request on its way to a decode worker.
+    struct Job {
+        token: u64,
+        seq: u64,
+        keep_alive: bool,
+        req: Request,
+    }
+
+    /// One serialized response on its way back to the reactor.
+    struct Done {
+        token: u64,
+        seq: u64,
+        bytes: Vec<u8>,
+    }
+
+    /// Build the reactor thread + decode workers and hand back the
+    /// running server.
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn start(
+        listener: TcpListener,
+        addr: SocketAddr,
+        reactor: Reactor,
+        waker: Waker,
+        router: Arc<QueryRouter>,
+        counters: Arc<Counters>,
+        shutdown: Arc<AtomicBool>,
+        cfg: ServerConfig,
+    ) -> Result<QueryServer> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io_ctx("setting listener nonblocking", e))?;
+        reactor.add(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+        let waker = Arc::new(waker);
+        reactor.add(waker.fd(), TOKEN_WAKER, true, false)?;
+
+        let (jobs_tx, jobs_rx) = sync_channel::<Job>(cfg.queue.max(1));
+        let jobs_rx = Arc::new(Mutex::new(jobs_rx));
+        let done: Arc<Mutex<VecDeque<Done>>> = Arc::new(Mutex::new(VecDeque::new()));
+
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for i in 0..cfg.workers.max(1) {
+            let jobs_rx = Arc::clone(&jobs_rx);
+            let router = Arc::clone(&router);
+            let counters = Arc::clone(&counters);
+            let done = Arc::clone(&done);
+            let waker = Arc::clone(&waker);
+            let handle = std::thread::Builder::new()
+                .name(format!("gbatc-serve-{i}"))
+                .spawn(move || decode_worker(jobs_rx, router, counters, cfg, done, waker))
+                .map_err(|e| Error::io_ctx("spawning decode worker", e))?;
+            workers.push(handle);
+        }
+
+        let ev = EventLoop {
+            reactor,
+            waker,
+            listener,
+            router: Arc::clone(&router),
+            counters: Arc::clone(&counters),
+            cfg,
+            jobs: jobs_tx,
+            done,
+            conns: Vec::new(),
+            free: Vec::new(),
+            active: 0,
+            next_gen: 0,
+            read_meter: 0,
+            jobs_inflight: 0,
+            closing: false,
+            meter_parked: Vec::new(),
+            scratch: vec![0u8; 16 * 1024],
+        };
+        let accept = {
+            let shutdown = Arc::clone(&shutdown);
+            std::thread::Builder::new()
+                .name("gbatc-serve-reactor".to_string())
+                .spawn(move || ev.run(shutdown))
+                .map_err(|e| Error::io_ctx("spawning reactor thread", e))?
+        };
+        Ok(QueryServer {
+            addr,
+            shutdown,
+            accept: Some(accept),
+            workers,
+            counters,
+            router,
+            event_driven: true,
+        })
+    }
+
+    fn decode_worker(
+        rx: Arc<Mutex<Receiver<Job>>>,
+        router: Arc<QueryRouter>,
+        counters: Arc<Counters>,
+        cfg: ServerConfig,
+        done: Arc<Mutex<VecDeque<Done>>>,
+        waker: Arc<Waker>,
+    ) {
+        loop {
+            // hold the receiver lock only for the dequeue
+            let job = {
+                let guard = match rx.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                guard.recv()
+            };
+            let Ok(job) = job else { break }; // reactor gone, queue drained
+            let (status, content_type, extra, body) = route(&job.req, &router, &counters, &cfg);
+            count_status(&counters, status);
+            let headers: Vec<(&str, &str)> =
+                extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            let bytes = http::serialize_response(status, content_type, &headers, &body, job.keep_alive);
+            {
+                let mut guard = match done.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                guard.push_back(Done {
+                    token: job.token,
+                    seq: job.seq,
+                    bytes,
+                });
+            }
+            waker.wake();
+        }
+    }
+
+    struct EventLoop {
+        reactor: Reactor,
+        waker: Arc<Waker>,
+        listener: TcpListener,
+        router: Arc<QueryRouter>,
+        counters: Arc<Counters>,
+        cfg: ServerConfig,
+        jobs: SyncSender<Job>,
+        done: Arc<Mutex<VecDeque<Done>>>,
+        /// Connection slab; tokens carry `slot | generation << 32`.
+        conns: Vec<Option<Conn>>,
+        free: Vec<usize>,
+        active: usize,
+        next_gen: u32,
+        /// Sum of all parsers' buffered bytes (global admission meter).
+        read_meter: usize,
+        jobs_inflight: usize,
+        closing: bool,
+        /// Tokens whose read interest was parked purely by the global
+        /// meter; resumed when it drops below the cap.
+        meter_parked: Vec<u64>,
+        scratch: Vec<u8>,
+    }
+
+    impl EventLoop {
+        fn conn_read_cap(&self) -> usize {
+            // room for a head plus a fat pipelined batch behind it
+            self.cfg.max_head_bytes.saturating_mul(2)
+        }
+
+        fn run(mut self, shutdown: Arc<AtomicBool>) {
+            let mut events: Vec<Event> = Vec::new();
+            let mut rot = 0usize;
+            let mut last_reap = Instant::now();
+            let reap_every = (self.cfg.read_timeout_ms / 4).clamp(50, 1000) as u128;
+            loop {
+                if shutdown.load(Ordering::SeqCst) && !self.closing {
+                    self.begin_close();
+                }
+                if self.closing && self.active == 0 && self.jobs_inflight == 0 {
+                    break;
+                }
+                events.clear();
+                if self.reactor.wait(&mut events, 100).is_err() {
+                    break;
+                }
+                // round-robin fairness: start each batch at a rotating
+                // offset so one busy fd at the front of the epoll batch
+                // cannot monopolize the loop
+                let n = events.len();
+                for k in 0..n {
+                    let ev = events[(rot + k) % n];
+                    if ev.token == TOKEN_LISTENER {
+                        self.accept_burst();
+                    } else if ev.token == TOKEN_WAKER {
+                        self.waker.drain();
+                        self.apply_done();
+                    } else {
+                        let slot = token_slot(ev.token);
+                        let valid = matches!(
+                            self.conns.get(slot),
+                            Some(Some(c)) if c.generation == token_gen(ev.token)
+                        );
+                        if valid {
+                            self.pump_io(slot, ev.readable || ev.hangup);
+                        }
+                    }
+                }
+                if n > 0 {
+                    rot = rot.wrapping_add(1);
+                }
+                self.apply_done();
+                self.resume_parked();
+                let now = Instant::now();
+                if now.duration_since(last_reap).as_millis() >= reap_every {
+                    last_reap = now;
+                    self.reap(now);
+                }
+            }
+            // dropping `self.jobs` disconnects the decode workers
+        }
+
+        /// Accept everything pending (level-triggered listener).
+        fn accept_burst(&mut self) {
+            loop {
+                let stream = match self.listener.accept() {
+                    Ok((stream, _)) => stream,
+                    Err(_) => break, // WouldBlock, or transient
+                };
+                if self.closing {
+                    continue; // shutdown wake / raced connects: drop
+                }
+                self.counters.accepted.fetch_add(1, Ordering::Relaxed);
+                if self.active >= self.cfg.max_conns {
+                    self.counters.rejected_conn_cap.fetch_add(1, Ordering::Relaxed);
+                    let mut s = stream;
+                    let _ = s.set_nodelay(true);
+                    // fresh socket, empty send buffer: this tiny write
+                    // won't block meaningfully
+                    let _ = s.write_all(&http::serialize_response(
+                        503,
+                        JSON,
+                        &[],
+                        json_error("connection limit reached, retry later").as_bytes(),
+                        false,
+                    ));
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                self.next_gen = self.next_gen.wrapping_add(1);
+                let generation = self.next_gen;
+                let slot = match self.free.pop() {
+                    Some(s) => s,
+                    None => {
+                        self.conns.push(None);
+                        self.conns.len() - 1
+                    }
+                };
+                let token = token_of(slot, generation);
+                let mut conn =
+                    Conn::new(stream, self.cfg.max_head_bytes, generation, Instant::now());
+                if self
+                    .reactor
+                    .add(conn.stream.as_raw_fd(), token, true, false)
+                    .is_err()
+                {
+                    self.free.push(slot);
+                    continue;
+                }
+                conn.reg_read = true;
+                self.active += 1;
+                self.counters.active_conns.fetch_add(1, Ordering::Relaxed);
+                self.conns[slot] = Some(conn);
+            }
+        }
+
+        /// Run one connection's state machine: optional read, parse +
+        /// dispatch, flush, close-or-rearm.
+        fn pump_io(&mut self, slot: usize, do_read: bool) {
+            let Some(conn_opt) = self.conns.get_mut(slot) else {
+                return;
+            };
+            let Some(mut conn) = conn_opt.take() else {
+                return;
+            };
+            let token = token_of(slot, conn.generation);
+            if self.drive(token, &mut conn, do_read) {
+                self.update_interest(token, &mut conn);
+                self.conns[slot] = Some(conn);
+            } else {
+                self.release(slot, conn);
+            }
+        }
+
+        /// The state machine body.  Returns whether the connection
+        /// stays alive.
+        fn drive(&mut self, token: u64, conn: &mut Conn, do_read: bool) -> bool {
+            let now = Instant::now();
+            let mut activity = false;
+            if do_read && !conn.close_after && !conn.peer_eof {
+                loop {
+                    // global meter, adjusted for this conn's stale share
+                    let meter = self.read_meter - conn.metered + conn.parser.buffered();
+                    if meter >= self.cfg.read_buf_bytes {
+                        break;
+                    }
+                    if conn.parser.buffered() >= self.conn_read_cap() {
+                        break;
+                    }
+                    match conn.read_some(&mut self.scratch) {
+                        ReadOutcome::Data(_) => activity = true,
+                        ReadOutcome::WouldBlock => break,
+                        ReadOutcome::Closed => {
+                            conn.peer_eof = true;
+                            break;
+                        }
+                    }
+                }
+            }
+            // parse + dispatch up to the per-conn caps
+            loop {
+                if conn.close_after
+                    || conn.inflight >= self.cfg.max_inflight
+                    || conn.write_backlog() >= self.cfg.write_buf_bytes
+                {
+                    break;
+                }
+                match conn.parser.next_request() {
+                    Ok(Some(req)) => {
+                        activity = true;
+                        if req.pipelined {
+                            self.counters.pipelined.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let seq = conn.begin_request();
+                        if conn.requests > 1 {
+                            self.counters.keepalive_reuse.fetch_add(1, Ordering::Relaxed);
+                        }
+                        let keep_alive = !req.close && !self.closing;
+                        if req.close || self.closing {
+                            conn.close_after = true;
+                        }
+                        self.dispatch(token, conn, seq, req, keep_alive);
+                    }
+                    Ok(None) => break,
+                    Err(Error::Protocol(msg)) => {
+                        activity = true;
+                        self.counters.client_errors.fetch_add(1, Ordering::Relaxed);
+                        let status = if msg.starts_with(http::OVERSIZE_MARK) {
+                            431
+                        } else {
+                            400
+                        };
+                        let seq = conn.begin_request();
+                        conn.complete(
+                            seq,
+                            http::serialize_response(
+                                status,
+                                JSON,
+                                &[],
+                                json_error(&msg).as_bytes(),
+                                false,
+                            ),
+                        );
+                        conn.close_after = true;
+                        break;
+                    }
+                    Err(_) => {
+                        conn.close_after = true;
+                        break;
+                    }
+                }
+            }
+            // settle this conn's share of the global read meter
+            let buffered = conn.parser.buffered();
+            self.read_meter = self.read_meter - conn.metered + buffered;
+            conn.metered = buffered;
+            // flush whatever is ready, in order
+            let backlog_before = conn.write_backlog();
+            match conn.flush() {
+                Ok(_) => {
+                    if conn.write_backlog() != backlog_before {
+                        activity = true;
+                    }
+                }
+                Err(_) => {
+                    self.counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                    return false;
+                }
+            }
+            if activity {
+                conn.last_activity = now;
+            }
+            if conn.close_after && conn.drained() {
+                return false;
+            }
+            if conn.peer_eof && conn.inflight == 0 && conn.drained() {
+                if conn.parser.has_buffered_data() {
+                    // FIN behind a partial request: died mid-request
+                    self.counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                }
+                return false;
+            }
+            true
+        }
+
+        /// Answer one admitted request: offload cold `/query` decodes to
+        /// the worker pool, everything else (catalog, stats, errors, and
+        /// cache-warm queries under the inline cap) inline right here.
+        fn dispatch(&mut self, token: u64, conn: &mut Conn, seq: u64, req: Request, keep_alive: bool) {
+            let req = if self.should_offload(&req) {
+                match self.jobs.try_send(Job {
+                    token,
+                    seq,
+                    keep_alive,
+                    req,
+                }) {
+                    Ok(()) => {
+                        self.jobs_inflight += 1;
+                        return;
+                    }
+                    Err(TrySendError::Full(_)) => {
+                        self.counters
+                            .rejected_queue_full
+                            .fetch_add(1, Ordering::Relaxed);
+                        conn.complete(
+                            seq,
+                            http::serialize_response(
+                                503,
+                                JSON,
+                                &[],
+                                json_error("request queue full, retry later").as_bytes(),
+                                keep_alive,
+                            ),
+                        );
+                        return;
+                    }
+                    // workers gone (tearing down): answer inline
+                    Err(TrySendError::Disconnected(job)) => job.req,
+                }
+            } else {
+                req
+            };
+            let (status, content_type, extra, body) =
+                route(&req, &self.router, &self.counters, &self.cfg);
+            count_status(&self.counters, status);
+            let headers: Vec<(&str, &str)> =
+                extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
+            conn.complete(
+                seq,
+                http::serialize_response(status, content_type, &headers, &body, keep_alive),
+            );
+        }
+
+        /// A request goes to the worker pool only when it will actually
+        /// decode: a well-formed, under-cap `/query` that is not
+        /// cache-warm-and-small.  Everything else is cheap inline.
+        fn should_offload(&self, req: &Request) -> bool {
+            if req.method != "GET" || req.path != "/query" {
+                return false;
+            }
+            let Some((dataset, q, want)) = super::query_plan(req, &self.router) else {
+                return false; // will 4xx before any decode
+            };
+            if want > self.cfg.max_response_bytes {
+                return false; // 413 inline
+            }
+            if want <= self.cfg.inline_warm_bytes && self.router.is_warm(&dataset, &q) {
+                return false; // warm fast path: serve from the loop
+            }
+            true
+        }
+
+        /// Apply every completed worker response, then pump the owning
+        /// connections (which may unthrottle their reads).
+        fn apply_done(&mut self) {
+            loop {
+                let next = {
+                    let mut guard = match self.done.lock() {
+                        Ok(g) => g,
+                        Err(poisoned) => poisoned.into_inner(),
+                    };
+                    guard.pop_front()
+                };
+                let Some(Done { token, seq, bytes }) = next else {
+                    break;
+                };
+                self.jobs_inflight = self.jobs_inflight.saturating_sub(1);
+                let slot = token_slot(token);
+                let mut landed = false;
+                if let Some(Some(conn)) = self.conns.get_mut(slot) {
+                    if conn.generation == token_gen(token) {
+                        conn.complete(seq, bytes);
+                        landed = true;
+                    }
+                }
+                // a stale token means the conn died mid-decode; the
+                // response is simply dropped
+                if landed {
+                    self.pump_io(slot, false);
+                }
+            }
+        }
+
+        /// Re-pump connections parked by the global read meter once it
+        /// has headroom again.
+        fn resume_parked(&mut self) {
+            if self.meter_parked.is_empty() || self.read_meter >= self.cfg.read_buf_bytes {
+                return;
+            }
+            let parked = std::mem::take(&mut self.meter_parked);
+            for token in parked {
+                let slot = token_slot(token);
+                let valid = matches!(
+                    self.conns.get(slot),
+                    Some(Some(c)) if c.generation == token_gen(token)
+                );
+                if valid {
+                    self.pump_io(slot, false);
+                }
+            }
+        }
+
+        /// Diff desired-vs-registered epoll interest and apply it.
+        /// Read interest is parked while the conn is throttled (inflight
+        /// cap, write backlog, per-conn or global read meter) — with a
+        /// level-triggered reactor that is what keeps the loop from
+        /// spinning on data it refuses to consume.
+        fn update_interest(&mut self, token: u64, conn: &mut Conn) {
+            let meter_ok = self.read_meter < self.cfg.read_buf_bytes;
+            let throttled_locally = conn.inflight >= self.cfg.max_inflight
+                || conn.write_backlog() >= self.cfg.write_buf_bytes
+                || conn.parser.buffered() >= self.conn_read_cap();
+            let want_r =
+                !conn.close_after && !conn.peer_eof && !throttled_locally && meter_ok;
+            if !meter_ok && !conn.close_after && !conn.peer_eof && !throttled_locally {
+                self.meter_parked.push(token);
+            }
+            let want_w = conn.wants_write();
+            if (want_r != conn.reg_read || want_w != conn.reg_write)
+                && self
+                    .reactor
+                    .modify(conn.stream.as_raw_fd(), token, want_r, want_w)
+                    .is_ok()
+            {
+                conn.reg_read = want_r;
+                conn.reg_write = want_w;
+            }
+        }
+
+        /// Close a connection: refund its meter share, drain the socket
+        /// (FIN, not RST — an RST can destroy the last response in
+        /// flight), free the slot.
+        fn release(&mut self, slot: usize, mut conn: Conn) {
+            self.read_meter -= conn.metered;
+            self.active -= 1;
+            self.counters.active_conns.fetch_sub(1, Ordering::Relaxed);
+            let mut scratch = [0u8; 4096];
+            for _ in 0..32 {
+                match conn.stream.read(&mut scratch) {
+                    Ok(0) | Err(_) => break, // EOF or WouldBlock: done
+                    Ok(_) => {}
+                }
+            }
+            drop(conn); // closes the fd; epoll deregisters implicitly
+            self.free.push(slot);
+        }
+
+        /// Reap connections with no socket progress for the idle
+        /// timeout.  In-flight decodes exempt a conn — idleness is the
+        /// client's silence, not the server's work.
+        fn reap(&mut self, now: Instant) {
+            let timeout = self.cfg.read_timeout_ms as u128;
+            if timeout == 0 {
+                return;
+            }
+            for slot in 0..self.conns.len() {
+                let expired = match &self.conns[slot] {
+                    Some(c) => c.inflight == 0 && c.idle_millis(now) >= timeout,
+                    None => false,
+                };
+                if expired {
+                    if let Some(conn) = self.conns[slot].take() {
+                        if conn.requests == 0 {
+                            // never completed a request: a slowloris or
+                            // dead socket, same as the old read timeout
+                            self.counters.io_errors.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            self.counters.reaped_idle.fetch_add(1, Ordering::Relaxed);
+                        }
+                        self.release(slot, conn);
+                    }
+                }
+            }
+        }
+
+        /// Begin graceful shutdown: stop accepting, mark every conn
+        /// close-after-drain, pump them once.  The loop exits when the
+        /// last response has flushed and the last job has come home.
+        fn begin_close(&mut self) {
+            self.closing = true;
+            let _ = self.reactor.del(self.listener.as_raw_fd());
+            for slot in 0..self.conns.len() {
+                if let Some(conn) = self.conns[slot].as_mut() {
+                    conn.close_after = true;
+                }
+            }
+            for slot in 0..self.conns.len() {
+                if self.conns[slot].is_some() {
+                    self.pump_io(slot, false);
+                }
+            }
+        }
+    }
 }

@@ -190,6 +190,14 @@ impl SectionCache {
         found
     }
 
+    /// Residency probe with **no side effects**: no hit/miss counters,
+    /// no recency refresh.  The serve tier probes warmth to decide
+    /// inline-vs-worker execution and then runs the real query — using
+    /// `get` here would double-count every probed lookup.
+    pub fn peek(&self, key: CacheKey) -> bool {
+        self.lock(key).map.contains_key(&key)
+    }
+
     /// Admit a freshly decoded plane, evicting this lock shard's LRU
     /// entries until its slice of the byte budget holds.  Returns whether
     /// the plane was admitted.  Two threads racing the same miss both

@@ -434,6 +434,43 @@ impl ArchiveStore {
         })
     }
 
+    /// The executor handle this store decodes on.  Router replicas share
+    /// one backend service by building siblings `with_handle` on the
+    /// first replica's handle.
+    pub fn exec_handle(&self) -> &ExecHandle {
+        &self.handle
+    }
+
+    /// Whether every (shard, species) plane `q` touches is resident in
+    /// the cache — a **side-effect-free** probe (`SectionCache::peek`:
+    /// no counters, no recency refresh) the event loop uses to decide
+    /// whether a query can run inline on the reactor thread.  Any
+    /// resolution error reports cold; the real `query` call surfaces it.
+    pub fn is_warm(&self, dataset: &str, q: &Query) -> bool {
+        let Ok(m) = self.mount(dataset) else {
+            return false;
+        };
+        let (nt, ns, _, _) = m.header.dims;
+        let Ok(sel) = q.species.resolve(ns) else {
+            return false;
+        };
+        let (t0, t1) = (q.time.start, q.time.end);
+        if t0 >= t1 || t1 > nt {
+            return false;
+        }
+        for (si, entry) in m.toc.iter().enumerate() {
+            if entry.t0 >= t1 || entry.t0 + entry.nt <= t0 {
+                continue;
+            }
+            for &s in &sel {
+                if !self.cache.peek((m.id, si as u32, s as u32)) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
     /// Counter snapshot across the cache, decode totals, and every
     /// mounted dataset's IO.
     pub fn stats(&self) -> StoreStats {

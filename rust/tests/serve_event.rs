@@ -1,0 +1,349 @@
+//! Event-driven serving tier tests: keep-alive connection reuse,
+//! pipelining with strict response ordering, byte-dribble framing over
+//! a real socket, slow-reader backpressure/fairness, and consistent-hash
+//! replica routing with warm-cache affinity and mount failover.
+//!
+//! Every server test here must pass in **both** server modes — CI runs
+//! this suite twice, once natively (epoll event loop on Linux) and once
+//! with `GBATC_NO_EPOLL=1` (thread-pool fallback) — so assertions stick
+//! to protocol behavior and counters both modes guarantee.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use gbatc::api::Query;
+use gbatc::archive::SliceSource;
+use gbatc::compressor::{CompressOptions, GbatcCompressor};
+use gbatc::data::Dataset;
+use gbatc::runtime::{ExecHandle, ExecService, RuntimeSpec};
+use gbatc::serve::http;
+use gbatc::serve::{QueryClient, QueryRouter, QueryServer, ServerConfig};
+use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::util::Prng;
+
+const NS: usize = 4;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn small_spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+fn make_ds(nt: usize, seed: u64) -> Dataset {
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    let mut rng = Prng::new(seed);
+    for t in 0..nt {
+        for s in 0..NS {
+            for y in 0..NY {
+                for x in 0..NX {
+                    let v = (t as f32 * 0.3 + s as f32 * 1.7).sin() * 0.2
+                        + (y as f32 * 0.17 + x as f32 * 0.11 + s as f32).cos() * 0.3
+                        + s as f32 * 0.5
+                        + rng.next_f32() * 0.02;
+                    let i = ds.idx(t, s, y, x);
+                    ds.mass[i] = v;
+                }
+            }
+        }
+    }
+    ds
+}
+
+fn build_archive(handle: &ExecHandle, nt: usize) -> Vec<u8> {
+    let comp = GbatcCompressor::new(handle, 0, 0);
+    let ds = make_ds(nt, 1);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        shard_workers: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    comp.compress(&ds, &opts).expect("compress").archive.into_bytes()
+}
+
+fn start_server(
+    handle: &ExecHandle,
+    bytes: &[u8],
+    cfg: ServerConfig,
+) -> (QueryServer, String) {
+    let store = Arc::new(ArchiveStore::with_handle(
+        handle,
+        StoreConfig {
+            threads: 1,
+            cache_bytes: 32 << 20,
+            cache_shards: 8,
+            ..StoreConfig::default()
+        },
+    ));
+    store.mount_bytes("hcci", bytes.to_vec()).unwrap();
+    let server = QueryServer::bind(store, "127.0.0.1:0", cfg).unwrap();
+    let addr = server.addr().to_string();
+    (server, addr)
+}
+
+#[test]
+fn keepalive_client_opens_exactly_one_connection() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16);
+    let (server, addr) = start_server(&handle, &bytes, ServerConfig::default());
+
+    let client = QueryClient::new(addr);
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+    // M sequential queries (cold then warm repeats) over one socket
+    let windows = [(0usize, 8usize), (0, 8), (4, 12), (0, 8), (4, 12)];
+    for &(t0, t1) in &windows {
+        let dec = client.query("hcci", Some(t0), Some(t1), "1,3").unwrap();
+        let oracle = comp
+            .extract(&SliceSource(&bytes), t0, t1, &[1, 3], 1)
+            .unwrap();
+        for (a, b) in dec.mass.iter().zip(&oracle.mass) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    // the /stats body itself must report the reuse
+    let stats = client.stats_json().unwrap();
+    assert!(stats.contains("\"keepalive_reuse\""), "{stats}");
+    assert!(stats.contains("\"active_conns\""), "{stats}");
+    assert!(stats.contains("\"replicas\""), "{stats}");
+
+    assert_eq!(client.connections_opened(), 1, "keep-alive must reuse");
+    let st = server.shutdown();
+    assert_eq!(st.accepted, 1, "{st}");
+    assert_eq!(st.served, 6, "5 queries + /stats: {st}");
+    assert_eq!(st.keepalive_reuse, 5, "{st}");
+    assert_eq!(st.io_errors, 0, "{st}");
+    assert_eq!(st.active_conns, 0, "{st}");
+}
+
+#[test]
+fn pipelined_requests_come_back_in_order() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16);
+    let (server, addr) = start_server(
+        &handle,
+        &bytes,
+        ServerConfig {
+            workers: 4,
+            ..ServerConfig::default()
+        },
+    );
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    // 8 pipelined requests in ONE write: alternating species selections
+    // (cold/warm mix, so internal completion order is scrambled), with a
+    // 404 in the middle and `Connection: close` only on the last
+    let sels: [&[usize]; 2] = [&[1, 3], &[0, 2]];
+    let mut wire = Vec::new();
+    for i in 0..8 {
+        if i == 3 {
+            wire.extend_from_slice(b"GET /nothing HTTP/1.1\r\n\r\n");
+            continue;
+        }
+        let list = sels[i % 2]
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        let close = if i == 7 { "Connection: close\r\n" } else { "" };
+        wire.extend_from_slice(
+            format!("GET /query?dataset=hcci&t0=0&t1=4&species={list} HTTP/1.1\r\n{close}\r\n")
+                .as_bytes(),
+        );
+    }
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    sock.write_all(&wire).unwrap();
+
+    // responses must come back strictly in request order
+    for i in 0..8 {
+        let resp = http::read_response(&mut sock).unwrap();
+        if i == 3 {
+            assert_eq!(resp.status, 404, "response {i}");
+            continue;
+        }
+        assert_eq!(resp.status, 200, "response {i}");
+        let sel = sels[i % 2];
+        let oracle = comp.extract(&SliceSource(&bytes), 0, 4, sel, 1).unwrap();
+        assert_eq!(resp.body.len(), oracle.mass.len() * 4, "response {i}");
+        for (k, (chunk, b)) in resp.body.chunks_exact(4).zip(&oracle.mass).enumerate() {
+            let a = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            assert_eq!(a.to_bits(), b.to_bits(), "response {i} value {k}");
+        }
+    }
+    drop(sock);
+
+    let st = server.shutdown();
+    assert_eq!(st.accepted, 1, "{st}");
+    assert_eq!(st.served, 7, "{st}");
+    assert_eq!(st.client_errors, 1, "the 404: {st}");
+    assert_eq!(st.io_errors, 0, "{st}");
+    // one write of ~8 requests lands in one or two segments on loopback,
+    // so most requests parse with no intervening read
+    assert!(st.pipelined >= 4, "{st}");
+}
+
+#[test]
+fn byte_dribble_and_split_crlf_frame_correctly() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 8);
+    let (server, addr) = start_server(&handle, &bytes, ServerConfig::default());
+
+    let mut sock = TcpStream::connect(&addr).unwrap();
+    sock.set_nodelay(true).unwrap();
+    // dribble the request one byte per write, pausing inside the
+    // terminating CRLFCRLF so it spans several TCP segments
+    let req = b"GET /datasets HTTP/1.1\r\nConnection: close\r\n\r\n";
+    for (i, &b) in req.iter().enumerate() {
+        sock.write_all(&[b]).unwrap();
+        if i >= req.len() - 4 || i % 7 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    let resp = http::read_response(&mut sock).unwrap();
+    assert_eq!(resp.status, 200);
+    let body = String::from_utf8(resp.body).unwrap();
+    assert!(body.contains("\"name\":\"hcci\""), "{body}");
+    drop(sock);
+
+    let st = server.shutdown();
+    assert_eq!(st.served, 1, "{st}");
+    assert_eq!(st.io_errors, 0, "{st}");
+}
+
+#[test]
+fn slow_reader_does_not_starve_other_clients() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 16);
+    let (server, addr) = start_server(
+        &handle,
+        &bytes,
+        ServerConfig {
+            workers: 2,
+            // full-axis responses are ~400 KiB each; cap the per-conn
+            // write buffer well below that so the slow reader's backlog
+            // trips backpressure instead of buffering without bound
+            write_buf_bytes: 64 * 1024,
+            ..ServerConfig::default()
+        },
+    );
+    let comp = GbatcCompressor::new(&handle, 0, 0);
+
+    // slow reader: pipeline 4 full-volume queries, then read NOTHING yet
+    let mut slow = TcpStream::connect(&addr).unwrap();
+    let mut wire = Vec::new();
+    for i in 0..4 {
+        let close = if i == 3 { "Connection: close\r\n" } else { "" };
+        wire.extend_from_slice(
+            format!("GET /query?dataset=hcci HTTP/1.1\r\n{close}\r\n").as_bytes(),
+        );
+    }
+    slow.write_all(&wire).unwrap();
+
+    // while the slow reader's responses are stuck behind its unread
+    // socket, a well-behaved client must be served promptly (the test
+    // hangs here if a blocked writer can starve the serving loop)
+    let client = QueryClient::new(addr.clone());
+    for _ in 0..3 {
+        let dec = client.query("hcci", Some(0), Some(4), "1").unwrap();
+        let oracle = comp.extract(&SliceSource(&bytes), 0, 4, &[1], 1).unwrap();
+        for (a, b) in dec.mass.iter().zip(&oracle.mass) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    // now drain the slow connection: all 4 responses, in order, intact
+    let oracle = comp.extract(&SliceSource(&bytes), 0, 16, &[], 1).unwrap();
+    for i in 0..4 {
+        let resp = http::read_response(&mut slow).unwrap();
+        assert_eq!(resp.status, 200, "slow response {i}");
+        assert_eq!(resp.body.len(), oracle.mass.len() * 4, "slow response {i}");
+        for (chunk, b) in resp.body.chunks_exact(4).zip(&oracle.mass) {
+            let a = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    drop(slow);
+
+    let st = server.shutdown();
+    assert_eq!(st.served, 7, "4 slow + 3 fast: {st}");
+    assert_eq!(st.io_errors, 0, "{st}");
+    assert_eq!(st.active_conns, 0, "{st}");
+}
+
+#[test]
+fn router_warm_affinity_and_mount_failover() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 8);
+
+    // 3 replicas sharing the test's executor service (the default
+    // `QueryRouter::new` would start a reference backend whose spec
+    // doesn't match this test archive)
+    let store_cfg = StoreConfig {
+        threads: 1,
+        cache_bytes: 16 << 20,
+        cache_shards: 4,
+        ..StoreConfig::default()
+    };
+    let replicas: Vec<_> = (0..3)
+        .map(|_| Arc::new(ArchiveStore::with_handle(&handle, store_cfg.clone())))
+        .collect();
+    let router = QueryRouter::from_replicas(replicas, 64).unwrap();
+
+    // mounts land on their ring-home replica
+    let names = ["flame-a", "flame-b", "flame-c", "flame-d", "flame-e"];
+    for name in &names {
+        let r = router.mount_bytes(name, bytes.clone()).unwrap();
+        assert_eq!(r, router.primary_of(name), "{name} should mount at home");
+        assert_eq!(r, router.route_of(name));
+    }
+
+    // repeat queries for one dataset hit the SAME replica's cache:
+    // query twice, then check per-replica counters
+    let name = "flame-a";
+    let home = router.route_of(name);
+    let q = Query::all(8);
+    assert!(!router.is_warm(name, &q), "nothing decoded yet");
+    router.query(name, &q).unwrap();
+    assert!(router.is_warm(name, &q), "first query must warm the cache");
+    router.query(name, &q).unwrap();
+    let per = router.replica_stats();
+    for (i, s) in per.iter().enumerate() {
+        if i == home {
+            assert_eq!(s.queries, 2, "replica {i}");
+            assert!(s.cache.hits > 0, "second query must hit replica {i}'s cache");
+        } else {
+            assert_eq!(s.queries, 0, "replica {i} must stay cold");
+            assert_eq!(s.cache.hits, 0, "replica {i} must stay cold");
+        }
+    }
+
+    // failover: occupy a fresh name's home replica out-of-band, then the
+    // router mount must walk the ring to a sibling and record it
+    let name = "failover-ds";
+    let home = router.primary_of(name);
+    router
+        .replica(home)
+        .mount_bytes(name, bytes.clone())
+        .unwrap();
+    let placed = router.mount_bytes(name, bytes.clone()).unwrap();
+    assert_ne!(placed, home, "home was occupied; mount must fail over");
+    assert_eq!(router.route_of(name), placed, "failover placement sticks");
+    let before = router.replica_stats()[placed].queries;
+    router.query(name, &q).unwrap();
+    let per = router.replica_stats();
+    assert_eq!(per[placed].queries, before + 1, "query followed the failover");
+    // aggregate stats sum across replicas
+    assert_eq!(router.stats().queries, per.iter().map(|s| s.queries).sum::<u64>());
+}

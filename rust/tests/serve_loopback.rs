@@ -83,7 +83,10 @@ fn start_server(
     (server, store, addr)
 }
 
-/// One raw request, whole response as text (the server closes for us).
+/// One raw request, whole response as text.  Well-formed requests here
+/// carry `Connection: close` — the server now speaks keep-alive, and
+/// `read_to_end` would otherwise wait out the idle timeout.  (Malformed
+/// and oversized requests close unconditionally.)
 fn raw(addr: &str, req: &[u8]) -> String {
     let mut s = TcpStream::connect(addr).expect("connect");
     // the server may answer (and close) before consuming everything we
@@ -158,7 +161,11 @@ fn loopback_concurrent_clients_bit_identical() {
     let st = server.shutdown();
     assert_eq!(st.served, 8, "6 queries + /datasets + /stats: {st}");
     assert_eq!(st.io_errors, 0, "{st}");
-    assert_eq!(st.accepted, 8, "{st}");
+    // keep-alive: 6 one-query clients + 1 client reusing a single
+    // connection for /datasets and /stats
+    assert_eq!(st.accepted, 7, "{st}");
+    assert_eq!(st.keepalive_reuse, 1, "{st}");
+    assert_eq!(st.active_conns, 0, "{st}");
 }
 
 #[test]
@@ -187,12 +194,12 @@ fn server_survives_protocol_abuse_then_serves() {
     let r = raw(&addr, big.as_bytes());
     assert!(r.starts_with("HTTP/1.1 431"), "{r}");
     // wrong method / unknown endpoint
-    let r = raw(&addr, b"POST /query HTTP/1.1\r\n\r\n");
+    let r = raw(&addr, b"POST /query HTTP/1.1\r\nConnection: close\r\n\r\n");
     assert!(r.starts_with("HTTP/1.1 405"), "{r}");
-    let r = raw(&addr, b"GET /nothing HTTP/1.1\r\n\r\n");
+    let r = raw(&addr, b"GET /nothing HTTP/1.1\r\nConnection: close\r\n\r\n");
     assert!(r.starts_with("HTTP/1.1 404"), "{r}");
     // missing dataset parameter
-    let r = raw(&addr, b"GET /query HTTP/1.1\r\n\r\n");
+    let r = raw(&addr, b"GET /query HTTP/1.1\r\nConnection: close\r\n\r\n");
     assert!(r.starts_with("HTTP/1.1 400"), "{r}");
 
     // typed client-side errors carry the status and the server's message
@@ -227,4 +234,9 @@ fn server_survives_protocol_abuse_then_serves() {
     assert_eq!(st.served, 1, "{st}");
     assert!(st.client_errors >= 9, "{st}");
     assert_eq!(st.server_errors, 0, "{st}");
+    // 5 raw abuse connections + the typed client's single keep-alive
+    // connection carrying all 5 of its requests (4 errors + 1 hit)
+    assert_eq!(st.accepted, 6, "{st}");
+    assert_eq!(st.keepalive_reuse, 4, "{st}");
+    assert_eq!(client.connections_opened(), 1);
 }

@@ -65,7 +65,18 @@ def main():
                     f"{kernel}: ratio {got:.2f}x exceeded cap {cap:.2f}x "
                     f"(baseline {base['ratio']:.2f}x + {tol:.0%})"
                 )
-        # rows without speedup/ratio (e.g. stage_times) are informational
+        elif "hit_rate" in base:
+            # hit rates are already machine-relative (a property of the
+            # query mix, not the runner); gate with the same floor rule
+            floor = base["hit_rate"] * (1.0 - tol)
+            got = cur.get("hit_rate", 0.0)
+            print(f"{kernel:<16} {'hit_rate':<8} {base['hit_rate']:>10.2f} {got:>10.2f} {floor:>10.2f}")
+            if got < floor:
+                failures.append(
+                    f"{kernel}: hit_rate {got:.2f} fell below floor {floor:.2f} "
+                    f"(baseline {base['hit_rate']:.2f} - {tol:.0%})"
+                )
+        # rows without speedup/ratio/hit_rate (e.g. stage_times) are informational
 
     if failures:
         print("\nREGRESSIONS:", file=sys.stderr)
