@@ -1,8 +1,8 @@
 //! Hot-path kernel benchmark — per-kernel before/after numbers for the
 //! overhauled paths (guarantee/PCA, table-driven Huffman, planner trial
-//! reuse, the SIMD-dispatched NRMSE sweep, and the Lorenzo interior fast
-//! path), on the pure-Rust reference backend so CI can run it without
-//! AOT artifacts:
+//! reuse, the SIMD-dispatched NRMSE sweep, the Lorenzo interior fast
+//! path, and the slice-by-8 CRC-32 behind the streaming journal), on the
+//! pure-Rust reference backend so CI can run it without AOT artifacts:
 //!
 //! ```bash
 //! cargo bench --bench perf_hotpaths
@@ -573,6 +573,34 @@ fn main() {
     );
     rows.push(SpeedupRow {
         kernel: "lorenzo_predict",
+        baseline_ms: st_old.mean_s * 1e3,
+        optimized_ms: st_new.mean_s * 1e3,
+    });
+
+    // --- CRC-32 sweep (slice-by-8 vs the bytewise oracle) ------------------
+    // the durability tax: every shard payload and journal record is
+    // CRC-framed, so checksum throughput sits on the ingest hot path
+    let mut rng = Prng::new(5);
+    let blob: Vec<u8> = (0..8usize << 20).map(|_| rng.next_u64() as u8).collect();
+    // digest-identity contract first, then the clocks
+    assert_eq!(
+        gbatc::util::crc32::crc32(&blob),
+        gbatc::util::crc32::crc32_bytewise(&blob),
+        "crc32 kernels diverged"
+    );
+    let st_old = bench(1, reps, || {
+        std::hint::black_box(gbatc::util::crc32::crc32_bytewise(&blob));
+    });
+    let st_new = bench(1, reps, || {
+        std::hint::black_box(gbatc::util::crc32::crc32(&blob));
+    });
+    println!(
+        "crc32 sweep     [8 MiB]  before {}  after {}  ({:.2}x)",
+        st_old, st_new,
+        st_old.mean_s / st_new.mean_s
+    );
+    rows.push(SpeedupRow {
+        kernel: "crc32_sweep",
         baseline_ms: st_old.mean_s * 1e3,
         optimized_ms: st_new.mean_s * 1e3,
     });

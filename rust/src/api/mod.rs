@@ -4,9 +4,20 @@
 //!   push-based session for live producers.  Timesteps arrive one
 //!   `[S, Y, X]` frame at a time; at most one `kt_window` of them is
 //!   buffered; every filled window runs the exact one-shot shard path
-//!   and streams its payload to any `io::Write + io::Seek` sink through
-//!   the incremental `GBA2` writer.  Streamed archives are byte-identical
-//!   to one-shot compression of the assembled field.
+//!   and streams its payload to any [`StreamSink`] (`File`, in-memory
+//!   `Cursor`, …) through the incremental `GBA2` writer.  Streamed
+//!   archives are byte-identical to one-shot compression of the
+//!   assembled field.
+//! * **Crash consistency** — the contract every sink gets, not just the
+//!   CLI's `.part`-rename path: each shard is journaled *after* its
+//!   payload bytes are written and flushed, so a process killed
+//!   mid-stream leaves a scannable unsealed prefix;
+//!   [`CompressorBuilder::resume_session`] reopens it and continues
+//!   byte-identically, and `CompressSession::finish` flushes **and
+//!   syncs** (`fsync` on `File` sinks) before returning `Ok` — a
+//!   successful finish means the sealed archive is on stable storage.
+//!   See the [`session`] module docs for the full protocol and
+//!   `gbatc repair` for offline salvage.
 //! * **Accuracy** — [`ErrorPolicy`]: the typed replacement for the scalar
 //!   NRMSE knob.  Uniform, or per-species budgets addressed by index or
 //!   mechanism name ([`SpeciesBudget`]), each certified per
@@ -23,6 +34,7 @@ pub mod policy;
 pub mod reader;
 pub mod session;
 
+pub use crate::archive::stream::{ResumeReport, StreamSink};
 pub use policy::{ErrorPolicy, SpeciesBudget, SpeciesSel};
 pub use reader::{ArchiveReader, Query};
 pub use session::{Backend, CompressReport, CompressSession, CompressorBuilder, FieldSpec};

@@ -19,11 +19,30 @@
 //! [`CompressSession::finish`]: the rate–distortion planner needs every
 //! shard's candidate sizes because the model-parameter charge is
 //! archive-global.  Only encoded candidates are held in the meantime.
+//!
+//! ## Crash consistency
+//!
+//! Single-codec sessions write through the journaled
+//! [`Gba2StreamWriter`]: each shard's payload is written and flushed
+//! *before* the journal record that commits it, and
+//! [`CompressSession::finish`] back-patches the real header + TOC, then
+//! calls [`StreamSink::sync_durable`] (`fsync` for `File` sinks) before
+//! returning — an `Ok` from `finish` means the sealed archive is on
+//! stable storage.  If the process dies mid-stream, the sink holds an
+//! unsealed journaled prefix: reopen it with
+//! [`CompressorBuilder::resume_session`] (same backend, policy, codec,
+//! and field as the interrupted run) and re-push the field from `t = 0`
+//! — already-durable timesteps are skipped, the torn tail is rewritten,
+//! and the sealed archive is **byte-identical** to an uninterrupted run
+//! (property-tested in `tests/streaming_session.rs` by killing at every
+//! shard boundary).  `--codec auto` sessions defer all payload writes
+//! to `finish` and are not resumable; `gbatc repair` can still seal the
+//! surviving prefix of any unsealed stream offline.
 
-use std::io::{Seek, Write};
+use std::io::Read;
 
 use crate::api::policy::ErrorPolicy;
-use crate::archive::stream::{Gba2StreamWriter, StreamLayout};
+use crate::archive::stream::{Gba2StreamWriter, ResumeReport, StreamLayout, StreamSink};
 use crate::archive::toc::{VERSION2, VERSION3};
 use crate::archive::{CodecTag, Gba2Header};
 use crate::compressor::accounting::{model_param_bytes, SizeBreakdown};
@@ -273,7 +292,7 @@ impl CompressorBuilder {
 
     /// Start the configured backend and open a push session writing to
     /// `sink`.
-    pub fn session<W: Write + Seek>(
+    pub fn session<W: StreamSink>(
         &self,
         field: FieldSpec,
         sink: W,
@@ -294,7 +313,7 @@ impl CompressorBuilder {
     /// Open a session on an already-running executor handle (no second
     /// service is spawned; the backend knob is ignored).  The parameter
     /// counts feed compression-ratio accounting.
-    pub fn session_on<W: Write + Seek>(
+    pub fn session_on<W: StreamSink>(
         &self,
         handle: &ExecHandle,
         decoder_params: usize,
@@ -312,10 +331,58 @@ impl CompressorBuilder {
             sink,
         )
     }
+
+    /// Reopen an interrupted single-codec session: scan `sink`'s journal
+    /// ([`Gba2StreamWriter::resume`]), keep every CRC-verified durable
+    /// shard, and return a session that silently skips the
+    /// already-compressed timesteps — re-push the field from `t = 0`
+    /// with the **same** backend, policy, codec, and field spec as the
+    /// interrupted run, and the sealed archive is byte-identical to an
+    /// uninterrupted one.  `--codec auto` sessions are not resumable
+    /// (payload writes are deferred to `finish`, so nothing durable
+    /// survives a crash).
+    pub fn resume_session<W: StreamSink + Read>(
+        &self,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<(CompressSession<W>, ResumeReport)> {
+        let (service, decoder_params, tcn_params) = self.backend.start(self.opts.queue_depth)?;
+        let handle = service.handle();
+        CompressSession::resume(
+            Some(service),
+            handle,
+            decoder_params,
+            tcn_params,
+            self,
+            field,
+            sink,
+        )
+    }
+
+    /// [`resume_session`](Self::resume_session) on an already-running
+    /// executor handle (mirrors [`session_on`](Self::session_on)).
+    pub fn resume_session_on<W: StreamSink + Read>(
+        &self,
+        handle: &ExecHandle,
+        decoder_params: usize,
+        tcn_params: usize,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<(CompressSession<W>, ResumeReport)> {
+        CompressSession::resume(
+            None,
+            handle.clone(),
+            decoder_params,
+            tcn_params,
+            self,
+            field,
+            sink,
+        )
+    }
 }
 
 /// Where a session's payloads go before `finish()`.
-enum SinkState<W: Write + Seek> {
+enum SinkState<W: StreamSink> {
     /// Single-codec policies stream each finished shard immediately.
     Stream(Gba2StreamWriter<W>),
     /// `--codec auto` defers payload emission to `finish()` (the planner
@@ -367,7 +434,7 @@ impl CompressReport {
 }
 
 /// A push-based compression session; see the module docs.
-pub struct CompressSession<W: Write + Seek> {
+pub struct CompressSession<W: StreamSink> {
     /// Keeps a builder-started service alive for the session's lifetime
     /// (`session_on` borrows an external one instead).
     _service: Option<ExecService>,
@@ -386,6 +453,10 @@ pub struct CompressSession<W: Write + Seek> {
     w_fill: usize,
     /// Timesteps received in total.
     t_pushed: usize,
+    /// Leading timesteps a resumed session discards — they are already
+    /// inside durable shards recovered from the stream journal.  Always
+    /// a whole number of shard windows; 0 for a fresh session.
+    skip_t: usize,
     next_shard: usize,
     /// Set when a window flush failed: the archive stream is no longer
     /// consistent, so every later call returns a typed error instead of
@@ -399,16 +470,26 @@ pub struct CompressSession<W: Write + Seek> {
     progress: Progress,
 }
 
-impl<W: Write + Seek> CompressSession<W> {
-    fn start(
-        service: Option<ExecService>,
-        handle: ExecHandle,
+/// Everything `start` and `resume` share: validated knobs, the shard
+/// plan, the run context, and the window buffer.
+struct SessionPrep {
+    opts: CompressOptions,
+    ctx: ShardRunCtx,
+    plan: ShardPlan,
+    window: Vec<f32>,
+    block: (usize, usize, usize),
+    latent_dim: usize,
+    model_bytes_full: usize,
+}
+
+impl SessionPrep {
+    fn new(
+        builder: &CompressorBuilder,
+        handle: &ExecHandle,
         decoder_params: usize,
         tcn_params: usize,
-        builder: &CompressorBuilder,
-        field: FieldSpec,
-        sink: W,
-    ) -> Result<CompressSession<W>> {
+        field: &FieldSpec,
+    ) -> Result<SessionPrep> {
         let spec = handle.spec();
         if field.ns != spec.species {
             return Err(Error::shape(format!(
@@ -441,6 +522,8 @@ impl<W: Write + Seek> CompressSession<W> {
             bx: spec.block.2,
         };
         BlockGrid::new((plan.window(0).nt, field.ns, field.ny, field.nx), shape)?;
+        let block = (spec.block.0, spec.block.1, spec.block.2);
+        let latent_dim = spec.latent;
         // one window in flight at a time: every core works inside it
         let threads = effective_threads(opts.threads);
         let ctx = ShardRunCtx::new(
@@ -452,46 +535,178 @@ impl<W: Write + Seek> CompressSession<W> {
             threads,
         )?;
         let window = vec![0.0f32; plan.kt_window * field.timestep_len()];
-        let sink = if opts.codec == CodecChoice::Auto {
+        let model_bytes_full = model_param_bytes(
+            decoder_params + if opts.use_tcn { tcn_params } else { 0 },
+            opts.model_bytes_f32,
+        );
+        Ok(SessionPrep {
+            opts,
+            ctx,
+            plan,
+            window,
+            block,
+            latent_dim,
+            model_bytes_full,
+        })
+    }
+
+    fn stream_version(&self) -> u16 {
+        if self.opts.codec == CodecChoice::Gbatc {
+            VERSION2
+        } else {
+            VERSION3
+        }
+    }
+
+    fn stream_layout(&self, field: &FieldSpec) -> StreamLayout {
+        StreamLayout {
+            nt: field.nt,
+            ns: field.ns,
+            kt_window: self.plan.kt_window,
+            n_shards: self.plan.len(),
+            version: self.stream_version(),
+        }
+    }
+
+    /// The header the archive will seal with (modulo the final
+    /// model-byte charge) — recorded provisionally in the stream journal
+    /// so `gbatc repair` can seal an orphaned unsealed stream without
+    /// the writing session.
+    fn provisional_header(&self, field: &FieldSpec) -> Gba2Header {
+        Gba2Header {
+            tcn_used: self.opts.use_tcn,
+            dims: (field.nt, field.ns, field.ny, field.nx),
+            block: self.block,
+            latent_dim: self.latent_dim,
+            kt_window: self.plan.kt_window,
+            pressure: field.pressure,
+            nrmse_target: self.ctx.max_target(),
+            model_param_bytes: self.model_bytes_full as u64,
+            ranges: field.ranges.clone(),
+        }
+    }
+}
+
+impl<W: StreamSink> CompressSession<W> {
+    fn start(
+        service: Option<ExecService>,
+        handle: ExecHandle,
+        decoder_params: usize,
+        tcn_params: usize,
+        builder: &CompressorBuilder,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<CompressSession<W>> {
+        let prep = SessionPrep::new(builder, &handle, decoder_params, tcn_params, &field)?;
+        let sink = if prep.opts.codec == CodecChoice::Auto {
             SinkState::Deferred(sink)
         } else {
-            let version = if opts.codec == CodecChoice::Gbatc {
-                VERSION2
-            } else {
-                VERSION3
-            };
-            SinkState::Stream(Gba2StreamWriter::new(
+            SinkState::Stream(Gba2StreamWriter::new_with_header(
                 sink,
-                StreamLayout {
-                    nt: field.nt,
-                    ns: field.ns,
-                    kt_window: plan.kt_window,
-                    n_shards: plan.len(),
-                    version,
-                },
+                prep.stream_layout(&field),
+                &prep.provisional_header(&field),
             )?)
         };
-        Ok(CompressSession {
+        Ok(Self::from_parts(
+            service,
+            handle,
+            decoder_params,
+            tcn_params,
+            prep,
+            field,
+            sink,
+            0,
+            0,
+            ShardTotals::default(),
+        ))
+    }
+
+    /// See [`CompressorBuilder::resume_session`].
+    fn resume(
+        service: Option<ExecService>,
+        handle: ExecHandle,
+        decoder_params: usize,
+        tcn_params: usize,
+        builder: &CompressorBuilder,
+        field: FieldSpec,
+        sink: W,
+    ) -> Result<(CompressSession<W>, ResumeReport)>
+    where
+        W: Read,
+    {
+        if builder.opts.codec == CodecChoice::Auto {
+            return Err(Error::config(
+                "cannot resume a --codec auto session: payload writes are deferred to \
+                 finish, so an interrupted run leaves no durable shards",
+            ));
+        }
+        let prep = SessionPrep::new(builder, &handle, decoder_params, tcn_params, &field)?;
+        let (writer, report) = Gba2StreamWriter::resume(sink)?;
+        let expect = prep.stream_layout(&field);
+        if *writer.layout() != expect {
+            return Err(Error::config(format!(
+                "resume layout mismatch: journal {:?} vs configured {:?} — resume with \
+                 the same field, kt_window, and codec as the interrupted run",
+                writer.layout(),
+                expect
+            )));
+        }
+        let skip_t = writer.timesteps_written();
+        let next_shard = writer.shards_written();
+        let mut totals = ShardTotals::default();
+        // the sealed header's model_param_bytes depends on whether *any*
+        // section decodes through the model — including recovered ones
+        totals.any_gbatc |= report.any_gbatc;
+        let session = Self::from_parts(
+            service,
+            handle,
+            decoder_params,
+            tcn_params,
+            prep,
+            field,
+            SinkState::Stream(writer),
+            skip_t,
+            next_shard,
+            totals,
+        );
+        Ok((session, report))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn from_parts(
+        service: Option<ExecService>,
+        handle: ExecHandle,
+        decoder_params: usize,
+        tcn_params: usize,
+        prep: SessionPrep,
+        field: FieldSpec,
+        sink: SinkState<W>,
+        skip_t: usize,
+        next_shard: usize,
+        totals: ShardTotals,
+    ) -> CompressSession<W> {
+        CompressSession {
             _service: service,
             handle,
             decoder_params,
             tcn_params,
-            opts,
-            ctx,
+            opts: prep.opts,
+            ctx: prep.ctx,
             field,
-            plan,
+            plan: prep.plan,
             sink,
-            window,
+            window: prep.window,
             w_fill: 0,
             t_pushed: 0,
-            next_shard: 0,
+            skip_t,
+            next_shard,
             poisoned: false,
             pending: Vec::new(),
-            totals: ShardTotals::default(),
+            totals,
             meter: WorkspaceMeter::new(),
             clock: StageClock::new(),
             progress: Progress::new(),
-        })
+        }
     }
 
     /// The field this session was opened for.
@@ -504,9 +719,16 @@ impl<W: Write + Seek> CompressSession<W> {
         self.t_pushed
     }
 
-    /// Shards fully compressed so far.
+    /// Shards fully compressed so far (including shards a resumed
+    /// session recovered from the journal).
     pub fn shards_compressed(&self) -> usize {
         self.next_shard
+    }
+
+    /// Leading timesteps this session discards because they are already
+    /// durable in the resumed stream; 0 for a fresh session.
+    pub fn timesteps_skipped(&self) -> usize {
+        self.skip_t
     }
 
     /// Hand over one `[S, Y, X]` timestep.  When the buffered window
@@ -529,6 +751,12 @@ impl<W: Write + Seek> CompressSession<W> {
                 "session already received all {} timesteps",
                 self.field.nt
             )));
+        }
+        if self.t_pushed < self.skip_t {
+            // resumed session: this timestep is already inside a durable
+            // shard recovered from the journal — count it and move on
+            self.t_pushed += 1;
+            return Ok(());
         }
         let off = self.w_fill * stride;
         self.window[off..off + stride].copy_from_slice(frame);
@@ -626,6 +854,10 @@ impl<W: Write + Seek> CompressSession<W> {
     /// Seal the archive: every declared timestep must have been pushed.
     /// For `--codec auto`, the archive-level planner resolves the
     /// deferred shards here, then all payloads stream out in one pass.
+    ///
+    /// Durability: the sealed bytes are flushed and synced
+    /// ([`StreamSink::sync_durable`] — `fsync` for `File` sinks) before
+    /// this returns, so `Ok` means the archive is on stable storage.
     pub fn finish(self) -> Result<CompressReport> {
         Ok(self.finish_into()?.0)
     }

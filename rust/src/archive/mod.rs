@@ -18,13 +18,19 @@
 pub mod format;
 pub mod metered;
 pub mod mmap;
+pub mod repair;
 pub mod stream;
 pub mod toc;
 
 pub use format::{Archive, SpeciesSection, MAGIC};
 pub use metered::{IoStats, MeteredSource};
 pub use mmap::MmapSource;
-pub use stream::{Gba2StreamWriter, StreamLayout, StreamSummary};
+pub use repair::{
+    compact_archives, repair_archive, verify_archive, RepairOutcome, SectionHealth, VerifyReport,
+};
+pub use stream::{
+    Gba2StreamWriter, ResumeReport, StreamLayout, StreamSink, StreamSummary, JOURNAL_MAGIC,
+};
 pub use toc::{
     CodecTag, CountingSource, FileSource, Gba2Archive, Gba2Header, MemSource, SectionSource,
     ShardPayload, ShardToc, SliceSource, MAGIC2,

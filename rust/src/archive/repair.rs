@@ -1,0 +1,886 @@
+//! Offline archive health & salvage — the library behind
+//! `gbatc inspect --verify`, `gbatc repair`, and `gbatc compact`.
+//!
+//! Three entry points, all pure functions over archive bytes:
+//!
+//! * [`verify_archive`] — walk every section of a sealed (`GBA1`/`GBA2`)
+//!   or unsealed (`GBJL` journal) file and report per-section health.
+//!   Sealed sections are *structurally* decoded (basis + coefficient
+//!   streams for GBATC, full plane decode for SZ/DENSE); unsealed shards
+//!   are CRC-verified against their journal records.  Read-only.
+//! * [`repair_archive`] — salvage the structurally valid shard prefix of
+//!   a torn file into a well-formed `GBA2`, rewriting the header + TOC
+//!   through the same `write_header_toc` every writer uses.  Works on
+//!   both sealed archives (torn TOC or payload tail) and unsealed
+//!   journal streams a killed writer left behind.
+//! * [`compact_archives`] — merge small archives from the same run
+//!   (e.g. a repaired prefix plus a fuller re-run) into one, dropping
+//!   duplicate and orphaned shards.
+//!
+//! Sealed `GBA2` bytes carry no checksums (the format is unchanged for
+//! backward compatibility), so sealed-archive verification is
+//! structural: it proves every section parses and decodes, not that the
+//! decoded values match the originals.  Unsealed streams *are* CRC'd —
+//! each journal record commits a payload checksum — so pre-seal damage
+//! is detected exactly.
+
+use crate::archive::format::{Archive, SpeciesSection, MAGIC};
+use crate::archive::stream::{
+    parse_journal_header, parse_journal_records, JOURNAL_MAGIC, TRAILER_LEN, TRAILER_MAGIC,
+};
+use crate::archive::toc::{
+    header_toc_len, parse_header_toc_prefix, CodecTag, Gba2Archive, Gba2Header, ShardPayload,
+    MAGIC2,
+};
+use crate::codec::{CoeffCodec, LatentCodec};
+use crate::compressor::registry::decode_stage;
+use crate::data::blocks::{BlockGrid, BlockShape};
+use crate::error::{Error, Result};
+use crate::util::crc32::crc32;
+
+/// Health of one verified unit: a species section, a latent-plane
+/// section (`species: None`), or — for unsealed streams — one journaled
+/// shard payload (`species: None`).
+#[derive(Clone, Debug)]
+pub struct SectionHealth {
+    pub shard: usize,
+    /// `None` for a shard-level unit (latent plane / journal payload).
+    pub species: Option<usize>,
+    pub ok: bool,
+    /// What failed (empty when `ok`).
+    pub detail: String,
+}
+
+impl SectionHealth {
+    fn ok(shard: usize, species: Option<usize>) -> SectionHealth {
+        SectionHealth {
+            shard,
+            species,
+            ok: true,
+            detail: String::new(),
+        }
+    }
+
+    fn bad(shard: usize, species: Option<usize>, detail: impl Into<String>) -> SectionHealth {
+        SectionHealth {
+            shard,
+            species,
+            ok: false,
+            detail: detail.into(),
+        }
+    }
+}
+
+/// Result of [`verify_archive`].
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    /// Input was a sealed archive (vs an unsealed `GBJL` stream).
+    pub sealed: bool,
+    /// Shards the header / journal declares.
+    pub shards_declared: usize,
+    /// Structurally valid (TOC) / committed (journal) shard prefix.
+    pub shards_indexed: usize,
+    pub sections: Vec<SectionHealth>,
+    /// Unsealed only: bytes of a complete shard payload whose journal
+    /// record never landed (flushed but uncommitted — dropped by both
+    /// `resume` and `repair`).
+    pub uncommitted_tail: u64,
+}
+
+impl VerifyReport {
+    /// Every declared shard present and every section decodes.
+    pub fn healthy(&self) -> bool {
+        self.shards_indexed == self.shards_declared && self.sections.iter().all(|s| s.ok)
+    }
+
+    /// Count of failed sections (missing shards included).
+    pub fn damaged_sections(&self) -> usize {
+        self.sections.iter().filter(|s| !s.ok).count()
+    }
+}
+
+/// What [`repair_archive`] / [`compact_archives`] did.
+#[derive(Clone, Debug)]
+pub struct RepairOutcome {
+    /// Input was sealed (vs an unsealed `GBJL` stream).
+    pub sealed_input: bool,
+    /// Shards declared across the input(s).
+    pub shards_in: usize,
+    /// Shards in the emitted archive.
+    pub shards_out: usize,
+    /// Timesteps the emitted archive covers.
+    pub timesteps_out: usize,
+    /// Size of the emitted archive.
+    pub bytes_out: u64,
+    /// False when the input was already well-formed and is returned
+    /// unchanged.
+    pub changed: bool,
+    /// Compact only: shards dropped because their time span was already
+    /// covered.
+    pub dropped_duplicate: usize,
+    /// Compact only: shards dropped because they do not connect to the
+    /// tiling chain.
+    pub dropped_orphaned: usize,
+}
+
+fn section_slice(bytes: &[u8], range: (u64, u64)) -> Result<&[u8]> {
+    let off = usize::try_from(range.0).map_err(|_| Error::format("section offset overflows"))?;
+    let len = usize::try_from(range.1).map_err(|_| Error::format("section length overflows"))?;
+    bytes
+        .get(off..off.checked_add(len).ok_or_else(|| Error::format("section span overflows"))?)
+        .ok_or_else(|| Error::format("section range beyond file"))
+}
+
+/// Structural check of a parsed GBATC section — the exact validation
+/// `GbatcShardCodec::correct_plane` performs before touching a plane
+/// (block count, coefficient dimension, index-vs-rank), without paying
+/// for the plane itself.
+fn check_gbatc_parsed(sec: &SpeciesSection, nb: usize, d: usize) -> Result<()> {
+    let coeffs = CoeffCodec::decode(&sec.coeffs)?;
+    if coeffs.per_block.len() != nb || (coeffs.d != d && !coeffs.per_block.is_empty()) {
+        return Err(Error::codec(format!(
+            "gbatc section: {} coefficient blocks of dim {} vs grid {nb} x {d}",
+            coeffs.per_block.len(),
+            coeffs.d
+        )));
+    }
+    if coeffs
+        .per_block
+        .iter()
+        .flatten()
+        .any(|&(j, _)| j >= sec.basis.rank)
+    {
+        return Err(Error::codec(format!(
+            "gbatc section: coefficient index beyond basis rank {}",
+            sec.basis.rank
+        )));
+    }
+    Ok(())
+}
+
+fn check_latent(bytes: &[u8], nb: usize, latent_dim: usize) -> Result<()> {
+    let plane = LatentCodec::decode(bytes)?;
+    if plane.n != nb || plane.dim != latent_dim {
+        return Err(Error::format(format!(
+            "latent plane {}x{} vs expected {nb}x{latent_dim}",
+            plane.n, plane.dim
+        )));
+    }
+    Ok(())
+}
+
+fn health_of(shard: usize, species: Option<usize>, res: Result<()>) -> SectionHealth {
+    match res {
+        Ok(()) => SectionHealth::ok(shard, species),
+        Err(e) => SectionHealth::bad(shard, species, e.to_string()),
+    }
+}
+
+/// Walk every section of `bytes` — a sealed `GBA1`/`GBA2` archive or an
+/// unsealed `GBJL` stream — and report per-section health.  Errors only
+/// when the file is too damaged to even size (no recognizable magic,
+/// rotted fixed header fields).
+pub fn verify_archive(bytes: &[u8]) -> Result<VerifyReport> {
+    if bytes.starts_with(JOURNAL_MAGIC) {
+        return verify_unsealed(bytes);
+    }
+    if bytes.starts_with(MAGIC2) {
+        return verify_sealed_v2(bytes);
+    }
+    if bytes.starts_with(MAGIC) {
+        return verify_sealed_v1(bytes);
+    }
+    Err(Error::format(
+        "unknown magic (expected GBA1, GBA2, or GBJL journal)",
+    ))
+}
+
+fn verify_sealed_v2(bytes: &[u8]) -> Result<VerifyReport> {
+    let (header, toc, declared) = parse_header_toc_prefix(bytes, bytes.len() as u64)?;
+    let (_, ns, ny, nx) = header.dims;
+    let shape = BlockShape {
+        kt: header.block.0,
+        by: header.block.1,
+        bx: header.block.2,
+    };
+    let mut sections = Vec::new();
+    let mut scratch = Vec::new();
+    for (i, entry) in toc.iter().enumerate() {
+        let grid = match BlockGrid::new((entry.nt, 1, ny, nx), shape) {
+            Ok(g) => g,
+            Err(e) => {
+                // header-level block/dims mismatch: every section of the
+                // shard is unverifiable
+                sections.push(SectionHealth::bad(i, None, e.to_string()));
+                continue;
+            }
+        };
+        let nb = grid.n_blocks();
+        let d = shape.d();
+        let any_gbatc = entry.codecs.iter().any(|&c| c == CodecTag::Gbatc);
+        if any_gbatc || entry.latent.1 > 0 {
+            let res = section_slice(bytes, entry.latent)
+                .and_then(|b| check_latent(b, nb, header.latent_dim));
+            sections.push(health_of(i, None, res));
+        }
+        for (s, (&range, &tag)) in entry.species.iter().zip(&entry.codecs).enumerate() {
+            let res = section_slice(bytes, range).and_then(|sec| match tag {
+                CodecTag::Gbatc => {
+                    SpeciesSection::from_bytes(sec).and_then(|p| check_gbatc_parsed(&p, nb, d))
+                }
+                tag => {
+                    scratch.clear();
+                    scratch.resize(entry.nt * ny * nx, 0.0f32);
+                    decode_stage(tag)?.decode(sec, entry.nt, ny, nx, &mut scratch)
+                }
+            });
+            sections.push(health_of(i, Some(s), res));
+        }
+    }
+    for i in toc.len()..declared {
+        sections.push(SectionHealth::bad(i, None, "TOC entry missing or torn"));
+    }
+    Ok(VerifyReport {
+        sealed: true,
+        shards_declared: declared,
+        shards_indexed: toc.len(),
+        sections,
+        uncommitted_tail: 0,
+    })
+}
+
+fn verify_sealed_v1(bytes: &[u8]) -> Result<VerifyReport> {
+    let mut report = VerifyReport {
+        sealed: true,
+        shards_declared: 1,
+        shards_indexed: 0,
+        sections: Vec::new(),
+        uncommitted_tail: 0,
+    };
+    let a = match Archive::deserialize(bytes) {
+        Ok(a) => a,
+        Err(e) => {
+            report
+                .sections
+                .push(SectionHealth::bad(0, None, e.to_string()));
+            return Ok(report);
+        }
+    };
+    report.shards_indexed = 1;
+    let (nt, _, ny, nx) = a.dims;
+    let shape = BlockShape {
+        kt: a.block.0,
+        by: a.block.1,
+        bx: a.block.2,
+    };
+    match BlockGrid::new((nt, 1, ny, nx), shape) {
+        Ok(grid) => {
+            let nb = grid.n_blocks();
+            report.sections.push(health_of(
+                0,
+                None,
+                check_latent(&a.latent_blob, nb, a.latent_dim),
+            ));
+            for (s, sec) in a.species.iter().enumerate() {
+                report.sections.push(health_of(
+                    0,
+                    Some(s),
+                    check_gbatc_parsed(sec, nb, shape.d()),
+                ));
+            }
+        }
+        Err(e) => report
+            .sections
+            .push(SectionHealth::bad(0, None, e.to_string())),
+    }
+    Ok(report)
+}
+
+fn verify_unsealed(bytes: &[u8]) -> Result<VerifyReport> {
+    let (layout, _header) = parse_journal_header(bytes)?;
+    let records = parse_journal_records(bytes, &layout);
+    let base = header_toc_len(layout.ns, layout.n_shards, layout.version) as u64;
+    let mut sections = Vec::new();
+    let mut cursor = base;
+    let mut committed = 0usize;
+    for (k, rec) in records.iter().enumerate() {
+        let res = section_slice(bytes, (cursor, rec.shard_len)).and_then(|payload| {
+            if crc32(payload) == rec.payload_crc {
+                Ok(())
+            } else {
+                Err(Error::format("journal payload CRC mismatch"))
+            }
+        });
+        let ok = res.is_ok();
+        sections.push(health_of(k, None, res));
+        if !ok {
+            break;
+        }
+        committed += 1;
+        cursor += rec.shard_len;
+    }
+    Ok(VerifyReport {
+        sealed: false,
+        shards_declared: layout.n_shards,
+        shards_indexed: committed,
+        sections,
+        uncommitted_tail: scan_uncommitted_tail(bytes, cursor),
+    })
+}
+
+/// Scan the bytes after the last committed payload for a complete shard
+/// whose `GBSH` trailer was flushed but whose journal record never
+/// landed (a crash can fall between the two flushes).  The trailer
+/// carries the payload length + CRC, so a forward scan for the magic can
+/// validate the candidate exactly.  Such a payload is *reported*, not
+/// salvaged — its per-section byte ranges lived only in the unwritten
+/// record.
+fn scan_uncommitted_tail(bytes: &[u8], from: u64) -> u64 {
+    let from = usize::try_from(from).unwrap_or(usize::MAX);
+    let Some(tail) = bytes.get(from..) else {
+        return 0;
+    };
+    let mut p = 0usize;
+    while p + TRAILER_LEN <= tail.len() {
+        if &tail[p..p + 4] == TRAILER_MAGIC {
+            let len = u64::from_le_bytes(tail[p + 4..p + 12].try_into().unwrap());
+            let crc = u32::from_le_bytes(tail[p + 12..p + 16].try_into().unwrap());
+            if len == p as u64 && p > 0 && crc == crc32(&tail[..p]) {
+                return len;
+            }
+        }
+        p += 1;
+    }
+    0
+}
+
+/// Salvage the valid shard prefix of a damaged file into a well-formed
+/// `GBA2` archive.  Accepts a sealed `GBA2` with a torn TOC or payload
+/// tail, an unsealed `GBJL` stream a killed writer left behind, or (as a
+/// pass-through) an intact `GBA1`/`GBA2`.  The emitted archive covers
+/// exactly the salvaged timesteps (`dims.0` is adjusted) and is rebuilt
+/// through [`Gba2Archive::build`], so its header + TOC go through the
+/// same `write_header_toc` as every other writer.
+///
+/// Sealed salvage is TOC-level (sealed archives carry no payload
+/// checksums — run [`verify_archive`] for deep structural health);
+/// unsealed salvage is exact, CRC-verifying every committed payload.
+pub fn repair_archive(bytes: &[u8]) -> Result<(Vec<u8>, RepairOutcome)> {
+    if bytes.starts_with(JOURNAL_MAGIC) {
+        return repair_unsealed(bytes);
+    }
+    if bytes.starts_with(MAGIC2) {
+        return repair_sealed(bytes);
+    }
+    if bytes.starts_with(MAGIC) {
+        // GBA1 has no shard TOC: either it parses whole or nothing is
+        // addressable
+        return match Archive::deserialize(bytes) {
+            Ok(a) => Ok((
+                bytes.to_vec(),
+                RepairOutcome {
+                    sealed_input: true,
+                    shards_in: 1,
+                    shards_out: 1,
+                    timesteps_out: a.dims.0,
+                    bytes_out: bytes.len() as u64,
+                    changed: false,
+                    dropped_duplicate: 0,
+                    dropped_orphaned: 0,
+                },
+            )),
+            Err(e) => Err(Error::format(format!(
+                "GBA1 archive is damaged and has no shard TOC to salvage from: {e}"
+            ))),
+        };
+    }
+    Err(Error::format(
+        "unknown magic (expected GBA1, GBA2, or GBJL journal)",
+    ))
+}
+
+fn rebuild(
+    mut header: Gba2Header,
+    shards: Vec<ShardPayload>,
+    sealed_input: bool,
+    shards_in: usize,
+) -> Result<(Vec<u8>, RepairOutcome)> {
+    if shards.is_empty() {
+        return Err(Error::format(
+            "no intact shards to salvage — nothing recoverable",
+        ));
+    }
+    let timesteps: usize = shards.iter().map(|s| s.nt).sum();
+    header.dims.0 = timesteps;
+    let shards_out = shards.len();
+    let archive = Gba2Archive::build(header, shards)?;
+    let bytes = archive.into_bytes();
+    let bytes_out = bytes.len() as u64;
+    Ok((
+        bytes,
+        RepairOutcome {
+            sealed_input,
+            shards_in,
+            shards_out,
+            timesteps_out: timesteps,
+            bytes_out,
+            changed: true,
+            dropped_duplicate: 0,
+            dropped_orphaned: 0,
+        },
+    ))
+}
+
+fn repair_sealed(bytes: &[u8]) -> Result<(Vec<u8>, RepairOutcome)> {
+    if let Ok(a) = Gba2Archive::deserialize(bytes) {
+        // already well-formed: pass through untouched
+        return Ok((
+            bytes.to_vec(),
+            RepairOutcome {
+                sealed_input: true,
+                shards_in: a.n_shards(),
+                shards_out: a.n_shards(),
+                timesteps_out: a.header.dims.0,
+                bytes_out: bytes.len() as u64,
+                changed: false,
+                dropped_duplicate: 0,
+                dropped_orphaned: 0,
+            },
+        ));
+    }
+    let (header, toc, declared) = parse_header_toc_prefix(bytes, bytes.len() as u64)?;
+    let mut shards = Vec::with_capacity(toc.len());
+    for entry in &toc {
+        let latent_blob = section_slice(bytes, entry.latent)?.to_vec();
+        let mut species = Vec::with_capacity(entry.species.len());
+        for &range in &entry.species {
+            species.push(section_slice(bytes, range)?.to_vec());
+        }
+        shards.push(ShardPayload {
+            t0: entry.t0,
+            nt: entry.nt,
+            latent_blob,
+            species,
+            codecs: entry.codecs.clone(),
+        });
+    }
+    rebuild(header, shards, true, declared)
+}
+
+fn repair_unsealed(bytes: &[u8]) -> Result<(Vec<u8>, RepairOutcome)> {
+    let (layout, header) = parse_journal_header(bytes)?;
+    let records = parse_journal_records(bytes, &layout);
+    let base = header_toc_len(layout.ns, layout.n_shards, layout.version) as u64;
+    let mut shards = Vec::with_capacity(records.len());
+    let mut cursor = base;
+    for rec in &records {
+        let Ok(payload) = section_slice(bytes, (cursor, rec.shard_len)) else {
+            break; // torn payload tail
+        };
+        if crc32(payload) != rec.payload_crc {
+            break; // bit rot or torn write under the committed record
+        }
+        let latent_len = usize::try_from(rec.latent_len)
+            .map_err(|_| Error::format("latent length overflows"))?;
+        let latent_blob = payload[..latent_len].to_vec();
+        let mut species = Vec::with_capacity(rec.sec_lens.len());
+        let mut off = latent_len;
+        for &len in &rec.sec_lens {
+            let len = usize::try_from(len).map_err(|_| Error::format("section length overflows"))?;
+            species.push(payload[off..off + len].to_vec());
+            off += len;
+        }
+        shards.push(ShardPayload {
+            t0: rec.t0,
+            nt: rec.nt,
+            latent_blob,
+            species,
+            codecs: rec.codecs.clone(),
+        });
+        cursor += rec.shard_len;
+    }
+    rebuild(header, shards, false, layout.n_shards)
+}
+
+/// Merge archives from the same run (shared time origin and layout) into
+/// one, in input order — e.g. a crash-repaired prefix plus a fuller
+/// re-run.  Shards whose time span is already covered are dropped as
+/// duplicates (first writer wins); shards that do not connect to the
+/// tiling chain (a gap, a partial overlap, or anything after a short
+/// final shard) are dropped as orphans.
+///
+/// All inputs must agree on species count, grid, block shape,
+/// `latent_dim`, `kt_window`, TCN use, and normalization ranges; the
+/// merged header takes the loosest `nrmse_target` (every section keeps
+/// its own certified bound) and the largest `model_param_bytes` (the
+/// shared model is charged once).
+pub fn compact_archives(inputs: &[Gba2Archive]) -> Result<(Gba2Archive, RepairOutcome)> {
+    let first = inputs
+        .first()
+        .ok_or_else(|| Error::format("compact: no input archives"))?;
+    let mut header = first.header.clone();
+    let mut shards_in = 0usize;
+    for (i, a) in inputs.iter().enumerate() {
+        let h = &a.header;
+        let same_ranges = h.ranges.len() == header.ranges.len()
+            && h.ranges
+                .iter()
+                .zip(&header.ranges)
+                .all(|(a, b)| a.0.to_bits() == b.0.to_bits() && a.1.to_bits() == b.1.to_bits());
+        if h.dims.1 != header.dims.1
+            || h.dims.2 != header.dims.2
+            || h.dims.3 != header.dims.3
+            || h.block != header.block
+            || h.latent_dim != header.latent_dim
+            || h.kt_window != header.kt_window
+            || h.tcn_used != header.tcn_used
+            || !same_ranges
+        {
+            return Err(Error::format(format!(
+                "compact: archive {i} has an incompatible layout (species/grid/block/\
+                 latent/kt_window/ranges must match archive 0)"
+            )));
+        }
+        header.nrmse_target = header.nrmse_target.max(h.nrmse_target);
+        header.model_param_bytes = header.model_param_bytes.max(h.model_param_bytes);
+        shards_in += a.n_shards();
+    }
+
+    let mut kept: Vec<ShardPayload> = Vec::new();
+    let mut expect_t0 = 0usize;
+    let mut closed = false; // a short (final) shard ends the chain
+    let mut dropped_duplicate = 0usize;
+    let mut dropped_orphaned = 0usize;
+    for a in inputs {
+        for (i, entry) in a.toc.iter().enumerate() {
+            let end = entry.t0 + entry.nt;
+            if end <= expect_t0 {
+                dropped_duplicate += 1;
+                continue;
+            }
+            if closed || entry.t0 != expect_t0 {
+                // gap, partial overlap, or material after a short shard
+                dropped_orphaned += 1;
+                continue;
+            }
+            kept.push(ShardPayload {
+                t0: entry.t0,
+                nt: entry.nt,
+                latent_blob: a.latent_bytes(i)?.to_vec(),
+                species: (0..entry.species.len())
+                    .map(|s| a.species_bytes(i, s).map(|b| b.to_vec()))
+                    .collect::<Result<Vec<_>>>()?,
+                codecs: entry.codecs.clone(),
+            });
+            expect_t0 = end;
+            closed = entry.nt < header.kt_window;
+        }
+    }
+    if kept.is_empty() {
+        return Err(Error::format("compact: no shard starts at timestep 0"));
+    }
+    header.dims.0 = expect_t0;
+    let shards_out = kept.len();
+    let changed = inputs.len() > 1 || shards_out != shards_in;
+    let archive = Gba2Archive::build(header, kept)?;
+    let outcome = RepairOutcome {
+        sealed_input: true,
+        shards_in,
+        shards_out,
+        timesteps_out: expect_t0,
+        bytes_out: archive.bytes.len() as u64,
+        changed,
+        dropped_duplicate,
+        dropped_orphaned,
+    };
+    Ok((archive, outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::archive::stream::{
+        journal_header_len, journal_record_len, Gba2StreamWriter, StreamLayout,
+    };
+    use crate::gae::basis::SpeciesBasis;
+    use crate::linalg::Mat;
+    use crate::util::bytes::ByteWriter;
+    use std::io::Cursor;
+
+    const NS: usize = 2;
+    const NY: usize = 4;
+    const NX: usize = 4;
+    const KT: usize = 4;
+    const BLOCK: (usize, usize, usize) = (2, 2, 2);
+    const D: usize = 8; // 2*2*2
+    const NB: usize = 8; // (4/2)*(4/2)*(4/2) per shard
+    const LATENT_DIM: usize = 4;
+
+    fn header(nt: usize) -> Gba2Header {
+        Gba2Header {
+            tcn_used: false,
+            dims: (nt, NS, NY, NX),
+            block: BLOCK,
+            latent_dim: LATENT_DIM,
+            kt_window: KT,
+            pressure: 0.5,
+            nrmse_target: 1e-2,
+            model_param_bytes: 64,
+            ranges: vec![(0.0, 1.0); NS],
+        }
+    }
+
+    /// A valid DENSE constant-plane section (width 0 ⇒ fill(lo)).
+    fn dense_section(lo: f32) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.f32(lo);
+        w.f64(0.5);
+        w.u8(0);
+        w.blob(&[]);
+        w.finish()
+    }
+
+    /// A valid GBATC section: identity basis of rank 2, one coefficient
+    /// pair per block.
+    fn gbatc_section() -> Vec<u8> {
+        let basis = SpeciesBasis::from_mat(&Mat::identity(D), 2);
+        let per_block = vec![vec![(0usize, 1i64), (1, -2)]; NB];
+        let coeffs = CoeffCodec::encode(&per_block, D, 0.1).unwrap();
+        SpeciesSection { basis, coeffs }.to_bytes()
+    }
+
+    fn latent_blob() -> Vec<u8> {
+        LatentCodec::encode(&vec![0.25f32; NB * LATENT_DIM], NB, LATENT_DIM, 0.01)
+            .unwrap()
+            .0
+    }
+
+    /// All-DENSE archive (version 3), `n_shards` full windows.
+    fn dense_archive(n_shards: usize) -> Gba2Archive {
+        let shards = (0..n_shards)
+            .map(|i| ShardPayload {
+                t0: i * KT,
+                nt: KT,
+                latent_blob: Vec::new(),
+                species: (0..NS).map(|s| dense_section(0.1 * (s + 1) as f32)).collect(),
+                codecs: vec![CodecTag::Dense; NS],
+            })
+            .collect();
+        Gba2Archive::build(header(n_shards * KT), shards).unwrap()
+    }
+
+    /// All-GBATC archive (version 2), `n_shards` full windows.
+    fn gbatc_archive(n_shards: usize) -> Gba2Archive {
+        let shards = (0..n_shards)
+            .map(|i| {
+                ShardPayload::gbatc(
+                    i * KT,
+                    KT,
+                    latent_blob(),
+                    (0..NS).map(|_| gbatc_section()).collect(),
+                )
+            })
+            .collect();
+        Gba2Archive::build(header(n_shards * KT), shards).unwrap()
+    }
+
+    #[test]
+    fn verify_healthy_archives_pass() {
+        let dense = dense_archive(2);
+        let r = verify_archive(&dense.bytes).unwrap();
+        assert!(r.healthy(), "dense: {:?}", r.sections);
+        assert!(r.sealed);
+        assert_eq!((r.shards_declared, r.shards_indexed), (2, 2));
+        // DENSE shards carry no latent section: NS entries per shard
+        assert_eq!(r.sections.len(), 2 * NS);
+
+        let gbatc = gbatc_archive(2);
+        let r = verify_archive(&gbatc.bytes).unwrap();
+        assert!(r.healthy(), "gbatc: {:?}", r.sections);
+        // latent + NS species per shard
+        assert_eq!(r.sections.len(), 2 * (1 + NS));
+    }
+
+    #[test]
+    fn verify_flags_bit_flipped_section() {
+        let a = gbatc_archive(2);
+        let mut bytes = a.bytes.clone();
+        // corrupt the basis `d` field (high byte) of shard 1, species 1
+        let off = a.toc[1].species[1].0 as usize + 6;
+        bytes[off] ^= 0xFF;
+        let r = verify_archive(&bytes).unwrap();
+        assert!(!r.healthy());
+        assert_eq!(r.damaged_sections(), 1);
+        let bad = r.sections.iter().find(|s| !s.ok).unwrap();
+        assert_eq!((bad.shard, bad.species), (1, Some(1)));
+        assert!(!bad.detail.is_empty());
+    }
+
+    #[test]
+    fn verify_rejects_unknown_magic() {
+        assert!(verify_archive(b"NOPE....").is_err());
+    }
+
+    #[test]
+    fn repair_passes_through_intact_archive() {
+        let a = dense_archive(2);
+        let (bytes, outcome) = repair_archive(&a.bytes).unwrap();
+        assert_eq!(bytes, a.bytes);
+        assert!(!outcome.changed);
+        assert_eq!(outcome.shards_out, 2);
+    }
+
+    #[test]
+    fn repair_salvages_torn_sealed_archive() {
+        let a = dense_archive(3);
+        // tear 3 bytes off the final shard's payload
+        let torn = &a.bytes[..a.bytes.len() - 3];
+        assert!(Gba2Archive::deserialize(torn).is_err());
+        let (bytes, outcome) = repair_archive(torn).unwrap();
+        assert!(outcome.changed);
+        assert_eq!(outcome.shards_in, 3);
+        assert_eq!(outcome.shards_out, 2);
+        assert_eq!(outcome.timesteps_out, 2 * KT);
+        let repaired = Gba2Archive::deserialize(&bytes).unwrap();
+        assert_eq!(repaired.n_shards(), 2);
+        assert_eq!(repaired.header.dims.0, 2 * KT);
+        assert!(verify_archive(&bytes).unwrap().healthy());
+        // the surviving shards' payload bytes are bit-identical
+        for i in 0..2 {
+            for s in 0..NS {
+                assert_eq!(
+                    repaired.species_bytes(i, s).unwrap(),
+                    a.species_bytes(i, s).unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repair_errors_when_nothing_recoverable() {
+        let a = dense_archive(2);
+        // tear into the first shard's payload: no complete shard survives
+        let torn = &a.bytes[..a.toc[0].shard.0 as usize + 4];
+        assert!(repair_archive(torn).is_err());
+    }
+
+    fn unsealed_stream(n_written: usize, n_declared: usize) -> Vec<u8> {
+        let h = header(n_declared * KT);
+        let layout = StreamLayout {
+            nt: n_declared * KT,
+            ns: NS,
+            kt_window: KT,
+            n_shards: n_declared,
+            version: 3,
+        };
+        let mut w =
+            Gba2StreamWriter::new_with_header(Cursor::new(Vec::new()), layout, &h).unwrap();
+        for i in 0..n_written {
+            w.write_shard(&ShardPayload {
+                t0: i * KT,
+                nt: KT,
+                latent_blob: Vec::new(),
+                species: (0..NS).map(|s| dense_section(0.1 * (s + 1) as f32)).collect(),
+                codecs: vec![CodecTag::Dense; NS],
+            })
+            .unwrap();
+        }
+        w.abort().into_inner()
+    }
+
+    #[test]
+    fn repair_seals_interrupted_stream() {
+        let bytes = unsealed_stream(2, 3);
+        let r = verify_archive(&bytes).unwrap();
+        assert!(!r.sealed);
+        assert_eq!((r.shards_declared, r.shards_indexed), (3, 2));
+        assert!(!r.healthy()); // incomplete stream needs repair/resume
+
+        let (sealed, outcome) = repair_archive(&bytes).unwrap();
+        assert!(!outcome.sealed_input);
+        assert_eq!(outcome.shards_out, 2);
+        assert_eq!(outcome.timesteps_out, 2 * KT);
+        let a = Gba2Archive::deserialize(&sealed).unwrap();
+        assert_eq!(a.n_shards(), 2);
+        assert!(verify_archive(&sealed).unwrap().healthy());
+        // salvaged bytes match an uninterrupted 2-shard run's payloads
+        let full = dense_archive(2);
+        for i in 0..2 {
+            for s in 0..NS {
+                assert_eq!(
+                    a.species_bytes(i, s).unwrap(),
+                    full.species_bytes(i, s).unwrap()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn verify_reports_uncommitted_tail() {
+        let mut bytes = unsealed_stream(1, 2);
+        // simulate a crash between the payload+trailer flush and the
+        // journal-record flush: zero shard 0's record slot
+        let slot = journal_header_len(NS);
+        let rec_len = journal_record_len(NS);
+        bytes[slot..slot + rec_len].fill(0);
+        let r = verify_archive(&bytes).unwrap();
+        assert_eq!(r.shards_indexed, 0);
+        assert!(r.uncommitted_tail > 0);
+        // nothing committed ⇒ nothing to salvage
+        assert!(repair_archive(&bytes).is_err());
+    }
+
+    #[test]
+    fn compact_merges_and_dedupes() {
+        // A = crash-repaired prefix (2 shards); B = fuller re-run (3)
+        let a = dense_archive(2);
+        let b = dense_archive(3);
+        let (merged, outcome) = compact_archives(&[a, b]).unwrap();
+        assert_eq!(merged.n_shards(), 3);
+        assert_eq!(merged.header.dims.0, 3 * KT);
+        assert_eq!(outcome.shards_in, 5);
+        assert_eq!(outcome.shards_out, 3);
+        assert_eq!(outcome.dropped_duplicate, 2);
+        assert_eq!(outcome.dropped_orphaned, 0);
+        assert!(outcome.changed);
+        assert!(verify_archive(&merged.bytes).unwrap().healthy());
+        // merged bytes are byte-identical to the fuller run
+        assert_eq!(merged.bytes, dense_archive(3).bytes);
+    }
+
+    #[test]
+    fn compact_drops_orphans_after_short_shard() {
+        // C ends on a short shard (nt 2 < kt_window 4): the chain closes
+        let shards = vec![
+            ShardPayload {
+                t0: 0,
+                nt: KT,
+                latent_blob: Vec::new(),
+                species: (0..NS).map(|_| dense_section(0.3)).collect(),
+                codecs: vec![CodecTag::Dense; NS],
+            },
+            ShardPayload {
+                t0: KT,
+                nt: 2,
+                latent_blob: Vec::new(),
+                species: (0..NS).map(|_| dense_section(0.4)).collect(),
+                codecs: vec![CodecTag::Dense; NS],
+            },
+        ];
+        let c = Gba2Archive::build(header(KT + 2), shards).unwrap();
+        let b = dense_archive(3);
+        let (merged, outcome) = compact_archives(&[c.clone(), b]).unwrap();
+        assert_eq!(merged.bytes, c.bytes);
+        assert_eq!(outcome.dropped_duplicate, 1); // B shard 0 covers 0..4
+        assert_eq!(outcome.dropped_orphaned, 2); // B shards 1, 2
+    }
+
+    #[test]
+    fn compact_rejects_incompatible_layouts() {
+        let a = dense_archive(1);
+        let mut b = dense_archive(1);
+        b.header.latent_dim += 1;
+        assert!(compact_archives(&[a, b]).is_err());
+        assert!(compact_archives(&[]).is_err());
+    }
+}

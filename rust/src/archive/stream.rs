@@ -1,11 +1,12 @@
-//! Incremental `GBA2` writing for the streaming session API.
+//! Incremental `GBA2` writing for the streaming session API, with a
+//! crash-consistent shard-completion journal.
 //!
-//! [`Gba2StreamWriter`] emits an archive to any `io::Write + io::Seek`
-//! sink *shard by shard*: the header + TOC region is reserved (zeroed)
-//! up front, each finished shard's payload is appended immediately — so
-//! a compression session never holds more than the shard it is working
-//! on — and `finish()` seeks back and patches the real header + TOC into
-//! the reserved region.
+//! [`Gba2StreamWriter`] emits an archive to any [`StreamSink`] *shard by
+//! shard*: the header + TOC region is reserved up front, each finished
+//! shard's payload is appended immediately — so a compression session
+//! never holds more than the shard it is working on — and `finish()`
+//! seeks back and patches the real header + TOC into the reserved
+//! region.
 //!
 //! The prefix is serialized by the same function
 //! (`archive::toc::write_header_toc`) the one-shot
@@ -15,6 +16,37 @@
 //! today's readers parse it with no changes (a trailing footer TOC was
 //! rejected for exactly that reason; see DESIGN.md "Session API").
 //!
+//! ## Crash consistency
+//!
+//! A *sealed* archive's bytes are untouched by this machinery; the
+//! journal lives entirely inside the reserved (otherwise zeroed) header
+//! region of the **unsealed** file and is overwritten by the real
+//! header + TOC at `finish()`:
+//!
+//! ```text
+//! unsealed   [ GBJL header | rec 0 | rec 1 | … | 0-pad ][ shard 0 | … ]
+//!               │              └─ one fixed-size slot per shard, CRC'd;
+//!               │                 written + flushed only after that
+//!               │                 shard's payload bytes are down
+//!               └─ provisional Gba2Header + layout, CRC'd
+//! sealed     [ GBA2 header + TOC (back-patched)        ][ shard 0 | … ]
+//! ```
+//!
+//! Each non-final shard's payload is additionally followed by a 16-byte
+//! `GBSH` trailer (length + CRC32 of the payload) that the *next*
+//! shard's payload overwrites — a scan anchor for `gbatc repair` on
+//! unsealed files.  The journal slot arithmetic fits inside the reserved
+//! region for every layout (`82 + 8·ns + n·(34 + 9·ns)` ≤
+//! `72 + 8·ns + n·(40 + 16·ns)` for all `n, ns ≥ 1`), so journaling
+//! never shifts a payload offset: sealed bytes are identical to a
+//! journal-free run.
+//!
+//! [`Gba2StreamWriter::resume`] scans the journal of an interrupted
+//! stream, CRC-verifies every committed shard's payload, drops the torn
+//! tail, and returns a writer positioned to continue — the sealed result
+//! is byte-identical to an uninterrupted run (property-tested in
+//! `tests/streaming_session.rs` by killing at every shard boundary).
+//!
 //! The container version (2 = all-GBATC layout, 3 = per-section codec
 //! tags) must be declared at construction because the reserved region's
 //! size depends on it; `finish()` re-derives the version from the tags
@@ -22,17 +54,89 @@
 //! never emit an archive `Gba2Archive::build` would have laid out
 //! differently.
 
-use std::io::{Seek, SeekFrom, Write};
+use std::io::{Read, Seek, SeekFrom, Write};
 
 use crate::archive::toc::{
-    header_toc_len, write_header_toc, CodecTag, Gba2Header, ShardPayload, ShardToc, VERSION2,
-    VERSION3,
+    header_toc_len, write_header_toc, CodecTag, Gba2Header, ShardPayload, ShardToc, MAGIC2,
+    VERSION2, VERSION3,
 };
 use crate::error::{Error, Result};
-use crate::util::bytes::ByteWriter;
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::crc32::{crc32, Crc32};
+
+/// Magic of the unsealed-stream journal header (first bytes of a file a
+/// killed writer leaves behind; replaced by `GBA2` at seal).
+pub const JOURNAL_MAGIC: &[u8; 4] = b"GBJL";
+/// Journal format version (independent of the container version).
+pub(crate) const JOURNAL_VERSION: u8 = 1;
+/// Magic of the per-shard payload trailer in an unsealed stream.
+pub(crate) const TRAILER_MAGIC: &[u8; 4] = b"GBSH";
+/// Trailer bytes: magic + payload length (u64) + payload CRC32.
+pub(crate) const TRAILER_LEN: usize = 16;
+
+/// Journal header bytes for `ns` species (fixed fields + per-species
+/// range pair + CRC).
+pub(crate) fn journal_header_len(ns: usize) -> usize {
+    82 + 8 * ns
+}
+
+/// Journal record slot bytes for `ns` species.
+pub(crate) fn journal_record_len(ns: usize) -> usize {
+    34 + 9 * ns
+}
+
+/// A sink a [`Gba2StreamWriter`] can stream an archive to.
+///
+/// Beyond `Write + Seek` this captures the two durability operations the
+/// crash-consistency protocol needs: forcing bytes to stable storage at
+/// seal time and trimming a leftover journal trailer that would dangle
+/// past the final payload byte.  Memory sinks get no-op durability;
+/// sinks that cannot truncate only fail if a truncation is actually
+/// required (final shard shorter than one trailer).
+pub trait StreamSink: Write + Seek {
+    /// Force all written bytes to durable storage (`fsync` for files;
+    /// no-op for memory sinks).
+    fn sync_durable(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+
+    /// Shrink the sink to exactly `len` bytes.
+    fn truncate_to(&mut self, len: u64) -> std::io::Result<()> {
+        let _ = len;
+        Err(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "sink does not support truncation",
+        ))
+    }
+}
+
+impl StreamSink for std::fs::File {
+    fn sync_durable(&mut self) -> std::io::Result<()> {
+        self.sync_all()
+    }
+    fn truncate_to(&mut self, len: u64) -> std::io::Result<()> {
+        self.set_len(len)
+    }
+}
+
+impl StreamSink for std::io::Cursor<Vec<u8>> {
+    fn truncate_to(&mut self, len: u64) -> std::io::Result<()> {
+        self.get_mut().truncate(len as usize);
+        Ok(())
+    }
+}
+
+impl<S: StreamSink + ?Sized> StreamSink for &mut S {
+    fn sync_durable(&mut self) -> std::io::Result<()> {
+        (**self).sync_durable()
+    }
+    fn truncate_to(&mut self, len: u64) -> std::io::Result<()> {
+        (**self).truncate_to(len)
+    }
+}
 
 /// Shape of one streaming archive, fixed before the first shard arrives.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct StreamLayout {
     /// Total timesteps the shards must tile.
     pub nt: usize,
@@ -57,21 +161,264 @@ pub struct StreamSummary {
     pub codec_totals: [(usize, u64); 3],
 }
 
+/// What [`Gba2StreamWriter::resume`] recovered from an interrupted
+/// stream.
+#[derive(Clone, Debug)]
+pub struct ResumeReport {
+    /// Committed shards whose payload bytes CRC-verified.
+    pub shards: usize,
+    /// Timesteps those shards cover (the resume point).
+    pub timesteps: usize,
+    /// Payload bytes retained (end offset of the last durable shard).
+    pub bytes: u64,
+    /// Whether any recovered section is GBATC (drives header model-byte
+    /// accounting when the resumed session seals).
+    pub any_gbatc: bool,
+}
+
+/// One committed shard as recorded in the journal (lengths only —
+/// offsets are chained from the reserved-region size).
+#[derive(Clone, Debug)]
+pub(crate) struct JournalRecord {
+    pub t0: usize,
+    pub nt: usize,
+    pub shard_len: u64,
+    pub latent_len: u64,
+    pub sec_lens: Vec<u64>,
+    pub payload_crc: u32,
+    pub codecs: Vec<CodecTag>,
+}
+
+fn journal_header_bytes(layout: &StreamLayout, h: &Gba2Header) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.bytes(JOURNAL_MAGIC);
+    w.u8(JOURNAL_VERSION);
+    w.u16(layout.version);
+    w.u64(layout.nt as u64);
+    w.u64(layout.ns as u64);
+    w.u64(layout.kt_window as u64);
+    w.u64(layout.n_shards as u64);
+    w.u32(h.dims.2 as u32);
+    w.u32(h.dims.3 as u32);
+    w.u16(h.block.0 as u16);
+    w.u16(h.block.1 as u16);
+    w.u16(h.block.2 as u16);
+    w.u32(h.latent_dim as u32);
+    w.u8(if h.tcn_used { 1 } else { 0 });
+    w.f64(h.pressure);
+    w.f64(h.nrmse_target);
+    w.u32(h.model_param_bytes.min(u32::MAX as u64) as u32);
+    for &(lo, hi) in &h.ranges {
+        w.f32(lo);
+        w.f32(hi);
+    }
+    let body = w.finish();
+    let mut out = ByteWriter::new();
+    out.bytes(&body);
+    out.u32(crc32(&body));
+    out.finish()
+}
+
+/// Parse the journal header at the start of `prefix` (an unsealed
+/// stream's bytes).  Distinguishes "already sealed" (starts with `GBA2`)
+/// from garbage; the returned header carries the provisional field
+/// metadata recorded at stream start.
+pub(crate) fn parse_journal_header(prefix: &[u8]) -> Result<(StreamLayout, Gba2Header)> {
+    if prefix.len() >= 4 && &prefix[..4] == MAGIC2 {
+        return Err(Error::format(
+            "GBA2 journal: archive is already sealed (GBA2 magic present)",
+        ));
+    }
+    let mut r = ByteReader::new(prefix);
+    if r.bytes(4)? != JOURNAL_MAGIC {
+        return Err(Error::format(
+            "GBA2 journal: no journal magic (not an unsealed stream)",
+        ));
+    }
+    let jver = r.u8()?;
+    if jver != JOURNAL_VERSION {
+        return Err(Error::format(format!(
+            "GBA2 journal: unsupported journal version {jver}"
+        )));
+    }
+    let version = r.u16()?;
+    if version != VERSION2 && version != VERSION3 {
+        return Err(Error::format(format!(
+            "GBA2 journal: unsupported container version {version}"
+        )));
+    }
+    let nt = r.u64()? as usize;
+    let ns = r.u64()? as usize;
+    let kt_window = r.u64()? as usize;
+    let n_shards = r.u64()? as usize;
+    if ns == 0 || n_shards == 0 || kt_window == 0 || nt == 0 {
+        return Err(Error::format(format!(
+            "GBA2 journal: degenerate layout (nt {nt}, ns {ns}, shards {n_shards}, \
+             kt_window {kt_window})"
+        )));
+    }
+    let ny = r.u32()? as usize;
+    let nx = r.u32()? as usize;
+    let block = (r.u16()? as usize, r.u16()? as usize, r.u16()? as usize);
+    let latent_dim = r.u32()? as usize;
+    let tcn_used = r.u8()? != 0;
+    let pressure = r.f64()?;
+    let nrmse_target = r.f64()?;
+    let model_param_bytes = r.u32()? as u64;
+    let mut ranges = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        ranges.push((r.f32()?, r.f32()?));
+    }
+    let body_len = r.pos();
+    let crc = r.u32()?;
+    if crc != crc32(&prefix[..body_len]) {
+        return Err(Error::format("GBA2 journal: header CRC mismatch"));
+    }
+    debug_assert_eq!(body_len + 4, journal_header_len(ns));
+    let layout = StreamLayout {
+        nt,
+        ns,
+        kt_window,
+        n_shards,
+        version,
+    };
+    let header = Gba2Header {
+        tcn_used,
+        dims: (nt, ns, ny, nx),
+        block,
+        latent_dim,
+        kt_window,
+        pressure,
+        nrmse_target,
+        model_param_bytes,
+        ranges,
+    };
+    Ok((layout, header))
+}
+
+/// Walk the journal record slots in `prefix`, returning the valid prefix
+/// of committed-shard records (stops at the first empty, torn, or
+/// inconsistent slot).  Payload bytes are *not* verified here — callers
+/// CRC them against `payload_crc`.
+pub(crate) fn parse_journal_records(prefix: &[u8], layout: &StreamLayout) -> Vec<JournalRecord> {
+    let jh = journal_header_len(layout.ns);
+    let rl = journal_record_len(layout.ns);
+    let mut out = Vec::new();
+    let mut expect_t0 = 0usize;
+    for k in 0..layout.n_shards {
+        let lo = jh + k * rl;
+        let hi = lo + rl;
+        if hi > prefix.len() {
+            break;
+        }
+        let slot = &prefix[lo..hi];
+        let body_len = rl - 4;
+        let rec_crc = u32::from_le_bytes([slot[rl - 4], slot[rl - 3], slot[rl - 2], slot[rl - 1]]);
+        if rec_crc != crc32(&slot[..body_len]) {
+            break;
+        }
+        let mut r = ByteReader::new(slot);
+        let parsed = (|| -> Result<JournalRecord> {
+            let seq = r.u16()? as usize;
+            let t0 = r.u32()? as usize;
+            let nt = r.u32()? as usize;
+            let shard_len = r.u64()?;
+            let latent_len = r.u64()?;
+            let mut sec_lens = Vec::with_capacity(layout.ns);
+            for _ in 0..layout.ns {
+                sec_lens.push(r.u64()?);
+            }
+            let payload_crc = r.u32()?;
+            let mut codecs = Vec::with_capacity(layout.ns);
+            for _ in 0..layout.ns {
+                codecs.push(CodecTag::from_u8(r.u8()?)?);
+            }
+            if seq != k {
+                return Err(Error::format("journal record sequence mismatch"));
+            }
+            Ok(JournalRecord {
+                t0,
+                nt,
+                shard_len,
+                latent_len,
+                sec_lens,
+                payload_crc,
+                codecs,
+            })
+        })();
+        let rec = match parsed {
+            Ok(rec) => rec,
+            Err(_) => break,
+        };
+        // the same tiling + length invariants write_shard enforced
+        let full = k + 1 < layout.n_shards;
+        let sections: u64 = rec.latent_len + rec.sec_lens.iter().sum::<u64>();
+        if rec.t0 != expect_t0
+            || rec.nt == 0
+            || rec.nt > layout.kt_window
+            || (full && rec.nt != layout.kt_window)
+            || sections != rec.shard_len
+            || (layout.version == VERSION2 && rec.codecs.iter().any(|&c| c != CodecTag::Gbatc))
+        {
+            break;
+        }
+        expect_t0 += rec.nt;
+        out.push(rec);
+    }
+    out
+}
+
 /// Incremental `GBA2` writer over a seekable sink.
-pub struct Gba2StreamWriter<W: Write + Seek> {
+pub struct Gba2StreamWriter<W: StreamSink> {
     sink: W,
     layout: StreamLayout,
     base: u64,
     off: u64,
     toc: Vec<ShardToc>,
     expect_t0: usize,
+    /// Journal header bytes (slot 0 starts here).
+    jh_len: u64,
+    /// Journal record slot stride.
+    rec_len: u64,
+    /// Highest byte ever written (payloads + trailers) — `finish`
+    /// truncates when a stale trailer would dangle past the final
+    /// payload byte.
+    high_water: u64,
 }
 
-impl<W: Write + Seek> Gba2StreamWriter<W> {
+impl<W: StreamSink> Gba2StreamWriter<W> {
     /// Start an archive on `sink` (which must be empty and positioned at
-    /// its start).  Reserves the header + TOC region with zeros so shard
-    /// payloads can stream out before the TOC contents are known.
-    pub fn new(mut sink: W, layout: StreamLayout) -> Result<Gba2StreamWriter<W>> {
+    /// its start).  Reserves the header + TOC region — seeded with the
+    /// crash-recovery journal header, zero elsewhere — so shard payloads
+    /// can stream out before the TOC contents are known.
+    ///
+    /// The journal's provisional field metadata is zeroed; prefer
+    /// [`new_with_header`](Self::new_with_header) when the final header
+    /// is already known, so `gbatc repair` can seal an orphaned unsealed
+    /// stream without the writing session.
+    pub fn new(sink: W, layout: StreamLayout) -> Result<Gba2StreamWriter<W>> {
+        let provisional = Gba2Header {
+            tcn_used: false,
+            dims: (layout.nt, layout.ns, 0, 0),
+            block: (0, 0, 0),
+            latent_dim: 0,
+            kt_window: layout.kt_window,
+            pressure: 0.0,
+            nrmse_target: 0.0,
+            model_param_bytes: 0,
+            ranges: vec![(0.0, 0.0); layout.ns],
+        };
+        Self::new_with_header(sink, layout, &provisional)
+    }
+
+    /// [`new`](Self::new), but records `header` (provisionally — `finish`
+    /// still takes the authoritative one) in the journal so repair tools
+    /// can reconstruct a parseable archive from an unsealed stream.
+    pub fn new_with_header(
+        mut sink: W,
+        layout: StreamLayout,
+        header: &Gba2Header,
+    ) -> Result<Gba2StreamWriter<W>> {
         if layout.version != VERSION2 && layout.version != VERSION3 {
             return Err(Error::format(format!(
                 "GBA2 stream: unsupported version {}",
@@ -84,9 +431,25 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
                 layout.ns, layout.n_shards, layout.kt_window
             )));
         }
+        if header.ranges.len() != layout.ns {
+            return Err(Error::format(format!(
+                "GBA2 stream: {} ranges for {} species",
+                header.ranges.len(),
+                layout.ns
+            )));
+        }
         let base = header_toc_len(layout.ns, layout.n_shards, layout.version) as u64;
+        let jh = journal_header_bytes(&layout, header);
+        let jh_len = jh.len() as u64;
+        let rec_len = journal_record_len(layout.ns) as u64;
+        // proven to fit for every layout (see module docs) — the journal
+        // must never spill into payload territory
+        debug_assert!(jh_len + layout.n_shards as u64 * rec_len <= base);
+        let mut region = vec![0u8; base as usize];
+        region[..jh.len()].copy_from_slice(&jh);
         sink.seek(SeekFrom::Start(0))?;
-        sink.write_all(&vec![0u8; base as usize])?;
+        sink.write_all(&region)?;
+        sink.flush()?;
         Ok(Gba2StreamWriter {
             sink,
             layout,
@@ -94,7 +457,108 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
             off: base,
             toc: Vec::with_capacity(layout.n_shards),
             expect_t0: 0,
+            jh_len,
+            rec_len,
+            high_water: base,
         })
+    }
+
+    /// Reopen an interrupted (unsealed) stream: scan the journal,
+    /// CRC-verify every committed shard's payload bytes, drop the torn
+    /// tail, and return a writer ready for the next shard plus a report
+    /// of what survived.  Fails with a typed error on a sealed archive
+    /// or an unrecognizable file.
+    ///
+    /// The caller must continue with the same field, policy, and codec
+    /// configuration as the interrupted run — the sealed result is then
+    /// byte-identical to an uninterrupted stream of the same shards.
+    pub fn resume(mut sink: W) -> Result<(Gba2StreamWriter<W>, ResumeReport)>
+    where
+        W: Read,
+    {
+        let file_len = sink.seek(SeekFrom::End(0))?;
+        sink.seek(SeekFrom::Start(0))?;
+        // fixed journal fields end 78 bytes in; read them first to learn
+        // ns / n_shards / version, then the full reserved region
+        let fixed = (file_len as usize).min(journal_header_len(0) - 4);
+        let mut prefix = vec![0u8; fixed];
+        sink.read_exact(&mut prefix)?;
+        let head_probe = parse_journal_header_fixed(&prefix)?;
+        let (ns, n_shards, version) = head_probe;
+        let base = header_toc_len(ns, n_shards, version) as u64;
+        if file_len < base {
+            return Err(Error::format(format!(
+                "GBA2 resume: file truncated inside the reserved region \
+                 ({file_len} of {base} bytes) — nothing recoverable"
+            )));
+        }
+        prefix.resize(base as usize, 0);
+        sink.read_exact(&mut prefix[fixed..])?;
+        let (layout, _header) = parse_journal_header(&prefix)?;
+        let records = parse_journal_records(&prefix, &layout);
+
+        let mut toc = Vec::with_capacity(records.len());
+        let mut off = base;
+        let mut expect_t0 = 0usize;
+        let mut any_gbatc = false;
+        let mut buf = vec![0u8; 64 * 1024];
+        'records: for rec in &records {
+            if off + rec.shard_len > file_len {
+                break; // torn payload tail
+            }
+            sink.seek(SeekFrom::Start(off))?;
+            let mut crc = Crc32::new();
+            let mut remaining = rec.shard_len as usize;
+            while remaining > 0 {
+                let n = remaining.min(buf.len());
+                sink.read_exact(&mut buf[..n])?;
+                crc.update(&buf[..n]);
+                remaining -= n;
+            }
+            if crc.finalize() != rec.payload_crc {
+                break 'records; // bit rot or torn write under the record
+            }
+            let latent = (off, rec.latent_len);
+            let mut sec_off = off + rec.latent_len;
+            let mut species = Vec::with_capacity(layout.ns);
+            for &len in &rec.sec_lens {
+                species.push((sec_off, len));
+                sec_off += len;
+            }
+            any_gbatc |= rec.codecs.iter().any(|&c| c == CodecTag::Gbatc);
+            toc.push(ShardToc {
+                t0: rec.t0,
+                nt: rec.nt,
+                shard: (off, rec.shard_len),
+                latent,
+                species,
+                codecs: rec.codecs.clone(),
+            });
+            off += rec.shard_len;
+            expect_t0 += rec.nt;
+        }
+
+        sink.seek(SeekFrom::Start(off))?;
+        let report = ResumeReport {
+            shards: toc.len(),
+            timesteps: expect_t0,
+            bytes: off,
+            any_gbatc,
+        };
+        Ok((
+            Gba2StreamWriter {
+                sink,
+                layout,
+                base,
+                off,
+                toc,
+                expect_t0,
+                jh_len: journal_header_len(layout.ns) as u64,
+                rec_len: journal_record_len(layout.ns) as u64,
+                high_water: file_len.max(base),
+            },
+            report,
+        ))
     }
 
     /// Shards written so far.
@@ -102,10 +566,33 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
         self.toc.len()
     }
 
+    /// Timesteps covered by the shards written so far.
+    pub fn timesteps_written(&self) -> usize {
+        self.expect_t0
+    }
+
+    /// The declared layout.
+    pub fn layout(&self) -> &StreamLayout {
+        &self.layout
+    }
+
+    /// Abandon the stream and hand back the (unsealed) sink — e.g. to
+    /// close a file that a later `resume` will reopen.  No bytes are
+    /// written; the journal already reflects every completed shard.
+    pub fn abort(self) -> W {
+        self.sink
+    }
+
     /// Append one shard's payload (latent blob + species sections) and
     /// record its TOC entry.  Shards must arrive in time order and tile
     /// the time axis — the same invariants `Gba2Archive::build` enforces,
     /// checked here as each shard lands so a bad stream fails early.
+    ///
+    /// Durability protocol: payload bytes (plus, for non-final shards, a
+    /// CRC trailer) are written and flushed *before* the journal record
+    /// that commits the shard is written and flushed — a crash between
+    /// the two leaves an uncommitted (ignored) payload, never a
+    /// committed record over torn bytes.
     pub fn write_shard(&mut self, sh: &ShardPayload) -> Result<()> {
         let l = &self.layout;
         if self.toc.len() == l.n_shards {
@@ -141,19 +628,67 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
         }
 
         let shard_off = self.off;
+        self.sink.seek(SeekFrom::Start(shard_off))?;
+        let mut crc = Crc32::new();
         self.sink.write_all(&sh.latent_blob)?;
+        crc.update(&sh.latent_blob);
         let latent = (shard_off, sh.latent_blob.len() as u64);
         let mut off = shard_off + latent.1;
         let mut species = Vec::with_capacity(l.ns);
         for sec in &sh.species {
             self.sink.write_all(sec)?;
+            crc.update(sec);
             species.push((off, sec.len() as u64));
             off += sec.len() as u64;
         }
+        let payload_crc = crc.finalize();
+        let shard_len = off - shard_off;
+
+        let mut high = off;
+        if full {
+            // scan anchor for repair; the next shard's payload overwrites it
+            let mut tw = ByteWriter::new();
+            tw.bytes(TRAILER_MAGIC);
+            tw.u64(shard_len);
+            tw.u32(payload_crc);
+            let trailer = tw.finish();
+            debug_assert_eq!(trailer.len(), TRAILER_LEN);
+            self.sink.write_all(&trailer)?;
+            high += TRAILER_LEN as u64;
+        }
+        // payload down before the record that commits it
+        self.sink.flush()?;
+
+        let k = self.toc.len();
+        let mut rw = ByteWriter::new();
+        rw.u16(k as u16);
+        rw.u32(sh.t0 as u32);
+        rw.u32(sh.nt as u32);
+        rw.u64(shard_len);
+        rw.u64(latent.1);
+        for &(_, len) in &species {
+            rw.u64(len);
+        }
+        rw.u32(payload_crc);
+        for &c in &sh.codecs {
+            rw.u8(c as u8);
+        }
+        let body = rw.finish();
+        let mut rw = ByteWriter::new();
+        rw.bytes(&body);
+        rw.u32(crc32(&body));
+        let rec = rw.finish();
+        debug_assert_eq!(rec.len() as u64, self.rec_len);
+        self.sink
+            .seek(SeekFrom::Start(self.jh_len + k as u64 * self.rec_len))?;
+        self.sink.write_all(&rec)?;
+        self.sink.flush()?;
+
+        self.high_water = self.high_water.max(high);
         self.toc.push(ShardToc {
             t0: sh.t0,
             nt: sh.nt,
-            shard: (shard_off, off - shard_off),
+            shard: (shard_off, shard_len),
             latent,
             species,
             codecs: sh.codecs.clone(),
@@ -164,8 +699,9 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
     }
 
     /// Seal the archive: validate coverage, back-patch the header + TOC
-    /// into the reserved region, flush, and hand the sink back.  The
-    /// header's dims/kt_window must match the declared layout.
+    /// over the journal in the reserved region, trim any dangling
+    /// trailer, flush, sync, and hand the sink back.  The header's
+    /// dims/kt_window must match the declared layout.
     pub fn finish(mut self, header: &Gba2Header) -> Result<(W, StreamSummary)> {
         let l = self.layout;
         if self.toc.len() != l.n_shards || self.expect_t0 != l.nt {
@@ -213,8 +749,15 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
         debug_assert_eq!(prefix.len() as u64, self.base);
         self.sink.seek(SeekFrom::Start(0))?;
         self.sink.write_all(&prefix)?;
+        if self.high_water > self.off {
+            // a stale trailer (or resumed file tail) dangles past the
+            // final payload byte — the strict parser requires the file
+            // to end exactly at the last TOC offset
+            self.sink.truncate_to(self.off)?;
+        }
         self.sink.seek(SeekFrom::Start(self.off))?;
         self.sink.flush()?;
+        self.sink.sync_durable()?;
 
         let mut codec_totals = [(0usize, 0u64); 3];
         for e in &self.toc {
@@ -233,6 +776,42 @@ impl<W: Write + Seek> Gba2StreamWriter<W> {
             },
         ))
     }
+}
+
+/// Parse just the fixed (pre-ranges) journal fields — enough to size the
+/// reserved region before the full prefix can be read.
+fn parse_journal_header_fixed(prefix: &[u8]) -> Result<(usize, usize, u16)> {
+    if prefix.len() >= 4 && &prefix[..4] == MAGIC2 {
+        return Err(Error::format(
+            "GBA2 journal: archive is already sealed (GBA2 magic present)",
+        ));
+    }
+    let mut r = ByteReader::new(prefix);
+    if r.bytes(4)? != JOURNAL_MAGIC {
+        return Err(Error::format(
+            "GBA2 journal: no journal magic (not an unsealed stream)",
+        ));
+    }
+    let jver = r.u8()?;
+    if jver != JOURNAL_VERSION {
+        return Err(Error::format(format!(
+            "GBA2 journal: unsupported journal version {jver}"
+        )));
+    }
+    let version = r.u16()?;
+    if version != VERSION2 && version != VERSION3 {
+        return Err(Error::format(format!(
+            "GBA2 journal: unsupported container version {version}"
+        )));
+    }
+    let _nt = r.u64()?;
+    let ns = r.u64()? as usize;
+    let _kt = r.u64()?;
+    let n_shards = r.u64()? as usize;
+    if ns == 0 || n_shards == 0 {
+        return Err(Error::format("GBA2 journal: degenerate layout"));
+    }
+    Ok((ns, n_shards, version))
 }
 
 #[cfg(test)]
@@ -293,6 +872,8 @@ mod tests {
 
     /// The streamed bytes must equal `Gba2Archive::build` exactly — the
     /// invariant the session's byte-identity property test rests on.
+    /// (The v3 final shard is shorter than one trailer, so this also
+    /// exercises the dangling-trailer truncation at seal.)
     #[test]
     fn streamed_archive_is_byte_identical_to_build() {
         for (version, shards) in [(2u16, shards_v2()), (3, shards_v3())] {
@@ -351,5 +932,114 @@ mod tests {
         }
         let extra = ShardPayload::gbatc(8, 4, Vec::new(), vec![vec![1], vec![2]]);
         assert!(w.write_shard(&extra).is_err());
+    }
+
+    /// The journal survives an abandoned stream: resume after shard 0,
+    /// write shard 1, and the sealed bytes equal an uninterrupted run.
+    #[test]
+    fn resume_after_clean_kill_is_byte_identical() {
+        for (version, shards) in [(2u16, shards_v2()), (3, shards_v3())] {
+            let batch = Gba2Archive::build(header(0), shards.clone()).unwrap();
+            let mut w =
+                Gba2StreamWriter::new_with_header(Cursor::new(Vec::new()), layout(version), &header(0))
+                    .unwrap();
+            w.write_shard(&shards[0]).unwrap();
+            let unsealed = w.abort().into_inner();
+
+            let (mut w, report) = Gba2StreamWriter::resume(Cursor::new(unsealed)).unwrap();
+            assert_eq!(report.shards, 1);
+            assert_eq!(report.timesteps, 4);
+            assert_eq!(
+                report.any_gbatc,
+                shards[0].codecs.iter().any(|&c| c == CodecTag::Gbatc)
+            );
+            w.write_shard(&shards[1]).unwrap();
+            let (sink, summary) = w.finish(&header(0)).unwrap();
+            assert_eq!(summary.version, version);
+            assert_eq!(sink.into_inner(), batch.bytes, "v{version} resume differs");
+        }
+    }
+
+    /// A torn or bit-rotted tail is dropped: only CRC-clean committed
+    /// shards survive resume, and rewriting the rest still seals
+    /// byte-identically.
+    #[test]
+    fn resume_drops_torn_and_corrupt_tails() {
+        let shards = shards_v2();
+        let batch = Gba2Archive::build(header(0), shards.clone()).unwrap();
+        let full_unsealed = {
+            let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+            for sh in &shards {
+                w.write_shard(sh).unwrap();
+            }
+            w.abort().into_inner()
+        };
+
+        // torn: final shard's payload loses its last 3 bytes
+        let mut torn = full_unsealed.clone();
+        torn.truncate(torn.len() - 3);
+        let (mut w, report) = Gba2StreamWriter::resume(Cursor::new(torn)).unwrap();
+        assert_eq!(report.shards, 1, "torn tail must drop the last shard");
+        w.write_shard(&shards[1]).unwrap();
+        let (sink, _) = w.finish(&header(0)).unwrap();
+        assert_eq!(sink.into_inner(), batch.bytes);
+
+        // bit rot inside the last shard's payload
+        let mut rotted = full_unsealed.clone();
+        let n = rotted.len();
+        rotted[n - 2] ^= 0x40;
+        let (mut w, report) = Gba2StreamWriter::resume(Cursor::new(rotted)).unwrap();
+        assert_eq!(report.shards, 1, "payload CRC must reject the rotted shard");
+        w.write_shard(&shards[1]).unwrap();
+        let (sink, _) = w.finish(&header(0)).unwrap();
+        assert_eq!(sink.into_inner(), batch.bytes);
+
+        // everything intact: resume finds both shards and seals directly
+        let (w, report) = Gba2StreamWriter::resume(Cursor::new(full_unsealed)).unwrap();
+        assert_eq!(report.shards, 2);
+        assert_eq!(report.timesteps, 8);
+        let (sink, _) = w.finish(&header(0)).unwrap();
+        assert_eq!(sink.into_inner(), batch.bytes);
+    }
+
+    #[test]
+    fn resume_rejects_sealed_and_garbage_files() {
+        let shards = shards_v2();
+        let batch = Gba2Archive::build(header(0), shards).unwrap();
+        let err = Gba2StreamWriter::resume(Cursor::new(batch.bytes)).unwrap_err();
+        assert!(
+            err.to_string().contains("sealed"),
+            "sealed archive must be called out: {err}"
+        );
+        assert!(Gba2StreamWriter::resume(Cursor::new(vec![0u8; 64])).is_err());
+        assert!(Gba2StreamWriter::resume(Cursor::new(Vec::new())).is_err());
+        // journal header bit rot
+        let mut w = Gba2StreamWriter::new(Cursor::new(Vec::new()), layout(2)).unwrap();
+        w.write_shard(&shards_v2()[0]).unwrap();
+        let mut unsealed = w.abort().into_inner();
+        unsealed[40] ^= 0x01; // inside the journal header's CRC coverage
+        assert!(Gba2StreamWriter::resume(Cursor::new(unsealed)).is_err());
+    }
+
+    /// The journal's provisional header round-trips, so repair can seal
+    /// an orphaned stream without the writing session.
+    #[test]
+    fn journal_header_round_trips_provisional_metadata() {
+        let mut w =
+            Gba2StreamWriter::new_with_header(Cursor::new(Vec::new()), layout(2), &header(123))
+                .unwrap();
+        w.write_shard(&shards_v2()[0]).unwrap();
+        let unsealed = w.abort().into_inner();
+        let (lay, h) = parse_journal_header(&unsealed).unwrap();
+        assert_eq!(lay, layout(2));
+        assert_eq!(h.dims, (8, 2, 10, 8));
+        assert_eq!(h.block, (4, 5, 4));
+        assert_eq!(h.latent_dim, 6);
+        assert!(h.tcn_used);
+        assert_eq!(h.model_param_bytes, 123);
+        assert_eq!(h.ranges, vec![(0.0, 1.0), (-1.0, 2.0)]);
+        let recs = parse_journal_records(&unsealed, &lay);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].shard_len, 3 + 7 + 5);
     }
 }

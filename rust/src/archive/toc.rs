@@ -701,6 +701,144 @@ fn parse_header_toc(buf: &[u8], file_len: u64) -> Result<(Gba2Header, Vec<ShardT
     ))
 }
 
+/// Lenient header + TOC parse for `gbatc repair`: header-level damage is
+/// still fatal, but a torn payload tail is not — TOC entries are walked
+/// in order and the walk *stops* (instead of erroring) at the first
+/// entry that is malformed, breaks the tiling chain, or reaches beyond
+/// `file_len`.  Returns the header, the structurally-valid shard
+/// prefix, and the declared shard count, so callers can salvage the
+/// prefix into a well-formed archive.
+pub(crate) fn parse_header_toc_prefix(
+    buf: &[u8],
+    file_len: u64,
+) -> Result<(Gba2Header, Vec<ShardToc>, usize)> {
+    let (version, ns, n_shards) = parse_prefix(buf)?;
+    let hlen = header_len(ns, n_shards, version) as u64;
+    let mut r = ByteReader::new(buf);
+    r.bytes(4)?; // magic
+    r.u16()?; // version
+    let flags = r.u16()?;
+    let dims = (
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+        r.u32()? as usize,
+    );
+    let block = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+    let latent_dim = r.u32()? as usize;
+    let kt_window = r.u32()? as usize;
+    let _n_shards = r.u32()?;
+    let pressure = r.f64()?;
+    let nrmse_target = r.f64()?;
+    let model_param_bytes = r.u64()?;
+    let total = dims
+        .0
+        .checked_mul(dims.1)
+        .and_then(|v| v.checked_mul(dims.2))
+        .and_then(|v| v.checked_mul(dims.3))
+        .ok_or_else(|| Error::format("GBA2 dims overflow"))?;
+    if total == 0 || total > 1 << 33 {
+        return Err(Error::format(format!("implausible GBA2 dims {dims:?}")));
+    }
+    if block.0 == 0 || block.1 == 0 || block.2 == 0 || latent_dim == 0 || latent_dim > 65536 {
+        return Err(Error::format(format!(
+            "implausible GBA2 block/latent {block:?}/{latent_dim}"
+        )));
+    }
+    if kt_window == 0 || kt_window % block.0 != 0 {
+        return Err(Error::format(format!(
+            "GBA2 kt_window {kt_window} not a multiple of block kt {}",
+            block.0
+        )));
+    }
+    let mut ranges = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        ranges.push((r.f32()?, r.f32()?));
+    }
+
+    let mut toc = Vec::with_capacity(n_shards);
+    let mut expect_t0 = 0usize;
+    let mut expect_off = hlen;
+    'entries: for i in 0..n_shards {
+        let parsed = (|r: &mut ByteReader| -> Result<ShardToc> {
+            let t0 = r.u32()? as usize;
+            let nt_sh = r.u32()? as usize;
+            let shard = (r.u64()?, r.u64()?);
+            let latent = (r.u64()?, r.u64()?);
+            let mut species = Vec::with_capacity(ns);
+            for _ in 0..ns {
+                species.push((r.u64()?, r.u64()?));
+            }
+            let mut codecs = Vec::with_capacity(ns);
+            if version >= VERSION3 {
+                for _ in 0..ns {
+                    codecs.push(CodecTag::from_u8(r.u8()?)?);
+                }
+            } else {
+                codecs.resize(ns, CodecTag::Gbatc);
+            }
+            Ok(ShardToc {
+                t0,
+                nt: nt_sh,
+                shard,
+                latent,
+                species,
+                codecs,
+            })
+        })(&mut r);
+        let entry = match parsed {
+            Ok(e) => e,
+            Err(_) => break, // TOC region itself truncated or rotted
+        };
+        let full = i + 1 < n_shards;
+        if entry.t0 != expect_t0
+            || entry.nt == 0
+            || entry.nt > kt_window
+            || entry.nt % block.0 != 0
+            || (full && entry.nt != kt_window)
+            || entry.shard.0 != expect_off
+        {
+            break;
+        }
+        let shard_end = match entry.shard.0.checked_add(entry.shard.1) {
+            Some(e) if e <= file_len => e,
+            _ => break, // payload torn off the end of the file
+        };
+        let mut cursor = entry.shard.0;
+        for &(o, l) in std::iter::once(&entry.latent).chain(entry.species.iter()) {
+            if o != cursor {
+                break 'entries;
+            }
+            cursor = match o.checked_add(l) {
+                Some(c) => c,
+                None => break 'entries,
+            };
+        }
+        if cursor != shard_end {
+            break;
+        }
+        expect_t0 += entry.nt;
+        expect_off = shard_end;
+        toc.push(entry);
+    }
+
+    Ok((
+        Gba2Header {
+            tcn_used: flags & 1 == 1,
+            dims,
+            block,
+            latent_dim,
+            kt_window,
+            pressure,
+            nrmse_target,
+            model_param_bytes,
+            ranges,
+        },
+        toc,
+        n_shards,
+    ))
+}
+
 /// A byte-range reader over an archive — the abstraction that lets
 /// partial decode touch only the sections a query needs, whether the
 /// archive lives in memory or on disk.

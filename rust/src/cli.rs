@@ -113,14 +113,30 @@ COMMANDS:
               sections the query touches; reports archive bytes read.
               Species are mechanism names (e.g. OH,CO) or numeric
               indices; unknown names list the available ones.
-  inspect     --archive <gba|gba2|szf> [--stats]
+  inspect     --archive <gba|gba2|szf> [--stats] [--verify]
               Print the GBA2 table of contents (per-shard and per-species
               byte ranges), per-section codec tags, per-codec byte
               totals, and size breakdown.  --stats additionally reopens
               the archive through the metered reader and reports the
               classified open IO (header/TOC reads vs payload reads) and
               how the bytes were served: zero-copy mmap vs buffered
-              read(2).
+              read(2).  --verify instead walks every section (latent
+              planes, per-species payloads, journal records of an
+              unsealed stream) and decodes each; prints the damaged
+              (shard, species) list and exits nonzero if anything fails.
+  repair      --input <gba|gba2|stream> (--output <file> | --in-place)
+              Salvage the valid prefix of a damaged archive into a
+              well-formed GBA2: a torn sealed archive keeps its intact
+              shard prefix; an interrupted stream (GBJL journal, e.g. a
+              crash mid-compression) is sealed from its committed shards
+              (CRC-checked).  Already-intact inputs pass through
+              unchanged.  Errors when nothing is recoverable.
+  compact     <gba2>... --output <file>
+              Merge shard-compatible archives from one (possibly
+              interrupted and resumed) compression run into a single
+              GBA2, walking the shard tiling from t=0 and dropping
+              duplicate (time-covered) and orphaned (gap/after-torn)
+              shards.  Headers must agree on dims/block/latent/ranges.
   serve       --mount NAME=PATH[,NAME=PATH...] [--listen 127.0.0.1:7070]
               [--workers 4] [--queue 64] [--replicas 1] [--max-conns 1024]
               [--cache-mb 256] [--max-response-mb 256] [--threads N]

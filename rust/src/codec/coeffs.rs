@@ -45,6 +45,63 @@ impl CoeffCodec {
         Ok(w.finish())
     }
 
+    /// Best-effort decode for degraded-mode serving: keep the prefix of
+    /// *fully* decoded blocks and leave the rest empty (⇒ prior-only
+    /// reconstruction for those blocks).  Tolerates truncated bitmap and
+    /// value streams — a blob whose declared length overruns the buffer
+    /// is clamped to what survives.  Returns the coefficients plus the
+    /// number of salvaged blocks; errors only when even the fixed header
+    /// fields are unreadable or implausible.
+    pub fn decode_salvage(buf: &[u8]) -> Result<(SpeciesCoeffs, usize)> {
+        let mut r = ByteReader::new(buf);
+        let n_blocks = r.u64()? as usize;
+        let d = r.u64()? as usize;
+        let bin = r.f64()?;
+        if n_blocks > 1 << 28 || !bin.is_finite() {
+            return Err(Error::codec(format!(
+                "coeffs: implausible header (blocks {n_blocks}, bin {bin})"
+            )));
+        }
+        let mut per_block = vec![Vec::new(); n_blocks];
+        let bitmap = Self::clamped_blob(&mut r);
+        let values = IntCodec::decode(Self::clamped_blob(&mut r)).unwrap_or_default();
+        let q = UniformQuantizer::new(bin);
+        let mut br = BitReader::new(bitmap);
+        let mut vi = 0usize;
+        let mut salvaged = 0usize;
+        for slot in per_block.iter_mut() {
+            let Ok(idxs) = decode_indices(&mut br) else {
+                break; // torn bitmap: everything after is prior-only
+            };
+            if vi + idxs.len() > values.len() {
+                break; // torn value stream mid-block: drop the block whole
+            }
+            *slot = idxs
+                .into_iter()
+                .map(|i| {
+                    let v = (i, q.dequantize(values[vi]));
+                    vi += 1;
+                    v
+                })
+                .collect();
+            salvaged += 1;
+        }
+        Ok((SpeciesCoeffs { d, bin, per_block }, salvaged))
+    }
+
+    /// Read a length-prefixed blob, clamping a declared length that
+    /// overruns the buffer to the surviving bytes (empty when even the
+    /// length is gone).
+    fn clamped_blob<'a>(r: &mut ByteReader<'a>) -> &'a [u8] {
+        match r.u64() {
+            Ok(len) => {
+                let take = usize::try_from(len).unwrap_or(usize::MAX).min(r.remaining());
+                r.bytes(take).unwrap_or(&[])
+            }
+            Err(_) => &[],
+        }
+    }
+
     pub fn decode(buf: &[u8]) -> Result<SpeciesCoeffs> {
         let mut r = ByteReader::new(buf);
         let n_blocks = r.u64()? as usize;
@@ -150,6 +207,53 @@ mod tests {
                         })
                 })
         });
+    }
+
+    #[test]
+    fn salvage_matches_strict_decode_on_intact_input() {
+        let per_block = vec![vec![(0usize, 1i64), (3, -2)]; 10];
+        let buf = CoeffCodec::encode(&per_block, 16, 0.1).unwrap();
+        let strict = CoeffCodec::decode(&buf).unwrap();
+        let (sal, n) = CoeffCodec::decode_salvage(&buf).unwrap();
+        assert_eq!(n, 10);
+        assert_eq!(sal.per_block, strict.per_block);
+        // truncated input: strict errors, salvage degrades gracefully
+        let short = &buf[..buf.len() - 3];
+        assert!(CoeffCodec::decode(short).is_err());
+        let (sal, n) = CoeffCodec::decode_salvage(short).unwrap();
+        assert_eq!(sal.per_block.len(), 10);
+        assert!(n < 10);
+        assert_eq!(&sal.per_block[..n], &strict.per_block[..n]);
+        assert!(sal.per_block[n..].iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn salvage_keeps_fully_decoded_block_prefix() {
+        // bitmap demands 2 values per block for 10 blocks, but only 7
+        // values survive: blocks 0..3 decode whole, block 3 would tear
+        let d = 16usize;
+        let mut bitmap = BitWriter::new();
+        for _ in 0..10 {
+            encode_indices(&mut bitmap, &[0, 3], d).unwrap();
+        }
+        let values: Vec<i64> = (0..7i64).collect();
+        let mut w = ByteWriter::new();
+        w.u64(10);
+        w.u64(d as u64);
+        w.f64(0.1);
+        w.blob(&bitmap.finish());
+        w.blob(&IntCodec::encode(&values).unwrap());
+        let buf = w.finish();
+        assert!(CoeffCodec::decode(&buf).is_err());
+        let (sal, n) = CoeffCodec::decode_salvage(&buf).unwrap();
+        assert_eq!(n, 3);
+        for (b, blk) in sal.per_block.iter().enumerate() {
+            if b < 3 {
+                assert_eq!(blk.iter().map(|&(i, _)| i).collect::<Vec<_>>(), vec![0, 3]);
+            } else {
+                assert!(blk.is_empty());
+            }
+        }
     }
 
     #[test]

@@ -12,8 +12,8 @@ pub mod traits;
 pub use accounting::SizeBreakdown;
 pub use gba::{CompressOptions, CompressReport, GbatcCompressor};
 pub use registry::{
-    CodecChoice, DensePlaneCodec, GbatcShardCodec, SectionCodec, SectionEncoding, SectionView,
-    SzSectionCodec, TrialCache,
+    CodecChoice, DensePlaneCodec, GbatcShardCodec, SectionCodec, SectionEncoding, SectionSalvage,
+    SectionView, SzSectionCodec, TrialCache,
 };
 pub use szc::{SzCompressOptions, SzCompressor, SzArchive};
 pub use traits::Compressor;

@@ -33,6 +33,7 @@ use crate::compressor::gba::effective_bin;
 use crate::data::blocks::BlockGrid;
 use crate::error::{Error, Result};
 use crate::gae::guarantee::{apply_correction, guarantee_species_timed, GuaranteeParams};
+use crate::gae::SpeciesBasis;
 use crate::sz::codec::{sz_compress_with_recon, sz_decompress, SzMode};
 use crate::sz::SzField;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -519,6 +520,101 @@ impl GbatcShardCodec<'_> {
         }
         Ok(())
     }
+
+    /// Best-effort [`Self::correct_plane`] for degraded-mode serving:
+    /// apply whatever correction prefix survives in a damaged section
+    /// instead of failing.  Never errors — `prior` keeps the
+    /// shared-model reconstruction for every block whose correction is
+    /// unrecoverable (zero salvageable coefficients ⇒ a pure prior
+    /// plane), and the returned [`SectionSalvage`] reports how much was
+    /// applied so the serving tier can loosen its certified bound.
+    pub fn correct_plane_salvage(
+        shape: crate::data::blocks::BlockShape,
+        bytes: &[u8],
+        nt: usize,
+        ny: usize,
+        nx: usize,
+        prior: &mut [f32],
+    ) -> SectionSalvage {
+        let none = SectionSalvage {
+            salvaged_fraction: 0.0,
+            max_correction: 0.0,
+        };
+        let Ok(grid) = BlockGrid::new((nt, 1, ny, nx), shape) else {
+            return none;
+        };
+        let nb = grid.n_blocks();
+        let d = shape.d();
+        let Some((basis, coeff_bytes)) = parse_section_lenient(bytes) else {
+            return none;
+        };
+        if basis.d != d {
+            return none;
+        }
+        let Ok((coeffs, salvaged)) = CoeffCodec::decode_salvage(&coeff_bytes) else {
+            return none;
+        };
+        if coeffs.per_block.len() != nb || (coeffs.d != d && !coeffs.per_block.is_empty()) {
+            return none;
+        }
+        let mut v = vec![0.0f32; d];
+        let mut applied = 0usize;
+        let mut max_corr2 = 0.0f64;
+        for (b, per_block) in coeffs.per_block.iter().take(salvaged).enumerate() {
+            if per_block.iter().any(|&(j, _)| j >= basis.rank) {
+                break; // index rot: stop at the last trustworthy block
+            }
+            applied += 1;
+            if per_block.is_empty() {
+                continue;
+            }
+            // correction ℓ2 from the coefficients alone — the basis
+            // columns are orthonormal, so ‖Σ cⱼ·uⱼ‖₂ = ‖c‖₂
+            let c2: f64 = per_block.iter().map(|&(_, c)| c * c).sum();
+            max_corr2 = max_corr2.max(c2);
+            grid.gather_species(prior, b, 0, &mut v);
+            apply_correction(&mut v, 1, d, &basis, std::slice::from_ref(per_block));
+            grid.scatter_species(prior, b, 0, &v);
+        }
+        SectionSalvage {
+            salvaged_fraction: if nb == 0 {
+                1.0
+            } else {
+                applied as f64 / nb as f64
+            },
+            max_correction: max_corr2.sqrt(),
+        }
+    }
+}
+
+/// Outcome of [`GbatcShardCodec::correct_plane_salvage`]: how much of a
+/// damaged section's correction the degraded decode could apply.
+#[derive(Clone, Copy, Debug)]
+pub struct SectionSalvage {
+    /// Fraction of the plane's blocks whose stored corrections were
+    /// applied (1.0 = bit-identical to a healthy decode, 0.0 = pure
+    /// shared-model prior).
+    pub salvaged_fraction: f64,
+    /// Largest applied correction ℓ2 norm, normalized units — feeds the
+    /// loosened degraded-mode error bound.
+    pub max_correction: f64,
+}
+
+/// Lenient [`SpeciesSection`] parse for salvage: recover the basis plus
+/// as much of the coefficient payload as survives (a declared blob
+/// length overrunning the buffer is clamped to the remaining bytes; a
+/// missing length yields an empty payload).
+fn parse_section_lenient(bytes: &[u8]) -> Option<(SpeciesBasis, Vec<u8>)> {
+    let mut r = ByteReader::new(bytes);
+    let basis = SpeciesBasis::deserialize(&mut r).ok()?;
+    let coeffs = match r.u64() {
+        Ok(len) => {
+            let take = usize::try_from(len).unwrap_or(usize::MAX).min(r.remaining());
+            r.bytes(take).ok()?.to_vec()
+        }
+        Err(_) => Vec::new(),
+    };
+    Some((basis, coeffs))
 }
 
 impl SectionCodec for GbatcShardCodec<'_> {
@@ -890,6 +986,47 @@ mod tests {
                 assert!(e2.sqrt() <= tau + 1e-9, "s {s} block {b}: {}", e2.sqrt());
             }
         }
+    }
+
+    #[test]
+    fn salvage_decode_degrades_gracefully() {
+        let shape = BlockShape { kt: 2, by: 2, bx: 2 };
+        let (nt, ny, nx) = (4, 4, 4);
+        let d = shape.d();
+        let grid = BlockGrid::new((nt, 1, ny, nx), shape).unwrap();
+        let nb = grid.n_blocks();
+        let basis = SpeciesBasis::from_mat(&crate::linalg::Mat::identity(d), 3);
+        let per_block: Vec<Vec<(usize, i64)>> =
+            (0..nb).map(|b| vec![(b % 3, 1 + b as i64)]).collect();
+        let coeffs = CoeffCodec::encode(&per_block, d, 0.5).unwrap();
+        let bytes = SpeciesSection { basis, coeffs }.to_bytes();
+
+        // intact input: salvage is bit-identical to the strict decode
+        let prior0 = vec![0.5f32; nt * ny * nx];
+        let mut strict = prior0.clone();
+        GbatcShardCodec::correct_plane(shape, &bytes, nt, ny, nx, &mut strict).unwrap();
+        let mut sal = prior0.clone();
+        let rep = GbatcShardCodec::correct_plane_salvage(shape, &bytes, nt, ny, nx, &mut sal);
+        assert_eq!(rep.salvaged_fraction, 1.0);
+        assert!(rep.max_correction > 0.0);
+        assert_eq!(sal, strict);
+
+        // every truncation point: strict may error, salvage never does —
+        // it applies a trustworthy prefix or falls back to the prior
+        for cut in 0..bytes.len() {
+            let mut part = prior0.clone();
+            let rep =
+                GbatcShardCodec::correct_plane_salvage(shape, &bytes[..cut], nt, ny, nx, &mut part);
+            assert!((0.0..=1.0).contains(&rep.salvaged_fraction), "cut {cut}");
+            if rep.salvaged_fraction == 0.0 {
+                assert_eq!(part, prior0, "cut {cut}: untouched prior expected");
+            }
+        }
+        let mut out = prior0.clone();
+        assert!(
+            GbatcShardCodec::correct_plane(shape, &bytes[..bytes.len() - 3], nt, ny, nx, &mut out)
+                .is_err()
+        );
     }
 
     #[test]

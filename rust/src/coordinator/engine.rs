@@ -39,7 +39,7 @@ use crate::compressor::gba::{
 };
 use crate::compressor::registry::{
     self, plan_archive, CodecChoice, GbatcSectionStats, GbatcShardCodec, SectionCodec,
-    SectionEncoding, SectionPlan, SectionView, TrialCache, DENSE_STAGE, SZ_STAGE,
+    SectionEncoding, SectionPlan, SectionSalvage, SectionView, TrialCache, DENSE_STAGE, SZ_STAGE,
 };
 use crate::coordinator::scheduler::{par_try_for, par_try_map};
 use crate::coordinator::{Pipeline, Progress, StageClock};
@@ -160,6 +160,15 @@ pub struct RangeDecode {
     /// High-water mark of the decode working sets (output window + one
     /// shard's buffers at a time — never the full `[T, S, Y, X]` field).
     pub peak_workspace_bytes: usize,
+    /// Sections served from best-effort salvage instead of a healthy
+    /// decode, as ascending (shard index, species index) pairs.  Empty
+    /// for a fully healthy response; only the degraded-mode store path
+    /// ever populates it.
+    pub degraded: Vec<(usize, usize)>,
+    /// Loosened certified NRMSE bound covering the salvaged sections
+    /// (`None` when the response is healthy, or when nothing usable
+    /// survived and no bound can be stated).
+    pub degraded_bound: Option<f64>,
 }
 
 /// The shard-oriented engine; borrows an executor-service handle.
@@ -1001,6 +1010,124 @@ impl<'a> ShardEngine<'a> {
         Ok(())
     }
 
+    /// Best-effort decode of one species' normalized plane of one shard
+    /// for degraded-mode serving: never fails on damaged section *bytes*,
+    /// only on I/O errors or shape-level impossibilities.
+    ///
+    /// * GBATC sections reconstruct from the shared-model prior (latent
+    ///   plane + AE/TCN) plus whatever coefficient prefix survives in
+    ///   the damaged section — zero surviving coefficients means a
+    ///   prior-only plane, and a rotted latent plane leaves a zero
+    ///   prior.
+    /// * Self-contained sections (SZ / dense) have no prior to fall back
+    ///   on: a damaged section yields a zero plane
+    ///   (`salvaged_fraction == 0`).
+    ///
+    /// Returns the plane plus the [`SectionSalvage`] stats that feed the
+    /// loosened certified bound of a degraded response.
+    pub fn decode_shard_plane_salvage<S: SectionSource + ?Sized>(
+        &self,
+        header: &Gba2Header,
+        entry: &ShardToc,
+        src: &S,
+        s: usize,
+    ) -> Result<(Vec<f32>, SectionSalvage)> {
+        self.check_spec(header)?;
+        let (_, ns, ny, nx) = header.dims;
+        let npix = ny * nx;
+        if s >= ns || entry.codecs.len() != ns {
+            return Err(Error::shape(format!(
+                "salvage decode: species {s} of {ns} ({} codec tags)",
+                entry.codecs.len()
+            )));
+        }
+        let range = *entry
+            .species
+            .get(s)
+            .ok_or_else(|| Error::format(format!("no TOC entry for species {s}")))?;
+        let sec_len = usize::try_from(range.1)
+            .map_err(|_| Error::format("species section length overflows"))?;
+        let sec_raw = src.read_at(range.0, sec_len)?;
+        match entry.codecs[s] {
+            CodecTag::Gbatc => {
+                let shape = BlockShape {
+                    kt: header.block.0,
+                    by: header.block.1,
+                    bx: header.block.2,
+                };
+                let mut plane = self
+                    .shard_prior_plane(header, entry, src, s)
+                    .unwrap_or_else(|_| vec![0.0f32; entry.nt * npix]);
+                let stats = GbatcShardCodec::correct_plane_salvage(
+                    shape, &sec_raw, entry.nt, ny, nx, &mut plane,
+                );
+                Ok((plane, stats))
+            }
+            tag => {
+                let mut plane = vec![0.0f32; entry.nt * npix];
+                let decoded = registry::decode_stage(tag)
+                    .and_then(|stage| stage.decode(&sec_raw, entry.nt, ny, nx, &mut plane));
+                let stats = match decoded {
+                    Ok(()) => SectionSalvage {
+                        salvaged_fraction: 1.0,
+                        max_correction: 0.0,
+                    },
+                    Err(_) => {
+                        // a torn decode may have partially written
+                        plane.fill(0.0);
+                        SectionSalvage {
+                            salvaged_fraction: 0.0,
+                            max_correction: 0.0,
+                        }
+                    }
+                };
+                Ok((plane, stats))
+            }
+        }
+    }
+
+    /// The shared-model (AE + optional TCN) normalized reconstruction of
+    /// one species' plane of one shard — the prior that GBATC
+    /// corrections refine, and all a degraded GBATC section has left
+    /// when none of its coefficients survive.
+    fn shard_prior_plane<S: SectionSource + ?Sized>(
+        &self,
+        header: &Gba2Header,
+        entry: &ShardToc,
+        src: &S,
+        s: usize,
+    ) -> Result<Vec<f32>> {
+        let (_, ns, ny, nx) = header.dims;
+        let shape = BlockShape {
+            kt: header.block.0,
+            by: header.block.1,
+            bx: header.block.2,
+        };
+        let grid = BlockGrid::new((entry.nt, ns, ny, nx), shape)?;
+        let latent_len = usize::try_from(entry.latent.1)
+            .map_err(|_| Error::format("latent section length overflows"))?;
+        let latent_bytes = src.read_at(entry.latent.0, latent_len)?;
+        let plane = LatentCodec::decode(&latent_bytes)?;
+        if plane.n != grid.n_blocks() || plane.dim != header.latent_dim {
+            return Err(Error::format(format!(
+                "latent plane {}x{} vs expected {}x{}",
+                plane.n,
+                plane.dim,
+                grid.n_blocks(),
+                header.latent_dim
+            )));
+        }
+        let progress = Progress::new();
+        let norm = Pipeline::default().decode_all(
+            &grid,
+            &plane.values,
+            self.handle,
+            header.tcn_used,
+            &progress,
+        )?;
+        Ok(registry::gather_plane(&norm, entry.nt, ns, ny * nx, s))
+    }
+
     /// Decompress a whole archive back to mass fractions `[T, S, Y, X]`.
     pub fn decompress_all(&self, archive: &Gba2Archive, threads: usize) -> Result<Vec<f32>> {
         let progress = Progress::new();
@@ -1099,6 +1226,8 @@ impl<'a> ShardEngine<'a> {
             species: sel,
             mass: out,
             peak_workspace_bytes,
+            degraded: Vec::new(),
+            degraded_bound: None,
         })
     }
 }

@@ -61,13 +61,24 @@
 //!              (Uniform | PerSpecies) │  guarantee stage, certified per
 //!                                     ▼  (shard, species)
 //!            ShardEngine::shard_stage ──► Gba2StreamWriter (incremental:
-//!            payloads stream out as shards finish; header + TOC
-//!            back-patched at finish() — byte-identical to one-shot)
+//!            payloads stream out as shards finish; a CRC'd shard-
+//!            completion journal in the reserved header region commits
+//!            each shard after its bytes are flushed; header + TOC
+//!            back-patched + fsync'd at finish() — byte-identical to
+//!            one-shot.  A killed run resumes via resume_session_on:
+//!            torn tail truncated, sealed bytes still identical)
 //!
 //!   egress   ArchiveReader::query(Query { time: t0..t1, species })
 //!            └─ TOC walk, reads only touched sections, bit-identical
 //!               to the same slice of a full decode
 //!   ```
+//! * **Recovery layer** ([`archive::repair`] + the salvage decode path) —
+//!   `verify_archive` walks every section of a sealed archive or an
+//!   unsealed `GBJL` stream (`gbatc inspect --verify`); `repair_archive`
+//!   salvages the valid shard prefix of torn inputs and seals interrupted
+//!   streams from their CRC-committed shards (`gbatc repair`);
+//!   `compact_archives` merges the pieces of an interrupted-and-resumed
+//!   run, dropping duplicate and orphaned shards (`gbatc compact`).
 //! * **Serving layer** ([`store`] + [`serve`]) — the read side at scale:
 //!   an [`store::ArchiveStore`] mounts many archives under named dataset
 //!   keys and executes [`api::Query`]s through a sharded, byte-metered
@@ -103,6 +114,12 @@
 //!   mmap-backed ([`archive::MmapSource`], `FileSource` fallback), cache
 //!   planes are `Arc<[f32]>` (a warm hit is a refcount bump, zero bytes
 //!   copied), and shard decode workspaces are arena-reused across shards.
+//!   Sections that fail to decode are quarantined, not fatal: queries
+//!   touching them are served from best-effort salvage (retained PCA
+//!   basis over the surviving coefficient prefix), flagged
+//!   `degraded: true` with a loosened bound in `X-Gbatc-Meta` — never
+//!   cached, so the warm path serves healthy bytes only — and strict
+//!   clients (`X-Gbatc-Strict: 1`) get `503` instead.
 //! * **SIMD kernels** ([`simd`]) — runtime-dispatched (AVX2 via
 //!   `is_x86_feature_detected!`, scalar fallback/oracle, `GBATC_NO_SIMD`
 //!   force-off) vectorized hot loops for the guarantee-pass GEMM, PCA

@@ -8,7 +8,9 @@ use gbatc::api::{
     ArchiveReader, Backend, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesBudget,
     SpeciesSel,
 };
-use gbatc::archive::{AnyArchive, Archive, CodecTag, Gba2Archive};
+use gbatc::archive::{
+    compact_archives, repair_archive, verify_archive, AnyArchive, Archive, CodecTag, Gba2Archive,
+};
 use gbatc::chem::{self, Mechanism};
 use gbatc::cli::{Args, USAGE};
 use gbatc::compressor::{CodecChoice, SzArchive, SzCompressOptions, SzCompressor};
@@ -40,6 +42,8 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "decompress" => cmd_decompress(args),
         "extract" => cmd_extract(args),
         "inspect" => cmd_inspect(args),
+        "repair" => cmd_repair(args),
+        "compact" => cmd_compact(args),
         "serve" => cmd_serve(args),
         "query" => cmd_query(args),
         "sz" => cmd_sz(args),
@@ -423,11 +427,52 @@ fn cmd_query(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Walk every section of an archive (or unsealed stream) and print its
+/// health; `Err` — and so a nonzero exit — when anything is damaged.
+fn verify_report(path: &str, bytes: &[u8]) -> Result<()> {
+    let rep = verify_archive(bytes)?;
+    println!(
+        "verify {path}: {} — {}/{} shards indexed, {} sections checked",
+        if rep.sealed {
+            "sealed archive"
+        } else {
+            "unsealed stream (GBJL journal)"
+        },
+        rep.shards_indexed,
+        rep.shards_declared,
+        rep.sections.len()
+    );
+    for h in rep.sections.iter().filter(|h| !h.ok) {
+        match h.species {
+            Some(s) => println!("  DAMAGED shard {} species {s}: {}", h.shard, h.detail),
+            None => println!("  DAMAGED shard {}: {}", h.shard, h.detail),
+        }
+    }
+    if rep.uncommitted_tail > 0 {
+        println!(
+            "  note: {} B of flushed-but-uncommitted shard payload (dropped on resume/repair)",
+            rep.uncommitted_tail
+        );
+    }
+    if rep.healthy() {
+        println!("  all sections decode — archive is healthy");
+        Ok(())
+    } else {
+        Err(Error::format(format!(
+            "{path}: {} damaged section(s); run `gbatc repair` to salvage the intact prefix",
+            rep.damaged_sections()
+        )))
+    }
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let path = args.require("archive")?;
     let bytes = std::fs::read(path)?;
     if bytes.starts_with(b"SZA1") {
         return cmd_info(args);
+    }
+    if args.has("verify") {
+        return verify_report(path, &bytes);
     }
     let any = AnyArchive::deserialize(&bytes)?;
     if any.version() == 1 {
@@ -501,6 +546,67 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         let name = chem::SPECIES.get(s).map(|sp| sp.name).unwrap_or("?");
         println!("    {:>12} (#{s:<3}) {b:>10} B", name);
     }
+    Ok(())
+}
+
+fn cmd_repair(args: &Args) -> Result<()> {
+    let input = args.require("input")?;
+    let output = match args.get("output") {
+        Some(o) => o.to_string(),
+        None if args.has("in-place") => input.to_string(),
+        None => {
+            return Err(Error::config(
+                "repair needs --output <file> (or --in-place to overwrite the input)",
+            ))
+        }
+    };
+    let bytes = std::fs::read(input)?;
+    let (fixed, outcome) = repair_archive(&bytes)?;
+    println!(
+        "repair {input}: {} in -> {} shards out ({} timesteps, {} B){}",
+        if outcome.sealed_input {
+            format!("sealed archive, {} shards", outcome.shards_in)
+        } else {
+            format!("unsealed stream, {} committed shards", outcome.shards_in)
+        },
+        outcome.shards_out,
+        outcome.timesteps_out,
+        outcome.bytes_out,
+        if outcome.changed { "" } else { " — already well-formed" }
+    );
+    if outcome.changed || output != input {
+        std::fs::write(&output, &fixed)?;
+        println!("wrote {output}");
+    }
+    Ok(())
+}
+
+fn cmd_compact(args: &Args) -> Result<()> {
+    let output = args.require("output")?;
+    if args.positional.is_empty() {
+        return Err(Error::config(
+            "compact needs archive paths as positional arguments",
+        ));
+    }
+    let archives: Vec<Gba2Archive> = args
+        .positional
+        .iter()
+        .map(|p| AnyArchive::read_file(p)?.into_v2())
+        .collect::<Result<_>>()?;
+    let (merged, outcome) = compact_archives(&archives)?;
+    println!(
+        "compact: {} shards across {} archives -> {} shards, {} timesteps \
+         ({} duplicate, {} orphaned dropped)",
+        outcome.shards_in,
+        args.positional.len(),
+        outcome.shards_out,
+        outcome.timesteps_out,
+        outcome.dropped_duplicate,
+        outcome.dropped_orphaned
+    );
+    let bytes = merged.into_bytes();
+    std::fs::write(output, &bytes)?;
+    println!("wrote {output} ({} B)", bytes.len());
     Ok(())
 }
 

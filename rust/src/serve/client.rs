@@ -30,6 +30,9 @@ pub struct QueryClient {
     addr: String,
     timeout: Duration,
     reuse: bool,
+    /// Send `X-Gbatc-Strict: 1` — degraded responses become errors
+    /// (the server answers `503` instead of salvaged data).
+    strict: bool,
     /// The cached keep-alive connection (lockstep request/response, so
     /// one at a time; concurrent callers serialize here).
     sock: Mutex<Option<TcpStream>>,
@@ -43,6 +46,7 @@ impl Clone for QueryClient {
             addr: self.addr.clone(),
             timeout: self.timeout,
             reuse: self.reuse,
+            strict: self.strict,
             sock: Mutex::new(None),
             opened: AtomicU64::new(0),
         }
@@ -67,6 +71,13 @@ pub struct ClientDecode {
     /// Row-major `[nt, species.len(), ny, nx]` mass fractions —
     /// bit-identical to a local decode of the same range.
     pub mass: Vec<f32>,
+    /// The response touched quarantined sections and was served from
+    /// best-effort salvage (see `degraded_sections`/`degraded_bound` in
+    /// `meta_json`); `nrmse_target` no longer certifies it.
+    pub degraded: bool,
+    /// Loosened certified NRMSE bound of a degraded response (`None`
+    /// when healthy, or when no bound could be stated).
+    pub degraded_bound: Option<f64>,
     /// The raw `X-Gbatc-Meta` JSON, for fields not parsed above.
     pub meta_json: String,
 }
@@ -78,6 +89,7 @@ impl QueryClient {
             addr: addr.into(),
             timeout: Duration::from_secs(30),
             reuse: true,
+            strict: false,
             sock: Mutex::new(None),
             opened: AtomicU64::new(0),
         }
@@ -93,6 +105,14 @@ impl QueryClient {
     /// and sends `Connection: close` (the pre-keep-alive behavior).
     pub fn reuse(mut self, reuse: bool) -> QueryClient {
         self.reuse = reuse;
+        self
+    }
+
+    /// Refuse degraded data: every request carries `X-Gbatc-Strict: 1`,
+    /// so a query touching a quarantined section fails with the
+    /// server's `503` instead of returning salvaged mass fractions.
+    pub fn strict(mut self, strict: bool) -> QueryClient {
+        self.strict = strict;
         self
     }
 
@@ -132,8 +152,13 @@ impl QueryClient {
     /// One request/response exchange on `stream`.
     fn exchange(&self, stream: &mut TcpStream, target: &str) -> Result<HttpResponse> {
         let connection = if self.reuse { "keep-alive" } else { "close" };
+        let strict = if self.strict {
+            "X-Gbatc-Strict: 1\r\n"
+        } else {
+            ""
+        };
         let req = format!(
-            "GET {target} HTTP/1.1\r\nHost: {}\r\nConnection: {connection}\r\n\r\n",
+            "GET {target} HTTP/1.1\r\nHost: {}\r\nConnection: {connection}\r\n{strict}\r\n",
             self.addr
         );
         stream
@@ -246,6 +271,14 @@ impl QueryClient {
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
             .collect();
+        // degraded fields are absent from healthy responses; a `null`
+        // bound parses as "no statable bound"
+        let degraded = meta.contains("\"degraded\":true");
+        let degraded_bound = if degraded {
+            http::json_f64(&meta, "degraded_bound").ok()
+        } else {
+            None
+        };
         Ok(ClientDecode {
             t0,
             nt,
@@ -255,6 +288,8 @@ impl QueryClient {
             nrmse_target,
             pressure,
             mass,
+            degraded,
+            degraded_bound,
             meta_json: meta,
         })
     }

@@ -45,6 +45,9 @@ pub struct Request {
     /// parsed — i.e. the client pipelined it (no socket read between
     /// the two yields).  Feeds the server's `pipelined` counter.
     pub pipelined: bool,
+    /// Client sent `X-Gbatc-Strict: 1` — it would rather get a `503`
+    /// than a degraded (salvaged, loosened-bound) query response.
+    pub strict: bool,
 }
 
 impl Request {
@@ -196,6 +199,7 @@ fn parse_request_head(head_bytes: &[u8]) -> Result<(Request, usize)> {
     // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close
     let mut close = version == "HTTP/1.0";
     let mut body_len = 0usize;
+    let mut strict = false;
     for line in lines {
         if line.is_empty() {
             break;
@@ -219,6 +223,7 @@ fn parse_request_head(head_bytes: &[u8]) -> Result<(Request, usize)> {
                     Error::protocol(format!("bad Content-Length `{value}`: {e}"))
                 })?;
             }
+            "x-gbatc-strict" => strict = value == "1",
             _ => {}
         }
     }
@@ -229,6 +234,7 @@ fn parse_request_head(head_bytes: &[u8]) -> Result<(Request, usize)> {
             params,
             close,
             pipelined: false,
+            strict,
         },
         body_len,
     ))
@@ -576,6 +582,17 @@ mod tests {
         assert!(!p.next_request().unwrap().unwrap().close);
         p.feed(b"GET /d HTTP/1.1\r\n\r\n");
         assert!(!p.next_request().unwrap().unwrap().close, "1.1 defaults to keep-alive");
+    }
+
+    #[test]
+    fn parser_reads_strict_header() {
+        let mut p = HttpParser::new(8 * 1024);
+        p.feed(b"GET /query HTTP/1.1\r\nX-Gbatc-Strict: 1\r\n\r\n");
+        assert!(p.next_request().unwrap().unwrap().strict);
+        p.feed(b"GET /query HTTP/1.1\r\n\r\n");
+        assert!(!p.next_request().unwrap().unwrap().strict);
+        p.feed(b"GET /query HTTP/1.1\r\nx-gbatc-strict: 0\r\n\r\n");
+        assert!(!p.next_request().unwrap().unwrap().strict);
     }
 
     #[test]

@@ -681,7 +681,21 @@ fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) 
     };
     match router.query(dataset, &q) {
         Ok(dec) => {
-            let meta = format!(
+            // strict clients would rather fail than read salvaged data
+            if req.strict && !dec.degraded.is_empty() {
+                return (
+                    503,
+                    JSON,
+                    Vec::new(),
+                    json_error(&format!(
+                        "strict query touches {} quarantined section(s); \
+                         repair the archive or retry without X-Gbatc-Strict",
+                        dec.degraded.len()
+                    ))
+                    .into_bytes(),
+                );
+            }
+            let mut meta = format!(
                 "{{\"dataset\":\"{}\",\"t0\":{},\"nt\":{},\"ny\":{},\"nx\":{},\"species\":{},\
                  \"nrmse_target\":{:e},\"pressure\":{:e}}}",
                 json_escape(dataset),
@@ -693,6 +707,26 @@ fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) 
                 info.nrmse_target,
                 info.pressure
             );
+            // healthy responses keep the exact historical meta bytes;
+            // degraded ones append their fields before the closing brace
+            if !dec.degraded.is_empty() {
+                meta.pop();
+                let mut secs = String::from("[");
+                for (i, &(sh, sp)) in dec.degraded.iter().enumerate() {
+                    if i > 0 {
+                        secs.push(',');
+                    }
+                    secs.push_str(&format!("[{sh},{sp}]"));
+                }
+                secs.push(']');
+                let bound = match dec.degraded_bound {
+                    Some(b) => format!("{b:e}"),
+                    None => "null".to_string(),
+                };
+                meta.push_str(&format!(
+                    ",\"degraded\":true,\"degraded_sections\":{secs},\"degraded_bound\":{bound}}}"
+                ));
+            }
             let mut body = Vec::with_capacity(dec.mass.len() * 4);
             for v in &dec.mass {
                 body.extend_from_slice(&v.to_le_bytes());

@@ -43,6 +43,7 @@ use crate::api::{Backend, Query};
 use crate::archive::{
     Gba2Archive, Gba2Header, IoStats, MemSource, MeteredSource, SectionSource, ShardToc,
 };
+use crate::compressor::SectionSalvage;
 use crate::coordinator::engine::{denorm_row_into, RangeDecode, ShardEngine};
 use crate::error::{Error, Result};
 use crate::runtime::{ExecHandle, ExecService};
@@ -78,6 +79,56 @@ struct Mount {
     src: MeteredSource,
     header: Gba2Header,
     toc: Vec<ShardToc>,
+    /// Per-section health: (shard, species) pairs whose decode failed,
+    /// with the salvage stats of the last best-effort reconstruction.
+    /// Quarantined sections are served degraded instead of failing the
+    /// query, and their planes are **never** admitted to the cache.
+    quarantine: RwLock<HashMap<(u32, u32), SectionSalvage>>,
+}
+
+impl Mount {
+    fn is_quarantined(&self, shard: usize, species: usize) -> bool {
+        self.quarantine
+            .read()
+            .map(|g| g.contains_key(&(shard as u32, species as u32)))
+            .unwrap_or(false)
+    }
+
+    fn set_quarantined(&self, shard: usize, species: usize, stats: SectionSalvage) {
+        if let Ok(mut g) = self.quarantine.write() {
+            g.insert((shard as u32, species as u32), stats);
+        }
+    }
+}
+
+/// Loosened certified NRMSE bound for one salvaged section.
+///
+/// Healthy blocks keep the archive's per-block residual bound
+/// `τ = target·√D`; a block whose correction was lost is off by that
+/// correction on top, estimated by the largest correction ℓ2 observed
+/// among the blocks that *did* survive.  Mean-square over the section:
+///
+/// ```text
+/// bound = target · √( f + (1 − f) · ((τ + Ĉ)/τ)² )
+/// ```
+///
+/// with `f` the salvaged block fraction and `Ĉ` the observed max
+/// correction norm.  `None` when nothing survived (`f = 0`) — with no
+/// surviving blocks there is no data to estimate the lost corrections
+/// from, so no bound can be stated.
+fn loosened_bound(target: f64, block_d: usize, s: SectionSalvage) -> Option<f64> {
+    if s.salvaged_fraction <= 0.0 {
+        return None;
+    }
+    if s.salvaged_fraction >= 1.0 {
+        return Some(target);
+    }
+    let tau = target * (block_d as f64).sqrt();
+    if tau <= 0.0 {
+        return None;
+    }
+    let ratio = (tau + s.max_correction) / tau;
+    Some(target * (s.salvaged_fraction + (1.0 - s.salvaged_fraction) * ratio * ratio).sqrt())
 }
 
 /// Catalog info for one mounted dataset (the `/datasets` endpoint body).
@@ -229,6 +280,7 @@ impl ArchiveStore {
             src,
             header,
             toc,
+            quarantine: RwLock::new(HashMap::new()),
         });
         let mut guard = self
             .mounts
@@ -333,6 +385,16 @@ impl ArchiveStore {
     /// `peak_workspace_bytes` of the result covers the response buffer
     /// (the shard-decode internals are metered by the engine pass and
     /// bounded by one shard, as always).
+    ///
+    /// **Degraded mode** — a section whose decode fails (rotted bytes)
+    /// is quarantined in its [`Mount`] instead of failing the query:
+    /// its plane is reconstructed best-effort
+    /// ([`ShardEngine::decode_shard_plane_salvage`]), served with
+    /// `degraded` listing the affected (shard, species) pairs and
+    /// `degraded_bound` carrying the loosened certified bound, and
+    /// **never** admitted to the cache (so `is_warm` stays false and the
+    /// reactor never serves it inline).  Healthy queries take exactly
+    /// the pre-quarantine path and return bit-identical bytes.
     pub fn query(&self, dataset: &str, q: &Query) -> Result<RangeDecode> {
         let m = self.mount(dataset)?;
         let (nt, ns, ny, nx) = m.header.dims;
@@ -346,8 +408,20 @@ impl ArchiveStore {
         self.queries.fetch_add(1, Ordering::Relaxed);
         let npix = ny * nx;
         let nsel = sel.len();
+        let block_d = m.header.block.0 * m.header.block.1 * m.header.block.2;
         let mut out = vec![0.0f32; (t1 - t0) * nsel * npix];
         let engine = ShardEngine::new(&self.handle, 0, 0);
+        let mut degraded: Vec<(usize, usize)> = Vec::new();
+        // loosest statable bound among degraded sections; unknown wins
+        let mut worst_bound: Option<f64> = None;
+        let mut bound_unknown = false;
+        let mut note_degraded = |si: usize, s: usize, stats: SectionSalvage| {
+            degraded.push((si, s));
+            match loosened_bound(m.header.nrmse_target, block_d, stats) {
+                Some(b) => worst_bound = Some(worst_bound.map_or(b, |w: f64| w.max(b))),
+                None => bound_unknown = true,
+            }
+        };
         // one denormalized-shard scratch reused across every missing
         // shard of this query (arena reuse; decode_shard_planes_into
         // sizes it per shard)
@@ -361,19 +435,31 @@ impl ArchiveStore {
                 .iter()
                 .map(|&s| self.cache.get((m.id, si as u32, s as u32)))
                 .collect();
-            let missing_pos: Vec<usize> =
-                (0..nsel).filter(|&k| planes[k].is_none()).collect();
-            if !missing_pos.is_empty() {
-                let missing_sel: Vec<usize> = missing_pos.iter().map(|&k| sel[k]).collect();
+            let plane_len = entry.nt * npix;
+            // already-quarantined sections go straight to salvage — they
+            // never touch the batch decode, and never enter the cache
+            let mut batch_pos: Vec<usize> = Vec::new();
+            for k in (0..nsel).filter(|&k| planes[k].is_none()) {
+                if m.is_quarantined(si, sel[k]) {
+                    let (plane, stats) =
+                        engine.decode_shard_plane_salvage(&m.header, entry, &m.src, sel[k])?;
+                    m.set_quarantined(si, sel[k], stats);
+                    note_degraded(si, sel[k], stats);
+                    planes[k] = Some(Arc::from(plane));
+                } else {
+                    batch_pos.push(k);
+                }
+            }
+            if !batch_pos.is_empty() {
+                let batch_sel: Vec<usize> = batch_pos.iter().map(|&k| sel[k]).collect();
                 // allocate the exact planes the cache will own and decode
                 // straight into them — the `Arc`s are uniquely held here,
                 // so `get_mut` hands out the fill buffers without a copy
-                let plane_len = entry.nt * npix;
-                let mut fresh: Vec<Arc<[f32]>> = missing_pos
+                let mut fresh: Vec<Arc<[f32]>> = batch_pos
                     .iter()
                     .map(|_| Arc::<[f32]>::from(vec![0.0f32; plane_len]))
                     .collect();
-                {
+                let batch = {
                     let mut outs: Vec<&mut [f32]> = fresh
                         .iter_mut()
                         .map(|a| {
@@ -384,20 +470,65 @@ impl ArchiveStore {
                         &m.header,
                         entry,
                         &m.src,
-                        &missing_sel,
+                        &batch_sel,
                         self.threads,
                         &mut norm_scratch,
                         &mut outs,
-                    )?;
-                }
-                self.decoded_sections
-                    .fetch_add(fresh.len() as u64, Ordering::Relaxed);
-                for (&k, plane) in missing_pos.iter().zip(fresh) {
-                    self.decoded_bytes
-                        .fetch_add(plane.len() as u64 * 4, Ordering::Relaxed);
-                    self.cache
-                        .insert((m.id, si as u32, sel[k] as u32), Arc::clone(&plane));
-                    planes[k] = Some(plane);
+                    )
+                };
+                match batch {
+                    Ok(()) => {
+                        self.decoded_sections
+                            .fetch_add(fresh.len() as u64, Ordering::Relaxed);
+                        for (&k, plane) in batch_pos.iter().zip(fresh) {
+                            self.decoded_bytes
+                                .fetch_add(plane.len() as u64 * 4, Ordering::Relaxed);
+                            self.cache
+                                .insert((m.id, si as u32, sel[k] as u32), Arc::clone(&plane));
+                            planes[k] = Some(plane);
+                        }
+                    }
+                    // the batch shares one decode pass, so a single rotten
+                    // section fails all of it — retry per species: healthy
+                    // sections admit normally, the damaged ones quarantine
+                    // and serve salvage (genuine I/O failures still error
+                    // out of the salvage decode below)
+                    Err(_) => {
+                        for &k in &batch_pos {
+                            let s = sel[k];
+                            let mut one = Arc::<[f32]>::from(vec![0.0f32; plane_len]);
+                            let single = {
+                                let buf = Arc::get_mut(&mut one)
+                                    .expect("freshly allocated plane is uniquely owned");
+                                engine.decode_shard_planes_into(
+                                    &m.header,
+                                    entry,
+                                    &m.src,
+                                    std::slice::from_ref(&s),
+                                    self.threads,
+                                    &mut norm_scratch,
+                                    &mut [buf],
+                                )
+                            };
+                            match single {
+                                Ok(()) => {
+                                    self.decoded_sections.fetch_add(1, Ordering::Relaxed);
+                                    self.decoded_bytes
+                                        .fetch_add(one.len() as u64 * 4, Ordering::Relaxed);
+                                    self.cache
+                                        .insert((m.id, si as u32, s as u32), Arc::clone(&one));
+                                    planes[k] = Some(one);
+                                }
+                                Err(_) => {
+                                    let (plane, stats) = engine
+                                        .decode_shard_plane_salvage(&m.header, entry, &m.src, s)?;
+                                    m.set_quarantined(si, s, stats);
+                                    note_degraded(si, s, stats);
+                                    planes[k] = Some(Arc::from(plane));
+                                }
+                            }
+                        }
+                    }
                 }
             }
             // assemble through the same shared denorm op decompress_range
@@ -423,6 +554,11 @@ impl ArchiveStore {
             }
         }
         let peak_workspace_bytes = out.len() * 4;
+        degraded.sort_unstable();
+        degraded.dedup();
+        // one unstatable section bound makes the whole response bound
+        // unstatable — never report a number that doesn't cover the data
+        let degraded_bound = if bound_unknown { None } else { worst_bound };
         Ok(RangeDecode {
             t0,
             nt: t1 - t0,
@@ -431,6 +567,8 @@ impl ArchiveStore {
             species: sel,
             mass: out,
             peak_workspace_bytes,
+            degraded,
+            degraded_bound,
         })
     }
 

@@ -1,0 +1,172 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) — the
+//! integrity checksum behind the streaming journal and shard trailers
+//! (`archive::stream`) and the `repair`/`inspect --verify` tooling.
+//!
+//! Hand-rolled (the offline image vendors no crc crates): a slice-by-8
+//! table kernel processes eight input bytes per step with eight
+//! compile-time tables, and the one-table bytewise form is kept as the
+//! oracle — `crc32_bytewise` is property-tested equal to [`crc32`] and
+//! is the "before" side of the `crc32_sweep` row in
+//! `benches/perf_hotpaths.rs`, so the cost of integrity checking stays
+//! visible in CI.
+
+/// Reflected CRC-32 polynomial (IEEE 802.3 / zlib / PNG).
+const POLY: u32 = 0xEDB8_8320;
+
+/// Eight slice-by-8 tables; `TABLES[0]` is the classic bytewise table.
+static TABLES: [[u32; 256]; 8] = build_tables();
+
+const fn build_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            k += 1;
+        }
+        t[0][i] = crc;
+        i += 1;
+    }
+    let mut j = 1usize;
+    while j < 8 {
+        let mut i = 0usize;
+        while i < 256 {
+            let prev = t[j - 1][i];
+            t[j][i] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
+            i += 1;
+        }
+        j += 1;
+    }
+    t
+}
+
+/// Streaming CRC-32 state: feed bytes in any chunking, then
+/// [`finalize`](Crc32::finalize).  Chunking never changes the digest.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: !0 }
+    }
+
+    /// Absorb `bytes` (slice-by-8 over the aligned middle, bytewise
+    /// head/tail).
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            let lo = u32::from_le_bytes([c[0], c[1], c[2], c[3]]) ^ crc;
+            crc = TABLES[7][(lo & 0xFF) as usize]
+                ^ TABLES[6][((lo >> 8) & 0xFF) as usize]
+                ^ TABLES[5][((lo >> 16) & 0xFF) as usize]
+                ^ TABLES[4][(lo >> 24) as usize]
+                ^ TABLES[3][c[4] as usize]
+                ^ TABLES[2][c[5] as usize]
+                ^ TABLES[1][c[6] as usize]
+                ^ TABLES[0][c[7] as usize];
+        }
+        for &b in chunks.remainder() {
+            crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = crc;
+    }
+
+    /// The digest of everything absorbed so far.
+    pub fn finalize(&self) -> u32 {
+        !self.state
+    }
+}
+
+/// One-shot CRC-32 of `bytes` (slice-by-8 kernel).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finalize()
+}
+
+/// One-shot bytewise CRC-32 — the single-table oracle the fast kernel is
+/// tested and benchmarked against.
+pub fn crc32_bytewise(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Arbitrary};
+    use crate::util::Prng;
+
+    #[test]
+    fn known_vectors() {
+        // canonical IEEE CRC-32 check values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+        assert_eq!(crc32_bytewise(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[derive(Clone, Debug)]
+    struct Blob(Vec<u8>);
+
+    impl Arbitrary for Blob {
+        fn generate(rng: &mut Prng) -> Blob {
+            let n = rng.index(600);
+            Blob((0..n).map(|_| rng.next_u64() as u8).collect())
+        }
+        fn shrink(&self) -> Vec<Self> {
+            if self.0.is_empty() {
+                Vec::new()
+            } else {
+                vec![Blob(self.0[..self.0.len() / 2].to_vec())]
+            }
+        }
+    }
+
+    #[test]
+    fn prop_slice_by_8_matches_bytewise_oracle() {
+        check::<Blob, _>(31, 200, |b| crc32(&b.0) == crc32_bytewise(&b.0));
+    }
+
+    #[test]
+    fn prop_chunking_is_invariant() {
+        check::<Blob, _>(32, 100, |b| {
+            let whole = crc32(&b.0);
+            let mut c = Crc32::new();
+            let mut rest = b.0.as_slice();
+            let mut step = 1usize;
+            while !rest.is_empty() {
+                let n = step.min(rest.len());
+                c.update(&rest[..n]);
+                rest = &rest[n..];
+                step = step * 2 + 1;
+            }
+            c.finalize() == whole
+        });
+    }
+
+    #[test]
+    fn single_bit_flips_change_the_digest() {
+        let data = vec![0x5Au8; 257];
+        let base = crc32(&data);
+        for bit in [0usize, 7, 8, 1024, 257 * 8 - 1] {
+            let mut flipped = data.clone();
+            flipped[bit / 8] ^= 1 << (bit % 8);
+            assert_ne!(crc32(&flipped), base, "bit {bit} collision");
+        }
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod bits;
 pub mod bytes;
+pub mod crc32;
 pub mod prng;
 pub mod prop;
 pub mod rle;

@@ -1,8 +1,94 @@
 //! Failure-injection tests: corrupted archives, truncated payloads, and
 //! mismatched artifacts must yield errors, never panics or silent garbage.
+//!
+//! The GBA2 tests drive damaged archives through the full serving stack
+//! (`ArchiveStore::mount_bytes` + `query`, and a real loopback `/query`):
+//! every outcome must be a typed error or a degraded-but-structurally-valid
+//! response, quarantined sections must never be admitted to the
+//! `SectionCache` (so the event loop's warm path can never serve salvage
+//! inline), and healthy sections of a damaged archive must stay
+//! bit-identical to a pristine decode.
 
-use gbatc::archive::Archive;
-use gbatc::compressor::SzArchive;
+use std::sync::Arc;
+
+use gbatc::api::{Query, SpeciesSel};
+use gbatc::archive::{Archive, Gba2Archive};
+use gbatc::compressor::{CompressOptions, GbatcCompressor, SzArchive};
+use gbatc::data::Dataset;
+use gbatc::runtime::{ExecHandle, ExecService, RuntimeSpec};
+use gbatc::serve::{QueryClient, QueryServer, ServerConfig};
+use gbatc::store::{ArchiveStore, StoreConfig};
+use gbatc::util::Prng;
+
+const NS: usize = 4;
+const NY: usize = 40;
+const NX: usize = 40;
+
+fn small_spec() -> RuntimeSpec {
+    RuntimeSpec {
+        species: NS,
+        block: (4, 5, 4),
+        latent: 6,
+        batch: 8,
+        points: 64,
+    }
+}
+
+fn make_ds(nt: usize, seed: u64) -> Dataset {
+    let mut ds = Dataset::new(nt, NS, NY, NX);
+    let mut rng = Prng::new(seed);
+    for t in 0..nt {
+        for s in 0..NS {
+            for y in 0..NY {
+                for x in 0..NX {
+                    let v = (t as f32 * 0.3 + s as f32 * 1.7).sin() * 0.2
+                        + (y as f32 * 0.17 + x as f32 * 0.11 + s as f32).cos() * 0.3
+                        + s as f32 * 0.5
+                        + rng.next_f32() * 0.02;
+                    let i = ds.idx(t, s, y, x);
+                    ds.mass[i] = v;
+                }
+            }
+        }
+    }
+    ds
+}
+
+fn build_gba2(handle: &ExecHandle, nt: usize) -> Vec<u8> {
+    let comp = GbatcCompressor::new(handle, 0, 0);
+    let opts = CompressOptions {
+        nrmse_target: 1e-3,
+        kt_window: 4,
+        shard_workers: 2,
+        threads: 2,
+        ..Default::default()
+    };
+    comp.compress(&make_ds(nt, 9), &opts)
+        .expect("compress")
+        .archive
+        .into_bytes()
+}
+
+fn store_cfg() -> StoreConfig {
+    StoreConfig {
+        threads: 2,
+        cache_bytes: 32 << 20,
+        cache_shards: 4,
+        ..StoreConfig::default()
+    }
+}
+
+/// Overwrite the first 8 bytes of (shard, species)'s section — the
+/// serialized basis dims — so the section can neither decode strictly
+/// nor salvage any coefficients.
+fn wreck_section(bytes: &mut [u8], shard: usize, species: usize) {
+    let toc = Gba2Archive::deserialize(bytes).expect("pristine archive").toc;
+    let (off, len) = toc[shard].species[species];
+    assert!(len >= 8, "section too small to target");
+    for b in &mut bytes[off as usize..off as usize + 8] {
+        *b = 0xFF;
+    }
+}
 
 #[test]
 fn archive_bit_flips_do_not_panic() {
@@ -56,4 +142,151 @@ fn missing_artifacts_is_clean_error() {
     assert!(r.is_err());
     let msg = format!("{}", r.err().unwrap());
     assert!(msg.contains("manifest") || msg.contains("artifact"), "{msg}");
+}
+
+#[test]
+fn gba2_corruption_sweep_is_typed_or_degraded_never_a_panic() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let nt = 16;
+    let bytes = build_gba2(&handle, nt);
+    let n_shards = Gba2Archive::deserialize(&bytes).unwrap().toc.len();
+    let store = ArchiveStore::with_handle(&handle, store_cfg());
+    let q = Query { time: 0..nt, species: SpeciesSel::All };
+    let expect = nt * NS * NY * NX;
+
+    // bit flips at a stride spanning header, TOC, latent planes, and
+    // species sections: mount may reject (typed), a query may fail
+    // (typed) or serve degraded — but an Ok response is always the full
+    // window and only names real sections as damaged
+    let step = (bytes.len() / 41).max(1);
+    for (v, i) in (0..bytes.len()).step_by(step).enumerate() {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0xA5;
+        let name = format!("flip{v}");
+        if store.mount_bytes(&name, corrupt).is_err() {
+            continue;
+        }
+        if let Ok(dec) = store.query(&name, &q) {
+            assert_eq!(dec.mass.len(), expect, "byte {i}: short response");
+            for &(sh, sp) in &dec.degraded {
+                assert!(
+                    sh < n_shards && sp < NS,
+                    "byte {i}: bogus degraded section ({sh},{sp})"
+                );
+            }
+        }
+        store.unmount(&name).unwrap();
+    }
+
+    // truncations at every structural boundary class
+    for cut in [0, 1, 7, 40, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        let name = format!("cut{cut}");
+        if store.mount_bytes(&name, bytes[..cut].to_vec()).is_ok() {
+            let _ = store.query(&name, &q); // typed error or degraded, never a panic
+            store.unmount(&name).unwrap();
+        }
+    }
+}
+
+#[test]
+fn quarantined_section_never_poisons_the_cache() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_gba2(&handle, 16);
+    let mut sick = bytes.clone();
+    wreck_section(&mut sick, 1, 2);
+
+    let store = ArchiveStore::with_handle(&handle, store_cfg());
+    store.mount_bytes("ok", bytes).unwrap();
+    store.mount_bytes("sick", sick).unwrap();
+
+    // t 4..8 is exactly shard 1 (kt window 4)
+    let q = Query { time: 4..8, species: SpeciesSel::All };
+    let good = store.query("ok", &q).unwrap();
+    assert!(good.degraded.is_empty());
+    assert_eq!(good.degraded_bound, None);
+
+    let dec = store.query("sick", &q).unwrap();
+    assert_eq!(dec.degraded, vec![(1, 2)]);
+    assert!(
+        dec.degraded_bound.is_none(),
+        "nothing salvaged => no statable bound"
+    );
+    // healthy species of the damaged shard are bit-identical to the
+    // pristine decode — the per-species retry isolates the rot
+    let npix = NY * NX;
+    for t in 0..4 {
+        for s in (0..NS).filter(|&s| s != 2) {
+            let r = (t * NS + s) * npix;
+            assert!(
+                dec.mass[r..r + npix]
+                    .iter()
+                    .zip(&good.mass[r..r + npix])
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "healthy species {s} differs at t {t}"
+            );
+        }
+    }
+
+    // the salvaged plane was never admitted to the cache: the healthy
+    // subset is warm, any query touching (1, 2) is not — so the event
+    // loop's inline warm path can never serve salvaged data
+    let healthy = Query { time: 4..8, species: SpeciesSel::Indices(vec![0, 1, 3]) };
+    assert!(store.is_warm("sick", &healthy), "healthy planes must be cached");
+    assert!(!store.is_warm("sick", &q), "quarantined plane must stay cold");
+
+    // a repeat query re-salvages (uncached) but decodes zero new
+    // sections, and answers identically
+    let before = store.stats().decoded_sections;
+    let again = store.query("sick", &q).unwrap();
+    assert_eq!(again.degraded, vec![(1, 2)]);
+    assert_eq!(store.stats().decoded_sections, before);
+    assert!(again
+        .mass
+        .iter()
+        .zip(&dec.mass)
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+}
+
+#[test]
+fn degraded_serving_over_loopback_and_strict_503() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let mut sick = build_gba2(&handle, 8);
+    wreck_section(&mut sick, 0, 1);
+
+    let store = Arc::new(ArchiveStore::with_handle(&handle, store_cfg()));
+    store.mount_bytes("hcci", sick).unwrap();
+    let server = QueryServer::bind(
+        Arc::clone(&store),
+        "127.0.0.1:0",
+        ServerConfig { workers: 2, queue: 8, ..ServerConfig::default() },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    // a lax client gets salvage, flagged in the meta
+    let lax = QueryClient::new(addr.clone());
+    let dec = lax.query("hcci", Some(0), Some(4), "").unwrap();
+    assert!(dec.degraded);
+    assert!(
+        dec.meta_json.contains("\"degraded_sections\":[[0,1]]"),
+        "{}",
+        dec.meta_json
+    );
+    assert_eq!(dec.mass.len(), 4 * NS * NY * NX);
+
+    // a window clear of the rot keeps the exact healthy meta shape
+    let clean = lax.query("hcci", Some(4), Some(8), "").unwrap();
+    assert!(!clean.degraded);
+    assert!(!clean.meta_json.contains("degraded"), "{}", clean.meta_json);
+
+    // strict clients refuse salvage (503) but healthy windows still serve
+    let strict = QueryClient::new(addr).strict(true);
+    let err = strict.query("hcci", Some(0), Some(4), "").unwrap_err().to_string();
+    assert!(err.contains("503") && err.contains("quarantined"), "{err}");
+    let ok = strict.query("hcci", Some(4), Some(8), "").unwrap();
+    assert!(!ok.degraded);
+    server.shutdown();
 }

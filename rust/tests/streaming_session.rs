@@ -5,11 +5,14 @@
 //! must certify each species against its own target, and session misuse
 //! must be typed errors.
 
+use std::cell::RefCell;
 use std::io::{Cursor, Seek, SeekFrom, Write};
+use std::rc::Rc;
 
 use gbatc::api::{
     ArchiveReader, CompressorBuilder, ErrorPolicy, FieldSpec, Query, SpeciesBudget, SpeciesSel,
 };
+use gbatc::archive::{Gba2Archive, StreamSink};
 use gbatc::compressor::{CodecChoice, CompressOptions, Compressor, GbatcCompressor};
 use gbatc::data::{generate, Dataset, Profile};
 use gbatc::runtime::{ExecHandle, ExecService, RuntimeSpec};
@@ -414,6 +417,162 @@ fn failed_flush_poisons_the_session() {
     assert!(failed, "the failing sink never surfaced an error");
     assert!(s.push_timestep(&ds.mass[..stride]).is_err());
     assert!(s.finish().is_err());
+}
+
+/// A sink that models a crash: writes land until `budget` bytes, the
+/// write that crosses the line is *torn* (its prefix lands — exactly
+/// what a killed process leaves on disk), and everything after errors.
+/// The buffer is shared so the test can read the surviving bytes after
+/// the poisoned session is dropped.
+struct TornSink {
+    buf: Rc<RefCell<Vec<u8>>>,
+    pos: usize,
+    budget: usize,
+    dead: bool,
+}
+
+impl TornSink {
+    fn new(budget: usize) -> (TornSink, Rc<RefCell<Vec<u8>>>) {
+        let buf = Rc::new(RefCell::new(Vec::new()));
+        (
+            TornSink {
+                buf: Rc::clone(&buf),
+                pos: 0,
+                budget,
+                dead: false,
+            },
+            buf,
+        )
+    }
+
+    fn land(&mut self, bytes: &[u8]) {
+        let mut data = self.buf.borrow_mut();
+        let end = self.pos + bytes.len();
+        if data.len() < end {
+            data.resize(end, 0);
+        }
+        data[self.pos..end].copy_from_slice(bytes);
+        self.pos = end;
+    }
+}
+
+impl Write for TornSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.dead {
+            return Err(std::io::Error::other("sink is dead"));
+        }
+        if self.pos + buf.len() > self.budget {
+            let keep = self.budget.saturating_sub(self.pos);
+            self.land(&buf[..keep]);
+            self.dead = true;
+            return Err(std::io::Error::other("killed mid-write"));
+        }
+        self.land(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Seek for TornSink {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        let len = self.buf.borrow().len() as i64;
+        let target = match pos {
+            SeekFrom::Start(p) => p as i64,
+            SeekFrom::End(d) => len + d,
+            SeekFrom::Current(d) => self.pos as i64 + d,
+        };
+        if target < 0 {
+            return Err(std::io::Error::other("seek before start"));
+        }
+        self.pos = target as usize;
+        Ok(self.pos as u64)
+    }
+}
+
+// everything `land`ed counts as durable in this crash model; truncation
+// is never needed before the tear (finish only truncates, and a torn
+// session never reaches finish)
+impl StreamSink for TornSink {}
+
+/// The crash-consistency acceptance property: kill the writer at byte
+/// budgets bracketing **every shard boundary** (torn payload tail,
+/// payload-durable-but-uncommitted, torn trailer/next payload), resume
+/// from the surviving bytes, replay the run — the sealed archive is
+/// byte-identical to the uninterrupted one at every kill point.
+#[test]
+fn prop_kill_at_every_shard_boundary_resumes_byte_identical() {
+    let service = ExecService::start_reference(spec(), 4).unwrap();
+    let handle = service.handle();
+    let ds = make_ds(12, 21);
+    let stride = ds.ns * ds.ny * ds.nx;
+    for codec in [CodecChoice::Gbatc, CodecChoice::Sz] {
+        let opts = CompressOptions {
+            nrmse_target: 1e-2,
+            kt_window: 4,
+            threads: 2,
+            shard_workers: 2,
+            codec,
+            ..Default::default()
+        };
+        let policy = ErrorPolicy::Uniform(1e-2);
+        let (reference, _) = session_bytes(&handle, &ds, &opts, &policy);
+        // the sealed TOC gives every shard's payload end; the unsealed
+        // stream places payloads at the same offsets (the journal lives
+        // inside the reserved header region)
+        let toc = Gba2Archive::deserialize(&reference).expect("reference parses").toc;
+        let mut budgets: Vec<usize> = Vec::new();
+        for e in &toc {
+            let end = (e.shard.0 + e.shard.1) as usize;
+            for off in [-3i64, 0, 9] {
+                budgets.push((end as i64 + off).max(1) as usize);
+            }
+        }
+        for &budget in &budgets {
+            let (sink, shared) = TornSink::new(budget);
+            let mut s = CompressorBuilder::from_options(&opts)
+                .error_policy(policy.clone())
+                .session_on(&handle, 0, 0, FieldSpec::from_dataset(&ds), sink)
+                .expect("open session");
+            let mut killed = false;
+            for t in 0..ds.nt {
+                if s.push_timestep(&ds.mass[t * stride..(t + 1) * stride]).is_err() {
+                    killed = true;
+                    break;
+                }
+            }
+            let bytes = if killed {
+                drop(s);
+                // resume from exactly what survived the crash, replay
+                // the whole run (resumed sessions skip recovered frames)
+                let survivor = Cursor::new(shared.borrow().clone());
+                let (mut r, rep) = CompressorBuilder::from_options(&opts)
+                    .error_policy(policy.clone())
+                    .resume_session_on(&handle, 0, 0, FieldSpec::from_dataset(&ds), survivor)
+                    .expect("resume from torn stream");
+                assert_eq!(r.timesteps_skipped(), rep.timesteps, "kill at {budget}");
+                for t in 0..ds.nt {
+                    r.push_timestep(&ds.mass[t * stride..(t + 1) * stride])
+                        .expect("replay push");
+                }
+                let (_, sink) = r.finish_into().expect("resumed finish");
+                sink.into_inner()
+            } else {
+                assert!(
+                    budget >= reference.len(),
+                    "codec {codec:?}: budget {budget} inside the stream never killed it"
+                );
+                s.finish_into().expect("uninterrupted finish");
+                shared.borrow().clone()
+            };
+            assert_eq!(
+                bytes, reference,
+                "codec {codec:?}, kill at byte {budget}: resumed archive diverged"
+            );
+        }
+    }
 }
 
 /// The typed egress: `ArchiveReader::query` over a streamed archive is
