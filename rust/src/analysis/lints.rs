@@ -1,0 +1,446 @@
+//! The invariant lints `gbatc-verify` enforces over the scanned tree.
+//!
+//! Four source lints plus the manifest consistency checks:
+//!
+//! 1. **unsafe audit** — every `unsafe` occurrence carries a `SAFETY`
+//!    comment, and the per-file site counts match the committed
+//!    `[unsafe_inventory]` exactly, so growing the unsafe surface
+//!    always shows up as a reviewable manifest diff.  Not waivable.
+//! 2. **determinism** — in the archive-byte-producing modules, forbid
+//!    `mul_add`/FMA intrinsics (fused rounding breaks the bit-identity
+//!    contract), `HashMap`/`HashSet` (iteration order), and `std::simd`
+//!    (all vectorization goes through `gbatc::simd`'s fixed-lane
+//!    kernels — the lane order *is* the canonical reduction order).
+//! 3. **panic freedom** — no `unwrap`/`expect` calls or `panic!`-family
+//!    macros in request-path modules outside `#[cfg(test)]`.
+//! 4. **reactor blocking** — no filesystem handles or sleeps in the
+//!    event-loop files; cold work must be offloaded to the worker pool.
+//!
+//! Lints 2–4 accept per-line waivers (`[waivers]` in `verify.toml`,
+//! keyed `"lint:file:line"`), each requiring a non-empty justification;
+//! a waiver that matches no finding is itself a finding, so the list
+//! can only shrink or be consciously re-justified.
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+use super::manifest::Manifest;
+use super::scanner;
+use super::ScannedFile;
+
+/// Which lint produced a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Lint {
+    /// Missing SAFETY comment (inventory drift reports as `Manifest`).
+    UnsafeAudit,
+    /// FMA / map-iteration / ad-hoc SIMD in archive-byte-producing code.
+    Determinism,
+    /// `unwrap`/`expect`/`panic!` on the request path.
+    PanicFreedom,
+    /// Blocking I/O in the event-loop files.
+    Blocking,
+    /// Manifest drift: stale inventory entries or stale waivers.
+    Manifest,
+}
+
+impl Lint {
+    /// Stable name — used in waiver keys and in output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::UnsafeAudit => "unsafe_audit",
+            Lint::Determinism => "determinism",
+            Lint::PanicFreedom => "panic_freedom",
+            Lint::Blocking => "blocking",
+            Lint::Manifest => "manifest",
+        }
+    }
+}
+
+/// One verified violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub lint: Lint,
+    /// Path relative to the scanned source root (or a waiver key for
+    /// manifest findings about waivers).
+    pub file: String,
+    /// 1-based line, 0 when the finding is not line-anchored.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.lint.name(),
+            self.message
+        )
+    }
+}
+
+/// Run every lint over the scanned files and apply the manifest's
+/// waivers.  Findings come back sorted by (file, line, lint).
+pub fn run_lints(files: &[ScannedFile], m: &Manifest) -> Vec<Finding> {
+    let mut raw: Vec<Finding> = Vec::new();
+    for f in files {
+        unsafe_audit(f, &mut raw);
+        if in_scope(&f.rel, &m.determinism_modules) {
+            determinism(f, &mut raw);
+        }
+        if in_scope(&f.rel, &m.panic_modules) {
+            panic_freedom(f, &mut raw);
+        }
+        if m.blocking_files.iter().any(|b| b == &f.rel) {
+            blocking(f, &mut raw);
+        }
+    }
+    inventory(files, m, &mut raw);
+
+    // waivers suppress line-anchored findings of the waivable lints
+    let mut used: BTreeSet<String> = BTreeSet::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for fi in raw {
+        let waivable = matches!(
+            fi.lint,
+            Lint::Determinism | Lint::PanicFreedom | Lint::Blocking
+        );
+        if waivable {
+            let key = format!("{}:{}:{}", fi.lint.name(), fi.file, fi.line);
+            if let Some(reason) = m.waivers.get(&key) {
+                if !reason.trim().is_empty() {
+                    used.insert(key);
+                    continue;
+                }
+            }
+        }
+        findings.push(fi);
+    }
+    for key in m.waivers.keys() {
+        if !used.contains(key) {
+            findings.push(Finding {
+                lint: Lint::Manifest,
+                file: key.clone(),
+                line: 0,
+                message: format!(
+                    "waiver `{key}` matches no finding (or lacks a justification) — \
+                     remove it from [waivers]"
+                ),
+            });
+        }
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint).cmp(&(b.file.as_str(), b.line, b.lint))
+    });
+    findings
+}
+
+fn in_scope(rel: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p.as_str()))
+}
+
+/// Lint 1 (comment half): every `unsafe` site needs a SAFETY comment.
+fn unsafe_audit(f: &ScannedFile, out: &mut Vec<Finding>) {
+    for site in scanner::unsafe_sites(&f.model) {
+        if !site.has_safety {
+            out.push(Finding {
+                lint: Lint::UnsafeAudit,
+                file: f.rel.clone(),
+                line: site.line,
+                message: format!(
+                    "`unsafe` {} without a SAFETY comment on or directly above the site",
+                    site.kind
+                ),
+            });
+        }
+    }
+}
+
+/// Lint 1 (inventory half): per-file site counts must match the
+/// manifest exactly, in both directions.
+fn inventory(files: &[ScannedFile], m: &Manifest, out: &mut Vec<Finding>) {
+    let mut seen: BTreeSet<&str> = BTreeSet::new();
+    for f in files {
+        seen.insert(f.rel.as_str());
+        let sites = scanner::unsafe_sites(&f.model);
+        let count = sites.len();
+        match m.unsafe_inventory.get(&f.rel) {
+            None if count > 0 => out.push(Finding {
+                lint: Lint::Manifest,
+                file: f.rel.clone(),
+                line: sites[0].line,
+                message: format!(
+                    "{count} unsafe site(s) not in [unsafe_inventory] — new unsafe \
+                     requires an explicit verify.toml diff"
+                ),
+            }),
+            Some(&want) if want != count => out.push(Finding {
+                lint: Lint::Manifest,
+                file: f.rel.clone(),
+                line: sites.first().map(|s| s.line).unwrap_or(0),
+                message: format!(
+                    "[unsafe_inventory] expects {want} unsafe site(s), the file has {count}"
+                ),
+            }),
+            _ => {}
+        }
+    }
+    for rel in m.unsafe_inventory.keys() {
+        if !seen.contains(rel.as_str()) {
+            out.push(Finding {
+                lint: Lint::Manifest,
+                file: rel.clone(),
+                line: 0,
+                message: "stale [unsafe_inventory] entry: no such source file".to_string(),
+            });
+        }
+    }
+}
+
+/// Lint 2: fused rounding, unordered map iteration, and ad-hoc SIMD
+/// are forbidden where archive bytes or certified bounds are produced.
+fn determinism(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let toks = &f.model.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if f.model.in_test(t.line) {
+            continue;
+        }
+        let id = t.text.as_str();
+        let msg = if id == "mul_add" {
+            Some("`mul_add` fuses the rounding step — archive-byte-producing code must \
+                  keep separate IEEE mul/add (PR 6 lane invariant)")
+        } else if id.contains("fmadd") || id == "fma" || id == "fmaf" {
+            Some("FMA intrinsic — fused rounding breaks bit-identity across ISAs")
+        } else if id == "HashMap" || id == "HashSet" {
+            Some("hash-map iteration order is nondeterministic — use BTreeMap/BTreeSet \
+                  or index by position")
+        } else if id == "simd" && path_prefix_is(toks, i, &["std", "core"]) {
+            Some("`std::simd` lane widths are ISA-shaped — vectorize through \
+                  `gbatc::simd`'s fixed-lane kernels instead")
+        } else {
+            None
+        };
+        if let Some(msg) = msg {
+            out.push(Finding {
+                lint: Lint::Determinism,
+                file: f.rel.clone(),
+                line: t.line,
+                message: msg.to_string(),
+            });
+        }
+    }
+}
+
+/// Lint 3: the request path returns typed errors, it does not panic.
+fn panic_freedom(f: &ScannedFile, out: &mut Vec<Finding>) {
+    let toks = &f.model.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if f.model.in_test(t.line) {
+            continue;
+        }
+        let id = t.text.as_str();
+        let next = toks.get(i + 1).map(|n| n.text.as_str());
+        let msg = if (id == "unwrap" || id == "expect") && next == Some("(") {
+            Some(format!(
+                "`.{id}()` on the request path — return a typed `Error` (or add a \
+                 justified waiver)"
+            ))
+        } else if matches!(id, "panic" | "unreachable" | "todo" | "unimplemented")
+            && next == Some("!")
+        {
+            Some(format!("`{id}!` on the request path — workers must never die"))
+        } else {
+            None
+        };
+        if let Some(message) = msg {
+            out.push(Finding {
+                lint: Lint::PanicFreedom,
+                file: f.rel.clone(),
+                line: t.line,
+                message,
+            });
+        }
+    }
+}
+
+/// Lint 4: nothing on the event loop may touch the filesystem or sleep.
+fn blocking(f: &ScannedFile, out: &mut Vec<Finding>) {
+    const BANNED: [&str; 6] = [
+        "File",
+        "OpenOptions",
+        "read_to_string",
+        "read_to_end",
+        "canonicalize",
+        "sleep",
+    ];
+    let toks = &f.model.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if f.model.in_test(t.line) {
+            continue;
+        }
+        let id = t.text.as_str();
+        let hit = if BANNED.contains(&id) {
+            Some(format!("`{id}`"))
+        } else if id == "fs" && path_prefix_is(toks, i, &["std"]) {
+            Some("`std::fs`".to_string())
+        } else {
+            None
+        };
+        if let Some(what) = hit {
+            out.push(Finding {
+                lint: Lint::Blocking,
+                file: f.rel.clone(),
+                line: t.line,
+                message: format!(
+                    "{what} in an event-loop file — blocking work belongs on the \
+                     decode worker pool"
+                ),
+            });
+        }
+    }
+}
+
+/// True when `toks[i]` is preceded by `<root> :: ` with `<root>` in
+/// `roots` (used to spot `std::fs` / `std::simd` style paths).
+fn path_prefix_is(toks: &[scanner::Token], i: usize, roots: &[&str]) -> bool {
+    i >= 3
+        && toks[i - 1].text == ":"
+        && toks[i - 2].text == ":"
+        && roots.contains(&toks[i - 3].text.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::manifest;
+
+    fn file(rel: &str, src: &str) -> ScannedFile {
+        ScannedFile {
+            rel: rel.to_string(),
+            model: scanner::scan(src),
+        }
+    }
+
+    fn manifest_with(extra: &str) -> Manifest {
+        let text = format!("[paths]\nsource_root = \"src\"\n{extra}");
+        manifest::parse(&text).expect("test manifest parses")
+    }
+
+    #[test]
+    fn panic_lint_respects_test_regions_and_scope() {
+        let m = manifest_with("[panic_freedom]\nmodules = [\"serve/\"]\n");
+        let src = "\
+pub fn f(x: Option<u32>) -> u32 {
+    x.unwrap()
+}
+#[cfg(test)]
+mod tests {
+    fn g(x: Option<u32>) -> u32 {
+        x.unwrap()
+    }
+}
+";
+        let fs = vec![file("serve/a.rs", src), file("codec/b.rs", src)];
+        let got = run_lints(&fs, &m);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].lint, Lint::PanicFreedom);
+        assert_eq!((got[0].file.as_str(), got[0].line), ("serve/a.rs", 2));
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let m = manifest_with("[panic_freedom]\nmodules = [\"serve/\"]\n");
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap_or_else(|| 0)\n}\n";
+        assert!(run_lints(&[file("serve/a.rs", src)], &m).is_empty());
+    }
+
+    #[test]
+    fn determinism_lint_catches_fma_maps_and_std_simd() {
+        let m = manifest_with("[determinism]\nmodules = [\"gae/\"]\n");
+        let src = "\
+use std::simd::f32x4;
+pub fn f(a: f64, b: f64, c: f64) -> f64 {
+    a.mul_add(b, c)
+}
+pub fn g(m: &std::collections::HashMap<u32, u32>) -> usize {
+    m.len()
+}
+";
+        let got = run_lints(&[file("gae/a.rs", src)], &m);
+        assert_eq!(got.len(), 3, "{got:?}");
+        assert!(got.iter().all(|f| f.lint == Lint::Determinism));
+        // crate::simd is the sanctioned path and must not be flagged
+        let ok = "use crate::simd::dot_col;\npub fn h() {}\n";
+        assert!(run_lints(&[file("gae/b.rs", ok)], &m).is_empty());
+    }
+
+    #[test]
+    fn blocking_lint_flags_fs_and_sleep_in_listed_files_only() {
+        let m = manifest_with("[blocking]\nfiles = [\"serve/reactor.rs\"]\n");
+        let src = "\
+pub fn probe(p: &str) -> bool {
+    std::fs::metadata(p).is_ok()
+}
+pub fn nap() {
+    std::thread::sleep(std::time::Duration::from_millis(1));
+}
+";
+        let got = run_lints(&[file("serve/reactor.rs", src)], &m);
+        assert_eq!(got.len(), 2, "{got:?}");
+        assert!(got.iter().all(|f| f.lint == Lint::Blocking));
+        assert!(run_lints(&[file("serve/other.rs", src)], &m).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment_and_inventory_entry() {
+        let src = "\
+pub fn f(p: *const u8) -> u8 {
+    // SAFETY: p is valid for reads by contract.
+    unsafe { *p }
+}
+";
+        // correct inventory + comment: clean
+        let m = manifest_with("[unsafe_inventory]\n\"util/a.rs\" = 1\n");
+        assert!(run_lints(&[file("util/a.rs", src)], &m).is_empty());
+        // missing inventory entry
+        let m2 = manifest_with("");
+        let got = run_lints(&[file("util/a.rs", src)], &m2);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].lint, Lint::Manifest);
+        // count drift
+        let m3 = manifest_with("[unsafe_inventory]\n\"util/a.rs\" = 3\n");
+        let got = run_lints(&[file("util/a.rs", src)], &m3);
+        assert_eq!(got.len(), 1, "{got:?}");
+        // stale entry for a file that does not exist
+        let m4 = manifest_with("[unsafe_inventory]\n\"util/gone.rs\" = 1\n");
+        let got = run_lints(&[file("util/a.rs", "pub fn f() {}\n")], &m4);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert!(got[0].message.contains("stale"));
+    }
+
+    #[test]
+    fn waivers_suppress_and_stale_waivers_report() {
+        let src = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+        let m = manifest_with(
+            "[panic_freedom]\nmodules = [\"serve/\"]\n[waivers]\n\
+             \"panic_freedom:serve/a.rs:2\" = \"boot path, runs before accept\"\n",
+        );
+        assert!(run_lints(&[file("serve/a.rs", src)], &m).is_empty());
+        // unmatched waiver is itself a finding
+        let m2 = manifest_with(
+            "[waivers]\n\"panic_freedom:serve/a.rs:99\" = \"nothing here\"\n",
+        );
+        let got = run_lints(&[file("serve/a.rs", "pub fn f() {}\n")], &m2);
+        assert_eq!(got.len(), 1, "{got:?}");
+        assert_eq!(got[0].lint, Lint::Manifest);
+        // an empty justification does not waive
+        let m3 = manifest_with(
+            "[panic_freedom]\nmodules = [\"serve/\"]\n[waivers]\n\
+             \"panic_freedom:serve/a.rs:2\" = \"\"\n",
+        );
+        let got = run_lints(&[file("serve/a.rs", src)], &m3);
+        assert_eq!(got.len(), 2, "finding survives and the waiver reports: {got:?}");
+    }
+}

@@ -1,0 +1,264 @@
+//! Hand-parsed `verify.toml` — the checked-in invariant manifest.
+//!
+//! The format is a deliberately small TOML subset (sections, `key =
+//! value` with integer, quoted-string, and single-line string-array
+//! values, `#` comments), parsed line by line with no external crates.
+//! Unknown sections or keys are hard errors: a typo in the manifest
+//! must fail the build, not silently disable a lint.
+//!
+//! ```toml
+//! [paths]
+//! source_root = "rust/src"
+//!
+//! [unsafe_inventory]          # file → expected number of unsafe sites
+//! "archive/mmap.rs" = 5
+//!
+//! [determinism]               # archive-byte-producing module prefixes
+//! modules = ["gae/", "sz/"]
+//!
+//! [panic_freedom]             # request-path module prefixes
+//! modules = ["serve/", "store/"]
+//!
+//! [blocking]                  # event-loop files (no blocking I/O)
+//! files = ["serve/reactor.rs"]
+//!
+//! [waivers]                   # "lint:file:line" = "justification"
+//! "panic_freedom:serve/server.rs:380" = "fallback accept loop"
+//! ```
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed manifest.  Missing sections mean "empty" (no scope, no
+/// inventory) — except `[paths] source_root`, which is required.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    /// Directory of source files to scan, relative to the manifest.
+    pub source_root: String,
+    /// Relative file path → expected count of `unsafe` tokens.
+    pub unsafe_inventory: BTreeMap<String, usize>,
+    /// Module prefixes under the determinism lint.
+    pub determinism_modules: Vec<String>,
+    /// Module prefixes under the panic-freedom lint.
+    pub panic_modules: Vec<String>,
+    /// Files under the reactor-blocking lint.
+    pub blocking_files: Vec<String>,
+    /// `"lint:file:line"` → justification.
+    pub waivers: BTreeMap<String, String>,
+}
+
+/// Parse manifest text.  Errors carry the 1-based line number.
+pub fn parse(text: &str) -> Result<Manifest> {
+    let mut m = Manifest::default();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = strip_comment(raw);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            match section.as_str() {
+                "paths" | "unsafe_inventory" | "determinism" | "panic_freedom" | "blocking"
+                | "waivers" => {}
+                other => {
+                    return Err(Error::config(format!(
+                        "verify.toml:{ln}: unknown section [{other}]"
+                    )))
+                }
+            }
+            continue;
+        }
+        let (key, value) = split_assignment(line)
+            .ok_or_else(|| Error::config(format!("verify.toml:{ln}: expected `key = value`")))?;
+        let key = unquote(key.trim()).to_string();
+        let value = value.trim();
+        match (section.as_str(), key.as_str()) {
+            ("paths", "source_root") => m.source_root = parse_string(value, ln)?,
+            ("unsafe_inventory", _) => {
+                let n: usize = value.parse().map_err(|_| {
+                    Error::config(format!(
+                        "verify.toml:{ln}: [unsafe_inventory] values are integers, got `{value}`"
+                    ))
+                })?;
+                if m.unsafe_inventory.insert(key.clone(), n).is_some() {
+                    return Err(Error::config(format!(
+                        "verify.toml:{ln}: duplicate inventory entry `{key}`"
+                    )));
+                }
+            }
+            ("determinism", "modules") => m.determinism_modules = parse_string_array(value, ln)?,
+            ("panic_freedom", "modules") => m.panic_modules = parse_string_array(value, ln)?,
+            ("blocking", "files") => m.blocking_files = parse_string_array(value, ln)?,
+            ("waivers", _) => {
+                let reason = parse_string(value, ln)?;
+                if m.waivers.insert(key.clone(), reason).is_some() {
+                    return Err(Error::config(format!(
+                        "verify.toml:{ln}: duplicate waiver `{key}`"
+                    )));
+                }
+            }
+            (s, k) => {
+                return Err(Error::config(format!(
+                    "verify.toml:{ln}: unknown key `{k}` in section [{s}]"
+                )))
+            }
+        }
+    }
+    if m.source_root.is_empty() {
+        return Err(Error::config(
+            "verify.toml: missing [paths] source_root".to_string(),
+        ));
+    }
+    Ok(m)
+}
+
+/// Drop a trailing `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+/// Split on the first `=` outside quotes.
+fn split_assignment(line: &str) -> Option<(&str, &str)> {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0usize;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_str => i += 1,
+            b'"' => in_str = !in_str,
+            b'=' if !in_str => return Some((&line[..i], &line[i + 1..])),
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+fn unquote(s: &str) -> &str {
+    s.strip_prefix('"')
+        .and_then(|t| t.strip_suffix('"'))
+        .unwrap_or(s)
+}
+
+fn parse_string(value: &str, ln: usize) -> Result<String> {
+    let v = value.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        Err(Error::config(format!(
+            "verify.toml:{ln}: expected a quoted string, got `{v}`"
+        )))
+    }
+}
+
+fn parse_string_array(value: &str, ln: usize) -> Result<Vec<String>> {
+    let v = value.trim();
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| {
+            Error::config(format!(
+                "verify.toml:{ln}: expected a single-line [\"a\", \"b\"] array, got `{v}`"
+            ))
+        })?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        out.push(parse_string(part, ln)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_sections() {
+        let text = r#"
+# header comment
+[paths]
+source_root = "rust/src"
+
+[unsafe_inventory]
+"archive/mmap.rs" = 5   # trailing comment
+"simd/mod.rs" = 22
+
+[determinism]
+modules = ["gae/", "codec/"]
+
+[panic_freedom]
+modules = ["serve/"]
+
+[blocking]
+files = ["serve/reactor.rs"]
+
+[waivers]
+"blocking:serve/server.rs:380" = "fallback accept loop, not the reactor"
+"#;
+        let m = parse(text).expect("parses");
+        assert_eq!(m.source_root, "rust/src");
+        assert_eq!(m.unsafe_inventory.get("archive/mmap.rs"), Some(&5));
+        assert_eq!(m.unsafe_inventory.get("simd/mod.rs"), Some(&22));
+        assert_eq!(m.determinism_modules, vec!["gae/", "codec/"]);
+        assert_eq!(m.panic_modules, vec!["serve/"]);
+        assert_eq!(m.blocking_files, vec!["serve/reactor.rs"]);
+        assert_eq!(
+            m.waivers.get("blocking:serve/server.rs:380").map(String::as_str),
+            Some("fallback accept loop, not the reactor")
+        );
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_are_errors() {
+        assert!(parse("[paths]\nsource_root = \"s\"\n[mystery]\n").is_err());
+        assert!(parse("[paths]\nsource_root = \"s\"\nextra = \"x\"\n").is_err());
+        assert!(parse("[determinism]\nbogus = [\"a\"]\n").is_err());
+    }
+
+    #[test]
+    fn missing_source_root_is_an_error() {
+        assert!(parse("[determinism]\nmodules = []\n").is_err());
+    }
+
+    #[test]
+    fn bad_values_are_errors_with_line_numbers() {
+        let e = parse("[paths]\nsource_root = \"s\"\n[unsafe_inventory]\n\"a.rs\" = lots\n")
+            .expect_err("non-integer count");
+        assert!(format!("{e}").contains(":4:"), "{e}");
+        assert!(parse("[paths]\nsource_root = unquoted\n").is_err());
+        assert!(parse("[paths]\nsource_root\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_entries_are_errors() {
+        let text = "[paths]\nsource_root = \"s\"\n[unsafe_inventory]\n\"a.rs\" = 1\n\"a.rs\" = 2\n";
+        assert!(parse(text).is_err());
+    }
+
+    #[test]
+    fn hash_inside_quoted_value_is_not_a_comment() {
+        let text = "[paths]\nsource_root = \"s\"\n[waivers]\n\"k:a.rs:1\" = \"issue #42\"\n";
+        let m = parse(text).expect("parses");
+        assert_eq!(m.waivers.get("k:a.rs:1").map(String::as_str), Some("issue #42"));
+    }
+}

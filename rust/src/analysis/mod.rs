@@ -1,0 +1,127 @@
+//! Static analysis: the in-repo invariant linter behind `gbatc-verify`.
+//!
+//! The crate's guarantees lean on properties the compiler cannot see:
+//! archive bytes must be bit-identical across thread counts and ISAs
+//! (so no fused rounding or hash-ordered iteration where bytes are
+//! produced), the serving request path must return typed errors rather
+//! than panic, the epoll reactor thread must never block, and every
+//! `unsafe` site must carry a reviewed `SAFETY` rationale.  This module
+//! enforces those properties mechanically from a checked-in manifest
+//! (`verify.toml`), in the same no-external-crates style as the HTTP,
+//! epoll, and mmap stacks:
+//!
+//! * [`scanner`] — a minimal token/brace-aware Rust scanner: strips
+//!   comments and string literals, tracks `#[cfg(test)]` regions with a
+//!   three-valued cfg evaluator, and locates `unsafe` sites and their
+//!   SAFETY comments.
+//! * [`manifest`] — the hand-parsed `verify.toml` subset: unsafe
+//!   inventory, lint scopes, and the per-line waiver list.
+//! * [`lints`] — the four invariant lints plus manifest consistency
+//!   checks (inventory drift, stale waivers).
+//!
+//! The `gbatc-verify` binary (CI's `verify` job) drives
+//! [`verify_root`] and exits nonzero on any finding.
+
+pub mod lints;
+pub mod manifest;
+pub mod scanner;
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+pub use lints::{Finding, Lint};
+pub use manifest::Manifest;
+
+/// One scanned source file: its path relative to the source root
+/// (separators normalized to `/`) and its token/region model.
+pub struct ScannedFile {
+    pub rel: String,
+    pub model: scanner::SourceModel,
+}
+
+/// The result of a full verification run.
+pub struct Report {
+    /// Violations after waivers, sorted by (file, line, lint).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Total `unsafe` sites seen across the tree.
+    pub unsafe_sites: usize,
+}
+
+/// Scan every `.rs` file under `src_root`, sorted by relative path.
+pub fn scan_tree(src_root: &Path) -> Result<Vec<ScannedFile>> {
+    let mut rel_paths: Vec<String> = Vec::new();
+    collect_rs(src_root, src_root, &mut rel_paths)?;
+    rel_paths.sort();
+    let mut files = Vec::with_capacity(rel_paths.len());
+    for rel in rel_paths {
+        let abs = src_root.join(&rel);
+        let src = std::fs::read_to_string(&abs)
+            .map_err(|e| Error::io_ctx(format!("read {}", abs.display()), e))?;
+        files.push(ScannedFile {
+            rel,
+            model: scanner::scan(&src),
+        });
+    }
+    Ok(files)
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| Error::io_ctx(format!("read_dir {}", dir.display()), e))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| Error::io_ctx("read_dir entry", e))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            if let Ok(rel) = path.strip_prefix(root) {
+                let mut s = String::new();
+                for comp in rel.components() {
+                    if !s.is_empty() {
+                        s.push('/');
+                    }
+                    s.push_str(&comp.as_os_str().to_string_lossy());
+                }
+                out.push(s);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Verify the tree rooted at `root` (the directory holding
+/// `verify.toml`; the manifest's `source_root` is resolved against it).
+pub fn verify_root(root: &Path) -> Result<Report> {
+    let manifest_path = root.join("verify.toml");
+    let text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| Error::io_ctx(format!("read {}", manifest_path.display()), e))?;
+    let m = manifest::parse(&text)?;
+    let src_root = root.join(&m.source_root);
+    let files = scan_tree(&src_root)?;
+    let unsafe_sites = files
+        .iter()
+        .map(|f| scanner::unsafe_sites(&f.model).len())
+        .sum();
+    let findings = lints::run_lints(&files, &m);
+    Ok(Report {
+        findings,
+        files_scanned: files.len(),
+        unsafe_sites,
+    })
+}
+
+/// Walk upward from `start` looking for a directory containing
+/// `verify.toml` (so the binary works from any subdirectory).
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start);
+    while let Some(dir) = cur {
+        if dir.join("verify.toml").is_file() {
+            return Some(dir.to_path_buf());
+        }
+        cur = dir.parent();
+    }
+    None
+}

@@ -1,0 +1,667 @@
+//! Minimal token/brace-aware Rust source scanner.
+//!
+//! This is deliberately **not** a Rust parser: `gbatc-verify` needs just
+//! enough lexical structure to enforce the project invariants — exact
+//! identifier tokens with line numbers (comments, string/char literals,
+//! and lifetimes stripped), per-line comment text (for `SAFETY:`
+//! proximity checks), and the line ranges gated behind `#[cfg(test)]`
+//! (brace-matched over the token stream).  The same no-external-crates
+//! ethos as the HTTP/epoll/mmap stacks: ~300 lines of `std`-only code
+//! the repo fully owns, instead of a syn/proc-macro dependency the
+//! offline image cannot build.
+
+use std::collections::BTreeMap;
+
+/// One lexed token: an identifier/keyword, a number, or a single
+/// punctuation character.  String and char literal *contents* never
+/// become tokens.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Token {
+    /// The token text (one punctuation char, or a full identifier).
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+}
+
+/// Lexical model of one source file, produced by [`scan`].
+pub struct SourceModel {
+    /// Identifier/punctuation tokens in source order.
+    pub tokens: Vec<Token>,
+    /// 1-based line number → concatenated comment text on that line
+    /// (line comments, and every line a block comment spans).
+    pub comment_lines: BTreeMap<usize, String>,
+    /// Raw source lines (index with `line - 1`).
+    pub lines: Vec<String>,
+    /// Inclusive 1-based line ranges compiled only under `cfg(test)`
+    /// (or marked `#[test]`).  Ranges may nest/overlap.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl SourceModel {
+    /// True when `line` falls inside a test-gated region.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_regions
+            .iter()
+            .any(|&(a, b)| a <= line && line <= b)
+    }
+}
+
+/// One `unsafe` keyword occurrence.
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    /// 1-based line of the `unsafe` token.
+    pub line: usize,
+    /// `"fn"`, `"impl"`, or `"block"`.
+    pub kind: &'static str,
+    /// A comment containing `SAFETY` sits on or adjacent to the site
+    /// (see [`has_safety_comment`] for the exact proximity rule).
+    pub has_safety: bool,
+}
+
+/// Lex `src` into a [`SourceModel`].
+pub fn scan(src: &str) -> SourceModel {
+    let lines: Vec<String> = src.lines().map(str::to_string).collect();
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comment_lines: BTreeMap<usize, String> = BTreeMap::new();
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+
+    let note = |map: &mut BTreeMap<usize, String>, line: usize, text: &str| {
+        let slot = map.entry(line).or_default();
+        slot.push_str(text);
+        slot.push(' ');
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (also covers /// and //! doc comments)
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            note(&mut comment_lines, line, &src[start..i]);
+            continue;
+        }
+        // block comment, nested, recorded on every line it spans
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            let mut seg = i;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    note(&mut comment_lines, line, &src[seg..i]);
+                    line += 1;
+                    seg = i + 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            note(&mut comment_lines, line, &src[seg..i.min(n)]);
+            continue;
+        }
+        // string-ish literals: "..", b"..", r".."/r#".."#, br#".."#
+        if c == b'"' {
+            i = skip_string(b, i, &mut line);
+            continue;
+        }
+        if (c == b'r' || c == b'b' || c == b'c') && is_string_start(b, i) {
+            i = skip_prefixed_string(b, i, &mut line);
+            continue;
+        }
+        // char literal vs lifetime
+        if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                i += 2; // skip the backslash + escaped char
+                while i < n && b[i] != b'\'' {
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == b'\'' {
+                i += 3; // plain 'x'
+                continue;
+            }
+            // lifetime: consume the quote, the ident lexes next round
+            i += 1;
+            continue;
+        }
+        // identifier / keyword
+        if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            tokens.push(Token {
+                text: src[start..i].to_string(),
+                line,
+            });
+            continue;
+        }
+        // number: consume so `1e3`/`0xFF` don't shed ident fragments;
+        // `0..9` must stay `0` `.` `.` `9`, so a dot is only eaten when
+        // a digit follows it
+        if c.is_ascii_digit() {
+            while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            if i + 1 < n && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // single punctuation character
+        tokens.push(Token {
+            text: (c as char).to_string(),
+            line,
+        });
+        i += 1;
+    }
+
+    let test_regions = find_test_regions(&tokens);
+    SourceModel {
+        tokens,
+        comment_lines,
+        lines,
+        test_regions,
+    }
+}
+
+/// Does `b[i]` start a raw/byte/c string (`r"`, `r#"`, `b"`, `br#"`, …)?
+fn is_string_start(b: &[u8], i: usize) -> bool {
+    let mut j = i;
+    // up to two prefix letters (b + r, c + r)
+    for _ in 0..2 {
+        if j < b.len() && (b[j] == b'r' || b[j] == b'b' || b[j] == b'c') {
+            j += 1;
+        }
+    }
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"' && j > i
+}
+
+/// Skip a plain `"..."` string starting at `b[i] == '"'`; returns the
+/// index just past the closing quote and advances `line` for embedded
+/// newlines.
+fn skip_string(b: &[u8], mut i: usize, line: &mut usize) -> usize {
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => {
+                // a `\` line-continuation escapes the newline itself —
+                // the skipped newline still counts toward line numbers
+                if i + 1 < b.len() && b[i + 1] == b'\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'"' => return i + 1,
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Skip a prefixed string (`b".."`, `r".."`, `r#".."#`, `br#".."#`, a
+/// byte char `b'x'`) starting at the prefix letter.
+fn skip_prefixed_string(b: &[u8], mut i: usize, line: &mut usize) -> usize {
+    let mut raw = false;
+    while i < b.len() && (b[i] == b'r' || b[i] == b'b' || b[i] == b'c') {
+        raw |= b[i] == b'r';
+        i += 1;
+    }
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i >= b.len() || b[i] != b'"' {
+        return i; // not actually a string (e.g. `b'x'` handled elsewhere)
+    }
+    i += 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' if !raw => {
+                // count an escaped (line-continuation) newline
+                if i + 1 < b.len() && b[i + 1] == b'\n' {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            b'\n' => {
+                *line += 1;
+                i += 1;
+            }
+            b'"' => {
+                let mut j = i + 1;
+                let mut h = 0usize;
+                while j < b.len() && b[j] == b'#' && h < hashes {
+                    h += 1;
+                    j += 1;
+                }
+                if h == hashes {
+                    return j;
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Three-valued truth for `cfg` predicate evaluation under `test = false`.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Tri {
+    False,
+    Unknown,
+    True,
+}
+
+/// Evaluate a `cfg(...)` predicate token list with `test` bound to
+/// false and every other flag unknown.  A region is test-only exactly
+/// when the predicate is then *definitely* false.
+fn cfg_pred(toks: &[&str], pos: &mut usize) -> Tri {
+    // skip a leading '('
+    if toks.get(*pos) == Some(&"(") {
+        *pos += 1;
+        let v = cfg_pred(toks, pos);
+        if toks.get(*pos) == Some(&")") {
+            *pos += 1;
+        }
+        return v;
+    }
+    let head = match toks.get(*pos) {
+        Some(t) => *t,
+        None => return Tri::Unknown,
+    };
+    *pos += 1;
+    match head {
+        "test" => Tri::False,
+        "all" | "any" | "not" => {
+            let mut vals: Vec<Tri> = Vec::new();
+            if toks.get(*pos) == Some(&"(") {
+                *pos += 1;
+                loop {
+                    match toks.get(*pos) {
+                        None | Some(&")") => {
+                            *pos += 1;
+                            break;
+                        }
+                        Some(&",") => *pos += 1,
+                        _ => vals.push(cfg_pred(toks, pos)),
+                    }
+                }
+            }
+            match head {
+                "all" => {
+                    if vals.contains(&Tri::False) {
+                        Tri::False
+                    } else if vals.contains(&Tri::Unknown) {
+                        Tri::Unknown
+                    } else {
+                        Tri::True
+                    }
+                }
+                "any" => {
+                    if vals.contains(&Tri::True) {
+                        Tri::True
+                    } else if vals.contains(&Tri::Unknown) {
+                        Tri::Unknown
+                    } else {
+                        Tri::False
+                    }
+                }
+                _ => match vals.first() {
+                    Some(Tri::False) => Tri::True,
+                    Some(Tri::True) => Tri::False,
+                    _ => Tri::Unknown,
+                },
+            }
+        }
+        _ => {
+            // `ident`, `ident = "literal"` (the literal was stripped by
+            // the lexer), or `ident(...)`: value unknown — consume an
+            // optional `=`, or a parenthesized argument list
+            if toks.get(*pos) == Some(&"=") {
+                *pos += 1;
+            } else if toks.get(*pos) == Some(&"(") {
+                let mut depth = 0usize;
+                while let Some(t) = toks.get(*pos) {
+                    match *t {
+                        "(" => depth += 1,
+                        ")" => {
+                            depth -= 1;
+                            *pos += 1;
+                            if depth == 0 {
+                                break;
+                            }
+                            continue;
+                        }
+                        _ => {}
+                    }
+                    *pos += 1;
+                }
+            }
+            Tri::Unknown
+        }
+    }
+}
+
+/// Is this attribute token list (the tokens between `#[` and `]`) a
+/// test gate — `#[test]`, or `#[cfg(...)]` whose predicate is false
+/// without `cfg(test)`?
+fn is_test_attr(attr: &[&str]) -> bool {
+    match attr.first() {
+        Some(&"test") if attr.len() == 1 => true,
+        Some(&"cfg") => {
+            let mut pos = 1;
+            cfg_pred(attr, &mut pos) == Tri::False
+        }
+        _ => false,
+    }
+}
+
+/// Brace-match the item following each test-gating attribute into an
+/// inclusive line range.
+fn find_test_regions(tokens: &[Token]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let len = tokens.len();
+    let mut i = 0usize;
+    while i < len {
+        if tokens[i].text != "#" || i + 1 >= len || tokens[i + 1].text != "[" {
+            i += 1;
+            continue;
+        }
+        let attr_line = tokens[i].line;
+        // collect the attribute's tokens up to the matching ]
+        let mut j = i + 2;
+        let mut depth = 1usize;
+        let mut attr: Vec<&str> = Vec::new();
+        while j < len && depth > 0 {
+            match tokens[j].text.as_str() {
+                "[" => depth += 1,
+                "]" => depth -= 1,
+                t => attr.push(t),
+            }
+            j += 1;
+        }
+        if !is_test_attr(&attr) {
+            i = j;
+            continue;
+        }
+        // skip any further attributes stacked on the same item
+        let mut k = j;
+        while k + 1 < len && tokens[k].text == "#" && tokens[k + 1].text == "[" {
+            let mut d = 1usize;
+            k += 2;
+            while k < len && d > 0 {
+                match tokens[k].text.as_str() {
+                    "[" => d += 1,
+                    "]" => d -= 1,
+                    _ => {}
+                }
+                k += 1;
+            }
+        }
+        // region ends at the item's `;` (brace-less item) or at the
+        // close of its first brace-matched block
+        let mut end_line = tokens[j.min(len - 1)].line;
+        while k < len {
+            match tokens[k].text.as_str() {
+                ";" => {
+                    end_line = tokens[k].line;
+                    break;
+                }
+                "{" => {
+                    let mut d = 1usize;
+                    let mut m = k + 1;
+                    while m < len && d > 0 {
+                        match tokens[m].text.as_str() {
+                            "{" => d += 1,
+                            "}" => d -= 1,
+                            _ => {}
+                        }
+                        m += 1;
+                    }
+                    end_line = tokens[m.saturating_sub(1)].line;
+                    break;
+                }
+                _ => k += 1,
+            }
+        }
+        regions.push((attr_line, end_line));
+        i = j;
+    }
+    regions
+}
+
+/// All `unsafe` keyword occurrences with their SAFETY-comment status.
+pub fn unsafe_sites(model: &SourceModel) -> Vec<UnsafeSite> {
+    let mut out = Vec::new();
+    for (idx, tok) in model.tokens.iter().enumerate() {
+        if tok.text != "unsafe" {
+            continue;
+        }
+        let kind = match model.tokens.get(idx + 1).map(|t| t.text.as_str()) {
+            Some("fn") => "fn",
+            Some("impl") => "impl",
+            _ => "block",
+        };
+        out.push(UnsafeSite {
+            line: tok.line,
+            kind,
+            has_safety: has_safety_comment(model, tok.line),
+        });
+    }
+    out
+}
+
+/// The SAFETY proximity rule: a comment containing `SAFETY` on the
+/// site's own line, on the first line inside the block, or in the
+/// comment/attribute run directly above (at most two interleaved code
+/// lines tolerated, so multi-line statements and `unsafe impl` pairs
+/// sharing one argument still associate).
+pub fn has_safety_comment(model: &SourceModel, line: usize) -> bool {
+    let has = |l: usize| {
+        model
+            .comment_lines
+            .get(&l)
+            .is_some_and(|t| t.contains("SAFETY"))
+    };
+    if has(line) || has(line + 1) {
+        return true;
+    }
+    let mut code_skips = 0usize;
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        if has(l) {
+            return true;
+        }
+        let raw = model.lines.get(l - 1).map(String::as_str).unwrap_or("");
+        let t = raw.trim();
+        let skippable = t.is_empty()
+            || t.starts_with("#[")
+            || t.starts_with("#![")
+            || model.comment_lines.contains_key(&l);
+        if !skippable {
+            code_skips += 1;
+            if code_skips > 2 {
+                return false;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        scan(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.text.chars().next().is_some_and(|c| c.is_alphabetic() || c == '_'))
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_comments_and_lifetimes_do_not_tokenize() {
+        let src = r##"
+// unwrap in a comment
+/* block unsafe comment /* nested */ still */
+fn f<'a>(x: &'a str) -> String {
+    let s = "unsafe unwrap() mul_add";
+    let r = r#"HashMap "quoted" inside"#;
+    let c = 'u';
+    let esc = '\'';
+    let b = b"unwrap";
+    format!("{s}{r}{c}{esc}{}", b.len())
+}
+"##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"unsafe".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        assert!(!ids.contains(&"mul_add".to_string()));
+        assert!(ids.contains(&"format".to_string()));
+        assert!(ids.contains(&"len".to_string()));
+        // the lifetime's ident is lexed but 'u' the char is not
+        assert!(ids.iter().any(|s| s == "a"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings_and_comments() {
+        let src = "let a = \"x\ny\nz\";\n/* c\nc2 */\nlet marker = 1;\n";
+        let m = scan(src);
+        let tok = m
+            .tokens
+            .iter()
+            .find(|t| t.text == "marker")
+            .expect("marker token");
+        assert_eq!(tok.line, 6);
+        assert!(m.comment_lines.contains_key(&4) && m.comment_lines.contains_key(&5));
+    }
+
+    #[test]
+    fn backslash_line_continuation_in_strings_counts_its_newline() {
+        let src = "let a = \"first \\\n    second\";\nlet marker = 1;\n";
+        let m = scan(src);
+        let tok = m
+            .tokens
+            .iter()
+            .find(|t| t.text == "marker")
+            .expect("marker token");
+        assert_eq!(tok.line, 3);
+    }
+
+    #[test]
+    fn test_regions_cover_cfg_test_mods_and_attr_combos() {
+        let src = "\
+fn live() {}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+}
+#[cfg(all(test, unix, not(miri)))]
+mod more {
+    fn t() {}
+}
+#[cfg(not(test))]
+fn also_live() {}
+#[cfg(test)]
+use std::fmt;
+#[test]
+fn standalone() {}
+";
+        let m = scan(src);
+        assert!(!m.in_test(1), "free fn is live");
+        assert!(m.in_test(3) && m.in_test(4) && m.in_test(5), "cfg(test) mod");
+        assert!(m.in_test(7) && m.in_test(9), "cfg(all(test, ...)) mod");
+        assert!(!m.in_test(11), "cfg(not(test)) is live code");
+        assert!(m.in_test(13), "cfg(test) use item");
+        assert!(m.in_test(15), "#[test] fn");
+    }
+
+    #[test]
+    fn cfg_miri_alone_is_not_a_test_region() {
+        let m = scan("#[cfg(miri)]\nfn miri_only() {}\n");
+        assert!(!m.in_test(2));
+    }
+
+    #[test]
+    fn unsafe_sites_classify_and_find_safety_comments() {
+        let src = "\
+// SAFETY: above the impl.
+unsafe impl Send for X {}
+unsafe impl Sync for X {}
+fn f(p: *const u8) -> u8 {
+    // SAFETY: p is valid.
+    unsafe { *p }
+}
+fn g(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+";
+        let m = scan(src);
+        let sites = unsafe_sites(&m);
+        assert_eq!(sites.len(), 4);
+        assert_eq!(sites[0].kind, "impl");
+        assert!(sites[0].has_safety);
+        // the Sync impl rides the Send impl's comment (≤2 code lines)
+        assert!(sites[1].has_safety);
+        assert_eq!(sites[2].kind, "block");
+        assert!(sites[2].has_safety);
+        assert!(!sites[3].has_safety, "bare block must fail the audit");
+    }
+
+    #[test]
+    fn safety_comment_through_attributes_and_multiline_statements() {
+        let src = "\
+/// SAFETY: doc-comment form, attribute in between.
+#[allow(clippy::mut_from_ref)]
+pub unsafe fn slice() {}
+fn h() {
+    // SAFETY: multi-line let binding.
+    let _x =
+        unsafe { core::ptr::null::<u8>() };
+}
+";
+        let m = scan(src);
+        let sites = unsafe_sites(&m);
+        assert_eq!(sites.len(), 2);
+        assert!(sites[0].has_safety && sites[0].kind == "fn");
+        assert!(sites[1].has_safety && sites[1].kind == "block");
+    }
+}

@@ -75,6 +75,11 @@ impl MmapSource {
     pub fn open<P: AsRef<Path>>(path: P) -> Result<MmapSource> {
         use std::os::unix::io::AsRawFd;
 
+        // Miri has no mmap(2); erroring here routes archive opens onto
+        // the FileSource fallback path, same as any mmap failure.
+        if cfg!(miri) {
+            return Err(Error::runtime("mmap: unsupported under miri"));
+        }
         let file = std::fs::File::open(path.as_ref())?;
         let len = file.metadata()?.len();
         if len > usize::MAX as u64 {
@@ -158,7 +163,7 @@ impl SectionSource for MmapSource {
     }
 }
 
-#[cfg(all(test, unix))]
+#[cfg(all(test, unix, not(miri)))]
 mod tests {
     use super::*;
 

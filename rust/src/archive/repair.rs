@@ -343,8 +343,8 @@ fn scan_uncommitted_tail(bytes: &[u8], from: u64) -> u64 {
     let mut p = 0usize;
     while p + TRAILER_LEN <= tail.len() {
         if &tail[p..p + 4] == TRAILER_MAGIC {
-            let len = u64::from_le_bytes(tail[p + 4..p + 12].try_into().unwrap());
-            let crc = u32::from_le_bytes(tail[p + 12..p + 16].try_into().unwrap());
+            let len = le_u64_at(tail, p + 4);
+            let crc = le_u32_at(tail, p + 12);
             if len == p as u64 && p > 0 && crc == crc32(&tail[..p]) {
                 return len;
             }
@@ -352,6 +352,25 @@ fn scan_uncommitted_tail(bytes: &[u8], from: u64) -> u64 {
         p += 1;
     }
     0
+}
+
+/// Panic-free little-endian reads for the trailer scan (the caller's
+/// loop bound guarantees `at + 8 <= b.len()`; a short read yields 0
+/// rather than a panicking `try_into().unwrap()` on the decode path).
+fn le_u64_at(b: &[u8], at: usize) -> u64 {
+    let mut buf = [0u8; 8];
+    if let Some(src) = b.get(at..at + 8) {
+        buf.copy_from_slice(src);
+    }
+    u64::from_le_bytes(buf)
+}
+
+fn le_u32_at(b: &[u8], at: usize) -> u32 {
+    let mut buf = [0u8; 4];
+    if let Some(src) = b.get(at..at + 4) {
+        buf.copy_from_slice(src);
+    }
+    u32::from_le_bytes(buf)
 }
 
 /// Salvage the valid shard prefix of a damaged file into a well-formed

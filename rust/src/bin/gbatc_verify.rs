@@ -1,0 +1,92 @@
+//! `gbatc-verify` — the in-repo invariant linter (CI's `verify` job).
+//!
+//! Walks the source tree named by `verify.toml` and enforces the
+//! project invariants the compiler cannot: the unsafe audit (SAFETY
+//! comments + committed inventory), the determinism lints over the
+//! archive-byte-producing modules, panic-freedom on the request path,
+//! and no blocking I/O in the reactor files.  Exits 0 when clean, 1 on
+//! findings, 2 on configuration or I/O errors.
+//!
+//! ```text
+//! gbatc-verify [--root PATH] [--quiet]
+//! ```
+//!
+//! Without `--root`, the manifest is located by walking upward from the
+//! current directory, so the binary works from any repo subdirectory.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use gbatc::analysis;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("gbatc-verify: --root requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quiet" | "-q" => quiet = true,
+            "--help" | "-h" => {
+                println!("usage: gbatc-verify [--root PATH] [--quiet]");
+                println!();
+                println!("Lints the source tree against the invariants in verify.toml:");
+                println!("unsafe audit, determinism, panic freedom, reactor blocking.");
+                println!("Exits 0 when clean, 1 on findings, 2 on config/IO errors.");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("gbatc-verify: unknown argument `{other}` (try --help)");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            match analysis::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!(
+                        "gbatc-verify: no verify.toml found from {} upward (use --root)",
+                        cwd.display()
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+
+    let report = match analysis::verify_root(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("gbatc-verify: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    for finding in &report.findings {
+        println!("{finding}");
+    }
+    if !quiet {
+        eprintln!(
+            "gbatc-verify: {} file(s), {} unsafe site(s), {} finding(s)",
+            report.files_scanned,
+            report.unsafe_sites,
+            report.findings.len()
+        );
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -264,6 +264,9 @@ impl Compressor for GbatcCompressor<'_> {
 
 /// Wrapper asserting that concurrent accesses touch disjoint species slices.
 pub(crate) struct SpeciesDisjoint<'a>(std::cell::UnsafeCell<&'a mut [f32]>);
+// SAFETY: sharing is sound because every user writes only the index set
+// of "its" species and the `[T,S,Y,X]` layout makes those sets disjoint
+// — see the contract on `slice()`.
 unsafe impl<'a> Sync for SpeciesDisjoint<'a> {}
 
 impl<'a> SpeciesDisjoint<'a> {
@@ -275,7 +278,10 @@ impl<'a> SpeciesDisjoint<'a> {
     /// (the `[T,S,Y,X]` layout makes per-species index sets disjoint).
     #[allow(clippy::mut_from_ref)]
     pub(crate) unsafe fn slice(&self) -> &mut [f32] {
-        &mut *self.0.get()
+        // SAFETY: the pointer is derived from a live `&mut [f32]` held
+        // by the cell; disjointness of concurrent users is the caller's
+        // obligation, stated above.
+        unsafe { &mut *self.0.get() }
     }
 }
 
@@ -299,6 +305,8 @@ pub fn normalize_window(
     par_for(ns, threads, |s| {
         let (lo, hi) = ranges[s];
         let inv = 1.0 / (hi - lo).max(1e-30);
+        // SAFETY: this task writes only species `s`'s indices; par_for
+        // runs one task per species, so the write sets are disjoint.
         let out: &mut [f32] = unsafe { cell.slice() };
         for t in 0..nt {
             let off = (t * ns + s) * npix;
@@ -328,6 +336,8 @@ pub fn denormalize_in_place(
     par_for(ns, threads, |s| {
         let (lo, hi) = ranges[s];
         let range = (hi - lo).max(1e-30);
+        // SAFETY: this task writes only species `s`'s indices; par_for
+        // runs one task per species, so the write sets are disjoint.
         let out: &mut [f32] = unsafe { cell.slice() };
         for t in 0..nt {
             let off = (t * ns + s) * npix;
@@ -352,6 +362,26 @@ mod tests {
         denormalize_in_place(&mut norm, &ranges, ds.nt, ds.ns, ds.ny * ds.nx, 4);
         for (a, b) in norm.iter().zip(&ds.mass) {
             assert!((a - b).abs() <= 1e-6 * b.abs().max(1e-12) + 1e-9);
+        }
+    }
+
+    /// The `SpeciesDisjoint` contract under real parallelism, sized for
+    /// Miri: per-species writers must never alias, and the result must
+    /// not depend on the thread count.
+    #[test]
+    fn species_disjoint_parallel_writes_are_exact_at_any_thread_count() {
+        let (nt, ns, npix) = (2usize, 3usize, 4usize);
+        let mass: Vec<f32> = (0..nt * ns * npix).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let ranges: Vec<(f32, f32)> = (0..ns).map(|s| (-1.0 - s as f32, 5.0 + s as f32)).collect();
+        let want = normalize_window(&mass, &ranges, nt, ns, npix, 1);
+        for threads in 2..=3 {
+            let got = normalize_window(&mass, &ranges, nt, ns, npix, threads);
+            assert_eq!(got, want, "threads {threads}");
+            let mut back = got;
+            denormalize_in_place(&mut back, &ranges, nt, ns, npix, threads);
+            for (a, b) in back.iter().zip(&mass) {
+                assert!((a - b).abs() <= 1e-5, "threads {threads}: {a} vs {b}");
+            }
         }
     }
 

@@ -127,6 +127,18 @@
 //!   with a sequential combine keep every reduction bit-identical at any
 //!   lane width, so archive bytes and certified bounds never depend on
 //!   the ISA.
+//! * **Static analysis** ([`analysis`]) — the in-repo invariant linter
+//!   behind the `gbatc-verify` binary (CI's `verify` job): a minimal
+//!   token/brace-aware scanner plus a hand-parsed `verify.toml`
+//!   manifest enforce the unsafe audit (every `unsafe` site carries a
+//!   `SAFETY` comment and appears in the committed inventory),
+//!   determinism lints over the archive-byte-producing modules (no
+//!   FMA, no hash-ordered iteration, no ad-hoc SIMD), panic freedom on
+//!   the serving request path, and no blocking I/O in the reactor
+//!   files.  Dynamic verification rides alongside: Miri runs the
+//!   unsafe-adjacent unit tests (mmap falls back to `FileSource`, SIMD
+//!   dispatch to the scalar oracle under Miri), and scheduled
+//!   ASan/TSan legs cover the concurrency-heavy suites.
 //! * **Compressor trait / CLI** — [`compressor::Compressor`] unifies
 //!   GBA/GBATC/SZ as a thin adapter over [`api`] (`compress_bytes` stays
 //!   as the one-call convenience); the `gbatc` binary routes `compress`
@@ -139,7 +151,9 @@
 //! default (reference) backend it needs no artifacts at all.
 
 #![allow(clippy::needless_range_loop)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod analysis;
 pub mod api;
 pub mod archive;
 pub mod chem;

@@ -68,6 +68,8 @@ pub struct ModelRuntime {
 fn literal_f32(data: &[f32], dims: &[usize]) -> xla::Literal {
     let n: usize = dims.iter().product();
     debug_assert_eq!(data.len(), n);
+    // SAFETY: reinterpreting a live `&[f32]` as its own bytes — same
+    // allocation, `len * 4` bytes, and u8 has no alignment requirement.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)

@@ -63,7 +63,9 @@ impl Isa {
 pub fn active() -> Isa {
     static ACTIVE: OnceLock<Isa> = OnceLock::new();
     *ACTIVE.get_or_init(|| {
-        if simd_disabled_by_env() {
+        // Miri interprets no vendor intrinsics; the scalar oracle is the
+        // whole point of running these kernels under it.
+        if cfg!(miri) || simd_disabled_by_env() {
             return Isa::Scalar;
         }
         #[cfg(target_arch = "x86_64")]
@@ -124,31 +126,41 @@ pub(crate) fn sum_sq_diff_scalar(a: &[f32], b: &[f32]) -> f64 {
     combine_lanes_f64(&acc)
 }
 
+/// AVX2 path of [`sum_sq_diff`].
+///
+/// # Safety
+/// SAFETY: the caller must have runtime-verified AVX2 support (the
+/// [`active`] dispatch does) before calling.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn sum_sq_diff_avx2(a: &[f32], b: &[f32]) -> f64 {
     use std::arch::x86_64::*;
     let n = a.len();
     let whole = n / LANES_F64 * LANES_F64;
-    let mut accv = _mm256_setzero_pd();
-    let (ap, bp) = (a.as_ptr(), b.as_ptr());
-    let mut i = 0;
-    while i < whole {
-        // 4 f32 pairs -> 4 exact f64 lanes; sub, mul, add are the same
-        // three IEEE ops the scalar lane loop performs (no FMA)
-        let av = _mm256_cvtps_pd(_mm_loadu_ps(ap.add(i)));
-        let bv = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(i)));
-        let d = _mm256_sub_pd(av, bv);
-        accv = _mm256_add_pd(accv, _mm256_mul_pd(d, d));
-        i += LANES_F64;
+    // SAFETY: every unaligned load reads `i .. i + 4` with
+    // `i + 4 <= whole <= n == a.len() == b.len()` (asserted by the
+    // dispatch wrapper), and the store targets a local `[f64; 4]`.
+    unsafe {
+        let mut accv = _mm256_setzero_pd();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i < whole {
+            // 4 f32 pairs -> 4 exact f64 lanes; sub, mul, add are the same
+            // three IEEE ops the scalar lane loop performs (no FMA)
+            let av = _mm256_cvtps_pd(_mm_loadu_ps(ap.add(i)));
+            let bv = _mm256_cvtps_pd(_mm_loadu_ps(bp.add(i)));
+            let d = _mm256_sub_pd(av, bv);
+            accv = _mm256_add_pd(accv, _mm256_mul_pd(d, d));
+            i += LANES_F64;
+        }
+        let mut acc = [0.0f64; LANES_F64];
+        _mm256_storeu_pd(acc.as_mut_ptr(), accv);
+        for (l, k) in (i..n).enumerate() {
+            let d = a[k] as f64 - b[k] as f64;
+            acc[l] += d * d;
+        }
+        combine_lanes_f64(&acc)
     }
-    let mut acc = [0.0f64; LANES_F64];
-    _mm256_storeu_pd(acc.as_mut_ptr(), accv);
-    for (l, k) in (i..n).enumerate() {
-        let d = a[k] as f64 - b[k] as f64;
-        acc[l] += d * d;
-    }
-    combine_lanes_f64(&acc)
 }
 
 #[inline]
@@ -207,38 +219,48 @@ pub(crate) fn minmax_scalar(xs: &[f32]) -> (f32, f32) {
     combine_lanes_minmax(&lo, &hi)
 }
 
+/// AVX2 path of [`minmax`].
+///
+/// # Safety
+/// SAFETY: the caller must have runtime-verified AVX2 support (the
+/// [`active`] dispatch does) before calling.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn minmax_avx2(xs: &[f32]) -> (f32, f32) {
     use std::arch::x86_64::*;
     let n = xs.len();
     let whole = n / LANES_F32 * LANES_F32;
-    // vminps(v, lo) = v < lo ? v : lo (lo on NaN) — exactly the scalar
-    // `if v < lo { lo = v }`, including signed-zero and NaN behavior
-    let mut lov = _mm256_set1_ps(f32::INFINITY);
-    let mut hiv = _mm256_set1_ps(f32::NEG_INFINITY);
-    let p = xs.as_ptr();
-    let mut i = 0;
-    while i < whole {
-        let v = _mm256_loadu_ps(p.add(i));
-        lov = _mm256_min_ps(v, lov);
-        hiv = _mm256_max_ps(v, hiv);
-        i += LANES_F32;
-    }
-    let mut lo = [f32::INFINITY; LANES_F32];
-    let mut hi = [f32::NEG_INFINITY; LANES_F32];
-    _mm256_storeu_ps(lo.as_mut_ptr(), lov);
-    _mm256_storeu_ps(hi.as_mut_ptr(), hiv);
-    for (l, k) in (i..n).enumerate() {
-        let v = xs[k];
-        if v < lo[l] {
-            lo[l] = v;
+    // SAFETY: every unaligned load reads `i .. i + 8` with
+    // `i + 8 <= whole <= n == xs.len()`; the stores target local
+    // `[f32; 8]` arrays.
+    unsafe {
+        // vminps(v, lo) = v < lo ? v : lo (lo on NaN) — exactly the scalar
+        // `if v < lo { lo = v }`, including signed-zero and NaN behavior
+        let mut lov = _mm256_set1_ps(f32::INFINITY);
+        let mut hiv = _mm256_set1_ps(f32::NEG_INFINITY);
+        let p = xs.as_ptr();
+        let mut i = 0;
+        while i < whole {
+            let v = _mm256_loadu_ps(p.add(i));
+            lov = _mm256_min_ps(v, lov);
+            hiv = _mm256_max_ps(v, hiv);
+            i += LANES_F32;
         }
-        if v > hi[l] {
-            hi[l] = v;
+        let mut lo = [f32::INFINITY; LANES_F32];
+        let mut hi = [f32::NEG_INFINITY; LANES_F32];
+        _mm256_storeu_ps(lo.as_mut_ptr(), lov);
+        _mm256_storeu_ps(hi.as_mut_ptr(), hiv);
+        for (l, k) in (i..n).enumerate() {
+            let v = xs[k];
+            if v < lo[l] {
+                lo[l] = v;
+            }
+            if v > hi[l] {
+                hi[l] = v;
+            }
         }
+        combine_lanes_minmax(&lo, &hi)
     }
-    combine_lanes_minmax(&lo, &hi)
 }
 
 #[inline]
@@ -282,26 +304,36 @@ pub(crate) fn axpy_f64_scalar(acc: &mut [f64], x: f64, v: &[f64]) {
     }
 }
 
+/// AVX2 path of [`axpy_f64`].
+///
+/// # Safety
+/// SAFETY: the caller must have runtime-verified AVX2 support (the
+/// [`active`] dispatch does) before calling.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_f64_avx2(acc: &mut [f64], x: f64, v: &[f64]) {
     use std::arch::x86_64::*;
     let n = acc.len();
     let whole = n / 4 * 4;
-    let xv = _mm256_set1_pd(x);
-    let ap = acc.as_mut_ptr();
-    let vp = v.as_ptr();
-    let mut i = 0;
-    while i < whole {
-        let a = _mm256_loadu_pd(ap.add(i));
-        let b = _mm256_loadu_pd(vp.add(i));
-        // mul then add — never vfmadd, which would fuse the rounding
-        _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, _mm256_mul_pd(xv, b)));
-        i += 4;
-    }
-    while i < n {
-        acc[i] += x * v[i];
-        i += 1;
+    // SAFETY: loads and stores touch `i .. i + 4` with
+    // `i + 4 <= whole <= n == acc.len() == v.len()` (asserted by the
+    // dispatch wrapper); `ap` is the only live pointer into `acc`.
+    unsafe {
+        let xv = _mm256_set1_pd(x);
+        let ap = acc.as_mut_ptr();
+        let vp = v.as_ptr();
+        let mut i = 0;
+        while i < whole {
+            let a = _mm256_loadu_pd(ap.add(i));
+            let b = _mm256_loadu_pd(vp.add(i));
+            // mul then add — never vfmadd, which would fuse the rounding
+            _mm256_storeu_pd(ap.add(i), _mm256_add_pd(a, _mm256_mul_pd(xv, b)));
+            i += 4;
+        }
+        while i < n {
+            acc[i] += x * v[i];
+            i += 1;
+        }
     }
 }
 
@@ -327,25 +359,35 @@ pub(crate) fn center_f32_to_f64_scalar(out: &mut [f64], row: &[f32], mean: &[f64
     }
 }
 
+/// AVX2 path of [`center_f32_to_f64`].
+///
+/// # Safety
+/// SAFETY: the caller must have runtime-verified AVX2 support (the
+/// [`active`] dispatch does) before calling.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn center_f32_to_f64_avx2(out: &mut [f64], row: &[f32], mean: &[f64]) {
     use std::arch::x86_64::*;
     let n = out.len();
     let whole = n / 4 * 4;
-    let op = out.as_mut_ptr();
-    let rp = row.as_ptr();
-    let mp = mean.as_ptr();
-    let mut i = 0;
-    while i < whole {
-        let r = _mm256_cvtps_pd(_mm_loadu_ps(rp.add(i)));
-        let m = _mm256_loadu_pd(mp.add(i));
-        _mm256_storeu_pd(op.add(i), _mm256_sub_pd(r, m));
-        i += 4;
-    }
-    while i < n {
-        out[i] = row[i] as f64 - mean[i];
-        i += 1;
+    // SAFETY: loads and stores touch `i .. i + 4` with `i + 4 <= whole
+    // <= n`, and the dispatch wrapper asserts all three slices have
+    // length `n`; `op` is the only live pointer into `out`.
+    unsafe {
+        let op = out.as_mut_ptr();
+        let rp = row.as_ptr();
+        let mp = mean.as_ptr();
+        let mut i = 0;
+        while i < whole {
+            let r = _mm256_cvtps_pd(_mm_loadu_ps(rp.add(i)));
+            let m = _mm256_loadu_pd(mp.add(i));
+            _mm256_storeu_pd(op.add(i), _mm256_sub_pd(r, m));
+            i += 4;
+        }
+        while i < n {
+            out[i] = row[i] as f64 - mean[i];
+            i += 1;
+        }
     }
 }
 
@@ -389,21 +431,30 @@ pub(crate) fn dot4_cols_scalar(
     [a0, a1, a2, a3]
 }
 
+/// AVX2 path of [`dot4_cols`].
+///
+/// # Safety
+/// SAFETY: the caller must have runtime-verified AVX2 support (the
+/// [`active`] dispatch does) before calling.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot4_cols_avx2(c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32], r: &[f32]) -> [f64; 4] {
     use std::arch::x86_64::*;
-    let mut acc = _mm256_setzero_pd();
-    for i in 0..r.len() {
-        // lane k holds column k's accumulator; the gather across the
-        // four column arrays keeps each per-column chain sequential
-        let cols = _mm256_cvtps_pd(_mm_set_ps(c3[i], c2[i], c1[i], c0[i]));
-        let x = _mm256_set1_pd(r[i] as f64);
-        acc = _mm256_add_pd(acc, _mm256_mul_pd(cols, x));
+    // SAFETY: all element access is bounds-checked slice indexing; the
+    // one raw-pointer store targets the local `[f64; 4]` result.
+    unsafe {
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..r.len() {
+            // lane k holds column k's accumulator; the gather across the
+            // four column arrays keeps each per-column chain sequential
+            let cols = _mm256_cvtps_pd(_mm_set_ps(c3[i], c2[i], c1[i], c0[i]));
+            let x = _mm256_set1_pd(r[i] as f64);
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(cols, x));
+        }
+        let mut out = [0.0f64; 4];
+        _mm256_storeu_pd(out.as_mut_ptr(), acc);
+        out
     }
-    let mut out = [0.0f64; 4];
-    _mm256_storeu_pd(out.as_mut_ptr(), acc);
-    out
 }
 
 /// One column dot `Σᵢ c[i]·r[i]` as a single sequential f64 chain.
@@ -437,7 +488,8 @@ mod tests {
 
     #[cfg(target_arch = "x86_64")]
     fn have_avx2() -> bool {
-        std::arch::is_x86_feature_detected!("avx2")
+        // Miri interprets no vendor intrinsics — oracle comparisons only.
+        cfg!(not(miri)) && std::arch::is_x86_feature_detected!("avx2")
     }
 
     #[test]
@@ -450,6 +502,7 @@ mod tests {
             assert_eq!(sum_sq_diff(&a, &b).to_bits(), want.to_bits(), "len {n}");
             #[cfg(target_arch = "x86_64")]
             if have_avx2() {
+                // SAFETY: AVX2 presence checked by `have_avx2()` above.
                 let got = unsafe { sum_sq_diff_avx2(&a, &b) };
                 assert_eq!(got.to_bits(), want.to_bits(), "avx2 len {n}");
             }
@@ -467,6 +520,7 @@ mod tests {
             assert_eq!(got.1.to_bits(), want.1.to_bits(), "len {n} hi");
             #[cfg(target_arch = "x86_64")]
             if have_avx2() {
+                // SAFETY: AVX2 presence checked by `have_avx2()` above.
                 let v = unsafe { minmax_avx2(&xs) };
                 assert_eq!(v.0.to_bits(), want.0.to_bits(), "avx2 len {n} lo");
                 assert_eq!(v.1.to_bits(), want.1.to_bits(), "avx2 len {n} hi");
@@ -524,8 +578,10 @@ mod tests {
             }
             #[cfg(target_arch = "x86_64")]
             if have_avx2() {
+                // SAFETY: AVX2 presence checked by `have_avx2()` above.
                 let v = unsafe { minmax_avx2(&a) };
                 assert_eq!((v.0.to_bits(), v.1.to_bits()), (wl.to_bits(), wh.to_bits()));
+                // SAFETY: same AVX2 check covers this call.
                 let s = unsafe { sum_sq_diff_avx2(&a, &b) };
                 assert_eq!(s.to_bits(), want.to_bits());
             }
@@ -568,9 +624,11 @@ mod tests {
             #[cfg(target_arch = "x86_64")]
             if have_avx2() {
                 let mut g = vec![0.0f64; n];
+                // SAFETY: AVX2 presence checked by `have_avx2()` above.
                 unsafe { center_f32_to_f64_avx2(&mut g, &row, &mean) };
                 assert_eq!(bits64(&g), bits64(&want), "avx2 center len {n}");
                 let mut ga = want.clone();
+                // SAFETY: same AVX2 check covers this call.
                 unsafe { axpy_f64_avx2(&mut ga, x, &v) };
                 assert_eq!(bits64(&ga), bits64(&acc_want), "avx2 axpy len {n}");
             }
@@ -596,6 +654,7 @@ mod tests {
             }
             #[cfg(target_arch = "x86_64")]
             if have_avx2() {
+                // SAFETY: AVX2 presence checked by `have_avx2()` above.
                 let v = unsafe { dot4_cols_avx2(&cols[0], &cols[1], &cols[2], &cols[3], &r) };
                 for k in 0..4 {
                     assert_eq!(v[k].to_bits(), want[k].to_bits(), "avx2 len {n} lane {k}");

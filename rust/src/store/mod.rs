@@ -460,21 +460,32 @@ impl ArchiveStore {
                     .map(|_| Arc::<[f32]>::from(vec![0.0f32; plane_len]))
                     .collect();
                 let batch = {
-                    let mut outs: Vec<&mut [f32]> = fresh
-                        .iter_mut()
-                        .map(|a| {
-                            Arc::get_mut(a).expect("freshly allocated plane is uniquely owned")
-                        })
-                        .collect();
-                    engine.decode_shard_planes_into(
-                        &m.header,
-                        entry,
-                        &m.src,
-                        &batch_sel,
-                        self.threads,
-                        &mut norm_scratch,
-                        &mut outs,
-                    )
+                    // the Arcs were allocated two lines up and never
+                    // cloned, so get_mut always succeeds; a typed error
+                    // keeps the request path panic-free regardless
+                    let mut outs: Vec<&mut [f32]> = Vec::with_capacity(fresh.len());
+                    let mut aliased = false;
+                    for a in fresh.iter_mut() {
+                        match Arc::get_mut(a) {
+                            Some(buf) => outs.push(buf),
+                            None => aliased = true,
+                        }
+                    }
+                    if aliased {
+                        Err(Error::runtime(
+                            "decode plane buffer unexpectedly shared before fill",
+                        ))
+                    } else {
+                        engine.decode_shard_planes_into(
+                            &m.header,
+                            entry,
+                            &m.src,
+                            &batch_sel,
+                            self.threads,
+                            &mut norm_scratch,
+                            &mut outs,
+                        )
+                    }
                 };
                 match batch {
                     Ok(()) => {
@@ -497,10 +508,8 @@ impl ArchiveStore {
                         for &k in &batch_pos {
                             let s = sel[k];
                             let mut one = Arc::<[f32]>::from(vec![0.0f32; plane_len]);
-                            let single = {
-                                let buf = Arc::get_mut(&mut one)
-                                    .expect("freshly allocated plane is uniquely owned");
-                                engine.decode_shard_planes_into(
+                            let single = match Arc::get_mut(&mut one) {
+                                Some(buf) => engine.decode_shard_planes_into(
                                     &m.header,
                                     entry,
                                     &m.src,
@@ -508,7 +517,10 @@ impl ArchiveStore {
                                     self.threads,
                                     &mut norm_scratch,
                                     &mut [buf],
-                                )
+                                ),
+                                None => Err(Error::runtime(
+                                    "decode plane buffer unexpectedly shared before fill",
+                                )),
                             };
                             match single {
                                 Ok(()) => {

@@ -1,0 +1,121 @@
+//! `gbatc-verify` against its seeded-violation fixtures and the real
+//! tree: each fixture must yield exactly one finding of the expected
+//! lint, and the repository itself must verify clean.
+
+use std::path::{Path, PathBuf};
+
+use gbatc::analysis::{self, Lint};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/verify_fixtures")
+        .join(name)
+}
+
+fn run(name: &str) -> Vec<analysis::Finding> {
+    analysis::verify_root(&fixture(name))
+        .unwrap_or_else(|e| panic!("fixture {name} failed to verify: {e}"))
+        .findings
+}
+
+fn expect_one(name: &str, lint: Lint, file: &str, line: usize) {
+    let findings = run(name);
+    assert_eq!(findings.len(), 1, "{name}: want exactly one finding, got {findings:?}");
+    let f = &findings[0];
+    assert_eq!(f.lint, lint, "{name}: {f}");
+    assert_eq!(f.file, file, "{name}: {f}");
+    assert_eq!(f.line, line, "{name}: {f}");
+}
+
+#[test]
+fn missing_safety_comment_is_one_unsafe_audit_finding() {
+    expect_one("missing_safety", Lint::UnsafeAudit, "util/a.rs", 4);
+}
+
+#[test]
+fn mul_add_in_gae_is_one_determinism_finding() {
+    expect_one("mul_add_in_gae", Lint::Determinism, "gae/a.rs", 4);
+}
+
+#[test]
+fn unwrap_in_serve_is_one_panic_freedom_finding_test_side_exempt() {
+    expect_one("unwrap_in_serve", Lint::PanicFreedom, "serve/a.rs", 4);
+}
+
+#[test]
+fn stale_inventory_entry_is_one_manifest_finding() {
+    expect_one("stale_inventory", Lint::Manifest, "serve/ghost.rs", 0);
+}
+
+#[test]
+fn hashmap_in_archive_is_one_determinism_finding() {
+    expect_one("hashmap_in_archive", Lint::Determinism, "archive/a.rs", 3);
+}
+
+#[test]
+fn blocking_call_in_reactor_is_one_blocking_finding() {
+    expect_one("blocking_in_reactor", Lint::Blocking, "serve/reactor.rs", 4);
+}
+
+#[test]
+fn inventory_count_drift_is_one_manifest_finding() {
+    let findings = run("inventory_count_drift");
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].lint, Lint::Manifest);
+    assert!(
+        findings[0].message.contains("expects 1") && findings[0].message.contains("has 2"),
+        "{}",
+        findings[0]
+    );
+}
+
+#[test]
+fn justified_waiver_at_exact_line_silences_the_finding() {
+    let findings = run("waived_unwrap");
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn waiver_matching_nothing_is_one_manifest_finding() {
+    let findings = run("stale_waiver");
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].lint, Lint::Manifest);
+    assert!(findings[0].message.contains("waiver"), "{}", findings[0]);
+}
+
+/// The acceptance gate: the repository's own tree verifies clean
+/// against the committed manifest, and the unsafe inventory is
+/// non-trivial (the scan really saw the FFI/SIMD surface).
+#[test]
+fn real_tree_verifies_clean_against_committed_manifest() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/ has a parent")
+        .to_path_buf();
+    assert!(
+        root.join("verify.toml").is_file(),
+        "repo root manifest missing at {}",
+        root.display()
+    );
+    let report = analysis::verify_root(&root).expect("verify_root on the real tree");
+    assert!(
+        report.findings.is_empty(),
+        "the tree must verify clean:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert!(report.files_scanned > 50, "scanned {} files", report.files_scanned);
+    assert!(report.unsafe_sites > 30, "saw {} unsafe sites", report.unsafe_sites);
+}
+
+/// `find_root` walks upward from a nested directory.
+#[test]
+fn find_root_walks_upward() {
+    let nested = fixture("missing_safety").join("src/util");
+    let found = analysis::find_root(&nested).expect("finds fixture root");
+    assert_eq!(found, fixture("missing_safety"));
+}

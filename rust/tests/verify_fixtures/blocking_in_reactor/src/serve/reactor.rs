@@ -1,0 +1,5 @@
+//! Fixture: a filesystem call on the event-loop thread.
+
+pub fn probe(path: &str) -> bool {
+    std::fs::metadata(path).is_ok()
+}

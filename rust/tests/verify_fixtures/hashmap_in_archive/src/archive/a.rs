@@ -1,0 +1,5 @@
+//! Fixture: hash-ordered iteration where archive bytes are produced.
+
+pub fn tag_bytes(tags: &std::collections::HashMap<u32, u8>) -> Vec<u8> {
+    tags.values().copied().collect()
+}

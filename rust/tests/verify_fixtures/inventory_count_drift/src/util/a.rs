@@ -1,0 +1,11 @@
+//! Fixture: two documented unsafe sites, but the manifest admits one.
+
+pub fn read_first(p: *const u8) -> u8 {
+    // SAFETY: caller contract — p is valid for reads.
+    unsafe { *p }
+}
+
+pub fn read_second(p: *const u8) -> u8 {
+    // SAFETY: caller contract — p + 1 is valid for reads.
+    unsafe { *p.add(1) }
+}

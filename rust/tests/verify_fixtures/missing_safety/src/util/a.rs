@@ -1,0 +1,5 @@
+//! Fixture: one unsafe block with no safety rationale comment.
+
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+//! Fixture: a fused multiply-add in an archive-byte-producing module.
+
+pub fn accumulate(a: f64, b: f64, c: f64) -> f64 {
+    a.mul_add(b, c)
+}

@@ -1,0 +1,6 @@
+//! Fixture: clean file; the manifest lists an inventory entry for a
+//! file that does not exist.
+
+pub fn ok() -> u32 {
+    7
+}

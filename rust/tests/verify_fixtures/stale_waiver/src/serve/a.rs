@@ -1,0 +1,6 @@
+//! Fixture: a clean tree plus a waiver that matches nothing — the
+//! stale waiver itself must be the one finding.
+
+pub fn ok() -> u32 {
+    7
+}
