@@ -642,8 +642,20 @@ fn main() {
             let st = report.stage_times;
             stage_json = format!(
                 "{{\"kernel\": \"stage_times\", \"pca_fit_s\": {:.4}, \"guarantee_s\": {:.4}, \
-                 \"entropy_s\": {:.4}, \"planner_trials_s\": {:.4}}}",
-                st.pca_fit_s, st.guarantee_s, st.entropy_s, st.planner_trials_s
+                 \"entropy_s\": {:.4}, \"planner_trials_s\": {:.4}, \
+                 \"pca_fit_p99_ms\": {:.3}, \"guarantee_p99_ms\": {:.3}, \
+                 \"entropy_p99_ms\": {:.3}, \"planner_trials_p99_ms\": {:.3}, \
+                 \"pca_fit_n\": {}, \"guarantee_n\": {}}}",
+                st.pca_fit.total_s,
+                st.guarantee.total_s,
+                st.entropy.total_s,
+                st.planner_trials.total_s,
+                st.pca_fit.p99_ms,
+                st.guarantee.p99_ms,
+                st.entropy.p99_ms,
+                st.planner_trials.p99_ms,
+                st.pca_fit.count,
+                st.guarantee.count
             );
         } else {
             singles.push((name, report.archive.total_bytes(), wall));

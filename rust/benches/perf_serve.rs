@@ -3,10 +3,15 @@
 //! keep-alive (one connection per client) vs connection-per-request —
 //! and reports throughput, latency percentiles, and the store hit rate.
 //! The gated metrics are machine-relative: the keep-alive/close
-//! throughput ratio (same machine, same process, same mix) and the cache
-//! hit rate of the mix, so the gate in `scripts/bench_compare.py` is
-//! meaningful on any runner.  Writes `BENCH_serve.json` (gated against
-//! `BENCH_serve_baseline.json`):
+//! throughput ratio (same machine, same process, same mix), the cache
+//! hit rate of the mix, and the tracing-overhead ratio (the same
+//! keep-alive phase against a second server with `trace_sample: 0` —
+//! default 1-in-16 sampling must cost <= 2% throughput), so the gate in
+//! `scripts/bench_compare.py` is meaningful on any runner.  Latency
+//! percentiles are reported twice: client-side wall times and the
+//! server's own lock-free histogram (`ServeObs::query_latency`), whose
+//! p99 lands in `BENCH_serve.json` for trend tracking.  Writes
+//! `BENCH_serve.json` (gated against `BENCH_serve_baseline.json`):
 //!
 //! ```bash
 //! cargo bench --bench perf_serve
@@ -150,12 +155,12 @@ fn main() {
 
     // one timed phase: `clients` threads, each running the mix on its
     // own client; returns (requests/sec, sorted per-request latencies)
-    let run_phase = |reuse: bool| -> (f64, Vec<f64>) {
+    let run_phase = |addr: &str, reuse: bool| -> (f64, Vec<f64>) {
         let wall = Timer::start();
         let mut lat: Vec<f64> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..clients)
                 .map(|_| {
-                    let addr = addr.clone();
+                    let addr = addr.to_string();
                     let mix = &mix;
                     scope.spawn(move || {
                         let client = QueryClient::new(addr).reuse(reuse);
@@ -187,15 +192,47 @@ fn main() {
         ds.nt, ds.ns, ds.ny, ds.nx
     );
 
-    let (close_rps, close_lat) = run_phase(false);
-    let (ka_rps, ka_lat) = run_phase(true);
+    let (close_rps, close_lat) = run_phase(&addr, false);
+    let (ka_rps, ka_lat) = run_phase(&addr, true);
     let speedup = ka_rps / close_rps.max(1e-9);
+
+    // the server's own latency view: the lock-free histogram every
+    // request lands in, regardless of sampling (ns -> ms for the report)
+    let srv_q = server.obs().query_latency();
+    let srv_wait = server.obs().queue_wait();
+    let ms = |ns: u64| ns as f64 / 1e6;
 
     let stats = store.stats();
     let hit_rate = stats.cache.hit_rate();
     let st = server.shutdown();
     assert_eq!(st.io_errors, 0, "clean load must not count io errors: {st}");
     assert_eq!(st.server_errors, 0, "{st}");
+
+    // tracing-overhead phase: the identical keep-alive load against a
+    // second server (same warm store) with tracing fully disabled.
+    // best-of-2 per side to keep the 2% gate out of scheduler noise.
+    let overhead_phase = |cfg_sample: u32| -> f64 {
+        let s2 = QueryServer::bind(
+            Arc::clone(&store),
+            "127.0.0.1:0",
+            ServerConfig {
+                workers: 4,
+                queue: 256,
+                max_conns: 4 * clients + 16,
+                trace_sample: cfg_sample,
+                ..ServerConfig::default()
+            },
+        )
+        .expect("bind overhead server");
+        let a2 = s2.addr().to_string();
+        let rps = run_phase(&a2, true).0.max(run_phase(&a2, true).0);
+        let st2 = s2.shutdown();
+        assert_eq!(st2.server_errors, 0, "{st2}");
+        rps
+    };
+    let traced_rps = overhead_phase(16); // the default 1-in-16 sampling
+    let notrace_rps = overhead_phase(0); // histograms on, spans off
+    let trace_overhead = notrace_rps / traced_rps.max(1e-9);
 
     let report_phase = |tag: &str, rps: f64, lat: &[f64]| {
         println!(
@@ -208,26 +245,46 @@ fn main() {
     report_phase("close", close_rps, &close_lat);
     report_phase("keep-alive", ka_rps, &ka_lat);
     println!(
-        "keep-alive/close speedup {speedup:.2}x | hit rate {:.1}% | {st}",
-        100.0 * hit_rate
+        "server hist {:>6} reqs | p50 {:>7.3} ms  p95 {:>7.3} ms  p99 {:>7.3} ms  max {:>7.3} ms | queue-wait p99 {:.3} ms",
+        srv_q.count,
+        ms(srv_q.p50()),
+        ms(srv_q.p95()),
+        ms(srv_q.p99()),
+        ms(srv_q.max),
+        ms(srv_wait.p99()),
+    );
+    println!(
+        "keep-alive/close speedup {speedup:.2}x | hit rate {:.1}% | \
+         trace overhead {:.3}x (traced {traced_rps:.0} vs untraced {notrace_rps:.0} req/s) | {st}",
+        100.0 * hit_rate,
+        trace_overhead,
     );
 
     // hand-rolled JSON (no serde in the offline image)
     let json = format!(
         "[\n  {{\"kernel\": \"serve_keepalive\", \"close_rps\": {:.1}, \
          \"keepalive_rps\": {:.1}, \"p50_ms\": {:.4}, \"p95_ms\": {:.4}, \
-         \"p99_ms\": {:.4}, \"speedup\": {:.3}}},\n  \
+         \"p99_ms\": {:.4}, \"server_p50_ms\": {:.4}, \"server_p99_ms\": {:.4}, \
+         \"queue_wait_p99_ms\": {:.4}, \"speedup\": {:.3}}},\n  \
          {{\"kernel\": \"serve_hit_rate\", \"hit_rate\": {:.4}, \
-         \"keepalive_reuse\": {}, \"pipelined\": {}}}\n]\n",
+         \"keepalive_reuse\": {}, \"pipelined\": {}}},\n  \
+         {{\"kernel\": \"serve_trace_overhead\", \"traced_rps\": {:.1}, \
+         \"notrace_rps\": {:.1}, \"ratio\": {:.4}}}\n]\n",
         close_rps,
         ka_rps,
         percentile(&ka_lat, 0.50),
         percentile(&ka_lat, 0.95),
         percentile(&ka_lat, 0.99),
+        ms(srv_q.p50()),
+        ms(srv_q.p99()),
+        ms(srv_wait.p99()),
         speedup,
         hit_rate,
         st.keepalive_reuse,
-        st.pipelined
+        st.pipelined,
+        traced_rps,
+        notrace_rps,
+        trace_overhead
     );
     std::fs::write(&out_path, &json).expect("write bench json");
     println!("wrote {out_path}");

@@ -113,14 +113,16 @@ COMMANDS:
               sections the query touches; reports archive bytes read.
               Species are mechanism names (e.g. OH,CO) or numeric
               indices; unknown names list the available ones.
-  inspect     --archive <gba|gba2|szf> [--stats] [--verify]
+  inspect     --archive <gba|gba2|szf> [--stats [--json]] [--verify]
               Print the GBA2 table of contents (per-shard and per-species
               byte ranges), per-section codec tags, per-codec byte
               totals, and size breakdown.  --stats additionally reopens
               the archive through the metered reader and reports the
               classified open IO (header/TOC reads vs payload reads) and
               how the bytes were served: zero-copy mmap vs buffered
-              read(2).  --verify instead walks every section (latent
+              read(2); with --json the stats (dims, sizes, per-codec
+              totals, IO split) print as one machine-readable JSON
+              object instead.  --verify instead walks every section (latent
               planes, per-species payloads, journal records of an
               unsealed stream) and decodes each; prints the damaged
               (shard, species) list and exits nonzero if anything fails.
@@ -153,7 +155,17 @@ COMMANDS:
               bit-identical to a local decode.  Endpoints: GET /datasets
               (catalog), GET /query?dataset=..&t0=..&t1=..&species=..
               (binary f32 body + X-Gbatc-Meta JSON header), GET /stats
-              (cache/decode/IO/server/event-loop/replica counters).
+              (cache/decode/IO/server/event-loop/replica counters),
+              GET /metrics (Prometheus text: latency/decode/cache-probe
+              histograms + counters), GET /trace/slow (worst request
+              spans with per-phase timings).  Tracing is sampled 1-in-N
+              (GBATC_TRACE_SAMPLE, default 16; GBATC_NO_TRACE=1
+              disables); every response carries X-Gbatc-Trace-Id while
+              enabled.
+  stats       [SERVER] [--server 127.0.0.1:7070] [--slow N]
+              Render a running server's /metrics (histogram quantiles +
+              counters) and its /trace/slow spans with per-phase
+              breakdowns.
   query       DATASET [--server 127.0.0.1:7070] [--t0 N] [--t1 N]
               [--species NAME|INDEX[,...]] [--output <sdf>]
               Remote partial decode against a running `gbatc serve`:

@@ -696,7 +696,7 @@ impl<'a> ShardEngine<'a> {
         let latents = pipeline.encode_all(&grid, &norm, self.handle, progress)?;
         let t_ent = std::time::Instant::now();
         let (latent_blob, deq) = LatentCodec::encode(&latents, nb, spec.latent, ctx.latent_bin)?;
-        clock.add_ns(&clock.entropy_ns, t_ent.elapsed().as_nanos() as u64);
+        clock.add_ns(&clock.entropy, t_ent.elapsed().as_nanos() as u64);
         drop(latents);
 
         // 3. decode (+ TCN) from the *dequantized* latents — exactly
@@ -718,9 +718,9 @@ impl<'a> ShardEngine<'a> {
             let t = std::time::Instant::now();
             let (gbatc_bytes, stats) = gbatc.encode_species(s)?;
             let gbatc_certified = stats.max_residual <= ctx.params[s].tau + 1e-12;
-            clock.add_ns(&clock.pca_fit_ns, stats.pca_fit_ns);
-            clock.add_ns(&clock.guarantee_ns, stats.guarantee_ns);
-            clock.add_ns(&clock.entropy_ns, stats.entropy_ns);
+            clock.add_ns(&clock.pca_fit, stats.pca_fit_ns);
+            clock.add_ns(&clock.guarantee, stats.guarantee_ns);
+            clock.add_ns(&clock.entropy, stats.entropy_ns);
             let mut trials = TrialCache::new();
             trials.insert(SectionEncoding {
                 tag: CodecTag::Gbatc,
@@ -747,7 +747,7 @@ impl<'a> ShardEngine<'a> {
                 // losing alternative's bytes before the archive-level
                 // planning wait
                 trials.evict_losing_alt();
-                clock.add_ns(&clock.planner_trials_ns, t_trial.elapsed().as_nanos() as u64);
+                clock.add_ns(&clock.planner_trials, t_trial.elapsed().as_nanos() as u64);
                 if !gbatc_certified && trials.best_alt().is_none() {
                     return Err(Error::guarantee(format!(
                         "no stage certifies NRMSE {:.3e} on shard t0 {t0} species {s}",

@@ -3,6 +3,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::obs::Histogram;
+
 /// Thread-safe counters for one compression/decompression run.
 #[derive(Debug)]
 pub struct Progress {
@@ -58,18 +60,20 @@ impl Progress {
 
 /// Per-stage wall-time attribution of a compression run, summed across
 /// workers (so a stage can exceed the elapsed wall time on multi-core
-/// runs — it is "CPU-seconds spent in the stage").  Snapshotted into
-/// [`StageTimes`] on `CompressReport` so perf PRs have in-tree numbers.
+/// runs — it is "CPU-seconds spent in the stage").  Each stage is a
+/// full [`Histogram`] of per-call nanoseconds (not a single counter),
+/// so [`StageTimes`] reports distributions — total, count, p50/p99/max
+/// — and perf PRs can see tail behavior, not just sums.
 #[derive(Debug, Default)]
 pub struct StageClock {
     /// PCA covariance fits + eigendecompositions.
-    pub pca_fit_ns: AtomicU64,
+    pub pca_fit: Histogram,
     /// Guarantee projection + greedy coefficient loops.
-    pub guarantee_ns: AtomicU64,
+    pub guarantee: Histogram,
     /// Entropy encoding on the GBATC path (latent plane + coefficients).
-    pub entropy_ns: AtomicU64,
+    pub entropy: Histogram,
     /// Self-contained stage trials run by the `--codec auto` planner.
-    pub planner_trials_ns: AtomicU64,
+    pub planner_trials: Histogram,
 }
 
 impl StageClock {
@@ -77,36 +81,76 @@ impl StageClock {
         Self::default()
     }
 
-    pub fn add_ns(&self, counter: &AtomicU64, ns: u64) {
-        counter.fetch_add(ns, Ordering::Relaxed);
+    /// Record one timed call of a stage (pass a field of `self`).
+    pub fn add_ns(&self, stage: &Histogram, ns: u64) {
+        stage.record(ns);
     }
 
     pub fn snapshot(&self) -> StageTimes {
         StageTimes {
-            pca_fit_s: self.pca_fit_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            guarantee_s: self.guarantee_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            entropy_s: self.entropy_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            planner_trials_s: self.planner_trials_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            pca_fit: StageDist::of(&self.pca_fit),
+            guarantee: StageDist::of(&self.guarantee),
+            entropy: StageDist::of(&self.entropy),
+            planner_trials: StageDist::of(&self.planner_trials),
         }
     }
 }
 
-/// Snapshot of a [`StageClock`] in seconds — carried by `CompressReport`
-/// and printed by `gbatc compress` and the perf benches.
+/// Distribution summary of one stage: total CPU-seconds plus per-call
+/// quantiles in milliseconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageDist {
+    /// Summed stage time in seconds (the historical headline number).
+    pub total_s: f64,
+    /// Timed calls recorded.
+    pub count: u64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl StageDist {
+    fn of(h: &Histogram) -> StageDist {
+        let s = h.snapshot();
+        StageDist {
+            total_s: s.sum as f64 / 1e9,
+            count: s.count,
+            p50_ms: s.p50() as f64 / 1e6,
+            p99_ms: s.p99() as f64 / 1e6,
+            max_ms: s.max as f64 / 1e6,
+        }
+    }
+}
+
+/// Snapshot of a [`StageClock`] — carried by `CompressReport` and
+/// printed by `gbatc compress` and the perf benches.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageTimes {
-    pub pca_fit_s: f64,
-    pub guarantee_s: f64,
-    pub entropy_s: f64,
-    pub planner_trials_s: f64,
+    pub pca_fit: StageDist,
+    pub guarantee: StageDist,
+    pub entropy: StageDist,
+    pub planner_trials: StageDist,
 }
 
 impl std::fmt::Display for StageTimes {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stage = |d: &StageDist| {
+            if d.count == 0 {
+                format!("{:.3}s", d.total_s)
+            } else {
+                format!(
+                    "{:.3}s (n={} p50 {:.2}ms p99 {:.2}ms max {:.2}ms)",
+                    d.total_s, d.count, d.p50_ms, d.p99_ms, d.max_ms
+                )
+            }
+        };
         write!(
             f,
-            "pca fit {:.3}s | guarantee loop {:.3}s | entropy encode {:.3}s | planner trials {:.3}s",
-            self.pca_fit_s, self.guarantee_s, self.entropy_s, self.planner_trials_s
+            "pca fit {} | guarantee loop {} | entropy encode {} | planner trials {}",
+            stage(&self.pca_fit),
+            stage(&self.guarantee),
+            stage(&self.entropy),
+            stage(&self.planner_trials)
         )
     }
 }
@@ -116,18 +160,25 @@ mod tests {
     use super::*;
 
     #[test]
-    fn stage_clock_snapshots_seconds() {
+    fn stage_clock_snapshots_distributions() {
         let c = StageClock::new();
-        c.add_ns(&c.pca_fit_ns, 1_500_000_000);
-        c.add_ns(&c.pca_fit_ns, 500_000_000);
-        c.add_ns(&c.planner_trials_ns, 250_000_000);
+        c.add_ns(&c.pca_fit, 1_500_000_000);
+        c.add_ns(&c.pca_fit, 500_000_000);
+        c.add_ns(&c.planner_trials, 250_000_000);
         let t = c.snapshot();
-        assert!((t.pca_fit_s - 2.0).abs() < 1e-9);
-        assert!((t.planner_trials_s - 0.25).abs() < 1e-9);
-        assert_eq!(t.guarantee_s, 0.0);
+        assert!((t.pca_fit.total_s - 2.0).abs() < 1e-9);
+        assert_eq!(t.pca_fit.count, 2);
+        assert!((t.planner_trials.total_s - 0.25).abs() < 1e-9);
+        assert_eq!(t.guarantee.total_s, 0.0);
+        assert_eq!(t.guarantee.count, 0);
+        // per-call quantiles: p50 of {0.5s, 1.5s} lands near 0.5s, max
+        // is exact; bucketed estimates carry ≤1.6% relative error
+        assert!((t.pca_fit.p50_ms - 500.0).abs() <= 500.0 * 0.02, "{}", t.pca_fit.p50_ms);
+        assert!((t.pca_fit.max_ms - 1500.0).abs() < 1e-6);
         let line = t.to_string();
         assert!(line.contains("pca fit 2.000s"), "{line}");
         assert!(line.contains("planner trials 0.250s"), "{line}");
+        assert!(line.contains("n=2"), "{line}");
     }
 
     #[test]

@@ -127,6 +127,28 @@
 //!   with a sequential combine keep every reduction bit-identical at any
 //!   lane width, so archive bytes and certified bounds never depend on
 //!   the ISA.
+//! * **Observability** ([`obs`]) — dependency-free instruments threaded
+//!   through the hot paths: lock-free log-bucketed latency histograms
+//!   (integer-only record path, ≤1.6% quantile error) for query
+//!   latency, decode time, cache probes, and reactor queue-wait;
+//!   per-request trace spans (u64 ID minted at parse, `X-Gbatc-Trace-Id`
+//!   on every response) with phase timings landing in a bounded
+//!   lock-sharded slow-query ring; and egress endpoints:
+//!
+//!   ```text
+//!   request ──► span {parse, queue_wait, cache_probe, decode,
+//!      │              salvage, serialize, write}
+//!      │         │ histograms: serve (latency, queue-wait)
+//!      │         │             store (decode, cache-probe)
+//!      ▼         ▼
+//!   GET /metrics      Prometheus text (cumulative buckets + sum/count)
+//!   GET /trace/slow   N worst span trees, per-phase breakdown
+//!   gbatc stats URL   renders both
+//!   ```
+//!
+//!   The compression side reports on the same type:
+//!   [`coordinator::StageClock`] records per-stage *distributions*
+//!   (p50/p99/max, not just totals) into `CompressReport::stage_times`.
 //! * **Static analysis** ([`analysis`]) — the in-repo invariant linter
 //!   behind the `gbatc-verify` binary (CI's `verify` job): a minimal
 //!   token/brace-aware scanner plus a hand-parsed `verify.toml`
@@ -168,6 +190,7 @@ pub mod error;
 pub mod gae;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

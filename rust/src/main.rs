@@ -46,6 +46,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         "compact" => cmd_compact(args),
         "serve" => cmd_serve(args),
         "query" => cmd_query(args),
+        "stats" => cmd_stats(args),
         "sz" => cmd_sz(args),
         "sz-decompress" => cmd_sz_decompress(args),
         "evaluate" => cmd_evaluate(args),
@@ -371,7 +372,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     )?;
     println!(
-        "serving {} dataset(s) on http://{} ({} loop, {} replica(s)) — GET /datasets, /query, /stats",
+        "serving {} dataset(s) on http://{} ({} loop, {} replica(s)) — \
+         GET /datasets, /query, /stats, /metrics, /trace/slow",
         router.datasets().len(),
         server.addr(),
         if server.event_driven() {
@@ -424,6 +426,136 @@ fn cmd_query(args: &Args) -> Result<()> {
         io::write_dataset(out, &ds)?;
         println!("wrote {out}");
     }
+    Ok(())
+}
+
+/// Summarize one Prometheus histogram out of `/metrics` text: sample
+/// count plus p50/p90/p99 upper bounds read off the cumulative
+/// `_bucket{le=...}` series (each quantile is "<= this bucket bound").
+fn prom_hist_summary(text: &str, name: &str) -> Option<String> {
+    let bucket_prefix = format!("{name}_bucket{{le=\"");
+    let count_prefix = format!("{name}_count ");
+    let mut buckets: Vec<(f64, u64)> = Vec::new();
+    let mut count = 0u64;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(&bucket_prefix) {
+            let (le, tail) = rest.split_once("\"}")?;
+            let le: f64 = if le == "+Inf" {
+                f64::INFINITY
+            } else {
+                le.parse().ok()?
+            };
+            buckets.push((le, tail.trim().parse().ok()?));
+        } else if let Some(v) = line.strip_prefix(&count_prefix) {
+            count = v.trim().parse().ok()?;
+        }
+    }
+    if buckets.is_empty() {
+        return None;
+    }
+    if count == 0 {
+        return Some(format!("{name:<28} no samples"));
+    }
+    let q = |p: f64| -> f64 {
+        let rank = ((p * count as f64).ceil() as u64).clamp(1, count);
+        buckets
+            .iter()
+            .find(|&&(_, cum)| cum >= rank)
+            .map(|&(le, _)| le)
+            .unwrap_or(f64::INFINITY)
+    };
+    Some(format!(
+        "{name:<28} n={count} p50<={:.3}ms p90<={:.3}ms p99<={:.3}ms",
+        q(0.5) * 1e3,
+        q(0.9) * 1e3,
+        q(0.99) * 1e3
+    ))
+}
+
+/// Render `/trace/slow` JSON as one line per span plus its phases.
+fn render_slow_spans(json: &str) {
+    let Some(start) = json.find("\"spans\":[") else {
+        return;
+    };
+    let recorded = gbatc::serve::http::json_u64(json, "recorded").unwrap_or(0);
+    let dropped = gbatc::serve::http::json_u64(json, "dropped").unwrap_or(0);
+    println!("  ring: {recorded} recorded, {dropped} dropped");
+    for chunk in json[start..].split("{\"trace_id\":\"").skip(1) {
+        let id = chunk.split('"').next().unwrap_or("?");
+        let status = gbatc::serve::http::json_u64(chunk, "status").unwrap_or(0);
+        let total = gbatc::serve::http::json_u64(chunk, "total_ns").unwrap_or(0);
+        let target = chunk
+            .split("\"target\":\"")
+            .nth(1)
+            .and_then(|s| s.split('"').next())
+            .unwrap_or("?");
+        println!("  {id} {status} {:>9.3}ms {target}", total as f64 / 1e6);
+        for ph in [
+            "parse",
+            "queue_wait",
+            "cache_probe",
+            "decode",
+            "salvage",
+            "serialize",
+            "write",
+        ] {
+            let pat = format!("\"{ph}\":{{\"start_ns\":");
+            let Some(pos) = chunk.find(&pat) else {
+                continue;
+            };
+            let rest = &chunk[pos + pat.len()..];
+            let start_ns: f64 = rest
+                .split(',')
+                .next()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.0);
+            let dur_ns: f64 = rest
+                .split("\"dur_ns\":")
+                .nth(1)
+                .and_then(|s| s.split('}').next())
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(0.0);
+            println!(
+                "      {ph:<12} {:>9.3}ms @ {:.3}ms",
+                dur_ns / 1e6,
+                start_ns / 1e6
+            );
+        }
+    }
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let server = match args.positional.first() {
+        Some(s) => s.as_str(),
+        None => args.get_or("server", "127.0.0.1:7070"),
+    };
+    let client = QueryClient::new(server);
+    let metrics = client.metrics_text()?;
+    println!("latency ({server}/metrics):");
+    for name in [
+        "gbatc_query_seconds",
+        "gbatc_queue_wait_seconds",
+        "gbatc_decode_seconds",
+        "gbatc_cache_probe_seconds",
+    ] {
+        if let Some(line) = prom_hist_summary(&metrics, name) {
+            println!("  {line}");
+        }
+    }
+    println!("counters:");
+    for line in metrics.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let name = line.split([' ', '{']).next().unwrap_or("");
+        if name.ends_with("_bucket") || name.ends_with("_sum") || name.ends_with("_count") {
+            continue; // histogram components, summarized above
+        }
+        println!("  {line}");
+    }
+    let n = args.get_parse("slow", 8usize)?;
+    println!("slow spans (top {n}, {server}/trace/slow):");
+    render_slow_spans(&client.trace_slow_json(n)?);
     Ok(())
 }
 
@@ -480,6 +612,9 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         return cmd_info(args);
     }
     let a = any.into_v2()?;
+    if args.has("stats") && args.has("json") {
+        return inspect_stats_json(path, &a);
+    }
     let (nt, ns, ny, nx) = a.header.dims;
     println!(
         "GBATC archive (GBA2): {nt}x{ns}x{ny}x{nx}, block {:?}, latent {}, kt_window {}",
@@ -546,6 +681,53 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         let name = chem::SPECIES.get(s).map(|sp| sp.name).unwrap_or("?");
         println!("    {:>12} (#{s:<3}) {b:>10} B", name);
     }
+    Ok(())
+}
+
+/// `inspect --stats --json`: one machine-readable JSON object — dims,
+/// sizes, per-codec totals, and the classified open IO (TOC vs payload,
+/// mmap vs buffered `read(2)`).
+fn inspect_stats_json(path: &str, a: &Gba2Archive) -> Result<()> {
+    let reader = ArchiveReader::open_file(path, &Backend::Reference, 0)?;
+    let io = reader.io_stats();
+    let (nt, ns, ny, nx) = a.header.dims;
+    let totals = a.codec_totals();
+    let mut codecs = String::from("{");
+    for (i, &t) in CodecTag::ALL.iter().enumerate() {
+        let (n, b) = totals[t as usize];
+        if i > 0 {
+            codecs.push(',');
+        }
+        codecs.push_str(&format!(
+            "\"{}\":{{\"sections\":{n},\"bytes\":{b}}}",
+            t.name()
+        ));
+    }
+    codecs.push('}');
+    println!(
+        "{{\"archive\":\"{}\",\"version\":{},\"dims\":[{nt},{ns},{ny},{nx}],\
+         \"shards\":{},\"kt_window\":{},\"payload_bytes\":{},\"model_bytes\":{},\
+         \"compression_ratio\":{:.3},\"nrmse_target\":{:e},\
+         \"open_io\":{{\"toc_reads\":{},\"toc_bytes\":{},\"payload_reads\":{},\
+         \"payload_bytes\":{},\"mmap_reads\":{},\"mmap_bytes\":{},\
+         \"buffered_reads\":{},\"buffered_bytes\":{}}},\"codecs\":{codecs}}}",
+        gbatc::serve::http::json_escape(path),
+        a.version(),
+        a.n_shards(),
+        a.header.kt_window,
+        a.payload_bytes(),
+        a.header.model_param_bytes,
+        a.compression_ratio(),
+        a.header.nrmse_target,
+        io.toc_reads,
+        io.toc_bytes,
+        io.payload_reads,
+        io.payload_bytes,
+        io.mmap_reads,
+        io.mmap_bytes,
+        io.reads() - io.mmap_reads,
+        io.bytes() - io.mmap_bytes,
+    );
     Ok(())
 }
 

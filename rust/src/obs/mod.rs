@@ -1,0 +1,33 @@
+//! `gbatc::obs` — dependency-free observability primitives.
+//!
+//! The instrument layer every perf PR is judged by: lock-free
+//! log-bucketed latency histograms ([`Histogram`], ≤1.6% quantile
+//! error, integer-only record path), per-request trace spans with
+//! phase timings ([`SpanBuilder`] → [`SpanRecord`]) feeding a bounded
+//! lock-sharded slow-query ring ([`TraceRing`]), and Prometheus text
+//! exposition rendering ([`prom`]).
+//!
+//! ```text
+//!   record path (reactor-safe: no floats, no locks, no allocation)
+//!     Histogram::record(ns) ── fetch_add ──► atomic fixed buckets
+//!     SpanBuilder::add_phase ── plain struct, rides the request
+//!     TraceRing::push ── try_lock shard, overwrite oldest, drop on
+//!                        contention (counted) — never blocks
+//!
+//!   egress path (floats fine)
+//!     Histogram::snapshot() ─► HistSnapshot: quantile / merge
+//!     prom::render_histogram ─► GET /metrics  (cumulative buckets)
+//!     TraceRing::slow(n)     ─► GET /trace/slow (N worst spans)
+//! ```
+//!
+//! Consumers: the serve layer (query latency, reactor queue-wait,
+//! spans), the store (decode time, cache probe), and the compression
+//! side ([`crate::coordinator::StageClock`] records per-stage
+//! distributions on the same histogram type).
+
+pub mod hist;
+pub mod prom;
+pub mod trace;
+
+pub use hist::{bucket_bounds, bucket_index, HistSnapshot, Histogram, N_BUCKETS};
+pub use trace::{Phase, SpanBuilder, SpanRecord, TraceIds, TraceRing, N_PHASES, TARGET_CAP};

@@ -1,0 +1,118 @@
+//! Prometheus text-exposition rendering (version 0.0.4).
+//!
+//! Dependency-free helpers that turn [`HistSnapshot`]s and counters
+//! into the `# HELP` / `# TYPE` / sample-line format `GET /metrics`
+//! serves.  Histograms export on a **coarse ladder** — the fine 1920
+//! internal buckets would bloat the exposition, so cumulative counts
+//! are re-sliced onto power-of-four bounds from ~1 µs to ~17 s (every
+//! ladder bound is an internal bucket boundary, so the re-slice is
+//! exact).  `le` labels are the bounds in seconds; `_sum` is seconds
+//! too, per Prometheus convention for `*_seconds` histograms.
+
+use super::hist::HistSnapshot;
+
+/// Export ladder bounds in nanoseconds: 2^10 .. 2^34 stepping 4×
+/// (1.024 µs, 4.096 µs, …, ~17.18 s), all internal bucket boundaries.
+pub const LADDER_NS: [u64; 13] = [
+    1 << 10,
+    1 << 12,
+    1 << 14,
+    1 << 16,
+    1 << 18,
+    1 << 20,
+    1 << 22,
+    1 << 24,
+    1 << 26,
+    1 << 28,
+    1 << 30,
+    1 << 32,
+    1 << 34,
+];
+
+/// Seconds label for an `le` bound (no exponent notation — maximally
+/// compatible float text).
+fn le_label(ns: u64) -> String {
+    let s = format!("{:.9}", ns as f64 / 1e9);
+    let trimmed = s.trim_end_matches('0');
+    let trimmed = trimmed.strip_suffix('.').unwrap_or(trimmed);
+    trimmed.to_string()
+}
+
+/// Render one `*_seconds` histogram: cumulative `_bucket` lines over
+/// the ladder, then `+Inf`, `_sum`, `_count`.
+pub fn render_histogram(out: &mut String, name: &str, help: &str, snap: &HistSnapshot) {
+    out.push_str(&format!("# HELP {name} {help}\n"));
+    out.push_str(&format!("# TYPE {name} histogram\n"));
+    for &bound in LADDER_NS.iter() {
+        let cum = snap.cumulative_below(bound);
+        out.push_str(&format!(
+            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+            le_label(bound)
+        ));
+    }
+    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", snap.count));
+    out.push_str(&format!("{name}_sum {:.9}\n", snap.sum as f64 / 1e9));
+    out.push_str(&format!("{name}_count {}\n", snap.count));
+}
+
+/// Render one monotonic counter.
+pub fn render_counter(out: &mut String, name: &str, help: &str, value: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n"));
+    out.push_str(&format!("# TYPE {name} counter\n"));
+    out.push_str(&format!("{name} {value}\n"));
+}
+
+/// Render one labeled counter family.
+pub fn render_counter_family(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    label: &str,
+    series: &[(&str, u64)],
+) {
+    out.push_str(&format!("# HELP {name} {help}\n"));
+    out.push_str(&format!("# TYPE {name} counter\n"));
+    for (val, count) in series {
+        out.push_str(&format!("{name}{{{label}=\"{val}\"}} {count}\n"));
+    }
+}
+
+/// Render one gauge.
+pub fn render_gauge(out: &mut String, name: &str, help: &str, value: u64) {
+    out.push_str(&format!("# HELP {name} {help}\n"));
+    out.push_str(&format!("# TYPE {name} gauge\n"));
+    out.push_str(&format!("{name} {value}\n"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Histogram;
+
+    #[test]
+    fn le_labels_are_plain_decimals() {
+        assert_eq!(le_label(1 << 10), "0.000001024");
+        assert_eq!(le_label(1 << 30), "1.073741824");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_capped_by_count() {
+        let h = Histogram::new();
+        for v in [500u64, 2_000, 2_000_000, 40_000_000_000] {
+            h.record(v);
+        }
+        let mut out = String::new();
+        render_histogram(&mut out, "t_seconds", "test", &h.snapshot());
+        let counts: Vec<u64> = out
+            .lines()
+            .filter(|l| l.starts_with("t_seconds_bucket"))
+            .map(|l| l.rsplit(' ').next().and_then(|v| v.parse().ok()).unwrap_or(0))
+            .collect();
+        assert_eq!(counts.len(), LADDER_NS.len() + 1);
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "not cumulative: {counts:?}");
+        assert_eq!(*counts.last().unwrap(), 4, "+Inf must equal count");
+        // 40 s sample is past the ladder top: only +Inf holds it
+        assert_eq!(counts[LADDER_NS.len() - 1], 3);
+        assert!(out.contains("t_seconds_count 4\n"));
+    }
+}

@@ -1,0 +1,386 @@
+//! Per-request trace spans and the bounded slow-query ring.
+//!
+//! A span is born when a request is parsed (its u64 trace ID is minted
+//! from a process-local counter run through a splitmix64 avalanche),
+//! rides the request through `serve/conn.rs` → `QueryRouter` →
+//! `ArchiveStore` → the engine decode, and accumulates per-phase
+//! timings ([`Phase`]) as `(first_start_ns, total_dur_ns)` offsets
+//! relative to the span start.  Finished spans become fixed-size
+//! [`SpanRecord`]s (no heap fields — the target is a truncated byte
+//! prefix) and are pushed into a [`TraceRing`]: a lock-sharded ring
+//! buffer that **overwrites oldest** when full and **drops on
+//! contention** (`try_lock`), so recording on the reactor thread never
+//! blocks and never allocates.  `GET /trace/slow` sorts the ring's
+//! contents by total duration and returns the N worst spans.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Request phases, in canonical (monotone) order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// HTTP head framing (the `next_request` call that yielded it).
+    Parse = 0,
+    /// Bounded job queue wait (reactor offload only).
+    QueueWait = 1,
+    /// Decoded-plane cache lookups in the store.
+    CacheProbe = 2,
+    /// Engine decode passes for missing planes.
+    Decode = 3,
+    /// Best-effort salvage of quarantined sections.
+    Salvage = 4,
+    /// Response body assembly + meta header.
+    Serialize = 5,
+    /// Socket write (staging to fully flushed).
+    Write = 6,
+}
+
+/// Phase count (the fixed width of span phase arrays).
+pub const N_PHASES: usize = 7;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Parse,
+        Phase::QueueWait,
+        Phase::CacheProbe,
+        Phase::Decode,
+        Phase::Salvage,
+        Phase::Serialize,
+        Phase::Write,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Parse => "parse",
+            Phase::QueueWait => "queue_wait",
+            Phase::CacheProbe => "cache_probe",
+            Phase::Decode => "decode",
+            Phase::Salvage => "salvage",
+            Phase::Serialize => "serialize",
+            Phase::Write => "write",
+        }
+    }
+}
+
+/// Target (request path) bytes kept per span record.
+pub const TARGET_CAP: usize = 48;
+
+/// A finished span — fixed-size, heap-free, `Copy`.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    /// Span total, parse start → last response byte flushed.
+    pub total_ns: u64,
+    pub status: u16,
+    /// Per-phase `(first_start_ns, total_dur_ns)` offsets from span
+    /// start; `(0, 0)` for phases the request never entered.  Durations
+    /// accumulate across re-entries (multi-shard queries probe and
+    /// decode per shard), starts keep the first entry.
+    pub phases: [(u64, u64); N_PHASES],
+    target: [u8; TARGET_CAP],
+    target_len: u8,
+}
+
+impl Default for SpanRecord {
+    fn default() -> Self {
+        SpanRecord {
+            trace_id: 0,
+            total_ns: 0,
+            status: 0,
+            phases: [(0, 0); N_PHASES],
+            target: [0; TARGET_CAP],
+            target_len: 0,
+        }
+    }
+}
+
+impl SpanRecord {
+    /// The recorded request target (truncated to [`TARGET_CAP`] bytes).
+    pub fn target(&self) -> &str {
+        let len = (self.target_len as usize).min(TARGET_CAP);
+        std::str::from_utf8(&self.target[..len]).unwrap_or("")
+    }
+}
+
+/// An in-flight span.  Plain `Copy` data plus an `Instant` — cheap to
+/// move through job queues and connection response slots.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanBuilder {
+    pub trace_id: u64,
+    /// Whether the finished record should enter the ring (the 1-in-N
+    /// sampling decision, made at mint time).
+    pub sampled: bool,
+    pub status: u16,
+    start: Instant,
+    phases: [(u64, u64); N_PHASES],
+    target: [u8; TARGET_CAP],
+    target_len: u8,
+}
+
+impl SpanBuilder {
+    /// A span whose clock started at `start` — pass the instant taken
+    /// *before* the parse call so the parse phase is inside the span.
+    pub fn with_start(trace_id: u64, sampled: bool, start: Instant) -> SpanBuilder {
+        SpanBuilder {
+            trace_id,
+            sampled,
+            status: 0,
+            start,
+            phases: [(u64::MAX, 0); N_PHASES],
+            target: [0; TARGET_CAP],
+            target_len: 0,
+        }
+    }
+
+    pub fn new(trace_id: u64, sampled: bool) -> SpanBuilder {
+        Self::with_start(trace_id, sampled, Instant::now())
+    }
+
+    /// Nanoseconds since span start (the phase-offset clock).
+    #[inline]
+    pub fn mark(&self) -> u64 {
+        self.start.elapsed().as_nanos() as u64
+    }
+
+    /// Account `dur_ns` of `phase` starting at offset `start_ns`.
+    /// Re-entries accumulate duration and keep the first start.
+    #[inline]
+    pub fn add_phase(&mut self, phase: Phase, start_ns: u64, dur_ns: u64) {
+        let slot = &mut self.phases[phase as usize];
+        if slot.0 == u64::MAX {
+            slot.0 = start_ns;
+        }
+        slot.1 += dur_ns;
+    }
+
+    /// Time `f` and charge it to `phase`.
+    #[inline]
+    pub fn time<R>(&mut self, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let t0 = self.mark();
+        let out = f();
+        let t1 = self.mark();
+        self.add_phase(phase, t0, t1.saturating_sub(t0));
+        out
+    }
+
+    /// Record the request target (truncated to [`TARGET_CAP`] bytes on
+    /// a UTF-8 boundary).
+    pub fn set_target(&mut self, target: &str) {
+        let mut end = target.len().min(TARGET_CAP);
+        while end > 0 && !target.is_char_boundary(end) {
+            end -= 1;
+        }
+        self.target[..end].copy_from_slice(&target.as_bytes()[..end]);
+        self.target_len = end as u8;
+    }
+
+    /// Seal the span: total = now, unentered phases normalize to `(0,0)`.
+    pub fn finish(mut self) -> SpanRecord {
+        for slot in self.phases.iter_mut() {
+            if slot.0 == u64::MAX {
+                slot.0 = 0;
+            }
+        }
+        SpanRecord {
+            trace_id: self.trace_id,
+            total_ns: self.mark(),
+            status: self.status,
+            phases: self.phases,
+            target: self.target,
+            target_len: self.target_len,
+        }
+    }
+}
+
+/// Trace-ID mint: a relaxed counter avalanched through splitmix64 so
+/// IDs are unique per process and well-mixed for ring sharding.
+#[derive(Default)]
+pub struct TraceIds {
+    next: AtomicU64,
+}
+
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl TraceIds {
+    pub fn new() -> TraceIds {
+        TraceIds::default()
+    }
+
+    /// Mint the next non-zero trace ID.
+    pub fn mint(&self) -> u64 {
+        let n = self.next.fetch_add(1, Ordering::Relaxed);
+        let id = splitmix64(n);
+        if id == 0 {
+            1
+        } else {
+            id
+        }
+    }
+}
+
+/// One lock shard of the ring: a fixed slab overwritten oldest-first.
+struct RingShard {
+    slots: Vec<SpanRecord>,
+    /// Next slot to (over)write.
+    next: usize,
+    /// Valid records in `slots` (caps at `slots.len()`).
+    len: usize,
+}
+
+/// Bounded lock-sharded ring of finished spans; see the module docs.
+pub struct TraceRing {
+    shards: Vec<Mutex<RingShard>>,
+    /// Shard count is a power of two; this is `shards.len() - 1`.
+    mask: usize,
+    recorded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl TraceRing {
+    /// A ring holding ~`capacity` spans across `shards` lock shards
+    /// (both rounded up to useful minima; shards to a power of two).
+    pub fn new(capacity: usize, shards: usize) -> TraceRing {
+        let shards = shards.max(1).next_power_of_two();
+        let per = capacity.div_ceil(shards).max(1);
+        let shards: Vec<Mutex<RingShard>> = (0..shards)
+            .map(|_| {
+                Mutex::new(RingShard {
+                    slots: vec![SpanRecord::default(); per],
+                    next: 0,
+                    len: 0,
+                })
+            })
+            .collect();
+        let mask = shards.len() - 1;
+        TraceRing {
+            shards,
+            mask,
+            recorded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a finished span.  `try_lock` only: a contended shard
+    /// drops the span (counted) instead of blocking the caller — the
+    /// reactor thread never waits here.
+    pub fn push(&self, rec: SpanRecord) {
+        let idx = (rec.trace_id as usize) & self.mask;
+        let Some(shard) = self.shards.get(idx) else {
+            return;
+        };
+        match shard.try_lock() {
+            Ok(mut g) => {
+                let cap = g.slots.len();
+                let at = g.next;
+                if let Some(slot) = g.slots.get_mut(at) {
+                    *slot = rec;
+                }
+                g.next = (at + 1) % cap;
+                if g.len < cap {
+                    g.len += 1;
+                }
+                self.recorded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// The `n` worst (longest) spans currently resident, sorted by
+    /// total duration descending.  Egress path — takes the shard locks.
+    pub fn slow(&self, n: usize) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> = Vec::new();
+        for shard in &self.shards {
+            if let Ok(g) = shard.lock() {
+                out.extend_from_slice(&g.slots[..g.len.min(g.slots.len())]);
+            }
+        }
+        out.sort_by(|a, b| b.total_ns.cmp(&a.total_ns));
+        out.truncate(n);
+        out
+    }
+
+    /// Spans recorded into the ring so far.
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Spans dropped on shard contention.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let ids = TraceIds::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..1000 {
+            let id = ids.mint();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate trace id");
+        }
+    }
+
+    #[test]
+    fn span_phases_accumulate_and_keep_first_start() {
+        let mut sp = SpanBuilder::new(7, true);
+        sp.add_phase(Phase::Decode, 100, 40);
+        sp.add_phase(Phase::Decode, 500, 60);
+        sp.set_target("/query?dataset=hcci");
+        sp.status = 200;
+        let rec = sp.finish();
+        assert_eq!(rec.phases[Phase::Decode as usize], (100, 100));
+        assert_eq!(rec.phases[Phase::Salvage as usize], (0, 0));
+        assert_eq!(rec.target(), "/query?dataset=hcci");
+        assert_eq!(rec.status, 200);
+    }
+
+    #[test]
+    fn target_truncates_on_char_boundary() {
+        let mut sp = SpanBuilder::new(1, true);
+        let long = format!("/query?dataset={}é", "x".repeat(TARGET_CAP - 16));
+        sp.set_target(&long);
+        let rec = sp.finish();
+        assert!(rec.target().len() <= TARGET_CAP);
+        assert!(rec.target().starts_with("/query?dataset="));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_ranks_by_duration() {
+        let ring = TraceRing::new(4, 1);
+        for i in 0..10u64 {
+            let mut rec = SpanRecord::default();
+            rec.trace_id = i + 1;
+            rec.total_ns = (i + 1) * 1000;
+            ring.push(rec);
+        }
+        assert_eq!(ring.recorded(), 10);
+        let slow = ring.slow(2);
+        assert_eq!(slow.len(), 2);
+        // only the 4 newest survive; worst-first ordering
+        assert_eq!(slow[0].total_ns, 10_000);
+        assert_eq!(slow[1].total_ns, 9_000);
+    }
+
+    #[test]
+    fn contended_shard_drops_instead_of_blocking() {
+        let ring = TraceRing::new(8, 1);
+        let g = ring.shards[0].lock();
+        ring.push(SpanRecord::default());
+        drop(g);
+        assert_eq!(ring.dropped(), 1);
+        assert_eq!(ring.recorded(), 0);
+    }
+}

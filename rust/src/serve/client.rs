@@ -80,6 +80,9 @@ pub struct ClientDecode {
     pub degraded_bound: Option<f64>,
     /// The raw `X-Gbatc-Meta` JSON, for fields not parsed above.
     pub meta_json: String,
+    /// The server's `X-Gbatc-Trace-Id` (16 hex digits), when the server
+    /// has tracing enabled; correlates with `/trace/slow`.
+    pub trace_id: Option<String>,
 }
 
 impl QueryClient {
@@ -227,6 +230,18 @@ impl QueryClient {
         String::from_utf8(resp.body).map_err(|_| Error::protocol("/stats body is not UTF-8"))
     }
 
+    /// Prometheus text exposition from `GET /metrics`.
+    pub fn metrics_text(&self) -> Result<String> {
+        let resp = self.get_ok("/metrics")?;
+        String::from_utf8(resp.body).map_err(|_| Error::protocol("/metrics body is not UTF-8"))
+    }
+
+    /// Raw JSON from `GET /trace/slow?n=N` — the server's worst spans.
+    pub fn trace_slow_json(&self, n: usize) -> Result<String> {
+        let resp = self.get_ok(&format!("/trace/slow?n={n}"))?;
+        String::from_utf8(resp.body).map_err(|_| Error::protocol("/trace/slow body is not UTF-8"))
+    }
+
     /// Run a remote query.  `t0`/`t1` default to the dataset's full time
     /// axis; `species` is the CLI list syntax (names and/or indices,
     /// empty = all).
@@ -248,6 +263,7 @@ impl QueryClient {
             target.push_str(&format!("&species={species}"));
         }
         let resp = self.get_ok(&target)?;
+        let trace_id = resp.header("x-gbatc-trace-id").map(|v| v.to_string());
         let meta = resp
             .header("x-gbatc-meta")
             .ok_or_else(|| Error::protocol("query response lacks the X-Gbatc-Meta header"))?
@@ -291,6 +307,7 @@ impl QueryClient {
             degraded,
             degraded_bound,
             meta_json: meta,
+            trace_id,
         })
     }
 }

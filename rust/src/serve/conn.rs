@@ -23,6 +23,7 @@ use std::net::TcpStream;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::obs::{Phase, SpanBuilder, SpanRecord};
 
 use super::http::HttpParser;
 
@@ -53,7 +54,17 @@ pub struct Conn {
     /// for a recycled slot fails the generation check and is dropped.
     pub generation: u32,
     /// In-order response slots: `None` = response still being computed.
-    queue: VecDeque<Option<Vec<u8>>>,
+    /// A completed slot may carry the request's trace span; it rides the
+    /// queue so its write phase can be closed when the bytes hit the
+    /// wire.
+    queue: VecDeque<Option<(Vec<u8>, Option<SpanBuilder>)>>,
+    /// Spans of staged responses, ordered by wire offset: the span
+    /// finishes once `total_flushed` passes its response's last byte.
+    /// Entries: (wire end offset, span, span-relative staging mark ns).
+    pending_spans: VecDeque<(u64, SpanBuilder, u64)>,
+    /// Cumulative response bytes staged into / drained out of `wbuf`.
+    total_staged: u64,
+    total_flushed: u64,
     /// Sequence id of `queue.front()`.
     head_seq: u64,
     /// Sequence id the next admitted request will get.
@@ -92,6 +103,9 @@ impl Conn {
             parser: HttpParser::new(max_head),
             generation,
             queue: VecDeque::new(),
+            pending_spans: VecDeque::new(),
+            total_staged: 0,
+            total_flushed: 0,
             head_seq: 0,
             next_seq: 0,
             ready_bytes: 0,
@@ -140,6 +154,14 @@ impl Conn {
     /// connection died and its slot was recycled — the generation check
     /// in the server makes that a no-op before it ever reaches here).
     pub fn complete(&mut self, seq: u64, bytes: Vec<u8>) {
+        self.complete_traced(seq, bytes, None);
+    }
+
+    /// [`complete`](Self::complete) carrying the request's trace span.
+    /// The span stays with the response through staging; its `Write`
+    /// phase closes when the last response byte drains to the socket
+    /// (harvest with [`take_finished_spans`](Self::take_finished_spans)).
+    pub fn complete_traced(&mut self, seq: u64, bytes: Vec<u8>, span: Option<SpanBuilder>) {
         if seq < self.head_seq {
             return;
         }
@@ -147,7 +169,7 @@ impl Conn {
         if let Some(slot) = self.queue.get_mut(idx) {
             if slot.is_none() {
                 self.ready_bytes += bytes.len();
-                *slot = Some(bytes);
+                *slot = Some((bytes, span));
                 self.inflight -= 1;
             }
         }
@@ -158,15 +180,37 @@ impl Conn {
     /// that is exactly the in-order guarantee.
     fn stage_ready(&mut self) {
         while let Some(Some(_)) = self.queue.front() {
-            if let Some(Some(bytes)) = self.queue.pop_front() {
+            if let Some(Some((bytes, span))) = self.queue.pop_front() {
                 self.head_seq += 1;
                 self.ready_bytes -= bytes.len();
                 self.wbuf.extend_from_slice(&bytes);
+                self.total_staged += bytes.len() as u64;
+                if let Some(sp) = span {
+                    let staged_at = sp.mark();
+                    self.pending_spans
+                        .push_back((self.total_staged, sp, staged_at));
+                }
             }
         }
         if self.wpos > 0 && self.wpos == self.wbuf.len() {
             self.wbuf.clear();
             self.wpos = 0;
+        }
+    }
+
+    /// Finish spans whose response bytes have fully reached the socket:
+    /// their `Write` phase spans staging → drain.  Call after a flush;
+    /// wait-free (no locks — plain queue pops on the reactor thread).
+    pub fn take_finished_spans(&mut self, out: &mut Vec<SpanRecord>) {
+        while let Some(&(end_off, _, _)) = self.pending_spans.front() {
+            if end_off > self.total_flushed {
+                break;
+            }
+            if let Some((_, mut sp, staged_at)) = self.pending_spans.pop_front() {
+                let now = sp.mark();
+                sp.add_phase(Phase::Write, staged_at, now.saturating_sub(staged_at));
+                out.push(sp.finish());
+            }
         }
     }
 
@@ -178,6 +222,7 @@ impl Conn {
                 Ok(0) => return Err(Error::protocol("peer closed mid-response")),
                 Ok(n) => {
                     self.wpos += n;
+                    self.total_flushed += n as u64;
                     self.stage_ready();
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(WriteOutcome::Blocked),
@@ -264,6 +309,34 @@ mod tests {
         assert_eq!(conn.write_backlog(), 150);
         conn.flush().unwrap();
         assert_eq!(conn.write_backlog(), 0);
+    }
+
+    #[test]
+    fn spans_finish_only_after_their_bytes_drain() {
+        let (server, mut client) = pair();
+        let mut conn = Conn::new(server, 8 * 1024, 0, Instant::now());
+        let a = conn.begin_request();
+        let b = conn.begin_request();
+        let mut sp = SpanBuilder::new(7, true);
+        sp.status = 200;
+        sp.set_target("/query?dataset=hcci");
+        // b completes first (with a span) but is blocked behind a
+        conn.complete_traced(b, b"BB".to_vec(), Some(sp));
+        let mut done = Vec::new();
+        conn.take_finished_spans(&mut done);
+        assert!(done.is_empty(), "span must not finish before its bytes flush");
+        conn.complete(a, b"AA".to_vec());
+        conn.flush().unwrap();
+        conn.take_finished_spans(&mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].trace_id, 7);
+        assert_eq!(done[0].status, 200);
+        assert_eq!(done[0].target(), "/query?dataset=hcci");
+        let write = done[0].phases[Phase::Write as usize];
+        assert!(write.1 <= done[0].total_ns);
+        let mut got = [0u8; 4];
+        client.read_exact(&mut got).unwrap();
+        assert_eq!(&got, b"AABB");
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub const MAX_RESPONSE_HEAD: usize = 64 * 1024;
 /// this shared constant rather than on incidental wording.
 pub const OVERSIZE_MARK: &str = "oversized head:";
 
+/// Response header carrying the request's trace ID (16 hex digits)
+/// when the server has tracing enabled.
+pub const TRACE_ID_HEADER: &str = "X-Gbatc-Trace-Id";
+
 /// A parsed request line + query string + the little header state the
 /// server acts on.
 #[derive(Clone, Debug)]
@@ -57,6 +61,25 @@ impl Request {
             .iter()
             .find(|(k, _)| k == key)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// The request target reassembled from path + query string (trace
+    /// span labels; the parse split them apart).
+    pub fn target(&self) -> String {
+        if self.params.is_empty() {
+            return self.path.clone();
+        }
+        let mut out = String::with_capacity(self.path.len() + 16);
+        out.push_str(&self.path);
+        for (i, (k, v)) in self.params.iter().enumerate() {
+            out.push(if i == 0 { '?' } else { '&' });
+            out.push_str(k);
+            if !v.is_empty() {
+                out.push('=');
+                out.push_str(v);
+            }
+        }
+        out
     }
 }
 

@@ -21,7 +21,9 @@
 //!   pool; off Linux it degrades to a blocking thread pool speaking
 //!   the identical protocol.  Endpoints: `GET /datasets`,
 //!   `GET /query?dataset=..&t0=..&t1=..&species=..` (binary f32 body +
-//!   `X-Gbatc-Meta` JSON header), `GET /stats`.
+//!   `X-Gbatc-Meta` JSON header), `GET /stats`, `GET /metrics`
+//!   (Prometheus text), `GET /trace/slow` (worst spans, per-phase
+//!   breakdowns; see [`crate::obs`]).
 //! * [`client`] — [`QueryClient`]: the small blocking keep-alive client
 //!   behind `gbatc query` and the loopback tests; responses decode to
 //!   [`ClientDecode`] with bytes bit-identical to a local
@@ -42,4 +44,4 @@ pub mod server;
 
 pub use client::{ClientDecode, QueryClient};
 pub use router::{QueryRouter, RouterConfig};
-pub use server::{QueryServer, ServeStats, ServerConfig};
+pub use server::{QueryServer, ServeObs, ServeStats, ServerConfig};

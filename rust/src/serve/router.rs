@@ -26,7 +26,8 @@ use std::sync::{Arc, RwLock};
 use crate::api::Query;
 use crate::coordinator::engine::RangeDecode;
 use crate::error::{Error, Result};
-use crate::store::{ArchiveStore, DatasetInfo, StoreConfig, StoreStats};
+use crate::obs::SpanBuilder;
+use crate::store::{ArchiveStore, DatasetInfo, StoreConfig, StoreObsSnapshot, StoreStats};
 
 /// Knobs of a [`QueryRouter`].
 #[derive(Clone, Debug)]
@@ -239,6 +240,18 @@ impl QueryRouter {
         self.replicas[self.route_of(dataset)].query(dataset, q)
     }
 
+    /// [`query`](Self::query) with phase attribution into `span`
+    /// (cache-probe / decode / salvage — see
+    /// [`ArchiveStore::query_traced`]).
+    pub fn query_traced(
+        &self,
+        dataset: &str,
+        q: &Query,
+        span: Option<&mut SpanBuilder>,
+    ) -> Result<RangeDecode> {
+        self.replicas[self.route_of(dataset)].query_traced(dataset, q, span)
+    }
+
     /// Side-effect-free warmth probe on the dataset's replica.
     pub fn is_warm(&self, dataset: &str, q: &Query) -> bool {
         self.replicas[self.route_of(dataset)].is_warm(dataset, q)
@@ -263,6 +276,16 @@ impl QueryRouter {
     /// Per-replica counter snapshots, in replica order.
     pub fn replica_stats(&self) -> Vec<StoreStats> {
         self.replicas.iter().map(|r| r.stats()).collect()
+    }
+
+    /// Store-side histograms merged across replicas (decode time,
+    /// cache-probe time) — the `/metrics` store section.
+    pub fn obs_snapshot(&self) -> StoreObsSnapshot {
+        let mut agg = StoreObsSnapshot::default();
+        for r in &self.replicas {
+            agg.merge(&r.obs().snapshot());
+        }
+        agg
     }
 
     /// Aggregate snapshot: counters summed across replicas, dataset

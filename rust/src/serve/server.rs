@@ -55,6 +55,7 @@ use std::time::{Duration, Instant};
 
 use crate::api::{Query, SpeciesSel};
 use crate::error::{Error, Result};
+use crate::obs::{prom, HistSnapshot, Histogram, Phase, SpanBuilder, SpanRecord, TraceIds, TraceRing};
 use crate::serve::http::{self, json_error, json_escape, json_usize_list, HttpParser, Request};
 #[cfg(target_os = "linux")]
 use crate::serve::reactor::{Reactor, Waker};
@@ -63,6 +64,8 @@ use crate::store::ArchiveStore;
 
 const JSON: &str = "application/json";
 const BINARY: &str = "application/octet-stream";
+/// Prometheus text exposition format 0.0.4 (`GET /metrics`).
+const PROM: &str = "text/plain; version=0.0.4";
 
 /// Knobs of a [`QueryServer`].
 #[derive(Clone, Copy, Debug)]
@@ -97,6 +100,26 @@ pub struct ServerConfig {
     /// Cache-warm `/query` responses up to this many body bytes are
     /// served inline on the reactor thread (zero handoff).
     pub inline_warm_bytes: usize,
+    /// Trace sampling: 1-in-N requests get a span admitted to the
+    /// slow-query ring (`/trace/slow`); every request still records
+    /// into the latency histograms and carries the `X-Gbatc-Trace-Id`
+    /// header.  `0` disables tracing entirely (no spans, no header).
+    /// Default honours `GBATC_NO_TRACE=1` (→ 0) then
+    /// `GBATC_TRACE_SAMPLE=N`, else 16.
+    pub trace_sample: u32,
+}
+
+fn default_trace_sample() -> u32 {
+    let no_trace = std::env::var("GBATC_NO_TRACE")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false);
+    if no_trace {
+        return 0;
+    }
+    std::env::var("GBATC_TRACE_SAMPLE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(16)
 }
 
 impl Default for ServerConfig {
@@ -112,6 +135,7 @@ impl Default for ServerConfig {
             write_buf_bytes: 4 << 20,
             read_buf_bytes: 1 << 20,
             inline_warm_bytes: 4 << 20,
+            trace_sample: default_trace_sample(),
         }
     }
 }
@@ -144,6 +168,9 @@ pub struct ServeStats {
     pub pipelined: u64,
     /// Connections currently open (gauge; `0` after shutdown).
     pub active_conns: u64,
+    /// Response bytes written to the wire (status line + headers +
+    /// body), bumped exactly once per produced response in both modes.
+    pub bytes_out: u64,
 }
 
 impl std::fmt::Display for ServeStats {
@@ -151,7 +178,8 @@ impl std::fmt::Display for ServeStats {
         write!(
             f,
             "accepted {} | served {} | 4xx {} | 5xx {} | busy-rejected {} | conn-cap {} | \
-             io errors {} | keep-alive reuse {} | pipelined {} | reaped idle {} | active {}",
+             io errors {} | keep-alive reuse {} | pipelined {} | reaped idle {} | active {} | \
+             bytes out {}",
             self.accepted,
             self.served,
             self.client_errors,
@@ -162,7 +190,8 @@ impl std::fmt::Display for ServeStats {
             self.keepalive_reuse,
             self.pipelined,
             self.reaped_idle,
-            self.active_conns
+            self.active_conns,
+            self.bytes_out
         )
     }
 }
@@ -180,6 +209,7 @@ struct Counters {
     reaped_idle: AtomicU64,
     pipelined: AtomicU64,
     active_conns: AtomicU64,
+    bytes_out: AtomicU64,
 }
 
 impl Counters {
@@ -196,8 +226,99 @@ impl Counters {
             reaped_idle: self.reaped_idle.load(Ordering::Relaxed),
             pipelined: self.pipelined.load(Ordering::Relaxed),
             active_conns: self.active_conns.load(Ordering::Relaxed),
+            bytes_out: self.bytes_out.load(Ordering::Relaxed),
         }
     }
+}
+
+/// Server-side observability shared by both modes: latency histograms
+/// (always recording), the trace-ID mint, the 1-in-N ring-sampling
+/// decision, and the bounded slow-query ring behind `/trace/slow`.
+pub struct ServeObs {
+    /// Request latency, parse start → response produced.  In the event
+    /// loop this includes queue wait for offloaded decodes, so the two
+    /// modes measure the same client-visible interval.
+    query_ns: Histogram,
+    /// Decode-job queue wait at worker dequeue (event mode; the pool
+    /// fallback has no decode queue and records nothing here).
+    queue_wait_ns: Histogram,
+    /// Slow-span ring: bounded, lock-sharded, overwrite-oldest.
+    ring: TraceRing,
+    ids: TraceIds,
+    /// 1-in-N ring sampling; `0` disables tracing.
+    sample: u32,
+    sample_seq: AtomicU64,
+}
+
+impl ServeObs {
+    fn new(sample: u32) -> ServeObs {
+        ServeObs {
+            query_ns: Histogram::new(),
+            queue_wait_ns: Histogram::new(),
+            ring: TraceRing::new(256, 8),
+            ids: TraceIds::new(),
+            sample,
+            sample_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether tracing is on (spans minted, trace header attached).
+    pub fn tracing_enabled(&self) -> bool {
+        self.sample > 0
+    }
+
+    /// Mint a span for a request whose parse began at `start` and took
+    /// `parse_ns`.  `None` when tracing is disabled — the histograms
+    /// record regardless, via [`count_response`].
+    fn begin_span(&self, start: Instant, parse_ns: u64) -> Option<SpanBuilder> {
+        if self.sample == 0 {
+            return None;
+        }
+        let n = self.sample_seq.fetch_add(1, Ordering::Relaxed);
+        let sampled = n % self.sample as u64 == 0;
+        let mut sp = SpanBuilder::with_start(self.ids.mint(), sampled, start);
+        sp.add_phase(Phase::Parse, 0, parse_ns);
+        Some(sp)
+    }
+
+    /// Request-latency snapshot (benches gate p99 off this).
+    pub fn query_latency(&self) -> HistSnapshot {
+        self.query_ns.snapshot()
+    }
+
+    /// Queue-wait snapshot (zero in the pool fallback).
+    pub fn queue_wait(&self) -> HistSnapshot {
+        self.queue_wait_ns.snapshot()
+    }
+
+    /// The `n` slowest spans currently in the ring, worst first.
+    pub fn slow_spans(&self, n: usize) -> Vec<SpanRecord> {
+        self.ring.slow(n)
+    }
+
+    /// `(recorded, dropped)` ring admission counters.
+    pub fn span_counts(&self) -> (u64, u64) {
+        (self.ring.recorded(), self.ring.dropped())
+    }
+}
+
+/// Account one produced response — status-class counter, wire bytes,
+/// and a query-latency sample — exactly once per response, at every
+/// routed and parse-error site in both modes.  This is what keeps the
+/// modes counter-identical and upholds the invariant
+/// `query_ns.count == served + client_errors + server_errors`.
+fn count_response(
+    counters: &Counters,
+    obs: &ServeObs,
+    status: u16,
+    wire_bytes: usize,
+    total_ns: u64,
+) {
+    count_status(counters, status);
+    counters
+        .bytes_out
+        .fetch_add(wire_bytes as u64, Ordering::Relaxed);
+    obs.query_ns.record(total_ns);
 }
 
 /// Bump the status-class counter exactly once per produced response —
@@ -227,6 +348,7 @@ pub struct QueryServer {
     workers: Vec<JoinHandle<()>>,
     counters: Arc<Counters>,
     router: Arc<QueryRouter>,
+    obs: Arc<ServeObs>,
     event_driven: bool,
 }
 
@@ -253,17 +375,18 @@ impl QueryServer {
             .map_err(|e| Error::io_ctx("resolving listener address", e))?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let counters = Arc::new(Counters::default());
+        let obs = Arc::new(ServeObs::new(cfg.trace_sample));
         #[cfg(target_os = "linux")]
         {
             if !epoll_disabled() {
                 if let (Ok(reactor), Ok(waker)) = (Reactor::new(), Waker::new()) {
                     return event::start(
-                        listener, local, reactor, waker, router, counters, shutdown, cfg,
+                        listener, local, reactor, waker, router, counters, obs, shutdown, cfg,
                     );
                 }
             }
         }
-        Self::start_pool(listener, local, router, counters, shutdown, cfg)
+        Self::start_pool(listener, local, router, counters, obs, shutdown, cfg)
     }
 
     /// Blocking thread-pool fallback (also the only mode off Linux).
@@ -272,6 +395,7 @@ impl QueryServer {
         addr: SocketAddr,
         router: Arc<QueryRouter>,
         counters: Arc<Counters>,
+        obs: Arc<ServeObs>,
         shutdown: Arc<AtomicBool>,
         cfg: ServerConfig,
     ) -> Result<QueryServer> {
@@ -282,10 +406,11 @@ impl QueryServer {
             let rx = Arc::clone(&rx);
             let router = Arc::clone(&router);
             let counters = Arc::clone(&counters);
+            let obs = Arc::clone(&obs);
             let shutdown = Arc::clone(&shutdown);
             let handle = std::thread::Builder::new()
                 .name(format!("gbatc-serve-{i}"))
-                .spawn(move || pool_worker_loop(rx, router, counters, cfg, shutdown))
+                .spawn(move || pool_worker_loop(rx, router, counters, obs, cfg, shutdown))
                 .map_err(|e| Error::io_ctx("spawning server worker", e))?;
             workers.push(handle);
         }
@@ -304,6 +429,7 @@ impl QueryServer {
             workers,
             counters,
             router,
+            obs,
             event_driven: false,
         })
     }
@@ -327,6 +453,11 @@ impl QueryServer {
     /// Counter snapshot (also served at `/stats`).
     pub fn stats(&self) -> ServeStats {
         self.counters.snapshot()
+    }
+
+    /// Server-side observability: latency histograms, slow-span ring.
+    pub fn obs(&self) -> &ServeObs {
+        &self.obs
     }
 
     /// Graceful shutdown: stop accepting, finish every admitted
@@ -389,14 +520,19 @@ fn accept_loop(
             Ok(()) => {}
             Err(TrySendError::Full(mut conn)) => {
                 counters.rejected_queue_full.fetch_add(1, Ordering::Relaxed);
-                let _ = http::write_response(
-                    &mut conn,
+                let bytes = http::serialize_response(
                     503,
                     JSON,
                     &[],
                     json_error("request queue full, retry later").as_bytes(),
                     false,
                 );
+                // a pre-parse rejection, not a routed response: bytes
+                // are accounted but no status class / latency sample
+                counters
+                    .bytes_out
+                    .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                let _ = conn.write_all(&bytes);
             }
             Err(TrySendError::Disconnected(_)) => break,
         }
@@ -408,6 +544,7 @@ fn pool_worker_loop(
     rx: Arc<Mutex<Receiver<TcpStream>>>,
     router: Arc<QueryRouter>,
     counters: Arc<Counters>,
+    obs: Arc<ServeObs>,
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
 ) {
@@ -425,7 +562,7 @@ fn pool_worker_loop(
             Err(_) => break, // accept loop gone and queue drained
         };
         counters.active_conns.fetch_add(1, Ordering::Relaxed);
-        serve_pool_conn(&mut conn, &router, &counters, &cfg, &shutdown);
+        serve_pool_conn(&mut conn, &router, &counters, &obs, &cfg, &shutdown);
         counters.active_conns.fetch_sub(1, Ordering::Relaxed);
     }
 }
@@ -439,6 +576,7 @@ fn serve_pool_conn(
     conn: &mut TcpStream,
     router: &QueryRouter,
     counters: &Counters,
+    obs: &ServeObs,
     cfg: &ServerConfig,
     shutdown: &AtomicBool,
 ) {
@@ -452,7 +590,10 @@ fn serve_pool_conn(
     loop {
         // answer everything already parseable before reading more
         loop {
-            match parser.next_request() {
+            let t_parse = Instant::now();
+            let parsed = parser.next_request();
+            let parse_ns = t_parse.elapsed().as_nanos() as u64;
+            match parsed {
                 Ok(Some(req)) => {
                     nreq += 1;
                     if nreq > 1 {
@@ -462,16 +603,40 @@ fn serve_pool_conn(
                         counters.pipelined.fetch_add(1, Ordering::Relaxed);
                     }
                     let keep = !req.close && !shutdown.load(Ordering::SeqCst);
+                    let mut span = obs.begin_span(t_parse, parse_ns);
+                    if let Some(sp) = span.as_mut() {
+                        sp.set_target(&req.target());
+                    }
                     let (status, content_type, extra, body) =
-                        route(&req, router, counters, cfg);
-                    count_status(counters, status);
+                        route(&req, router, counters, cfg, obs, span.as_mut());
+                    if let Some(sp) = span.as_mut() {
+                        sp.status = status;
+                    }
                     let headers: Vec<(&str, &str)> =
                         extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
                     let bytes =
                         http::serialize_response(status, content_type, &headers, &body, keep);
+                    count_response(
+                        counters,
+                        obs,
+                        status,
+                        bytes.len(),
+                        t_parse.elapsed().as_nanos() as u64,
+                    );
+                    let t_write = match span.as_ref() {
+                        Some(sp) => sp.mark(),
+                        None => 0,
+                    };
                     if conn.write_all(&bytes).and_then(|_| conn.flush()).is_err() {
                         counters.io_errors.fetch_add(1, Ordering::Relaxed);
                         return;
+                    }
+                    if let Some(mut sp) = span {
+                        let end = sp.mark();
+                        sp.add_phase(Phase::Write, t_write, end.saturating_sub(t_write));
+                        if sp.sampled {
+                            obs.ring.push(sp.finish());
+                        }
                     }
                     last_activity = Instant::now();
                     if !keep {
@@ -483,22 +648,20 @@ fn serve_pool_conn(
                 }
                 Ok(None) => break,
                 Err(Error::Protocol(msg)) => {
-                    counters.client_errors.fetch_add(1, Ordering::Relaxed);
                     let status = if msg.starts_with(http::OVERSIZE_MARK) {
                         431
                     } else {
                         400
                     };
-                    if http::write_response(
-                        conn,
+                    let bytes = http::serialize_response(
                         status,
                         JSON,
                         &[],
                         json_error(&msg).as_bytes(),
                         false,
-                    )
-                    .is_err()
-                    {
+                    );
+                    count_response(counters, obs, status, bytes.len(), parse_ns);
+                    if conn.write_all(&bytes).and_then(|_| conn.flush()).is_err() {
                         counters.io_errors.fetch_add(1, Ordering::Relaxed);
                     }
                     // the stream can't be re-synchronized; drain what the
@@ -562,34 +725,65 @@ fn drain(conn: &mut TcpStream) {
 
 type Routed = (u16, &'static str, Vec<(String, String)>, Vec<u8>);
 
-fn route(req: &Request, router: &QueryRouter, counters: &Counters, cfg: &ServerConfig) -> Routed {
-    if req.method != "GET" {
-        return (
+fn route(
+    req: &Request,
+    router: &QueryRouter,
+    counters: &Counters,
+    cfg: &ServerConfig,
+    obs: &ServeObs,
+    mut span: Option<&mut SpanBuilder>,
+) -> Routed {
+    let trace_id = span.as_ref().map(|sp| sp.trace_id);
+    let mut routed: Routed = if req.method != "GET" {
+        (
             405,
             JSON,
             Vec::new(),
             json_error("only GET is supported").into_bytes(),
-        );
+        )
+    } else {
+        match req.path.as_str() {
+            "/datasets" => (200, JSON, Vec::new(), datasets_json(router).into_bytes()),
+            "/stats" => (
+                200,
+                JSON,
+                Vec::new(),
+                stats_json(router, counters).into_bytes(),
+            ),
+            "/metrics" => (
+                200,
+                PROM,
+                Vec::new(),
+                metrics_text(router, counters, obs).into_bytes(),
+            ),
+            "/trace/slow" => {
+                let n = req
+                    .param("n")
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .unwrap_or(16)
+                    .min(256);
+                (200, JSON, Vec::new(), trace_slow_json(obs, n).into_bytes())
+            }
+            "/query" => handle_query(req, router, cfg.max_response_bytes, span.as_deref_mut()),
+            other => (
+                404,
+                JSON,
+                Vec::new(),
+                json_error(&format!(
+                    "no endpoint `{other}` (try /datasets, /query, /stats, /metrics, /trace/slow)"
+                ))
+                .into_bytes(),
+            ),
+        }
+    };
+    // every routed response advertises its trace ID when tracing is on,
+    // sampled into the ring or not — the client can always correlate
+    if let Some(id) = trace_id {
+        routed
+            .2
+            .push((http::TRACE_ID_HEADER.to_string(), format!("{id:016x}")));
     }
-    match req.path.as_str() {
-        "/datasets" => (200, JSON, Vec::new(), datasets_json(router).into_bytes()),
-        "/stats" => (
-            200,
-            JSON,
-            Vec::new(),
-            stats_json(router, counters).into_bytes(),
-        ),
-        "/query" => handle_query(req, router, cfg.max_response_bytes),
-        other => (
-            404,
-            JSON,
-            Vec::new(),
-            json_error(&format!(
-                "no endpoint `{other}` (try /datasets, /query, /stats)"
-            ))
-            .into_bytes(),
-        ),
-    }
+    routed
 }
 
 fn parse_opt_usize(req: &Request, key: &str) -> Result<Option<usize>> {
@@ -633,7 +827,12 @@ fn query_plan(req: &Request, router: &QueryRouter) -> Option<(String, Query, usi
     ))
 }
 
-fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) -> Routed {
+fn handle_query(
+    req: &Request,
+    router: &QueryRouter,
+    max_response_bytes: usize,
+    mut span: Option<&mut SpanBuilder>,
+) -> Routed {
     let bad = |msg: &str| (400, JSON, Vec::new(), json_error(msg).into_bytes());
     let dataset = match req.param("dataset") {
         Some(d) if !d.is_empty() => d,
@@ -679,7 +878,7 @@ fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) 
         time: t0..t1,
         species,
     };
-    match router.query(dataset, &q) {
+    match router.query_traced(dataset, &q, span.as_deref_mut()) {
         Ok(dec) => {
             // strict clients would rather fail than read salvaged data
             if req.strict && !dec.degraded.is_empty() {
@@ -695,6 +894,7 @@ fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) 
                     .into_bytes(),
                 );
             }
+            let t_ser = Instant::now();
             let mut meta = format!(
                 "{{\"dataset\":\"{}\",\"t0\":{},\"nt\":{},\"ny\":{},\"nx\":{},\"species\":{},\
                  \"nrmse_target\":{:e},\"pressure\":{:e}}}",
@@ -730,6 +930,11 @@ fn handle_query(req: &Request, router: &QueryRouter, max_response_bytes: usize) 
             let mut body = Vec::with_capacity(dec.mass.len() * 4);
             for v in &dec.mass {
                 body.extend_from_slice(&v.to_le_bytes());
+            }
+            if let Some(sp) = span {
+                let ser_ns = t_ser.elapsed().as_nanos() as u64;
+                let end = sp.mark();
+                sp.add_phase(Phase::Serialize, end.saturating_sub(ser_ns), ser_ns);
             }
             (200, BINARY, vec![("X-Gbatc-Meta".to_string(), meta)], body)
         }
@@ -783,7 +988,7 @@ fn stats_json(router: &QueryRouter, counters: &Counters) -> String {
          \"server\":{{\"accepted\":{},\"served\":{},\"client_errors\":{},\
          \"server_errors\":{},\"rejected_queue_full\":{},\"io_errors\":{},\
          \"rejected_conn_cap\":{},\"keepalive_reuse\":{},\"reaped_idle\":{},\
-         \"pipelined\":{},\"active_conns\":{}}},\
+         \"pipelined\":{},\"active_conns\":{},\"bytes_out\":{}}},\
          \"replicas\":[",
         st.queries,
         st.decoded_sections,
@@ -807,7 +1012,8 @@ fn stats_json(router: &QueryRouter, counters: &Counters) -> String {
         sv.keepalive_reuse,
         sv.reaped_idle,
         sv.pipelined,
-        sv.active_conns
+        sv.active_conns,
+        sv.bytes_out
     );
     for (i, r) in router.replica_stats().iter().enumerate() {
         if i > 0 {
@@ -842,6 +1048,131 @@ fn stats_json(router: &QueryRouter, counters: &Counters) -> String {
     out
 }
 
+/// `GET /metrics` — Prometheus text exposition format 0.0.4.
+fn metrics_text(router: &QueryRouter, counters: &Counters, obs: &ServeObs) -> String {
+    let sv = counters.snapshot();
+    let st = router.stats();
+    let store = router.obs_snapshot();
+    let (recorded, dropped) = obs.span_counts();
+    let mut out = String::with_capacity(4096);
+    prom::render_histogram(
+        &mut out,
+        "gbatc_query_seconds",
+        "Request latency, parse start to response produced",
+        &obs.query_latency(),
+    );
+    prom::render_histogram(
+        &mut out,
+        "gbatc_queue_wait_seconds",
+        "Decode-job queue wait at worker dequeue (event mode)",
+        &obs.queue_wait(),
+    );
+    prom::render_histogram(
+        &mut out,
+        "gbatc_decode_seconds",
+        "Engine decode passes inside the store",
+        &store.decode_ns,
+    );
+    prom::render_histogram(
+        &mut out,
+        "gbatc_cache_probe_seconds",
+        "Per-query section-cache probe time",
+        &store.probe_ns,
+    );
+    prom::render_counter_family(
+        &mut out,
+        "gbatc_responses_total",
+        "Responses produced, by status class",
+        "class",
+        &[
+            ("2xx", sv.served),
+            ("4xx", sv.client_errors),
+            ("5xx", sv.server_errors),
+        ],
+    );
+    prom::render_counter(
+        &mut out,
+        "gbatc_bytes_out_total",
+        "Response bytes written to the wire",
+        sv.bytes_out,
+    );
+    prom::render_counter(
+        &mut out,
+        "gbatc_connections_accepted_total",
+        "Connections accepted",
+        sv.accepted,
+    );
+    prom::render_counter_family(
+        &mut out,
+        "gbatc_rejections_total",
+        "Requests or connections refused with 503",
+        "reason",
+        &[
+            ("queue_full", sv.rejected_queue_full),
+            ("conn_cap", sv.rejected_conn_cap),
+        ],
+    );
+    prom::render_counter_family(
+        &mut out,
+        "gbatc_cache_lookups_total",
+        "Section-cache lookups, by outcome",
+        "outcome",
+        &[("hit", st.cache.hits), ("miss", st.cache.misses)],
+    );
+    prom::render_counter_family(
+        &mut out,
+        "gbatc_trace_spans_total",
+        "Trace spans offered to the slow-query ring",
+        "outcome",
+        &[("recorded", recorded), ("dropped", dropped)],
+    );
+    prom::render_gauge(
+        &mut out,
+        "gbatc_active_connections",
+        "Connections currently open",
+        sv.active_conns,
+    );
+    out
+}
+
+/// `GET /trace/slow` — the `n` worst spans with per-phase breakdowns.
+fn trace_slow_json(obs: &ServeObs, n: usize) -> String {
+    let spans = obs.slow_spans(n);
+    let (recorded, dropped) = obs.span_counts();
+    let mut out = format!("{{\"recorded\":{recorded},\"dropped\":{dropped},\"spans\":[");
+    for (i, sp) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"trace_id\":\"{:016x}\",\"target\":\"{}\",\"status\":{},\"total_ns\":{},\
+             \"phases\":{{",
+            sp.trace_id,
+            json_escape(sp.target()),
+            sp.status,
+            sp.total_ns
+        ));
+        let mut first = true;
+        for ph in Phase::ALL {
+            let (start, dur) = sp.phases[ph as usize];
+            if start == 0 && dur == 0 {
+                continue; // phase never entered
+            }
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\"{}\":{{\"start_ns\":{start},\"dur_ns\":{dur}}}",
+                ph.name()
+            ));
+        }
+        out.push_str("}}");
+    }
+    out.push_str("]}");
+    out
+}
+
 // ---- event-driven implementation (Linux) -----------------------------
 
 #[cfg(target_os = "linux")]
@@ -856,12 +1187,13 @@ mod event {
     use std::time::Instant;
 
     use crate::error::{Error, Result};
+    use crate::obs::{Phase, SpanBuilder, SpanRecord};
     use crate::serve::conn::{Conn, ReadOutcome};
     use crate::serve::http::{self, json_error, Request};
     use crate::serve::reactor::{Event, Reactor, Waker};
     use crate::serve::router::QueryRouter;
 
-    use super::{count_status, route, Counters, QueryServer, ServerConfig, JSON};
+    use super::{count_response, route, Counters, QueryServer, ServeObs, ServerConfig, JSON};
 
     /// Reserved tokens: real connection tokens are `slot | gen << 32`
     /// with `slot < max_conns`, so they can never collide with these.
@@ -886,6 +1218,12 @@ mod event {
         seq: u64,
         keep_alive: bool,
         req: Request,
+        /// Parse start on the reactor — the latency histogram measures
+        /// from here, so queue wait is part of the client-visible time.
+        t0: Instant,
+        /// Enqueue instant; worker dequeue minus this is queue wait.
+        enqueued: Instant,
+        span: Option<SpanBuilder>,
     }
 
     /// One serialized response on its way back to the reactor.
@@ -893,6 +1231,8 @@ mod event {
         token: u64,
         seq: u64,
         bytes: Vec<u8>,
+        /// Sampled span riding home to finish after its bytes flush.
+        span: Option<SpanBuilder>,
     }
 
     /// Build the reactor thread + decode workers and hand back the
@@ -905,6 +1245,7 @@ mod event {
         waker: Waker,
         router: Arc<QueryRouter>,
         counters: Arc<Counters>,
+        obs: Arc<ServeObs>,
         shutdown: Arc<AtomicBool>,
         cfg: ServerConfig,
     ) -> Result<QueryServer> {
@@ -924,11 +1265,12 @@ mod event {
             let jobs_rx = Arc::clone(&jobs_rx);
             let router = Arc::clone(&router);
             let counters = Arc::clone(&counters);
+            let obs = Arc::clone(&obs);
             let done = Arc::clone(&done);
             let waker = Arc::clone(&waker);
             let handle = std::thread::Builder::new()
                 .name(format!("gbatc-serve-{i}"))
-                .spawn(move || decode_worker(jobs_rx, router, counters, cfg, done, waker))
+                .spawn(move || decode_worker(jobs_rx, router, counters, obs, cfg, done, waker))
                 .map_err(|e| Error::io_ctx("spawning decode worker", e))?;
             workers.push(handle);
         }
@@ -939,6 +1281,7 @@ mod event {
             listener,
             router: Arc::clone(&router),
             counters: Arc::clone(&counters),
+            obs: Arc::clone(&obs),
             cfg,
             jobs: jobs_tx,
             done,
@@ -951,6 +1294,7 @@ mod event {
             closing: false,
             meter_parked: Vec::new(),
             scratch: vec![0u8; 16 * 1024],
+            span_scratch: Vec::new(),
         };
         let accept = {
             let shutdown = Arc::clone(&shutdown);
@@ -966,14 +1310,17 @@ mod event {
             workers,
             counters,
             router,
+            obs,
             event_driven: true,
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn decode_worker(
         rx: Arc<Mutex<Receiver<Job>>>,
         router: Arc<QueryRouter>,
         counters: Arc<Counters>,
+        obs: Arc<ServeObs>,
         cfg: ServerConfig,
         done: Arc<Mutex<VecDeque<Done>>>,
         waker: Arc<Waker>,
@@ -987,12 +1334,28 @@ mod event {
                 };
                 guard.recv()
             };
-            let Ok(job) = job else { break }; // reactor gone, queue drained
-            let (status, content_type, extra, body) = route(&job.req, &router, &counters, &cfg);
-            count_status(&counters, status);
+            let Ok(mut job) = job else { break }; // reactor gone, queue drained
+            let wait_ns = job.enqueued.elapsed().as_nanos() as u64;
+            obs.queue_wait_ns.record(wait_ns);
+            if let Some(sp) = job.span.as_mut() {
+                let end = sp.mark();
+                sp.add_phase(Phase::QueueWait, end.saturating_sub(wait_ns), wait_ns);
+            }
+            let (status, content_type, extra, body) =
+                route(&job.req, &router, &counters, &cfg, &obs, job.span.as_mut());
+            if let Some(sp) = job.span.as_mut() {
+                sp.status = status;
+            }
             let headers: Vec<(&str, &str)> =
                 extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
             let bytes = http::serialize_response(status, content_type, &headers, &body, job.keep_alive);
+            count_response(
+                &counters,
+                &obs,
+                status,
+                bytes.len(),
+                job.t0.elapsed().as_nanos() as u64,
+            );
             {
                 let mut guard = match done.lock() {
                     Ok(g) => g,
@@ -1002,6 +1365,7 @@ mod event {
                     token: job.token,
                     seq: job.seq,
                     bytes,
+                    span: job.span.filter(|sp| sp.sampled),
                 });
             }
             waker.wake();
@@ -1014,6 +1378,7 @@ mod event {
         listener: TcpListener,
         router: Arc<QueryRouter>,
         counters: Arc<Counters>,
+        obs: Arc<ServeObs>,
         cfg: ServerConfig,
         jobs: SyncSender<Job>,
         done: Arc<Mutex<VecDeque<Done>>>,
@@ -1030,6 +1395,8 @@ mod event {
         /// meter; resumed when it drops below the cap.
         meter_parked: Vec<u64>,
         scratch: Vec<u8>,
+        /// Reusable buffer for harvesting flushed spans off a conn.
+        span_scratch: Vec<SpanRecord>,
     }
 
     impl EventLoop {
@@ -1105,15 +1472,19 @@ mod event {
                     self.counters.rejected_conn_cap.fetch_add(1, Ordering::Relaxed);
                     let mut s = stream;
                     let _ = s.set_nodelay(true);
-                    // fresh socket, empty send buffer: this tiny write
-                    // won't block meaningfully
-                    let _ = s.write_all(&http::serialize_response(
+                    let bytes = http::serialize_response(
                         503,
                         JSON,
                         &[],
                         json_error("connection limit reached, retry later").as_bytes(),
                         false,
-                    ));
+                    );
+                    self.counters
+                        .bytes_out
+                        .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                    // fresh socket, empty send buffer: this tiny write
+                    // won't block meaningfully
+                    let _ = s.write_all(&bytes);
                     continue;
                 }
                 let _ = stream.set_nodelay(true);
@@ -1198,7 +1569,10 @@ mod event {
                 {
                     break;
                 }
-                match conn.parser.next_request() {
+                let t_parse = Instant::now();
+                let parsed = conn.parser.next_request();
+                let parse_ns = t_parse.elapsed().as_nanos() as u64;
+                match parsed {
                     Ok(Some(req)) => {
                         activity = true;
                         if req.pipelined {
@@ -1212,28 +1586,30 @@ mod event {
                         if req.close || self.closing {
                             conn.close_after = true;
                         }
-                        self.dispatch(token, conn, seq, req, keep_alive);
+                        let mut span = self.obs.begin_span(t_parse, parse_ns);
+                        if let Some(sp) = span.as_mut() {
+                            sp.set_target(&req.target());
+                        }
+                        self.dispatch(token, conn, seq, req, keep_alive, t_parse, span);
                     }
                     Ok(None) => break,
                     Err(Error::Protocol(msg)) => {
                         activity = true;
-                        self.counters.client_errors.fetch_add(1, Ordering::Relaxed);
                         let status = if msg.starts_with(http::OVERSIZE_MARK) {
                             431
                         } else {
                             400
                         };
                         let seq = conn.begin_request();
-                        conn.complete(
-                            seq,
-                            http::serialize_response(
-                                status,
-                                JSON,
-                                &[],
-                                json_error(&msg).as_bytes(),
-                                false,
-                            ),
+                        let bytes = http::serialize_response(
+                            status,
+                            JSON,
+                            &[],
+                            json_error(&msg).as_bytes(),
+                            false,
                         );
+                        count_response(&self.counters, &self.obs, status, bytes.len(), parse_ns);
+                        conn.complete(seq, bytes);
                         conn.close_after = true;
                         break;
                     }
@@ -1260,6 +1636,13 @@ mod event {
                     return false;
                 }
             }
+            // spans whose responses have fully drained finish here, on
+            // the reactor: a bounded pop loop plus a try_lock ring push
+            self.span_scratch.clear();
+            conn.take_finished_spans(&mut self.span_scratch);
+            for rec in self.span_scratch.drain(..) {
+                self.obs.ring.push(rec);
+            }
             if activity {
                 conn.last_activity = now;
             }
@@ -1279,13 +1662,26 @@ mod event {
         /// Answer one admitted request: offload cold `/query` decodes to
         /// the worker pool, everything else (catalog, stats, errors, and
         /// cache-warm queries under the inline cap) inline right here.
-        fn dispatch(&mut self, token: u64, conn: &mut Conn, seq: u64, req: Request, keep_alive: bool) {
-            let req = if self.should_offload(&req) {
+        #[allow(clippy::too_many_arguments)]
+        fn dispatch(
+            &mut self,
+            token: u64,
+            conn: &mut Conn,
+            seq: u64,
+            req: Request,
+            keep_alive: bool,
+            t0: Instant,
+            span: Option<SpanBuilder>,
+        ) {
+            let (req, mut span) = if self.should_offload(&req) {
                 match self.jobs.try_send(Job {
                     token,
                     seq,
                     keep_alive,
                     req,
+                    t0,
+                    enqueued: Instant::now(),
+                    span,
                 }) {
                     Ok(()) => {
                         self.jobs_inflight += 1;
@@ -1295,33 +1691,44 @@ mod event {
                         self.counters
                             .rejected_queue_full
                             .fetch_add(1, Ordering::Relaxed);
-                        conn.complete(
-                            seq,
-                            http::serialize_response(
-                                503,
-                                JSON,
-                                &[],
-                                json_error("request queue full, retry later").as_bytes(),
-                                keep_alive,
-                            ),
+                        let bytes = http::serialize_response(
+                            503,
+                            JSON,
+                            &[],
+                            json_error("request queue full, retry later").as_bytes(),
+                            keep_alive,
                         );
+                        // pre-route rejection: bytes accounted, no
+                        // status class / latency sample (matches the
+                        // pool fallback's pre-parse queue rejection)
+                        self.counters
+                            .bytes_out
+                            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        conn.complete(seq, bytes);
                         return;
                     }
                     // workers gone (tearing down): answer inline
-                    Err(TrySendError::Disconnected(job)) => job.req,
+                    Err(TrySendError::Disconnected(job)) => (job.req, job.span),
                 }
             } else {
-                req
+                (req, span)
             };
             let (status, content_type, extra, body) =
-                route(&req, &self.router, &self.counters, &self.cfg);
-            count_status(&self.counters, status);
+                route(&req, &self.router, &self.counters, &self.cfg, &self.obs, span.as_mut());
+            if let Some(sp) = span.as_mut() {
+                sp.status = status;
+            }
             let headers: Vec<(&str, &str)> =
                 extra.iter().map(|(k, v)| (k.as_str(), v.as_str())).collect();
-            conn.complete(
-                seq,
-                http::serialize_response(status, content_type, &headers, &body, keep_alive),
+            let bytes = http::serialize_response(status, content_type, &headers, &body, keep_alive);
+            count_response(
+                &self.counters,
+                &self.obs,
+                status,
+                bytes.len(),
+                t0.elapsed().as_nanos() as u64,
             );
+            conn.complete_traced(seq, bytes, span.filter(|sp| sp.sampled));
         }
 
         /// A request goes to the worker pool only when it will actually
@@ -1354,7 +1761,13 @@ mod event {
                     };
                     guard.pop_front()
                 };
-                let Some(Done { token, seq, bytes }) = next else {
+                let Some(Done {
+                    token,
+                    seq,
+                    bytes,
+                    span,
+                }) = next
+                else {
                     break;
                 };
                 self.jobs_inflight = self.jobs_inflight.saturating_sub(1);
@@ -1362,7 +1775,7 @@ mod event {
                 let mut landed = false;
                 if let Some(Some(conn)) = self.conns.get_mut(slot) {
                     if conn.generation == token_gen(token) {
-                        conn.complete(seq, bytes);
+                        conn.complete_traced(seq, bytes, span);
                         landed = true;
                     }
                 }

@@ -37,6 +37,7 @@ use std::fmt;
 use std::path::Path;
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
+use std::time::Instant;
 
 use crate::api::reader::{open_metered, payload_base, v2_bytes};
 use crate::api::{Backend, Query};
@@ -46,7 +47,44 @@ use crate::archive::{
 use crate::compressor::SectionSalvage;
 use crate::coordinator::engine::{denorm_row_into, RangeDecode, ShardEngine};
 use crate::error::{Error, Result};
+use crate::obs::{HistSnapshot, Histogram, Phase, SpanBuilder};
 use crate::runtime::{ExecHandle, ExecService};
+
+/// Store-side latency histograms — the `/metrics` feeds the serve layer
+/// merges across replicas.  Record path is the lock-free integer path
+/// of [`Histogram`]; see [`crate::obs`].
+#[derive(Debug, Default)]
+pub struct StoreObs {
+    /// One engine decode pass (batch fill or per-species retry), ns.
+    pub decode_ns: Histogram,
+    /// Total cache-probe time of one query (all shard×species lookups
+    /// summed, one sample per query), ns.
+    pub probe_ns: Histogram,
+}
+
+impl StoreObs {
+    /// Plain-data copy for merging and export.
+    pub fn snapshot(&self) -> StoreObsSnapshot {
+        StoreObsSnapshot {
+            decode_ns: self.decode_ns.snapshot(),
+            probe_ns: self.probe_ns.snapshot(),
+        }
+    }
+}
+
+/// Snapshot of [`StoreObs`]; [`merge`](Self::merge) folds replicas.
+#[derive(Clone, Debug, Default)]
+pub struct StoreObsSnapshot {
+    pub decode_ns: HistSnapshot,
+    pub probe_ns: HistSnapshot,
+}
+
+impl StoreObsSnapshot {
+    pub fn merge(&mut self, other: &StoreObsSnapshot) {
+        self.decode_ns.merge(&other.decode_ns);
+        self.probe_ns.merge(&other.probe_ns);
+    }
+}
 
 /// Knobs of an [`ArchiveStore`].
 #[derive(Clone, Debug)]
@@ -218,6 +256,7 @@ pub struct ArchiveStore {
     queries: AtomicU64,
     decoded_sections: AtomicU64,
     decoded_bytes: AtomicU64,
+    obs: StoreObs,
 }
 
 impl ArchiveStore {
@@ -245,7 +284,13 @@ impl ArchiveStore {
             queries: AtomicU64::new(0),
             decoded_sections: AtomicU64::new(0),
             decoded_bytes: AtomicU64::new(0),
+            obs: StoreObs::default(),
         }
+    }
+
+    /// The store's latency histograms (decode, cache probe).
+    pub fn obs(&self) -> &StoreObs {
+        &self.obs
     }
 
     /// Mount an archive file under `name`.  `GBA2` files stay on disk
@@ -396,6 +441,19 @@ impl ArchiveStore {
     /// reactor never serves it inline).  Healthy queries take exactly
     /// the pre-quarantine path and return bit-identical bytes.
     pub fn query(&self, dataset: &str, q: &Query) -> Result<RangeDecode> {
+        self.query_traced(dataset, q, None)
+    }
+
+    /// [`query`](Self::query) with phase attribution: cache-probe,
+    /// decode, and salvage time land in `span` (when given) and in the
+    /// store's histograms ([`StoreObs`]) always.  `query` is this with
+    /// `span = None`.
+    pub fn query_traced(
+        &self,
+        dataset: &str,
+        q: &Query,
+        mut span: Option<&mut SpanBuilder>,
+    ) -> Result<RangeDecode> {
         let m = self.mount(dataset)?;
         let (nt, ns, ny, nx) = m.header.dims;
         let sel = q.species.resolve(ns)?;
@@ -426,23 +484,39 @@ impl ArchiveStore {
         // shard of this query (arena reuse; decode_shard_planes_into
         // sizes it per shard)
         let mut norm_scratch: Vec<f32> = Vec::new();
+        // probe time accumulates across shards; one histogram sample
+        // per query (a query's probe cost, not a per-lookup figure)
+        let mut probe_total_ns = 0u64;
         for (si, entry) in m.toc.iter().enumerate() {
             if entry.t0 >= t1 || entry.t0 + entry.nt <= t0 {
                 continue;
             }
             // cache lookups per (shard, species); collect what's missing
+            let t_probe = Instant::now();
             let mut planes: Vec<Option<Arc<[f32]>>> = sel
                 .iter()
                 .map(|&s| self.cache.get((m.id, si as u32, s as u32)))
                 .collect();
+            let probe_ns = t_probe.elapsed().as_nanos() as u64;
+            probe_total_ns += probe_ns;
+            if let Some(sp) = span.as_deref_mut() {
+                let end = sp.mark();
+                sp.add_phase(Phase::CacheProbe, end.saturating_sub(probe_ns), probe_ns);
+            }
             let plane_len = entry.nt * npix;
             // already-quarantined sections go straight to salvage — they
             // never touch the batch decode, and never enter the cache
             let mut batch_pos: Vec<usize> = Vec::new();
             for k in (0..nsel).filter(|&k| planes[k].is_none()) {
                 if m.is_quarantined(si, sel[k]) {
+                    let t_salv = Instant::now();
                     let (plane, stats) =
                         engine.decode_shard_plane_salvage(&m.header, entry, &m.src, sel[k])?;
+                    let salv_ns = t_salv.elapsed().as_nanos() as u64;
+                    if let Some(sp) = span.as_deref_mut() {
+                        let end = sp.mark();
+                        sp.add_phase(Phase::Salvage, end.saturating_sub(salv_ns), salv_ns);
+                    }
                     m.set_quarantined(si, sel[k], stats);
                     note_degraded(si, sel[k], stats);
                     planes[k] = Some(Arc::from(plane));
@@ -459,6 +533,7 @@ impl ArchiveStore {
                     .iter()
                     .map(|_| Arc::<[f32]>::from(vec![0.0f32; plane_len]))
                     .collect();
+                let t_dec = Instant::now();
                 let batch = {
                     // the Arcs were allocated two lines up and never
                     // cloned, so get_mut always succeeds; a typed error
@@ -487,6 +562,12 @@ impl ArchiveStore {
                         )
                     }
                 };
+                let dec_ns = t_dec.elapsed().as_nanos() as u64;
+                self.obs.decode_ns.record(dec_ns);
+                if let Some(sp) = span.as_deref_mut() {
+                    let end = sp.mark();
+                    sp.add_phase(Phase::Decode, end.saturating_sub(dec_ns), dec_ns);
+                }
                 match batch {
                     Ok(()) => {
                         self.decoded_sections
@@ -508,6 +589,7 @@ impl ArchiveStore {
                         for &k in &batch_pos {
                             let s = sel[k];
                             let mut one = Arc::<[f32]>::from(vec![0.0f32; plane_len]);
+                            let t_one = Instant::now();
                             let single = match Arc::get_mut(&mut one) {
                                 Some(buf) => engine.decode_shard_planes_into(
                                     &m.header,
@@ -522,6 +604,12 @@ impl ArchiveStore {
                                     "decode plane buffer unexpectedly shared before fill",
                                 )),
                             };
+                            let one_ns = t_one.elapsed().as_nanos() as u64;
+                            self.obs.decode_ns.record(one_ns);
+                            if let Some(sp) = span.as_deref_mut() {
+                                let end = sp.mark();
+                                sp.add_phase(Phase::Decode, end.saturating_sub(one_ns), one_ns);
+                            }
                             match single {
                                 Ok(()) => {
                                     self.decoded_sections.fetch_add(1, Ordering::Relaxed);
@@ -532,8 +620,18 @@ impl ArchiveStore {
                                     planes[k] = Some(one);
                                 }
                                 Err(_) => {
+                                    let t_salv = Instant::now();
                                     let (plane, stats) = engine
                                         .decode_shard_plane_salvage(&m.header, entry, &m.src, s)?;
+                                    let salv_ns = t_salv.elapsed().as_nanos() as u64;
+                                    if let Some(sp) = span.as_deref_mut() {
+                                        let end = sp.mark();
+                                        sp.add_phase(
+                                            Phase::Salvage,
+                                            end.saturating_sub(salv_ns),
+                                            salv_ns,
+                                        );
+                                    }
                                     m.set_quarantined(si, s, stats);
                                     note_degraded(si, s, stats);
                                     planes[k] = Some(Arc::from(plane));
@@ -565,6 +663,7 @@ impl ArchiveStore {
                 }
             }
         }
+        self.obs.probe_ns.record(probe_total_ns);
         let peak_workspace_bytes = out.len() * 4;
         degraded.sort_unstable();
         degraded.dedup();

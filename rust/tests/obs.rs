@@ -1,0 +1,286 @@
+//! Observability-layer contracts: histogram quantile accuracy against an
+//! exact sorted-sample oracle across adversarial distributions, and the
+//! Prometheus text exposition staying inside the 0.0.4 grammar.
+
+use gbatc::obs::{prom, HistSnapshot, Histogram};
+
+/// Exact quantile of a sorted sample set, matching the rank convention
+/// `HistSnapshot::quantile` documents: the value at rank `ceil(q·n)`.
+fn oracle(sorted: &[u64], q: f64) -> u64 {
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Assert every reported quantile is within the documented 1/64 ≈ 1.6%
+/// relative error of the oracle (+2 absolute for the tiny-value region).
+fn check_quantiles(name: &str, vals: &mut Vec<u64>) {
+    let h = Histogram::new();
+    for &v in vals.iter() {
+        h.record(v);
+    }
+    vals.sort_unstable();
+    let s = h.snapshot();
+    assert_eq!(s.count, vals.len() as u64, "{name}: count");
+    assert_eq!(s.max, *vals.last().unwrap(), "{name}: max");
+    for q in [0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.95, 0.99, 1.0] {
+        let exact = oracle(vals, q);
+        let est = s.quantile(q);
+        let err = (est as f64 - exact as f64).abs();
+        assert!(
+            err <= exact as f64 / 64.0 + 2.0,
+            "{name}: q={q} est={est} exact={exact} (err {err})"
+        );
+    }
+}
+
+/// Deterministic splitmix64 stream (no `rand` in the offline image).
+fn splitmix(seed: u64) -> impl FnMut() -> u64 {
+    let mut x = seed;
+    move || {
+        x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = x;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[test]
+fn quantiles_match_oracle_uniform_wide() {
+    let mut rng = splitmix(7);
+    // ~[1, 2^48): every octave of the bucket table gets traffic
+    let mut vals: Vec<u64> = (0..20_000).map(|_| 1 + (rng() >> 16)).collect();
+    check_quantiles("uniform_wide", &mut vals);
+}
+
+#[test]
+fn quantiles_match_oracle_latency_shaped() {
+    // a serve-like distribution: tight 100µs body, 1% 50ms tail spikes
+    let mut rng = splitmix(11);
+    let mut vals: Vec<u64> = (0..10_000)
+        .map(|i| {
+            if i % 100 == 0 {
+                50_000_000 + rng() % 10_000_000
+            } else {
+                100_000 + rng() % 20_000
+            }
+        })
+        .collect();
+    check_quantiles("latency_shaped", &mut vals);
+}
+
+#[test]
+fn quantiles_match_oracle_bimodal() {
+    // warm-hit vs cold-decode: two far-apart modes, nothing between
+    let mut rng = splitmix(13);
+    let mut vals: Vec<u64> = (0..8_000)
+        .map(|i| {
+            if i % 5 == 0 {
+                8_000_000 + rng() % 1_000_000
+            } else {
+                40_000 + rng() % 4_000
+            }
+        })
+        .collect();
+    check_quantiles("bimodal", &mut vals);
+}
+
+#[test]
+fn quantiles_match_oracle_constant_spike() {
+    // every sample identical: all quantiles must land on (or within a
+    // bucket of) the spike, and max clamps the midpoint estimate
+    let mut vals: Vec<u64> = vec![123_456; 5_000];
+    check_quantiles("constant_spike", &mut vals);
+}
+
+#[test]
+fn single_sample_and_empty() {
+    let h = Histogram::new();
+    h.record(777);
+    let s = h.snapshot();
+    for q in [0.0, 0.5, 1.0] {
+        let est = s.quantile(q);
+        assert!(
+            (est as f64 - 777.0).abs() <= 777.0 / 64.0 + 2.0,
+            "single-sample q={q} -> {est}"
+        );
+    }
+    assert_eq!(s.max, 777);
+
+    let empty = Histogram::new().snapshot();
+    assert_eq!(empty.quantile(0.99), 0);
+    assert_eq!(empty.mean(), 0.0);
+}
+
+#[test]
+fn merged_snapshot_equals_combined_stream() {
+    // quantiles of merge(a, b) must match one histogram fed both streams
+    let mut rng = splitmix(17);
+    let a = Histogram::new();
+    let b = Histogram::new();
+    let combined = Histogram::new();
+    for i in 0..6_000u64 {
+        let v = 1 + (rng() >> 20);
+        if i % 2 == 0 {
+            a.record(v);
+        } else {
+            b.record(v);
+        }
+        combined.record(v);
+    }
+    let mut merged = a.snapshot();
+    merged.merge(&b.snapshot());
+    let want = combined.snapshot();
+    assert_eq!(merged.count, want.count);
+    assert_eq!(merged.sum, want.sum);
+    assert_eq!(merged.max, want.max);
+    assert_eq!(merged.buckets, want.buckets);
+    for q in [0.5, 0.9, 0.99] {
+        assert_eq!(merged.quantile(q), want.quantile(q));
+    }
+}
+
+#[test]
+fn concurrent_recording_loses_nothing() {
+    // 8 threads hammering one histogram: totals must be exact (the
+    // record path is fetch_add, not read-modify-write races)
+    let h = Histogram::new();
+    let per_thread = 10_000u64;
+    std::thread::scope(|scope| {
+        for t in 0..8u64 {
+            let h = &h;
+            scope.spawn(move || {
+                let mut rng = splitmix(100 + t);
+                for _ in 0..per_thread {
+                    h.record(1 + rng() % 1_000_000);
+                }
+            });
+        }
+    });
+    let s = h.snapshot();
+    assert_eq!(s.count, 8 * per_thread);
+    assert_eq!(s.buckets.iter().sum::<u64>(), 8 * per_thread);
+}
+
+// ---- Prometheus text exposition ------------------------------------
+
+/// Minimal 0.0.4 grammar check: every line is a comment (`# HELP` /
+/// `# TYPE`) or a sample `name[{labels}] value`; names are valid metric
+/// identifiers; every sample's name was declared by a `# TYPE` first;
+/// histogram `_bucket` series are cumulative in `le` order and end at
+/// `+Inf == _count`.
+fn assert_valid_prometheus(text: &str) {
+    fn valid_name(s: &str) -> bool {
+        !s.is_empty()
+            && s.chars().next().map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':') == Some(true)
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    }
+    let mut typed: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            let mut parts = rest.splitn(3, ' ');
+            let kind = parts.next().unwrap_or("");
+            let name = parts.next().unwrap_or("");
+            assert!(
+                kind == "HELP" || kind == "TYPE",
+                "unknown comment kind in: {line}"
+            );
+            assert!(valid_name(name), "bad metric name in: {line}");
+            if kind == "TYPE" {
+                let family = parts.next().unwrap_or("");
+                assert!(
+                    ["counter", "gauge", "histogram", "summary", "untyped"].contains(&family),
+                    "bad TYPE in: {line}"
+                );
+                typed.push(name.to_string());
+            }
+            continue;
+        }
+        // sample line: name[{labels}] value
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+        assert!(value.parse::<f64>().is_ok(), "unparsable value in: {line}");
+        let name = series.split('{').next().unwrap_or("");
+        assert!(valid_name(name), "bad series name in: {line}");
+        if let Some(rest) = series.strip_prefix(name) {
+            if !rest.is_empty() {
+                assert!(
+                    rest.starts_with('{') && rest.ends_with('}'),
+                    "bad label block in: {line}"
+                );
+                for pair in rest[1..rest.len() - 1].split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = pair.split_once('=').unwrap_or_else(|| panic!("bad label: {line}"));
+                    assert!(valid_name(k), "bad label key in: {line}");
+                    assert!(
+                        v.starts_with('"') && v.ends_with('"') && v.len() >= 2,
+                        "unquoted label value in: {line}"
+                    );
+                }
+            }
+        }
+        let base = name
+            .strip_suffix("_bucket")
+            .or_else(|| name.strip_suffix("_sum"))
+            .or_else(|| name.strip_suffix("_count"))
+            .unwrap_or(name);
+        assert!(
+            typed.iter().any(|t| t == base || t == name),
+            "sample before TYPE declaration: {line}"
+        );
+    }
+    // every histogram family: buckets cumulative, +Inf == _count
+    for fam in &typed {
+        let buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with(&format!("{fam}_bucket{{")))
+            .map(|l| l.rsplit(' ').next().and_then(|v| v.parse().ok()).expect("bucket count"))
+            .collect();
+        if buckets.is_empty() {
+            continue;
+        }
+        assert!(
+            buckets.windows(2).all(|w| w[0] <= w[1]),
+            "{fam}: buckets not cumulative: {buckets:?}"
+        );
+        let count_line = format!("{fam}_count ");
+        let count: u64 = text
+            .lines()
+            .find(|l| l.starts_with(&count_line))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("{fam}: histogram without _count"));
+        assert_eq!(*buckets.last().unwrap(), count, "{fam}: +Inf != _count");
+    }
+}
+
+#[test]
+fn rendered_exposition_is_valid_prometheus() {
+    let h = Histogram::new();
+    let mut rng = splitmix(23);
+    for _ in 0..3_000 {
+        h.record(1_000 + rng() % 100_000_000);
+    }
+    let mut out = String::new();
+    prom::render_histogram(&mut out, "gbatc_query_seconds", "end-to-end query latency", &h.snapshot());
+    prom::render_histogram(
+        &mut out,
+        "gbatc_decode_seconds",
+        "empty histogram renders too",
+        &HistSnapshot::default(),
+    );
+    prom::render_counter(&mut out, "gbatc_bytes_out_total", "bytes written", 123_456_789);
+    prom::render_counter_family(
+        &mut out,
+        "gbatc_responses_total",
+        "responses by status class",
+        "class",
+        &[("2xx", 40), ("4xx", 2), ("5xx", 0)],
+    );
+    prom::render_gauge(&mut out, "gbatc_active_connections", "open sockets", 7);
+    assert_valid_prometheus(&out);
+    // the ladder re-slice is exact: +Inf equals the recorded count
+    assert!(out.contains("gbatc_query_seconds_bucket{le=\"+Inf\"} 3000\n"));
+    assert!(out.contains("gbatc_decode_seconds_count 0\n"));
+}

@@ -8,7 +8,7 @@
 //! with `GBATC_NO_EPOLL=1` (thread-pool fallback) — so assertions stick
 //! to protocol behavior and counters both modes guarantee.
 
-use std::io::Write;
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
 
@@ -346,4 +346,56 @@ fn router_warm_affinity_and_mount_failover() {
     assert_eq!(per[placed].queries, before + 1, "query followed the failover");
     // aggregate stats sum across replicas
     assert_eq!(router.stats().queries, per.iter().map(|s| s.queries).sum::<u64>());
+}
+
+#[test]
+fn bytes_out_counts_every_response_exactly_once() {
+    // the sum of wire bytes clients actually receive must equal the
+    // server's bytes_out counter — one bump per response, no double
+    // counting, identical in both server modes (CI's GBATC_NO_EPOLL leg)
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 8);
+    let (server, addr) = start_server(
+        &handle,
+        &bytes,
+        ServerConfig {
+            workers: 2,
+            queue: 8,
+            ..ServerConfig::default()
+        },
+    );
+
+    // raw byte-exact fetch: `Connection: close` means read-to-EOF is
+    // exactly one serialized response, binary bodies included
+    let fetch = |req: &[u8]| -> Vec<u8> {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        let _ = s.write_all(req);
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        buf
+    };
+
+    let reqs: [&[u8]; 6] = [
+        b"GET /datasets HTTP/1.1\r\nConnection: close\r\n\r\n",
+        b"GET /query?dataset=hcci&t0=0&t1=4&species=1 HTTP/1.1\r\nConnection: close\r\n\r\n",
+        b"GET /query?dataset=hcci&t0=0&t1=4&species=1 HTTP/1.1\r\nConnection: close\r\n\r\n",
+        b"GET /nothing HTTP/1.1\r\nConnection: close\r\n\r\n",
+        b"GET /query?dataset=nope HTTP/1.1\r\nConnection: close\r\n\r\n",
+        b"GET /stats HTTP/1.1\r\nConnection: close\r\n\r\n",
+    ];
+    let mut wire = 0u64;
+    for req in reqs {
+        let resp = fetch(req);
+        assert!(resp.starts_with(b"HTTP/1.1 "), "no status line");
+        wire += resp.len() as u64;
+    }
+
+    let st = server.shutdown();
+    assert_eq!(st.served + st.client_errors, 6, "{st}");
+    assert_eq!(st.server_errors, 0, "{st}");
+    assert_eq!(
+        st.bytes_out, wire,
+        "bytes_out must count each response exactly once: {st}"
+    );
 }

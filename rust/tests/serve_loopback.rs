@@ -240,3 +240,174 @@ fn server_survives_protocol_abuse_then_serves() {
     assert_eq!(st.keepalive_reuse, 4, "{st}");
     assert_eq!(client.connections_opened(), 1);
 }
+
+// ---- observability pipeline ----------------------------------------
+
+/// First u64 after `"key":` in `json` (panics if absent) — enough for
+/// the hand-rolled trace/metrics formats these tests cover.
+fn field_u64(json: &str, key: &str) -> u64 {
+    let pat = format!("\"{key}\":");
+    let at = json.find(&pat).unwrap_or_else(|| panic!("missing {key} in {json}"));
+    json[at + pat.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect::<String>()
+        .parse()
+        .unwrap_or_else(|_| panic!("bad {key} in {json}"))
+}
+
+/// The one span object with this trace id, sliced out of `/trace/slow`.
+fn span_slice<'a>(slow: &'a str, trace_id: &str) -> &'a str {
+    let pat = format!("\"trace_id\":\"{trace_id}\"");
+    let at = slow.find(&pat).unwrap_or_else(|| panic!("span {trace_id} missing from {slow}"));
+    let rest = &slow[at..];
+    match rest[pat.len()..].find("\"trace_id\":") {
+        Some(next) => &rest[..pat.len() + next],
+        None => rest,
+    }
+}
+
+/// `(name, start_ns, dur_ns)` for every phase present in a span slice.
+fn span_phases(span: &str) -> Vec<(&'static str, u64, u64)> {
+    let names = [
+        "parse",
+        "queue_wait",
+        "cache_probe",
+        "decode",
+        "salvage",
+        "serialize",
+        "write",
+    ];
+    let mut out = Vec::new();
+    for name in names {
+        let pat = format!("\"{name}\":{{");
+        if let Some(at) = span.find(&pat) {
+            let obj = &span[at..];
+            out.push((name, field_u64(obj, "start_ns"), field_u64(obj, "dur_ns")));
+        }
+    }
+    out
+}
+
+#[test]
+fn tracing_spans_and_metrics_pipeline() {
+    let service = ExecService::start_reference(small_spec(), 4).unwrap();
+    let handle = service.handle();
+    let bytes = build_archive(&handle, 8);
+    let (server, _store, addr) = start_server(
+        &handle,
+        &bytes,
+        ServerConfig {
+            workers: 2,
+            queue: 8,
+            trace_sample: 1, // trace every request
+            ..ServerConfig::default()
+        },
+    );
+
+    // every 200 carries a 16-hex X-Gbatc-Trace-Id, and the ids are unique
+    let client = QueryClient::new(addr.clone());
+    let mut ids: Vec<String> = Vec::new();
+    for t0 in 0..4usize {
+        let dec = client.query("hcci", Some(t0), Some(t0 + 4), "1").unwrap();
+        assert!(!dec.mass.is_empty());
+        let id = dec.trace_id.clone().expect("200 without X-Gbatc-Trace-Id");
+        assert_eq!(id.len(), 16, "{id}");
+        assert!(id.chars().all(|c| c.is_ascii_hexdigit()), "{id}");
+        ids.push(id);
+    }
+    let mut uniq = ids.clone();
+    uniq.sort();
+    uniq.dedup();
+    assert_eq!(uniq.len(), ids.len(), "trace ids must be unique: {ids:?}");
+
+    // routed errors carry the header too (it is attached per response,
+    // not per success), and land in the error counters below
+    let r = raw(&addr, b"GET /nothing HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert!(r.starts_with("HTTP/1.1 404"), "{r}");
+    assert!(r.to_ascii_lowercase().contains("x-gbatc-trace-id:"), "{r}");
+    let err = client.query("hcci", Some(6), Some(2), "").unwrap_err().to_string();
+    assert!(err.contains("400"), "{err}");
+
+    // every traced query shows up in /trace/slow with phase timings that
+    // are monotone, non-overlapping, and contained in the span total
+    let slow = client.trace_slow_json(64).unwrap();
+    assert!(field_u64(&slow, "recorded") >= ids.len() as u64, "{slow}");
+    for id in &ids {
+        let span = span_slice(&slow, id);
+        assert!(span.contains("\"target\":\"/query?dataset=hcci"), "{span}");
+        assert!(span.contains("\"status\":200"), "{span}");
+        let total = field_u64(span, "total_ns");
+        let mut phases = span_phases(span);
+        assert!(
+            phases.iter().any(|p| p.0 == "serialize"),
+            "span without a serialize phase: {span}"
+        );
+        assert!(
+            phases.iter().any(|p| p.0 == "cache_probe" || p.0 == "decode"),
+            "span without store phases: {span}"
+        );
+        phases.sort_by_key(|&(_, start, _)| start);
+        let mut prev_end = 0u64;
+        for (name, start, dur) in phases {
+            assert!(
+                start >= prev_end,
+                "{name} starts at {start} inside the previous phase (ends {prev_end}): {span}"
+            );
+            let end = start + dur;
+            assert!(end <= total, "{name} ends at {end}, past total {total}: {span}");
+            prev_end = end;
+        }
+    }
+
+    // /metrics is well-formed Prometheus text: comments aside, every
+    // line is `series value` with a parseable value, and the query
+    // histogram's +Inf bucket equals its _count
+    let metrics = client.metrics_text().unwrap();
+    for line in metrics.lines().filter(|l| !l.is_empty() && !l.starts_with('#')) {
+        let (_, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line: {line}"));
+        assert!(value.parse::<f64>().is_ok(), "unparsable value: {line}");
+    }
+    for family in [
+        "gbatc_query_seconds",
+        "gbatc_queue_wait_seconds",
+        "gbatc_decode_seconds",
+        "gbatc_cache_probe_seconds",
+    ] {
+        assert!(metrics.contains(&format!("# TYPE {family} histogram")), "{metrics}");
+    }
+    let inf = format!("gbatc_query_seconds_bucket{{le=\"+Inf\"}} ");
+    let inf_count: u64 = metrics
+        .lines()
+        .find(|l| l.starts_with(&inf))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+        .expect("query histogram +Inf bucket");
+    let count_line = metrics
+        .lines()
+        .find(|l| l.starts_with("gbatc_query_seconds_count "))
+        .expect("query histogram count");
+    assert_eq!(
+        inf_count,
+        count_line.rsplit(' ').next().and_then(|v| v.parse().ok()).unwrap_or(0),
+        "{metrics}"
+    );
+    assert!(metrics.contains("gbatc_responses_total{class=\"2xx\"}"), "{metrics}");
+    assert!(metrics.contains("gbatc_trace_spans_total{outcome=\"recorded\"}"), "{metrics}");
+
+    // counter-vs-histogram consistency: the latency histogram sees one
+    // sample per routed response, exactly the status-class counter sum
+    // (runs in both server modes via the GBATC_NO_EPOLL CI leg)
+    let snap = server.obs().query_latency();
+    let stats = client.stats_json().unwrap();
+    assert!(field_u64(&stats, "bytes_out") > 0, "{stats}");
+    let st = server.shutdown();
+    // the /stats request above happened after the snapshot
+    assert_eq!(
+        snap.count + 1,
+        st.served + st.client_errors + st.server_errors,
+        "histogram count must equal routed responses: {st}"
+    );
+    assert!(st.bytes_out > 0, "{st}");
+    assert_eq!(st.server_errors, 0, "{st}");
+}

@@ -5,9 +5,18 @@ Compares a fresh ``BENCH_hotpaths.json`` (written by
 ``cargo bench --bench perf_hotpaths``) against the committed baseline and
 fails on a >TOLERANCE relative regression.  Only *machine-relative*
 metrics are gated — per-kernel speedups (baseline kernel vs optimized
-kernel timed on the same machine in the same process) and the planner's
-auto/best-single wall-time ratio — so the gate is meaningful on any
-runner; absolute milliseconds are reported but never compared.
+kernel timed on the same machine in the same process), wall-time ratios
+(planner auto/best-single, serve traced/untraced), and hit rates — so
+the gate is meaningful on any runner; absolute milliseconds (including
+the serve bench's server-side p50/p99) are reported but never compared.
+
+Gating is by key: ``speedup`` and ``hit_rate`` are floors (current may
+not fall more than the tolerance below baseline), ``ratio`` is a cap
+(current may not exceed baseline by more than the tolerance).  A
+baseline row may carry its own ``tolerance`` field to override the
+global one — the serve trace-overhead row uses 0.02 so that tracing
+costing more than ~2% throughput fails the gate.  Rows with none of the
+gated keys, and extra keys like ``note``, are informational only.
 
 Usage:
     python3 scripts/bench_compare.py CURRENT.json BASELINE.json [--tolerance 0.25]
@@ -38,19 +47,19 @@ def main():
 
     current = load_rows(args.current)
     baseline = load_rows(args.baseline)
-    tol = args.tolerance
     failures = []
 
-    print(f"{'kernel':<16} {'metric':<8} {'baseline':>10} {'current':>10} {'floor/cap':>10}")
+    print(f"{'kernel':<20} {'metric':<8} {'baseline':>10} {'current':>10} {'floor/cap':>10}")
     for kernel, base in baseline.items():
         cur = current.get(kernel)
         if cur is None:
             failures.append(f"{kernel}: missing from current results")
             continue
+        tol = base.get("tolerance", args.tolerance)
         if "speedup" in base:
             floor = base["speedup"] * (1.0 - tol)
             got = cur.get("speedup", 0.0)
-            print(f"{kernel:<16} {'speedup':<8} {base['speedup']:>10.2f} {got:>10.2f} {floor:>10.2f}")
+            print(f"{kernel:<20} {'speedup':<8} {base['speedup']:>10.2f} {got:>10.2f} {floor:>10.2f}")
             if got < floor:
                 failures.append(
                     f"{kernel}: speedup {got:.2f}x fell below floor {floor:.2f}x "
@@ -59,7 +68,7 @@ def main():
         elif "ratio" in base:
             cap = base["ratio"] * (1.0 + tol)
             got = cur.get("ratio", float("inf"))
-            print(f"{kernel:<16} {'ratio':<8} {base['ratio']:>10.2f} {got:>10.2f} {cap:>10.2f}")
+            print(f"{kernel:<20} {'ratio':<8} {base['ratio']:>10.2f} {got:>10.2f} {cap:>10.2f}")
             if got > cap:
                 failures.append(
                     f"{kernel}: ratio {got:.2f}x exceeded cap {cap:.2f}x "
@@ -70,7 +79,7 @@ def main():
             # query mix, not the runner); gate with the same floor rule
             floor = base["hit_rate"] * (1.0 - tol)
             got = cur.get("hit_rate", 0.0)
-            print(f"{kernel:<16} {'hit_rate':<8} {base['hit_rate']:>10.2f} {got:>10.2f} {floor:>10.2f}")
+            print(f"{kernel:<20} {'hit_rate':<8} {base['hit_rate']:>10.2f} {got:>10.2f} {floor:>10.2f}")
             if got < floor:
                 failures.append(
                     f"{kernel}: hit_rate {got:.2f} fell below floor {floor:.2f} "
